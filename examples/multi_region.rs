@@ -1,0 +1,41 @@
+//! Multi-region carbon-aware routing (§5 "future directions",
+//! implemented): serve one inference load profile against a fleet of
+//! regions with phase-shifted grid conditions and compare static
+//! placement with greedy lowest-CI routing under a transfer penalty.
+//!
+//! Run:  cargo run --release --example multi_region [-- --fast]
+
+use vidur_energy::config::simconfig::{CosimConfig, CostModelKind, SimConfig};
+use vidur_energy::coordinator::multiregion::{default_regions, simulate};
+use vidur_energy::pipeline::{bin_stages, BinningBackend, LoadProfile};
+use vidur_energy::runtime::ArtifactStore;
+use vidur_energy::sim;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let mut cfg = SimConfig::default();
+    cfg.num_requests = if fast { 300 } else { 2_000 };
+    if ArtifactStore::discover().is_err() {
+        cfg.cost_model = CostModelKind::Native;
+    }
+    println!("simulating home-region workload ({} requests)...", cfg.num_requests);
+    let out = sim::run(&cfg)?;
+    let cosim = CosimConfig::default();
+    let binned = bin_stages(&cfg, &out.stagelog, out.metrics.makespan_s, cosim.interval_s, BinningBackend::Native)?;
+    let load = LoadProfile::from_binned(&binned);
+
+    let regions = default_regions();
+    println!("\nfleet:");
+    for r in &regions {
+        println!("  {:<14} mean CI {:>5.0} g/kWh, tz {:+.0} h, solar {:>4.0} W", r.name, r.ci_mean, r.tz_offset_h, r.solar_w);
+    }
+    let res = simulate(&load, &regions, cosim.interval_s, cfg.seed)?;
+    println!("\n{}", res.table.to_markdown());
+    println!(
+        "greedy lowest-CI routing: {:.0} g vs static {:.0} g ({:+.1}%)",
+        res.greedy_g,
+        res.static_g,
+        (res.greedy_g / res.static_g - 1.0) * 100.0
+    );
+    Ok(())
+}

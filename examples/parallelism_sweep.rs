@@ -1,0 +1,52 @@
+//! Parallelism sweep (the paper's Experiment 5 as a library scenario):
+//! CodeLlama-34B across the TP×PP grid, reporting the energy/latency
+//! trade-off and the most energy-efficient configuration.
+//!
+//! Run:  cargo run --release --example parallelism_sweep [-- --fast]
+
+use vidur_energy::config::simconfig::{CostModelKind, SimConfig};
+use vidur_energy::energy::EnergyAccountant;
+use vidur_energy::runtime::ArtifactStore;
+use vidur_energy::sim;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let mut base = SimConfig::default();
+    base.model = "codellama-34b".into();
+    base.num_requests = if fast { 128 } else { 512 };
+    if ArtifactStore::discover().is_err() {
+        base.cost_model = CostModelKind::Native;
+    }
+
+    // Hold the workload fixed across configurations.
+    let mut gen = WorkloadGenerator::from_config(&base);
+    let trace = Trace::new(gen.generate(base.num_requests));
+
+    println!("{:<10} {:>6} {:>12} {:>12} {:>12} {:>10}", "tp x pp", "gpus", "makespan_s", "avg_W/gpu", "energy_kWh", "p99_s");
+    let mut best: Option<(String, f64)> = None;
+    for (tp, pp) in [(1u32, 1u32), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1), (4, 4)] {
+        let mut cfg = base.clone();
+        cfg.tp = tp;
+        cfg.pp = pp;
+        let out = sim::run_with_trace(&cfg, trace.clone())?;
+        let acc = EnergyAccountant::paper_default(&cfg)?;
+        let e = acc.account(&cfg, &out.stagelog, out.metrics.makespan_s);
+        println!(
+            "{:<10} {:>6} {:>12.1} {:>12.1} {:>12.4} {:>10.2}",
+            format!("{tp}x{pp}"),
+            tp * pp,
+            out.metrics.makespan_s,
+            e.avg_power_w,
+            e.energy_kwh,
+            out.metrics.e2e_p99_s,
+        );
+        if best.as_ref().map(|(_, b)| e.energy_kwh < *b).unwrap_or(true) {
+            best = Some((format!("TP{tp}/PP{pp}"), e.energy_kwh));
+        }
+    }
+    let (name, kwh) = best.unwrap();
+    println!("\nmost energy-efficient: {name} at {kwh:.4} kWh");
+    println!("(paper: TP2/PP1 and TP1/PP2 balance runtime and power best)");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Quickstart: simulate the paper's default configuration (Table 1a —
+//! Meta-Llama-3-8B on one A100, vLLM scheduler, Zipf lengths, QPS 6.45)
+//! and report latency, MFU, power, energy, and carbon.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts` once; falls back to the native oracle
+//! if artifacts are missing.)
+
+use vidur_energy::config::simconfig::{CostModelKind, SimConfig};
+use vidur_energy::energy::EnergyAccountant;
+use vidur_energy::runtime::ArtifactStore;
+use vidur_energy::sim;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = SimConfig::default();
+    cfg.num_requests = 512;
+    if ArtifactStore::discover().is_err() {
+        eprintln!("artifacts/ not found — using the native cost oracle");
+        cfg.cost_model = CostModelKind::Native;
+    }
+
+    println!("simulating {} requests of {} on {} ...", cfg.num_requests, cfg.model, cfg.gpu);
+    let out = sim::run(&cfg)?;
+    let m = &out.metrics;
+    println!("\n-- latency/throughput --");
+    println!("makespan            {:>10.1} s", m.makespan_s);
+    println!("achieved QPS        {:>10.2}", m.achieved_qps);
+    println!("token throughput    {:>10.0} tok/s", m.token_throughput);
+    println!("TTFT p50/p99        {:>7.3} / {:.3} s", m.ttft_p50_s, m.ttft_p99_s);
+    println!("E2E  p50/p99        {:>7.3} / {:.3} s", m.e2e_p50_s, m.e2e_p99_s);
+    println!("mean batch size     {:>10.1}", m.mean_batch_size);
+    println!("weighted MFU        {:>10.3}", m.weighted_mfu);
+
+    let acc = EnergyAccountant::paper_default(&cfg)?;
+    let e = acc.account(&cfg, &out.stagelog, m.makespan_s);
+    println!("\n-- energy/carbon (Eq. 1-4) --");
+    println!("avg GPU power       {:>10.1} W", e.avg_power_w);
+    println!("peak GPU power      {:>10.1} W", e.peak_power_w);
+    println!("energy (PUE {:.1})   {:>10.4} kWh", cfg.pue, e.energy_kwh);
+    println!("operational carbon  {:>10.1} g  (CI {:.1} g/kWh)", e.operational_g, 418.2);
+    println!("embodied carbon     {:>10.1} g", e.embodied_g);
+    println!("busy fraction       {:>10.2}", e.busy_fraction);
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT export: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text — not `.serialize()` protos — is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the rust
+side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/load_hlo and its README.
+
+Run once at build time (`make artifacts`); the rust binary is then fully
+self-contained.  Python never executes on the simulation hot path.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+EXPORTS = {
+    # name -> (fn, example args)
+    "stage_oracle": (
+        model.stage_oracle,
+        lambda: (
+            f32(model.R_MAX),
+            f32(model.R_MAX),
+            f32(model.R_MAX),
+            f32(8),
+            f32(12),
+        ),
+    ),
+    "cosim_step": (
+        model.cosim_step,
+        lambda: (
+            f32(model.T_COSIM),
+            f32(model.T_COSIM),
+            f32(model.T_COSIM),
+            f32(8),
+            f32(1),
+        ),
+    ),
+    "bin_power": (
+        model.bin_power,
+        lambda: (f32(model.N_SAMPLES), f32(model.N_SAMPLES), f32(model.N_SAMPLES)),
+    ),
+}
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, args) in EXPORTS.items():
+        lowered = jax.jit(fn).lower(*args())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest["shapes"] = {
+        "R_MAX": model.R_MAX,
+        "T_COSIM": model.T_COSIM,
+        "N_SAMPLES": model.N_SAMPLES,
+        "N_BINS": model.N_BINS,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

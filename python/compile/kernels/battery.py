@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: Vessim-style microgrid / battery scan.
+
+The co-simulation inner loop — per-minute power balance between the LLM
+load, solar generation, a rate/SoC-limited battery, and the grid — is a
+strictly sequential recurrence over the state of charge.  It is exported
+as one kernel over a T-step horizon; the rust co-simulator chains chunks
+by feeding the final SoC of one call into the next.
+
+TPU mapping: the whole T-step window (default 1440 = one day of minutes,
+5 input + 5 output arrays ≈ 57 KiB) is VMEM-resident; the recurrence runs
+as a fori_loop with scalar carry, reading/writing VMEM directly — the
+classic "small sequential scan on-chip" pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _microgrid_kernel(
+    load_ref, solar_ref, ci_ref, bp_ref, soc0_ref,
+    soc_ref, grid_ref, used_ref, batt_ref, em_ref,
+):
+    cap_wh = bp_ref[ref.BP_CAP_WH]
+    soc_min = bp_ref[ref.BP_SOC_MIN]
+    soc_max = bp_ref[ref.BP_SOC_MAX]
+    max_chg = bp_ref[ref.BP_MAX_CHARGE_W]
+    max_dis = bp_ref[ref.BP_MAX_DISCHARGE_W]
+    eff_c = bp_ref[ref.BP_EFF_CHARGE]
+    eff_d = bp_ref[ref.BP_EFF_DISCHARGE]
+    dt_h = bp_ref[ref.BP_DT_S] / 3600.0
+
+    t_steps = load_ref.shape[0]
+
+    def step(i, soc):
+        load = load_ref[i]
+        solar = solar_ref[i]
+        carbon = ci_ref[i]
+
+        solar_used = jnp.minimum(solar, load)
+        excess = solar - solar_used
+        deficit = load - solar_used
+
+        room_wh = (soc_max - soc) * cap_wh
+        chg_w = jnp.minimum(excess, max_chg)
+        chg_w = jnp.minimum(chg_w, room_wh / (dt_h * eff_c))
+        chg_w = jnp.maximum(chg_w, 0.0)
+        export_w = excess - chg_w
+
+        avail_wh = (soc - soc_min) * cap_wh
+        dis_w = jnp.minimum(deficit, max_dis)
+        dis_w = jnp.minimum(dis_w, avail_wh * eff_d / dt_h)
+        dis_w = jnp.maximum(dis_w, 0.0)
+        import_w = deficit - dis_w
+
+        soc_next = soc + (chg_w * eff_c - dis_w / eff_d) * dt_h / cap_wh
+        soc_next = jnp.clip(soc_next, 0.0, 1.0)
+
+        soc_ref[i] = soc_next
+        grid_ref[i] = import_w - export_w
+        used_ref[i] = solar_used
+        batt_ref[i] = dis_w - chg_w
+        em_ref[i] = import_w * dt_h / 1000.0 * carbon
+        return soc_next
+
+    jax.lax.fori_loop(0, t_steps, step, soc0_ref[0])
+
+
+def microgrid(load_w, solar_w, ci, bp, soc0):
+    """Pallas microgrid scan; matches ref.ref_microgrid.
+
+    load_w, solar_w, ci: float32[T]; bp: float32[8]; soc0: float32[1].
+    Returns (soc, grid_w, solar_used_w, batt_w, emissions_g), each [T].
+    """
+    (t,) = load_w.shape
+    full = pl.BlockSpec((t,), lambda: (0,))
+    prm = pl.BlockSpec((bp.shape[0],), lambda: (0,))
+    scl = pl.BlockSpec((1,), lambda: (0,))
+    out = jax.ShapeDtypeStruct((t,), jnp.float32)
+    return pl.pallas_call(
+        _microgrid_kernel,
+        grid=(),
+        in_specs=[full, full, full, prm, scl],
+        out_specs=[full] * 5,
+        out_shape=[out] * 5,
+        interpret=True,
+    )(load_w, solar_w, ci, bp, soc0)

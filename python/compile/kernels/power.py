@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: the paper's Eq. 1 MFU -> power law, vectorized.
+
+Used by the Vidur->Vessim pipeline to convert binned MFU traces into
+instantaneous power, and by the stage oracle for single values.
+
+TPU mapping: elementwise over 128-wide tiles; `pow` with a scalar
+exponent lowers to exp/log on the VPU.  VMEM per step: 2 tiles + 4
+params ≈ 1 KiB.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _power_kernel(mfu_ref, pp_ref, out_ref):
+    p_idle = pp_ref[0]
+    p_max = pp_ref[1]
+    sat = pp_ref[2]
+    gamma = pp_ref[3]
+    x = jnp.clip(mfu_ref[...] / sat, 0.0, 1.0)
+    out_ref[...] = p_idle + (p_max - p_idle) * jnp.power(x, gamma)
+
+
+def power_law(mfu, power_params):
+    """Eq. 1 over an arbitrary (128-multiple) MFU vector.
+
+    power_params = [p_idle, p_max, mfu_sat, gamma] (float32[4]).
+    """
+    (n,) = mfu.shape
+    assert n % TILE == 0, f"length {n} must be a multiple of {TILE}"
+    row = pl.BlockSpec((TILE,), lambda i: (i,))
+    rep = pl.BlockSpec((4,), lambda i: (0,))
+    return pl.pallas_call(
+        _power_kernel,
+        grid=(n // TILE,),
+        in_specs=[row, rep],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(mfu, power_params)

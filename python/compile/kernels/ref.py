@@ -1,0 +1,251 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance (see
+python/tests/).  They are deliberately written in the most direct,
+un-optimized style so a reviewer can check them against the paper's
+equations:
+
+  * Eq. 2   — per-stage FLOPs (MLP + attention) and MFU,
+  * Eq. 1   — sublinear MFU -> power law,
+  * Eq. 5   — duration-weighted power binning,
+  * Sec 3.2 — the Vessim-style battery / microgrid step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+# --------------------------------------------------------------------------
+# Parameter-vector layouts (shared with the rust side; keep in sync with
+# rust/src/runtime/artifacts.rs and python/compile/model.py)
+# --------------------------------------------------------------------------
+
+# model_params mp[8]:
+MP_LAYERS, MP_HIDDEN, MP_FFN, MP_HEADS, MP_KV_HEADS, MP_VOCAB, MP_TP, MP_PP = range(8)
+
+# gpu_params gp[12]:
+(
+    GP_PEAK_FLOPS,    # peak BF16 FLOPs/s of one GPU
+    GP_HBM_BW,        # HBM bytes/s
+    GP_P_IDLE,        # idle watts
+    GP_P_MAX,         # max instantaneous watts
+    GP_MFU_SAT,       # MFU saturation threshold (Eq. 1)
+    GP_GAMMA,         # power-law exponent (Eq. 1)
+    GP_FLOPS_EFF,     # achievable fraction of peak FLOPs (kernel efficiency)
+    GP_MEM_EFF,       # achievable fraction of HBM bandwidth
+    GP_T_OVERHEAD,    # fixed per-stage overhead, seconds (scheduler/launch)
+    GP_LAYER_OVERHEAD,  # per-layer kernel-launch overhead, seconds
+    GP_LINK_BW,       # interconnect bytes/s (NVLink pairwise / PCIe)
+    GP_LINK_LAT,      # interconnect latency per collective, seconds
+) = range(12)
+
+# battery_params bp[8]:
+(
+    BP_CAP_WH,        # usable capacity, Wh
+    BP_SOC_MIN,       # minimum state of charge, fraction
+    BP_SOC_MAX,       # maximum state of charge, fraction
+    BP_MAX_CHARGE_W,  # charge power limit, W
+    BP_MAX_DISCHARGE_W,  # discharge power limit, W
+    BP_EFF_CHARGE,    # charge efficiency, fraction
+    BP_EFF_DISCHARGE,  # discharge efficiency, fraction
+    BP_DT_S,          # step duration, seconds
+) = range(8)
+
+
+# --------------------------------------------------------------------------
+# Per-request transformer stage cost (numerator of Eq. 2)
+# --------------------------------------------------------------------------
+
+def ref_stage_cost(new_tokens, context, active, mp):
+    """Per-request forward FLOPs and KV-cache bytes for one batch stage.
+
+    new_tokens[r] : tokens processed this iteration (prefill chunk, or 1
+                    for a decode step).
+    context[r]    : tokens already resident in the KV cache.
+    active[r]     : 1.0 if slot r holds a live request.
+    mp            : model-parameter vector (see layout above).
+
+    Returns (flops[r], kv_bytes[r]) where flops is the *whole model*
+    forward cost for this request's tokens and kv_bytes the KV-cache
+    traffic (read of context + write of new tokens, both K and V).
+    """
+    layers = mp[MP_LAYERS]
+    h = mp[MP_HIDDEN]
+    ffn = mp[MP_FFN]
+    heads = mp[MP_HEADS]
+    kvh = mp[MP_KV_HEADS]
+    vocab = mp[MP_VOCAB]
+
+    kv_dim = h * kvh / heads
+    t = new_tokens * active
+    c = context * active
+
+    # Projections per token per layer: Q (2h^2), O (2h^2), K, V (2*h*kv_dim each).
+    proj = 2.0 * h * (2.0 * h + 2.0 * kv_dim)
+    # SwiGLU MLP: three h x ffn matmuls.
+    mlp = 6.0 * h * ffn
+    # Causal attention over the running context: QK^T + AV, per layer.
+    # Token j of the chunk attends to (c + j) positions: sum over the chunk
+    # gives c*t + t*(t+1)/2.
+    attn_positions = c * t + t * (t + 1.0) / 2.0
+    attn = 4.0 * h * attn_positions
+    # LM head + embedding, once per token (model-level, not per layer).
+    head = 2.0 * h * vocab
+
+    flops = layers * (t * (proj + mlp) + attn) + t * head
+
+    # KV cache bytes: K and V, bf16 (2 bytes), all layers.
+    kv_bytes = 2.0 * layers * kv_dim * (c + t) * 2.0
+    return flops, kv_bytes
+
+
+# --------------------------------------------------------------------------
+# Stage oracle: roofline time, MFU (Eq. 2), power (Eq. 1)
+# --------------------------------------------------------------------------
+
+def ref_weight_bytes(mp):
+    """Approximate bf16 parameter bytes of the whole model."""
+    layers = mp[MP_LAYERS]
+    h = mp[MP_HIDDEN]
+    ffn = mp[MP_FFN]
+    heads = mp[MP_HEADS]
+    kvh = mp[MP_KV_HEADS]
+    vocab = mp[MP_VOCAB]
+    kv_dim = h * kvh / heads
+    per_layer = h * (2.0 * h + 2.0 * kv_dim) + 3.0 * h * ffn
+    embed = 2.0 * h * vocab  # embedding + lm head
+    return 2.0 * (layers * per_layer + embed)
+
+
+def ref_power(mfu, p_idle, p_max, mfu_sat, gamma):
+    """Eq. 1: sublinear power law, clamped at the saturation threshold."""
+    x = jnp.clip(mfu / mfu_sat, 0.0, 1.0)
+    return p_idle + (p_max - p_idle) * jnp.power(x, gamma)
+
+
+def ref_stage_oracle(new_tokens, context, active, mp, gp):
+    """One pipeline-stage iteration: latency, FLOPs, MFU, per-GPU power.
+
+    The returned FLOPs/latency describe ONE pipeline-parallel stage
+    (layers/pp of the model) executed across its TP group, matching
+    Vidur's "replica stage" granularity that the paper logs at.
+    """
+    flops_r, kv_r = ref_stage_cost(new_tokens, context, active, mp)
+    tp = mp[MP_TP]
+    pp = mp[MP_PP]
+
+    flops_stage = jnp.sum(flops_r) / pp
+    tokens = jnp.sum(new_tokens * active)
+    layers_pp = mp[MP_LAYERS] / pp
+    h = mp[MP_HIDDEN]
+
+    # Per-GPU bytes moved: weight read (sharded over tp*pp) + KV traffic.
+    wbytes = ref_weight_bytes(mp) / (tp * pp)
+    kv_bytes = jnp.sum(kv_r) / (tp * pp)
+
+    t_comp = flops_stage / (tp * gp[GP_PEAK_FLOPS] * gp[GP_FLOPS_EFF])
+    t_mem = (wbytes + kv_bytes) / (gp[GP_HBM_BW] * gp[GP_MEM_EFF])
+
+    # TP: two all-reduces per layer over the activations (ring cost).
+    act_bytes = tokens * h * 2.0
+    ring = 2.0 * (tp - 1.0) / jnp.maximum(tp, 1.0)
+    t_tp = jnp.where(
+        tp > 1.0,
+        layers_pp * 2.0 * (ring * act_bytes / gp[GP_LINK_BW] + gp[GP_LINK_LAT]),
+        0.0,
+    )
+    # PP: one activation send per stage boundary.
+    t_pp = jnp.where(
+        pp > 1.0, act_bytes / gp[GP_LINK_BW] + gp[GP_LINK_LAT], 0.0
+    )
+
+    t_stage = (
+        jnp.maximum(t_comp, t_mem)
+        + t_tp
+        + t_pp
+        + gp[GP_T_OVERHEAD]
+        + layers_pp * gp[GP_LAYER_OVERHEAD]
+    )
+
+    # Eq. 2: achieved FLOPs over the stage group's peak.
+    mfu = flops_stage / (t_stage * tp * gp[GP_PEAK_FLOPS])
+    power = ref_power(
+        mfu, gp[GP_P_IDLE], gp[GP_P_MAX], gp[GP_MFU_SAT], gp[GP_GAMMA]
+    )
+    return t_stage, flops_stage, mfu, power
+
+
+# --------------------------------------------------------------------------
+# Eq. 5: duration-weighted binning of a variable-duration power trace
+# --------------------------------------------------------------------------
+
+def ref_bin_power(power, dt, bin_idx, n_bins):
+    """Weighted sums per bin:  sum(P_i * dt_i)  and  sum(dt_i)  per bin.
+
+    The caller divides to get the Eq. 5 weighted average; returning the
+    two sums keeps the result exact when bins are later merged.
+    """
+    energy = jnp.zeros((n_bins,), dtype=jnp.float32)
+    weight = jnp.zeros((n_bins,), dtype=jnp.float32)
+    idx = bin_idx.astype(jnp.int32)
+    energy = energy.at[idx].add(power * dt)
+    weight = weight.at[idx].add(dt)
+    return energy, weight
+
+
+# --------------------------------------------------------------------------
+# Vessim-style battery / microgrid step (Sec. 3.2)
+# --------------------------------------------------------------------------
+
+def ref_microgrid(load_w, solar_w, ci, bp, soc0):
+    """Sequential microgrid simulation over T fixed-width steps.
+
+    Power-balance policy per step (matches rust/src/cosim/microgrid.rs):
+      1. solar serves the load first;
+      2. excess solar charges the battery (rate & SoC limited), the
+         remainder is exported to the grid;
+      3. residual load discharges the battery (rate & SoC limited), the
+         remainder is imported from the grid;
+      4. emissions = imported energy x carbon intensity.
+
+    Returns (soc[T], grid_w[T], solar_used_w[T], batt_w[T], emissions_g[T]).
+    grid_w > 0 is import, < 0 export; batt_w > 0 discharge, < 0 charge.
+    """
+    cap_wh = bp[BP_CAP_WH]
+    dt_h = bp[BP_DT_S] / 3600.0
+
+    def step(soc, inp):
+        load, solar, carbon = inp
+        solar_used = jnp.minimum(solar, load)
+        excess = solar - solar_used
+        deficit = load - solar_used
+
+        # Charge with excess solar.
+        room_wh = (bp[BP_SOC_MAX] - soc) * cap_wh
+        chg_w = jnp.minimum(excess, bp[BP_MAX_CHARGE_W])
+        chg_w = jnp.minimum(chg_w, room_wh / (dt_h * bp[BP_EFF_CHARGE]))
+        chg_w = jnp.maximum(chg_w, 0.0)
+        export_w = excess - chg_w
+
+        # Discharge into the residual load.
+        avail_wh = (soc - bp[BP_SOC_MIN]) * cap_wh
+        dis_w = jnp.minimum(deficit, bp[BP_MAX_DISCHARGE_W])
+        dis_w = jnp.minimum(dis_w, avail_wh * bp[BP_EFF_DISCHARGE] / dt_h)
+        dis_w = jnp.maximum(dis_w, 0.0)
+        import_w = deficit - dis_w
+
+        soc_next = soc + (
+            chg_w * bp[BP_EFF_CHARGE] - dis_w / bp[BP_EFF_DISCHARGE]
+        ) * dt_h / cap_wh
+        soc_next = jnp.clip(soc_next, 0.0, 1.0)
+
+        grid_w = import_w - export_w
+        batt_w = dis_w - chg_w
+        emissions = import_w * dt_h / 1000.0 * carbon  # kWh * g/kWh
+        return soc_next, (soc_next, grid_w, solar_used, batt_w, emissions)
+
+    _, out = jax.lax.scan(step, soc0, (load_w, solar_w, ci))
+    return out

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: per-request transformer stage cost (FLOPs + KV bytes).
+
+This is the numerator of the paper's Eq. 2 evaluated for every request in
+a batch stage — the innermost computation of the whole simulator, executed
+once per simulated batch stage (hundreds of thousands of times per run).
+
+TPU mapping (see DESIGN.md §6): the request axis is tiled into 128-wide
+blocks (VPU-lane aligned); each tile's FLOP/byte computation is purely
+elementwise so the whole block lives in VMEM with one HBM read per input
+tile and one write per output tile.  The model-parameter vector is small
+and replicated to every grid step.
+
+VMEM footprint per grid step: 3 input tiles + 2 output tiles + params
+= 5 * 128 * 4 B + 32 B ≈ 2.6 KiB — far under the ~16 MiB VMEM budget,
+leaving room for the compiler to double-buffer the HBM streams.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = 128
+
+
+def _stage_cost_kernel(nt_ref, ctx_ref, act_ref, mp_ref, flops_ref, kv_ref):
+    """One 128-request tile: elementwise FLOP / KV-byte arithmetic."""
+    layers = mp_ref[ref.MP_LAYERS]
+    h = mp_ref[ref.MP_HIDDEN]
+    ffn = mp_ref[ref.MP_FFN]
+    heads = mp_ref[ref.MP_HEADS]
+    kvh = mp_ref[ref.MP_KV_HEADS]
+    vocab = mp_ref[ref.MP_VOCAB]
+
+    kv_dim = h * kvh / heads
+    t = nt_ref[...] * act_ref[...]
+    c = ctx_ref[...] * act_ref[...]
+
+    proj = 2.0 * h * (2.0 * h + 2.0 * kv_dim)
+    mlp = 6.0 * h * ffn
+    attn = 4.0 * h * (c * t + t * (t + 1.0) * 0.5)
+    head = 2.0 * h * vocab
+
+    flops_ref[...] = layers * (t * (proj + mlp) + attn) + t * head
+    kv_ref[...] = 2.0 * layers * kv_dim * (c + t) * 2.0
+
+
+def stage_cost(new_tokens, context, active, mp):
+    """Pallas-tiled per-request stage cost; matches ref.ref_stage_cost.
+
+    Arguments are float32 arrays of identical length R (R % 128 == 0; the
+    caller pads with active=0) plus the mp[8] model-parameter vector.
+    """
+    (r,) = new_tokens.shape
+    assert r % TILE == 0, f"request axis {r} must be a multiple of {TILE}"
+    grid = (r // TILE,)
+    row = pl.BlockSpec((TILE,), lambda i: (i,))
+    rep = pl.BlockSpec((mp.shape[0],), lambda i: (0,))
+    return pl.pallas_call(
+        _stage_cost_kernel,
+        grid=grid,
+        in_specs=[row, row, row, rep],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+        ],
+        interpret=True,
+    )(new_tokens, context, active, mp)

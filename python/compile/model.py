@@ -1,0 +1,95 @@
+"""L2: the JAX compute graph the rust coordinator calls at runtime.
+
+Three exported entry points (all lowered to HLO text by aot.py and loaded
+by rust/src/runtime):
+
+  stage_oracle(new_tokens[R], context[R], active[R], mp[8], gp[12])
+      -> (t_stage, flops, mfu, power)          # the per-batch-stage oracle
+  cosim_step(load[T], solar[T], ci[T], bp[8], soc0[1])
+      -> (soc[T], grid[T], solar_used[T], batt[T], emissions[T])
+  bin_power(power[N], dt[N], bin_idx[N])
+      -> (energy[B], weight[B])                # Eq. 5 binning
+
+Each calls its L1 Pallas kernel so everything lowers into a single fused
+HLO module per entry point.  Static shapes (R=128, T=1440, N=4096, B=512)
+are the AOT contract with the rust side — see rust/src/runtime/artifacts.rs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.stage_cost import stage_cost
+from .kernels.battery import microgrid
+from .kernels.binning import bin_power as bin_power_kernel
+
+# AOT static shapes — the rust runtime pads to these.
+R_MAX = 128      # max requests per batch stage (paper's batch cap)
+T_COSIM = 1440   # one day of 1-minute steps per cosim call
+N_SAMPLES = 4096  # power samples per binning call
+N_BINS = 512     # bins per binning call
+
+
+def stage_oracle(new_tokens, context, active, mp, gp):
+    """Latency / FLOPs / MFU (Eq. 2) / per-GPU power (Eq. 1) of one stage.
+
+    Combines the L1 per-request cost kernel with the roofline latency
+    model and the power law; mirrors ref.ref_stage_oracle exactly (tested
+    in python/tests/test_model.py).
+    """
+    flops_r, kv_r = stage_cost(new_tokens, context, active, mp)
+    tp = mp[ref.MP_TP]
+    pp = mp[ref.MP_PP]
+
+    flops_stage = jnp.sum(flops_r) / pp
+    tokens = jnp.sum(new_tokens * active)
+    layers_pp = mp[ref.MP_LAYERS] / pp
+    h = mp[ref.MP_HIDDEN]
+
+    wbytes = ref.ref_weight_bytes(mp) / (tp * pp)
+    kv_bytes = jnp.sum(kv_r) / (tp * pp)
+
+    t_comp = flops_stage / (tp * gp[ref.GP_PEAK_FLOPS] * gp[ref.GP_FLOPS_EFF])
+    t_mem = (wbytes + kv_bytes) / (gp[ref.GP_HBM_BW] * gp[ref.GP_MEM_EFF])
+
+    act_bytes = tokens * h * 2.0
+    ring = 2.0 * (tp - 1.0) / jnp.maximum(tp, 1.0)
+    t_tp = jnp.where(
+        tp > 1.0,
+        layers_pp
+        * 2.0
+        * (ring * act_bytes / gp[ref.GP_LINK_BW] + gp[ref.GP_LINK_LAT]),
+        0.0,
+    )
+    t_pp = jnp.where(
+        pp > 1.0, act_bytes / gp[ref.GP_LINK_BW] + gp[ref.GP_LINK_LAT], 0.0
+    )
+
+    t_stage = (
+        jnp.maximum(t_comp, t_mem)
+        + t_tp
+        + t_pp
+        + gp[ref.GP_T_OVERHEAD]
+        + layers_pp * gp[ref.GP_LAYER_OVERHEAD]
+    )
+
+    mfu = flops_stage / (t_stage * tp * gp[ref.GP_PEAK_FLOPS])
+    power = ref.ref_power(
+        mfu,
+        gp[ref.GP_P_IDLE],
+        gp[ref.GP_P_MAX],
+        gp[ref.GP_MFU_SAT],
+        gp[ref.GP_GAMMA],
+    )
+    return t_stage, flops_stage, mfu, power
+
+
+def cosim_step(load_w, solar_w, ci, bp, soc0):
+    """One T-step microgrid window (L1 battery scan kernel)."""
+    return tuple(microgrid(load_w, solar_w, ci, bp, soc0))
+
+
+def bin_power(power, dt, bin_idx):
+    """Eq. 5 duration-weighted binning (L1 binning kernel)."""
+    return tuple(bin_power_kernel(power, dt, bin_idx, N_BINS))

@@ -1,0 +1,260 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/values; every kernel must match its ref_*
+counterpart to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.stage_cost import stage_cost
+from compile.kernels.power import power_law
+from compile.kernels.binning import bin_power
+from compile.kernels.battery import microgrid
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- helpers
+
+def mk_mp(layers=32, h=4096, ffn=14336, heads=32, kvh=8, vocab=128256, tp=1, pp=1):
+    return jnp.array([layers, h, ffn, heads, kvh, vocab, tp, pp], dtype=jnp.float32)
+
+
+def mk_gp(
+    peak=312e12, bw=2.039e12, p_idle=100.0, p_max=400.0, sat=0.45, gamma=0.7,
+    flops_eff=0.46, mem_eff=0.8, t_overhead=5e-4, layer_overhead=2.5e-5,
+    link_bw=250e9, link_lat=5e-6,
+):
+    return jnp.array(
+        [peak, bw, p_idle, p_max, sat, gamma, flops_eff, mem_eff,
+         t_overhead, layer_overhead, link_bw, link_lat],
+        dtype=jnp.float32,
+    )
+
+
+def mk_bp(cap=100.0, soc_min=0.2, soc_max=0.8, chg=50.0, dis=50.0,
+          eff_c=0.95, eff_d=0.95, dt=60.0):
+    return jnp.array([cap, soc_min, soc_max, chg, dis, eff_c, eff_d, dt],
+                     dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- stage cost
+
+class TestStageCost:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        nt = jnp.array(rng.integers(0, 2048, 128), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 4096, 128), dtype=jnp.float32)
+        act = jnp.array(rng.integers(0, 2, 128), dtype=jnp.float32)
+        mp = mk_mp()
+        got_f, got_kv = stage_cost(nt, ctx, act, mp)
+        want_f, want_kv = ref.ref_stage_cost(nt, ctx, act, mp)
+        np.testing.assert_allclose(got_f, want_f, rtol=1e-6)
+        np.testing.assert_allclose(got_kv, want_kv, rtol=1e-6)
+
+    def test_inactive_rows_are_zero(self):
+        nt = jnp.full((128,), 64.0)
+        ctx = jnp.full((128,), 512.0)
+        act = jnp.zeros((128,))
+        f, kv = stage_cost(nt, ctx, act, mk_mp())
+        assert float(jnp.abs(f).max()) == 0.0
+        assert float(jnp.abs(kv).max()) == 0.0
+
+    def test_multi_tile(self):
+        rng = np.random.default_rng(1)
+        n = 512
+        nt = jnp.array(rng.integers(1, 512, n), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 1024, n), dtype=jnp.float32)
+        act = jnp.ones((n,))
+        mp = mk_mp(layers=48, h=8192, ffn=22016, heads=64)
+        got_f, got_kv = stage_cost(nt, ctx, act, mp)
+        want_f, want_kv = ref.ref_stage_cost(nt, ctx, act, mp)
+        np.testing.assert_allclose(got_f, want_f, rtol=1e-6)
+        np.testing.assert_allclose(got_kv, want_kv, rtol=1e-6)
+
+    def test_decode_token_flops_scale_with_context(self):
+        """A decode step's attention FLOPs must grow linearly in context."""
+        mp = mk_mp()
+        one = jnp.ones((128,))
+        f1, _ = ref.ref_stage_cost(one, 100.0 * one, one, mp)
+        f2, _ = ref.ref_stage_cost(one, 200.0 * one, one, mp)
+        d = float((f2 - f1)[0])
+        # 4*h*delta_c per layer
+        assert d == pytest.approx(32 * 4 * 4096 * 100, rel=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tiles=st.integers(1, 4),
+        layers=st.integers(2, 96),
+        h=st.sampled_from([1024, 2560, 4096, 8192]),
+        kv_frac=st.sampled_from([1, 4, 8]),
+    )
+    def test_matches_ref_hypothesis(self, seed, tiles, layers, h, kv_frac):
+        rng = np.random.default_rng(seed)
+        n = 128 * tiles
+        nt = jnp.array(rng.integers(0, 4096, n), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 8192, n), dtype=jnp.float32)
+        act = jnp.array(rng.integers(0, 2, n), dtype=jnp.float32)
+        heads = h // 128
+        mp = mk_mp(layers=layers, h=h, ffn=4 * h, heads=heads,
+                   kvh=max(1, heads // kv_frac))
+        got_f, got_kv = stage_cost(nt, ctx, act, mp)
+        want_f, want_kv = ref.ref_stage_cost(nt, ctx, act, mp)
+        np.testing.assert_allclose(got_f, want_f, rtol=1e-5)
+        np.testing.assert_allclose(got_kv, want_kv, rtol=1e-5)
+
+
+# -------------------------------------------------------------- power law
+
+class TestPowerLaw:
+    def test_matches_ref(self):
+        mfu = jnp.linspace(0.0, 1.0, 1280)
+        got = power_law(mfu, jnp.array([100.0, 400.0, 0.45, 0.7]))
+        want = ref.ref_power(mfu, 100.0, 400.0, 0.45, 0.7)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_idle_at_zero_mfu(self):
+        p = power_law(jnp.zeros(128), jnp.array([100.0, 400.0, 0.45, 0.7]))
+        np.testing.assert_allclose(p, 100.0)
+
+    def test_clamps_at_saturation(self):
+        """Above mfu_sat the curve must flatten at P_max (Eq. 1 clamp)."""
+        pp = jnp.array([60.0, 700.0, 0.45, 0.7])
+        hi = power_law(jnp.full((128,), 0.9), pp)
+        at = power_law(jnp.full((128,), 0.45), pp)
+        np.testing.assert_allclose(hi, 700.0, rtol=1e-6)
+        np.testing.assert_allclose(at, 700.0, rtol=1e-6)
+
+    def test_monotone_below_saturation(self):
+        mfu = jnp.linspace(0.0, 0.45, 128)
+        p = np.asarray(power_law(mfu, jnp.array([30.0, 300.0, 0.45, 0.7])))
+        assert (np.diff(p) >= -1e-4).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        gamma=st.floats(0.3, 1.0),
+        sat=st.floats(0.2, 0.9),
+    )
+    def test_matches_ref_hypothesis(self, seed, gamma, sat):
+        rng = np.random.default_rng(seed)
+        mfu = jnp.array(rng.uniform(0, 1.2, 256), dtype=jnp.float32)
+        pp = jnp.array([100.0, 400.0, sat, gamma], dtype=jnp.float32)
+        got = power_law(mfu, pp)
+        want = ref.ref_power(mfu, 100.0, 400.0, sat, gamma)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------- binning
+
+class TestBinning:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        n, b = 1024, 256
+        p = jnp.array(rng.uniform(100, 400, n), dtype=jnp.float32)
+        dt = jnp.array(rng.uniform(0.001, 0.5, n), dtype=jnp.float32)
+        idx = jnp.array(rng.integers(0, b, n), dtype=jnp.float32)
+        got_e, got_w = bin_power(p, dt, idx, b)
+        want_e, want_w = ref.ref_bin_power(p, dt, idx, b)
+        np.testing.assert_allclose(got_e, want_e, rtol=1e-4)
+        np.testing.assert_allclose(got_w, want_w, rtol=1e-4)
+
+    def test_energy_conserved(self):
+        """Total P*dt must be preserved by binning (no sample dropped)."""
+        rng = np.random.default_rng(3)
+        n, b = 512, 128
+        p = jnp.array(rng.uniform(0, 500, n), dtype=jnp.float32)
+        dt = jnp.array(rng.uniform(0.01, 1.0, n), dtype=jnp.float32)
+        idx = jnp.array(rng.integers(0, b, n), dtype=jnp.float32)
+        e, w = bin_power(p, dt, idx, b)
+        assert float(jnp.sum(e)) == pytest.approx(float(jnp.sum(p * dt)), rel=1e-4)
+        assert float(jnp.sum(w)) == pytest.approx(float(jnp.sum(dt)), rel=1e-4)
+
+    def test_single_bin(self):
+        n, b = 128, 128
+        p = jnp.full((n,), 200.0)
+        dt = jnp.full((n,), 0.1)
+        idx = jnp.zeros((n,))
+        e, w = bin_power(p, dt, idx, b)
+        assert float(e[0]) == pytest.approx(200.0 * 0.1 * n, rel=1e-5)
+        assert float(jnp.sum(e[1:])) == 0.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4))
+    def test_matches_ref_hypothesis(self, seed, tiles):
+        rng = np.random.default_rng(seed)
+        n, b = 128 * tiles, 256
+        p = jnp.array(rng.uniform(0, 700, n), dtype=jnp.float32)
+        dt = jnp.array(rng.uniform(0, 2, n), dtype=jnp.float32)
+        idx = jnp.array(rng.integers(0, b, n), dtype=jnp.float32)
+        got_e, got_w = bin_power(p, dt, idx, b)
+        want_e, want_w = ref.ref_bin_power(p, dt, idx, b)
+        np.testing.assert_allclose(got_e, want_e, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(got_w, want_w, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- battery
+
+class TestMicrogrid:
+    def _run_pair(self, seed, t=256, **bp_kw):
+        rng = np.random.default_rng(seed)
+        load = jnp.array(rng.uniform(0, 400, t), dtype=jnp.float32)
+        solar = jnp.array(rng.uniform(0, 600, t), dtype=jnp.float32)
+        ci = jnp.array(rng.uniform(50, 500, t), dtype=jnp.float32)
+        bp = mk_bp(**bp_kw)
+        soc0 = jnp.array([0.5], dtype=jnp.float32)
+        got = microgrid(load, solar, ci, bp, soc0)
+        want = ref.ref_microgrid(load, solar, ci, bp, jnp.float32(0.5))
+        return got, want, (load, solar, ci, bp)
+
+    def test_matches_ref(self):
+        got, want, _ = self._run_pair(4)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-3)
+
+    def test_soc_bounds_respected(self):
+        got, _, (_, _, _, bp) = self._run_pair(5, cap=50.0)
+        soc = np.asarray(got[0])
+        assert (soc >= float(bp[ref.BP_SOC_MIN]) - 1e-3).all()
+        assert (soc <= float(bp[ref.BP_SOC_MAX]) + 1e-3).all()
+
+    def test_power_balance_each_step(self):
+        """load = solar_used + battery_discharge + grid_import each step."""
+        got, _, (load, solar, _, _) = self._run_pair(6)
+        _, grid, used, batt, _ = (np.asarray(x) for x in got)
+        imp = np.maximum(grid, 0.0)
+        exp = np.maximum(-grid, 0.0)
+        dis = np.maximum(batt, 0.0)
+        chg = np.maximum(-batt, 0.0)
+        np.testing.assert_allclose(np.asarray(load), used + dis + imp, rtol=1e-4, atol=1e-2)
+        # and solar = used + charge + export
+        np.testing.assert_allclose(np.asarray(solar), used + chg + exp, rtol=1e-4, atol=1e-2)
+
+    def test_no_solar_all_grid(self):
+        t = 128
+        load = jnp.full((t,), 300.0)
+        solar = jnp.zeros((t,))
+        ci = jnp.full((t,), 400.0)
+        # battery starts at min soc -> nothing to discharge
+        bp = mk_bp(soc_min=0.5)
+        got = microgrid(load, solar, ci, bp, jnp.array([0.5], dtype=jnp.float32))
+        np.testing.assert_allclose(got[1], 300.0, rtol=1e-5)  # all import
+        # emissions = 300W * 1min in kWh * 400 g/kWh
+        np.testing.assert_allclose(got[4], 300.0 / 60 / 1000 * 400, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        cap=st.floats(10.0, 1000.0),
+        eff=st.floats(0.7, 1.0),
+    )
+    def test_matches_ref_hypothesis(self, seed, cap, eff):
+        got, want, _ = self._run_pair(seed, cap=cap, eff_c=eff, eff_d=eff)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=5e-3)

@@ -1,0 +1,127 @@
+"""L2 stage oracle: shape contract, ref equivalence, physical sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .test_kernels import mk_mp, mk_gp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_oracle(nt, ctx, act, mp=None, gp=None):
+    mp = mp if mp is not None else mk_mp()
+    gp = gp if gp is not None else mk_gp()
+    return [float(x) for x in model.stage_oracle(nt, ctx, act, mp, gp)]
+
+
+def pad(v, n=model.R_MAX):
+    out = np.zeros(n, dtype=np.float32)
+    out[: len(v)] = v
+    return jnp.array(out)
+
+
+class TestStageOracle:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        nt = jnp.array(rng.integers(0, 512, 128), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 2048, 128), dtype=jnp.float32)
+        act = jnp.array(rng.integers(0, 2, 128), dtype=jnp.float32)
+        got = model.stage_oracle(nt, ctx, act, mk_mp(), mk_gp())
+        want = ref.ref_stage_oracle(nt, ctx, act, mk_mp(), mk_gp())
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5)
+
+    def test_empty_batch_is_overhead_only(self):
+        z = jnp.zeros((128,))
+        t, flops, mfu, power = run_oracle(z, z, z)
+        gp = mk_gp()
+        assert flops == 0.0 and mfu == 0.0
+        assert power == pytest.approx(100.0)  # idle
+        # weight read still occurs; time >= overhead
+        assert t > float(gp[ref.GP_T_OVERHEAD])
+
+    def test_decode_is_memory_bound(self):
+        """Small decode batch: latency ~ weight-read time, low MFU."""
+        nt = pad([1.0] * 8)
+        ctx = pad([1024.0] * 8)
+        act = pad([1.0] * 8)
+        t, _, mfu, power = run_oracle(nt, ctx, act)
+        gp = mk_gp()
+        mp = mk_mp()
+        _, kv_r = ref.ref_stage_cost(nt, ctx, act, mp)
+        bytes_moved = float(ref.ref_weight_bytes(mp)) + float(jnp.sum(kv_r))
+        mem_t = bytes_moved / (
+            float(gp[ref.GP_HBM_BW]) * float(gp[ref.GP_MEM_EFF])
+        )
+        assert t == pytest.approx(
+            mem_t + float(gp[ref.GP_T_OVERHEAD])
+            + 32 * float(gp[ref.GP_LAYER_OVERHEAD]),
+            rel=0.02,
+        )
+        assert mfu < 0.05
+        assert power < 250.0
+
+    def test_prefill_is_compute_bound_high_mfu(self):
+        """A big prefill chunk saturates the MFU ceiling (~flops_eff)."""
+        nt = pad([4096.0])
+        ctx = pad([0.0])
+        act = pad([1.0])
+        _, _, mfu, power = run_oracle(nt, ctx, act)
+        assert mfu > 0.35
+        assert power > 350.0
+
+    def test_tp_reduces_stage_time(self):
+        nt, ctx, act = pad([2048.0]), pad([0.0]), pad([1.0])
+        t1 = run_oracle(nt, ctx, act, mk_mp(tp=1))[0]
+        t2 = run_oracle(nt, ctx, act, mk_mp(tp=2))[0]
+        assert t2 < t1
+
+    def test_pp_splits_flops(self):
+        nt, ctx, act = pad([2048.0]), pad([0.0]), pad([1.0])
+        f1 = run_oracle(nt, ctx, act, mk_mp(pp=1))[1]
+        f2 = run_oracle(nt, ctx, act, mk_mp(pp=2))[1]
+        assert f2 == pytest.approx(f1 / 2, rel=1e-5)
+
+    def test_bigger_model_more_flops(self):
+        nt, ctx, act = pad([256.0] * 4), pad([512.0] * 4), pad([1.0] * 4)
+        small = run_oracle(nt, ctx, act, mk_mp())[1]
+        big = run_oracle(
+            nt, ctx, act, mk_mp(layers=80, h=8192, ffn=28672, heads=64)
+        )[1]
+        assert big > 5 * small
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tp=st.sampled_from([1, 2, 4]),
+        pp=st.sampled_from([1, 2, 4]),
+    )
+    def test_ref_equivalence_hypothesis(self, seed, tp, pp):
+        rng = np.random.default_rng(seed)
+        nt = jnp.array(rng.integers(0, 1024, 128), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 4096, 128), dtype=jnp.float32)
+        act = jnp.array(rng.integers(0, 2, 128), dtype=jnp.float32)
+        mp = mk_mp(tp=tp, pp=pp)
+        got = model.stage_oracle(nt, ctx, act, mp, mk_gp())
+        want = ref.ref_stage_oracle(nt, ctx, act, mp, mk_gp())
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_physical_invariants(self, seed):
+        """time > 0, 0 <= mfu <= 1, idle <= power <= max."""
+        rng = np.random.default_rng(seed)
+        nt = jnp.array(rng.integers(0, 4096, 128), dtype=jnp.float32)
+        ctx = jnp.array(rng.integers(0, 8192, 128), dtype=jnp.float32)
+        act = jnp.array(rng.integers(0, 2, 128), dtype=jnp.float32)
+        t, flops, mfu, power = run_oracle(nt, ctx, act)
+        assert t > 0
+        assert flops >= 0
+        assert 0.0 <= mfu <= 1.0
+        assert 100.0 - 1e-3 <= power <= 400.0 + 1e-3

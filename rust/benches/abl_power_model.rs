@@ -1,0 +1,24 @@
+//! Bench: the power-model ablation (γ / mfu_sat sensitivity, Eq. 3 vs
+//! physical accounting, NVML-proxy and static-TDP baselines).
+
+use vidur_energy::experiments::ablation;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("abl_power_model");
+    let dir = std::env::temp_dir().join("vidur_bench_abl");
+    b.once(
+        "ablation table (fast)",
+        || ablation::run(&dir, true).unwrap(),
+        |t| {
+            let nvml = t
+                .rows
+                .iter()
+                .find(|r| r[0].contains("nvml"))
+                .map(|r| r[3].clone())
+                .unwrap_or_default();
+            format!("nvml-proxy energy delta {nvml}% vs MFU law (paper §2: proxies overestimate)")
+        },
+    );
+    b.run();
+}

@@ -1,0 +1,58 @@
+//! Bench: regenerate the Table 2 / Fig. 6 / Fig. 7 case study
+//! (Vidur→Vessim integration) at reduced scale and time both cosim
+//! backends over a multi-day horizon.
+
+use vidur_energy::config::simconfig::CosimConfig;
+use vidur_energy::cosim::Environment;
+use vidur_energy::experiments::casestudy;
+use vidur_energy::util::bench::Bench;
+use vidur_energy::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("cs_cosim");
+    let dir = std::env::temp_dir().join("vidur_bench_cs");
+    b.once(
+        "casestudy end-to-end (fast)",
+        || casestudy::run(&dir, true).unwrap(),
+        |t| {
+            let find = |name: &str| {
+                t.rows
+                    .iter()
+                    .find(|r| r[0] == name)
+                    .map(|r| r[1].clone())
+                    .unwrap_or_default()
+            };
+            format!(
+                "renewable {}% offset {}% (paper: 70.3% / 69.2%)",
+                find("renewable_share_pct"),
+                find("carbon_offset_pct")
+            )
+        },
+    );
+
+    // Cosim stepping throughput: native vs HLO kernel over 2 days.
+    let n = 2880;
+    let mut rng = Rng::new(9);
+    let load: Vec<f64> = (0..n).map(|_| rng.uniform(50.0, 500.0)).collect();
+    let solar: Vec<f64> = (0..n).map(|i| ((i % 1440) as f64 / 1440.0 * 3.14).sin().max(0.0) * 500.0).collect();
+    let ci: Vec<f64> = (0..n).map(|_| rng.uniform(80.0, 550.0)).collect();
+    b.case_with_metric(
+        "cosim native loop (2880 steps)",
+        || {
+            let mut env = Environment::new(CosimConfig::default());
+            env.run_native(&load, &solar, &ci).unwrap().net_footprint_g
+        },
+        |g| format!("net={g:.0} g"),
+    );
+    if vidur_energy::runtime::ArtifactStore::discover().is_ok() {
+        b.case_with_metric(
+            "cosim HLO kernel (2880 steps)",
+            || {
+                let mut env = Environment::new(CosimConfig::default());
+                env.run_hlo(&load, &solar, &ci).unwrap().net_footprint_g
+            },
+            |g| format!("net={g:.0} g"),
+        );
+    }
+    b.run();
+}

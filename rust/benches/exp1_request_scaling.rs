@@ -1,0 +1,25 @@
+//! Bench: regenerate Experiment 1 / Fig. 2 (request volume vs power &
+//! energy across model sizes).
+
+use vidur_energy::experiments::exp1;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("exp1_request_scaling");
+    let dir = std::env::temp_dir().join("vidur_bench_exp1");
+    b.once(
+        "exp1 sweep (fast: 6 models x 2^8..2^11)",
+        || exp1::run(&dir, true).unwrap(),
+        |t| {
+            let p = t.f64_col("avg_power_w").unwrap();
+            let e = t.f64_col("energy_kwh").unwrap();
+            format!(
+                "power range {:.0}-{:.0} W, max energy {:.3} kWh (paper: stable power, linear energy)",
+                p.iter().cloned().fold(f64::INFINITY, f64::min),
+                p.iter().cloned().fold(0.0, f64::max),
+                e.iter().cloned().fold(0.0, f64::max)
+            )
+        },
+    );
+    b.run();
+}

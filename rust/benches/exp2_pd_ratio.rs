@@ -1,0 +1,23 @@
+//! Bench: regenerate Experiment 2 / Fig. 3 (prefill:decode ratio vs
+//! power & energy across request lengths).
+
+use vidur_energy::experiments::exp2;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("exp2_pd_ratio");
+    let dir = std::env::temp_dir().join("vidur_bench_exp2");
+    b.once(
+        "exp2 sweep (fast grid)",
+        || exp2::run(&dir, true).unwrap(),
+        |t| {
+            let e = t.f64_col("energy_kwh").unwrap();
+            format!(
+                "energy span {:.4}..{:.4} kWh (paper: rises with length & decode share)",
+                e.iter().cloned().fold(f64::INFINITY, f64::min),
+                e.iter().cloned().fold(0.0, f64::max)
+            )
+        },
+    );
+    b.run();
+}

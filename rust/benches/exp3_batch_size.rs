@@ -1,0 +1,23 @@
+//! Bench: regenerate Experiment 3 / Fig. 4 (batch-size cap vs actual
+//! batch, power, energy).
+
+use vidur_energy::experiments::exp3;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("exp3_batch_size");
+    let dir = std::env::temp_dir().join("vidur_bench_exp3");
+    b.once(
+        "exp3 sweep (fast caps)",
+        || exp3::run(&dir, true).unwrap(),
+        |t| {
+            let e = t.f64_col("energy_kwh").unwrap();
+            format!(
+                "energy cap=1 {:.4} -> cap=128 {:.4} kWh (paper: falls, diminishing past 16)",
+                e[0],
+                e.last().unwrap()
+            )
+        },
+    );
+    b.run();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Experiment 4 / Fig. 5 (QPS vs power & energy).
+
+use vidur_energy::experiments::exp4;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("exp4_qps");
+    let dir = std::env::temp_dir().join("vidur_bench_exp4");
+    b.once(
+        "exp4 sweep (fast grid)",
+        || exp4::run(&dir, true).unwrap(),
+        |t| {
+            let p = t.f64_col("avg_power_w").unwrap();
+            let e = t.f64_col("energy_kwh").unwrap();
+            format!(
+                "power {:.0}->{:.0} W, energy {:.3}->{:.3} kWh (paper: saturate ~360 W, converge ~0.5 kWh)",
+                p[0], p.last().unwrap(), e[0], e.last().unwrap()
+            )
+        },
+    );
+    b.run();
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Experiment 5 (TP×PP grid for CodeLlama-34B).
+
+use vidur_energy::experiments::exp5;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("exp5_parallelism");
+    let dir = std::env::temp_dir().join("vidur_bench_exp5");
+    b.once(
+        "exp5 TPxPP grid (fast subset)",
+        || exp5::run(&dir, true).unwrap(),
+        |t| {
+            let e = t.f64_col("energy_kwh").unwrap();
+            let idx = e
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            format!(
+                "best config row {}: tp={} pp={} ({:.4} kWh) (paper: TP2/PP1 & TP1/PP2 best)",
+                idx, t.rows[idx][0], t.rows[idx][1], e[idx]
+            )
+        },
+    );
+    b.run();
+}

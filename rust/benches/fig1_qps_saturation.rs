@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 1 (MFU vs QPS saturation) and time the
+//! underlying per-point simulation.
+
+use vidur_energy::experiments::fig1;
+use vidur_energy::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig1_qps_saturation");
+    let dir = std::env::temp_dir().join("vidur_bench_fig1");
+    b.once(
+        "fig1 full sweep (fast grid)",
+        || fig1::run(&dir, true).unwrap(),
+        |t| {
+            let mfu = t.f64_col("weighted_mfu").unwrap();
+            format!("mfu[0]={:.3} mfu[max]={:.3} (paper: plateau ≈0.45)", mfu[0], mfu.last().unwrap())
+        },
+    );
+    b.run();
+}

@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation: stage-oracle
+//! latency (native vs HLO uncached vs HLO memo-cached), Eq. 5 binning
+//! backends, the event engine's stage throughput, and workload
+//! generation.
+
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, ExecParams, LengthDist, SimConfig};
+use vidur_energy::config::{gpus, models};
+use vidur_energy::exec::batch::BatchDesc;
+use vidur_energy::exec::hlo::HloCost;
+use vidur_energy::exec::native::NativeCost;
+use vidur_energy::exec::StageCostModel;
+use vidur_energy::pipeline::{bin_stages, BinningBackend};
+use vidur_energy::sim;
+use vidur_energy::util::bench::{black_box, Bench};
+use vidur_energy::util::rng::Rng;
+use vidur_energy::workload::WorkloadGenerator;
+
+fn decode_batch(n: usize, ctx: u32) -> BatchDesc {
+    let mut b = BatchDesc::new(
+        models::model("llama3-8b").unwrap(),
+        gpus::gpu("a100-80g").unwrap(),
+        1,
+        1,
+        ExecParams::default(),
+    );
+    for i in 0..n {
+        b.push(1, ctx + i as u32);
+    }
+    b
+}
+
+fn main() {
+    let mut bench = Bench::new("hotpath");
+    let artifacts = vidur_energy::runtime::ArtifactStore::discover().is_ok();
+
+    // --- L3: native stage oracle ---
+    let batch = decode_batch(64, 1024);
+    bench.case("native stage_cost (64-req decode)", || {
+        black_box(NativeCost::compute(&batch))
+    });
+
+    if artifacts {
+        // --- L1/L2 through PJRT: uncached vs memo-cached ---
+        let mut hlo_exact = HloCost::new().unwrap().exact();
+        let mut rng = Rng::new(1);
+        bench.case("hlo stage oracle, cache-miss path", || {
+            // Vary the context so every call misses the cache.
+            let b = decode_batch(64, 1024 + (rng.next_u64() % 8192) as u32);
+            black_box(hlo_exact.stage_cost(&b))
+        });
+        let mut hlo_quant = HloCost::new().unwrap();
+        let warm = decode_batch(64, 1024);
+        hlo_quant.stage_cost(&warm);
+        bench.case_with_metric(
+            "hlo stage oracle, memo-cached",
+            || black_box(hlo_quant.stage_cost(&warm)),
+            |_| String::new(),
+        );
+    }
+
+    // --- Event engine throughput (native oracle) ---
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 2_000;
+    cfg.arrival = Arrival::Poisson { qps: 50.0 };
+    cfg.lengths = LengthDist::Zipf { theta: 0.6, min: 64, max: 512 };
+    bench.case_with_metric(
+        "event engine, 2k requests (native)",
+        || sim::run(&cfg).unwrap().stagelog.len(),
+        |n| format!("{n} stages"),
+    );
+    if artifacts {
+        let mut cfg_hlo = cfg.clone();
+        cfg_hlo.cost_model = CostModelKind::Hlo;
+        bench.case_with_metric(
+            "event engine, 2k requests (hlo+cache)",
+            || sim::run(&cfg_hlo).unwrap().stagelog.len(),
+            |n| format!("{n} stages"),
+        );
+    }
+
+    // --- Eq. 5 binning backends over a real stage log ---
+    let out = sim::run(&cfg).unwrap();
+    let makespan = out.metrics.makespan_s;
+    bench.case_with_metric(
+        "binning native",
+        || {
+            bin_stages(&cfg, &out.stagelog, makespan, 60.0, BinningBackend::Native)
+                .unwrap()
+                .len()
+        },
+        |n| format!("{n} bins"),
+    );
+    if artifacts {
+        bench.case_with_metric(
+            "binning hlo kernel",
+            || {
+                bin_stages(&cfg, &out.stagelog, makespan, 60.0, BinningBackend::Hlo)
+                    .unwrap()
+                    .len()
+            },
+            |n| format!("{n} bins"),
+        );
+    }
+
+    // --- Workload generation ---
+    bench.case("workload gen, 10k zipf requests", || {
+        let mut g = WorkloadGenerator::from_config(&SimConfig::default());
+        black_box(g.generate(10_000).len())
+    });
+
+    bench.run();
+}

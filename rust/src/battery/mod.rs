@@ -1,0 +1,168 @@
+//! Battery model (Vessim's `ClcBattery` equivalent): capacity, SoC
+//! window, charge/discharge power limits, round-trip efficiency, and
+//! cycle counting — the storage element of the co-simulated microgrid.
+
+use crate::config::simconfig::CosimConfig;
+
+/// Rate- and SoC-limited battery.
+#[derive(Debug, Clone)]
+pub struct Battery {
+    pub capacity_wh: f64,
+    pub soc: f64,
+    pub soc_min: f64,
+    pub soc_max: f64,
+    pub max_charge_w: f64,
+    pub max_discharge_w: f64,
+    pub eff_charge: f64,
+    pub eff_discharge: f64,
+    /// Cumulative discharged energy, Wh (for full-cycle counting).
+    pub discharged_wh: f64,
+    pub charged_wh: f64,
+}
+
+impl Battery {
+    pub fn from_config(c: &CosimConfig) -> Self {
+        Battery {
+            capacity_wh: c.battery_wh,
+            soc: c.soc_init,
+            soc_min: c.soc_min,
+            soc_max: c.soc_max,
+            max_charge_w: c.max_charge_w,
+            max_discharge_w: c.max_discharge_w,
+            eff_charge: c.charge_eff,
+            eff_discharge: c.discharge_eff,
+            discharged_wh: 0.0,
+            charged_wh: 0.0,
+        }
+    }
+
+    /// Offer `power_w` of surplus for `dt_s`; returns the power
+    /// actually absorbed (grid export takes the rest).
+    pub fn charge(&mut self, power_w: f64, dt_s: f64) -> f64 {
+        let dt_h = dt_s / 3600.0;
+        let room_wh = (self.soc_max - self.soc) * self.capacity_wh;
+        let mut p = power_w.min(self.max_charge_w);
+        p = p.min(room_wh / (dt_h * self.eff_charge));
+        p = p.max(0.0);
+        self.soc += p * self.eff_charge * dt_h / self.capacity_wh;
+        self.soc = self.soc.clamp(0.0, 1.0);
+        self.charged_wh += p * dt_h;
+        p
+    }
+
+    /// Request `power_w` of deficit coverage for `dt_s`; returns the
+    /// power actually delivered (grid import covers the rest).
+    pub fn discharge(&mut self, power_w: f64, dt_s: f64) -> f64 {
+        let dt_h = dt_s / 3600.0;
+        let avail_wh = (self.soc - self.soc_min) * self.capacity_wh;
+        let mut p = power_w.min(self.max_discharge_w);
+        p = p.min(avail_wh * self.eff_discharge / dt_h);
+        p = p.max(0.0);
+        self.soc -= p / self.eff_discharge * dt_h / self.capacity_wh;
+        self.soc = self.soc.clamp(0.0, 1.0);
+        self.discharged_wh += p * dt_h;
+        p
+    }
+
+    /// Equivalent full cycles so far (discharged energy / capacity).
+    pub fn full_cycles(&self) -> f64 {
+        self.discharged_wh / self.capacity_wh
+    }
+
+    /// The bp[8] parameter vector for the AOT cosim kernel (layout:
+    /// python/compile/kernels/ref.py).
+    pub fn param_vec(&self, dt_s: f64) -> [f32; 8] {
+        [
+            self.capacity_wh as f32,
+            self.soc_min as f32,
+            self.soc_max as f32,
+            self.max_charge_w as f32,
+            self.max_discharge_w as f32,
+            self.eff_charge as f32,
+            self.eff_discharge as f32,
+            dt_s as f32,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batt() -> Battery {
+        Battery::from_config(&CosimConfig::default())
+    }
+
+    #[test]
+    fn paper_defaults() {
+        let b = batt();
+        assert_eq!(b.capacity_wh, 100.0);
+        assert_eq!((b.soc_min, b.soc_max), (0.2, 0.8));
+        assert_eq!(b.soc, 0.5);
+    }
+
+    #[test]
+    fn charge_respects_soc_max() {
+        let mut b = batt();
+        // Offer far more than fits: 0.5 -> 0.8 = 30 Wh room.
+        let mut absorbed_wh = 0.0;
+        for _ in 0..120 {
+            absorbed_wh += b.charge(1000.0, 60.0) / 60.0;
+        }
+        assert!((b.soc - 0.8).abs() < 1e-6, "soc {}", b.soc);
+        // Energy absorbed ≈ room / eff.
+        assert!((absorbed_wh - 30.0 / 0.95).abs() < 0.2, "{absorbed_wh}");
+    }
+
+    #[test]
+    fn discharge_respects_soc_min() {
+        let mut b = batt();
+        for _ in 0..120 {
+            b.discharge(1000.0, 60.0);
+        }
+        assert!((b.soc - 0.2).abs() < 1e-6, "soc {}", b.soc);
+        assert_eq!(b.discharge(100.0, 60.0), 0.0); // empty
+    }
+
+    #[test]
+    fn rate_limits_enforced() {
+        let mut b = batt();
+        assert_eq!(b.charge(1000.0, 1.0), 100.0); // max_charge_w
+        assert_eq!(b.discharge(1000.0, 1.0), 100.0); // max_discharge_w
+    }
+
+    #[test]
+    fn round_trip_loses_energy() {
+        // Start empty: everything discharged later must have come from
+        // the charge, exposing the round-trip efficiency.
+        let mut b = batt();
+        b.soc = b.soc_min;
+        let in_w = b.charge(20.0, 3600.0); // 20 Wh in
+        assert!((in_w - 20.0).abs() < 1e-9);
+        let out_w = b.discharge(1000.0, 3600.0);
+        let rt = out_w / in_w;
+        assert!(
+            (rt - 0.95 * 0.95).abs() < 0.01,
+            "round-trip efficiency {rt}"
+        );
+    }
+
+    #[test]
+    fn cycle_counting() {
+        let mut b = batt();
+        // From SoC 0.5 with floor 0.2: 30 Wh stored ⇒ 28.5 Wh at the
+        // terminals (discharge efficiency 0.95).
+        b.discharge(1000.0, 3600.0);
+        assert!((b.full_cycles() - 0.285).abs() < 1e-6, "{}", b.full_cycles());
+    }
+
+    #[test]
+    fn zero_dt_safe() {
+        let mut b = batt();
+        let soc0 = b.soc;
+        b.charge(100.0, 0.0);
+        b.discharge(100.0, 0.0);
+        assert!(b.soc.is_finite());
+        assert_eq!(b.soc, soc0); // no time elapsed, no energy moved
+    }
+}

@@ -1,0 +1,8 @@
+//! Cluster model: paged KV-cache management (vLLM-style) and the
+//! replica/topology bookkeeping for TP×PP groups.
+
+pub mod kvcache;
+pub mod topology;
+
+pub use kvcache::KvCache;
+pub use topology::ClusterTopology;

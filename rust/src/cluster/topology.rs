@@ -1,0 +1,83 @@
+//! Cluster topology: replica → GPU-group layout and interconnect
+//! characteristics (the paper's Table 1b "NVLink (pairwise)" testbed,
+//! Exp. 5's 4×A100 TP×PP grid).
+
+use crate::config::gpus::GpuSpec;
+use crate::config::models::ModelSpec;
+use crate::config::simconfig::SimConfig;
+use anyhow::Result;
+
+/// Immutable description of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterTopology {
+    pub model: &'static ModelSpec,
+    pub gpu: &'static GpuSpec,
+    pub replicas: u32,
+    pub tp: u32,
+    pub pp: u32,
+}
+
+impl ClusterTopology {
+    pub fn from_config(cfg: &SimConfig) -> Result<Self> {
+        Ok(ClusterTopology {
+            model: cfg.model_spec()?,
+            gpu: cfg.gpu_spec()?,
+            replicas: cfg.replicas,
+            tp: cfg.tp,
+            pp: cfg.pp,
+        })
+    }
+
+    /// GPUs per replica (one TP group per PP stage).
+    pub fn gpus_per_replica(&self) -> u32 {
+        self.tp * self.pp
+    }
+
+    /// Total GPUs G = R·TP·PP (Eq. 2).
+    pub fn total_gpus(&self) -> u32 {
+        self.replicas * self.gpus_per_replica()
+    }
+
+    /// Peak FLOPs of one replica's full GPU group.
+    pub fn replica_peak_flops(&self) -> f64 {
+        self.gpus_per_replica() as f64 * self.gpu.peak_flops
+    }
+
+    /// Whether a replica's weights physically fit in its GPUs' VRAM
+    /// (the simulator proceeds regardless, but reports this).
+    pub fn weights_fit(&self) -> bool {
+        self.model.weight_bytes() <= self.gpu.vram_bytes * self.gpus_per_replica() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::SimConfig;
+
+    #[test]
+    fn counts() {
+        let mut cfg = SimConfig::default();
+        cfg.tp = 2;
+        cfg.pp = 2;
+        cfg.replicas = 2;
+        let t = ClusterTopology::from_config(&cfg).unwrap();
+        assert_eq!(t.gpus_per_replica(), 4);
+        assert_eq!(t.total_gpus(), 8);
+        assert_eq!(t.replica_peak_flops(), 4.0 * 312e12);
+    }
+
+    #[test]
+    fn fit_check() {
+        let mut cfg = SimConfig::default();
+        cfg.model = "llama3-70b".into(); // ~141 GB bf16
+        cfg.tp = 1;
+        cfg.pp = 1;
+        let t = ClusterTopology::from_config(&cfg).unwrap();
+        assert!(!t.weights_fit());
+        cfg.tp = 2;
+        cfg.pp = 2; // 4 × 80 GB
+        let t = ClusterTopology::from_config(&cfg).unwrap();
+        assert!(t.weights_fit());
+    }
+}

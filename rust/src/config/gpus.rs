@@ -1,0 +1,180 @@
+//! GPU spec registry with the paper's calibrated power points
+//! (§3.1 "Power Model Calibration"): A100 100/400 W, H100 60/700 W,
+//! A40 30/300 W, plus compute/memory/interconnect characteristics and
+//! the Eq. 1 power-law parameters (§4.1: mfu_sat = 0.45, γ = 0.7).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterconnectKind {
+    /// NVLink pairwise (the paper's Table 1b topology).
+    NvLink,
+    /// PCIe fallback (A40).
+    Pcie,
+}
+
+impl InterconnectKind {
+    /// Effective per-direction link bandwidth, bytes/s.
+    pub fn bandwidth(&self) -> f64 {
+        match self {
+            // NVLink 3 (A100 generation): 300 GB/s pairwise effective.
+            InterconnectKind::NvLink => 250e9,
+            // PCIe 4.0 x16 ~ 25 GB/s effective.
+            InterconnectKind::Pcie => 20e9,
+        }
+    }
+
+    /// Per-collective latency, seconds.
+    pub fn latency(&self) -> f64 {
+        match self {
+            InterconnectKind::NvLink => 5e-6,
+            InterconnectKind::Pcie => 15e-6,
+        }
+    }
+}
+
+/// One GPU SKU: compute, memory, and the calibrated power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub display: &'static str,
+    /// Peak dense BF16/FP16 FLOPs/s (no sparsity).
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// VRAM, bytes.
+    pub vram_bytes: f64,
+    /// Idle power draw, W (paper §3.1).
+    pub p_idle: f64,
+    /// Max instantaneous power under saturation, W (paper §3.1).
+    pub p_max_inst: f64,
+    /// Eq. 1 saturation threshold (paper §4.1: 0.45 for A100).
+    pub mfu_sat: f64,
+    /// Eq. 1 exponent (paper §4.1: 0.7).
+    pub gamma: f64,
+    /// Embodied-carbon rate φ_manuf, gCO₂ per GPU-hour (Eq. 4);
+    /// derived from ~150 kgCO₂e manufacturing over a 5-year life.
+    pub phi_manuf: f64,
+    pub interconnect: InterconnectKind,
+}
+
+impl GpuSpec {
+    /// Eq. 1 — the paper's GPU power model.
+    pub fn power(&self, mfu: f64) -> f64 {
+        let x = (mfu / self.mfu_sat).clamp(0.0, 1.0);
+        self.p_idle + (self.p_max_inst - self.p_idle) * x.powf(self.gamma)
+    }
+}
+
+/// Calibrated SKUs (paper §3.1). phi_manuf: 150 kg / (5y × 8760 h) ≈ 3.42 g/h.
+pub const GPUS: &[GpuSpec] = &[
+    GpuSpec {
+        name: "a100-80g",
+        display: "NVIDIA A100 (80GB SXM4)",
+        peak_flops: 312e12,
+        hbm_bw: 2.039e12,
+        vram_bytes: 80e9,
+        p_idle: 100.0,
+        p_max_inst: 400.0,
+        mfu_sat: 0.45,
+        gamma: 0.7,
+        phi_manuf: 3.42,
+        interconnect: InterconnectKind::NvLink,
+    },
+    GpuSpec {
+        name: "h100",
+        display: "NVIDIA H100 (SXM5)",
+        peak_flops: 989e12,
+        hbm_bw: 3.35e12,
+        vram_bytes: 80e9,
+        p_idle: 60.0,
+        p_max_inst: 700.0,
+        mfu_sat: 0.45,
+        gamma: 0.7,
+        phi_manuf: 3.42,
+        interconnect: InterconnectKind::NvLink,
+    },
+    GpuSpec {
+        name: "a40",
+        display: "NVIDIA A40 (PCIe)",
+        peak_flops: 149.7e12,
+        hbm_bw: 0.696e12,
+        vram_bytes: 48e9,
+        p_idle: 30.0,
+        p_max_inst: 300.0,
+        mfu_sat: 0.45,
+        gamma: 0.7,
+        phi_manuf: 2.5,
+        interconnect: InterconnectKind::Pcie,
+    },
+];
+
+pub fn gpu(name: &str) -> Result<&'static GpuSpec> {
+    match GPUS.iter().find(|g| g.name == name) {
+        Some(g) => Ok(g),
+        None => bail!(
+            "unknown gpu '{name}'; known: {}",
+            GPUS.iter().map(|g| g.name).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibration_points() {
+        let a100 = gpu("a100-80g").unwrap();
+        assert_eq!((a100.p_idle, a100.p_max_inst), (100.0, 400.0));
+        let h100 = gpu("h100").unwrap();
+        assert_eq!((h100.p_idle, h100.p_max_inst), (60.0, 700.0));
+        let a40 = gpu("a40").unwrap();
+        assert_eq!((a40.p_idle, a40.p_max_inst), (30.0, 300.0));
+    }
+
+    #[test]
+    fn power_at_zero_is_idle() {
+        for g in GPUS {
+            assert_eq!(g.power(0.0), g.p_idle);
+        }
+    }
+
+    #[test]
+    fn power_saturates_at_threshold() {
+        let g = gpu("a100-80g").unwrap();
+        assert!((g.power(0.45) - 400.0).abs() < 1e-9);
+        assert!((g.power(0.9) - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_sublinear_below_saturation() {
+        // γ<1: halfway MFU yields more than half of the dynamic range.
+        let g = gpu("a100-80g").unwrap();
+        let mid = g.power(0.225);
+        let frac = (mid - 100.0) / 300.0;
+        assert!(frac > 0.5, "power-law not sublinear: {frac}");
+        // Monotone.
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let p = g.power(i as f64 * 0.45 / 100.0);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn paper_example_30pct_mfu_drop_small_power_drop() {
+        // §2: "when MFU drops by 30%, power may decline by under 10%".
+        let g = gpu("a100-80g").unwrap();
+        let p_hi = g.power(0.45);
+        let p_lo = g.power(0.45 * 0.7);
+        let drop = (p_hi - p_lo) / p_hi;
+        assert!(drop < 0.20, "drop {drop}"); // sublinear: far less than 30%
+    }
+
+    #[test]
+    fn unknown_gpu_is_error() {
+        assert!(gpu("tpu-v4").is_err());
+    }
+}

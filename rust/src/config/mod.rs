@@ -1,0 +1,11 @@
+//! Configuration layer: model architecture registry, GPU spec registry
+//! (with the paper's calibrated power points), and the full simulation /
+//! co-simulation configuration structures with JSON round-tripping.
+
+pub mod models;
+pub mod gpus;
+pub mod simconfig;
+
+pub use gpus::{GpuSpec, InterconnectKind};
+pub use models::ModelSpec;
+pub use simconfig::{CosimConfig, SimConfig};

@@ -1,0 +1,232 @@
+//! LLM architecture registry — the six models the paper evaluates
+//! (Experiment 1 sweeps 2.7B…72B; the defaults use Meta-Llama-3-8B and
+//! the co-simulation case study Llama-2-7B).
+//!
+//! Architecture numbers are the public model-card values.
+
+use anyhow::{bail, Result};
+
+/// Transformer architecture description (decoder-only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Registry key, e.g. "llama3-8b".
+    pub name: &'static str,
+    /// Human-readable name as in the paper.
+    pub display: &'static str,
+    pub num_layers: u32,
+    pub hidden: u32,
+    pub ffn: u32,
+    pub num_heads: u32,
+    pub num_kv_heads: u32,
+    pub vocab: u32,
+    /// MLP matmul count: 3.0 for SwiGLU (Llama family), 2.0 for the
+    /// classic GELU MLP (Phi-2). Folded into an effective ffn width so
+    /// the AOT kernel interface stays SwiGLU-shaped.
+    pub mlp_mult: f64,
+    /// Nominal parameter count (billions), for display/grouping.
+    pub params_b: f64,
+}
+
+impl ModelSpec {
+    /// KV-projection width (GQA-aware).
+    pub fn kv_dim(&self) -> f64 {
+        self.hidden as f64 * self.num_kv_heads as f64 / self.num_heads as f64
+    }
+
+    /// SwiGLU-equivalent FFN width (the AOT kernels assume three
+    /// h x ffn matmuls; non-SwiGLU models are rescaled).
+    pub fn ffn_eff(&self) -> f64 {
+        self.ffn as f64 * self.mlp_mult / 3.0
+    }
+
+    /// Approximate parameter bytes in bf16 — mirrors
+    /// `ref_weight_bytes` in python/compile/kernels/ref.py.
+    pub fn weight_bytes(&self) -> f64 {
+        let h = self.hidden as f64;
+        let per_layer = h * (2.0 * h + 2.0 * self.kv_dim()) + 3.0 * h * self.ffn_eff();
+        let embed = 2.0 * h * self.vocab as f64;
+        2.0 * (self.num_layers as f64 * per_layer + embed)
+    }
+
+    /// Per-token KV-cache bytes (both K and V, bf16, all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.num_layers as f64 * self.kv_dim() * 2.0
+    }
+
+    /// Dense forward FLOPs per token excluding attention-over-context
+    /// (projections + MLP + LM head); context-dependent attention is
+    /// added per-request by the execution model.
+    pub fn dense_flops_per_token(&self) -> f64 {
+        let h = self.hidden as f64;
+        let proj = 2.0 * h * (2.0 * h + 2.0 * self.kv_dim());
+        let mlp = 6.0 * h * self.ffn_eff();
+        self.num_layers as f64 * (proj + mlp) + 2.0 * h * self.vocab as f64
+    }
+
+    /// The mp[8] parameter vector consumed by the AOT stage oracle
+    /// (layout shared with python/compile/kernels/ref.py).
+    pub fn param_vec(&self, tp: u32, pp: u32) -> [f32; 8] {
+        [
+            self.num_layers as f32,
+            self.hidden as f32,
+            self.ffn_eff() as f32,
+            self.num_heads as f32,
+            self.num_kv_heads as f32,
+            self.vocab as f32,
+            tp as f32,
+            pp as f32,
+        ]
+    }
+}
+
+/// The models used in the paper's evaluation (Fig. 2 legend + defaults).
+pub const MODELS: &[ModelSpec] = &[
+    ModelSpec {
+        name: "phi-2",
+        display: "Phi-2 (2.7B)",
+        num_layers: 32,
+        hidden: 2560,
+        ffn: 10240,
+        num_heads: 32,
+        num_kv_heads: 32,
+        vocab: 51200,
+        mlp_mult: 2.0,
+        params_b: 2.7,
+    },
+    ModelSpec {
+        name: "llama2-7b",
+        display: "Llama-2-7B-hf",
+        num_layers: 32,
+        hidden: 4096,
+        ffn: 11008,
+        num_heads: 32,
+        num_kv_heads: 32,
+        vocab: 32000,
+        mlp_mult: 3.0,
+        params_b: 6.7,
+    },
+    ModelSpec {
+        name: "llama3-8b",
+        display: "Meta-Llama-3-8B",
+        num_layers: 32,
+        hidden: 4096,
+        ffn: 14336,
+        num_heads: 32,
+        num_kv_heads: 8,
+        vocab: 128256,
+        mlp_mult: 3.0,
+        params_b: 8.0,
+    },
+    ModelSpec {
+        name: "codellama-34b",
+        display: "CodeLlama-34B",
+        num_layers: 48,
+        hidden: 8192,
+        ffn: 22016,
+        num_heads: 64,
+        num_kv_heads: 8,
+        vocab: 32000,
+        mlp_mult: 3.0,
+        params_b: 33.7,
+    },
+    ModelSpec {
+        name: "llama3-70b",
+        display: "LLaMA-3-70B",
+        num_layers: 80,
+        hidden: 8192,
+        ffn: 28672,
+        num_heads: 64,
+        num_kv_heads: 8,
+        vocab: 128256,
+        mlp_mult: 3.0,
+        params_b: 70.6,
+    },
+    ModelSpec {
+        name: "qwen-72b",
+        display: "Qwen-72B",
+        num_layers: 80,
+        hidden: 8192,
+        ffn: 24576,
+        num_heads: 64,
+        num_kv_heads: 64,
+        vocab: 152064,
+        mlp_mult: 3.0,
+        params_b: 72.3,
+    },
+];
+
+/// Look a model up by registry key.
+pub fn model(name: &str) -> Result<&'static ModelSpec> {
+    match MODELS.iter().find(|m| m.name == name) {
+        Some(m) => Ok(m),
+        None => bail!(
+            "unknown model '{name}'; known: {}",
+            MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_papers_six_models() {
+        assert_eq!(MODELS.len(), 6);
+        for key in [
+            "phi-2",
+            "llama2-7b",
+            "llama3-8b",
+            "codellama-34b",
+            "llama3-70b",
+            "qwen-72b",
+        ] {
+            assert!(model(key).is_ok(), "{key} missing");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        assert!(model("gpt-99").is_err());
+    }
+
+    #[test]
+    fn weight_bytes_close_to_nominal_param_count() {
+        // bf16 bytes / 2 = params; must be within ~15% of the nominal
+        // billions (approximation ignores norms/biases).
+        for m in MODELS {
+            let params_b = m.weight_bytes() / 2.0 / 1e9;
+            let rel = (params_b - m.params_b).abs() / m.params_b;
+            assert!(
+                rel < 0.15,
+                "{}: approx {params_b:.1}B vs nominal {}B",
+                m.name,
+                m.params_b
+            );
+        }
+    }
+
+    #[test]
+    fn gqa_reduces_kv_footprint() {
+        let l3 = model("llama3-8b").unwrap(); // 8 kv heads
+        let l2 = model("llama2-7b").unwrap(); // 32 kv heads (MHA)
+        assert!(l3.kv_bytes_per_token() < l2.kv_bytes_per_token() / 2.0);
+    }
+
+    #[test]
+    fn param_vec_layout() {
+        let m = model("llama3-8b").unwrap();
+        let v = m.param_vec(2, 4);
+        assert_eq!(v[0], 32.0);
+        assert_eq!(v[1], 4096.0);
+        assert_eq!(v[6], 2.0);
+        assert_eq!(v[7], 4.0);
+    }
+
+    #[test]
+    fn models_ordered_by_size() {
+        for w in MODELS.windows(2) {
+            assert!(w[0].params_b <= w[1].params_b);
+        }
+    }
+}

@@ -1,0 +1,617 @@
+//! Full simulation / co-simulation configuration (the paper's Table 1),
+//! with JSON round-tripping for config files and experiment records.
+
+use crate::config::{gpus, models};
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+
+/// Request-length distribution (paper: Zipfian, reflecting the
+/// power-law structure of language data).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// Bounded Zipf over total tokens (θ, min, max).
+    Zipf { theta: f64, min: u64, max: u64 },
+    /// All requests exactly `total` tokens.
+    Fixed { total: u64 },
+    /// Uniform over [min, max].
+    Uniform { min: u64, max: u64 },
+}
+
+/// Arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Poisson arrivals at `qps` (the paper's default).
+    Poisson { qps: f64 },
+    /// Gamma-distributed inter-arrivals (burstier; cv > 1).
+    Gamma { qps: f64, cv: f64 },
+    /// All requests arrive at t=0 (offline / batch mode).
+    Batch,
+}
+
+impl Arrival {
+    pub fn qps(&self) -> f64 {
+        match self {
+            Arrival::Poisson { qps } | Arrival::Gamma { qps, .. } => *qps,
+            Arrival::Batch => f64::INFINITY,
+        }
+    }
+}
+
+/// Replica-level scheduler policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// vLLM-style continuous batching with full prefill bursts (default).
+    Vllm,
+    /// Sarathi-style chunked prefill + piggybacked decode.
+    Sarathi,
+    /// Orca-style iteration-level scheduling without paged KV
+    /// admission control (simplified baseline).
+    Orca,
+}
+
+/// Cluster-level request router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    RoundRobin,
+    /// Least outstanding requests.
+    LeastOutstanding,
+}
+
+/// Which execution-time/power oracle backs the simulator hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostModelKind {
+    /// Pure-rust analytical roofline (fast cross-check).
+    Native,
+    /// AOT-compiled JAX/Pallas stage oracle via PJRT (default; the
+    /// three-layer architecture's request-path artifact).
+    Hlo,
+}
+
+/// Execution-model calibration knobs (see DESIGN.md §5 — substitutes
+/// Vidur's random-forest runtime predictor with a calibrated roofline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecParams {
+    /// Achievable fraction of peak FLOPs (Trainy: LLM kernels plateau
+    /// near 35–45% MFU; this is that ceiling).
+    pub flops_eff: f64,
+    /// Achievable fraction of HBM bandwidth.
+    pub mem_eff: f64,
+    /// Fixed per-stage overhead, seconds (scheduler + launch tax).
+    pub t_overhead: f64,
+    /// Per-layer kernel-launch overhead, seconds.
+    pub layer_overhead: f64,
+    /// Std-dev of the multiplicative log-normal noise applied to stage
+    /// times, emulating Vidur's learned-predictor spread (k=10 forest).
+    pub rf_noise_std: f64,
+}
+
+impl Default for ExecParams {
+    fn default() -> Self {
+        ExecParams {
+            flops_eff: 0.46,
+            mem_eff: 0.80,
+            t_overhead: 5e-4,
+            layer_overhead: 2.5e-5,
+            rf_noise_std: 0.0,
+        }
+    }
+}
+
+/// The Vidur-side simulation configuration (Table 1, panel a).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub model: String,
+    pub gpu: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub replicas: u32,
+    pub scheduler: SchedulerKind,
+    pub router: RouterKind,
+    pub cost_model: CostModelKind,
+    /// Max requests per running batch (paper: 128).
+    pub batch_cap: usize,
+    /// Max total tokens per request (paper: 4096).
+    pub max_tokens: u64,
+    pub num_requests: u64,
+    pub arrival: Arrival,
+    pub lengths: LengthDist,
+    /// Prefill:decode token ratio; when set, splits each sampled total
+    /// length into prefill/decode by this ratio (Exp. 2 sweeps it).
+    pub prefill_decode_ratio: Option<f64>,
+    /// Sarathi chunk size (tokens per prefill chunk).
+    pub chunk_size: u64,
+    /// KV-cache block size in tokens (vLLM-style paging).
+    pub kv_block_tokens: u64,
+    /// Power-usage effectiveness of the site (paper: 1.2, CA).
+    pub pue: f64,
+    pub exec: ExecParams,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    /// The paper's default Vidur configuration (Table 1, panel a).
+    fn default() -> Self {
+        SimConfig {
+            model: "llama3-8b".into(),
+            gpu: "a100-80g".into(),
+            tp: 1,
+            pp: 1,
+            replicas: 1,
+            scheduler: SchedulerKind::Vllm,
+            router: RouterKind::RoundRobin,
+            cost_model: CostModelKind::Hlo,
+            batch_cap: 128,
+            max_tokens: 4096,
+            num_requests: 1024,
+            arrival: Arrival::Poisson { qps: 6.45 },
+            lengths: LengthDist::Zipf {
+                theta: 0.6,
+                min: 128,
+                max: 4096,
+            },
+            prefill_decode_ratio: None,
+            chunk_size: 512,
+            kv_block_tokens: 16,
+            pue: 1.2,
+            exec: ExecParams::default(),
+            seed: 0xD15EA5E,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn model_spec(&self) -> Result<&'static models::ModelSpec> {
+        models::model(&self.model)
+    }
+    pub fn gpu_spec(&self) -> Result<&'static gpus::GpuSpec> {
+        gpus::gpu(&self.gpu)
+    }
+
+    /// GPUs per replica.
+    pub fn gpus_per_replica(&self) -> u32 {
+        self.tp * self.pp
+    }
+    /// Total GPU count G = R·TP·PP (Eq. 2).
+    pub fn total_gpus(&self) -> u32 {
+        self.replicas * self.gpus_per_replica()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.model_spec()?;
+        self.gpu_spec()?;
+        if self.tp == 0 || self.pp == 0 || self.replicas == 0 {
+            bail!("tp/pp/replicas must be >= 1");
+        }
+        let m = self.model_spec()?;
+        if m.num_layers % self.pp != 0 {
+            bail!(
+                "pp={} does not divide {} layers of {}",
+                self.pp,
+                m.num_layers,
+                m.name
+            );
+        }
+        if !(m.num_heads % self.tp == 0) {
+            bail!("tp={} does not divide {} heads", self.tp, m.num_heads);
+        }
+        if self.batch_cap == 0 || self.batch_cap > 128 {
+            bail!("batch_cap must be in 1..=128 (AOT oracle padding limit)");
+        }
+        if self.num_requests == 0 {
+            bail!("num_requests must be > 0");
+        }
+        if let LengthDist::Zipf { min, max, .. } | LengthDist::Uniform { min, max } =
+            &self.lengths
+        {
+            if min > max || *min == 0 {
+                bail!("bad length range");
+            }
+        }
+        if self.pue < 1.0 {
+            bail!("pue < 1.0 is unphysical");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("model", self.model.as_str())
+            .set("gpu", self.gpu.as_str())
+            .set("tp", self.tp)
+            .set("pp", self.pp)
+            .set("replicas", self.replicas)
+            .set(
+                "scheduler",
+                match self.scheduler {
+                    SchedulerKind::Vllm => "vllm",
+                    SchedulerKind::Sarathi => "sarathi",
+                    SchedulerKind::Orca => "orca",
+                },
+            )
+            .set(
+                "router",
+                match self.router {
+                    RouterKind::RoundRobin => "round_robin",
+                    RouterKind::LeastOutstanding => "least_outstanding",
+                },
+            )
+            .set(
+                "cost_model",
+                match self.cost_model {
+                    CostModelKind::Native => "native",
+                    CostModelKind::Hlo => "hlo",
+                },
+            )
+            .set("batch_cap", self.batch_cap)
+            .set("max_tokens", self.max_tokens)
+            .set("num_requests", self.num_requests)
+            .set("chunk_size", self.chunk_size)
+            .set("kv_block_tokens", self.kv_block_tokens)
+            .set("pue", self.pue)
+            .set("seed", self.seed);
+        let mut arr = Value::obj();
+        match &self.arrival {
+            Arrival::Poisson { qps } => {
+                arr.set("kind", "poisson").set("qps", *qps);
+            }
+            Arrival::Gamma { qps, cv } => {
+                arr.set("kind", "gamma").set("qps", *qps).set("cv", *cv);
+            }
+            Arrival::Batch => {
+                arr.set("kind", "batch");
+            }
+        }
+        v.set("arrival", arr);
+        let mut len = Value::obj();
+        match &self.lengths {
+            LengthDist::Zipf { theta, min, max } => {
+                len.set("kind", "zipf")
+                    .set("theta", *theta)
+                    .set("min", *min)
+                    .set("max", *max);
+            }
+            LengthDist::Fixed { total } => {
+                len.set("kind", "fixed").set("total", *total);
+            }
+            LengthDist::Uniform { min, max } => {
+                len.set("kind", "uniform").set("min", *min).set("max", *max);
+            }
+        }
+        v.set("lengths", len);
+        if let Some(r) = self.prefill_decode_ratio {
+            v.set("prefill_decode_ratio", r);
+        }
+        let mut ex = Value::obj();
+        ex.set("flops_eff", self.exec.flops_eff)
+            .set("mem_eff", self.exec.mem_eff)
+            .set("t_overhead", self.exec.t_overhead)
+            .set("layer_overhead", self.exec.layer_overhead)
+            .set("rf_noise_std", self.exec.rf_noise_std);
+        v.set("exec", ex);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<SimConfig> {
+        let d = SimConfig::default();
+        let gs = |k: &str, dv: &str| -> String {
+            v.get(k).and_then(|x| x.as_str()).unwrap_or(dv).to_string()
+        };
+        let gf = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        let gu = |k: &str, dv: u64| v.get(k).and_then(|x| x.as_u64()).unwrap_or(dv);
+
+        let arrival = match v.get("arrival") {
+            None => d.arrival.clone(),
+            Some(a) => match a.get("kind").and_then(|x| x.as_str()) {
+                Some("poisson") | None => Arrival::Poisson {
+                    qps: a.get("qps").and_then(|x| x.as_f64()).unwrap_or(6.45),
+                },
+                Some("gamma") => Arrival::Gamma {
+                    qps: a.get("qps").and_then(|x| x.as_f64()).unwrap_or(6.45),
+                    cv: a.get("cv").and_then(|x| x.as_f64()).unwrap_or(2.0),
+                },
+                Some("batch") => Arrival::Batch,
+                Some(k) => bail!("unknown arrival kind '{k}'"),
+            },
+        };
+        let lengths = match v.get("lengths") {
+            None => d.lengths.clone(),
+            Some(l) => match l.get("kind").and_then(|x| x.as_str()) {
+                Some("zipf") | None => LengthDist::Zipf {
+                    theta: l.get("theta").and_then(|x| x.as_f64()).unwrap_or(0.6),
+                    min: l.get("min").and_then(|x| x.as_u64()).unwrap_or(128),
+                    max: l.get("max").and_then(|x| x.as_u64()).unwrap_or(4096),
+                },
+                Some("fixed") => LengthDist::Fixed {
+                    total: l
+                        .get("total")
+                        .and_then(|x| x.as_u64())
+                        .context("fixed lengths need 'total'")?,
+                },
+                Some("uniform") => LengthDist::Uniform {
+                    min: l.get("min").and_then(|x| x.as_u64()).unwrap_or(128),
+                    max: l.get("max").and_then(|x| x.as_u64()).unwrap_or(4096),
+                },
+                Some(k) => bail!("unknown length kind '{k}'"),
+            },
+        };
+        let exec = match v.get("exec") {
+            None => d.exec.clone(),
+            Some(e) => ExecParams {
+                flops_eff: e.get("flops_eff").and_then(|x| x.as_f64()).unwrap_or(d.exec.flops_eff),
+                mem_eff: e.get("mem_eff").and_then(|x| x.as_f64()).unwrap_or(d.exec.mem_eff),
+                t_overhead: e.get("t_overhead").and_then(|x| x.as_f64()).unwrap_or(d.exec.t_overhead),
+                layer_overhead: e
+                    .get("layer_overhead")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(d.exec.layer_overhead),
+                rf_noise_std: e
+                    .get("rf_noise_std")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(d.exec.rf_noise_std),
+            },
+        };
+        let cfg = SimConfig {
+            model: gs("model", &d.model),
+            gpu: gs("gpu", &d.gpu),
+            tp: gu("tp", d.tp as u64) as u32,
+            pp: gu("pp", d.pp as u64) as u32,
+            replicas: gu("replicas", d.replicas as u64) as u32,
+            scheduler: match gs("scheduler", "vllm").as_str() {
+                "vllm" => SchedulerKind::Vllm,
+                "sarathi" => SchedulerKind::Sarathi,
+                "orca" => SchedulerKind::Orca,
+                k => bail!("unknown scheduler '{k}'"),
+            },
+            router: match gs("router", "round_robin").as_str() {
+                "round_robin" => RouterKind::RoundRobin,
+                "least_outstanding" => RouterKind::LeastOutstanding,
+                k => bail!("unknown router '{k}'"),
+            },
+            cost_model: match gs("cost_model", "hlo").as_str() {
+                "native" => CostModelKind::Native,
+                "hlo" => CostModelKind::Hlo,
+                k => bail!("unknown cost model '{k}'"),
+            },
+            batch_cap: gu("batch_cap", d.batch_cap as u64) as usize,
+            max_tokens: gu("max_tokens", d.max_tokens),
+            num_requests: gu("num_requests", d.num_requests),
+            arrival,
+            lengths,
+            prefill_decode_ratio: v.get("prefill_decode_ratio").and_then(|x| x.as_f64()),
+            chunk_size: gu("chunk_size", d.chunk_size),
+            kv_block_tokens: gu("kv_block_tokens", d.kv_block_tokens),
+            pue: gf("pue", d.pue),
+            exec,
+            seed: gu("seed", d.seed),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<SimConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = json::parse(&text)?;
+        Self::from_json(&v)
+    }
+}
+
+/// The Vessim-side co-simulation configuration (Table 1, panel b).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CosimConfig {
+    /// Grid region label (the paper: CAISO-North).
+    pub location: String,
+    /// Installed solar capacity, W (paper: 600).
+    pub solar_capacity_w: f64,
+    /// Battery usable capacity, Wh (paper: 100).
+    pub battery_wh: f64,
+    pub soc_init: f64,
+    pub soc_min: f64,
+    pub soc_max: f64,
+    /// Battery power limits, W (C-rate equivalent).
+    pub max_charge_w: f64,
+    pub max_discharge_w: f64,
+    pub charge_eff: f64,
+    pub discharge_eff: f64,
+    /// Co-simulation step, seconds (paper: 1 minute).
+    pub interval_s: f64,
+    /// Carbon-intensity thresholds, gCO₂/kWh (paper: 100 / 200).
+    pub ci_low: f64,
+    pub ci_high: f64,
+    /// Mean grid carbon intensity for the synthetic trace
+    /// (paper measured 418.2 gCO₂/kWh average over the run).
+    pub ci_mean: f64,
+    /// Hour-of-day (UTC-ish sim time) the workload starts.
+    pub start_hour: f64,
+    pub seed: u64,
+}
+
+impl Default for CosimConfig {
+    /// The paper's Table 1 (panel b) integration parameters.
+    fn default() -> Self {
+        CosimConfig {
+            location: "CAISO-North".into(),
+            solar_capacity_w: 600.0,
+            battery_wh: 100.0,
+            soc_init: 0.5,
+            soc_min: 0.2,
+            soc_max: 0.8,
+            max_charge_w: 100.0,
+            max_discharge_w: 100.0,
+            charge_eff: 0.95,
+            discharge_eff: 0.95,
+            interval_s: 60.0,
+            ci_low: 100.0,
+            ci_high: 200.0,
+            ci_mean: 418.2,
+            start_hour: 6.0,
+            seed: 0xCA150,
+        }
+    }
+}
+
+impl CosimConfig {
+    pub fn battery_params(&self) -> [f32; 8] {
+        [
+            self.battery_wh as f32,
+            self.soc_min as f32,
+            self.soc_max as f32,
+            self.max_charge_w as f32,
+            self.max_discharge_w as f32,
+            self.charge_eff as f32,
+            self.discharge_eff as f32,
+            self.interval_s as f32,
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.soc_init)
+            || !(0.0..=1.0).contains(&self.soc_min)
+            || !(0.0..=1.0).contains(&self.soc_max)
+            || self.soc_min >= self.soc_max
+        {
+            bail!("bad SoC bounds");
+        }
+        if self.battery_wh <= 0.0 || self.interval_s <= 0.0 {
+            bail!("battery_wh and interval_s must be positive");
+        }
+        if self.ci_low >= self.ci_high {
+            bail!("ci_low must be < ci_high");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("location", self.location.as_str())
+            .set("solar_capacity_w", self.solar_capacity_w)
+            .set("battery_wh", self.battery_wh)
+            .set("soc_init", self.soc_init)
+            .set("soc_min", self.soc_min)
+            .set("soc_max", self.soc_max)
+            .set("max_charge_w", self.max_charge_w)
+            .set("max_discharge_w", self.max_discharge_w)
+            .set("charge_eff", self.charge_eff)
+            .set("discharge_eff", self.discharge_eff)
+            .set("interval_s", self.interval_s)
+            .set("ci_low", self.ci_low)
+            .set("ci_high", self.ci_high)
+            .set("ci_mean", self.ci_mean)
+            .set("start_hour", self.start_hour)
+            .set("seed", self.seed);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<CosimConfig> {
+        let d = CosimConfig::default();
+        let gf = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        let cfg = CosimConfig {
+            location: v
+                .get("location")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.location)
+                .to_string(),
+            solar_capacity_w: gf("solar_capacity_w", d.solar_capacity_w),
+            battery_wh: gf("battery_wh", d.battery_wh),
+            soc_init: gf("soc_init", d.soc_init),
+            soc_min: gf("soc_min", d.soc_min),
+            soc_max: gf("soc_max", d.soc_max),
+            max_charge_w: gf("max_charge_w", d.max_charge_w),
+            max_discharge_w: gf("max_discharge_w", d.max_discharge_w),
+            charge_eff: gf("charge_eff", d.charge_eff),
+            discharge_eff: gf("discharge_eff", d.discharge_eff),
+            interval_s: gf("interval_s", d.interval_s),
+            ci_low: gf("ci_low", d.ci_low),
+            ci_high: gf("ci_high", d.ci_high),
+            ci_mean: gf("ci_mean", d.ci_mean),
+            start_hour: gf("start_hour", d.start_hour),
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_table1a() {
+        let c = SimConfig::default();
+        assert_eq!(c.model, "llama3-8b");
+        assert_eq!(c.gpu, "a100-80g");
+        assert_eq!((c.tp, c.pp), (1, 1));
+        assert_eq!(c.batch_cap, 128);
+        assert_eq!(c.max_tokens, 4096);
+        assert_eq!(c.num_requests, 1024);
+        assert_eq!(c.arrival.qps(), 6.45);
+        assert_eq!(c.pue, 1.2);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn default_cosim_matches_paper_table1b() {
+        let c = CosimConfig::default();
+        assert_eq!(c.solar_capacity_w, 600.0);
+        assert_eq!(c.battery_wh, 100.0);
+        assert_eq!((c.soc_min, c.soc_max), (0.2, 0.8));
+        assert_eq!((c.ci_low, c.ci_high), (100.0, 200.0));
+        assert_eq!(c.interval_s, 60.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sim_json_roundtrip() {
+        let mut c = SimConfig::default();
+        c.tp = 2;
+        c.pp = 2;
+        c.scheduler = SchedulerKind::Sarathi;
+        c.arrival = Arrival::Gamma { qps: 3.0, cv: 1.5 };
+        c.lengths = LengthDist::Fixed { total: 2048 };
+        c.prefill_decode_ratio = Some(20.0);
+        c.exec.rf_noise_std = 0.05;
+        let back = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn cosim_json_roundtrip() {
+        let mut c = CosimConfig::default();
+        c.solar_capacity_w = 1200.0;
+        c.start_hour = 0.0;
+        let back = CosimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn validate_rejects_bad_pp() {
+        let mut c = SimConfig::default();
+        c.pp = 3; // 32 layers not divisible by 3
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_batch_cap() {
+        let mut c = SimConfig::default();
+        c.batch_cap = 0;
+        assert!(c.validate().is_err());
+        c.batch_cap = 256; // above AOT padding limit
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_soc_inversion() {
+        let mut c = CosimConfig::default();
+        c.soc_min = 0.9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn total_gpus_eq2() {
+        let mut c = SimConfig::default();
+        c.tp = 2;
+        c.pp = 2;
+        c.replicas = 3;
+        assert_eq!(c.total_gpus(), 12); // G = R * TP * PP
+    }
+}

@@ -1,0 +1,249 @@
+//! Command-line interface of the `repro` binary.
+//!
+//! Subcommands:
+//!   simulate    — one inference-simulation run (prints metrics JSON)
+//!   cosim       — full Vidur→Vessim case-study pipeline
+//!   experiment  — regenerate a paper table/figure (or `all`)
+//!   multiregion — carbon-aware multi-region routing exploration
+//!   policy      — model-size vs grid-condition policy exploration
+//!   config      — show the default (Table 1) configuration
+//!   report      — assemble results/ into one markdown report
+//!   trace       — generate and save a workload trace CSV
+
+use crate::config::simconfig::{Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig};
+use crate::coordinator::{multiregion, policy};
+use crate::energy::EnergyAccountant;
+use crate::experiments;
+use crate::report;
+use crate::sim;
+use crate::util::cli::{usage, Args, OptSpec};
+use crate::util::json::Value;
+use crate::workload::{Trace, WorkloadGenerator};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+const TOP_USAGE: &str = "repro — rust+JAX+Pallas reproduction of 'Quantifying the Energy \
+Consumption and Carbon Emissions of LLM Inference via Simulations'
+
+subcommands:
+  simulate     run one inference simulation
+  cosim        run the Vidur→Vessim integration case study
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation all
+  multiregion  carbon-aware multi-region routing exploration
+  policy       model-size policy exploration (small in dirty grid vs large in clean)
+  config       print the default Table-1 configuration
+  report       assemble results/ into a markdown report
+  trace        generate a workload trace CSV
+";
+
+/// Entry point used by main.rs.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut it = argv.into_iter();
+    let _bin = it.next();
+    let Some(cmd) = it.next() else {
+        print!("{TOP_USAGE}");
+        return Ok(());
+    };
+    let rest: Vec<String> = it.collect();
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "cosim" => cmd_cosim(&args),
+        "experiment" => cmd_experiment(&args),
+        "multiregion" => multiregion::cmd(&args),
+        "policy" => policy::cmd(&args),
+        "config" => cmd_config(),
+        "report" => cmd_report(&args),
+        "trace" => cmd_trace(&args),
+        "help" | "--help" | "-h" => {
+            print!("{TOP_USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{TOP_USAGE}"),
+    }
+}
+
+/// Apply the common simulation overrides shared by several commands.
+pub fn apply_sim_overrides(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(g) = args.get("gpu") {
+        cfg.gpu = g.to_string();
+    }
+    cfg.tp = args.u64_or("tp", cfg.tp as u64)? as u32;
+    cfg.pp = args.u64_or("pp", cfg.pp as u64)? as u32;
+    cfg.replicas = args.u64_or("replicas", cfg.replicas as u64)? as u32;
+    cfg.num_requests = args.u64_or("requests", cfg.num_requests)?;
+    cfg.batch_cap = args.usize_or("batch-cap", cfg.batch_cap)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    let qps = args.f64_or("qps", cfg.arrival.qps())?;
+    cfg.arrival = Arrival::Poisson { qps };
+    if let Some(total) = args.get("fixed-len") {
+        cfg.lengths = LengthDist::Fixed {
+            total: total.parse()?,
+        };
+    }
+    if args.get("pd-ratio").is_some() {
+        cfg.prefill_decode_ratio = Some(args.f64_or("pd-ratio", 4.0)?);
+    }
+    cfg.cost_model = match args.str_or("cost-model", "hlo").as_str() {
+        "native" => CostModelKind::Native,
+        "hlo" => CostModelKind::Hlo,
+        other => bail!("unknown --cost-model '{other}' (native|hlo)"),
+    };
+    cfg.exec.rf_noise_std = args.f64_or("rf-noise", cfg.exec.rf_noise_std)?;
+    cfg.validate()
+}
+
+fn sim_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "model", help: "model key (llama3-8b, ...)", default: Some("llama3-8b") },
+        OptSpec { name: "gpu", help: "gpu key (a100-80g, h100, a40)", default: Some("a100-80g") },
+        OptSpec { name: "tp", help: "tensor parallelism", default: Some("1") },
+        OptSpec { name: "pp", help: "pipeline parallelism", default: Some("1") },
+        OptSpec { name: "replicas", help: "replica count", default: Some("1") },
+        OptSpec { name: "requests", help: "request count (supports 2^16, 400k)", default: Some("1024") },
+        OptSpec { name: "qps", help: "Poisson arrival rate", default: Some("6.45") },
+        OptSpec { name: "batch-cap", help: "max batch size", default: Some("128") },
+        OptSpec { name: "fixed-len", help: "fixed total tokens per request", default: None },
+        OptSpec { name: "pd-ratio", help: "prefill:decode ratio", default: None },
+        OptSpec { name: "cost-model", help: "stage oracle: hlo|native", default: Some("hlo") },
+        OptSpec { name: "rf-noise", help: "lognormal latency noise sigma", default: Some("0") },
+        OptSpec { name: "seed", help: "rng seed", default: None },
+        OptSpec { name: "stagelog", help: "write per-stage CSV here", default: None },
+        OptSpec { name: "config", help: "load SimConfig JSON file", default: None },
+    ]
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{}", usage("repro simulate", "one inference run", &sim_opts()));
+        return Ok(());
+    }
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::load(path)?,
+        None => SimConfig::default(),
+    };
+    apply_sim_overrides(&mut cfg, args)?;
+    let out = sim::run(&cfg)?;
+    let acc = EnergyAccountant::paper_default(&cfg)?;
+    let energy = acc.account(&cfg, &out.stagelog, out.metrics.makespan_s);
+    let mut v = Value::obj();
+    v.set("config", cfg.to_json())
+        .set("metrics", out.metrics.to_json())
+        .set("energy", energy.to_json());
+    if out.oracle_calls > 0 {
+        let mut o = Value::obj();
+        o.set("calls", out.oracle_calls)
+            .set("hits", out.oracle_hits)
+            .set(
+                "hit_rate",
+                out.oracle_hits as f64 / out.oracle_calls as f64,
+            );
+        v.set("oracle_cache", o);
+    }
+    println!("{}", v.pretty());
+    if let Some(path) = args.get("stagelog") {
+        out.stagelog.save_csv(path)?;
+        eprintln!("stage log -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cosim(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let fast = args.has("fast");
+    let cs = experiments::casestudy::run_full(&out_dir, fast)?;
+    let mut v = Value::obj();
+    v.set("baseline", cs.baseline_json).set("carbon_aware", cs.aware_json);
+    println!("{}", v.pretty());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.first() else {
+        bail!("usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|all> [--out results] [--fast]");
+    };
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    experiments::run_by_id(id, &out_dir, args.has("fast"))
+}
+
+fn cmd_config() -> Result<()> {
+    let mut v = Value::obj();
+    v.set("sim (Table 1a)", SimConfig::default().to_json())
+        .set("cosim (Table 1b)", CosimConfig::default().to_json());
+    println!("{}", v.pretty());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("out", "results"));
+    let md = report::assemble(&dir)?;
+    let path = dir.join("REPORT.md");
+    std::fs::write(&path, &md)?;
+    println!("{md}");
+    eprintln!("report -> {path:?}");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let mut cfg = SimConfig::default();
+    apply_sim_overrides(&mut cfg, args).ok(); // cost model irrelevant here
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let path = args.str_or("out", "results/trace.csv");
+    trace.save(&path)?;
+    println!(
+        "wrote {} requests spanning {:.1}s ({} tokens) to {path}",
+        trace.len(),
+        trace.arrival_span_s(),
+        trace.total_tokens()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn overrides_applied() {
+        let mut cfg = SimConfig::default();
+        apply_sim_overrides(
+            &mut cfg,
+            &args(&[
+                "--model", "llama2-7b", "--tp", "2", "--requests", "2^10",
+                "--qps", "3.5", "--cost-model", "native",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "llama2-7b");
+        assert_eq!(cfg.tp, 2);
+        assert_eq!(cfg.num_requests, 1024);
+        assert_eq!(cfg.arrival.qps(), 3.5);
+        assert_eq!(cfg.cost_model, CostModelKind::Native);
+    }
+
+    #[test]
+    fn bad_model_rejected() {
+        let mut cfg = SimConfig::default();
+        assert!(apply_sim_overrides(&mut cfg, &args(&["--model", "gpt9"])).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        let r = run(vec!["repro".into(), "frobnicate".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_is_ok() {
+        run(vec!["repro".into()]).unwrap();
+        run(vec!["repro".into(), "help".into()]).unwrap();
+    }
+}

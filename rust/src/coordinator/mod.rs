@@ -1,0 +1,7 @@
+//! The L3 coordinator binary's guts: CLI dispatch plus the
+//! carbon-aware extensions (§5 "future directions", implemented):
+//! multi-region routing and the model-size policy explorer.
+
+pub mod cli;
+pub mod multiregion;
+pub mod policy;

@@ -1,0 +1,131 @@
+//! Model-size policy exploration (§5: "deploying smaller models in
+//! high-CI regions versus larger ones during renewable peaks").
+//!
+//! Compares three serving policies over a day of grid conditions:
+//! * `large-always` — serve every request with the large model;
+//! * `small-always` — always the small model;
+//! * `ci-adaptive`  — large model when CI < low threshold (clean),
+//!   small model when CI > high threshold, large otherwise.
+//!
+//! Reports energy, emissions, and a quality proxy (fraction of tokens
+//! served by the large model).
+
+use crate::config::simconfig::{CosimConfig, SimConfig};
+use crate::experiments::common::run_case;
+use crate::grid::CarbonIntensityTrace;
+use crate::util::cli::Args;
+use crate::util::csv::Table;
+use anyhow::Result;
+
+pub struct PolicyCase {
+    pub name: String,
+    pub energy_kwh: f64,
+    pub emissions_g: f64,
+    pub large_frac: f64,
+}
+
+/// Evaluate the three policies for a given per-request energy cost of
+/// the small and large models (measured by two short sims), a CI
+/// trace, and a uniform request stream.
+pub fn evaluate(
+    e_small_wh: f64,
+    e_large_wh: f64,
+    ci: &[f64],
+    ci_low: f64,
+    ci_high: f64,
+    requests_per_step: f64,
+) -> Vec<PolicyCase> {
+    let mut out = Vec::new();
+    for name in ["large-always", "small-always", "ci-adaptive"] {
+        let mut energy_wh = 0.0;
+        let mut emissions = 0.0;
+        let mut large_steps = 0usize;
+        for &c in ci {
+            let use_large = match name {
+                "large-always" => true,
+                "small-always" => false,
+                _ => c <= ci_high, // adaptive: downshift only in dirty hours
+            };
+            let e = requests_per_step * if use_large { e_large_wh } else { e_small_wh };
+            energy_wh += e;
+            emissions += e / 1000.0 * c;
+            if use_large {
+                large_steps += 1;
+            }
+            let _ = ci_low;
+        }
+        out.push(PolicyCase {
+            name: name.into(),
+            energy_kwh: energy_wh / 1000.0,
+            emissions_g: emissions,
+            large_frac: large_steps as f64 / ci.len().max(1) as f64,
+        });
+    }
+    out
+}
+
+/// Measure per-request energy of a model via a short calibration sim.
+pub fn per_request_energy_wh(model: &str, args: &Args, fast: bool) -> Result<f64> {
+    let mut cfg = SimConfig::default();
+    super::cli::apply_sim_overrides(&mut cfg, args)?;
+    cfg.model = model.to_string();
+    cfg.num_requests = if fast { 128 } else { 512 };
+    let r = run_case(&cfg)?;
+    Ok(r.energy_kwh() * 1000.0 / cfg.num_requests as f64)
+}
+
+/// `repro policy` command.
+pub fn cmd(args: &Args) -> Result<()> {
+    let fast = args.has("fast");
+    let small = args.str_or("small-model", "llama2-7b");
+    let large = args.str_or("large-model", "codellama-34b");
+    let e_small = per_request_energy_wh(&small, args, fast)?;
+    let e_large = per_request_energy_wh(&large, args, fast)?;
+    let cosim = CosimConfig::default();
+    let trace = CarbonIntensityTrace::default();
+    let ci: Vec<f64> = (0..2880).map(|k| trace.base_at(k as f64 * 60.0)).collect();
+    let cases = evaluate(e_small, e_large, &ci, cosim.ci_low, cosim.ci_high, 1.0);
+
+    let mut t = Table::new(&["policy", "energy_kwh", "emissions_g", "large_model_frac"]);
+    for c in &cases {
+        t.push_row(vec![
+            c.name.clone(),
+            format!("{:.3}", c.energy_kwh),
+            format!("{:.0}", c.emissions_g),
+            format!("{:.2}", c.large_frac),
+        ]);
+    }
+    println!(
+        "per-request energy: {small} {e_small:.3} Wh, {large} {e_large:.3} Wh\n\n{}",
+        t.to_markdown()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_sits_between_extremes() {
+        let ci: Vec<f64> = (0..1440)
+            .map(|k| if k % 480 < 240 { 450.0 } else { 90.0 })
+            .collect();
+        let cases = evaluate(1.0, 4.0, &ci, 100.0, 200.0, 1.0);
+        let by = |n: &str| cases.iter().find(|c| c.name == n).unwrap();
+        let large = by("large-always");
+        let small = by("small-always");
+        let adaptive = by("ci-adaptive");
+        assert!(adaptive.emissions_g < large.emissions_g);
+        assert!(adaptive.emissions_g > small.emissions_g);
+        assert!(adaptive.large_frac > 0.3 && adaptive.large_frac < 0.9);
+    }
+
+    #[test]
+    fn adaptive_serves_large_in_clean_hours() {
+        let ci = vec![50.0; 100]; // always clean
+        let cases = evaluate(1.0, 4.0, &ci, 100.0, 200.0, 1.0);
+        let adaptive = cases.iter().find(|c| c.name == "ci-adaptive").unwrap();
+        assert_eq!(adaptive.large_frac, 1.0);
+    }
+}

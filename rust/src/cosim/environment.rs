@@ -1,0 +1,346 @@
+//! The co-simulation environment: steps the microgrid over the load /
+//! solar / carbon-intensity signals at a fixed resolution and produces
+//! the Table-2 summary metrics.
+//!
+//! Two execution backends:
+//! * `run_native` — pure-rust step loop; required when an active
+//!   controller rewrites the load (feedback in the loop);
+//! * `run_hlo` — the AOT cosim kernel (`artifacts/cosim_step.hlo.txt`)
+//!   executed in 1440-step (one-day) chunks via PJRT, chaining the
+//!   battery SoC across chunks. Monitor-only (no feedback), and
+//!   bit-matched against the native loop in rust/tests/cosim_parity.rs.
+
+use crate::battery::Battery;
+use crate::config::simconfig::CosimConfig;
+use crate::cosim::controllers::{CarbonAwareController, ControllerAction};
+use crate::cosim::microgrid::{Microgrid, StepRecord};
+use crate::runtime::{artifacts, pjrt::cached_executable};
+use crate::util::json::Value;
+use anyhow::Result;
+
+/// Summary of a co-simulation run (the paper's Table 2).
+#[derive(Debug, Clone)]
+pub struct CosimResult {
+    pub records: Vec<StepRecord>,
+    // --- energy ---
+    pub total_energy_kwh: f64,
+    pub solar_generation_kwh: f64,
+    pub grid_consumption_kwh: f64,
+    pub grid_export_kwh: f64,
+    pub renewable_share: f64,
+    pub grid_dependency: f64,
+    // --- emissions ---
+    /// Gross emissions if all load had been grid-supplied, kg.
+    pub total_emissions_kg: f64,
+    /// Emissions avoided by solar + storage, kg.
+    pub offset_by_solar_kg: f64,
+    /// Actual import emissions, g.
+    pub net_footprint_g: f64,
+    pub carbon_offset_frac: f64,
+    pub avg_ci: f64,
+    pub hours_high_ci: f64,
+    // --- battery ---
+    pub avg_soc: f64,
+    pub hours_below_50_soc: f64,
+    pub hours_above_80_soc: f64,
+    pub charging_frac: f64,
+    pub discharging_frac: f64,
+    pub idle_frac: f64,
+    pub battery_full_cycles: f64,
+}
+
+impl CosimResult {
+    fn from_records(records: Vec<StepRecord>, grid: &Microgrid, ci_high: f64, dt_s: f64) -> Self {
+        let dt_h = dt_s / 3600.0;
+        let n = records.len().max(1) as f64;
+        let gross_g: f64 = records
+            .iter()
+            .map(|r| r.load_w * dt_h / 1000.0 * r.ci)
+            .sum();
+        let net_g: f64 = records.iter().map(|r| r.emissions_g).sum();
+        let avg_ci = records.iter().map(|r| r.ci).sum::<f64>() / n;
+        let hours_high_ci = records.iter().filter(|r| r.ci > ci_high).count() as f64 * dt_h;
+        let avg_soc = records.iter().map(|r| r.soc).sum::<f64>() / n;
+        let below50 = records.iter().filter(|r| r.soc < 0.5).count() as f64 * dt_h;
+        let above80 = records.iter().filter(|r| r.soc >= 0.7999).count() as f64 * dt_h;
+        let charging = records.iter().filter(|r| r.battery_w < -1e-9).count() as f64 / n;
+        let discharging = records.iter().filter(|r| r.battery_w > 1e-9).count() as f64 / n;
+
+        CosimResult {
+            total_energy_kwh: grid.total_load_wh / 1000.0,
+            solar_generation_kwh: grid.total_solar_wh / 1000.0,
+            grid_consumption_kwh: grid.total_import_wh / 1000.0,
+            grid_export_kwh: grid.total_export_wh / 1000.0,
+            renewable_share: grid.renewable_share(),
+            grid_dependency: grid.grid_dependency(),
+            total_emissions_kg: gross_g / 1000.0,
+            offset_by_solar_kg: (gross_g - net_g) / 1000.0,
+            net_footprint_g: net_g,
+            carbon_offset_frac: if gross_g > 0.0 {
+                (gross_g - net_g) / gross_g
+            } else {
+                0.0
+            },
+            avg_ci,
+            hours_high_ci,
+            avg_soc,
+            hours_below_50_soc: below50,
+            hours_above_80_soc: above80,
+            charging_frac: charging,
+            discharging_frac: discharging,
+            idle_frac: 1.0 - charging - discharging,
+            battery_full_cycles: grid.battery.full_cycles(),
+            records,
+        }
+    }
+
+    /// Table-2-shaped JSON.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("total_energy_kwh", self.total_energy_kwh)
+            .set("solar_generation_kwh", self.solar_generation_kwh)
+            .set("grid_consumption_kwh", self.grid_consumption_kwh)
+            .set("grid_export_kwh", self.grid_export_kwh)
+            .set("renewable_share", self.renewable_share)
+            .set("grid_dependency", self.grid_dependency)
+            .set("total_emissions_kg", self.total_emissions_kg)
+            .set("offset_by_solar_kg", self.offset_by_solar_kg)
+            .set("net_footprint_g", self.net_footprint_g)
+            .set("carbon_offset_frac", self.carbon_offset_frac)
+            .set("avg_ci", self.avg_ci)
+            .set("hours_high_ci", self.hours_high_ci)
+            .set("avg_soc", self.avg_soc)
+            .set("hours_below_50_soc", self.hours_below_50_soc)
+            .set("hours_above_80_soc", self.hours_above_80_soc)
+            .set("charging_frac", self.charging_frac)
+            .set("discharging_frac", self.discharging_frac)
+            .set("idle_frac", self.idle_frac)
+            .set("battery_full_cycles", self.battery_full_cycles);
+        v
+    }
+}
+
+/// The stepped environment.
+pub struct Environment {
+    pub config: CosimConfig,
+    pub controller: Option<CarbonAwareController>,
+}
+
+impl Environment {
+    pub fn new(config: CosimConfig) -> Self {
+        Environment {
+            config,
+            controller: None,
+        }
+    }
+
+    pub fn with_controller(mut self, c: CarbonAwareController) -> Self {
+        self.controller = Some(c);
+        self
+    }
+
+    /// Native step loop. `load`, `solar`, `ci` are per-step series of
+    /// equal length (sampled at `config.interval_s`).
+    pub fn run_native(
+        &mut self,
+        load_w: &[f64],
+        solar_w: &[f64],
+        ci: &[f64],
+    ) -> Result<CosimResult> {
+        anyhow::ensure!(
+            load_w.len() == solar_w.len() && load_w.len() == ci.len(),
+            "signal length mismatch"
+        );
+        let dt = self.config.interval_s;
+        let mut grid = Microgrid::new(Battery::from_config(&self.config));
+        let mut records = Vec::with_capacity(load_w.len());
+        for i in 0..load_w.len() {
+            let t = i as f64 * dt;
+            let mut eff_load = load_w[i];
+            if let Some(c) = self.controller.as_mut() {
+                if let ControllerAction::Shift { run_w, .. } =
+                    c.decide(load_w[i], ci[i], solar_w[i], dt)
+                {
+                    eff_load = run_w;
+                }
+            }
+            records.push(grid.step(t, eff_load, solar_w[i], ci[i], dt));
+        }
+        // Work conservation: drain any residual backlog at the end.
+        if let Some(c) = self.controller.as_mut() {
+            let mut t = load_w.len() as f64 * dt;
+            let mut guard = 0;
+            while c.residual_wh() > 1e-6 && guard < 100_000 {
+                let drain = c.drain_w.min(c.residual_wh() * 3600.0 / dt);
+                let last_ci = *ci.last().unwrap_or(&0.0);
+                if let ControllerAction::Shift { run_w, .. } =
+                    c.decide(0.0, 0.0, 0.0, dt)
+                {
+                    records.push(grid.step(t, run_w, 0.0, last_ci, dt));
+                } else {
+                    records.push(grid.step(t, drain, 0.0, last_ci, dt));
+                    c.drained_wh_total += drain * dt / 3600.0;
+                }
+                t += dt;
+                guard += 1;
+            }
+        }
+        Ok(CosimResult::from_records(
+            records,
+            &grid,
+            self.config.ci_high,
+            dt,
+        ))
+    }
+
+    /// AOT cosim kernel in day-sized chunks via PJRT (monitor-only).
+    pub fn run_hlo(
+        &mut self,
+        load_w: &[f64],
+        solar_w: &[f64],
+        ci: &[f64],
+    ) -> Result<CosimResult> {
+        anyhow::ensure!(
+            self.controller.is_none(),
+            "the HLO cosim backend has no controller feedback; use run_native"
+        );
+        let exe = cached_executable("cosim_step")?;
+        let t_chunk = artifacts::T_COSIM;
+        let dt = self.config.interval_s;
+
+        // The rust battery tracks cumulative counters; the kernel owns
+        // the step dynamics. We mirror the counters from outputs.
+        let mut grid = Microgrid::new(Battery::from_config(&self.config));
+        let mut soc = self.config.soc_init as f32;
+        let bp: Vec<f32> = grid.battery.param_vec(dt).to_vec();
+        let mut records = Vec::with_capacity(load_w.len());
+
+        let mut i = 0usize;
+        while i < load_w.len() {
+            let n = (load_w.len() - i).min(t_chunk);
+            let mut lw = vec![0f32; t_chunk];
+            let mut sw = vec![0f32; t_chunk];
+            let mut cw = vec![0f32; t_chunk];
+            for k in 0..n {
+                lw[k] = load_w[i + k] as f32;
+                sw[k] = solar_w[i + k] as f32;
+                cw[k] = ci[i + k] as f32;
+            }
+            let out = exe.call_f32(&[&lw, &sw, &cw, &bp, &[soc]])?;
+            anyhow::ensure!(out.len() == 5, "cosim kernel returned {} outputs", out.len());
+            let (soc_arr, grid_arr, used_arr, batt_arr, em_arr) =
+                (&out[0], &out[1], &out[2], &out[3], &out[4]);
+            let dt_h = dt / 3600.0;
+            for k in 0..n {
+                let t_s = (i + k) as f64 * dt;
+                let rec = StepRecord {
+                    t_s,
+                    load_w: load_w[i + k],
+                    solar_w: solar_w[i + k],
+                    solar_used_w: used_arr[k] as f64,
+                    grid_w: grid_arr[k] as f64,
+                    battery_w: batt_arr[k] as f64,
+                    soc: soc_arr[k] as f64,
+                    ci: ci[i + k],
+                    emissions_g: em_arr[k] as f64,
+                };
+                // Mirror cumulative counters.
+                grid.total_load_wh += rec.load_w * dt_h;
+                grid.total_solar_wh += rec.solar_w * dt_h;
+                grid.total_solar_used_wh += rec.solar_used_w * dt_h;
+                grid.total_import_wh += rec.grid_w.max(0.0) * dt_h;
+                grid.total_export_wh += (-rec.grid_w).max(0.0) * dt_h;
+                grid.total_emissions_g += rec.emissions_g;
+                grid.battery.discharged_wh += rec.battery_w.max(0.0) * dt_h;
+                grid.battery.charged_wh += (-rec.battery_w).max(0.0) * dt_h;
+                records.push(rec);
+            }
+            soc = soc_arr[n - 1];
+            i += n;
+        }
+        grid.battery.soc = soc as f64;
+        Ok(CosimResult::from_records(
+            records,
+            &grid,
+            self.config.ci_high,
+            dt,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(v: f64, n: usize) -> Vec<f64> {
+        vec![v; n]
+    }
+
+    #[test]
+    fn native_monitor_run_sums_energy() {
+        let mut env = Environment::new(CosimConfig::default());
+        let n = 120; // 2 h
+        let res = env
+            .run_native(&flat(500.0, n), &flat(200.0, n), &flat(300.0, n))
+            .unwrap();
+        assert!((res.total_energy_kwh - 1.0).abs() < 1e-9); // 500 W * 2 h
+        assert!((res.solar_generation_kwh - 0.4).abs() < 1e-9);
+        assert!(res.grid_consumption_kwh > 0.0);
+        assert!(res.renewable_share > 0.3 && res.renewable_share < 0.6);
+        assert_eq!(res.records.len(), n);
+    }
+
+    #[test]
+    fn offset_accounting_consistent() {
+        let mut env = Environment::new(CosimConfig::default());
+        let n = 240;
+        let res = env
+            .run_native(&flat(400.0, n), &flat(300.0, n), &flat(418.2, n))
+            .unwrap();
+        // total = offset + net (Table 2 identity).
+        let total = res.total_emissions_kg * 1000.0;
+        let sum = res.offset_by_solar_kg * 1000.0 + res.net_footprint_g;
+        assert!((total - sum).abs() < 1e-6);
+        assert!(res.carbon_offset_frac > 0.5); // 300 of 400 W solar
+    }
+
+    #[test]
+    fn controller_reduces_net_emissions() {
+        // Two dirty hours then two clean hours, flat load, no solar:
+        // shifting to the clean window must cut net emissions.
+        let mut ci = flat(500.0, 120);
+        ci.extend(flat(60.0, 120));
+        let load = flat(400.0, 240);
+        let solar = flat(0.0, 240);
+
+        let mut base_env = Environment::new(CosimConfig::default());
+        let base = base_env.run_native(&load, &solar, &ci).unwrap();
+
+        let mut aware_env = Environment::new(CosimConfig::default())
+            .with_controller(CarbonAwareController::new(100.0, 200.0, 0.6));
+        let aware = aware_env.run_native(&load, &solar, &ci).unwrap();
+
+        assert!(
+            aware.net_footprint_g < 0.9 * base.net_footprint_g,
+            "aware {} !<< base {}",
+            aware.net_footprint_g,
+            base.net_footprint_g
+        );
+        // Work conservation: same total energy (within drain rounding).
+        assert!(
+            (aware.total_energy_kwh - base.total_energy_kwh).abs()
+                < 0.01 * base.total_energy_kwh
+        );
+    }
+
+    #[test]
+    fn high_ci_hours_counted() {
+        let mut env = Environment::new(CosimConfig::default());
+        let mut ci = flat(250.0, 60); // 1 h above 200
+        ci.extend(flat(150.0, 60)); // 1 h below
+        let res = env
+            .run_native(&flat(100.0, 120), &flat(0.0, 120), &ci)
+            .unwrap();
+        assert!((res.hours_high_ci - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,205 @@
+//! The microgrid power-balance core: load vs solar vs battery vs grid,
+//! one fixed-width step at a time.
+//!
+//! Balance policy per step (identical to python/compile/kernels/ref.py
+//! `ref_microgrid` and verified against the AOT cosim kernel):
+//!   1. solar serves the load;
+//!   2. excess solar charges the battery, remainder exports;
+//!   3. residual load discharges the battery, remainder imports;
+//!   4. emissions = imported energy × carbon intensity.
+
+use crate::battery::Battery;
+
+/// One co-simulation step's resolved power flows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub t_s: f64,
+    pub load_w: f64,
+    pub solar_w: f64,
+    /// Solar power directly consumed by the load.
+    pub solar_used_w: f64,
+    /// Grid power: >0 import, <0 export.
+    pub grid_w: f64,
+    /// Battery power: >0 discharge, <0 charge.
+    pub battery_w: f64,
+    pub soc: f64,
+    /// Grid carbon intensity this step, g/kWh.
+    pub ci: f64,
+    /// Emissions from imports this step, g.
+    pub emissions_g: f64,
+}
+
+impl StepRecord {
+    /// Power-balance residual (0 when consistent): load = solar_used +
+    /// discharge + import.
+    pub fn balance_residual(&self) -> f64 {
+        let import = self.grid_w.max(0.0);
+        let discharge = self.battery_w.max(0.0);
+        self.load_w - (self.solar_used_w + discharge + import)
+    }
+}
+
+/// Microgrid state: the battery plus cumulative counters.
+#[derive(Debug, Clone)]
+pub struct Microgrid {
+    pub battery: Battery,
+    pub total_load_wh: f64,
+    pub total_solar_wh: f64,
+    pub total_solar_used_wh: f64,
+    pub total_import_wh: f64,
+    pub total_export_wh: f64,
+    pub total_emissions_g: f64,
+}
+
+impl Microgrid {
+    pub fn new(battery: Battery) -> Self {
+        Microgrid {
+            battery,
+            total_load_wh: 0.0,
+            total_solar_wh: 0.0,
+            total_solar_used_wh: 0.0,
+            total_import_wh: 0.0,
+            total_export_wh: 0.0,
+            total_emissions_g: 0.0,
+        }
+    }
+
+    /// Resolve one step.
+    pub fn step(&mut self, t_s: f64, load_w: f64, solar_w: f64, ci: f64, dt_s: f64) -> StepRecord {
+        let dt_h = dt_s / 3600.0;
+        let solar_used = solar_w.min(load_w);
+        let excess = solar_w - solar_used;
+        let deficit = load_w - solar_used;
+
+        let charged = self.battery.charge(excess, dt_s);
+        let export = excess - charged;
+
+        let discharged = self.battery.discharge(deficit, dt_s);
+        let import = deficit - discharged;
+
+        let emissions = import * dt_h / 1000.0 * ci;
+
+        self.total_load_wh += load_w * dt_h;
+        self.total_solar_wh += solar_w * dt_h;
+        self.total_solar_used_wh += solar_used * dt_h;
+        self.total_import_wh += import * dt_h;
+        self.total_export_wh += export * dt_h;
+        self.total_emissions_g += emissions;
+
+        StepRecord {
+            t_s,
+            load_w,
+            solar_w,
+            solar_used_w: solar_used,
+            grid_w: import - export,
+            battery_w: discharged - charged,
+            soc: self.battery.soc,
+            ci,
+            emissions_g: emissions,
+        }
+    }
+
+    /// Renewable share of consumption: solar directly used (plus
+    /// battery-stored solar, approximated by total discharge) over load.
+    pub fn renewable_share(&self) -> f64 {
+        if self.total_load_wh == 0.0 {
+            return 0.0;
+        }
+        ((self.total_solar_used_wh + self.battery.discharged_wh) / self.total_load_wh)
+            .min(1.0)
+    }
+
+    pub fn grid_dependency(&self) -> f64 {
+        if self.total_load_wh == 0.0 {
+            return 0.0;
+        }
+        self.total_import_wh / self.total_load_wh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::CosimConfig;
+    use crate::util::proptest::{check, gens};
+    use crate::util::rng::Rng;
+
+    fn grid() -> Microgrid {
+        Microgrid::new(Battery::from_config(&CosimConfig::default()))
+    }
+
+    #[test]
+    fn no_solar_full_import() {
+        let mut g = grid();
+        // Battery at min first.
+        g.battery.soc = g.battery.soc_min;
+        let r = g.step(0.0, 300.0, 0.0, 400.0, 60.0);
+        assert_eq!(r.grid_w, 300.0);
+        assert_eq!(r.battery_w, 0.0);
+        assert!((r.emissions_g - 300.0 / 60.0 / 1000.0 * 400.0).abs() < 1e-12);
+        assert!(r.balance_residual().abs() < 1e-9);
+    }
+
+    #[test]
+    fn surplus_charges_then_exports() {
+        let mut g = grid();
+        g.battery.soc = 0.5;
+        // 500 W solar vs 100 W load: 400 W excess; battery takes up to
+        // 100 W (rate limit), 300 W exports.
+        let r = g.step(0.0, 100.0, 500.0, 100.0, 60.0);
+        assert_eq!(r.solar_used_w, 100.0);
+        assert_eq!(r.battery_w, -100.0);
+        assert_eq!(r.grid_w, -300.0);
+        assert_eq!(r.emissions_g, 0.0); // no import
+        assert!(r.balance_residual().abs() < 1e-9);
+    }
+
+    #[test]
+    fn deficit_discharges_then_imports() {
+        let mut g = grid();
+        g.battery.soc = 0.8;
+        // 300 W load, no solar: battery gives 100 W (rate), 200 W import.
+        let r = g.step(0.0, 300.0, 0.0, 250.0, 60.0);
+        assert_eq!(r.battery_w, 100.0);
+        assert_eq!(r.grid_w, 200.0);
+        assert!(r.balance_residual().abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut g = grid();
+        for i in 0..60 {
+            g.step(i as f64 * 60.0, 200.0, 100.0, 300.0, 60.0);
+        }
+        // One hour: 200 Wh load, 100 Wh solar (all used).
+        assert!((g.total_load_wh - 200.0).abs() < 1e-9);
+        assert!((g.total_solar_used_wh - 100.0).abs() < 1e-9);
+        assert!(g.total_import_wh > 0.0);
+        assert!(g.renewable_share() > 0.49);
+        assert!(g.grid_dependency() < 0.51);
+    }
+
+    #[test]
+    fn property_balance_and_soc_bounds() {
+        check(30, gens::u64_in(0, u64::MAX / 2), |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut g = grid();
+            for i in 0..500 {
+                let load = rng.uniform(0.0, 800.0);
+                let solar = rng.uniform(0.0, 700.0);
+                let ci = rng.uniform(50.0, 600.0);
+                let r = g.step(i as f64 * 60.0, load, solar, ci, 60.0);
+                if r.balance_residual().abs() > 1e-6 {
+                    return Err(format!("imbalance {r:?}"));
+                }
+                if r.soc < g.battery.soc_min - 1e-9 || r.soc > g.battery.soc_max + 1e-9 {
+                    return Err(format!("soc out of window {r:?}"));
+                }
+                if r.emissions_g < 0.0 {
+                    return Err("negative emissions".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

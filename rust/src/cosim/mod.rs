@@ -1,0 +1,13 @@
+//! Vessim-like energy-system co-simulation: actors (power consumers /
+//! producers), a microgrid with battery storage, controllers
+//! (Monitor, CarbonLogger, carbon-aware scheduling), and the stepped
+//! environment that executes them at a fixed resolution (paper
+//! default: 1 minute).
+
+pub mod microgrid;
+pub mod environment;
+pub mod controllers;
+
+pub use controllers::{CarbonAwareController, ControllerAction};
+pub use environment::{CosimResult, Environment};
+pub use microgrid::{Microgrid, StepRecord};

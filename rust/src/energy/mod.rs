@@ -1,0 +1,6 @@
+//! Energy and carbon accounting — the paper's Eq. 2–4 applied to the
+//! stage log.
+
+pub mod accounting;
+
+pub use accounting::{EnergyAccountant, EnergyReport, AccountingMode};

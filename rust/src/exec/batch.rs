@@ -1,0 +1,171 @@
+//! Batch-stage description and cost output — the data contract between
+//! the scheduler (which composes batches) and the cost oracle (which
+//! prices them).
+
+use crate::config::gpus::GpuSpec;
+use crate::config::models::ModelSpec;
+use crate::config::simconfig::ExecParams;
+
+/// Max requests per stage — must equal `R_MAX` in python/compile/model.py
+/// (the AOT padding width).
+pub const R_MAX: usize = 128;
+
+/// One batch stage to be priced: parallel arrays over the requests in
+/// the running batch.
+#[derive(Debug, Clone)]
+pub struct BatchDesc {
+    /// New tokens processed per request this iteration (prefill chunk
+    /// size, or 1 for a decode step).
+    pub new_tokens: Vec<u32>,
+    /// KV context already resident per request.
+    pub context: Vec<u32>,
+    /// Model / parallelism / GPU parameters.
+    pub model: &'static ModelSpec,
+    pub gpu: &'static GpuSpec,
+    pub tp: u32,
+    pub pp: u32,
+    pub exec: ExecParams,
+}
+
+impl BatchDesc {
+    pub fn new(
+        model: &'static ModelSpec,
+        gpu: &'static GpuSpec,
+        tp: u32,
+        pp: u32,
+        exec: ExecParams,
+    ) -> Self {
+        BatchDesc {
+            new_tokens: Vec::with_capacity(R_MAX),
+            context: Vec::with_capacity(R_MAX),
+            model,
+            gpu,
+            tp,
+            pp,
+            exec,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.new_tokens.clear();
+        self.context.clear();
+    }
+
+    pub fn push(&mut self, new_tokens: u32, context: u32) {
+        assert!(self.new_tokens.len() < R_MAX, "batch exceeds R_MAX");
+        self.new_tokens.push(new_tokens);
+        self.context.push(context);
+    }
+
+    pub fn len(&self) -> usize {
+        self.new_tokens.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.new_tokens.is_empty()
+    }
+
+    pub fn total_new_tokens(&self) -> u64 {
+        self.new_tokens.iter().map(|&t| t as u64).sum()
+    }
+
+    /// Count of requests doing prefill (chunk > 1) vs decode (1 token).
+    pub fn prefill_count(&self) -> usize {
+        self.new_tokens.iter().filter(|&&t| t > 1).count()
+    }
+
+    /// The gp[12] vector for the AOT oracle (layout:
+    /// python/compile/kernels/ref.py).
+    pub fn gpu_param_vec(&self) -> [f32; 12] {
+        let link = self.gpu.interconnect;
+        [
+            self.gpu.peak_flops as f32,
+            self.gpu.hbm_bw as f32,
+            self.gpu.p_idle as f32,
+            self.gpu.p_max_inst as f32,
+            self.gpu.mfu_sat as f32,
+            self.gpu.gamma as f32,
+            self.exec.flops_eff as f32,
+            self.exec.mem_eff as f32,
+            self.exec.t_overhead as f32,
+            self.exec.layer_overhead as f32,
+            link.bandwidth() as f32,
+            link.latency() as f32,
+        ]
+    }
+
+    /// Eq. 1 power at a given MFU (used by the noise wrapper to keep
+    /// power consistent after perturbing latency).
+    pub fn gpu_power(&self, mfu: f64) -> f64 {
+        self.gpu.power(mfu)
+    }
+}
+
+/// Cost of one pipeline-parallel stage of a batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    /// Wall-clock of one pp stage, seconds.
+    pub t_stage_s: f64,
+    /// Useful FLOPs executed by this pp stage (whole TP group).
+    pub flops: f64,
+    /// Eq. 2 MFU of the stage's TP group.
+    pub mfu: f64,
+    /// Eq. 1 per-GPU power of the stage's active GPUs, W.
+    pub power_w: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpus, models};
+
+    #[test]
+    fn push_and_counts() {
+        let mut b = BatchDesc::new(
+            models::model("llama3-8b").unwrap(),
+            gpus::gpu("a100-80g").unwrap(),
+            1,
+            1,
+            ExecParams::default(),
+        );
+        b.push(512, 0); // prefill
+        b.push(1, 100); // decode
+        b.push(1, 200); // decode
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_new_tokens(), 514);
+        assert_eq!(b.prefill_count(), 1);
+        b.clear();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn gpu_param_vec_layout() {
+        let b = BatchDesc::new(
+            models::model("llama3-8b").unwrap(),
+            gpus::gpu("a100-80g").unwrap(),
+            1,
+            1,
+            ExecParams::default(),
+        );
+        let gp = b.gpu_param_vec();
+        assert_eq!(gp[0], 312e12 as f32);
+        assert_eq!(gp[2], 100.0);
+        assert_eq!(gp[3], 400.0);
+        assert_eq!(gp[4], 0.45);
+        assert_eq!(gp[5], 0.7);
+    }
+
+    #[test]
+    #[should_panic(expected = "R_MAX")]
+    fn overflow_rejected() {
+        let mut b = BatchDesc::new(
+            models::model("llama3-8b").unwrap(),
+            gpus::gpu("a100-80g").unwrap(),
+            1,
+            1,
+            ExecParams::default(),
+        );
+        for _ in 0..(R_MAX + 1) {
+            b.push(1, 10);
+        }
+    }
+}

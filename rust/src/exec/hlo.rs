@@ -1,0 +1,169 @@
+//! The AOT stage oracle: batch-stage cost evaluated by the compiled
+//! JAX/Pallas artifact (`artifacts/stage_oracle.hlo.txt`) through PJRT.
+//!
+//! This is the default request-path backend of the three-layer
+//! architecture. A quantized-signature memo cache keeps the PJRT call
+//! count sublinear in simulated stages: batch compositions are rounded
+//! to token buckets (context to 256, prefill chunks to 128 — both far
+//! below the weight-read term they perturb), sorted, hashed, and looked
+//! up before falling back to execution.
+
+use super::batch::{BatchDesc, StageCost, R_MAX};
+use super::StageCostModel;
+use crate::runtime::pjrt::cached_executable;
+use crate::runtime::Executable;
+use anyhow::Result;
+use std::rc::Rc;
+use std::collections::HashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+/// Context-length quantization bucket (tokens).
+const CTX_BUCKET: u32 = 256;
+/// Prefill-chunk quantization bucket (tokens).
+const PREFILL_BUCKET: u32 = 128;
+/// Cache entries beyond which the memo table is reset.
+const CACHE_CAP: usize = 1 << 20;
+
+pub struct HloCost {
+    exe: Rc<Executable>,
+    cache: HashMap<u64, StageCost>,
+    /// Reused padded input buffers (zero-allocation hot path).
+    nt_buf: Vec<f32>,
+    ctx_buf: Vec<f32>,
+    act_buf: Vec<f32>,
+    /// Quantization on/off (exact signatures when off).
+    quantize: bool,
+    pub calls: u64,
+    pub hits: u64,
+}
+
+impl HloCost {
+    pub fn new() -> Result<Self> {
+        let exe = cached_executable("stage_oracle")?;
+        Ok(HloCost {
+            exe,
+            cache: HashMap::new(),
+            nt_buf: vec![0.0; R_MAX],
+            ctx_buf: vec![0.0; R_MAX],
+            act_buf: vec![0.0; R_MAX],
+            quantize: true,
+            calls: 0,
+            hits: 0,
+        })
+    }
+
+    /// Disable signature quantization (exact evaluation; used by the
+    /// native/HLO parity tests).
+    pub fn exact(mut self) -> Self {
+        self.quantize = false;
+        self
+    }
+
+    /// Build the canonical (quantized) batch representation used both
+    /// as the cache key and as the oracle's evaluation input.
+    ///
+    /// Decode entries (1 new token each) are *aggregated*: per-request
+    /// FLOPs and KV bytes are linear in the context length, so a batch
+    /// of n decodes with contexts summing to S prices identically to n
+    /// decodes at the mean context S/n — the aggregation is exact up
+    /// to the sum bucket (512 tokens of KV ≈ 0.4% of one weight read).
+    /// Prefill entries keep per-request identity (the t² causal term
+    /// is nonlinear) with chunk/context bucketing.
+    fn signature(&self, batch: &BatchDesc, pairs: &mut Vec<(u32, u32)>) -> u64 {
+        pairs.clear();
+        if !self.quantize {
+            for i in 0..batch.len() {
+                pairs.push((batch.new_tokens[i], batch.context[i]));
+            }
+        } else {
+            let q = |x: u32, b: u32| (x + b / 2) / b * b;
+            let mut n_decode = 0u32;
+            let mut ctx_sum = 0u64;
+            for i in 0..batch.len() {
+                let nt = batch.new_tokens[i];
+                if nt <= 1 {
+                    n_decode += 1;
+                    ctx_sum += batch.context[i] as u64;
+                } else {
+                    pairs.push((
+                        q(nt, PREFILL_BUCKET).max(2),
+                        q(batch.context[i], CTX_BUCKET),
+                    ));
+                }
+            }
+            if n_decode > 0 {
+                let sum_bucketed = (ctx_sum + 256) / 512 * 512;
+                let mean_ctx = (sum_bucketed / n_decode as u64) as u32;
+                for _ in 0..n_decode {
+                    pairs.push((1, mean_ctx));
+                }
+            }
+        }
+        pairs.sort_unstable();
+        let mut h = DefaultHasher::new();
+        batch.model.name.hash(&mut h);
+        batch.gpu.name.hash(&mut h);
+        (batch.tp, batch.pp).hash(&mut h);
+        batch.exec.flops_eff.to_bits().hash(&mut h);
+        batch.exec.t_overhead.to_bits().hash(&mut h);
+        pairs.hash(&mut h);
+        h.finish()
+    }
+
+    fn execute(&mut self, pairs: &[(u32, u32)], batch: &BatchDesc) -> Result<StageCost> {
+        self.nt_buf.iter_mut().for_each(|x| *x = 0.0);
+        self.ctx_buf.iter_mut().for_each(|x| *x = 0.0);
+        self.act_buf.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &(nt, ctx)) in pairs.iter().enumerate() {
+            self.nt_buf[i] = nt as f32;
+            self.ctx_buf[i] = ctx as f32;
+            self.act_buf[i] = 1.0;
+        }
+        let mp = batch.model.param_vec(batch.tp, batch.pp);
+        let gp = batch.gpu_param_vec();
+        let out = self.exe.call_f32(&[
+            &self.nt_buf,
+            &self.ctx_buf,
+            &self.act_buf,
+            &mp,
+            &gp,
+        ])?;
+        anyhow::ensure!(out.len() == 4, "stage oracle returned {} outputs", out.len());
+        Ok(StageCost {
+            t_stage_s: out[0][0] as f64,
+            flops: out[1][0] as f64,
+            mfu: out[2][0] as f64,
+            power_w: out[3][0] as f64,
+        })
+    }
+}
+
+impl StageCostModel for HloCost {
+    fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost {
+        debug_assert!(batch.len() <= R_MAX);
+        let mut pairs = Vec::with_capacity(batch.len());
+        let sig = self.signature(batch, &mut pairs);
+        self.calls += 1;
+        if let Some(c) = self.cache.get(&sig) {
+            self.hits += 1;
+            return *c;
+        }
+        let cost = self
+            .execute(&pairs, batch)
+            .expect("stage oracle execution failed");
+        if self.cache.len() >= CACHE_CAP {
+            self.cache.clear();
+        }
+        self.cache.insert(sig, cost);
+        cost
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (self.calls, self.hits)
+    }
+}

@@ -1,0 +1,118 @@
+//! Execution-time / MFU / power oracle for batch stages.
+//!
+//! Two interchangeable backends behind [`StageCostModel`]:
+//! * [`native::NativeCost`] — pure-rust analytical roofline (mirrors
+//!   python/compile/kernels/ref.py exactly; used for cross-checking and
+//!   fast sweeps);
+//! * [`hlo::HloCost`] — the AOT-compiled JAX/Pallas stage oracle
+//!   executed via PJRT (the three-layer architecture's default hot
+//!   path), with a quantized-signature memo cache.
+//!
+//! Both substitute Vidur's random-forest runtime predictor (see
+//! DESIGN.md §5); an optional log-normal noise layer emulates the
+//! learned predictor's spread.
+
+pub mod batch;
+pub mod native;
+pub mod hlo;
+
+pub use batch::{BatchDesc, StageCost};
+
+use crate::config::simconfig::SimConfig;
+use crate::util::rng::Rng;
+
+/// The oracle interface the simulator hot path calls once per batch
+/// stage. Not `Send`: the PJRT client is thread-affine — parallel
+/// sweeps build one model per worker thread instead.
+pub trait StageCostModel {
+    /// Cost of executing `batch` for ONE pipeline-parallel stage
+    /// (layers/pp of the model on a TP group).
+    fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost;
+
+    /// Backend name for logs/reports.
+    fn name(&self) -> &'static str;
+
+    /// (calls, memo-cache hits) — (0, 0) for backends without a cache.
+    fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// Multiplicative log-normal noise wrapper emulating Vidur's learned
+/// (random-forest, k=10) predictor spread around the analytical model.
+pub struct NoisyCost<M: StageCostModel> {
+    inner: M,
+    rng: Rng,
+    sigma: f64,
+}
+
+impl<M: StageCostModel> NoisyCost<M> {
+    pub fn new(inner: M, sigma: f64, seed: u64) -> Self {
+        NoisyCost {
+            inner,
+            rng: Rng::new(seed ^ 0x5EED_CAFE),
+            sigma,
+        }
+    }
+}
+
+impl<M: StageCostModel> StageCostModel for NoisyCost<M> {
+    fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost {
+        let mut c = self.inner.stage_cost(batch);
+        if self.sigma > 0.0 {
+            let f = self.rng.lognormal(0.0, self.sigma);
+            c.t_stage_s *= f;
+            // MFU moves inversely with time (same flops, new latency);
+            // recompute power consistently through the same power law.
+            c.mfu /= f;
+            c.power_w = batch.gpu_power(c.mfu);
+        }
+        c
+    }
+    fn name(&self) -> &'static str {
+        "noisy"
+    }
+}
+
+/// Build the configured cost model (native or HLO-oracle), wrapped in
+/// noise when `exec.rf_noise_std > 0`.
+pub fn build_cost_model(cfg: &SimConfig) -> crate::Result<Box<dyn StageCostModel>> {
+    use crate::config::simconfig::CostModelKind;
+    let base: Box<dyn StageCostModel> = match cfg.cost_model {
+        CostModelKind::Native => Box::new(native::NativeCost::new()),
+        CostModelKind::Hlo => Box::new(hlo::HloCost::new()?),
+    };
+    if cfg.exec.rf_noise_std > 0.0 {
+        Ok(Box::new(NoisyBox {
+            inner: base,
+            rng: Rng::new(cfg.seed ^ 0x5EED_CAFE),
+            sigma: cfg.exec.rf_noise_std,
+        }))
+    } else {
+        Ok(base)
+    }
+}
+
+/// Object-safe noise wrapper (for boxed models).
+struct NoisyBox {
+    inner: Box<dyn StageCostModel>,
+    rng: Rng,
+    sigma: f64,
+}
+
+impl StageCostModel for NoisyBox {
+    fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost {
+        let mut c = self.inner.stage_cost(batch);
+        let f = self.rng.lognormal(0.0, self.sigma);
+        c.t_stage_s *= f;
+        c.mfu /= f;
+        c.power_w = batch.gpu_power(c.mfu);
+        c
+    }
+    fn name(&self) -> &'static str {
+        "noisy"
+    }
+    fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+}

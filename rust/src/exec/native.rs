@@ -1,0 +1,246 @@
+//! Pure-rust analytical stage-cost model — the exact math of
+//! `ref_stage_oracle` in python/compile/kernels/ref.py, kept in
+//! lockstep (cross-checked against the HLO oracle in
+//! rust/tests/oracle_parity.rs).
+//!
+//! Roofline: stage latency = max(compute, memory) + TP/PP communication
+//! + fixed and per-layer overheads; MFU per Eq. 2; power per Eq. 1.
+
+use super::batch::{BatchDesc, StageCost};
+use super::StageCostModel;
+
+/// Analytical roofline cost model.
+#[derive(Debug, Default, Clone)]
+pub struct NativeCost;
+
+impl NativeCost {
+    pub fn new() -> Self {
+        NativeCost
+    }
+
+    /// Per-request (flops, kv_bytes) — mirrors `ref_stage_cost`.
+    pub fn request_cost(batch: &BatchDesc, i: usize) -> (f64, f64) {
+        let m = batch.model;
+        let h = m.hidden as f64;
+        let layers = m.num_layers as f64;
+        let kv_dim = m.kv_dim();
+        let t = batch.new_tokens[i] as f64;
+        let c = batch.context[i] as f64;
+
+        let proj = 2.0 * h * (2.0 * h + 2.0 * kv_dim);
+        let mlp = 6.0 * h * m.ffn_eff();
+        let attn = 4.0 * h * (c * t + t * (t + 1.0) * 0.5);
+        let head = 2.0 * h * m.vocab as f64;
+
+        let flops = layers * (t * (proj + mlp) + attn) + t * head;
+        let kv_bytes = 2.0 * layers * kv_dim * (c + t) * 2.0;
+        (flops, kv_bytes)
+    }
+
+    /// Full-stage cost — mirrors `ref_stage_oracle`.
+    pub fn compute(batch: &BatchDesc) -> StageCost {
+        let g = batch.gpu;
+        let e = &batch.exec;
+        let tp = batch.tp as f64;
+        let pp = batch.pp as f64;
+        let m = batch.model;
+
+        let mut flops_total = 0.0;
+        let mut kv_total = 0.0;
+        for i in 0..batch.len() {
+            let (f, kv) = Self::request_cost(batch, i);
+            flops_total += f;
+            kv_total += kv;
+        }
+        let flops_stage = flops_total / pp;
+        let tokens = batch.total_new_tokens() as f64;
+        let layers_pp = m.num_layers as f64 / pp;
+        let h = m.hidden as f64;
+
+        let wbytes = m.weight_bytes() / (tp * pp);
+        let kv_bytes = kv_total / (tp * pp);
+
+        let t_comp = flops_stage / (tp * g.peak_flops * e.flops_eff);
+        let t_mem = (wbytes + kv_bytes) / (g.hbm_bw * e.mem_eff);
+
+        let link_bw = g.interconnect.bandwidth();
+        let link_lat = g.interconnect.latency();
+        let act_bytes = tokens * h * 2.0;
+        let ring = 2.0 * (tp - 1.0) / tp.max(1.0);
+        let t_tp = if batch.tp > 1 {
+            layers_pp * 2.0 * (ring * act_bytes / link_bw + link_lat)
+        } else {
+            0.0
+        };
+        let t_pp = if batch.pp > 1 {
+            act_bytes / link_bw + link_lat
+        } else {
+            0.0
+        };
+
+        let t_stage = t_comp.max(t_mem)
+            + t_tp
+            + t_pp
+            + e.t_overhead
+            + layers_pp * e.layer_overhead;
+
+        let mfu = flops_stage / (t_stage * tp * g.peak_flops);
+        let power_w = g.power(mfu);
+
+        StageCost {
+            t_stage_s: t_stage,
+            flops: flops_stage,
+            mfu,
+            power_w,
+        }
+    }
+}
+
+impl StageCostModel for NativeCost {
+    fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost {
+        Self::compute(batch)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::ExecParams;
+    use crate::config::{gpus, models};
+    use crate::util::proptest::{check, gens};
+
+    fn batch(tp: u32, pp: u32) -> BatchDesc {
+        BatchDesc::new(
+            models::model("llama3-8b").unwrap(),
+            gpus::gpu("a100-80g").unwrap(),
+            tp,
+            pp,
+            ExecParams::default(),
+        )
+    }
+
+    #[test]
+    fn empty_batch_costs_weight_read_plus_overhead() {
+        let b = batch(1, 1);
+        let c = NativeCost::compute(&b);
+        let g = b.gpu;
+        let expect = b.model.weight_bytes() / (g.hbm_bw * b.exec.mem_eff)
+            + b.exec.t_overhead
+            + 32.0 * b.exec.layer_overhead;
+        assert!((c.t_stage_s - expect).abs() / expect < 1e-9);
+        assert_eq!(c.flops, 0.0);
+        assert_eq!(c.mfu, 0.0);
+        assert_eq!(c.power_w, 100.0);
+    }
+
+    #[test]
+    fn decode_memory_bound_low_mfu() {
+        let mut b = batch(1, 1);
+        for _ in 0..8 {
+            b.push(1, 1024);
+        }
+        let c = NativeCost::compute(&b);
+        assert!(c.mfu < 0.05, "mfu {}", c.mfu);
+        assert!(c.power_w < 250.0);
+        // Memory-bound: latency ≈ weight-read time.
+        let wread = b.model.weight_bytes() / (b.gpu.hbm_bw * b.exec.mem_eff);
+        assert!(c.t_stage_s > wread);
+    }
+
+    #[test]
+    fn big_prefill_compute_bound_high_mfu() {
+        let mut b = batch(1, 1);
+        b.push(4096, 0);
+        let c = NativeCost::compute(&b);
+        assert!(c.mfu > 0.35, "mfu {}", c.mfu);
+        assert!(c.power_w > 350.0);
+    }
+
+    #[test]
+    fn mfu_never_exceeds_flops_eff() {
+        // The efficiency ceiling is the Trainy plateau (DESIGN.md §5).
+        for toks in [64u32, 256, 1024, 4096] {
+            let mut b = batch(1, 1);
+            b.push(toks, 0);
+            let c = NativeCost::compute(&b);
+            assert!(c.mfu <= b.exec.flops_eff + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tp_halves_compute_time_roughly() {
+        let mut b1 = batch(1, 1);
+        b1.push(4096, 0);
+        let mut b2 = batch(2, 1);
+        b2.push(4096, 0);
+        let c1 = NativeCost::compute(&b1);
+        let c2 = NativeCost::compute(&b2);
+        assert!(c2.t_stage_s < 0.7 * c1.t_stage_s);
+        assert!(c2.t_stage_s > 0.4 * c1.t_stage_s); // comm overhead > 0
+    }
+
+    #[test]
+    fn pp_stage_flops_split() {
+        let mut b1 = batch(1, 1);
+        b1.push(1024, 0);
+        let mut b2 = batch(1, 2);
+        b2.push(1024, 0);
+        let c1 = NativeCost::compute(&b1);
+        let c2 = NativeCost::compute(&b2);
+        assert!((c2.flops - c1.flops / 2.0).abs() / c1.flops < 1e-9);
+    }
+
+    #[test]
+    fn pcie_comm_slower_than_nvlink() {
+        let mk = |gpu: &str| {
+            let mut b = BatchDesc::new(
+                models::model("llama2-7b").unwrap(),
+                gpus::gpu(gpu).unwrap(),
+                2,
+                1,
+                ExecParams::default(),
+            );
+            b.push(2048, 0);
+            NativeCost::compute(&b)
+        };
+        // A40 is PCIe: same batch with TP=2 pays much more comm time
+        // relative to its compute (can't directly compare absolute
+        // times across GPUs, so compare comm fraction via the gap to
+        // an ideal no-comm run).
+        let a40 = mk("a40");
+        let a100 = mk("a100-80g");
+        assert!(a40.t_stage_s > a100.t_stage_s);
+    }
+
+    #[test]
+    fn property_physical_invariants() {
+        check(200, gens::u64_in(0, u64::MAX / 2), |&seed| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let tp = *rng.choose(&[1u32, 2, 4]);
+            let pp = *rng.choose(&[1u32, 2, 4]);
+            let mut b = batch(tp, pp);
+            let n = rng.int_range(0, 128);
+            for _ in 0..n {
+                if rng.f64() < 0.3 {
+                    b.push(rng.int_range(2, 4096) as u32, 0);
+                } else {
+                    b.push(1, rng.int_range(0, 8192) as u32);
+                }
+            }
+            let c = NativeCost::compute(&b);
+            if !(c.t_stage_s > 0.0) {
+                return Err(format!("nonpositive time {c:?}"));
+            }
+            if !(0.0..=1.0).contains(&c.mfu) {
+                return Err(format!("mfu out of range {c:?}"));
+            }
+            if c.power_w < 100.0 - 1e-9 || c.power_w > 400.0 + 1e-9 {
+                return Err(format!("power out of range {c:?}"));
+            }
+            Ok(())
+        });
+    }
+}

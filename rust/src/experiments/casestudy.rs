@@ -1,0 +1,293 @@
+//! §4.3 / Table 2 / Fig. 6 / Fig. 7 — the Vidur→Vessim integration
+//! case study: Llama-2-7B serving a 400k-request Zipf workload
+//! (QPS 20, P:D 20, NVLink pairwise) whose binned power profile is
+//! co-simulated against CAISO-North-style solar + carbon-intensity
+//! signals with a 600 W array and a 100 Wh battery.
+//!
+//! Paper headlines: 5.90 kWh total demand, 70.3% renewable share,
+//! 2.47 kgCO₂ gross, 69.2% offset by solar, battery ~0.8 full cycles /
+//! 47.2% average SoC / 64.8% idle, average CI 418.2 g/kWh.
+
+use super::common::{run_case, save};
+use crate::config::simconfig::{Arrival, CosimConfig, LengthDist, SimConfig};
+use crate::cosim::{CarbonAwareController, Environment};
+use crate::grid::{CarbonIntensityTrace, SolarModel};
+use crate::pipeline::{bin_stages, BinningBackend, LoadProfile};
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+/// The paper's integration workload (Table 1b), scaled by `fast`.
+///
+/// Deviation from Table 1b (documented in EXPERIMENTS.md): the paper
+/// runs 400k requests; our roofline execution model is ~2× slower per
+/// request than Vidur's learned predictor, which would stretch the
+/// workload past the single daylight window the paper's solar numbers
+/// imply (4.15 kWh generated ≈ one clear day of a 600 W array). We
+/// scale to 190k requests on a single-GPU replica so the workload
+/// spans the same ~14 h daylight window — preserving the quantities
+/// Table 2 reports (renewable share, offset, battery dynamics).
+pub fn workload_config(fast: bool) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.model = "llama2-7b".into();
+    cfg.tp = 1;
+    cfg.pp = 1;
+    cfg.num_requests = if fast { 2_000 } else { 190_000 };
+    cfg.arrival = Arrival::Poisson { qps: 20.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 1024,
+        max: 4096,
+    };
+    cfg.prefill_decode_ratio = Some(20.0);
+    cfg.seed = 0xCA5E;
+    cfg
+}
+
+pub struct CaseStudyOutput {
+    pub profile: LoadProfile,
+    pub summary: Table,
+    pub baseline_json: Value,
+    pub aware_json: Value,
+}
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    Ok(run_full(out_dir, fast)?.summary)
+}
+
+pub fn run_full(out_dir: &Path, fast: bool) -> Result<CaseStudyOutput> {
+    // 1. Vidur side: simulate the inference workload.
+    let cfg = workload_config(fast);
+    let r = run_case(&cfg)?;
+    let makespan = r.out.metrics.makespan_s;
+
+    // 2. Pipeline: Eq. 5 binning into the Vessim 1-minute resolution.
+    let cosim_cfg = CosimConfig::default();
+    let binned = bin_stages(
+        &cfg,
+        &r.out.stagelog,
+        makespan,
+        cosim_cfg.interval_s,
+        BinningBackend::Native,
+    )?;
+    let profile = LoadProfile::from_binned(&binned);
+
+    // 3. Environment signals over the workload window, offset so the
+    //    run starts at the configured morning hour.
+    let n = profile.len();
+    let start_s = cosim_cfg.start_hour * 3600.0;
+    let solar = SolarModel {
+        capacity_w: cosim_cfg.solar_capacity_w,
+        seed: cosim_cfg.seed,
+        ..SolarModel::default()
+    };
+    let ci_model = CarbonIntensityTrace {
+        mean: cosim_cfg.ci_mean,
+        seed: cosim_cfg.seed ^ 0xC1,
+        ..CarbonIntensityTrace::default()
+    };
+    let solar_sig = solar.trace(start_s, n);
+    let ci_sig = ci_model.trace(start_s, n);
+    let solar_w = solar_sig.sample_grid(start_s, n, cosim_cfg.interval_s);
+    let ci = ci_sig.sample_grid(start_s, n, cosim_cfg.interval_s);
+
+    // 4. Co-simulate: monitored baseline + carbon-aware variant.
+    let mut env = Environment::new(cosim_cfg.clone());
+    let base = env.run_native(&profile.power_w, &solar_w, &ci)?;
+    let mut aware_env = Environment::new(cosim_cfg.clone()).with_controller(
+        CarbonAwareController::new(cosim_cfg.ci_low, cosim_cfg.ci_high, 0.5),
+    );
+    let aware = aware_env.run_native(&profile.power_w, &solar_w, &ci)?;
+
+    // 5. Table-2-shaped summary.
+    let mut t = Table::new(&["metric", "baseline", "carbon_aware", "paper"]);
+    let row = |m: &str, b: String, a: String, p: &str| vec![m.to_string(), b, a, p.to_string()];
+    t.push_row(row(
+        "total_energy_kwh",
+        format!("{:.2}", base.total_energy_kwh),
+        format!("{:.2}", aware.total_energy_kwh),
+        "5.90",
+    ));
+    t.push_row(row(
+        "solar_generation_kwh",
+        format!("{:.2}", base.solar_generation_kwh),
+        format!("{:.2}", aware.solar_generation_kwh),
+        "4.15",
+    ));
+    t.push_row(row(
+        "grid_consumption_kwh",
+        format!("{:.2}", base.grid_consumption_kwh),
+        format!("{:.2}", aware.grid_consumption_kwh),
+        "1.81",
+    ));
+    t.push_row(row(
+        "renewable_share_pct",
+        format!("{:.1}", base.renewable_share * 100.0),
+        format!("{:.1}", aware.renewable_share * 100.0),
+        "70.3",
+    ));
+    t.push_row(row(
+        "grid_dependency_pct",
+        format!("{:.1}", base.grid_dependency * 100.0),
+        format!("{:.1}", aware.grid_dependency * 100.0),
+        "30.7",
+    ));
+    t.push_row(row(
+        "total_emissions_kg",
+        format!("{:.2}", base.total_emissions_kg),
+        format!("{:.2}", aware.total_emissions_kg),
+        "2.47",
+    ));
+    t.push_row(row(
+        "offset_by_solar_kg",
+        format!("{:.2}", base.offset_by_solar_kg),
+        format!("{:.2}", aware.offset_by_solar_kg),
+        "1.71",
+    ));
+    t.push_row(row(
+        "net_footprint_g",
+        format!("{:.0}", base.net_footprint_g),
+        format!("{:.0}", aware.net_footprint_g),
+        "759.2",
+    ));
+    t.push_row(row(
+        "carbon_offset_pct",
+        format!("{:.1}", base.carbon_offset_frac * 100.0),
+        format!("{:.1}", aware.carbon_offset_frac * 100.0),
+        "69.2",
+    ));
+    t.push_row(row(
+        "avg_ci_g_per_kwh",
+        format!("{:.1}", base.avg_ci),
+        format!("{:.1}", aware.avg_ci),
+        "418.2",
+    ));
+    t.push_row(row(
+        "hours_high_ci",
+        format!("{:.1}", base.hours_high_ci),
+        format!("{:.1}", aware.hours_high_ci),
+        "24.8",
+    ));
+    t.push_row(row(
+        "avg_soc_pct",
+        format!("{:.1}", base.avg_soc * 100.0),
+        format!("{:.1}", aware.avg_soc * 100.0),
+        "47.2",
+    ));
+    t.push_row(row(
+        "hours_below_50_soc",
+        format!("{:.1}", base.hours_below_50_soc),
+        format!("{:.1}", aware.hours_below_50_soc),
+        "15.7",
+    ));
+    t.push_row(row(
+        "hours_above_80_soc",
+        format!("{:.1}", base.hours_above_80_soc),
+        format!("{:.1}", aware.hours_above_80_soc),
+        "6.7",
+    ));
+    t.push_row(row(
+        "charging_pct",
+        format!("{:.1}", base.charging_frac * 100.0),
+        format!("{:.1}", aware.charging_frac * 100.0),
+        "21.2",
+    ));
+    t.push_row(row(
+        "discharging_pct",
+        format!("{:.1}", base.discharging_frac * 100.0),
+        format!("{:.1}", aware.discharging_frac * 100.0),
+        "14.0",
+    ));
+    t.push_row(row(
+        "idle_pct",
+        format!("{:.1}", base.idle_frac * 100.0),
+        format!("{:.1}", aware.idle_frac * 100.0),
+        "64.8",
+    ));
+    t.push_row(row(
+        "battery_full_cycles",
+        format!("{:.2}", base.battery_full_cycles),
+        format!("{:.2}", aware.battery_full_cycles),
+        "0.8",
+    ));
+
+    let mut meta = Value::obj();
+    meta.set("table", "table2")
+        .set("figures", "fig6, fig7")
+        .set("workload_makespan_s", makespan)
+        .set("profile_minutes", n as u64)
+        .set("sim_metrics", r.out.metrics.to_json())
+        .set("energy_report", r.energy.to_json());
+    save(out_dir, "casestudy", &t, meta)?;
+
+    // Fig. 6 data: time-resolved power flows.
+    let dir = out_dir.join("casestudy");
+    let mut fig6 = Table::new(&["t_s", "load_w", "solar_w", "grid_w", "battery_w"]);
+    for rec in &base.records {
+        fig6.push_row(vec![
+            format!("{:.0}", rec.t_s),
+            format!("{:.2}", rec.load_w),
+            format!("{:.2}", rec.solar_w),
+            format!("{:.2}", rec.grid_w),
+            format!("{:.2}", rec.battery_w),
+        ]);
+    }
+    fig6.save(dir.join("fig6_power_flows.csv"))?;
+    // Fig. 7 data: SoC + cumulative emissions + CI trace.
+    let mut fig7 = Table::new(&["t_s", "soc", "ci", "cum_net_g", "cum_offset_g"]);
+    let mut cum_net = 0.0;
+    let mut cum_gross = 0.0;
+    let dt_h = cosim_cfg.interval_s / 3600.0;
+    for rec in &base.records {
+        cum_net += rec.emissions_g;
+        cum_gross += rec.load_w * dt_h / 1000.0 * rec.ci;
+        fig7.push_row(vec![
+            format!("{:.0}", rec.t_s),
+            format!("{:.4}", rec.soc),
+            format!("{:.1}", rec.ci),
+            format!("{:.2}", cum_net),
+            format!("{:.2}", cum_gross - cum_net),
+        ]);
+    }
+    fig7.save(dir.join("fig7_battery_emissions.csv"))?;
+    profile.save(dir.join("load_profile.csv"))?;
+
+    Ok(CaseStudyOutput {
+        profile,
+        summary: t,
+        baseline_json: base.to_json(),
+        aware_json: aware.to_json(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::CostModelKind;
+
+    #[test]
+    fn small_case_study_end_to_end() {
+        let mut cfg = workload_config(true);
+        cfg.num_requests = 300;
+        cfg.cost_model = CostModelKind::Native;
+        let r = run_case(&cfg).unwrap();
+        let binned = bin_stages(
+            &cfg,
+            &r.out.stagelog,
+            r.out.metrics.makespan_s,
+            60.0,
+            BinningBackend::Native,
+        )
+        .unwrap();
+        let profile = LoadProfile::from_binned(&binned);
+        assert!(!profile.is_empty());
+        // Binned energy equals accounted energy (before PUE) within 1%.
+        let direct = r.energy.gpu_energy_kwh;
+        let binned_kwh = profile.total_energy_kwh();
+        assert!(
+            (binned_kwh - direct).abs() / direct < 0.01,
+            "binned {binned_kwh} vs direct {direct}"
+        );
+    }
+}

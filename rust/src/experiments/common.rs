@@ -1,0 +1,52 @@
+//! Shared experiment plumbing: run one simulation case and collect the
+//! (power, energy, MFU, latency) quantities the paper's figures plot.
+
+use crate::config::simconfig::SimConfig;
+use crate::energy::{EnergyAccountant, EnergyReport};
+use crate::sim::{self, SimOutput};
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+/// One simulated configuration's headline numbers.
+pub struct CaseResult {
+    pub out: SimOutput,
+    pub energy: EnergyReport,
+}
+
+impl CaseResult {
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy.avg_power_w
+    }
+    pub fn energy_kwh(&self) -> f64 {
+        self.energy.energy_kwh
+    }
+    pub fn mfu(&self) -> f64 {
+        self.out.metrics.weighted_mfu
+    }
+}
+
+/// Run one case with the paper's default accounting.
+pub fn run_case(cfg: &SimConfig) -> Result<CaseResult> {
+    let out = sim::run(cfg)?;
+    let acc = EnergyAccountant::paper_default(cfg)?;
+    let energy = acc.account(cfg, &out.stagelog, out.metrics.makespan_s);
+    Ok(CaseResult { out, energy })
+}
+
+/// Persist an experiment's table + metadata.
+pub fn save(
+    out_dir: &Path,
+    id: &str,
+    table: &Table,
+    meta: Value,
+) -> Result<()> {
+    let dir = out_dir.join(id);
+    std::fs::create_dir_all(&dir)?;
+    table.save(dir.join(format!("{id}.csv")))?;
+    std::fs::write(dir.join("meta.json"), meta.pretty())?;
+    // Also print the markdown form so terminal runs double as reports.
+    println!("\n### {id}\n\n{}", table.to_markdown());
+    Ok(())
+}

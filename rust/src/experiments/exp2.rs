@@ -1,0 +1,90 @@
+//! Experiment 2 (Fig. 3) — prefill:decode ratio vs power and energy
+//! across fixed request lengths. Paper findings: at fixed P:D, power
+//! and energy grow with request length; at fixed length, decode-heavy
+//! mixes (lower P:D) raise power and energy for long requests while
+//! short requests barely move.
+//!
+//! Note on axes: the paper's text says "increasing the P:D ratio
+//! (i.e., more decode-heavy)" — treating larger ratio values as more
+//! decode; we sweep the ratio r = prefill/decode from 50:1 to 1:50 and
+//! report both conventions in the CSV (`pd_ratio` = prefill/decode).
+
+use super::common::{run_case, save};
+use crate::config::simconfig::{LengthDist, SimConfig};
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+pub const RATIOS: &[f64] = &[50.0, 10.0, 2.0, 1.0, 0.5, 0.1, 0.02];
+pub const LENGTHS: &[u64] = &[128, 512, 1024, 2048, 4096];
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let mut table = Table::new(&[
+        "pd_ratio", "request_len", "avg_power_w", "energy_kwh", "weighted_mfu",
+        "makespan_s",
+    ]);
+    let ratios: &[f64] = if fast { &[50.0, 1.0, 0.02] } else { RATIOS };
+    let lengths: &[u64] = if fast { &[128, 2048] } else { LENGTHS };
+    for &ratio in ratios {
+        for &len in lengths {
+            let mut cfg = SimConfig::default();
+            cfg.lengths = LengthDist::Fixed { total: len };
+            cfg.prefill_decode_ratio = Some(ratio);
+            cfg.num_requests = if fast { 192 } else { 1024 };
+            cfg.seed = 0xE2;
+            let r = run_case(&cfg)?;
+            table.push_row(vec![
+                format!("{ratio}"),
+                len.to_string(),
+                format!("{:.1}", r.avg_power_w()),
+                format!("{:.4}", r.energy_kwh()),
+                format!("{:.4}", r.mfu()),
+                format!("{:.1}", r.out.metrics.makespan_s),
+            ]);
+        }
+    }
+    let mut meta = Value::obj();
+    meta.set("figure", "fig3").set(
+        "paper_claim",
+        "power/energy rise with request length; decode-heavy mixes cost more on long requests",
+    );
+    save(out_dir, "exp2", &table, meta)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::simconfig::{CostModelKind, LengthDist, SimConfig};
+    use crate::experiments::common::run_case;
+
+    fn case(len: u64, ratio: f64) -> (f64, f64) {
+        let mut cfg = SimConfig::default();
+        cfg.cost_model = CostModelKind::Native;
+        cfg.lengths = LengthDist::Fixed { total: len };
+        cfg.prefill_decode_ratio = Some(ratio);
+        cfg.num_requests = 128;
+        cfg.seed = 3;
+        let r = run_case(&cfg).unwrap();
+        (r.avg_power_w(), r.energy_kwh())
+    }
+
+    #[test]
+    fn longer_requests_cost_more_energy() {
+        let (_, e_short) = case(128, 4.0);
+        let (_, e_long) = case(2048, 4.0);
+        assert!(e_long > 3.0 * e_short, "short {e_short} long {e_long}");
+    }
+
+    #[test]
+    fn decode_heavy_long_requests_use_more_energy() {
+        // At fixed length, decode-heavy (1:10) costs more total energy
+        // than prefill-heavy (10:1): decode iterates per token.
+        let (_, e_prefill_heavy) = case(2048, 10.0);
+        let (_, e_decode_heavy) = case(2048, 0.1);
+        assert!(
+            e_decode_heavy > 1.2 * e_prefill_heavy,
+            "decode {e_decode_heavy} prefill {e_prefill_heavy}"
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Experiment 3 (Fig. 4) — batch-size cap vs power and energy. Paper
+//! findings: actual batch size grows sublinearly with the cap (high
+//! variance past 32); average power rises and plateaus above cap 64;
+//! total energy falls with diminishing returns past cap 16.
+
+use super::common::{run_case, save};
+use crate::config::simconfig::SimConfig;
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+pub const CAPS: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let mut table = Table::new(&[
+        "batch_cap", "actual_batch_mean", "actual_batch_std", "avg_power_w",
+        "energy_kwh", "makespan_s",
+    ]);
+    let caps: &[usize] = if fast { &[1, 8, 64, 128] } else { CAPS };
+    for &cap in caps {
+        let mut cfg = SimConfig::default();
+        cfg.batch_cap = cap;
+        cfg.num_requests = if fast { 192 } else { 1024 };
+        cfg.seed = 0xE3;
+        let r = run_case(&cfg)?;
+        table.push_row(vec![
+            cap.to_string(),
+            format!("{:.2}", r.out.stagelog.batch_summary.mean()),
+            format!("{:.2}", r.out.stagelog.batch_summary.std()),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.4}", r.energy_kwh()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+        ]);
+    }
+    let mut meta = Value::obj();
+    meta.set("figure", "fig4").set(
+        "paper_claim",
+        "actual batch sublinear in cap; power plateaus above 64; energy falls, diminishing past 16",
+    );
+    save(out_dir, "exp3", &table, meta)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::simconfig::{CostModelKind, SimConfig};
+    use crate::experiments::common::run_case;
+
+    fn case(cap: usize) -> (f64, f64, f64) {
+        let mut cfg = SimConfig::default();
+        cfg.cost_model = CostModelKind::Native;
+        cfg.batch_cap = cap;
+        cfg.num_requests = 256;
+        cfg.seed = 9;
+        let r = run_case(&cfg).unwrap();
+        (
+            r.out.stagelog.batch_summary.mean(),
+            r.avg_power_w(),
+            r.energy_kwh(),
+        )
+    }
+
+    #[test]
+    fn larger_cap_bigger_batches_less_energy() {
+        let (b1, _, e1) = case(1);
+        let (b32, _, e32) = case(32);
+        assert!(b32 > b1, "batch {b1} -> {b32}");
+        assert!(
+            e32 < e1,
+            "batching must save energy: cap1 {e1} kWh, cap32 {e32} kWh"
+        );
+    }
+
+    #[test]
+    fn actual_batch_sublinear_in_cap() {
+        let (b16, _, _) = case(16);
+        let (b128, _, _) = case(128);
+        // 8x the cap must yield far less than 8x the actual batch.
+        assert!(b128 < 6.0 * b16, "b16 {b16} b128 {b128}");
+    }
+}

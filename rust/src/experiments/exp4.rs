@@ -1,0 +1,70 @@
+//! Experiment 4 (Fig. 5) — query throughput (QPS) vs power and energy
+//! at a fixed workload of 2^14 requests. Paper findings: average power
+//! rises with QPS and saturates near 360 W beyond QPS ≈ 5; total
+//! energy falls with QPS and converges toward ~0.5 kWh beyond QPS ≈ 8.
+
+use super::common::{run_case, save};
+use crate::config::simconfig::{Arrival, SimConfig};
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+pub const QPS_GRID: &[f64] = &[0.1, 0.2, 0.5, 1.0, 2.0, 3.2, 5.0, 7.9, 12.6];
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let mut table = Table::new(&[
+        "qps", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
+    ]);
+    let n_requests: u64 = if fast { 512 } else { 1 << 14 };
+    let grid: &[f64] = if fast {
+        &[0.5, 2.0, 5.0, 12.6]
+    } else {
+        QPS_GRID
+    };
+    for &qps in grid {
+        let mut cfg = SimConfig::default();
+        cfg.arrival = Arrival::Poisson { qps };
+        cfg.num_requests = n_requests;
+        cfg.seed = 0xE4;
+        let r = run_case(&cfg)?;
+        table.push_row(vec![
+            format!("{qps}"),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.4}", r.energy_kwh()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+            format!("{:.4}", r.mfu()),
+        ]);
+    }
+    let mut meta = Value::obj();
+    meta.set("figure", "fig5").set(
+        "paper_claim",
+        "power saturates ~360 W past QPS 5; energy converges ~0.5 kWh past QPS 8 (2^14 requests)",
+    );
+    save(out_dir, "exp4", &table, meta)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::simconfig::{Arrival, CostModelKind, SimConfig};
+    use crate::experiments::common::run_case;
+
+    fn case(qps: f64) -> (f64, f64) {
+        let mut cfg = SimConfig::default();
+        cfg.cost_model = CostModelKind::Native;
+        cfg.arrival = Arrival::Poisson { qps };
+        cfg.num_requests = 256;
+        cfg.seed = 4;
+        let r = run_case(&cfg).unwrap();
+        (r.avg_power_w(), r.energy_kwh())
+    }
+
+    #[test]
+    fn power_rises_energy_falls_with_qps() {
+        let (p_lo, e_lo) = case(0.3);
+        let (p_hi, e_hi) = case(10.0);
+        assert!(p_hi > p_lo + 30.0, "power lo {p_lo} hi {p_hi}");
+        assert!(e_hi < 0.7 * e_lo, "energy lo {e_lo} hi {e_hi}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Experiment 5 (§4.2 text) — TP×PP parallelism grid for CodeLlama-34B
+//! on 4×A100 with NVLink. Paper findings: average GPU power 213–355 W,
+//! peaking at TP2/PP1 and dropping with higher parallelism; energy
+//! 0.16–0.56 kWh with the most efficient settings TP2/PP1 and TP1/PP2
+//! — runtime reduction matters more than power reduction.
+
+use super::common::{run_case, save};
+use crate::config::simconfig::SimConfig;
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+pub const GRID: &[(u32, u32)] = &[
+    (1, 1),
+    (1, 2),
+    (1, 4),
+    (2, 1),
+    (2, 2),
+    (2, 4),
+    (4, 1),
+    (4, 2),
+    (4, 4),
+];
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let mut table = Table::new(&[
+        "tp", "pp", "gpus", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
+    ]);
+    let grid: &[(u32, u32)] = if fast {
+        &[(1, 1), (2, 1), (1, 2), (2, 2)]
+    } else {
+        GRID
+    };
+    for &(tp, pp) in grid {
+        let mut cfg = SimConfig::default();
+        cfg.model = "codellama-34b".into();
+        cfg.tp = tp;
+        cfg.pp = pp;
+        cfg.num_requests = if fast { 128 } else { 1024 };
+        cfg.seed = 0xE5;
+        let r = run_case(&cfg)?;
+        table.push_row(vec![
+            tp.to_string(),
+            pp.to_string(),
+            (tp * pp).to_string(),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.4}", r.energy_kwh()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+            format!("{:.4}", r.mfu()),
+        ]);
+    }
+    let mut meta = Value::obj();
+    meta.set("experiment", "exp5").set(
+        "paper_claim",
+        "power peaks at TP2/PP1, drops with higher parallelism; best energy at TP2/PP1 & TP1/PP2",
+    );
+    save(out_dir, "exp5", &table, meta)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::simconfig::{CostModelKind, SimConfig};
+    use crate::experiments::common::run_case;
+
+    fn case(tp: u32, pp: u32) -> (f64, f64, f64) {
+        let mut cfg = SimConfig::default();
+        cfg.model = "codellama-34b".into();
+        cfg.cost_model = CostModelKind::Native;
+        cfg.tp = tp;
+        cfg.pp = pp;
+        cfg.num_requests = 96;
+        cfg.seed = 5;
+        let r = run_case(&cfg).unwrap();
+        (
+            r.avg_power_w(),
+            r.energy_kwh(),
+            r.out.metrics.makespan_s,
+        )
+    }
+
+    #[test]
+    fn tp2_faster_than_tp1() {
+        let (_, _, t1) = case(1, 1);
+        let (_, _, t2) = case(2, 1);
+        assert!(t2 < t1, "tp2 {t2} !< tp1 {t1}");
+    }
+
+    #[test]
+    fn more_gpus_does_not_mean_less_energy() {
+        // The paper's headline: TP4/PP4-style maximal parallelism is
+        // not the energy optimum.
+        let (_, e_small, _) = case(2, 1);
+        let (_, e_big, _) = case(2, 2);
+        assert!(
+            e_big > 0.8 * e_small,
+            "4 GPUs should not dominate 2: {e_big} vs {e_small}"
+        );
+    }
+
+    #[test]
+    fn per_gpu_power_drops_with_parallelism() {
+        let (p1, _, _) = case(2, 1);
+        let (p2, _, _) = case(2, 2);
+        assert!(p2 < p1, "per-GPU power {p2} !< {p1}");
+    }
+}

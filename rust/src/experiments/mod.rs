@@ -1,0 +1,50 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§4). Each experiment returns a [`crate::util::csv::Table`] with the
+//! same rows/series the paper reports and saves CSV + JSON under a
+//! results directory. See DESIGN.md §4 for the experiment index.
+
+pub mod common;
+pub mod fig1;
+pub mod exp1;
+pub mod exp2;
+pub mod exp3;
+pub mod exp4;
+pub mod exp5;
+pub mod casestudy;
+pub mod ablation;
+pub mod extensions;
+
+pub use common::{run_case, CaseResult};
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Run an experiment by id ("fig1", "exp1".."exp5", "casestudy",
+/// "ablation", or "all").
+pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(out_dir, fast).map(|_| ()),
+        "exp1" => exp1::run(out_dir, fast).map(|_| ()),
+        "exp2" => exp2::run(out_dir, fast).map(|_| ()),
+        "exp3" => exp3::run(out_dir, fast).map(|_| ()),
+        "exp4" => exp4::run(out_dir, fast).map(|_| ()),
+        "exp5" => exp5::run(out_dir, fast).map(|_| ()),
+        "casestudy" => casestudy::run(out_dir, fast).map(|_| ()),
+        "ablation" => ablation::run(out_dir, fast).map(|_| ()),
+        "sched" => extensions::run_sched(out_dir, fast).map(|_| ()),
+        "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),
+        "all" => {
+            for id in [
+                "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy",
+                "ablation", "sched", "gpu",
+            ] {
+                eprintln!("=== experiment {id} ===");
+                run_by_id(id, out_dir, fast)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, all"
+        ),
+    }
+}

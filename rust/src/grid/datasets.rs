@@ -1,0 +1,168 @@
+//! Importers for the real environmental datasets the paper uses, so
+//! synthetic substitutes can be swapped out when the data is available:
+//!
+//! * **WattTime** marginal-operating-emissions-rate CSV
+//!   (`timestamp,MOER` — lbs CO₂/MWh, converted to gCO₂/kWh);
+//! * **Solcast** irradiance CSV (`period_end,ghi` — W/m², scaled by a
+//!   panel area × efficiency factor to installed watts).
+//!
+//! Timestamps are ISO-8601; they are re-based to seconds from the
+//! first sample (the co-simulator runs on relative time).
+
+use crate::grid::signal::HistoricalSignal;
+use crate::util::csv::Table;
+use crate::util::timeseries::{Interp, TimeSeries};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// lbs/MWh → g/kWh.
+const LBS_PER_MWH_TO_G_PER_KWH: f64 = 453.592 / 1000.0;
+
+/// Parse an ISO-8601 `YYYY-MM-DDTHH:MM:SS[Z]` timestamp into epoch-ish
+/// seconds (no leap-second handling; differences only).
+pub fn parse_iso8601_s(s: &str) -> Result<f64> {
+    let s = s.trim().trim_end_matches('Z');
+    let (date, time) = s
+        .split_once('T')
+        .or_else(|| s.split_once(' '))
+        .with_context(|| format!("bad timestamp '{s}'"))?;
+    let d: Vec<u32> = date
+        .split('-')
+        .map(|p| p.parse().context("bad date"))
+        .collect::<Result<_>>()?;
+    let t: Vec<f64> = time
+        .split(':')
+        .map(|p| p.parse().context("bad time"))
+        .collect::<Result<_>>()?;
+    if d.len() != 3 || t.len() < 2 {
+        bail!("bad timestamp '{s}'");
+    }
+    // Days since a fixed epoch (civil-from-days, Howard Hinnant's algo).
+    let (y, m, day) = (d[0] as i64, d[1] as i64, d[2] as i64);
+    let y_adj = if m <= 2 { y - 1 } else { y };
+    let era = y_adj.div_euclid(400);
+    let yoe = y_adj - era * 400;
+    let doy = (153 * (if m > 2 { m - 3 } else { m + 9 }) + 2) / 5 + day - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    let days = era * 146097 + doe - 719468;
+    let secs = t[0] * 3600.0 + t[1] * 60.0 + t.get(2).copied().unwrap_or(0.0);
+    Ok(days as f64 * 86400.0 + secs)
+}
+
+/// Load a WattTime-style MOER CSV into a carbon-intensity signal
+/// (gCO₂/kWh, cubic interpolation as the paper resamples).
+pub fn load_watttime(path: impl AsRef<Path>) -> Result<HistoricalSignal> {
+    let t = Table::load(&path)?;
+    let ts_col = t
+        .col_index("timestamp")
+        .or_else(|_| t.col_index("point_time"))?;
+    let moer_col = t.col_index("MOER").or_else(|_| t.col_index("moer"))?;
+    let mut times = Vec::with_capacity(t.rows.len());
+    let mut vals = Vec::with_capacity(t.rows.len());
+    for r in &t.rows {
+        times.push(parse_iso8601_s(&r[ts_col])?);
+        vals.push(r[moer_col].parse::<f64>()? * LBS_PER_MWH_TO_G_PER_KWH);
+    }
+    rebase(&mut times)?;
+    Ok(HistoricalSignal::new(
+        "watttime_ci",
+        TimeSeries::new(times, vals),
+        Interp::Cubic,
+    ))
+}
+
+/// Load a Solcast GHI CSV into a solar-power signal. `system_factor`
+/// converts W/m² to installed watts (panel area × efficiency ×
+/// performance ratio); e.g. a 600 W array ≈ factor 0.6 at
+/// 1000 W/m² standard irradiance.
+pub fn load_solcast(path: impl AsRef<Path>, system_factor: f64) -> Result<HistoricalSignal> {
+    let t = Table::load(&path)?;
+    let ts_col = t
+        .col_index("period_end")
+        .or_else(|_| t.col_index("timestamp"))?;
+    let ghi_col = t.col_index("ghi").or_else(|_| t.col_index("GHI"))?;
+    let mut times = Vec::with_capacity(t.rows.len());
+    let mut vals = Vec::with_capacity(t.rows.len());
+    for r in &t.rows {
+        times.push(parse_iso8601_s(&r[ts_col])?);
+        vals.push((r[ghi_col].parse::<f64>()? * system_factor).max(0.0));
+    }
+    rebase(&mut times)?;
+    Ok(HistoricalSignal::new(
+        "solcast_solar",
+        TimeSeries::new(times, vals),
+        Interp::Cubic,
+    ))
+}
+
+fn rebase(times: &mut [f64]) -> Result<()> {
+    if times.is_empty() {
+        bail!("empty dataset");
+    }
+    let t0 = times[0];
+    for t in times.iter_mut() {
+        *t -= t0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iso8601_differences() {
+        let a = parse_iso8601_s("2023-06-01T00:00:00Z").unwrap();
+        let b = parse_iso8601_s("2023-06-01T01:30:00Z").unwrap();
+        assert_eq!(b - a, 5400.0);
+        let c = parse_iso8601_s("2023-06-02T00:00:00").unwrap();
+        assert_eq!(c - a, 86400.0);
+        // Month boundary.
+        let d = parse_iso8601_s("2023-07-01T00:00:00").unwrap();
+        assert_eq!(d - a, 30.0 * 86400.0);
+    }
+
+    #[test]
+    fn watttime_roundtrip() {
+        let dir = std::env::temp_dir().join("vidur_energy_wt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("moer.csv");
+        std::fs::write(
+            &p,
+            "timestamp,MOER\n2023-06-01T00:00:00Z,900\n2023-06-01T00:05:00Z,1100\n",
+        )
+        .unwrap();
+        let sig = load_watttime(&p).unwrap();
+        // 900 lbs/MWh ≈ 408.2 g/kWh.
+        assert!((sig.at(0.0) - 408.23).abs() < 0.1, "{}", sig.at(0.0));
+        assert!(sig.at(300.0) > sig.at(0.0));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn solcast_scaling_and_clamp() {
+        let dir = std::env::temp_dir().join("vidur_energy_sc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ghi.csv");
+        std::fs::write(
+            &p,
+            "period_end,ghi\n2023-06-01T10:00:00Z,800\n2023-06-01T10:30:00Z,1000\n",
+        )
+        .unwrap();
+        let sig = load_solcast(&p, 0.6).unwrap();
+        assert_eq!(sig.at(0.0), 480.0);
+        assert_eq!(sig.at(1800.0), 600.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_columns_error() {
+        let dir = std::env::temp_dir().join("vidur_energy_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "a,b\n1,2\n").unwrap();
+        assert!(load_watttime(&p).is_err());
+        assert!(load_solcast(&p, 1.0).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Grid signals: historical/synthetic solar irradiance and carbon
+//! intensity (the paper's Solcast + WattTime substitutes).
+
+pub mod signal;
+pub mod solar;
+pub mod carbon;
+pub mod datasets;
+
+pub use carbon::CarbonIntensityTrace;
+pub use signal::HistoricalSignal;
+pub use solar::SolarModel;

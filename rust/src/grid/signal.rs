@@ -1,0 +1,77 @@
+//! Vessim-style `HistoricalSignal`: a time-stamped trace with
+//! configurable interpolation, loadable from CSV (for real Solcast /
+//! WattTime data) or built from synthetic models.
+
+use crate::util::csv::Table;
+use crate::util::timeseries::{Interp, TimeSeries};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A named signal over simulation time.
+#[derive(Debug, Clone)]
+pub struct HistoricalSignal {
+    pub name: String,
+    series: TimeSeries,
+    interp: Interp,
+}
+
+impl HistoricalSignal {
+    pub fn new(name: &str, series: TimeSeries, interp: Interp) -> Self {
+        HistoricalSignal {
+            name: name.to_string(),
+            series,
+            interp,
+        }
+    }
+
+    /// Load from a 2-column CSV (`t_s,value`). The paper resamples
+    /// environmental datasets with cubic interpolation; pass
+    /// `Interp::Cubic` to mirror that.
+    pub fn from_csv(name: &str, path: impl AsRef<Path>, interp: Interp) -> Result<Self> {
+        let t = Table::load(&path)?;
+        let ts = t.f64_col("t_s").context("signal csv needs 't_s'")?;
+        let vs = t.f64_col("value").context("signal csv needs 'value'")?;
+        Ok(Self::new(name, TimeSeries::new(ts, vs), interp))
+    }
+
+    pub fn at(&self, t_s: f64) -> f64 {
+        self.series.at(t_s, self.interp)
+    }
+
+    /// Sample onto a fixed grid (the co-simulation step).
+    pub fn sample_grid(&self, start_s: f64, n: usize, dt_s: f64) -> Vec<f64> {
+        (0..n).map(|i| self.at(start_s + i as f64 * dt_s)).collect()
+    }
+
+    pub fn series(&self) -> &TimeSeries {
+        &self.series
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(&["t_s", "value"]);
+        for i in 0..10 {
+            t.push(&[(i * 60) as f64, (i as f64) * 1.5]);
+        }
+        let dir = std::env::temp_dir().join("vidur_energy_signal");
+        let p = dir.join("sig.csv");
+        t.save(&p).unwrap();
+        let s = HistoricalSignal::from_csv("test", &p, Interp::Linear).unwrap();
+        assert_eq!(s.at(60.0), 1.5);
+        assert!((s.at(90.0) - 2.25).abs() < 1e-12);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn grid_sampling() {
+        let ts = TimeSeries::new(vec![0.0, 100.0], vec![0.0, 100.0]);
+        let s = HistoricalSignal::new("ramp", ts, Interp::Linear);
+        let g = s.sample_grid(0.0, 5, 25.0);
+        assert_eq!(g, vec![0.0, 25.0, 50.0, 75.0, 100.0]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Synthetic solar irradiance (Solcast substitute, DESIGN.md §5).
+//!
+//! Clear-sky diurnal model: power follows the sine of solar elevation
+//! between sunrise and sunset, scaled by installed capacity, with
+//! day-level weather attenuation and minute-level cloud noise — enough
+//! structure to reproduce the paper's midday-peaking generation that
+//! partially offsets the workload (Fig. 6).
+
+use crate::grid::signal::HistoricalSignal;
+use crate::util::rng::Rng;
+use crate::util::timeseries::{Interp, TimeSeries};
+
+/// Parameterized diurnal solar generator.
+#[derive(Debug, Clone)]
+pub struct SolarModel {
+    /// Installed capacity, W (paper Table 1b: 600 W).
+    pub capacity_w: f64,
+    /// Sunrise hour (local sim time).
+    pub sunrise_h: f64,
+    /// Sunset hour.
+    pub sunset_h: f64,
+    /// Day-level clear-sky fraction in [0,1] (weather).
+    pub clearness: f64,
+    /// Std-dev of minute-level multiplicative cloud noise.
+    pub noise_std: f64,
+    pub seed: u64,
+}
+
+impl Default for SolarModel {
+    fn default() -> Self {
+        SolarModel {
+            capacity_w: 600.0,
+            sunrise_h: 6.0,
+            sunset_h: 20.0, // CAISO summer (the paper applies Jun–Jul traces)
+            clearness: 0.85,
+            noise_std: 0.08,
+            seed: 0x501AB,
+        }
+    }
+}
+
+impl SolarModel {
+    /// Deterministic clear-sky power at an absolute sim time (seconds).
+    pub fn clear_sky_w(&self, t_s: f64) -> f64 {
+        let hour = (t_s / 3600.0).rem_euclid(24.0);
+        if hour < self.sunrise_h || hour > self.sunset_h {
+            return 0.0;
+        }
+        let daylight = self.sunset_h - self.sunrise_h;
+        let x = (hour - self.sunrise_h) / daylight; // 0..1
+        let elevation = (std::f64::consts::PI * x).sin();
+        self.capacity_w * self.clearness * elevation
+    }
+
+    /// Generate a 1-minute-resolution trace of `n_minutes` starting at
+    /// `start_s`, with stochastic cloud noise.
+    pub fn trace(&self, start_s: f64, n_minutes: usize) -> HistoricalSignal {
+        let mut rng = Rng::new(self.seed);
+        let mut t = Vec::with_capacity(n_minutes);
+        let mut v = Vec::with_capacity(n_minutes);
+        // Slow cloud bank factor (random walk) + fast noise.
+        let mut cloud = 1.0f64;
+        for i in 0..n_minutes {
+            let ts = start_s + i as f64 * 60.0;
+            cloud = (cloud + rng.normal(0.0, 0.02)).clamp(0.55, 1.0);
+            let fast = (1.0 + rng.normal(0.0, self.noise_std)).clamp(0.0, 1.3);
+            let p = (self.clear_sky_w(ts) * cloud * fast).max(0.0);
+            t.push(ts);
+            v.push(p.min(self.capacity_w));
+        }
+        HistoricalSignal::new("solar", TimeSeries::new(t, v), Interp::Cubic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn night_is_dark() {
+        let m = SolarModel::default();
+        assert_eq!(m.clear_sky_w(0.0), 0.0); // midnight
+        assert_eq!(m.clear_sky_w(3.0 * 3600.0), 0.0);
+        assert_eq!(m.clear_sky_w(22.0 * 3600.0), 0.0);
+    }
+
+    #[test]
+    fn midday_peaks_near_capacity() {
+        let m = SolarModel::default();
+        let noon = m.clear_sky_w(13.0 * 3600.0);
+        assert!(noon > 0.8 * m.capacity_w * m.clearness, "noon {noon}");
+        // Peak of the day is the maximum.
+        let mut max = 0.0f64;
+        for h in 0..24 {
+            max = max.max(m.clear_sky_w(h as f64 * 3600.0));
+        }
+        assert!(noon >= 0.95 * max);
+    }
+
+    #[test]
+    fn second_day_repeats_diurnally() {
+        let m = SolarModel::default();
+        let a = m.clear_sky_w(10.0 * 3600.0);
+        let b = m.clear_sky_w((24.0 + 10.0) * 3600.0);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_is_bounded_and_deterministic() {
+        let m = SolarModel::default();
+        let tr1 = m.trace(0.0, 2880); // two days
+        let tr2 = m.trace(0.0, 2880);
+        for (i, t) in tr1.series().times().iter().enumerate() {
+            let v1 = tr1.series().values()[i];
+            let v2 = tr2.series().values()[i];
+            assert_eq!(v1, v2, "nondeterministic at {t}");
+            assert!((0.0..=600.0).contains(&v1));
+        }
+        // Daily energy is positive and plausible (several kWh-minutes).
+        let day_wh: f64 = tr1.series().values()[..1440].iter().sum::<f64>() / 60.0;
+        assert!(day_wh > 2000.0 && day_wh < 6000.0, "day {day_wh} Wh");
+    }
+}

@@ -1,0 +1,46 @@
+//! # vidur-energy
+//!
+//! A Rust + JAX + Pallas reproduction of *"Quantifying the Energy
+//! Consumption and Carbon Emissions of LLM Inference via Simulations"*
+//! (Özcan et al., CS.DC 2025).
+//!
+//! The crate implements, from scratch, both systems the paper couples:
+//!
+//! * a **Vidur-like high-fidelity LLM inference simulator** — request
+//!   workloads, vLLM-style continuous batching, KV-cache management,
+//!   TP/PP cluster topologies, and a roofline execution model whose
+//!   per-batch-stage hot path is evaluated through an AOT-compiled
+//!   JAX/Pallas oracle loaded via PJRT ([`runtime`]);
+//! * a **Vessim-like grid co-simulator** — solar/carbon-intensity
+//!   signals, a rate- and SoC-limited battery, microgrid power balance,
+//!   and carbon-aware controllers ([`cosim`]);
+//!
+//! plus the paper's contribution proper: the MFU→power GPU model
+//! ([`power`]), stage-level energy/carbon accounting ([`energy`]), and
+//! the Eq. 5 signal pipeline bridging the two simulators ([`pipeline`]).
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! [`experiments`] for regenerators of every table and figure in the
+//! paper's evaluation.
+
+pub mod util;
+pub mod config;
+pub mod workload;
+pub mod cluster;
+pub mod scheduler;
+pub mod exec;
+pub mod power;
+pub mod energy;
+pub mod telemetry;
+pub mod sim;
+pub mod grid;
+pub mod battery;
+pub mod cosim;
+pub mod pipeline;
+pub mod report;
+pub mod experiments;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,10 @@
+//! `repro` — the L3 coordinator binary. All logic lives in the
+//! library; this is only the process entry point.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Err(e) = vidur_energy::coordinator::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

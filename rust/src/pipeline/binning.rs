@@ -1,0 +1,231 @@
+//! Eq. 5: fold variable-duration batch-stage power samples into
+//! fixed-width bins,
+//!
+//!   P̄_b = Σᵢ Pᵢ·Δtᵢ / Σᵢ Δtᵢ   over samples i in bin b,
+//!
+//! then fill the time not covered by any stage with idle power so the
+//! resulting load profile is physically complete (GPUs draw `p_idle`
+//! between stages).
+//!
+//! Backends: native rust accumulation, or the AOT binning kernel
+//! (`artifacts/bin_power.hlo.txt`) executed in (4096-sample, 512-bin)
+//! windows via PJRT — parity-tested against native.
+
+use crate::config::simconfig::SimConfig;
+use crate::runtime::{artifacts, pjrt::cached_executable};
+use crate::telemetry::StageLog;
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinningBackend {
+    Native,
+    Hlo,
+}
+
+/// Binned whole-cluster power profile.
+#[derive(Debug, Clone)]
+pub struct BinnedProfile {
+    /// Bin width, seconds.
+    pub interval_s: f64,
+    /// Average cluster power per bin, W.
+    pub power_w: Vec<f64>,
+    /// Stage-covered seconds per bin (diagnostics).
+    pub covered_s: Vec<f64>,
+}
+
+impl BinnedProfile {
+    pub fn total_energy_kwh(&self) -> f64 {
+        self.power_w.iter().sum::<f64>() * self.interval_s / 3.6e6
+    }
+    pub fn len(&self) -> usize {
+        self.power_w.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.power_w.is_empty()
+    }
+}
+
+/// Bin a stage log into `interval_s` windows. Samples are assigned to
+/// the bin containing their start timestamp (the paper's pipeline
+/// timestamps each batch stage with Vidur's internal clock).
+pub fn bin_stages(
+    cfg: &SimConfig,
+    log: &StageLog,
+    makespan_s: f64,
+    interval_s: f64,
+    backend: BinningBackend,
+) -> Result<BinnedProfile> {
+    anyhow::ensure!(interval_s > 0.0, "interval must be positive");
+    let n_bins = ((makespan_s / interval_s).ceil() as usize).max(1);
+    let gpu = cfg.gpu_spec()?;
+    let p_idle = gpu.p_idle;
+    let g_total = cfg.total_gpus() as f64;
+    let gpus_per_replica = cfg.gpus_per_replica() as f64;
+
+    // Per-sample (bin, replica-power, dt, gpu-seconds).
+    let (energy, covered) = match backend {
+        BinningBackend::Native => {
+            let mut energy = vec![0.0f64; n_bins];
+            let mut covered = vec![0.0f64; n_bins];
+            for r in &log.records {
+                let b = ((r.start_s / interval_s) as usize).min(n_bins - 1);
+                energy[b] += r.replica_power_w(p_idle) * r.dt_s;
+                covered[b] += r.dt_s;
+            }
+            (energy, covered)
+        }
+        BinningBackend::Hlo => bin_hlo(log, p_idle, interval_s, n_bins)?,
+    };
+
+    // Idle fill: gpu-seconds not covered by stages draw idle power.
+    // The final bin only exists up to the makespan, not its full width.
+    let mut power_w = Vec::with_capacity(n_bins);
+    for b in 0..n_bins {
+        let bin_span = (makespan_s - b as f64 * interval_s).clamp(0.0, interval_s);
+        let covered_gpu_s = covered[b] * gpus_per_replica;
+        let idle_gpu_s = (g_total * bin_span - covered_gpu_s).max(0.0);
+        let joules = energy[b] + idle_gpu_s * p_idle;
+        power_w.push(joules / interval_s);
+    }
+    Ok(BinnedProfile {
+        interval_s,
+        power_w,
+        covered_s: covered,
+    })
+}
+
+/// HLO-kernel accumulation in (N_SAMPLES, N_BINS) windows.
+fn bin_hlo(
+    log: &StageLog,
+    p_idle: f64,
+    interval_s: f64,
+    n_bins: usize,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let exe = cached_executable("bin_power")?;
+    let n_chunk = artifacts::N_SAMPLES;
+    let b_chunk = artifacts::N_BINS;
+
+    let mut energy = vec![0.0f64; n_bins];
+    let mut covered = vec![0.0f64; n_bins];
+
+    // Sort sample indices by bin so each kernel window spans < 512 bins.
+    let mut order: Vec<usize> = (0..log.records.len()).collect();
+    order.sort_by_key(|&i| (log.records[i].start_s / interval_s) as usize);
+
+    let mut i = 0usize;
+    let mut p_buf = vec![0f32; n_chunk];
+    let mut dt_buf = vec![0f32; n_chunk];
+    let mut idx_buf = vec![0f32; n_chunk];
+    while i < order.len() {
+        let base_bin = (log.records[order[i]].start_s / interval_s) as usize;
+        let mut n = 0usize;
+        while n < n_chunk && i + n < order.len() {
+            let r = &log.records[order[i + n]];
+            let b = ((r.start_s / interval_s) as usize).min(n_bins - 1);
+            if b >= base_bin + b_chunk {
+                break; // next window
+            }
+            p_buf[n] = r.replica_power_w(p_idle) as f32;
+            dt_buf[n] = r.dt_s as f32;
+            idx_buf[n] = (b - base_bin) as f32;
+            n += 1;
+        }
+        // Pad the tail with zero-duration samples in bin 0.
+        for k in n..n_chunk {
+            p_buf[k] = 0.0;
+            dt_buf[k] = 0.0;
+            idx_buf[k] = 0.0;
+        }
+        let out = exe.call_f32(&[&p_buf, &dt_buf, &idx_buf])?;
+        anyhow::ensure!(out.len() == 2, "bin kernel returned {} outputs", out.len());
+        for (k, (&e, &w)) in out[0].iter().zip(out[1].iter()).enumerate() {
+            let b = base_bin + k;
+            if b < n_bins {
+                energy[b] += e as f64;
+                covered[b] += w as f64;
+            }
+        }
+        i += n;
+    }
+    Ok((energy, covered))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::replica::StageKind;
+    use crate::telemetry::StageRecord;
+
+    fn log_with(stages: &[(f64, f64, f64)]) -> StageLog {
+        // (start, dt, power)
+        let mut log = StageLog::new();
+        for &(start, dt, p) in stages {
+            log.push(StageRecord {
+                replica: 0,
+                pp_stage: 0,
+                start_s: start,
+                dt_s: dt,
+                batch_size: 1,
+                new_tokens: 1,
+                mfu: 0.1,
+                power_w: p,
+                active_gpus: 1,
+                idle_gpus: 0,
+                flops: 1.0,
+                kind: StageKind::Decode,
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn idle_only_bins_at_idle_power() {
+        let cfg = SimConfig::default();
+        let log = StageLog::new();
+        let prof = bin_stages(&cfg, &log, 120.0, 60.0, BinningBackend::Native).unwrap();
+        assert_eq!(prof.len(), 2);
+        for p in &prof.power_w {
+            assert!((p - 100.0).abs() < 1e-9); // 1 GPU idle
+        }
+    }
+
+    #[test]
+    fn eq5_weighted_average() {
+        let cfg = SimConfig::default();
+        // Bin 0: 30 s at 400 W + 30 s uncovered at idle 100 W -> 250 W.
+        let log = log_with(&[(0.0, 30.0, 400.0)]);
+        let prof = bin_stages(&cfg, &log, 60.0, 60.0, BinningBackend::Native).unwrap();
+        assert!((prof.power_w[0] - 250.0).abs() < 1e-9, "{}", prof.power_w[0]);
+    }
+
+    #[test]
+    fn energy_conserved_across_binning() {
+        let cfg = SimConfig::default();
+        let stages: Vec<(f64, f64, f64)> = (0..100)
+            .map(|i| (i as f64 * 0.7, 0.5, 150.0 + (i % 7) as f64 * 30.0))
+            .collect();
+        let log = log_with(&stages);
+        let makespan = 80.0;
+        let prof = bin_stages(&cfg, &log, makespan, 10.0, BinningBackend::Native).unwrap();
+        // Total = stage energy + idle fill.
+        let stage_j: f64 = stages.iter().map(|&(_, dt, p)| dt * p).sum();
+        let covered: f64 = stages.iter().map(|&(_, dt, _)| dt).sum();
+        let idle_j = (makespan - covered) * 100.0;
+        let total_j: f64 = prof.power_w.iter().sum::<f64>() * 10.0;
+        assert!(
+            (total_j - (stage_j + idle_j)).abs() / total_j < 1e-9,
+            "binned {total_j} vs direct {}",
+            stage_j + idle_j
+        );
+    }
+
+    #[test]
+    fn multi_gpu_idle_fill() {
+        let mut cfg = SimConfig::default();
+        cfg.tp = 2;
+        cfg.pp = 2; // 4 GPUs
+        let log = StageLog::new();
+        let prof = bin_stages(&cfg, &log, 60.0, 60.0, BinningBackend::Native).unwrap();
+        assert!((prof.power_w[0] - 400.0).abs() < 1e-9); // 4 × idle
+    }
+}

@@ -1,0 +1,9 @@
+//! The Vidur→Vessim data pipeline (paper §3.2): timestamped batch-stage
+//! power samples → Eq. 5 duration-weighted fixed-resolution bins →
+//! Vessim-format load profile CSV.
+
+pub mod binning;
+pub mod profile;
+
+pub use binning::{bin_stages, BinnedProfile, BinningBackend};
+pub use profile::LoadProfile;

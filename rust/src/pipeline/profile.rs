@@ -1,0 +1,122 @@
+//! Load-profile container: the CSV interchange between the inference
+//! simulator and the co-simulation environment (the paper's §3.2
+//! "Export" step — Vessim load-profile format).
+
+use crate::pipeline::binning::BinnedProfile;
+use crate::util::csv::Table;
+use anyhow::Result;
+use std::path::Path;
+
+/// A fixed-resolution cluster power profile.
+#[derive(Debug, Clone)]
+pub struct LoadProfile {
+    pub interval_s: f64,
+    pub power_w: Vec<f64>,
+}
+
+impl LoadProfile {
+    pub fn from_binned(b: &BinnedProfile) -> Self {
+        LoadProfile {
+            interval_s: b.interval_s,
+            power_w: b.power_w.clone(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.power_w.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.power_w.is_empty()
+    }
+
+    pub fn total_energy_kwh(&self) -> f64 {
+        self.power_w.iter().sum::<f64>() * self.interval_s / 3.6e6
+    }
+
+    pub fn mean_power_w(&self) -> f64 {
+        if self.power_w.is_empty() {
+            0.0
+        } else {
+            self.power_w.iter().sum::<f64>() / self.power_w.len() as f64
+        }
+    }
+
+    /// Repeat the profile until it spans at least `n` bins (the case
+    /// study extends a shorter workload across a multi-day grid window).
+    pub fn tile_to(&self, n: usize) -> LoadProfile {
+        assert!(!self.power_w.is_empty());
+        let mut power_w = Vec::with_capacity(n);
+        while power_w.len() < n {
+            let take = (n - power_w.len()).min(self.power_w.len());
+            power_w.extend_from_slice(&self.power_w[..take]);
+        }
+        LoadProfile {
+            interval_s: self.interval_s,
+            power_w,
+        }
+    }
+
+    /// Save in Vessim load-profile format (`t_s,value`).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut t = Table::new(&["t_s", "value"]);
+        for (i, p) in self.power_w.iter().enumerate() {
+            t.push_row(vec![
+                format!("{:.1}", i as f64 * self.interval_s),
+                format!("{p:.4}"),
+            ]);
+        }
+        t.save(path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<LoadProfile> {
+        let t = Table::load(path)?;
+        let ts = t.f64_col("t_s")?;
+        let vs = t.f64_col("value")?;
+        let interval_s = if ts.len() >= 2 { ts[1] - ts[0] } else { 60.0 };
+        Ok(LoadProfile {
+            interval_s,
+            power_w: vs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = LoadProfile {
+            interval_s: 60.0,
+            power_w: vec![100.0, 250.5, 400.0],
+        };
+        let dir = std::env::temp_dir().join("vidur_energy_profile");
+        let path = dir.join("load.csv");
+        p.save(&path).unwrap();
+        let back = LoadProfile::load(&path).unwrap();
+        assert_eq!(back.interval_s, 60.0);
+        assert_eq!(back.power_w.len(), 3);
+        assert!((back.power_w[1] - 250.5).abs() < 1e-9);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn energy_and_mean() {
+        let p = LoadProfile {
+            interval_s: 3600.0,
+            power_w: vec![1000.0, 2000.0],
+        };
+        assert!((p.total_energy_kwh() - 3.0).abs() < 1e-12);
+        assert_eq!(p.mean_power_w(), 1500.0);
+    }
+
+    #[test]
+    fn tiling_repeats() {
+        let p = LoadProfile {
+            interval_s: 60.0,
+            power_w: vec![1.0, 2.0, 3.0],
+        };
+        let t = p.tile_to(7);
+        assert_eq!(t.power_w, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 1.0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! GPU power modeling — the paper's Eq. 1 plus the baseline estimators
+//! used for comparison (§2's motivation: utilization-based proxies
+//! overestimate decode power; LLMCarbon-style static models miss
+//! workload dynamics).
+
+pub mod model;
+
+pub use model::{PowerModel, PowerParams};

@@ -1,0 +1,136 @@
+//! The Eq. 1 MFU→power law with swappable parameters (for the γ /
+//! mfu_sat sensitivity ablation) and two baseline estimators:
+//!
+//! * `NvmlProxy` — power from kernel-occupancy-style utilization,
+//!   which stays near 100% whenever any kernel is resident: models the
+//!   §2 claim that NVML-style utilization cannot distinguish
+//!   memory-stalled decode from saturated compute.
+//! * `StaticTdp` — LLMCarbon-style constant draw at a fixed fraction
+//!   of TDP regardless of workload.
+
+use crate::config::gpus::GpuSpec;
+
+/// Eq. 1 parameters, detached from the GPU registry so ablations can
+/// sweep them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerParams {
+    pub p_idle: f64,
+    pub p_max: f64,
+    pub mfu_sat: f64,
+    pub gamma: f64,
+}
+
+impl PowerParams {
+    pub fn from_gpu(g: &GpuSpec) -> Self {
+        PowerParams {
+            p_idle: g.p_idle,
+            p_max: g.p_max_inst,
+            mfu_sat: g.mfu_sat,
+            gamma: g.gamma,
+        }
+    }
+
+    pub fn power_vec(&self) -> [f32; 4] {
+        [
+            self.p_idle as f32,
+            self.p_max as f32,
+            self.mfu_sat as f32,
+            self.gamma as f32,
+        ]
+    }
+}
+
+/// A power estimator mapping per-stage telemetry to per-GPU watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerModel {
+    /// The paper's Eq. 1 sublinear MFU power law.
+    MfuPowerLaw(PowerParams),
+    /// NVML-style: any non-empty stage counts as `busy_util` utilization.
+    NvmlProxy { p_idle: f64, p_max: f64, busy_util: f64 },
+    /// Constant fraction of peak (LLMCarbon-style lifecycle estimate).
+    StaticTdp { p_max: f64, fraction: f64 },
+}
+
+impl PowerModel {
+    pub fn paper_default(g: &GpuSpec) -> Self {
+        PowerModel::MfuPowerLaw(PowerParams::from_gpu(g))
+    }
+
+    /// Per-GPU power for a stage with the given MFU. `busy` is false
+    /// for idle gaps (no resident kernel).
+    pub fn power(&self, mfu: f64, busy: bool) -> f64 {
+        match self {
+            PowerModel::MfuPowerLaw(p) => {
+                let x = (mfu / p.mfu_sat).clamp(0.0, 1.0);
+                p.p_idle + (p.p_max - p.p_idle) * x.powf(p.gamma)
+            }
+            PowerModel::NvmlProxy {
+                p_idle,
+                p_max,
+                busy_util,
+            } => {
+                if busy {
+                    p_idle + (p_max - p_idle) * busy_util
+                } else {
+                    *p_idle
+                }
+            }
+            PowerModel::StaticTdp { p_max, fraction } => p_max * fraction,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::gpus;
+
+    #[test]
+    fn paper_law_matches_gpu_registry() {
+        let g = gpus::gpu("a100-80g").unwrap();
+        let m = PowerModel::paper_default(g);
+        for mfu in [0.0, 0.1, 0.3, 0.45, 0.8] {
+            assert!((m.power(mfu, true) - g.power(mfu)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nvml_proxy_overestimates_decode() {
+        // §2: during memory-bound decode (low MFU), an occupancy-based
+        // estimator reports near-max power while the MFU law doesn't.
+        let g = gpus::gpu("a100-80g").unwrap();
+        let law = PowerModel::paper_default(g);
+        let nvml = PowerModel::NvmlProxy {
+            p_idle: 100.0,
+            p_max: 400.0,
+            busy_util: 0.95,
+        };
+        let decode_mfu = 0.05;
+        assert!(nvml.power(decode_mfu, true) > law.power(decode_mfu, true) + 80.0);
+        // Idle agrees.
+        assert_eq!(nvml.power(0.0, false), 100.0);
+    }
+
+    #[test]
+    fn static_tdp_ignores_workload() {
+        let m = PowerModel::StaticTdp {
+            p_max: 400.0,
+            fraction: 0.8,
+        };
+        assert_eq!(m.power(0.0, false), 320.0);
+        assert_eq!(m.power(0.45, true), 320.0);
+    }
+
+    #[test]
+    fn gamma_sweep_changes_midrange_only() {
+        let g = gpus::gpu("a100-80g").unwrap();
+        let mut p = PowerParams::from_gpu(g);
+        let base_mid = PowerModel::MfuPowerLaw(p).power(0.2, true);
+        p.gamma = 1.0; // linear
+        let lin_mid = PowerModel::MfuPowerLaw(p).power(0.2, true);
+        assert!(base_mid > lin_mid, "sublinear must exceed linear mid-range");
+        // Endpoints invariant to gamma.
+        assert_eq!(PowerModel::MfuPowerLaw(p).power(0.0, true), 100.0);
+        assert!((PowerModel::MfuPowerLaw(p).power(0.45, true) - 400.0).abs() < 1e-9);
+    }
+}

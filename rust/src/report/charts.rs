@@ -1,0 +1,146 @@
+//! ASCII line/scatter charts: render experiment series directly in the
+//! terminal so `repro report` shows figure *shapes* (saturation,
+//! plateaus, crossovers) without leaving the console.
+
+/// Render one or more named series over a shared x-axis as an ASCII
+/// chart of the given size. Series are drawn with distinct glyphs.
+pub fn line_chart(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 16 && height >= 4);
+    assert!(!x.is_empty());
+    for (_, ys) in series {
+        assert_eq!(ys.len(), x.len(), "series length mismatch");
+    }
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+    let (xmin, xmax) = bounds(x);
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        let (lo, hi) = bounds(ys);
+        ymin = ymin.min(lo);
+        ymax = ymax.max(hi);
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        return format!("{title}\n(single x value; nothing to plot)\n");
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        // Plot each sample, connecting consecutive points coarsely.
+        let to_cell = |xi: f64, yi: f64| -> (usize, usize) {
+            let cx = ((xi - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((yi - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            (cx.min(width - 1), height - 1 - cy.min(height - 1))
+        };
+        for i in 0..x.len() {
+            let (cx, cy) = to_cell(x[i], ys[i]);
+            grid[cy][cx] = glyph;
+            if i > 0 {
+                // Linear interpolation between samples for continuity.
+                let steps = 2 * width;
+                for s in 0..steps {
+                    let a = s as f64 / steps as f64;
+                    let xi = x[i - 1] + a * (x[i] - x[i - 1]);
+                    let yi = ys[i - 1] + a * (ys[i] - ys[i - 1]);
+                    let (cx, cy) = to_cell(xi, yi);
+                    if grid[cy][cx] == ' ' {
+                        grid[cy][cx] = glyph;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", GLYPHS[i % GLYPHS.len()]))
+        .collect();
+    out.push_str(&format!("  [{}]\n", legend.join("  ")));
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:>10.3}")
+        } else if r == height - 1 {
+            format!("{ymin:>10.3}")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{} +{}\n{}  {:<10.3}{:>width$.3}\n",
+        " ".repeat(10),
+        "-".repeat(width),
+        " ".repeat(10),
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    out
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v * v).collect();
+        let c = line_chart("parabola", &x, &[("y=x^2", &y)], 40, 10);
+        assert!(c.contains("parabola"));
+        assert!(c.contains("* y=x^2"));
+        // Max label present.
+        assert!(c.contains("81.000"));
+        // The last row (near ymin) has a glyph near the left edge.
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines.len() > 10);
+    }
+
+    #[test]
+    fn two_series_distinct_glyphs() {
+        let x = [0.0, 1.0, 2.0];
+        let a = [0.0, 1.0, 2.0];
+        let b = [2.0, 1.0, 0.0];
+        let c = line_chart("cross", &x, &[("up", &a), ("down", &b)], 30, 8);
+        assert!(c.contains('*') && c.contains('o'));
+    }
+
+    #[test]
+    fn flat_series_does_not_panic() {
+        let x = [0.0, 1.0];
+        let y = [5.0, 5.0];
+        let c = line_chart("flat", &x, &[("f", &y)], 20, 5);
+        assert!(c.contains("flat"));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_rejected() {
+        line_chart("bad", &[0.0, 1.0], &[("s", &[1.0][..])], 20, 5);
+    }
+}

@@ -1,0 +1,91 @@
+//! Report assembly: collect experiment outputs from a results
+//! directory into one markdown document (used by `repro report`).
+
+pub mod charts;
+
+use crate::util::csv::Table;
+use anyhow::Result;
+use std::path::Path;
+
+/// Known experiment ids in presentation order.
+pub const EXPERIMENT_IDS: &[&str] = &[
+    "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy", "ablation",
+    "sched", "gpu",
+];
+
+/// Figure definitions rendered as ASCII charts in the report:
+/// (experiment id, chart title, x column, y columns).
+const FIGURES: &[(&str, &str, &str, &[&str])] = &[
+    ("fig1", "Fig.1 — MFU vs QPS (plateau = saturation)", "qps", &["weighted_mfu"]),
+    ("exp3", "Fig.4 — batch cap vs energy", "batch_cap", &["energy_kwh"]),
+    ("exp4", "Fig.5 — QPS vs avg power (W)", "qps", &["avg_power_w"]),
+];
+
+/// Build a markdown report from whatever results exist under `dir`.
+pub fn assemble(dir: &Path) -> Result<String> {
+    let mut out = String::from("# vidur-energy experiment report\n");
+    for id in EXPERIMENT_IDS {
+        let csv = dir.join(id).join(format!("{id}.csv"));
+        if !csv.exists() {
+            continue;
+        }
+        let table = Table::load(&csv)?;
+        out.push_str(&format!("\n## {id}\n\n"));
+        let meta = dir.join(id).join("meta.json");
+        if let Ok(text) = std::fs::read_to_string(&meta) {
+            if let Ok(v) = crate::util::json::parse(&text) {
+                if let Some(claim) = v
+                    .get("paper_claim")
+                    .or_else(|| v.get("description"))
+                    .and_then(|x| x.as_str())
+                {
+                    out.push_str(&format!("> paper: {claim}\n\n"));
+                }
+            }
+        }
+        out.push_str(&table.to_markdown());
+        // Attach ASCII figures where defined.
+        for (fid, title, xcol, ycols) in FIGURES {
+            if fid != id {
+                continue;
+            }
+            if let Ok(x) = table.f64_col(xcol) {
+                let mut ys: Vec<(String, Vec<f64>)> = Vec::new();
+                for yc in *ycols {
+                    if let Ok(y) = table.f64_col(yc) {
+                        ys.push((yc.to_string(), y));
+                    }
+                }
+                let series: Vec<(&str, &[f64])> = ys
+                    .iter()
+                    .map(|(n, v)| (n.as_str(), v.as_slice()))
+                    .collect();
+                if !series.is_empty() {
+                    out.push_str("\n```\n");
+                    out.push_str(&charts::line_chart(title, &x, &series, 64, 14));
+                    out.push_str("```\n");
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::Table;
+
+    #[test]
+    fn assembles_present_results_only() {
+        let dir = std::env::temp_dir().join("vidur_energy_report_test");
+        std::fs::create_dir_all(dir.join("fig1")).unwrap();
+        let mut t = Table::new(&["qps", "mfu"]);
+        t.push(&[5.0, 0.4]);
+        t.save(dir.join("fig1").join("fig1.csv")).unwrap();
+        let md = assemble(&dir).unwrap();
+        assert!(md.contains("## fig1"));
+        assert!(!md.contains("## exp1")); // absent results skipped
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,110 @@
+//! Artifact discovery + the static-shape contract with the AOT export
+//! (python/compile/model.py):
+//!
+//! | artifact          | inputs                                   | outputs |
+//! |-------------------|------------------------------------------|---------|
+//! | stage_oracle      | nt[128], ctx[128], act[128], mp[8], gp[12] | (t, flops, mfu, power) scalars |
+//! | cosim_step        | load[1440], solar[1440], ci[1440], bp[8], soc0[1] | 5 × [1440] |
+//! | bin_power         | p[4096], dt[4096], idx[4096]             | (energy[512], weight[512]) |
+
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Static shapes shared with python/compile/model.py.
+pub const R_MAX: usize = 128;
+pub const T_COSIM: usize = 1440;
+pub const N_SAMPLES: usize = 4096;
+pub const N_BINS: usize = 512;
+
+/// Locates artifacts and validates the manifest's shape contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open the artifact directory (env `REPRO_ARTIFACTS` overrides;
+    /// default `artifacts/` relative to the workspace root, walking up
+    /// from the current dir so tests/benches work from target/).
+    pub fn discover() -> Result<ArtifactStore> {
+        if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+            if !cur.pop() {
+                bail!(
+                    "artifacts/ not found (run `make artifacts`); searched up from the current directory"
+                );
+            }
+        }
+    }
+
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        let store = ArtifactStore { dir };
+        store.validate_manifest()?;
+        Ok(store)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    fn validate_manifest(&self) -> Result<()> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {:?}", self.dir))?;
+        let m = json::parse(&text).context("parsing artifact manifest")?;
+        let shapes = m.get("shapes").context("manifest missing 'shapes'")?;
+        let check = |key: &str, want: usize| -> Result<()> {
+            let got = shapes
+                .get(key)
+                .and_then(|v| v.as_u64())
+                .with_context(|| format!("manifest missing shapes.{key}"))? as usize;
+            if got != want {
+                bail!(
+                    "artifact shape mismatch: {key}={got} but this binary expects {want}; \
+                     re-run `make artifacts` after syncing python/compile/model.py"
+                );
+            }
+            Ok(())
+        };
+        check("R_MAX", R_MAX)?;
+        check("T_COSIM", T_COSIM)?;
+        check("N_SAMPLES", N_SAMPLES)?;
+        check("N_BINS", N_BINS)?;
+        for name in ["stage_oracle", "cosim_step", "bin_power"] {
+            if !self.path(name).exists() {
+                bail!("missing artifact {:?}", self.path(name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_finds_workspace_artifacts() {
+        // Only meaningful after `make artifacts`; skip quietly otherwise.
+        if std::env::var("REPRO_ARTIFACTS").is_err()
+            && !std::path::Path::new("artifacts/manifest.json").exists()
+        {
+            return;
+        }
+        let store = ArtifactStore::discover().unwrap();
+        assert!(store.path("stage_oracle").exists());
+    }
+
+    #[test]
+    fn open_missing_dir_fails() {
+        assert!(ArtifactStore::open("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the simulation hot
+//! path. Python never runs at request time — the compiled executables
+//! are the only bridge between layers.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactStore;
+pub use pjrt::{Executable, PjrtRuntime};

@@ -1,0 +1,8 @@
+//! Scheduling layer: replica-level continuous-batching policies (vLLM,
+//! Sarathi, Orca) and the cluster-level request router.
+
+pub mod replica;
+pub mod router;
+
+pub use replica::{ReplicaScheduler, StageKind, StagePlan};
+pub use router::Router;

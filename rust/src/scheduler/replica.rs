@@ -1,0 +1,523 @@
+//! Replica-level scheduler: continuous batching with paged-KV admission
+//! control, in the three policies the paper's ecosystem uses:
+//!
+//! * **vLLM** (paper default): prefill-prioritized — new prompts are
+//!   prefilled in dedicated iterations (whole prompt at once, subject
+//!   to a batched-token budget); decode iterations advance every
+//!   running request by one token.
+//! * **Sarathi**: chunked prefill — each iteration mixes all decodes
+//!   with prefill chunks up to a token budget (`chunk_size`).
+//! * **Orca**: iteration-level mixed batching without a token budget
+//!   (simplified: admission still uses the paged KV cache).
+//!
+//! Preemption: if decode cannot grow its KV allocation, the
+//! youngest running request is evicted and re-queued for
+//! recompute-style restart (vLLM's recompute preemption, simplified to
+//! re-prefill the original prompt).
+
+use crate::cluster::kvcache::KvCache;
+use crate::config::simconfig::{SchedulerKind, SimConfig};
+use crate::workload::request::{Phase, Request};
+use std::collections::VecDeque;
+
+/// vLLM's max_num_batched_tokens default — caps prompt tokens per
+/// prefill iteration.
+pub const MAX_BATCHED_TOKENS: u64 = 8192;
+
+/// What a stage is made of (for telemetry / figures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Prefill,
+    Decode,
+    Mixed,
+}
+
+/// One planned batch stage: request ids + the tokens each processes.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub entries: Vec<(u64, u32)>,
+    pub kind: StageKind,
+}
+
+impl StagePlan {
+    pub fn batch_size(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn total_new_tokens(&self) -> u64 {
+        self.entries.iter().map(|&(_, t)| t as u64).sum()
+    }
+}
+
+/// Per-replica scheduler state.
+pub struct ReplicaScheduler {
+    pub id: u32,
+    kind: SchedulerKind,
+    batch_cap: usize,
+    chunk_size: u64,
+    queue: VecDeque<u64>,
+    running: Vec<u64>,
+    kv: KvCache,
+    pub preemptions: u64,
+    /// Requests routed to this replica (for router load balancing).
+    pub outstanding: u64,
+}
+
+impl ReplicaScheduler {
+    pub fn new(id: u32, cfg: &SimConfig) -> crate::Result<Self> {
+        let kv = KvCache::for_replica(
+            cfg.model_spec()?,
+            cfg.gpu_spec()?,
+            cfg.tp,
+            cfg.pp,
+            cfg.kv_block_tokens,
+            cfg.max_tokens,
+        );
+        Ok(ReplicaScheduler {
+            id,
+            kind: cfg.scheduler,
+            batch_cap: cfg.batch_cap,
+            chunk_size: cfg.chunk_size,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            kv,
+            preemptions: 0,
+            outstanding: 0,
+        })
+    }
+
+    /// Test constructor with an explicit KV cache.
+    pub fn with_kv(id: u32, kind: SchedulerKind, batch_cap: usize, chunk_size: u64, kv: KvCache) -> Self {
+        ReplicaScheduler {
+            id,
+            kind,
+            batch_cap,
+            chunk_size,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            kv,
+            preemptions: 0,
+            outstanding: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, id: u64) {
+        self.queue.push_back(id);
+        self.outstanding += 1;
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
+    /// Admit queued requests while capacity (batch cap + KV) allows.
+    /// KV is reserved for the full prompt plus one decode block of
+    /// headroom.
+    fn admit(&mut self, reqs: &mut [Request], now: f64) {
+        while self.running.len() < self.batch_cap {
+            let Some(&id) = self.queue.front() else { break };
+            let r = &mut reqs[id as usize];
+            let need = r.prefill_tokens + 1;
+            if !self.kv.admit(id, need) {
+                break; // head-of-line blocking, vLLM-style
+            }
+            r.scheduled_s.get_or_insert(now);
+            self.queue.pop_front();
+            self.running.push(id);
+        }
+    }
+
+    /// Plan the next batch stage, or None if nothing can run.
+    pub fn next_stage(&mut self, reqs: &mut [Request], now: f64) -> Option<StagePlan> {
+        self.admit(reqs, now);
+        if self.running.is_empty() {
+            return None;
+        }
+        match self.kind {
+            SchedulerKind::Vllm => self.plan_vllm(reqs),
+            SchedulerKind::Sarathi => self.plan_sarathi(reqs),
+            SchedulerKind::Orca => self.plan_orca(reqs),
+        }
+    }
+
+    fn plan_vllm(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+        // Prefill-prioritized: if any running request still has prompt
+        // tokens, run a prefill-only stage (whole prompts, token budget).
+        let mut entries = Vec::new();
+        let mut budget = MAX_BATCHED_TOKENS;
+        for &id in &self.running {
+            let r = &reqs[id as usize];
+            let rem = r.prefill_remaining();
+            if rem > 0 && budget >= rem.min(budget) && budget > 0 {
+                let take = rem.min(budget);
+                entries.push((id, take as u32));
+                budget -= take;
+            }
+        }
+        if !entries.is_empty() {
+            return Some(StagePlan {
+                entries,
+                kind: StageKind::Prefill,
+            });
+        }
+        self.plan_decode(reqs)
+    }
+
+    fn plan_decode(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+        // Grow KV by one token per running decode request; preempt the
+        // youngest on allocation failure.
+        loop {
+            let mut ok = true;
+            for idx in 0..self.running.len() {
+                let id = self.running[idx];
+                let r = &reqs[id as usize];
+                if r.phase() == Phase::Decode
+                    && !self.kv.grow(id, r.context_len() + 1)
+                {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                break;
+            }
+            self.preempt_youngest(reqs);
+            if self.running.is_empty() {
+                return None;
+            }
+        }
+        let entries: Vec<(u64, u32)> = self
+            .running
+            .iter()
+            .filter(|&&id| reqs[id as usize].phase() == Phase::Decode)
+            .map(|&id| (id, 1u32))
+            .collect();
+        if entries.is_empty() {
+            None
+        } else {
+            Some(StagePlan {
+                entries,
+                kind: StageKind::Decode,
+            })
+        }
+    }
+
+    fn plan_sarathi(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+        // Mixed stage: all decodes first (1 token each), then prefill
+        // chunks into the remaining token budget.
+        let decode_plan = self.plan_decode(reqs);
+        let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
+        let mut budget = self.chunk_size.saturating_sub(entries.len() as u64);
+        let had_decodes = !entries.is_empty();
+        for &id in &self.running {
+            if budget == 0 {
+                break;
+            }
+            let r = &reqs[id as usize];
+            let rem = r.prefill_remaining();
+            if rem > 0 {
+                let take = rem.min(budget);
+                entries.push((id, take as u32));
+                budget -= take;
+            }
+        }
+        if entries.is_empty() {
+            return None;
+        }
+        let kind = if had_decodes && entries.len() > self.count_decodes(reqs) {
+            StageKind::Mixed
+        } else if had_decodes {
+            StageKind::Decode
+        } else {
+            StageKind::Prefill
+        };
+        Some(StagePlan { entries, kind })
+    }
+
+    fn count_decodes(&self, reqs: &[Request]) -> usize {
+        self.running
+            .iter()
+            .filter(|&&id| reqs[id as usize].phase() == Phase::Decode)
+            .count()
+    }
+
+    fn plan_orca(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+        // Iteration-level mixed batch: full remaining prompts + all
+        // decodes, no token budget.
+        let decode_plan = self.plan_decode(reqs);
+        let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
+        let had_decodes = !entries.is_empty();
+        let mut had_prefill = false;
+        for &id in &self.running {
+            let r = &reqs[id as usize];
+            let rem = r.prefill_remaining();
+            if rem > 0 {
+                entries.push((id, rem as u32));
+                had_prefill = true;
+            }
+        }
+        if entries.is_empty() {
+            return None;
+        }
+        let kind = match (had_prefill, had_decodes) {
+            (true, true) => StageKind::Mixed,
+            (true, false) => StageKind::Prefill,
+            _ => StageKind::Decode,
+        };
+        Some(StagePlan { entries, kind })
+    }
+
+    fn preempt_youngest(&mut self, reqs: &mut [Request]) {
+        // Youngest = most recently admitted (vLLM preempts the lowest
+        // priority request and restarts it by recomputation).
+        if let Some(id) = self.running.pop() {
+            self.kv.release(id);
+            let r = &mut reqs[id as usize];
+            r.prefill_done = 0; // recompute-style restart
+            self.queue.push_front(id);
+            self.preemptions += 1;
+        }
+    }
+
+    /// Apply a completed stage: advance progress, emit first tokens,
+    /// retire finished requests. Returns the finished request ids.
+    pub fn complete_stage(
+        &mut self,
+        reqs: &mut [Request],
+        plan: &StagePlan,
+        now: f64,
+    ) -> Vec<u64> {
+        let mut finished = Vec::new();
+        for &(id, nt) in &plan.entries {
+            let r = &mut reqs[id as usize];
+            if r.prefill_remaining() > 0 {
+                r.prefill_done += nt as u64;
+                debug_assert!(r.prefill_done <= r.prefill_tokens);
+                if r.prefill_done == r.prefill_tokens {
+                    // The completing prefill iteration emits the first
+                    // output token (vLLM semantics).
+                    r.decode_done += 1;
+                    r.first_token_s.get_or_insert(now);
+                }
+            } else {
+                r.decode_done += 1;
+                r.first_token_s.get_or_insert(now);
+            }
+            if r.decode_done >= r.decode_tokens {
+                r.finished_s = Some(now);
+                finished.push(id);
+            }
+        }
+        for id in &finished {
+            self.kv.release(*id);
+            self.running.retain(|x| x != id);
+            self.outstanding = self.outstanding.saturating_sub(1);
+        }
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kvcache::KvCache;
+
+    fn mk_reqs(specs: &[(u64, u64)]) -> Vec<Request> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, d))| Request::new(i as u64, 0.0, p, d))
+            .collect()
+    }
+
+    fn vllm_sched(cap: usize, blocks: u64) -> ReplicaScheduler {
+        ReplicaScheduler::with_kv(
+            0,
+            SchedulerKind::Vllm,
+            cap,
+            512,
+            KvCache::with_blocks(16, blocks),
+        )
+    }
+
+    #[test]
+    fn vllm_prefill_then_decode() {
+        let mut reqs = mk_reqs(&[(100, 3), (50, 2)]);
+        let mut s = vllm_sched(128, 1000);
+        s.enqueue(0);
+        s.enqueue(1);
+
+        // Stage 1: both prompts prefilled together.
+        let p1 = s.next_stage(&mut reqs, 0.0).unwrap();
+        assert_eq!(p1.kind, StageKind::Prefill);
+        assert_eq!(p1.total_new_tokens(), 150);
+        let fin = s.complete_stage(&mut reqs, &p1, 0.5);
+        assert!(fin.is_empty());
+        // Prefill completion emitted first tokens.
+        assert_eq!(reqs[0].decode_done, 1);
+        assert_eq!(reqs[0].first_token_s, Some(0.5));
+
+        // Stage 2: decode for both.
+        let p2 = s.next_stage(&mut reqs, 0.5).unwrap();
+        assert_eq!(p2.kind, StageKind::Decode);
+        assert_eq!(p2.batch_size(), 2);
+        let fin = s.complete_stage(&mut reqs, &p2, 0.6);
+        // Request 1 wanted 2 tokens: 1 from prefill + 1 now -> done.
+        assert_eq!(fin, vec![1]);
+        assert!(reqs[1].is_finished());
+
+        // Stage 3: only request 0 decodes.
+        let p3 = s.next_stage(&mut reqs, 0.6).unwrap();
+        assert_eq!(p3.batch_size(), 1);
+        let fin = s.complete_stage(&mut reqs, &p3, 0.7);
+        assert_eq!(fin, vec![0]);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let n = 10;
+        let mut reqs = mk_reqs(&vec![(10, 5); n]);
+        let mut s = vllm_sched(4, 10_000);
+        for i in 0..n as u64 {
+            s.enqueue(i);
+        }
+        let p = s.next_stage(&mut reqs, 0.0).unwrap();
+        assert_eq!(p.batch_size(), 4);
+        assert_eq!(s.queue_len(), 6);
+    }
+
+    #[test]
+    fn kv_admission_blocks_when_full() {
+        // 10 blocks of 16 = 160 tokens capacity; each request needs
+        // 100+1 tokens -> 7 blocks. Only one fits.
+        let mut reqs = mk_reqs(&[(100, 2), (100, 2)]);
+        let mut s = vllm_sched(128, 10);
+        s.enqueue(0);
+        s.enqueue(1);
+        let p = s.next_stage(&mut reqs, 0.0).unwrap();
+        assert_eq!(p.batch_size(), 1);
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn preemption_on_kv_exhaustion() {
+        // Tight cache: two requests admitted, but decode growth
+        // eventually exhausts blocks and preempts the youngest.
+        let mut reqs = mk_reqs(&[(17, 200), (17, 200)]);
+        let mut s = vllm_sched(128, 4); // 64 tokens total
+        s.enqueue(0);
+        s.enqueue(1);
+        let mut now = 0.0;
+        let mut preempted = false;
+        for _ in 0..200 {
+            let Some(p) = s.next_stage(&mut reqs, now) else { break };
+            now += 0.01;
+            s.complete_stage(&mut reqs, &p, now);
+            if s.preemptions > 0 {
+                preempted = true;
+                break;
+            }
+        }
+        assert!(preempted, "expected a preemption with a tiny KV cache");
+        s.kv().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sarathi_mixes_decode_and_chunked_prefill() {
+        let mut reqs = mk_reqs(&[(2000, 5), (1000, 5)]);
+        let mut s = ReplicaScheduler::with_kv(
+            0,
+            SchedulerKind::Sarathi,
+            128,
+            512,
+            KvCache::with_blocks(16, 10_000),
+        );
+        s.enqueue(0);
+        // First stage: chunked prefill of request 0 only (budget 512).
+        let p1 = s.next_stage(&mut reqs, 0.0).unwrap();
+        assert_eq!(p1.kind, StageKind::Prefill);
+        assert_eq!(p1.total_new_tokens(), 512);
+        s.complete_stage(&mut reqs, &p1, 0.1);
+        assert_eq!(reqs[0].prefill_done, 512);
+        // Enqueue request 1; stages keep chunking.
+        s.enqueue(1);
+        let p2 = s.next_stage(&mut reqs, 0.1).unwrap();
+        assert_eq!(p2.total_new_tokens(), 512);
+        // Run request 0 to decode phase, then stages must be Mixed.
+        let mut now = 0.2;
+        loop {
+            let Some(p) = s.next_stage(&mut reqs, now) else { break };
+            now += 0.01;
+            s.complete_stage(&mut reqs, &p, now);
+            if p.kind == StageKind::Mixed {
+                // Decodes piggybacked with prefill chunks.
+                assert!(p.entries.iter().any(|&(_, t)| t == 1));
+                assert!(p.entries.iter().any(|&(_, t)| t > 1));
+                return;
+            }
+            if now > 10.0 {
+                break;
+            }
+        }
+        panic!("sarathi never produced a mixed stage");
+    }
+
+    #[test]
+    fn orca_runs_full_prompts_with_decodes() {
+        let mut reqs = mk_reqs(&[(300, 10), (400, 10)]);
+        let mut s = ReplicaScheduler::with_kv(
+            0,
+            SchedulerKind::Orca,
+            128,
+            512,
+            KvCache::with_blocks(16, 10_000),
+        );
+        s.enqueue(0);
+        let p1 = s.next_stage(&mut reqs, 0.0).unwrap();
+        s.complete_stage(&mut reqs, &p1, 0.1);
+        s.enqueue(1);
+        // Next stage mixes request 0's decode with request 1's FULL prompt.
+        let p2 = s.next_stage(&mut reqs, 0.1).unwrap();
+        assert_eq!(p2.kind, StageKind::Mixed);
+        let prefill_tokens: u64 = p2
+            .entries
+            .iter()
+            .filter(|&&(_, t)| t > 1)
+            .map(|&(_, t)| t as u64)
+            .sum();
+        assert_eq!(prefill_tokens, 400); // unchunked
+    }
+
+    #[test]
+    fn work_conservation_all_requests_finish() {
+        let mut reqs = mk_reqs(&vec![(64, 16); 50]);
+        let mut s = vllm_sched(8, 2000);
+        for i in 0..50 {
+            s.enqueue(i);
+        }
+        let mut now = 0.0;
+        let mut finished = 0;
+        for _ in 0..100_000 {
+            let Some(p) = s.next_stage(&mut reqs, now) else { break };
+            now += 0.01;
+            finished += s.complete_stage(&mut reqs, &p, now).len();
+            if finished == 50 {
+                break;
+            }
+        }
+        assert_eq!(finished, 50, "not all requests completed");
+        assert!(!s.has_work());
+        s.kv().check_invariants().unwrap();
+        assert_eq!(s.kv().used_blocks(), 0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Cluster-level request router: round-robin (the paper's default
+//! "RR") and least-outstanding-requests (vLLM production router
+//! style).
+
+use crate::config::simconfig::RouterKind;
+
+/// Chooses the replica for each arriving request.
+pub struct Router {
+    kind: RouterKind,
+    next: usize,
+    n: usize,
+}
+
+impl Router {
+    pub fn new(kind: RouterKind, replicas: usize) -> Self {
+        assert!(replicas > 0);
+        Router {
+            kind,
+            next: 0,
+            n: replicas,
+        }
+    }
+
+    /// Pick a replica given per-replica outstanding request counts.
+    pub fn route(&mut self, outstanding: &[u64]) -> usize {
+        debug_assert_eq!(outstanding.len(), self.n);
+        match self.kind {
+            RouterKind::RoundRobin => {
+                let r = self.next;
+                self.next = (self.next + 1) % self.n;
+                r
+            }
+            RouterKind::LeastOutstanding => outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &o)| o)
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterKind::RoundRobin, 3);
+        let o = vec![0, 0, 0];
+        assert_eq!(
+            (0..6).map(|_| r.route(&o)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn least_outstanding_picks_min() {
+        let mut r = Router::new(RouterKind::LeastOutstanding, 3);
+        assert_eq!(r.route(&[5, 2, 7]), 1);
+        assert_eq!(r.route(&[0, 2, 7]), 0);
+        // Tie: first wins (stable).
+        assert_eq!(r.route(&[3, 3, 3]), 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Simulation summary metrics: latency distributions, throughput,
+//! batching behaviour, MFU — the quantities the paper's figures are
+//! built from.
+
+use crate::config::simconfig::SimConfig;
+use crate::telemetry::StageLog;
+use crate::util::json::Value;
+use crate::util::stats::percentile;
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+pub struct SimMetrics {
+    /// Wall-clock from t=0 to the last event.
+    pub makespan_s: f64,
+    /// Achieved request throughput over the makespan.
+    pub achieved_qps: f64,
+    /// Total tokens processed (prefill + decode) per second.
+    pub token_throughput: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+    /// Mean normalized latency (s per output token) — vLLM's metric.
+    pub norm_latency_s_per_tok: f64,
+    /// Duration-weighted mean MFU (Fig. 1's y-axis).
+    pub weighted_mfu: f64,
+    /// Mean actual batch size across stages (Fig. 4 panel A).
+    pub mean_batch_size: f64,
+    pub stage_count: u64,
+    pub preemptions: u64,
+    /// Mean queueing delay (arrival -> first scheduled).
+    pub queue_delay_p50_s: f64,
+}
+
+impl SimMetrics {
+    pub fn compute(
+        _cfg: &SimConfig,
+        requests: &[Request],
+        log: &StageLog,
+        makespan_s: f64,
+        preemptions: u64,
+    ) -> SimMetrics {
+        let ttft: Vec<f64> = requests.iter().filter_map(|r| r.ttft()).collect();
+        let e2e: Vec<f64> = requests.iter().filter_map(|r| r.e2e_latency()).collect();
+        let qdel: Vec<f64> = requests
+            .iter()
+            .filter_map(|r| r.scheduled_s.map(|s| s - r.arrival_s))
+            .collect();
+        let norm: Vec<f64> = requests
+            .iter()
+            .filter_map(|r| {
+                r.e2e_latency().map(|l| l / r.decode_tokens.max(1) as f64)
+            })
+            .collect();
+        let total_tokens: u64 = requests.iter().map(|r| r.total_tokens()).sum();
+        let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+        let mean = |v: &[f64]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        SimMetrics {
+            makespan_s,
+            achieved_qps: requests.len() as f64 / makespan_s.max(1e-9),
+            token_throughput: total_tokens as f64 / makespan_s.max(1e-9),
+            ttft_p50_s: pc(&ttft, 50.0),
+            ttft_p99_s: pc(&ttft, 99.0),
+            e2e_p50_s: pc(&e2e, 50.0),
+            e2e_p99_s: pc(&e2e, 99.0),
+            norm_latency_s_per_tok: mean(&norm),
+            weighted_mfu: log.weighted_mfu(),
+            mean_batch_size: log.batch_summary.mean(),
+            stage_count: log.len() as u64,
+            preemptions,
+            queue_delay_p50_s: pc(&qdel, 50.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("makespan_s", self.makespan_s)
+            .set("achieved_qps", self.achieved_qps)
+            .set("token_throughput", self.token_throughput)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+            .set("e2e_p50_s", self.e2e_p50_s)
+            .set("e2e_p99_s", self.e2e_p99_s)
+            .set("norm_latency_s_per_tok", self.norm_latency_s_per_tok)
+            .set("weighted_mfu", self.weighted_mfu)
+            .set("mean_batch_size", self.mean_batch_size)
+            .set("stage_count", self.stage_count)
+            .set("preemptions", self.preemptions)
+            .set("queue_delay_p50_s", self.queue_delay_p50_s);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::SimConfig;
+
+    #[test]
+    fn metrics_from_synthetic_requests() {
+        let mut reqs = vec![
+            Request::new(0, 0.0, 10, 5),
+            Request::new(1, 1.0, 10, 5),
+        ];
+        reqs[0].scheduled_s = Some(0.0);
+        reqs[0].first_token_s = Some(0.5);
+        reqs[0].finished_s = Some(1.0);
+        reqs[1].scheduled_s = Some(1.2);
+        reqs[1].first_token_s = Some(2.0);
+        reqs[1].finished_s = Some(3.0);
+        let log = StageLog::new();
+        let m = SimMetrics::compute(&SimConfig::default(), &reqs, &log, 3.0, 0);
+        assert!((m.achieved_qps - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m.ttft_p50_s - 0.75).abs() < 1e-9); // median of 0.5 and 1.0
+        assert!((m.e2e_p50_s - 1.5).abs() < 1e-9); // median of 1.0 and 2.0
+        assert_eq!(m.token_throughput, 30.0 / 3.0);
+        let j = m.to_json();
+        assert!(j.get("makespan_s").is_some());
+    }
+}

@@ -1,0 +1,8 @@
+//! The Vidur-like discrete-event inference simulator: event queue,
+//! replica iteration loop, and summary metrics.
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{run, run_with_trace, SimOutput};
+pub use metrics::SimMetrics;

@@ -1,0 +1,8 @@
+//! Telemetry: per-batch-stage records — the paper's §3.2 modification
+//! of Vidur ("log MFU at the batch stage level instead of replica-wide
+//! averages"), which feeds both the energy accounting (Eq. 2–3) and the
+//! Vessim-side pipeline (Eq. 5).
+
+pub mod stagelog;
+
+pub use stagelog::{StageLog, StageRecord};

@@ -1,0 +1,188 @@
+//! Batch-stage records and the stage log container.
+
+use crate::scheduler::replica::StageKind;
+use crate::util::csv::Table;
+use crate::util::stats::Summary;
+use anyhow::Result;
+use std::path::Path;
+
+/// One executed batch stage (one pipeline-parallel stage of one
+/// replica iteration) — the paper's logging granularity.
+#[derive(Debug, Clone, Copy)]
+pub struct StageRecord {
+    pub replica: u32,
+    /// Pipeline stage index within the replica iteration (0..pp).
+    pub pp_stage: u32,
+    pub start_s: f64,
+    pub dt_s: f64,
+    pub batch_size: u32,
+    pub new_tokens: u32,
+    /// Eq. 2 MFU of the stage's TP group (fraction, not %).
+    pub mfu: f64,
+    /// Eq. 1 per-GPU power of the stage's active GPUs, W.
+    pub power_w: f64,
+    /// GPUs actively executing this stage (= TP).
+    pub active_gpus: u32,
+    /// Replica GPUs idling during this stage (= (PP-1)·TP).
+    pub idle_gpus: u32,
+    pub flops: f64,
+    pub kind: StageKind,
+}
+
+impl StageRecord {
+    /// Whole-replica average power during this stage, W
+    /// (active GPUs at P(MFU), the rest at idle).
+    pub fn replica_power_w(&self, p_idle: f64) -> f64 {
+        self.power_w * self.active_gpus as f64 + p_idle * self.idle_gpus as f64
+    }
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.dt_s
+    }
+}
+
+/// Append-only log of executed stages plus running aggregates.
+#[derive(Debug, Default)]
+pub struct StageLog {
+    pub records: Vec<StageRecord>,
+    pub mfu_summary: Summary,
+    pub batch_summary: Summary,
+}
+
+impl StageLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StageRecord) {
+        self.mfu_summary.add(r.mfu);
+        self.batch_summary.add(r.batch_size as f64);
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Busy span: earliest start to latest end.
+    pub fn span(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for r in &self.records {
+            lo = lo.min(r.start_s);
+            hi = hi.max(r.end_s());
+        }
+        if self.records.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Total busy GPU-seconds (active GPUs × stage durations).
+    pub fn busy_gpu_seconds(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.dt_s * r.active_gpus as f64)
+            .sum()
+    }
+
+    /// Duration-weighted mean MFU (the quantity Fig. 1 plots vs QPS).
+    pub fn weighted_mfu(&self) -> f64 {
+        let num: f64 = self.records.iter().map(|r| r.mfu * r.dt_s).sum();
+        let den: f64 = self.records.iter().map(|r| r.dt_s).sum();
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Export as CSV (one row per stage, the paper's per-stage JSON
+    /// equivalent).
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut t = Table::new(&[
+            "replica", "pp_stage", "start_s", "dt_s", "batch_size", "new_tokens",
+            "mfu", "power_w", "active_gpus", "idle_gpus", "flops", "kind",
+        ]);
+        for r in &self.records {
+            t.push_row(vec![
+                r.replica.to_string(),
+                r.pp_stage.to_string(),
+                format!("{:.6}", r.start_s),
+                format!("{:.6}", r.dt_s),
+                r.batch_size.to_string(),
+                r.new_tokens.to_string(),
+                format!("{:.6}", r.mfu),
+                format!("{:.3}", r.power_w),
+                r.active_gpus.to_string(),
+                r.idle_gpus.to_string(),
+                format!("{:.3e}", r.flops),
+                match r.kind {
+                    StageKind::Prefill => "prefill",
+                    StageKind::Decode => "decode",
+                    StageKind::Mixed => "mixed",
+                }
+                .to_string(),
+            ]);
+        }
+        t.save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: f64, dt: f64, mfu: f64, active: u32, idle: u32) -> StageRecord {
+        StageRecord {
+            replica: 0,
+            pp_stage: 0,
+            start_s: start,
+            dt_s: dt,
+            batch_size: 4,
+            new_tokens: 4,
+            mfu,
+            power_w: 200.0,
+            active_gpus: active,
+            idle_gpus: idle,
+            flops: 1e12,
+            kind: StageKind::Decode,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut log = StageLog::new();
+        log.push(rec(0.0, 1.0, 0.1, 1, 0));
+        log.push(rec(1.0, 3.0, 0.3, 1, 0));
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.span(), (0.0, 4.0));
+        // Weighted MFU = (0.1*1 + 0.3*3)/4 = 0.25
+        assert!((log.weighted_mfu() - 0.25).abs() < 1e-12);
+        assert_eq!(log.busy_gpu_seconds(), 4.0);
+    }
+
+    #[test]
+    fn replica_power_includes_idle_gpus() {
+        let r = rec(0.0, 1.0, 0.2, 2, 2);
+        // 2 active at 200 W + 2 idle at 100 W.
+        assert_eq!(r.replica_power_w(100.0), 600.0);
+    }
+
+    #[test]
+    fn csv_export_roundtrips_row_count() {
+        let mut log = StageLog::new();
+        for i in 0..10 {
+            log.push(rec(i as f64, 0.5, 0.1, 1, 0));
+        }
+        let dir = std::env::temp_dir().join("vidur_energy_stagelog");
+        let p = dir.join("stages.csv");
+        log.save_csv(&p).unwrap();
+        let t = Table::load(&p).unwrap();
+        assert_eq!(t.rows.len(), 10);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

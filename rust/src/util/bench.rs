@@ -1,0 +1,201 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that builds a
+//! `Bench` suite, registers cases, and calls `run()`. The harness does
+//! warmup, adaptively picks an iteration count to hit a target wall
+//! time, and reports mean / p50 / p99 per case as a markdown table —
+//! plus an optional "paper value" column so every bench doubles as a
+//! table/figure regenerator.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    target_time: Duration,
+    warmup: Duration,
+    results: Vec<CaseResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+    /// Free-form metric the case reports (e.g. "kWh=0.49"): benches
+    /// regenerate paper numbers, not just latencies.
+    pub metric: String,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Fast mode for CI: REPRO_BENCH_FAST=1 shrinks budgets ~10x.
+        let fast = std::env::var("REPRO_BENCH_FAST").is_ok();
+        Bench {
+            name: name.to_string(),
+            target_time: if fast {
+                Duration::from_millis(300)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Benchmark `f`; its return value is folded into a metric string
+    /// via `metric_of` on the final iteration.
+    pub fn case_with_metric<T>(
+        &mut self,
+        name: &str,
+        mut f: impl FnMut() -> T,
+        metric_of: impl Fn(&T) -> String,
+    ) {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        let mut last = f();
+        calib_iters += 1;
+        while warm_start.elapsed() < self.warmup {
+            last = f();
+            calib_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+        let iters = ((self.target_time.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(3, 1_000_000);
+
+        let mut times = Vec::with_capacity(iters as usize);
+        let mut summary = Summary::new();
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            last = f();
+            let dt = t0.elapsed().as_secs_f64();
+            times.push(dt);
+            summary.add(dt);
+        }
+        let metric = metric_of(&last);
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters,
+            mean_s: summary.mean(),
+            p50_s: percentile(&times, 50.0),
+            p99_s: percentile(&times, 99.0),
+            std_s: summary.std(),
+            metric,
+        });
+        // Print progress as we go (benches can be long).
+        let r = self.results.last().unwrap();
+        eprintln!(
+            "  {:<40} {:>10} iters  mean {:>12}  {}",
+            r.name,
+            r.iters,
+            fmt_time(r.mean_s),
+            r.metric
+        );
+    }
+
+    pub fn case<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        self.case_with_metric(name, f, |_| String::new());
+    }
+
+    /// One-shot measurement (for long end-to-end cases where iterating
+    /// is impractical): runs once, records the time.
+    pub fn once<T>(&mut self, name: &str, mut f: impl FnMut() -> T, metric_of: impl Fn(&T) -> String) {
+        let t0 = Instant::now();
+        let v = f();
+        let dt = t0.elapsed().as_secs_f64();
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: dt,
+            p50_s: dt,
+            p99_s: dt,
+            std_s: 0.0,
+            metric: metric_of(&v),
+        });
+        let r = self.results.last().unwrap();
+        eprintln!(
+            "  {:<40} {:>10} iters  mean {:>12}  {}",
+            r.name, 1, fmt_time(dt), r.metric
+        );
+    }
+
+    /// Print the final report table; returns results for programmatic use.
+    pub fn run(self) -> Vec<CaseResult> {
+        println!("\n## bench: {}\n", self.name);
+        println!(
+            "| case | iters | mean | p50 | p99 | std | metric |"
+        );
+        println!("|---|---|---|---|---|---|---|");
+        for r in &self.results {
+            println!(
+                "| {} | {} | {} | {} | {} | {} | {} |",
+                r.name,
+                r.iters,
+                fmt_time(r.mean_s),
+                fmt_time(r.p50_s),
+                fmt_time(r.p99_s),
+                fmt_time(r.std_s),
+                r.metric
+            );
+        }
+        println!();
+        self.results
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box
+/// stand-in that also works on references).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_cases() {
+        std::env::set_var("REPRO_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest").with_target_time(Duration::from_millis(30));
+        b.case("noop", || black_box(1 + 1));
+        b.case_with_metric("metric", || 42u64, |v| format!("v={v}"));
+        let rs = b.run();
+        assert_eq!(rs.len(), 2);
+        assert!(rs[0].iters >= 3);
+        assert_eq!(rs[1].metric, "v=42");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

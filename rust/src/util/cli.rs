@@ -1,0 +1,183 @@
+//! Tiny CLI argument parser (clap is unavailable offline): subcommands,
+//! `--flag value` / `--flag=value` options, boolean switches, typed
+//! accessors with defaults, and generated usage text.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Declarative spec of one option for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: positionals + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list. `--key=value` and `--key value` both
+    /// work; `--key` followed by another `--…` (or nothing) is a switch.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(body.to_string(), v);
+                        }
+                        _ => out.switches.push(body.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .with_context(|| format!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => parse_u64_friendly(s)
+                .with_context(|| format!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    /// Reject unknown options (catch typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "unknown option --{k}; known: {}",
+                    known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Accept "65536", "2^16", "64k".
+pub fn parse_u64_friendly(s: &str) -> Result<u64> {
+    let s = s.trim();
+    if let Some((base, exp)) = s.split_once('^') {
+        let b: u64 = base.trim().parse()?;
+        let e: u32 = exp.trim().parse()?;
+        return Ok(b.pow(e));
+    }
+    if let Some(k) = s.strip_suffix(['k', 'K']) {
+        return Ok(k.trim().parse::<u64>()? * 1000);
+    }
+    Ok(s.parse()?)
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in opts {
+        let def = o
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = args(&["experiment", "exp1", "--qps", "6.45", "--out=results"]);
+        assert_eq!(a.positional, vec!["experiment", "exp1"]);
+        assert_eq!(a.get("qps"), Some("6.45"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn switches() {
+        let a = args(&["--verbose", "--n", "3"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.u64_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args(&[]);
+        assert_eq!(a.f64_or("qps", 6.45).unwrap(), 6.45);
+        assert_eq!(a.str_or("model", "llama3-8b"), "llama3-8b");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args(&["--qps", "abc"]);
+        assert!(a.f64_or("qps", 1.0).is_err());
+    }
+
+    #[test]
+    fn friendly_ints() {
+        assert_eq!(parse_u64_friendly("2^16").unwrap(), 65536);
+        assert_eq!(parse_u64_friendly("400k").unwrap(), 400_000);
+        assert_eq!(parse_u64_friendly("1024").unwrap(), 1024);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = args(&["--qsp", "5"]);
+        assert!(a.check_known(&["qps"]).is_err());
+        let b = args(&["--qps", "5"]);
+        assert!(b.check_known(&["qps"]).is_ok());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = args(&["--offset", "-5.5"]);
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -5.5);
+    }
+}

@@ -1,0 +1,218 @@
+//! CSV reader/writer for load profiles, signal traces, and experiment
+//! result tables (the Vessim-side interchange format in the paper's
+//! pipeline is CSV).
+//!
+//! Handles quoting (RFC 4180), embedded commas/newlines, and typed
+//! column access. No external crates.
+
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A parsed CSV table: header + rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Convenience: push a row of display-able values.
+    pub fn push<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.push_row(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn col_index(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .with_context(|| format!("no column '{name}'"))
+    }
+
+    /// Typed numeric column.
+    pub fn f64_col(&self, name: &str) -> Result<Vec<f64>> {
+        let i = self.col_index(name)?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[i].parse::<f64>()
+                    .with_context(|| format!("bad f64 '{}' in column {name}", r[i]))
+            })
+            .collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, self.to_csv())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Table> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        parse(&text)
+    }
+
+    /// Render as a GitHub-markdown table (for reports).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(c) {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Parse a CSV document (first record is the header).
+pub fn parse(text: &str) -> Result<Table> {
+    let mut records = Vec::new();
+    let mut cur: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+
+    loop {
+        match chars.next() {
+            None => {
+                if in_quotes {
+                    bail!("unterminated quoted field");
+                }
+                if !field.is_empty() || !cur.is_empty() {
+                    cur.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut cur));
+                }
+                break;
+            }
+            Some('"') if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            Some('"') if field.is_empty() => in_quotes = true,
+            Some(',') if !in_quotes => cur.push(std::mem::take(&mut field)),
+            Some('\r') if !in_quotes => {} // swallow CR of CRLF
+            Some('\n') if !in_quotes => {
+                cur.push(std::mem::take(&mut field));
+                records.push(std::mem::take(&mut cur));
+            }
+            Some(c) => field.push(c),
+        }
+    }
+
+    if records.is_empty() {
+        bail!("empty csv");
+    }
+    let header = records.remove(0);
+    let width = header.len();
+    for (i, r) in records.iter().enumerate() {
+        if r.len() != width {
+            bail!("row {i} has {} cells, header has {width}", r.len());
+        }
+    }
+    Ok(Table {
+        header,
+        rows: records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(&[1.5, 2.0]);
+        t.push(&[3.0, 4.25]);
+        let back = parse(&t.to_csv()).unwrap();
+        assert_eq!(back.header, vec!["a", "b"]);
+        assert_eq!(back.f64_col("b").unwrap(), vec![2.0, 4.25]);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let mut t = Table::new(&["name", "note"]);
+        t.push_row(vec!["x,y".into(), "he said \"hi\"\nnext".into()]);
+        let back = parse(&t.to_csv()).unwrap();
+        assert_eq!(back.rows[0][0], "x,y");
+        assert_eq!(back.rows[0][1], "he said \"hi\"\nnext");
+    }
+
+    #[test]
+    fn crlf_handled() {
+        let t = parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        let t = parse("a,b\n1,2\n").unwrap();
+        assert!(t.f64_col("zzz").is_err());
+    }
+
+    #[test]
+    fn markdown_render() {
+        let mut t = Table::new(&["x"]);
+        t.push(&[1u64]);
+        let md = t.to_markdown();
+        assert!(md.contains("| x |"));
+        assert!(md.contains("| 1 |"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation substrates built from scratch (no external crates
+//! available offline beyond the `xla` closure): JSON, PRNG +
+//! distributions, statistics, time series, CSV, CLI parsing, a
+//! micro-benchmark harness and a property-testing driver.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timeseries;
+pub mod csv;
+pub mod cli;
+pub mod bench;
+pub mod proptest;

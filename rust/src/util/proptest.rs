@@ -1,0 +1,182 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! `check(cases, gen, prop)` runs `prop` over `cases` randomly generated
+//! inputs; on failure it performs greedy shrinking via the generator's
+//! `shrink` hook and panics with the minimal counterexample. Generators
+//! are plain closures over the crate's own `Rng`.
+
+use crate::util::rng::Rng;
+
+/// A reproducible input generator. `gen` draws a value; `shrink`
+/// proposes smaller candidates (may be empty).
+pub struct Gen<T> {
+    pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + std::fmt::Debug + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen {
+            gen: Box::new(gen),
+            shrink: Box::new(|_| Vec::new()),
+        }
+    }
+
+    pub fn with_shrink(mut self, s: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(s);
+        self
+    }
+}
+
+/// Run a property over `cases` random inputs. The seed comes from
+/// REPRO_PROPTEST_SEED when set (reproducing failures), else a fixed
+/// default so CI is deterministic.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    cases: usize,
+    g: Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("REPRO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = (g.gen)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in (g.shrink)(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}\n  (set REPRO_PROPTEST_SEED={seed} to reproduce)"
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gens {
+    use super::*;
+
+    pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+        Gen::new(move |r| r.uniform(lo, hi)).with_shrink(move |&x| {
+            let mut v = Vec::new();
+            if x != lo {
+                v.push(lo);
+                v.push(lo + (x - lo) / 2.0);
+            }
+            v
+        })
+    }
+
+    pub fn u64_in(lo: u64, hi: u64) -> Gen<u64> {
+        Gen::new(move |r| r.int_range(lo, hi)).with_shrink(move |&x| {
+            // Candidates spread over [lo, x): lets the greedy loop close
+            // in on a failure boundary quickly.
+            let mut v: Vec<u64> = (0..16u64).map(|k| lo + (x - lo) * k / 16).collect();
+            if x > lo {
+                v.push(x - 1);
+            }
+            v.sort();
+            v.dedup();
+            v.retain(|&c| c < x);
+            v
+        })
+    }
+
+    /// Vector of f64 with shrinking by halving length.
+    pub fn vec_f64(max_len: usize, lo: f64, hi: f64) -> Gen<Vec<f64>> {
+        Gen::new(move |r| {
+            let n = r.int_range(1, max_len as u64) as usize;
+            (0..n).map(|_| r.uniform(lo, hi)).collect()
+        })
+        .with_shrink(|v: &Vec<f64>| {
+            if v.len() <= 1 {
+                return Vec::new();
+            }
+            vec![v[..v.len() / 2].to_vec(), v[v.len() / 2..].to_vec()]
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(100, gens::f64_in(0.0, 1.0), |&x| {
+            if (0.0..=1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        check(100, gens::u64_in(0, 1000), |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_counterexample() {
+        // Catch the panic and check it shrank towards the boundary.
+        let r = std::panic::catch_unwind(|| {
+            check(200, gens::u64_in(0, 10_000), |&x| {
+                if x < 5000 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // The shrinker closes in on the failure boundary: the reported
+        // input must be in [5000, 5200).
+        let shrunk: u64 = msg
+            .split("input: ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .expect("no input in panic message");
+        assert!(
+            (5000..5200).contains(&shrunk),
+            "unexpected shrink result: {shrunk}"
+        );
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(50, gens::vec_f64(32, -1.0, 1.0), |v| {
+            if v.is_empty() || v.len() > 32 {
+                return Err("bad length".into());
+            }
+            if v.iter().any(|x| !(-1.0..=1.0).contains(x)) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,384 @@
+//! Deterministic PRNG + the distributions the paper's workloads need.
+//!
+//! `rand`/`rand_distr` are not available offline, so this implements
+//! xoshiro256++ (seeded via splitmix64) plus samplers for the
+//! distributions Vidur's workload generators use: uniform, exponential
+//! (Poisson arrivals), Poisson counts, bounded Zipf (request lengths,
+//! paper: θ=0.6 over 1K–4K), normal (Box–Muller), gamma
+//! (Marsaglia–Tsang), and log-normal.
+//!
+//! Everything is deterministic given a seed, which the simulator relies
+//! on for reproducible experiments.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes
+/// BigCrush; more than adequate for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Seed the generator; any u64 seed is valid (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for parallel replicas/sweeps).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive).
+    pub fn int_range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        let span = hi - lo + 1;
+        // Lemire rejection-free-ish reduction; bias negligible for sim use
+        // but use rejection for exactness.
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Inter-arrival
+    /// times of a Poisson process — the paper's arrival model.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // Avoid ln(0).
+        let u = 1.0 - self.f64();
+        -u.ln() / lambda
+    }
+
+    /// Poisson count with mean `lambda` (Knuth for small, PTRS-style
+    /// normal approximation fallback for large lambda).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation with continuity correction; fine for
+            // the simulator's burst-count use.
+            let n = self.normal(lambda, lambda.sqrt());
+            n.max(0.0).round() as u64
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn std_normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.std_normal()
+    }
+
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang (k >= 1 squeeze;
+    /// boost for k < 1).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.std_normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.int_range(0, i as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.int_range(0, xs.len() as u64 - 1) as usize]
+    }
+}
+
+/// Bounded Zipf sampler over `{lo, .., hi}` with exponent `theta`
+/// (paper: request lengths Zipf(θ=0.6) over 1K–4K tokens).
+///
+/// Uses an inverted-CDF table; O(log n) per sample, exact.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    lo: u64,
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(lo: u64, hi: u64, theta: f64) -> Self {
+        assert!(hi >= lo, "zipf range empty");
+        let n = (hi - lo + 1) as usize;
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            // rank 1 == lo (shortest requests are the most common,
+            // matching the power-law structure of language data).
+            acc += 1.0 / ((k + 1) as f64).powf(theta);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { lo, cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let idx = match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        self.lo + idx.min(self.cdf.len() - 1) as u64
+    }
+
+    /// Analytic mean of the distribution (used by capacity planning).
+    pub fn mean(&self) -> f64 {
+        let mut m = 0.0;
+        let mut prev = 0.0;
+        for (k, c) in self.cdf.iter().enumerate() {
+            m += (self.lo + k as u64) as f64 * (c - prev);
+            prev = *c;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform(2.0, 4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn int_range_inclusive_bounds() {
+        let mut r = Rng::new(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.int_range(5, 8);
+            assert!((5..=8).contains(&v));
+            seen_lo |= v == 5;
+            seen_hi |= v == 8;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(11);
+        let lambda = 6.45; // the paper's default QPS
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.002, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::new(13);
+        for &lambda in &[0.5, 4.0, 20.0, 100.0] {
+            let n = 50_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(10.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(19);
+        let (k, th) = (3.0, 2.0);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gamma(k, th)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - k * th).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn gamma_shape_below_one() {
+        let mut r = Rng::new(23);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| r.gamma(0.5, 1.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_bounds_and_skew() {
+        let mut r = Rng::new(29);
+        let z = Zipf::new(1024, 4096, 0.6);
+        let mut counts_low = 0;
+        let n = 50_000;
+        for _ in 0..n {
+            let v = z.sample(&mut r);
+            assert!((1024..=4096).contains(&v));
+            if v < 2048 {
+                counts_low += 1;
+            }
+        }
+        // Zipf(0.6) over this range is mildly skewed towards short.
+        assert!(counts_low as f64 > 0.35 * n as f64);
+    }
+
+    #[test]
+    fn zipf_empirical_mean_matches_analytic() {
+        let mut r = Rng::new(31);
+        let z = Zipf::new(128, 512, 1.1);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| z.sample(&mut r) as f64).sum::<f64>() / n as f64;
+        assert!((mean - z.mean()).abs() < 2.0, "emp {mean} vs {}", z.mean());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(37);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(41);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Time-series container with the interpolation/resampling operations
+//! the Vessim-side signals need (the paper resamples Solcast/WattTime
+//! with cubic interpolation to the co-simulation resolution).
+//!
+//! Implements linear and monotone-cubic (PCHIP, Fritsch–Carlson)
+//! interpolation — PCHIP rather than a natural cubic spline because
+//! irradiance/carbon-intensity traces must not overshoot (no negative
+//! solar power from interpolation artifacts).
+
+/// A strictly-time-ordered series of (t_seconds, value) samples.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    t: Vec<f64>,
+    v: Vec<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interp {
+    /// Piecewise-constant (previous value) — Vessim's default for
+    /// load profiles.
+    Step,
+    Linear,
+    /// Monotone cubic (PCHIP); shape-preserving, no overshoot.
+    Cubic,
+}
+
+impl TimeSeries {
+    pub fn new(t: Vec<f64>, v: Vec<f64>) -> Self {
+        assert_eq!(t.len(), v.len(), "time/value length mismatch");
+        assert!(!t.is_empty(), "empty time series");
+        assert!(
+            t.windows(2).all(|w| w[0] < w[1]),
+            "timestamps must be strictly increasing"
+        );
+        TimeSeries { t, v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        false // constructor forbids empty
+    }
+    pub fn times(&self) -> &[f64] {
+        &self.t
+    }
+    pub fn values(&self) -> &[f64] {
+        &self.v
+    }
+    pub fn start(&self) -> f64 {
+        self.t[0]
+    }
+    pub fn end(&self) -> f64 {
+        *self.t.last().unwrap()
+    }
+
+    /// Index of the last sample with t <= query (None if before start).
+    fn locate(&self, t: f64) -> Option<usize> {
+        if t < self.t[0] {
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.t.len();
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.t[mid] <= t {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+
+    /// Sample at time `t` with the given interpolation. Clamps outside
+    /// the covered range (held at the boundary values).
+    pub fn at(&self, t: f64, interp: Interp) -> f64 {
+        let n = self.t.len();
+        match self.locate(t) {
+            None => self.v[0],
+            Some(i) if i + 1 >= n => self.v[n - 1],
+            Some(i) => {
+                let (t0, t1) = (self.t[i], self.t[i + 1]);
+                let (y0, y1) = (self.v[i], self.v[i + 1]);
+                match interp {
+                    Interp::Step => y0,
+                    Interp::Linear => {
+                        let a = (t - t0) / (t1 - t0);
+                        y0 + a * (y1 - y0)
+                    }
+                    Interp::Cubic => {
+                        let (d0, d1) = self.pchip_slopes(i);
+                        let h = t1 - t0;
+                        let s = (t - t0) / h;
+                        let s2 = s * s;
+                        let s3 = s2 * s;
+                        let h00 = 2.0 * s3 - 3.0 * s2 + 1.0;
+                        let h10 = s3 - 2.0 * s2 + s;
+                        let h01 = -2.0 * s3 + 3.0 * s2;
+                        let h11 = s3 - s2;
+                        h00 * y0 + h10 * h * d0 + h01 * y1 + h11 * h * d1
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fritsch–Carlson monotone slopes at segment i's endpoints.
+    fn pchip_slopes(&self, i: usize) -> (f64, f64) {
+        let n = self.t.len();
+        let delta = |k: usize| (self.v[k + 1] - self.v[k]) / (self.t[k + 1] - self.t[k]);
+        let slope_at = |k: usize| -> f64 {
+            if k == 0 {
+                delta(0)
+            } else if k == n - 1 {
+                delta(n - 2)
+            } else {
+                let d0 = delta(k - 1);
+                let d1 = delta(k);
+                if d0 * d1 <= 0.0 {
+                    0.0 // local extremum: flat tangent preserves monotonicity
+                } else {
+                    // Weighted harmonic mean (Fritsch–Butland variant).
+                    let h0 = self.t[k] - self.t[k - 1];
+                    let h1 = self.t[k + 1] - self.t[k];
+                    let w1 = 2.0 * h1 + h0;
+                    let w2 = h1 + 2.0 * h0;
+                    (w1 + w2) / (w1 / d0 + w2 / d1)
+                }
+            }
+        };
+        (slope_at(i), slope_at(i + 1))
+    }
+
+    /// Resample onto a fixed grid `[start, end)` with step `dt`.
+    pub fn resample(&self, start: f64, end: f64, dt: f64, interp: Interp) -> TimeSeries {
+        assert!(dt > 0.0 && end > start);
+        let n = ((end - start) / dt).ceil() as usize;
+        let t: Vec<f64> = (0..n).map(|i| start + i as f64 * dt).collect();
+        let v: Vec<f64> = t.iter().map(|&ti| self.at(ti, interp)).collect();
+        TimeSeries::new(t, v)
+    }
+
+    /// Mean value over `[a, b]` by trapezoidal integration of the
+    /// linear interpolant (used in energy summaries).
+    pub fn mean_over(&self, a: f64, b: f64, samples: usize) -> f64 {
+        assert!(b > a && samples >= 2);
+        let dt = (b - a) / (samples - 1) as f64;
+        let mut acc = 0.0;
+        for i in 0..samples {
+            let w = if i == 0 || i == samples - 1 { 0.5 } else { 1.0 };
+            acc += w * self.at(a + i as f64 * dt, Interp::Linear);
+        }
+        acc / (samples - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ts() -> TimeSeries {
+        TimeSeries::new(vec![0.0, 1.0, 2.0, 3.0], vec![0.0, 10.0, 10.0, 0.0])
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unordered() {
+        TimeSeries::new(vec![0.0, 0.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn step_holds_previous() {
+        let s = ts();
+        assert_eq!(s.at(0.5, Interp::Step), 0.0);
+        assert_eq!(s.at(1.0, Interp::Step), 10.0);
+        assert_eq!(s.at(1.99, Interp::Step), 10.0);
+    }
+
+    #[test]
+    fn linear_midpoints() {
+        let s = ts();
+        assert!((s.at(0.5, Interp::Linear) - 5.0).abs() < 1e-12);
+        assert!((s.at(2.5, Interp::Linear) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let s = ts();
+        for interp in [Interp::Step, Interp::Linear, Interp::Cubic] {
+            assert_eq!(s.at(-5.0, interp), 0.0);
+            assert_eq!(s.at(99.0, interp), 0.0);
+        }
+    }
+
+    #[test]
+    fn cubic_hits_knots() {
+        let s = ts();
+        for (i, &t) in s.times().iter().enumerate() {
+            assert!((s.at(t, Interp::Cubic) - s.values()[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cubic_no_overshoot_on_plateau() {
+        // PCHIP must not overshoot above the plateau value of 10.
+        let s = ts();
+        for k in 0..100 {
+            let t = 0.0 + 3.0 * k as f64 / 99.0;
+            let y = s.at(t, Interp::Cubic);
+            assert!(
+                y <= 10.0 + 1e-9 && y >= -1e-9,
+                "overshoot at t={t}: {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn cubic_monotone_on_monotone_data() {
+        let s = TimeSeries::new(
+            vec![0.0, 1.0, 2.0, 3.0, 4.0],
+            vec![0.0, 1.0, 4.0, 9.0, 16.0],
+        );
+        let mut prev = -1.0;
+        for k in 0..200 {
+            let t = 4.0 * k as f64 / 199.0;
+            let y = s.at(t, Interp::Cubic);
+            assert!(y >= prev - 1e-9, "non-monotone at {t}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn resample_grid() {
+        let s = ts();
+        let r = s.resample(0.0, 3.0, 0.5, Interp::Linear);
+        assert_eq!(r.len(), 6);
+        assert!((r.values()[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_over_trapezoid() {
+        let s = TimeSeries::new(vec![0.0, 10.0], vec![0.0, 10.0]);
+        let m = s.mean_over(0.0, 10.0, 101);
+        assert!((m - 5.0).abs() < 1e-9, "mean {m}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Request generation: arrival processes (Poisson / Gamma / batch) ×
+//! length distributions (Zipf / fixed / uniform) with optional
+//! prefill:decode ratio control — the knobs the paper's experiments
+//! sweep (Table 1a; Exp. 2 P:D ratios; Exp. 4 QPS).
+
+use crate::config::simconfig::{Arrival, LengthDist, SimConfig};
+use crate::util::rng::{Rng, Zipf};
+use crate::workload::request::Request;
+
+/// Default prefill fraction when no P:D ratio is given: LLM chat
+/// workloads are prompt-heavy; Vidur's default traces use roughly
+/// 4:1 prompt:output.
+const DEFAULT_PD_RATIO: f64 = 4.0;
+
+/// Deterministic request-stream generator.
+pub struct WorkloadGenerator {
+    rng: Rng,
+    arrival: Arrival,
+    lengths: LengthDist,
+    pd_ratio: f64,
+    max_tokens: u64,
+    zipf: Option<Zipf>,
+    next_id: u64,
+    clock_s: f64,
+}
+
+impl WorkloadGenerator {
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        Self::new(
+            cfg.arrival.clone(),
+            cfg.lengths.clone(),
+            cfg.prefill_decode_ratio,
+            cfg.max_tokens,
+            cfg.seed,
+        )
+    }
+
+    pub fn new(
+        arrival: Arrival,
+        lengths: LengthDist,
+        pd_ratio: Option<f64>,
+        max_tokens: u64,
+        seed: u64,
+    ) -> Self {
+        let zipf = match &lengths {
+            LengthDist::Zipf { theta, min, max } => Some(Zipf::new(*min, *max, *theta)),
+            _ => None,
+        };
+        WorkloadGenerator {
+            rng: Rng::new(seed),
+            arrival,
+            lengths,
+            pd_ratio: pd_ratio.unwrap_or(DEFAULT_PD_RATIO),
+            max_tokens,
+            zipf,
+            next_id: 0,
+            clock_s: 0.0,
+        }
+    }
+
+    fn sample_total(&mut self) -> u64 {
+        let total = match &self.lengths {
+            LengthDist::Zipf { .. } => self.zipf.as_ref().unwrap().sample(&mut self.rng),
+            LengthDist::Fixed { total } => *total,
+            LengthDist::Uniform { min, max } => self.rng.int_range(*min, *max),
+        };
+        total.clamp(2, self.max_tokens)
+    }
+
+    fn advance_clock(&mut self) -> f64 {
+        match &self.arrival {
+            Arrival::Poisson { qps } => {
+                self.clock_s += self.rng.exponential(*qps);
+            }
+            Arrival::Gamma { qps, cv } => {
+                // Gamma inter-arrivals with mean 1/qps and the given
+                // coefficient of variation: shape k = 1/cv², scale θ = cv²/qps.
+                let k = 1.0 / (cv * cv);
+                let theta = cv * cv / qps;
+                self.clock_s += self.rng.gamma(k, theta);
+            }
+            Arrival::Batch => {}
+        }
+        self.clock_s
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> Request {
+        let at = self.advance_clock();
+        let total = self.sample_total();
+        let (prefill, decode) = Request::split_by_ratio(total, self.pd_ratio);
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, at, prefill, decode)
+    }
+
+    /// Generate a full workload of `n` requests (sorted by arrival).
+    pub fn generate(&mut self, n: u64) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+
+    fn gen(qps: f64, seed: u64) -> WorkloadGenerator {
+        WorkloadGenerator::new(
+            Arrival::Poisson { qps },
+            LengthDist::Zipf {
+                theta: 0.6,
+                min: 1024,
+                max: 4096,
+            },
+            Some(20.0),
+            4096,
+            seed,
+        )
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(6.45, 7).generate(100);
+        let b = gen(6.45, 7).generate(100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prefill_tokens, y.prefill_tokens);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_close() {
+        let reqs = gen(20.0, 11).generate(20_000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 20.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn lengths_within_bounds_and_ratio_respected() {
+        let reqs = gen(6.45, 13).generate(5_000);
+        for r in &reqs {
+            let total = r.total_tokens();
+            assert!((1024..=4096).contains(&total), "total {total}");
+            assert!(r.prefill_tokens >= 1 && r.decode_tokens >= 1);
+        }
+        // Aggregate P:D close to 20.
+        let p: u64 = reqs.iter().map(|r| r.prefill_tokens).sum();
+        let d: u64 = reqs.iter().map(|r| r.decode_tokens).sum();
+        let ratio = p as f64 / d as f64;
+        assert!((ratio - 20.0).abs() < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn batch_arrival_all_at_zero() {
+        let mut g = WorkloadGenerator::new(
+            Arrival::Batch,
+            LengthDist::Fixed { total: 256 },
+            None,
+            4096,
+            1,
+        );
+        for r in g.generate(10) {
+            assert_eq!(r.arrival_s, 0.0);
+            assert_eq!(r.total_tokens(), 256);
+        }
+    }
+
+    #[test]
+    fn gamma_burstier_than_poisson() {
+        // Compare coefficient of variation of inter-arrival times.
+        let cv = |reqs: &[Request]| {
+            let gaps: Vec<f64> = reqs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m).powi(2)).sum::<f64>() / gaps.len() as f64;
+            v.sqrt() / m
+        };
+        let pois = gen(5.0, 17).generate(20_000);
+        let mut g = WorkloadGenerator::new(
+            Arrival::Gamma { qps: 5.0, cv: 3.0 },
+            LengthDist::Fixed { total: 100 },
+            None,
+            4096,
+            17,
+        );
+        let gam = g.generate(20_000);
+        assert!(cv(&gam) > 2.0 * cv(&pois), "gamma {} pois {}", cv(&gam), cv(&pois));
+    }
+
+    #[test]
+    fn total_clamped_to_max_tokens() {
+        let mut g = WorkloadGenerator::new(
+            Arrival::Batch,
+            LengthDist::Uniform { min: 100, max: 100_000 },
+            None,
+            4096,
+            3,
+        );
+        for r in g.generate(500) {
+            assert!(r.total_tokens() <= 4096);
+        }
+    }
+
+    #[test]
+    fn property_any_seed_valid_requests() {
+        check(30, gens::u64_in(0, u64::MAX / 2), |&seed| {
+            let reqs = gen(6.45, seed).generate(50);
+            for r in &reqs {
+                if r.prefill_tokens == 0 || r.decode_tokens == 0 {
+                    return Err(format!("empty phase in {r:?}"));
+                }
+                if r.total_tokens() > 4096 {
+                    return Err(format!("too long: {r:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload layer: requests, arrival processes, length distributions,
+//! trace export/replay — the Vidur-side request generators.
+
+pub mod request;
+pub mod generator;
+pub mod trace;
+
+pub use generator::WorkloadGenerator;
+pub use request::{Request, RequestId};
+pub use trace::Trace;

@@ -1,0 +1,168 @@
+//! The unit of work: one inference request with prefill/decode token
+//! budgets and the lifecycle timestamps the metrics layer needs.
+
+pub type RequestId = u64;
+
+/// Lifecycle state of a request inside a replica scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting in the replica queue (not yet admitted to a batch).
+    Queued,
+    /// Prefill in progress (`prefill_done < prefill_tokens`).
+    Prefill,
+    /// Autoregressive decode (one token per iteration).
+    Decode,
+    /// All decode tokens produced.
+    Finished,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time, seconds of simulation clock.
+    pub arrival_s: f64,
+    /// Prompt tokens to prefill.
+    pub prefill_tokens: u64,
+    /// Tokens to generate.
+    pub decode_tokens: u64,
+
+    // --- progress (mutated by the scheduler) ---
+    pub prefill_done: u64,
+    pub decode_done: u64,
+
+    // --- lifecycle timestamps (set by the simulator) ---
+    /// First admitted into a running batch.
+    pub scheduled_s: Option<f64>,
+    /// First output token produced (end of first decode iteration).
+    pub first_token_s: Option<f64>,
+    /// Completed.
+    pub finished_s: Option<f64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival_s: f64, prefill_tokens: u64, decode_tokens: u64) -> Self {
+        assert!(prefill_tokens > 0, "request must have a prompt");
+        assert!(decode_tokens > 0, "request must generate >= 1 token");
+        Request {
+            id,
+            arrival_s,
+            prefill_tokens,
+            decode_tokens,
+            prefill_done: 0,
+            decode_done: 0,
+            scheduled_s: None,
+            first_token_s: None,
+            finished_s: None,
+        }
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.prefill_tokens + self.decode_tokens
+    }
+
+    /// Tokens currently resident in the KV cache.
+    pub fn context_len(&self) -> u64 {
+        self.prefill_done + self.decode_done
+    }
+
+    pub fn phase(&self) -> Phase {
+        if self.decode_done >= self.decode_tokens {
+            Phase::Finished
+        } else if self.prefill_done >= self.prefill_tokens {
+            Phase::Decode
+        } else if self.prefill_done > 0 || self.scheduled_s.is_some() {
+            Phase::Prefill
+        } else {
+            Phase::Queued
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase() == Phase::Finished
+    }
+
+    /// Remaining prefill tokens.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.prefill_tokens - self.prefill_done
+    }
+
+    /// End-to-end latency (None until finished).
+    pub fn e2e_latency(&self) -> Option<f64> {
+        self.finished_s.map(|f| f - self.arrival_s)
+    }
+
+    /// Time to first token (None until the first token exists).
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|f| f - self.arrival_s)
+    }
+
+    /// Split a total length into (prefill, decode) by a P:D ratio
+    /// (Exp. 2: ratios from 50:1 to 1:50), guaranteeing both >= 1.
+    pub fn split_by_ratio(total: u64, ratio: f64) -> (u64, u64) {
+        assert!(total >= 2, "need at least 2 tokens to split");
+        assert!(ratio > 0.0);
+        let prefill = ((total as f64) * ratio / (1.0 + ratio)).round() as u64;
+        let prefill = prefill.clamp(1, total - 1);
+        (prefill, total - prefill)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_phases() {
+        let mut r = Request::new(1, 0.0, 100, 10);
+        assert_eq!(r.phase(), Phase::Queued);
+        r.scheduled_s = Some(0.1);
+        assert_eq!(r.phase(), Phase::Prefill);
+        r.prefill_done = 100;
+        assert_eq!(r.phase(), Phase::Decode);
+        r.decode_done = 10;
+        assert_eq!(r.phase(), Phase::Finished);
+        assert!(r.is_finished());
+    }
+
+    #[test]
+    fn context_grows_with_progress() {
+        let mut r = Request::new(1, 0.0, 50, 5);
+        assert_eq!(r.context_len(), 0);
+        r.prefill_done = 50;
+        r.decode_done = 3;
+        assert_eq!(r.context_len(), 53);
+    }
+
+    #[test]
+    fn latency_metrics() {
+        let mut r = Request::new(1, 2.0, 10, 2);
+        assert_eq!(r.e2e_latency(), None);
+        r.first_token_s = Some(3.0);
+        r.finished_s = Some(5.0);
+        assert_eq!(r.ttft(), Some(1.0));
+        assert_eq!(r.e2e_latency(), Some(3.0));
+    }
+
+    #[test]
+    fn split_by_ratio_extremes() {
+        // 50:1 prefill-heavy.
+        let (p, d) = Request::split_by_ratio(1020, 50.0);
+        assert_eq!(p + d, 1020);
+        assert!(p as f64 / d as f64 > 40.0);
+        // 1:50 decode-heavy.
+        let (p, d) = Request::split_by_ratio(1020, 1.0 / 50.0);
+        assert!(d as f64 / p as f64 > 40.0);
+        // Both always >= 1.
+        let (p, d) = Request::split_by_ratio(2, 1000.0);
+        assert!(p >= 1 && d >= 1);
+        let (p, d) = Request::split_by_ratio(2, 0.0001);
+        assert!(p >= 1 && d >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "prompt")]
+    fn zero_prefill_rejected() {
+        Request::new(1, 0.0, 0, 5);
+    }
+}

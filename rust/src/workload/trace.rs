@@ -1,0 +1,110 @@
+//! Request-trace export/replay: persist a generated workload as CSV so
+//! runs are exactly repeatable across configurations (the paper holds
+//! the workload fixed while sweeping batch size, QPS, parallelism).
+
+use crate::util::csv::Table;
+use crate::workload::request::Request;
+use anyhow::Result;
+use std::path::Path;
+
+/// A materialized request stream.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(requests: Vec<Request>) -> Self {
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Duration from first to last arrival.
+    pub fn arrival_span_s(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        self.requests.last().unwrap().arrival_s - self.requests[0].arrival_s
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.total_tokens()).sum()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut t = Table::new(&["id", "arrival_s", "prefill_tokens", "decode_tokens"]);
+        for r in &self.requests {
+            t.push_row(vec![
+                r.id.to_string(),
+                format!("{:.6}", r.arrival_s),
+                r.prefill_tokens.to_string(),
+                r.decode_tokens.to_string(),
+            ]);
+        }
+        t.save(path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+        let t = Table::load(path)?;
+        let ids = t.f64_col("id")?;
+        let at = t.f64_col("arrival_s")?;
+        let pf = t.f64_col("prefill_tokens")?;
+        let dc = t.f64_col("decode_tokens")?;
+        let mut requests: Vec<Request> = ids
+            .iter()
+            .zip(&at)
+            .zip(&pf)
+            .zip(&dc)
+            .map(|(((id, a), p), d)| Request::new(*id as u64, *a, *p as u64, *d as u64))
+            .collect();
+        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        Ok(Trace { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::{Arrival, LengthDist};
+    use crate::workload::generator::WorkloadGenerator;
+
+    #[test]
+    fn roundtrip_through_csv() {
+        let mut g = WorkloadGenerator::new(
+            Arrival::Poisson { qps: 6.45 },
+            LengthDist::Zipf { theta: 0.6, min: 128, max: 2048 },
+            None,
+            4096,
+            5,
+        );
+        let tr = Trace::new(g.generate(50));
+        let dir = std::env::temp_dir().join("vidur_energy_trace_test");
+        let path = dir.join("trace.csv");
+        tr.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.requests.iter().zip(&back.requests) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-5);
+            assert_eq!(a.prefill_tokens, b.prefill_tokens);
+            assert_eq!(a.decode_tokens, b.decode_tokens);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn span_and_tokens() {
+        let tr = Trace::new(vec![
+            Request::new(0, 1.0, 10, 5),
+            Request::new(1, 4.0, 20, 5),
+        ]);
+        assert_eq!(tr.arrival_span_s(), 3.0);
+        assert_eq!(tr.total_tokens(), 40);
+    }
+}

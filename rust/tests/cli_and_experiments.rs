@@ -1,0 +1,151 @@
+//! Integration tests over the CLI dispatch layer and the experiment
+//! regenerators (fast variants), verifying the repository's operational
+//! surface: every experiment writes its CSV + metadata and reports the
+//! paper-shaped columns.
+
+use vidur_energy::experiments;
+use vidur_energy::report;
+use vidur_energy::util::csv::Table;
+
+fn artifacts_present() -> bool {
+    vidur_energy::runtime::ArtifactStore::discover().is_ok()
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("vidur_energy_it_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn fig1_fast_produces_saturating_mfu() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("fig1");
+    let t = experiments::fig1::run(&dir, true).unwrap();
+    assert!(dir.join("fig1/fig1.csv").exists());
+    assert!(dir.join("fig1/meta.json").exists());
+    let mfu = t.f64_col("weighted_mfu").unwrap();
+    // Monotone-ish growth toward saturation: last > first.
+    assert!(mfu.last().unwrap() > &(mfu[0] * 1.2), "{mfu:?}");
+    // Never exceeds the efficiency ceiling.
+    assert!(mfu.iter().all(|&m| m <= 0.47));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn exp3_fast_shows_batching_energy_savings() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("exp3");
+    let t = experiments::exp3::run(&dir, true).unwrap();
+    let energy = t.f64_col("energy_kwh").unwrap();
+    // cap=1 (first row) must cost more than cap=128 (last row).
+    assert!(
+        energy[0] > *energy.last().unwrap(),
+        "batching should save energy: {energy:?}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn exp5_fast_covers_parallelism_grid() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("exp5");
+    let t = experiments::exp5::run(&dir, true).unwrap();
+    assert_eq!(t.rows.len(), 4); // fast grid
+    let power = t.f64_col("avg_power_w").unwrap();
+    assert!(power.iter().all(|&p| (100.0..=400.0).contains(&p)));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn report_assembles_multiple_experiments() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("report");
+    experiments::fig1::run(&dir, true).unwrap();
+    experiments::ablation::run(&dir, true).unwrap();
+    let md = report::assemble(&dir).unwrap();
+    assert!(md.contains("## fig1"));
+    assert!(md.contains("## ablation"));
+    assert!(md.contains("paper:"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn casestudy_fast_end_to_end_writes_all_figures() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("cs");
+    let t = experiments::casestudy::run(&dir, true).unwrap();
+    // Table-2 metric rows present with paper reference column.
+    let metrics: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+    for want in [
+        "total_energy_kwh",
+        "renewable_share_pct",
+        "carbon_offset_pct",
+        "battery_full_cycles",
+    ] {
+        assert!(metrics.contains(&want), "missing metric {want}");
+    }
+    for f in [
+        "casestudy/casestudy.csv",
+        "casestudy/fig6_power_flows.csv",
+        "casestudy/fig7_battery_emissions.csv",
+        "casestudy/load_profile.csv",
+        "casestudy/meta.json",
+    ] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+    // Offset identity holds in the baseline column.
+    let by = |name: &str| {
+        t.rows
+            .iter()
+            .find(|r| r[0] == name)
+            .map(|r| r[1].parse::<f64>().unwrap())
+            .unwrap()
+    };
+    let total = by("total_emissions_kg") * 1000.0;
+    let offset = by("offset_by_solar_kg") * 1000.0;
+    let net = by("net_footprint_g");
+    assert!((total - (offset + net)).abs() < 20.0, "identity violated");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn load_profile_fig6_consistent_with_summary() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("cs2");
+    experiments::casestudy::run(&dir, true).unwrap();
+    let fig6 = Table::load(dir.join("casestudy/fig6_power_flows.csv")).unwrap();
+    let load = fig6.f64_col("load_w").unwrap();
+    let solar = fig6.f64_col("solar_w").unwrap();
+    let grid = fig6.f64_col("grid_w").unwrap();
+    let batt = fig6.f64_col("battery_w").unwrap();
+    // Instantaneous power balance in every minute of Fig. 6.
+    for i in 0..load.len() {
+        let supply = solar[i].min(load[i]) + grid[i].max(0.0) + batt[i].max(0.0);
+        assert!(
+            (supply - load[i]).abs() < 0.5,
+            "imbalance at row {i}: load {} supply {supply}",
+            load[i]
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

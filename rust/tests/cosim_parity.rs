@@ -1,0 +1,75 @@
+//! The AOT cosim kernel (battery/microgrid scan, JAX/Pallas) must
+//! reproduce the native rust microgrid loop step-for-step, including
+//! SoC chaining across 1440-step chunk boundaries.
+
+use vidur_energy::config::simconfig::CosimConfig;
+use vidur_energy::cosim::Environment;
+use vidur_energy::util::rng::Rng;
+
+fn artifacts_present() -> bool {
+    vidur_energy::runtime::ArtifactStore::discover().is_ok()
+}
+
+fn signals(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let load: Vec<f64> = (0..n).map(|_| rng.uniform(50.0, 500.0)).collect();
+    let solar: Vec<f64> = (0..n)
+        .map(|i| {
+            let h = (i as f64 / 60.0).rem_euclid(24.0);
+            if (6.0..20.0).contains(&h) {
+                550.0 * (std::f64::consts::PI * (h - 6.0) / 14.0).sin()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let ci: Vec<f64> = (0..n).map(|_| rng.uniform(80.0, 550.0)).collect();
+    (load, solar, ci)
+}
+
+#[test]
+fn hlo_cosim_matches_native_over_three_days() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let n = 3 * 1440 + 77; // cross chunk boundaries incl. a ragged tail
+    let (load, solar, ci) = signals(n, 0xC051);
+
+    let mut env_native = Environment::new(CosimConfig::default());
+    let native = env_native.run_native(&load, &solar, &ci).unwrap();
+    let mut env_hlo = Environment::new(CosimConfig::default());
+    let hlo = env_hlo.run_hlo(&load, &solar, &ci).unwrap();
+
+    assert_eq!(native.records.len(), hlo.records.len());
+    for (a, b) in native.records.iter().zip(&hlo.records) {
+        assert!((a.soc - b.soc).abs() < 2e-4, "soc {} vs {} at {}", a.soc, b.soc, a.t_s);
+        assert!(
+            (a.grid_w - b.grid_w).abs() < 0.2,
+            "grid {} vs {} at {}",
+            a.grid_w,
+            b.grid_w,
+            a.t_s
+        );
+        assert!((a.battery_w - b.battery_w).abs() < 0.2);
+        assert!((a.emissions_g - b.emissions_g).abs() < 0.05);
+    }
+    // Summary metrics agree.
+    assert!((native.total_energy_kwh - hlo.total_energy_kwh).abs() < 1e-3);
+    assert!((native.net_footprint_g - hlo.net_footprint_g).abs() < 2.0);
+    assert!((native.renewable_share - hlo.renewable_share).abs() < 1e-3);
+    assert!((native.battery_full_cycles - hlo.battery_full_cycles).abs() < 0.02);
+}
+
+#[test]
+fn hlo_cosim_rejects_controller() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use vidur_energy::cosim::CarbonAwareController;
+    let mut env = Environment::new(CosimConfig::default())
+        .with_controller(CarbonAwareController::new(100.0, 200.0, 0.5));
+    let r = env.run_hlo(&[100.0], &[0.0], &[300.0]);
+    assert!(r.is_err(), "controller feedback must force the native path");
+}

@@ -1,0 +1,137 @@
+//! Cross-layer parity: the AOT HLO stage oracle (JAX/Pallas, compiled
+//! through PJRT) must agree with the native rust roofline model — the
+//! two implementations of the same math (Eq. 1 + Eq. 2 + roofline) in
+//! different layers of the stack.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use vidur_energy::config::simconfig::ExecParams;
+use vidur_energy::config::{gpus, models};
+use vidur_energy::exec::batch::BatchDesc;
+use vidur_energy::exec::hlo::HloCost;
+use vidur_energy::exec::native::NativeCost;
+use vidur_energy::exec::StageCostModel;
+use vidur_energy::util::rng::Rng;
+
+fn artifacts_present() -> bool {
+    vidur_energy::runtime::ArtifactStore::discover().is_ok()
+}
+
+fn batch_for(model: &str, gpu: &str, tp: u32, pp: u32) -> BatchDesc {
+    BatchDesc::new(
+        models::model(model).unwrap(),
+        gpus::gpu(gpu).unwrap(),
+        tp,
+        pp,
+        ExecParams::default(),
+    )
+}
+
+/// f32 through the HLO path vs f64 native: tolerances account for the
+/// precision gap (flops values reach 1e15).
+fn assert_close(native: f64, hlo: f64, rel: f64, what: &str) {
+    let denom = native.abs().max(1e-12);
+    assert!(
+        (native - hlo).abs() / denom < rel,
+        "{what}: native {native} vs hlo {hlo}"
+    );
+}
+
+#[test]
+fn hlo_matches_native_across_batches() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut hlo = HloCost::new().unwrap().exact();
+    let mut rng = Rng::new(0xBEEF);
+    let cases = [
+        ("llama3-8b", 1u32, 1u32),
+        ("llama2-7b", 1, 1),
+        ("codellama-34b", 2, 1),
+        ("llama3-70b", 2, 2),
+        ("qwen-72b", 4, 1),
+        ("phi-2", 1, 2),
+    ];
+    for (model, tp, pp) in cases {
+        for _ in 0..8 {
+            let mut b = batch_for(model, "a100-80g", tp, pp);
+            let n = rng.int_range(1, 128);
+            for _ in 0..n {
+                if rng.f64() < 0.25 {
+                    b.push(rng.int_range(2, 4096) as u32, rng.int_range(0, 512) as u32);
+                } else {
+                    b.push(1, rng.int_range(1, 4096) as u32);
+                }
+            }
+            let nat = NativeCost::compute(&b);
+            let oracle = hlo.stage_cost(&b);
+            assert_close(nat.t_stage_s, oracle.t_stage_s, 2e-3, "t_stage");
+            assert_close(nat.flops, oracle.flops, 2e-3, "flops");
+            assert_close(nat.mfu, oracle.mfu, 2e-3, "mfu");
+            assert_close(nat.power_w, oracle.power_w, 2e-3, "power");
+        }
+    }
+}
+
+#[test]
+fn hlo_empty_batch_is_idle() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut hlo = HloCost::new().unwrap().exact();
+    let b = batch_for("llama3-8b", "a100-80g", 1, 1);
+    let c = hlo.stage_cost(&b);
+    assert!((c.power_w - 100.0).abs() < 0.1, "power {}", c.power_w);
+    assert!(c.flops.abs() < 1.0);
+}
+
+#[test]
+fn hlo_gpu_variants_change_power_envelope() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut hlo = HloCost::new().unwrap().exact();
+    // Saturating prefill on each GPU: power must approach its p_max.
+    for (gpu, pmax) in [("a100-80g", 400.0), ("h100", 700.0), ("a40", 300.0)] {
+        let mut b = batch_for("llama2-7b", gpu, 1, 1);
+        b.push(4096, 0);
+        let c = hlo.stage_cost(&b);
+        assert!(
+            c.power_w > 0.85 * pmax,
+            "{gpu}: power {} vs pmax {pmax}",
+            c.power_w
+        );
+    }
+}
+
+#[test]
+fn quantized_cache_hits_and_stays_close() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut hlo = HloCost::new().unwrap(); // quantized (default)
+    let mut rng = Rng::new(7);
+    // Many decode batches with slightly-varying contexts: quantization
+    // must produce cache hits while keeping results close to native.
+    for _ in 0..200 {
+        let mut b = batch_for("llama3-8b", "a100-80g", 1, 1);
+        let n = 32;
+        for _ in 0..n {
+            b.push(1, 1000 + rng.int_range(0, 40) as u32);
+        }
+        let nat = NativeCost::compute(&b);
+        let got = hlo.stage_cost(&b);
+        assert_close(nat.t_stage_s, got.t_stage_s, 0.05, "quantized t_stage");
+        assert_close(nat.power_w, got.power_w, 0.05, "quantized power");
+    }
+    assert!(
+        hlo.hits > 150,
+        "expected heavy cache reuse, got {}/{} hits",
+        hlo.hits,
+        hlo.calls
+    );
+}
