@@ -35,7 +35,13 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Eq. 5 pipeline into 1-minute bins.
     let cosim = CosimConfig::default();
-    let binned = bin_stages(&cfg, &out.stagelog, out.metrics.makespan_s, cosim.interval_s, BinningBackend::Native)?;
+    let binned = bin_stages(
+        &cfg,
+        &out.stagelog,
+        out.metrics.makespan_s,
+        cosim.interval_s,
+        BinningBackend::Native,
+    )?;
     let profile = LoadProfile::from_binned(&binned);
 
     // 3. Environment signals starting at 06:00.

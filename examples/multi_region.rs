@@ -21,13 +21,22 @@ fn main() -> anyhow::Result<()> {
     println!("simulating home-region workload ({} requests)...", cfg.num_requests);
     let out = sim::run(&cfg)?;
     let cosim = CosimConfig::default();
-    let binned = bin_stages(&cfg, &out.stagelog, out.metrics.makespan_s, cosim.interval_s, BinningBackend::Native)?;
+    let binned = bin_stages(
+        &cfg,
+        &out.stagelog,
+        out.metrics.makespan_s,
+        cosim.interval_s,
+        BinningBackend::Native,
+    )?;
     let load = LoadProfile::from_binned(&binned);
 
     let regions = default_regions();
     println!("\nfleet:");
     for r in &regions {
-        println!("  {:<14} mean CI {:>5.0} g/kWh, tz {:+.0} h, solar {:>4.0} W", r.name, r.ci_mean, r.tz_offset_h, r.solar_w);
+        println!(
+            "  {:<14} mean CI {:>5.0} g/kWh, tz {:+.0} h, solar {:>4.0} W",
+            r.name, r.ci_mean, r.tz_offset_h, r.solar_w
+        );
     }
     let res = simulate(&load, &regions, cosim.interval_s, cfg.seed)?;
     println!("\n{}", res.table.to_markdown());

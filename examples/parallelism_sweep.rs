@@ -23,7 +23,10 @@ fn main() -> anyhow::Result<()> {
     let mut gen = WorkloadGenerator::from_config(&base);
     let trace = Trace::new(gen.generate(base.num_requests));
 
-    println!("{:<10} {:>6} {:>12} {:>12} {:>12} {:>10}", "tp x pp", "gpus", "makespan_s", "avg_W/gpu", "energy_kWh", "p99_s");
+    println!(
+        "{:<10} {:>6} {:>12} {:>12} {:>12} {:>10}",
+        "tp x pp", "gpus", "makespan_s", "avg_W/gpu", "energy_kWh", "p99_s"
+    );
     let mut best: Option<(String, f64)> = None;
     for (tp, pp) in [(1u32, 1u32), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1), (4, 4)] {
         let mut cfg = base.clone();

@@ -1,0 +1,91 @@
+//! Autoscaling hot-path benchmarks: the event engine with a dynamic
+//! fleet (lifecycle events, requeue-on-drain, scale ticks) against the
+//! fixed-fleet engine on the same workload, plus the fleet-aware Eq. 5
+//! binning over a dynamic timeline.
+
+use vidur_energy::autoscale::GridEnv;
+use vidur_energy::config::simconfig::{
+    Arrival, AutoscaleConfig, CostModelKind, LengthDist, ScalingPolicyKind, SimConfig,
+};
+use vidur_energy::pipeline::{bin_stages_fleet, BinningBackend};
+use vidur_energy::sim;
+use vidur_energy::util::bench::Bench;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+fn main() {
+    let mut bench = Bench::new("autoscale_fleet");
+
+    // Bursty workload that forces real scale-ups and drains.
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 2_000;
+    cfg.arrival = Arrival::Gamma { qps: 40.0, cv: 2.5 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 512,
+    };
+    cfg.seed = 0xBE7C;
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+
+    let mut static_cfg = cfg.clone();
+    static_cfg.replicas = 4;
+    bench.case_with_metric(
+        "engine, fixed fleet of 4 (2k requests)",
+        || {
+            sim::run_with_trace(&static_cfg, trace.clone())
+                .unwrap()
+                .stagelog
+                .len()
+        },
+        |n| format!("{n} stages"),
+    );
+
+    let mut scale = AutoscaleConfig::default();
+    scale.min_replicas = 1;
+    scale.max_replicas = 4;
+    scale.decision_interval_s = 5.0;
+    scale.cold_start_s = 2.0;
+    scale.queue_high = 4.0;
+
+    for policy in [ScalingPolicyKind::Reactive, ScalingPolicyKind::CarbonAware] {
+        let mut s = scale.clone();
+        s.policy = policy;
+        let label = format!("engine, autoscaled {} 1..4 (2k requests)", policy.as_str());
+        let c = cfg.clone();
+        let t = trace.clone();
+        bench.case_with_metric(
+            &label,
+            move || {
+                let grid = GridEnv::constant(250.0, 300.0);
+                let out = sim::run_autoscaled(&c, &s, &grid, t.clone()).unwrap();
+                (out.sim.stagelog.len(), out.timeline.mean_fleet())
+            },
+            |(n, mf)| format!("{n} stages, mean fleet {mf:.2}"),
+        );
+    }
+
+    // Fleet-aware binning over a real dynamic timeline.
+    let mut s = scale.clone();
+    s.policy = ScalingPolicyKind::Reactive;
+    let grid = GridEnv::constant(250.0, 300.0);
+    let out = sim::run_autoscaled(&cfg, &s, &grid, trace).unwrap();
+    bench.case_with_metric(
+        "fleet-aware Eq.5 binning (60 s bins)",
+        || {
+            bin_stages_fleet(
+                &cfg,
+                &out.sim.stagelog,
+                &out.timeline,
+                60.0,
+                BinningBackend::Native,
+            )
+            .unwrap()
+            .len()
+        },
+        |n| format!("{n} bins"),
+    );
+
+    bench.run();
+}

@@ -34,7 +34,9 @@ fn main() {
     let n = 2880;
     let mut rng = Rng::new(9);
     let load: Vec<f64> = (0..n).map(|_| rng.uniform(50.0, 500.0)).collect();
-    let solar: Vec<f64> = (0..n).map(|i| ((i % 1440) as f64 / 1440.0 * 3.14).sin().max(0.0) * 500.0).collect();
+    let solar: Vec<f64> = (0..n)
+        .map(|i| ((i % 1440) as f64 / 1440.0 * 3.14).sin().max(0.0) * 500.0)
+        .collect();
     let ci: Vec<f64> = (0..n).map(|_| rng.uniform(80.0, 550.0)).collect();
     b.case_with_metric(
         "cosim native loop (2880 steps)",

@@ -12,7 +12,11 @@ fn main() {
         || fig1::run(&dir, true).unwrap(),
         |t| {
             let mfu = t.f64_col("weighted_mfu").unwrap();
-            format!("mfu[0]={:.3} mfu[max]={:.3} (paper: plateau ≈0.45)", mfu[0], mfu.last().unwrap())
+            format!(
+                "mfu[0]={:.3} mfu[max]={:.3} (paper: plateau ≈0.45)",
+                mfu[0],
+                mfu.last().unwrap()
+            )
         },
     );
     b.run();

@@ -1,0 +1,443 @@
+//! The fleet controller, its input signals, and the fleet timeline.
+//!
+//! The controller is deliberately thin: policies ([`super::policy`])
+//! decide a desired fleet size, the controller clamps it into the
+//! configured bounds and records the decision; the simulation engine
+//! ([`crate::sim::engine::run_autoscaled`]) owns the mechanics
+//! (provisioning with cold-start, graceful drains, re-queueing).
+//!
+//! The [`FleetTimeline`] is the contract with the energy layers: it
+//! records, per replica, the interval during which that replica
+//! physically exists (provision → offline) so idle power is charged
+//! only for live replicas ([`crate::energy`]) and the Eq. 5 binning
+//! produces a time-varying demand signal ([`crate::pipeline`]).
+
+use crate::config::simconfig::{AutoscaleConfig, CosimConfig};
+use crate::grid::HistoricalSignal;
+
+use super::policy::ScalingPolicy;
+
+/// Load telemetry snapshot at a scaling decision.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSignals {
+    pub t_s: f64,
+    /// Requests queued (routed but not admitted) across the fleet.
+    pub queued: u64,
+    /// Requests currently running across the fleet.
+    pub running: u64,
+    /// Online, non-draining replicas.
+    pub active_replicas: u32,
+    /// Provisioning (cold-starting) replicas.
+    pub pending_replicas: u32,
+    /// Completions per second over the recent window.
+    pub recent_qps: f64,
+    /// Recent-window TTFT p99, seconds (NaN when nothing finished).
+    pub recent_ttft_p99_s: f64,
+    /// Recent-window e2e p99, seconds (NaN when nothing finished).
+    pub recent_e2e_p99_s: f64,
+    pub slo_ttft_s: f64,
+    pub slo_e2e_s: f64,
+}
+
+impl LoadSignals {
+    /// Capacity the fleet will have once cold starts complete.
+    pub fn fleet(&self) -> u32 {
+        self.active_replicas + self.pending_replicas
+    }
+}
+
+/// Grid-condition snapshot at a scaling decision.
+#[derive(Debug, Clone, Copy)]
+pub struct GridSignals {
+    /// Carbon intensity, gCO₂/kWh.
+    pub ci: f64,
+    /// Below this CI the grid counts as clean (Table 1b: 100).
+    pub ci_low: f64,
+    /// Above this CI the grid counts as dirty (Table 1b: 200).
+    pub ci_high: f64,
+    /// Solar generation, W.
+    pub solar_w: f64,
+    /// Installed solar capacity, W.
+    pub solar_capacity_w: f64,
+}
+
+/// Time-varying grid environment the engine queries at each decision.
+/// Wraps arbitrary CI/solar functions of *absolute* time; simulation
+/// time t is offset by `start_s` (the hour of day the run begins).
+pub struct GridEnv {
+    pub ci_low: f64,
+    pub ci_high: f64,
+    pub solar_capacity_w: f64,
+    /// Wall-clock offset of simulation t=0, seconds (e.g. 6 h × 3600).
+    pub start_s: f64,
+    ci: Box<dyn Fn(f64) -> f64>,
+    solar: Box<dyn Fn(f64) -> f64>,
+}
+
+impl GridEnv {
+    /// Arbitrary signal functions of absolute time.
+    pub fn from_fns(
+        ci_low: f64,
+        ci_high: f64,
+        solar_capacity_w: f64,
+        start_s: f64,
+        ci: impl Fn(f64) -> f64 + 'static,
+        solar: impl Fn(f64) -> f64 + 'static,
+    ) -> Self {
+        GridEnv {
+            ci_low,
+            ci_high,
+            solar_capacity_w,
+            start_s,
+            ci: Box::new(ci),
+            solar: Box::new(solar),
+        }
+    }
+
+    /// Constant conditions (tests, ablations). Thresholds are the
+    /// paper's 100/200 gCO₂/kWh.
+    pub fn constant(ci: f64, solar_w: f64) -> Self {
+        Self::from_fns(100.0, 200.0, 600.0, 0.0, move |_| ci, move |_| solar_w)
+    }
+
+    /// Sampled historical/synthetic signals with the co-simulation
+    /// thresholds; starts at the configured hour of day.
+    pub fn from_signals(
+        cosim: &CosimConfig,
+        ci: HistoricalSignal,
+        solar: HistoricalSignal,
+    ) -> Self {
+        let cap = cosim.solar_capacity_w;
+        Self::from_fns(
+            cosim.ci_low,
+            cosim.ci_high,
+            cap,
+            cosim.start_hour * 3600.0,
+            move |t| ci.at(t),
+            move |t| solar.at(t),
+        )
+    }
+
+    /// Grid snapshot at simulation time `t_s`.
+    pub fn at(&self, t_s: f64) -> GridSignals {
+        let t = self.start_s + t_s;
+        GridSignals {
+            ci: (self.ci)(t),
+            ci_low: self.ci_low,
+            ci_high: self.ci_high,
+            solar_w: (self.solar)(t),
+            solar_capacity_w: self.solar_capacity_w,
+        }
+    }
+}
+
+/// One recorded scaling decision.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleDecision {
+    pub t_s: f64,
+    /// Fleet (active + pending) when the decision was taken.
+    pub fleet_before: u32,
+    /// Clamped policy output.
+    pub desired: u32,
+    pub ci: f64,
+    pub solar_w: f64,
+}
+
+/// Clamps policy outputs into the configured bounds and keeps the
+/// decision log.
+pub struct FleetController {
+    pub cfg: AutoscaleConfig,
+    policy: Box<dyn ScalingPolicy>,
+    pub decisions: Vec<ScaleDecision>,
+}
+
+impl FleetController {
+    pub fn new(cfg: AutoscaleConfig, policy: Box<dyn ScalingPolicy>) -> Self {
+        FleetController {
+            cfg,
+            policy,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Desired fleet size for this interval, clamped into bounds.
+    pub fn desired(&mut self, load: &LoadSignals, grid: &GridSignals) -> u32 {
+        let raw = self.policy.desired_replicas(load, grid);
+        let desired = raw.clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+        self.decisions.push(ScaleDecision {
+            t_s: load.t_s,
+            fleet_before: load.fleet(),
+            desired,
+            ci: grid.ci,
+            solar_w: grid.solar_w,
+        });
+        desired
+    }
+}
+
+/// Replica lifecycle event kinds, in causal order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEventKind {
+    /// Instance requested; cold start begins (idle power draw starts).
+    Provision,
+    /// Cold start finished; replica serves traffic.
+    Online,
+    /// Graceful drain begins: admission closed, queue re-routed.
+    DrainStart,
+    /// Replica gone (power draw ends).
+    Offline,
+}
+
+/// One replica lifecycle event.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetEvent {
+    pub t_s: f64,
+    pub replica: u32,
+    pub kind: FleetEventKind,
+}
+
+/// One replica's existence interval. `down_s == None` means the
+/// replica was still live at the end of the run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSpan {
+    pub replica: u32,
+    /// Provisioned (starts drawing idle power: boot + weight load).
+    pub up_s: f64,
+    /// Began serving traffic (None: never finished cold start).
+    pub online_s: Option<f64>,
+    pub drain_s: Option<f64>,
+    pub down_s: Option<f64>,
+}
+
+/// The full fleet lifecycle of a run: per-replica spans, the event
+/// log, and the horizon (makespan) that closes still-live spans.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTimeline {
+    /// Indexed by replica id (ids are assigned densely in provision
+    /// order and never reused).
+    pub spans: Vec<ReplicaSpan>,
+    pub events: Vec<FleetEvent>,
+    pub horizon_s: f64,
+}
+
+impl FleetTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fixed fleet of `n` replicas live over the whole horizon —
+    /// makes the static case a degenerate timeline so the fleet-aware
+    /// accounting and binning subsume the original fixed-fleet paths.
+    pub fn static_fleet(n: u32, horizon_s: f64) -> Self {
+        let mut t = Self::new();
+        for i in 0..n {
+            t.provision(i, 0.0);
+            t.online(i, 0.0);
+        }
+        t.close(horizon_s);
+        t
+    }
+
+    pub fn provision(&mut self, replica: u32, t_s: f64) {
+        assert_eq!(
+            replica as usize,
+            self.spans.len(),
+            "replica ids must be dense and provisioned in order"
+        );
+        self.spans.push(ReplicaSpan {
+            replica,
+            up_s: t_s,
+            online_s: None,
+            drain_s: None,
+            down_s: None,
+        });
+        self.events.push(FleetEvent {
+            t_s,
+            replica,
+            kind: FleetEventKind::Provision,
+        });
+    }
+
+    pub fn online(&mut self, replica: u32, t_s: f64) {
+        self.spans[replica as usize].online_s = Some(t_s);
+        self.events.push(FleetEvent {
+            t_s,
+            replica,
+            kind: FleetEventKind::Online,
+        });
+    }
+
+    pub fn drain_start(&mut self, replica: u32, t_s: f64) {
+        self.spans[replica as usize].drain_s = Some(t_s);
+        self.events.push(FleetEvent {
+            t_s,
+            replica,
+            kind: FleetEventKind::DrainStart,
+        });
+    }
+
+    pub fn offline(&mut self, replica: u32, t_s: f64) {
+        self.spans[replica as usize].down_s = Some(t_s);
+        self.events.push(FleetEvent {
+            t_s,
+            replica,
+            kind: FleetEventKind::Offline,
+        });
+    }
+
+    /// Fix the horizon (run makespan). Spans with no explicit offline
+    /// time are treated as live through the horizon.
+    pub fn close(&mut self, horizon_s: f64) {
+        let latest = self
+            .events
+            .iter()
+            .map(|e| e.t_s)
+            .fold(0.0f64, f64::max);
+        self.horizon_s = horizon_s.max(latest);
+    }
+
+    fn span_end(&self, s: &ReplicaSpan) -> f64 {
+        s.down_s.unwrap_or(self.horizon_s)
+    }
+
+    /// Replica-seconds of existence overlapping [lo, hi).
+    pub fn live_seconds_in(&self, lo: f64, hi: f64) -> f64 {
+        self.spans
+            .iter()
+            .map(|s| (self.span_end(s).min(hi) - s.up_s.max(lo)).max(0.0))
+            .sum()
+    }
+
+    /// Total GPU-seconds of existence over the whole run.
+    pub fn live_gpu_seconds(&self, gpus_per_replica: u32) -> f64 {
+        self.live_seconds_in(0.0, self.horizon_s) * gpus_per_replica as f64
+    }
+
+    /// Replicas existing at instant `t_s`.
+    pub fn live_count_at(&self, t_s: f64) -> u32 {
+        self.spans
+            .iter()
+            .filter(|s| s.up_s <= t_s && t_s < self.span_end(s))
+            .count() as u32
+    }
+
+    /// Time-averaged fleet size over the horizon.
+    pub fn mean_fleet(&self) -> f64 {
+        if self.horizon_s <= 0.0 {
+            return 0.0;
+        }
+        self.live_seconds_in(0.0, self.horizon_s) / self.horizon_s
+    }
+
+    /// Peak concurrent fleet size (evaluated at event boundaries).
+    pub fn max_fleet(&self) -> u32 {
+        self.spans
+            .iter()
+            .map(|s| self.live_count_at(s.up_s))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Scale-up / scale-down event counts (provisions beyond the
+    /// initial fleet, and drains).
+    pub fn scale_event_counts(&self) -> (u32, u32) {
+        let ups = self
+            .events
+            .iter()
+            .filter(|e| e.kind == FleetEventKind::Provision && e.t_s > 0.0)
+            .count() as u32;
+        let downs = self
+            .events
+            .iter()
+            .filter(|e| e.kind == FleetEventKind::DrainStart)
+            .count() as u32;
+        (ups, downs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::policy::StaticPolicy;
+
+    #[test]
+    fn controller_clamps_to_bounds() {
+        let mut cfg = AutoscaleConfig::default();
+        cfg.min_replicas = 2;
+        cfg.max_replicas = 3;
+        let mut c = FleetController::new(cfg, Box::new(StaticPolicy { replicas: 10 }));
+        let load = LoadSignals {
+            t_s: 0.0,
+            queued: 0,
+            running: 0,
+            active_replicas: 2,
+            pending_replicas: 0,
+            recent_qps: 0.0,
+            recent_ttft_p99_s: f64::NAN,
+            recent_e2e_p99_s: f64::NAN,
+            slo_ttft_s: 10.0,
+            slo_e2e_s: 60.0,
+        };
+        let grid = GridEnv::constant(150.0, 0.0).at(0.0);
+        assert_eq!(c.desired(&load, &grid), 3);
+        assert_eq!(c.decisions.len(), 1);
+        assert_eq!(c.decisions[0].desired, 3);
+    }
+
+    #[test]
+    fn grid_env_applies_start_offset() {
+        let env = GridEnv::from_fns(100.0, 200.0, 600.0, 3600.0, |t| t, |_| 0.0);
+        // Simulation t=60 queries absolute t=3660.
+        assert_eq!(env.at(60.0).ci, 3660.0);
+        assert_eq!(env.at(0.0).ci_high, 200.0);
+    }
+
+    #[test]
+    fn timeline_live_accounting() {
+        let mut t = FleetTimeline::new();
+        t.provision(0, 0.0);
+        t.online(0, 0.0);
+        t.provision(1, 100.0);
+        t.online(1, 160.0);
+        t.drain_start(1, 400.0);
+        t.offline(1, 500.0);
+        t.close(1000.0);
+
+        // Replica 0 lives 0..1000, replica 1 lives 100..500.
+        assert_eq!(t.live_seconds_in(0.0, 1000.0), 1000.0 + 400.0);
+        assert_eq!(t.live_seconds_in(0.0, 100.0), 100.0);
+        assert_eq!(t.live_seconds_in(450.0, 600.0), 150.0 + 50.0);
+        assert_eq!(t.live_count_at(50.0), 1);
+        assert_eq!(t.live_count_at(300.0), 2);
+        assert_eq!(t.live_count_at(600.0), 1);
+        assert_eq!(t.max_fleet(), 2);
+        assert!((t.mean_fleet() - 1.4).abs() < 1e-12);
+        assert_eq!(t.live_gpu_seconds(2), 2.0 * 1400.0);
+        let (ups, downs) = t.scale_event_counts();
+        assert_eq!((ups, downs), (1, 1));
+    }
+
+    #[test]
+    fn static_fleet_timeline_is_flat() {
+        let t = FleetTimeline::static_fleet(3, 600.0);
+        assert_eq!(t.live_count_at(0.0), 3);
+        assert_eq!(t.live_count_at(599.0), 3);
+        assert_eq!(t.mean_fleet(), 3.0);
+        assert_eq!(t.live_gpu_seconds(1), 1800.0);
+        assert_eq!(t.scale_event_counts(), (0, 0));
+    }
+
+    #[test]
+    fn close_extends_to_latest_event() {
+        let mut t = FleetTimeline::new();
+        t.provision(0, 0.0);
+        t.online(0, 0.0);
+        t.offline(0, 750.0);
+        t.close(600.0);
+        assert!(t.horizon_s >= 750.0);
+    }
+}

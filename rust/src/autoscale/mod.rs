@@ -1,0 +1,35 @@
+//! Carbon-aware autoscaling (DESIGN.md §6): an in-simulation fleet
+//! controller that, on a configurable decision interval, observes load
+//! telemetry (queue depth, achieved QPS, recent TTFT/e2e percentiles
+//! against the SLO targets) and grid signals (carbon intensity, solar
+//! availability) and issues scale-up / scale-down / drain decisions
+//! for replicas.
+//!
+//! The subsystem splits into:
+//! * [`policy`] — the [`ScalingPolicy`] trait and the three shipped
+//!   policies (reactive queue-based, SLO-guarded carbon-aware,
+//!   solar-following) plus the static baseline;
+//! * [`controller`] — the [`FleetController`] that clamps and records
+//!   decisions, the [`GridEnv`] signal source, and the
+//!   [`FleetTimeline`] of replica lifecycle events that the energy
+//!   accounting ([`crate::energy`]) and Eq. 5 binning
+//!   ([`crate::pipeline`]) consume so idle power is charged only for
+//!   replicas that exist at each instant.
+//!
+//! The engine side ([`crate::sim::engine::run_autoscaled`]) threads the
+//! lifecycle through the event loop: provision (with cold-start delay,
+//! drawing idle power while booting), online, graceful drain (stops
+//! admitting, finishes running requests, re-queues queued ones via the
+//! [`crate::scheduler::router::Router`]), and offline.
+
+pub mod controller;
+pub mod policy;
+
+pub use controller::{
+    FleetController, FleetEvent, FleetEventKind, FleetTimeline, GridEnv, GridSignals,
+    LoadSignals, ReplicaSpan, ScaleDecision,
+};
+pub use policy::{
+    build_policy, CarbonAwarePolicy, ReactivePolicy, ScalingPolicy, SolarFollowingPolicy,
+    StaticPolicy,
+};

@@ -1,0 +1,340 @@
+//! Scaling policies: map (load telemetry, grid signals) → desired
+//! fleet size. Policies are deliberately incremental — they move the
+//! fleet by at most a step or two per decision interval, which damps
+//! oscillation against the cold-start delay — and every non-static
+//! policy shares the same SLO guard so "green" never silently means
+//! "slow".
+
+use crate::autoscale::controller::{GridSignals, LoadSignals};
+use crate::config::simconfig::{AutoscaleConfig, ScalingPolicyKind};
+
+/// A fleet-sizing policy. `desired_replicas` returns the target total
+/// fleet (online + cold-starting); the [`super::FleetController`]
+/// clamps it into the configured bounds.
+pub trait ScalingPolicy {
+    fn name(&self) -> &'static str;
+    fn desired_replicas(&mut self, load: &LoadSignals, grid: &GridSignals) -> u32;
+}
+
+/// Is the fleet under latency/backlog pressure? Recent p99s above
+/// `slo * margin` or a deep per-replica queue veto any shedding.
+/// Queue depth is measured against replicas that can actually serve
+/// (cold-starting ones don't drain queues yet). NaN percentiles (no
+/// recent completions) never count as pressure.
+fn slo_pressure(load: &LoadSignals, queue_high: f64, margin: f64) -> bool {
+    let serving = load.active_replicas.max(1) as f64;
+    let queue_per_replica = load.queued as f64 / serving;
+    queue_per_replica > queue_high
+        || load.recent_ttft_p99_s > load.slo_ttft_s * margin
+        || load.recent_e2e_p99_s > load.slo_e2e_s * margin
+}
+
+/// Fixed fleet — the paper's original setting and the sweep baseline.
+#[derive(Debug, Clone)]
+pub struct StaticPolicy {
+    pub replicas: u32,
+}
+
+impl ScalingPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn desired_replicas(&mut self, _load: &LoadSignals, _grid: &GridSignals) -> u32 {
+        self.replicas
+    }
+}
+
+/// Reactive queue-based scaling: grow when the per-replica backlog is
+/// deep, consolidate when both the queue and the running set are thin.
+#[derive(Debug, Clone)]
+pub struct ReactivePolicy {
+    pub queue_high: f64,
+    pub queue_low: f64,
+    /// Running requests per replica below which consolidation is safe.
+    pub run_low: f64,
+}
+
+impl ReactivePolicy {
+    pub fn from_config(cfg: &AutoscaleConfig) -> Self {
+        ReactivePolicy {
+            queue_high: cfg.queue_high,
+            queue_low: cfg.queue_low,
+            run_low: cfg.run_low,
+        }
+    }
+}
+
+impl ScalingPolicy for ReactivePolicy {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+    fn desired_replicas(&mut self, load: &LoadSignals, _grid: &GridSignals) -> u32 {
+        let fleet = load.fleet().max(1);
+        let queue_per = load.queued as f64 / fleet as f64;
+        let run_per = load.running as f64 / fleet as f64;
+        if queue_per > self.queue_high {
+            fleet + 1
+        } else if queue_per < self.queue_low && run_per < self.run_low {
+            fleet.saturating_sub(1)
+        } else {
+            fleet
+        }
+    }
+}
+
+/// SLO-guarded carbon-aware scaling: when the grid is dirty
+/// (CI > ci_high) shed one replica per interval; when it is clean
+/// (CI < ci_low) restore the baseline fleet; in between drift back
+/// toward the baseline. Latency pressure overrides shedding.
+#[derive(Debug, Clone)]
+pub struct CarbonAwarePolicy {
+    /// Fleet size to hold when the grid is clean or moderate (the
+    /// static comparator's size).
+    pub baseline: u32,
+    pub queue_high: f64,
+    pub slo_margin: f64,
+}
+
+impl CarbonAwarePolicy {
+    pub fn from_config(cfg: &AutoscaleConfig, baseline: u32) -> Self {
+        CarbonAwarePolicy {
+            baseline,
+            queue_high: cfg.queue_high,
+            slo_margin: cfg.slo_margin,
+        }
+    }
+}
+
+impl ScalingPolicy for CarbonAwarePolicy {
+    fn name(&self) -> &'static str {
+        "carbon_aware"
+    }
+    fn desired_replicas(&mut self, load: &LoadSignals, grid: &GridSignals) -> u32 {
+        let fleet = load.fleet().max(1);
+        if slo_pressure(load, self.queue_high, self.slo_margin) {
+            // SLO guard beats carbon: add capacity regardless of CI.
+            return fleet + 1;
+        }
+        if grid.ci > grid.ci_high {
+            // Dirty grid: shed one replica per decision interval.
+            return fleet.saturating_sub(1);
+        }
+        if grid.ci < grid.ci_low {
+            // Clean grid: restore the baseline fleet in one jump when
+            // below it; capacity above baseline persists only while
+            // the SLO guard keeps demanding it, otherwise it drains
+            // off one replica per interval.
+            return if fleet < self.baseline {
+                self.baseline
+            } else if fleet > self.baseline {
+                fleet - 1
+            } else {
+                fleet
+            };
+        }
+        // Moderate grid: drift toward the baseline one step at a time.
+        match fleet.cmp(&self.baseline) {
+            std::cmp::Ordering::Less => fleet + 1,
+            std::cmp::Ordering::Greater => fleet - 1,
+            std::cmp::Ordering::Equal => fleet,
+        }
+    }
+}
+
+/// Solar-following: the fleet tracks instantaneous solar availability
+/// between the configured bounds ("ride the solar peak with extra
+/// capacity"), with the same SLO guard as the carbon policy.
+#[derive(Debug, Clone)]
+pub struct SolarFollowingPolicy {
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    pub queue_high: f64,
+    pub slo_margin: f64,
+}
+
+impl SolarFollowingPolicy {
+    pub fn from_config(cfg: &AutoscaleConfig) -> Self {
+        SolarFollowingPolicy {
+            min_replicas: cfg.min_replicas,
+            max_replicas: cfg.max_replicas,
+            queue_high: cfg.queue_high,
+            slo_margin: cfg.slo_margin,
+        }
+    }
+}
+
+impl ScalingPolicy for SolarFollowingPolicy {
+    fn name(&self) -> &'static str {
+        "solar_following"
+    }
+    fn desired_replicas(&mut self, load: &LoadSignals, grid: &GridSignals) -> u32 {
+        let fleet = load.fleet().max(1);
+        if slo_pressure(load, self.queue_high, self.slo_margin) {
+            return fleet + 1;
+        }
+        let frac = if grid.solar_capacity_w > 0.0 {
+            (grid.solar_w / grid.solar_capacity_w).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let span = self.max_replicas.saturating_sub(self.min_replicas) as f64;
+        let target = self.min_replicas + (span * frac).round() as u32;
+        // Move at most one step per interval toward the solar target.
+        match fleet.cmp(&target) {
+            std::cmp::Ordering::Less => fleet + 1,
+            std::cmp::Ordering::Greater => fleet - 1,
+            std::cmp::Ordering::Equal => fleet,
+        }
+    }
+}
+
+/// Build the configured policy. `baseline_replicas` is the fleet size
+/// the run starts with (`SimConfig::replicas`) — the static policy
+/// holds it, the carbon-aware policy restores to it on a clean grid.
+pub fn build_policy(cfg: &AutoscaleConfig, baseline_replicas: u32) -> Box<dyn ScalingPolicy> {
+    match cfg.policy {
+        ScalingPolicyKind::Static => Box::new(StaticPolicy {
+            replicas: baseline_replicas,
+        }),
+        ScalingPolicyKind::Reactive => Box::new(ReactivePolicy::from_config(cfg)),
+        ScalingPolicyKind::CarbonAware => {
+            Box::new(CarbonAwarePolicy::from_config(cfg, baseline_replicas))
+        }
+        ScalingPolicyKind::SolarFollowing => Box::new(SolarFollowingPolicy::from_config(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queued: u64, running: u64, fleet: u32) -> LoadSignals {
+        LoadSignals {
+            t_s: 0.0,
+            queued,
+            running,
+            active_replicas: fleet,
+            pending_replicas: 0,
+            recent_qps: 1.0,
+            recent_ttft_p99_s: f64::NAN,
+            recent_e2e_p99_s: f64::NAN,
+            slo_ttft_s: 10.0,
+            slo_e2e_s: 60.0,
+        }
+    }
+
+    fn grid(ci: f64, solar_w: f64) -> GridSignals {
+        GridSignals {
+            ci,
+            ci_low: 100.0,
+            ci_high: 200.0,
+            solar_w,
+            solar_capacity_w: 600.0,
+        }
+    }
+
+    #[test]
+    fn reactive_scales_with_queue() {
+        let mut p = ReactivePolicy {
+            queue_high: 8.0,
+            queue_low: 2.0,
+            run_low: 8.0,
+        };
+        // Deep backlog: scale up.
+        assert_eq!(p.desired_replicas(&load(40, 10, 2), &grid(150.0, 0.0)), 3);
+        // Thin queue and thin batch: consolidate.
+        assert_eq!(p.desired_replicas(&load(0, 4, 3), &grid(150.0, 0.0)), 2);
+        // Busy but not backlogged: hold.
+        assert_eq!(p.desired_replicas(&load(4, 60, 2), &grid(150.0, 0.0)), 2);
+    }
+
+    #[test]
+    fn carbon_sheds_when_dirty_restores_when_clean() {
+        let mut p = CarbonAwarePolicy {
+            baseline: 3,
+            queue_high: 8.0,
+            slo_margin: 0.8,
+        };
+        assert_eq!(p.desired_replicas(&load(0, 2, 3), &grid(400.0, 0.0)), 2);
+        assert_eq!(p.desired_replicas(&load(0, 2, 2), &grid(400.0, 0.0)), 1);
+        assert_eq!(p.desired_replicas(&load(0, 2, 1), &grid(60.0, 0.0)), 3);
+        // Moderate CI drifts toward baseline one step at a time.
+        assert_eq!(p.desired_replicas(&load(0, 2, 1), &grid(150.0, 0.0)), 2);
+    }
+
+    #[test]
+    fn carbon_slo_guard_overrides_shedding() {
+        let mut p = CarbonAwarePolicy {
+            baseline: 3,
+            queue_high: 8.0,
+            slo_margin: 0.8,
+        };
+        let mut l = load(40, 10, 1); // queue 40/replica >> queue_high
+        assert_eq!(p.desired_replicas(&l, &grid(500.0, 0.0)), 2);
+        // Latency pressure alone (queue fine, p99 near SLO) also guards.
+        l = load(0, 10, 1);
+        l.recent_ttft_p99_s = 9.5; // > 10.0 * 0.8
+        assert_eq!(p.desired_replicas(&l, &grid(500.0, 0.0)), 2);
+    }
+
+    #[test]
+    fn solar_following_tracks_irradiance() {
+        let mut p = SolarFollowingPolicy {
+            min_replicas: 1,
+            max_replicas: 4,
+            queue_high: 8.0,
+            slo_margin: 0.8,
+        };
+        // Night: step down toward the floor.
+        assert_eq!(p.desired_replicas(&load(0, 2, 3), &grid(300.0, 0.0)), 2);
+        // Full sun: step up toward the ceiling.
+        assert_eq!(p.desired_replicas(&load(0, 2, 2), &grid(300.0, 600.0)), 3);
+        // At the solar-implied target: hold.
+        assert_eq!(p.desired_replicas(&load(0, 2, 4), &grid(300.0, 600.0)), 4);
+    }
+
+    #[test]
+    fn nan_percentiles_never_trigger_pressure() {
+        let l = load(0, 0, 1);
+        assert!(!slo_pressure(&l, 8.0, 0.8));
+    }
+
+    #[test]
+    fn pressure_counts_only_serving_replicas() {
+        // 1 active + 1 cold-starting, 14 queued, threshold 8: the
+        // provisioning replica cannot drain the queue, so this IS
+        // pressure (14/1 > 8), not 14/2 < 8.
+        let mut l = load(14, 4, 1);
+        l.pending_replicas = 1;
+        assert!(slo_pressure(&l, 8.0, 0.8));
+    }
+
+    #[test]
+    fn carbon_clean_grid_drains_over_baseline_capacity() {
+        // An SLO-guard upscale above baseline must not persist forever
+        // on a clean grid once the pressure is gone.
+        let mut p = CarbonAwarePolicy {
+            baseline: 3,
+            queue_high: 8.0,
+            slo_margin: 0.8,
+        };
+        assert_eq!(p.desired_replicas(&load(0, 2, 4), &grid(60.0, 0.0)), 3);
+        assert_eq!(p.desired_replicas(&load(0, 2, 3), &grid(60.0, 0.0)), 3);
+    }
+
+    #[test]
+    fn build_policy_covers_all_kinds() {
+        let cfg = AutoscaleConfig::default();
+        for kind in [
+            ScalingPolicyKind::Static,
+            ScalingPolicyKind::Reactive,
+            ScalingPolicyKind::CarbonAware,
+            ScalingPolicyKind::SolarFollowing,
+        ] {
+            let mut c = cfg.clone();
+            c.policy = kind;
+            let p = build_policy(&c, 3);
+            assert_eq!(p.name(), kind.as_str());
+        }
+    }
+}

@@ -124,6 +124,11 @@ pub struct SimConfig {
     pub kv_block_tokens: u64,
     /// Power-usage effectiveness of the site (paper: 1.2, CA).
     pub pue: f64,
+    /// TTFT service-level objective, seconds (SLO-attainment metrics
+    /// and the autoscaler's SLO guard measure against this).
+    pub slo_ttft_s: f64,
+    /// End-to-end latency SLO, seconds.
+    pub slo_e2e_s: f64,
     pub exec: ExecParams,
     pub seed: u64,
 }
@@ -153,6 +158,8 @@ impl Default for SimConfig {
             chunk_size: 512,
             kv_block_tokens: 16,
             pue: 1.2,
+            slo_ttft_s: 10.0,
+            slo_e2e_s: 60.0,
             exec: ExecParams::default(),
             seed: 0xD15EA5E,
         }
@@ -210,6 +217,9 @@ impl SimConfig {
         if self.pue < 1.0 {
             bail!("pue < 1.0 is unphysical");
         }
+        if self.slo_ttft_s <= 0.0 || self.slo_e2e_s <= 0.0 {
+            bail!("SLO targets must be positive");
+        }
         Ok(())
     }
 
@@ -248,6 +258,8 @@ impl SimConfig {
             .set("chunk_size", self.chunk_size)
             .set("kv_block_tokens", self.kv_block_tokens)
             .set("pue", self.pue)
+            .set("slo_ttft_s", self.slo_ttft_s)
+            .set("slo_e2e_s", self.slo_e2e_s)
             .set("seed", self.seed);
         let mut arr = Value::obj();
         match &self.arrival {
@@ -339,7 +351,10 @@ impl SimConfig {
             Some(e) => ExecParams {
                 flops_eff: e.get("flops_eff").and_then(|x| x.as_f64()).unwrap_or(d.exec.flops_eff),
                 mem_eff: e.get("mem_eff").and_then(|x| x.as_f64()).unwrap_or(d.exec.mem_eff),
-                t_overhead: e.get("t_overhead").and_then(|x| x.as_f64()).unwrap_or(d.exec.t_overhead),
+                t_overhead: e
+                    .get("t_overhead")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(d.exec.t_overhead),
                 layer_overhead: e
                     .get("layer_overhead")
                     .and_then(|x| x.as_f64())
@@ -381,6 +396,8 @@ impl SimConfig {
             chunk_size: gu("chunk_size", d.chunk_size),
             kv_block_tokens: gu("kv_block_tokens", d.kv_block_tokens),
             pue: gf("pue", d.pue),
+            slo_ttft_s: gf("slo_ttft_s", d.slo_ttft_s),
+            slo_e2e_s: gf("slo_e2e_s", d.slo_e2e_s),
             exec,
             seed: gu("seed", d.seed),
         };
@@ -531,6 +548,149 @@ impl CosimConfig {
     }
 }
 
+/// Which fleet-scaling policy the autoscaler runs (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingPolicyKind {
+    /// Fixed fleet (the paper's setting; autoscaling disabled).
+    Static,
+    /// Queue-depth-driven reactive scaling.
+    Reactive,
+    /// SLO-guarded carbon-aware scaling: shed capacity when the grid
+    /// is dirty unless the SLO would be violated.
+    CarbonAware,
+    /// Fleet size follows solar availability (with an SLO floor).
+    SolarFollowing,
+}
+
+impl ScalingPolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScalingPolicyKind::Static => "static",
+            ScalingPolicyKind::Reactive => "reactive",
+            ScalingPolicyKind::CarbonAware => "carbon_aware",
+            ScalingPolicyKind::SolarFollowing => "solar_following",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ScalingPolicyKind> {
+        Ok(match s {
+            "static" => ScalingPolicyKind::Static,
+            "reactive" => ScalingPolicyKind::Reactive,
+            "carbon_aware" | "carbon-aware" | "carbon" => ScalingPolicyKind::CarbonAware,
+            "solar_following" | "solar-following" | "solar" => ScalingPolicyKind::SolarFollowing,
+            k => bail!("unknown scaling policy '{k}'"),
+        })
+    }
+}
+
+/// Autoscaling subsystem configuration (DESIGN.md §6): fleet bounds,
+/// decision cadence, replica cold-start, and the queue/SLO thresholds
+/// the policies consult.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    pub policy: ScalingPolicyKind,
+    /// Fleet-size bounds; the controller clamps every decision into
+    /// [min_replicas, max_replicas].
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// Seconds between scaling decisions.
+    pub decision_interval_s: f64,
+    /// Provision→online delay (instance boot + weight load); the
+    /// replica draws idle power while cold-starting.
+    pub cold_start_s: f64,
+    /// Per-replica queued requests above which policies scale up.
+    pub queue_high: f64,
+    /// Per-replica queued requests below which scale-down is considered.
+    pub queue_low: f64,
+    /// Running requests per replica below which a reactive scale-down
+    /// is allowed (consolidation watermark).
+    pub run_low: f64,
+    /// Fraction of the SLO targets treated as "pressure": recent p99
+    /// latencies above `slo * slo_margin` veto shedding and force a
+    /// scale-up.
+    pub slo_margin: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            policy: ScalingPolicyKind::Reactive,
+            min_replicas: 1,
+            max_replicas: 4,
+            decision_interval_s: 120.0,
+            cold_start_s: 60.0,
+            queue_high: 8.0,
+            queue_low: 2.0,
+            run_low: 8.0,
+            slo_margin: 0.8,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_replicas == 0 {
+            bail!("min_replicas must be >= 1");
+        }
+        if self.max_replicas < self.min_replicas {
+            bail!(
+                "max_replicas {} < min_replicas {}",
+                self.max_replicas,
+                self.min_replicas
+            );
+        }
+        if self.decision_interval_s <= 0.0 {
+            bail!("decision_interval_s must be positive");
+        }
+        if self.cold_start_s < 0.0 {
+            bail!("cold_start_s must be >= 0");
+        }
+        if self.queue_low > self.queue_high {
+            bail!("queue_low must be <= queue_high");
+        }
+        if !(0.0..=1.0).contains(&self.slo_margin) {
+            bail!("slo_margin must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("policy", self.policy.as_str())
+            .set("min_replicas", self.min_replicas)
+            .set("max_replicas", self.max_replicas)
+            .set("decision_interval_s", self.decision_interval_s)
+            .set("cold_start_s", self.cold_start_s)
+            .set("queue_high", self.queue_high)
+            .set("queue_low", self.queue_low)
+            .set("run_low", self.run_low)
+            .set("slo_margin", self.slo_margin);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<AutoscaleConfig> {
+        let d = AutoscaleConfig::default();
+        let gf = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        let gu = |k: &str, dv: u64| v.get(k).and_then(|x| x.as_u64()).unwrap_or(dv);
+        let cfg = AutoscaleConfig {
+            policy: match v.get("policy").and_then(|x| x.as_str()) {
+                None => d.policy,
+                Some(s) => ScalingPolicyKind::parse(s)?,
+            },
+            min_replicas: gu("min_replicas", d.min_replicas as u64) as u32,
+            max_replicas: gu("max_replicas", d.max_replicas as u64) as u32,
+            decision_interval_s: gf("decision_interval_s", d.decision_interval_s),
+            cold_start_s: gf("cold_start_s", d.cold_start_s),
+            queue_high: gf("queue_high", d.queue_high),
+            queue_low: gf("queue_low", d.queue_low),
+            run_low: gf("run_low", d.run_low),
+            slo_margin: gf("slo_margin", d.slo_margin),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,6 +763,54 @@ mod tests {
     fn validate_rejects_soc_inversion() {
         let mut c = CosimConfig::default();
         c.soc_min = 0.9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn autoscale_json_roundtrip() {
+        let mut c = AutoscaleConfig::default();
+        c.policy = ScalingPolicyKind::CarbonAware;
+        c.max_replicas = 8;
+        c.cold_start_s = 45.0;
+        let back = AutoscaleConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn autoscale_validate_rejects_inverted_bounds() {
+        let mut c = AutoscaleConfig::default();
+        c.min_replicas = 4;
+        c.max_replicas = 2;
+        assert!(c.validate().is_err());
+        c = AutoscaleConfig::default();
+        c.min_replicas = 0;
+        assert!(c.validate().is_err());
+        c = AutoscaleConfig::default();
+        c.decision_interval_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for k in [
+            ScalingPolicyKind::Static,
+            ScalingPolicyKind::Reactive,
+            ScalingPolicyKind::CarbonAware,
+            ScalingPolicyKind::SolarFollowing,
+        ] {
+            assert_eq!(ScalingPolicyKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(ScalingPolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn slo_targets_roundtrip_and_validate() {
+        let mut c = SimConfig::default();
+        c.slo_ttft_s = 2.5;
+        c.slo_e2e_s = 30.0;
+        let back = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        c.slo_ttft_s = 0.0;
         assert!(c.validate().is_err());
     }
 

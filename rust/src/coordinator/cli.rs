@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate    — one inference-simulation run (prints metrics JSON)
 //!   cosim       — full Vidur→Vessim case-study pipeline
+//!   autoscale   — sweep fleet-scaling policies over a day of grid signals
 //!   experiment  — regenerate a paper table/figure (or `all`)
 //!   multiregion — carbon-aware multi-region routing exploration
 //!   policy      — model-size vs grid-condition policy exploration
@@ -28,7 +29,8 @@ Consumption and Carbon Emissions of LLM Inference via Simulations'
 subcommands:
   simulate     run one inference simulation
   cosim        run the Vidur→Vessim integration case study
-  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation all
+  autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all
   multiregion  carbon-aware multi-region routing exploration
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
@@ -49,6 +51,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "cosim" => cmd_cosim(&args),
+        "autoscale" => cmd_autoscale(&args),
         "experiment" => cmd_experiment(&args),
         "multiregion" => multiregion::cmd(&args),
         "policy" => policy::cmd(&args),
@@ -158,6 +161,41 @@ fn cmd_cosim(args: &Args) -> Result<()> {
     let mut v = Value::obj();
     v.set("baseline", cs.baseline_json).set("carbon_aware", cs.aware_json);
     println!("{}", v.pretty());
+    Ok(())
+}
+
+fn cmd_autoscale(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "repro autoscale — sweep fleet-scaling policies over a day of grid signals\n\n\
+             options:\n  --out <dir>   results directory (default: results)\n  \
+             --fast        compressed evening-window scenario"
+        );
+        return Ok(());
+    }
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
+    // The save() call already printed the markdown table; surface the
+    // headline comparison on top.
+    let by = |policy: &str, col: &str| -> Option<f64> {
+        let c = table.col_index(col).ok()?;
+        table
+            .rows
+            .iter()
+            .find(|r| r[0] == policy)
+            .and_then(|r| r[c].parse().ok())
+    };
+    if let (Some(sg), Some(cg)) = (
+        by("static", "net_footprint_g"),
+        by("carbon_aware", "net_footprint_g"),
+    ) {
+        if sg > 0.0 {
+            println!(
+                "carbon-aware vs static: {:+.1}% net emissions",
+                (cg / sg - 1.0) * 100.0
+            );
+        }
+    }
     Ok(())
 }
 

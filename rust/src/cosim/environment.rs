@@ -14,9 +14,45 @@ use crate::battery::Battery;
 use crate::config::simconfig::CosimConfig;
 use crate::cosim::controllers::{CarbonAwareController, ControllerAction};
 use crate::cosim::microgrid::{Microgrid, StepRecord};
+use crate::grid::{CarbonIntensityTrace, HistoricalSignal, SolarModel};
 use crate::runtime::{artifacts, pjrt::cached_executable};
 use crate::util::json::Value;
 use anyhow::Result;
+
+/// The synthetic Solcast/WattTime substitutes (DESIGN.md §5) as
+/// resampleable signals spanning `n` co-simulation steps, seeded and
+/// offset from the cosim config (shared by the case study, the
+/// autoscaling experiment, and the examples).
+pub fn default_signal_traces(
+    cosim: &CosimConfig,
+    n: usize,
+) -> (HistoricalSignal, HistoricalSignal) {
+    let start_s = cosim.start_hour * 3600.0;
+    let solar = SolarModel {
+        capacity_w: cosim.solar_capacity_w,
+        seed: cosim.seed,
+        ..SolarModel::default()
+    };
+    let ci_model = CarbonIntensityTrace {
+        mean: cosim.ci_mean,
+        seed: cosim.seed ^ 0xC1,
+        ..CarbonIntensityTrace::default()
+    };
+    (solar.trace(start_s, n), ci_model.trace(start_s, n))
+}
+
+/// [`default_signal_traces`] sampled onto the co-simulation step grid:
+/// `(solar_w, ci)` vectors of length `n`. The load side of the
+/// environment — fixed-fleet or time-varying under autoscaling — comes
+/// from the Eq. 5 binned profile ([`crate::pipeline`]).
+pub fn default_signals(cosim: &CosimConfig, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let start_s = cosim.start_hour * 3600.0;
+    let (solar_sig, ci_sig) = default_signal_traces(cosim, n);
+    (
+        solar_sig.sample_grid(start_s, n, cosim.interval_s),
+        ci_sig.sample_grid(start_s, n, cosim.interval_s),
+    )
+}
 
 /// Summary of a co-simulation run (the paper's Table 2).
 #[derive(Debug, Clone)]

@@ -9,5 +9,5 @@ pub mod environment;
 pub mod controllers;
 
 pub use controllers::{CarbonAwareController, ControllerAction};
-pub use environment::{CosimResult, Environment};
+pub use environment::{default_signal_traces, default_signals, CosimResult, Environment};
 pub use microgrid::{Microgrid, StepRecord};

@@ -10,6 +10,7 @@
 //!   gaps are not charged. Provided for fidelity comparison (ablation
 //!   bench `abl_power_model`).
 
+use crate::autoscale::FleetTimeline;
 use crate::config::simconfig::SimConfig;
 use crate::power::PowerModel;
 use crate::telemetry::StageLog;
@@ -158,6 +159,68 @@ impl EnergyAccountant {
             },
         }
     }
+
+    /// Physical accounting over a **dynamic fleet** (DESIGN.md §6):
+    /// stage energy as in [`Self::account`], but idle power is charged
+    /// only for GPU-time of replicas that exist at each instant
+    /// (provision → offline, cold starts included), and GPU-hours /
+    /// embodied carbon follow the timeline instead of `R·TP·PP ×
+    /// makespan`. `avg_power_w` is per *live* GPU. With
+    /// [`FleetTimeline::static_fleet`] this reduces to the fixed-fleet
+    /// physical accounting.
+    pub fn account_fleet(
+        &self,
+        cfg: &SimConfig,
+        log: &StageLog,
+        fleet: &FleetTimeline,
+    ) -> EnergyReport {
+        let gpu = cfg.gpu_spec().expect("validated config");
+        let p_idle = self.power_model.power(0.0, false);
+        let gpus_per_replica = cfg.gpus_per_replica() as f64;
+        let live_gpu_s = fleet.live_gpu_seconds(cfg.gpus_per_replica());
+
+        let mut joules = 0.0;
+        let mut busy_gpu_s = 0.0;
+        let mut covered_gpu_s = 0.0;
+        let mut peak = p_idle;
+        for r in &log.records {
+            let p_active = self.power_model.power(r.mfu, true);
+            joules +=
+                (p_active * r.active_gpus as f64 + p_idle * r.idle_gpus as f64) * r.dt_s;
+            busy_gpu_s += r.dt_s * r.active_gpus as f64;
+            covered_gpu_s += r.dt_s * (r.active_gpus + r.idle_gpus) as f64;
+            peak = peak.max(p_active);
+        }
+        // Idle gaps: live GPU-time not covered by a stage record draws
+        // idle power. Dead replicas draw nothing.
+        let idle_gpu_s = (live_gpu_s - covered_gpu_s).max(0.0);
+        joules += idle_gpu_s * p_idle;
+        debug_assert!(
+            covered_gpu_s <= live_gpu_s * (1.0 + 1e-9) + gpus_per_replica,
+            "stages cover more GPU-time than the fleet has"
+        );
+
+        let gpu_energy_kwh = joules / 3.6e6;
+        let gpu_hours = live_gpu_s / 3600.0;
+        EnergyReport {
+            energy_kwh: gpu_energy_kwh * cfg.pue,
+            gpu_energy_kwh,
+            avg_power_w: if live_gpu_s > 0.0 {
+                joules / live_gpu_s
+            } else {
+                0.0
+            },
+            peak_power_w: peak,
+            gpu_hours,
+            operational_g: gpu_energy_kwh * cfg.pue * self.grid_ci,
+            embodied_g: gpu_hours * gpu.phi_manuf,
+            busy_fraction: if live_gpu_s > 0.0 {
+                (busy_gpu_s / live_gpu_s).min(1.0)
+            } else {
+                0.0
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -251,6 +314,65 @@ mod tests {
         assert!((rep.gpu_hours - 2.0).abs() < 1e-9);
         assert!((rep.embodied_g - 2.0 * 3.42).abs() < 1e-9);
         assert!(rep.total_g() > rep.operational_g);
+    }
+
+    #[test]
+    fn fleet_accounting_reduces_to_static() {
+        let acc = EnergyAccountant::paper_default(&cfg()).unwrap();
+        let mut log = StageLog::new();
+        log.push(rec(0.0, 1800.0, 0.45));
+        let fixed = acc.account(&cfg(), &log, 3600.0);
+        let fleet = acc.account_fleet(
+            &cfg(),
+            &log,
+            &FleetTimeline::static_fleet(1, 3600.0),
+        );
+        assert!((fixed.energy_kwh - fleet.energy_kwh).abs() < 1e-9);
+        assert!((fixed.avg_power_w - fleet.avg_power_w).abs() < 1e-9);
+        assert!((fixed.gpu_hours - fleet.gpu_hours).abs() < 1e-12);
+        assert!((fixed.busy_fraction - fleet.busy_fraction).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dead_replicas_draw_nothing() {
+        // Two replicas for the first half of the run, one afterwards:
+        // idle energy must reflect 1.5 replica-hours, not 2.
+        let acc = EnergyAccountant::paper_default(&cfg()).unwrap();
+        let log = StageLog::new();
+        let mut t = FleetTimeline::new();
+        t.provision(0, 0.0);
+        t.online(0, 0.0);
+        t.provision(1, 0.0);
+        t.online(1, 0.0);
+        t.drain_start(1, 1800.0);
+        t.offline(1, 1800.0);
+        t.close(3600.0);
+        let rep = acc.account_fleet(&cfg(), &log, &t);
+        // 1.5 GPU-hours at 100 W idle, PUE 1.2 -> 0.18 kWh.
+        assert!((rep.energy_kwh - 0.18).abs() < 1e-9, "{}", rep.energy_kwh);
+        assert!((rep.gpu_hours - 1.5).abs() < 1e-12);
+        // Static 2-replica accounting would charge 0.24 kWh.
+        let static2 = acc.account_fleet(
+            &cfg(),
+            &log,
+            &FleetTimeline::static_fleet(2, 3600.0),
+        );
+        assert!(rep.energy_kwh < static2.energy_kwh);
+    }
+
+    #[test]
+    fn cold_start_charged_as_idle() {
+        // One replica provisioned at t=0 but online only at t=1800:
+        // the boot period still draws idle power.
+        let acc = EnergyAccountant::paper_default(&cfg()).unwrap();
+        let log = StageLog::new();
+        let mut t = FleetTimeline::new();
+        t.provision(0, 0.0);
+        t.online(0, 1800.0);
+        t.close(3600.0);
+        let rep = acc.account_fleet(&cfg(), &log, &t);
+        assert!((rep.gpu_hours - 1.0).abs() < 1e-12);
+        assert!((rep.energy_kwh - 0.12).abs() < 1e-9);
     }
 
     #[test]

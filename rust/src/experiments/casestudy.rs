@@ -11,7 +11,6 @@
 use super::common::{run_case, save};
 use crate::config::simconfig::{Arrival, CosimConfig, LengthDist, SimConfig};
 use crate::cosim::{CarbonAwareController, Environment};
-use crate::grid::{CarbonIntensityTrace, SolarModel};
 use crate::pipeline::{bin_stages, BinningBackend, LoadProfile};
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -76,21 +75,7 @@ pub fn run_full(out_dir: &Path, fast: bool) -> Result<CaseStudyOutput> {
     // 3. Environment signals over the workload window, offset so the
     //    run starts at the configured morning hour.
     let n = profile.len();
-    let start_s = cosim_cfg.start_hour * 3600.0;
-    let solar = SolarModel {
-        capacity_w: cosim_cfg.solar_capacity_w,
-        seed: cosim_cfg.seed,
-        ..SolarModel::default()
-    };
-    let ci_model = CarbonIntensityTrace {
-        mean: cosim_cfg.ci_mean,
-        seed: cosim_cfg.seed ^ 0xC1,
-        ..CarbonIntensityTrace::default()
-    };
-    let solar_sig = solar.trace(start_s, n);
-    let ci_sig = ci_model.trace(start_s, n);
-    let solar_w = solar_sig.sample_grid(start_s, n, cosim_cfg.interval_s);
-    let ci = ci_sig.sample_grid(start_s, n, cosim_cfg.interval_s);
+    let (solar_w, ci) = crate::cosim::default_signals(&cosim_cfg, n);
 
     // 4. Co-simulate: monitored baseline + carbon-aware variant.
     let mut env = Environment::new(cosim_cfg.clone());

@@ -13,6 +13,7 @@ pub mod exp5;
 pub mod casestudy;
 pub mod ablation;
 pub mod extensions;
+pub mod exp_autoscale;
 
 pub use common::{run_case, CaseResult};
 
@@ -33,10 +34,11 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
         "ablation" => ablation::run(out_dir, fast).map(|_| ()),
         "sched" => extensions::run_sched(out_dir, fast).map(|_| ()),
         "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),
+        "autoscale" => exp_autoscale::run(out_dir, fast).map(|_| ()),
         "all" => {
             for id in [
                 "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy",
-                "ablation", "sched", "gpu",
+                "ablation", "sched", "gpu", "autoscale",
             ] {
                 eprintln!("=== experiment {id} ===");
                 run_by_id(id, out_dir, fast)?;
@@ -44,7 +46,7 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, all"
+            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, autoscale, all"
         ),
     }
 }

@@ -17,7 +17,10 @@
 //!
 //! plus the paper's contribution proper: the MFU→power GPU model
 //! ([`power`]), stage-level energy/carbon accounting ([`energy`]), and
-//! the Eq. 5 signal pipeline bridging the two simulators ([`pipeline`]).
+//! the Eq. 5 signal pipeline bridging the two simulators ([`pipeline`]);
+//! and, on top of both, a carbon-aware autoscaling subsystem
+//! ([`autoscale`]) that grows and shrinks the replica fleet against
+//! load telemetry and grid signals (DESIGN.md §6).
 //!
 //! See `DESIGN.md` for the architecture and the experiment index, and
 //! [`experiments`] for regenerators of every table and figure in the
@@ -28,6 +31,7 @@ pub mod config;
 pub mod workload;
 pub mod cluster;
 pub mod scheduler;
+pub mod autoscale;
 pub mod exec;
 pub mod power;
 pub mod energy;

@@ -11,6 +11,7 @@
 //! (`artifacts/bin_power.hlo.txt`) executed in (4096-sample, 512-bin)
 //! windows via PJRT — parity-tested against native.
 
+use crate::autoscale::FleetTimeline;
 use crate::config::simconfig::SimConfig;
 use crate::runtime::{artifacts, pjrt::cached_executable};
 use crate::telemetry::StageLog;
@@ -48,6 +49,9 @@ impl BinnedProfile {
 /// Bin a stage log into `interval_s` windows. Samples are assigned to
 /// the bin containing their start timestamp (the paper's pipeline
 /// timestamps each batch stage with Vidur's internal clock).
+///
+/// Fixed-fleet convenience over [`bin_stages_fleet`]: all
+/// `cfg.replicas` replicas exist for the whole makespan.
 pub fn bin_stages(
     cfg: &SimConfig,
     log: &StageLog,
@@ -55,11 +59,33 @@ pub fn bin_stages(
     interval_s: f64,
     backend: BinningBackend,
 ) -> Result<BinnedProfile> {
+    bin_stages_fleet(
+        cfg,
+        log,
+        &FleetTimeline::static_fleet(cfg.replicas, makespan_s),
+        interval_s,
+        backend,
+    )
+}
+
+/// Fleet-aware Eq. 5 binning (DESIGN.md §6): stage samples are folded
+/// into fixed-width bins exactly as [`bin_stages`], but the idle fill
+/// per bin covers only GPU-time of replicas that exist during that bin
+/// (per the [`FleetTimeline`]). The resulting profile is the
+/// **time-varying demand signal** the co-simulation consumes, so the
+/// microgrid/battery/controllers see autoscaling effects.
+pub fn bin_stages_fleet(
+    cfg: &SimConfig,
+    log: &StageLog,
+    fleet: &FleetTimeline,
+    interval_s: f64,
+    backend: BinningBackend,
+) -> Result<BinnedProfile> {
     anyhow::ensure!(interval_s > 0.0, "interval must be positive");
-    let n_bins = ((makespan_s / interval_s).ceil() as usize).max(1);
+    let horizon_s = fleet.horizon_s;
+    let n_bins = ((horizon_s / interval_s).ceil() as usize).max(1);
     let gpu = cfg.gpu_spec()?;
     let p_idle = gpu.p_idle;
-    let g_total = cfg.total_gpus() as f64;
     let gpus_per_replica = cfg.gpus_per_replica() as f64;
 
     // Per-sample (bin, replica-power, dt, gpu-seconds).
@@ -77,13 +103,17 @@ pub fn bin_stages(
         BinningBackend::Hlo => bin_hlo(log, p_idle, interval_s, n_bins)?,
     };
 
-    // Idle fill: gpu-seconds not covered by stages draw idle power.
-    // The final bin only exists up to the makespan, not its full width.
+    // Idle fill: live gpu-seconds not covered by stages draw idle
+    // power. The final bin only exists up to the horizon, not its full
+    // width, and bins where replicas were drained contain
+    // proportionally less idle time.
     let mut power_w = Vec::with_capacity(n_bins);
     for b in 0..n_bins {
-        let bin_span = (makespan_s - b as f64 * interval_s).clamp(0.0, interval_s);
+        let lo = b as f64 * interval_s;
+        let hi = (lo + interval_s).min(horizon_s);
+        let live_gpu_s = fleet.live_seconds_in(lo, hi) * gpus_per_replica;
         let covered_gpu_s = covered[b] * gpus_per_replica;
-        let idle_gpu_s = (g_total * bin_span - covered_gpu_s).max(0.0);
+        let idle_gpu_s = (live_gpu_s - covered_gpu_s).max(0.0);
         let joules = energy[b] + idle_gpu_s * p_idle;
         power_w.push(joules / interval_s);
     }
@@ -216,6 +246,52 @@ mod tests {
             (total_j - (stage_j + idle_j)).abs() / total_j < 1e-9,
             "binned {total_j} vs direct {}",
             stage_j + idle_j
+        );
+    }
+
+    #[test]
+    fn fleet_binning_shrinks_idle_fill_with_the_fleet() {
+        let cfg = SimConfig::default();
+        let log = StageLog::new();
+        // Two replicas for the first minute, one for the second.
+        let mut fleet = FleetTimeline::new();
+        fleet.provision(0, 0.0);
+        fleet.online(0, 0.0);
+        fleet.provision(1, 0.0);
+        fleet.online(1, 0.0);
+        fleet.drain_start(1, 60.0);
+        fleet.offline(1, 60.0);
+        fleet.close(120.0);
+        let prof =
+            bin_stages_fleet(&cfg, &log, &fleet, 60.0, BinningBackend::Native).unwrap();
+        assert_eq!(prof.len(), 2);
+        assert!((prof.power_w[0] - 200.0).abs() < 1e-9); // 2 idle GPUs
+        assert!((prof.power_w[1] - 100.0).abs() < 1e-9); // 1 idle GPU
+    }
+
+    #[test]
+    fn fleet_binning_conserves_energy_with_partial_bins() {
+        let cfg = SimConfig::default();
+        // One replica 0..100 s, a second 30..70 s; stages on replica 0.
+        let mut fleet = FleetTimeline::new();
+        fleet.provision(0, 0.0);
+        fleet.online(0, 0.0);
+        fleet.provision(1, 30.0);
+        fleet.online(1, 40.0);
+        fleet.drain_start(1, 60.0);
+        fleet.offline(1, 70.0);
+        fleet.close(100.0);
+        let log = log_with(&[(5.0, 10.0, 300.0), (55.0, 20.0, 350.0)]);
+        let prof =
+            bin_stages_fleet(&cfg, &log, &fleet, 10.0, BinningBackend::Native).unwrap();
+        let stage_j = 10.0 * 300.0 + 20.0 * 350.0;
+        let live_s = 100.0 + 40.0;
+        let covered_s = 30.0;
+        let expect_j = stage_j + (live_s - covered_s) * 100.0;
+        let total_j: f64 = prof.power_w.iter().sum::<f64>() * 10.0;
+        assert!(
+            (total_j - expect_j).abs() / expect_j < 1e-9,
+            "binned {total_j} vs direct {expect_j}"
         );
     }
 

@@ -10,7 +10,7 @@ use std::path::Path;
 /// Known experiment ids in presentation order.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy", "ablation",
-    "sched", "gpu",
+    "sched", "gpu", "autoscale",
 ];
 
 /// Figure definitions rendered as ASCII charts in the report:
@@ -19,6 +19,12 @@ const FIGURES: &[(&str, &str, &str, &[&str])] = &[
     ("fig1", "Fig.1 — MFU vs QPS (plateau = saturation)", "qps", &["weighted_mfu"]),
     ("exp3", "Fig.4 — batch cap vs energy", "batch_cap", &["energy_kwh"]),
     ("exp4", "Fig.5 — QPS vs avg power (W)", "qps", &["avg_power_w"]),
+    (
+        "autoscale",
+        "Autoscaling — emissions vs mean fleet size per policy",
+        "mean_fleet",
+        &["net_footprint_g", "slo_pct"],
+    ),
 ];
 
 /// Build a markdown report from whatever results exist under `dir`.

@@ -60,6 +60,10 @@ pub struct ReplicaScheduler {
     pub preemptions: u64,
     /// Requests routed to this replica (for router load balancing).
     pub outstanding: u64,
+    /// Graceful-drain mode (autoscaling scale-down): admission is
+    /// closed, running requests finish; queued requests are re-routed
+    /// by the caller via [`Self::drain_queue`].
+    draining: bool,
 }
 
 impl ReplicaScheduler {
@@ -82,11 +86,18 @@ impl ReplicaScheduler {
             kv,
             preemptions: 0,
             outstanding: 0,
+            draining: false,
         })
     }
 
     /// Test constructor with an explicit KV cache.
-    pub fn with_kv(id: u32, kind: SchedulerKind, batch_cap: usize, chunk_size: u64, kv: KvCache) -> Self {
+    pub fn with_kv(
+        id: u32,
+        kind: SchedulerKind,
+        batch_cap: usize,
+        chunk_size: u64,
+        kv: KvCache,
+    ) -> Self {
         ReplicaScheduler {
             id,
             kind,
@@ -97,6 +108,7 @@ impl ReplicaScheduler {
             kv,
             preemptions: 0,
             outstanding: 0,
+            draining: false,
         }
     }
 
@@ -119,10 +131,53 @@ impl ReplicaScheduler {
         &self.kv
     }
 
+    /// Currently running request ids in admission order (oldest first).
+    pub fn running_ids(&self) -> Vec<u64> {
+        self.running.clone()
+    }
+
+    /// Enter graceful drain: stop admitting, let running requests
+    /// finish. Idempotent.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Remove and return every queued (not yet admitted) request so the
+    /// caller can re-route it to another replica. Adjusts the
+    /// outstanding counter accordingly.
+    pub fn drain_queue(&mut self) -> Vec<u64> {
+        let ids: Vec<u64> = self.queue.drain(..).collect();
+        self.outstanding = self.outstanding.saturating_sub(ids.len() as u64);
+        ids
+    }
+
+    /// Remove up to `n` queued requests from the back of the queue
+    /// (newest first, preserving FIFO order for the rest) so the
+    /// caller can rebalance them onto another replica — used when a
+    /// newly-online replica takes its share of a standing backlog.
+    pub fn steal_queued(&mut self, n: usize) -> Vec<u64> {
+        let take = n.min(self.queue.len());
+        let mut ids = Vec::with_capacity(take);
+        for _ in 0..take {
+            if let Some(id) = self.queue.pop_back() {
+                ids.push(id);
+            }
+        }
+        self.outstanding = self.outstanding.saturating_sub(ids.len() as u64);
+        ids
+    }
+
     /// Admit queued requests while capacity (batch cap + KV) allows.
     /// KV is reserved for the full prompt plus one decode block of
-    /// headroom.
+    /// headroom. Draining replicas admit nothing.
     fn admit(&mut self, reqs: &mut [Request], now: f64) {
+        if self.draining {
+            return;
+        }
         while self.running.len() < self.batch_cap {
             let Some(&id) = self.queue.front() else { break };
             let r = &mut reqs[id as usize];
@@ -496,6 +551,41 @@ mod tests {
             .map(|&(_, t)| t as u64)
             .sum();
         assert_eq!(prefill_tokens, 400); // unchunked
+    }
+
+    #[test]
+    fn draining_replica_admits_nothing_but_finishes_running() {
+        let mut reqs = mk_reqs(&[(50, 3), (50, 3), (50, 3)]);
+        let mut s = vllm_sched(128, 1000);
+        s.enqueue(0);
+        let p = s.next_stage(&mut reqs, 0.0).unwrap();
+        s.complete_stage(&mut reqs, &p, 0.1);
+        assert_eq!(s.running_len(), 1);
+
+        assert!(!s.is_draining());
+        s.begin_drain();
+        assert!(s.is_draining());
+        s.enqueue(1);
+        s.enqueue(2);
+        // Queued requests never get admitted while draining.
+        let mut now = 0.1;
+        loop {
+            let Some(p) = s.next_stage(&mut reqs, now) else { break };
+            assert!(
+                p.entries.iter().all(|&(id, _)| id == 0),
+                "drained replica admitted new work: {p:?}"
+            );
+            now += 0.01;
+            s.complete_stage(&mut reqs, &p, now);
+        }
+        assert!(reqs[0].is_finished());
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.queue_len(), 2);
+        // The leftover queue re-routes elsewhere.
+        let moved = s.drain_queue();
+        assert_eq!(moved, vec![1, 2]);
+        assert_eq!(s.outstanding, 0);
+        assert!(!s.has_work());
     }
 
     #[test]

@@ -38,6 +38,24 @@ impl Router {
                 .unwrap_or(0),
         }
     }
+
+    /// Pick a replica from an explicit eligible subset (dynamic fleets:
+    /// draining/offline/cold-starting replicas are excluded by the
+    /// caller). `outstanding` is indexed by absolute replica id.
+    pub fn route_among(&mut self, eligible: &[usize], outstanding: &[u64]) -> usize {
+        assert!(!eligible.is_empty(), "no routable replica");
+        match self.kind {
+            RouterKind::RoundRobin => {
+                let r = eligible[self.next % eligible.len()];
+                self.next = (self.next + 1) % eligible.len();
+                r
+            }
+            RouterKind::LeastOutstanding => *eligible
+                .iter()
+                .min_by_key(|&&i| outstanding[i])
+                .unwrap(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -61,5 +79,16 @@ mod tests {
         assert_eq!(r.route(&[0, 2, 7]), 0);
         // Tie: first wins (stable).
         assert_eq!(r.route(&[3, 3, 3]), 0);
+    }
+
+    #[test]
+    fn route_among_respects_subset() {
+        let mut r = Router::new(RouterKind::LeastOutstanding, 4);
+        // Replica 0 has the global minimum but is not eligible.
+        assert_eq!(r.route_among(&[1, 3], &[0, 5, 1, 2]), 3);
+
+        let mut rr = Router::new(RouterKind::RoundRobin, 4);
+        let picks: Vec<usize> = (0..4).map(|_| rr.route_among(&[1, 2], &[0; 4])).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
     }
 }

@@ -12,45 +12,85 @@
 //! reading of Vidur's replica-stage traces; while one PP stage
 //! computes, the other (pp-1)·tp GPUs of the replica idle at
 //! `p_idle` and are charged as such by the energy accounting.
+//!
+//! Two entry families:
+//! * [`run`] / [`run_with_trace`] / [`run_with_model`] — the original
+//!   fixed-fleet engine;
+//! * [`run_autoscaled`] / [`run_autoscaled_with_model`] — the dynamic
+//!   fleet engine (DESIGN.md §6): replicas are provisioned with a
+//!   cold-start delay (drawing idle power while booting), gracefully
+//!   drained (admission closes, running requests finish, queued ones
+//!   re-route through the [`Router`]), and taken offline, under a
+//!   [`crate::autoscale::ScalingPolicy`] evaluated on a fixed decision
+//!   interval against load telemetry and grid signals.
 
+use crate::autoscale::{
+    build_policy, FleetController, FleetTimeline, GridEnv, LoadSignals, ScaleDecision,
+};
 use crate::cluster::topology::ClusterTopology;
-use crate::config::simconfig::SimConfig;
+use crate::config::simconfig::{AutoscaleConfig, SimConfig};
 use crate::exec::batch::BatchDesc;
 use crate::exec::{build_cost_model, StageCostModel};
 use crate::scheduler::replica::{ReplicaScheduler, StagePlan};
 use crate::scheduler::router::Router;
 use crate::sim::metrics::SimMetrics;
 use crate::telemetry::{StageLog, StageRecord};
+use crate::util::stats::percentile;
 use crate::workload::{Request, Trace, WorkloadGenerator};
 use anyhow::Result;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
-/// A scheduled simulation event.
+/// A scheduled fixed-fleet simulation event.
 #[derive(Debug)]
 enum EventKind {
     Arrival { request: u64 },
     IterDone { replica: u32, plan: StagePlan },
 }
 
-struct Event {
-    at: f64,
-    seq: u64,
-    kind: EventKind,
+/// Events of the autoscaled engine: the base events plus replica
+/// lifecycle transitions and periodic scaling decisions.
+#[derive(Debug)]
+enum AsEventKind {
+    Arrival { request: u64 },
+    IterDone { replica: u32, plan: StagePlan },
+    /// Cold start finished; the replica starts serving traffic.
+    ReplicaOnline { replica: u32 },
+    /// Periodic autoscaling decision.
+    ScaleTick,
 }
 
-impl PartialEq for Event {
+/// Lifecycle state of one replica slot in the dynamic fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RState {
+    /// Cold-starting (exists, draws idle power, serves nothing).
+    Provisioning,
+    /// Serving traffic.
+    Active,
+    /// Admission closed; finishing running requests.
+    Draining,
+    /// Gone.
+    Offline,
+}
+
+struct Event<K> {
+    at: f64,
+    seq: u64,
+    kind: K,
+}
+
+impl<K> PartialEq for Event<K> {
     fn eq(&self, other: &Self) -> bool {
         self.at == other.at && self.seq == other.seq
     }
 }
-impl Eq for Event {}
-impl PartialOrd for Event {
+impl<K> Eq for Event<K> {}
+impl<K> PartialOrd for Event<K> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for Event {
+impl<K> Ord for Event<K> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap via reversed comparison; ties broken by insertion order.
         other
@@ -71,6 +111,60 @@ pub struct SimOutput {
     /// backend is used.
     pub oracle_calls: u64,
     pub oracle_hits: u64,
+}
+
+/// A dynamic-fleet run: the simulation output plus the replica
+/// lifecycle the energy layers need.
+pub struct AutoscaleOutput {
+    pub sim: SimOutput,
+    /// Per-replica existence intervals + lifecycle event log.
+    pub timeline: FleetTimeline,
+    /// Every scaling decision the controller took.
+    pub decisions: Vec<ScaleDecision>,
+    /// Name of the policy that drove the run.
+    pub policy: &'static str,
+}
+
+/// Plan and price one iteration on `replica_idx`: asks the replica
+/// scheduler for the next stage plan, prices it through the oracle,
+/// logs `pp` stage records, and returns the iteration completion time
+/// with the plan — or None when the replica has nothing runnable.
+fn plan_iteration(
+    replica_idx: usize,
+    now: f64,
+    cfg: &SimConfig,
+    idle_gpus_per_stage: u32,
+    replicas: &mut [ReplicaScheduler],
+    requests: &mut [Request],
+    cost: &mut dyn StageCostModel,
+    stagelog: &mut StageLog,
+    batch: &mut BatchDesc,
+) -> Option<(f64, StagePlan)> {
+    let plan = replicas[replica_idx].next_stage(requests, now)?;
+    // Price one pipeline stage.
+    batch.clear();
+    for &(id, nt) in &plan.entries {
+        batch.push(nt, requests[id as usize].context_len() as u32);
+    }
+    let c = cost.stage_cost(batch);
+    // pp sequential stages, each logged separately.
+    for s in 0..cfg.pp {
+        stagelog.push(StageRecord {
+            replica: replica_idx as u32,
+            pp_stage: s,
+            start_s: now + s as f64 * c.t_stage_s,
+            dt_s: c.t_stage_s,
+            batch_size: plan.batch_size() as u32,
+            new_tokens: plan.total_new_tokens() as u32,
+            mfu: c.mfu,
+            power_w: c.power_w,
+            active_gpus: cfg.tp,
+            idle_gpus: idle_gpus_per_stage,
+            flops: c.flops,
+            kind: plan.kind,
+        });
+    }
+    Some((now + c.t_stage_s * cfg.pp as f64, plan))
 }
 
 /// Run the simulator with a freshly generated workload.
@@ -107,7 +201,8 @@ pub fn run_with_model(
     let mut router = Router::new(cfg.router, cfg.replicas as usize);
     let mut busy: Vec<bool> = vec![false; cfg.replicas as usize];
 
-    let mut heap = BinaryHeap::with_capacity(requests.len() * 2);
+    let mut heap: BinaryHeap<Event<EventKind>> =
+        BinaryHeap::with_capacity(requests.len() * 2);
     let mut seq = 0u64;
     for r in &requests {
         heap.push(Event {
@@ -124,53 +219,6 @@ pub fn run_with_model(
     let total = requests.len() as u64;
     let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
 
-    // Start an iteration on a replica if it is free and has work.
-    // Returns the scheduled completion event, if any.
-    let start_iteration = |replica_idx: usize,
-                               now: f64,
-                               replicas: &mut [ReplicaScheduler],
-                               requests: &mut [Request],
-                               cost: &mut dyn StageCostModel,
-                               stagelog: &mut StageLog,
-                               batch: &mut BatchDesc,
-                               seq: &mut u64|
-     -> Option<Event> {
-        let plan = replicas[replica_idx].next_stage(requests, now)?;
-        // Price one pipeline stage.
-        batch.clear();
-        for &(id, nt) in &plan.entries {
-            batch.push(nt, requests[id as usize].context_len() as u32);
-        }
-        let c = cost.stage_cost(batch);
-        // pp sequential stages, each logged separately.
-        for s in 0..cfg.pp {
-            stagelog.push(StageRecord {
-                replica: replica_idx as u32,
-                pp_stage: s,
-                start_s: now + s as f64 * c.t_stage_s,
-                dt_s: c.t_stage_s,
-                batch_size: plan.batch_size() as u32,
-                new_tokens: plan.total_new_tokens() as u32,
-                mfu: c.mfu,
-                power_w: c.power_w,
-                active_gpus: cfg.tp,
-                idle_gpus: idle_gpus_per_stage,
-                flops: c.flops,
-                kind: plan.kind,
-            });
-        }
-        let iter_time = c.t_stage_s * cfg.pp as f64;
-        *seq += 1;
-        Some(Event {
-            at: now + iter_time,
-            seq: *seq,
-            kind: EventKind::IterDone {
-                replica: replica_idx as u32,
-                plan,
-            },
-        })
-    };
-
     let mut last_time = 0.0f64;
     while let Some(ev) = heap.pop() {
         let now = ev.at;
@@ -182,18 +230,27 @@ pub fn run_with_model(
                 let target = router.route(&outstanding);
                 replicas[target].enqueue(request);
                 if !busy[target] {
-                    if let Some(e) = start_iteration(
+                    if let Some((at, plan)) = plan_iteration(
                         target,
                         now,
+                        cfg,
+                        idle_gpus_per_stage,
                         &mut replicas,
                         &mut requests,
                         cost.as_mut(),
                         &mut stagelog,
                         &mut batch,
-                        &mut seq,
                     ) {
                         busy[target] = true;
-                        heap.push(e);
+                        seq += 1;
+                        heap.push(Event {
+                            at,
+                            seq,
+                            kind: EventKind::IterDone {
+                                replica: target as u32,
+                                plan,
+                            },
+                        });
                     }
                 }
             }
@@ -202,18 +259,24 @@ pub fn run_with_model(
                 let fin = replicas[idx].complete_stage(&mut requests, &plan, now);
                 finished_count += fin.len() as u64;
                 busy[idx] = false;
-                if let Some(e) = start_iteration(
+                if let Some((at, plan)) = plan_iteration(
                     idx,
                     now,
+                    cfg,
+                    idle_gpus_per_stage,
                     &mut replicas,
                     &mut requests,
                     cost.as_mut(),
                     &mut stagelog,
                     &mut batch,
-                    &mut seq,
                 ) {
                     busy[idx] = true;
-                    heap.push(e);
+                    seq += 1;
+                    heap.push(Event {
+                        at,
+                        seq,
+                        kind: EventKind::IterDone { replica, plan },
+                    });
                 }
             }
         }
@@ -237,10 +300,478 @@ pub fn run_with_model(
     })
 }
 
+/// Start an iteration on `idx` if it is free and has runnable work;
+/// pushes the completion event.
+fn try_start(
+    idx: usize,
+    now: f64,
+    cfg: &SimConfig,
+    idle_gpus_per_stage: u32,
+    replicas: &mut [ReplicaScheduler],
+    requests: &mut [Request],
+    cost: &mut dyn StageCostModel,
+    stagelog: &mut StageLog,
+    batch: &mut BatchDesc,
+    busy: &mut [bool],
+    seq: &mut u64,
+    heap: &mut BinaryHeap<Event<AsEventKind>>,
+) {
+    if busy[idx] {
+        return;
+    }
+    if let Some((at, plan)) = plan_iteration(
+        idx,
+        now,
+        cfg,
+        idle_gpus_per_stage,
+        replicas,
+        requests,
+        cost,
+        stagelog,
+        batch,
+    ) {
+        busy[idx] = true;
+        *seq += 1;
+        heap.push(Event {
+            at,
+            seq: *seq,
+            kind: AsEventKind::IterDone {
+                replica: idx as u32,
+                plan,
+            },
+        });
+    }
+}
+
+/// Move every queued request of `victim` to active replicas via the
+/// router. Returns the set of replicas that received work (the caller
+/// kicks them). The controller never drains the last active replica,
+/// so an eligible target always exists when there is work to move.
+fn reroute_queue(
+    victim: usize,
+    state: &[RState],
+    replicas: &mut [ReplicaScheduler],
+    router: &mut Router,
+) -> Vec<usize> {
+    let ids = replicas[victim].drain_queue();
+    if ids.is_empty() {
+        return Vec::new();
+    }
+    let eligible: Vec<usize> = state
+        .iter()
+        .enumerate()
+        .filter(|(i, s)| **s == RState::Active && *i != victim)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(
+        !eligible.is_empty(),
+        "drain left no active replica to requeue onto"
+    );
+    let mut touched = Vec::new();
+    for id in ids {
+        let outstanding: Vec<u64> = replicas.iter().map(|r| r.outstanding).collect();
+        let target = router.route_among(&eligible, &outstanding);
+        replicas[target].enqueue(id);
+        if !touched.contains(&target) {
+            touched.push(target);
+        }
+    }
+    touched
+}
+
+/// Run the dynamic-fleet simulator with the configured cost oracle.
+pub fn run_autoscaled(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+) -> Result<AutoscaleOutput> {
+    let cost = build_cost_model(cfg)?;
+    run_autoscaled_with_model(cfg, scale, grid, trace, cost)
+}
+
+/// Dynamic-fleet engine: like [`run_with_model`] but the replica fleet
+/// grows and shrinks under the configured scaling policy.
+///
+/// Replica lifecycle: Provision (cold start, idle power, `cold_start_s`
+/// long) → Active → Draining (admission closed, queue re-routed,
+/// running requests finish) → Offline. The initial fleet is
+/// `cfg.replicas` clamped into the autoscaler bounds and is online at
+/// t = 0 with no cold start.
+pub fn run_autoscaled_with_model(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+    mut cost: Box<dyn StageCostModel>,
+) -> Result<AutoscaleOutput> {
+    cfg.validate()?;
+    scale.validate()?;
+    let topo = ClusterTopology::from_config(cfg)?;
+    let mut requests = trace.requests;
+    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+
+    let init = cfg.replicas.clamp(scale.min_replicas, scale.max_replicas);
+    let mut replicas: Vec<ReplicaScheduler> = (0..init)
+        .map(|i| ReplicaScheduler::new(i, cfg))
+        .collect::<Result<_>>()?;
+    let mut state: Vec<RState> = vec![RState::Active; init as usize];
+    let mut busy: Vec<bool> = vec![false; init as usize];
+    let mut router = Router::new(cfg.router, init as usize);
+    let mut timeline = FleetTimeline::new();
+    for i in 0..init {
+        timeline.provision(i, 0.0);
+        timeline.online(i, 0.0);
+    }
+    let mut controller = FleetController::new(scale.clone(), build_policy(scale, init));
+
+    let mut heap: BinaryHeap<Event<AsEventKind>> =
+        BinaryHeap::with_capacity(requests.len() * 2 + 64);
+    let mut seq = 0u64;
+    for r in &requests {
+        heap.push(Event {
+            at: r.arrival_s,
+            seq,
+            kind: AsEventKind::Arrival { request: r.id },
+        });
+        seq += 1;
+    }
+    seq += 1;
+    heap.push(Event {
+        at: scale.decision_interval_s,
+        seq,
+        kind: AsEventKind::ScaleTick,
+    });
+
+    let mut stagelog = StageLog::new();
+    let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
+    let mut finished_count = 0u64;
+    let total = requests.len() as u64;
+    let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
+
+    // Recent-completion window feeding the SLO/throughput telemetry.
+    let window_s = (scale.decision_interval_s * 5.0).max(300.0);
+    let mut recent: VecDeque<(f64, f64, f64)> = VecDeque::new(); // (t, ttft, e2e)
+
+    let mut last_time = 0.0f64;
+    while let Some(ev) = heap.pop() {
+        let now = ev.at;
+        // Only workload progress defines the makespan: control-plane
+        // events (ticks, cold-start completions) trailing the last
+        // request must not inflate it — or the timeline horizon, which
+        // would charge phantom whole-fleet idle energy.
+        if matches!(
+            ev.kind,
+            AsEventKind::Arrival { .. } | AsEventKind::IterDone { .. }
+        ) {
+            last_time = last_time.max(now);
+        }
+        match ev.kind {
+            AsEventKind::Arrival { request } => {
+                let eligible: Vec<usize> = state
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| **s == RState::Active)
+                    .map(|(i, _)| i)
+                    .collect();
+                let outstanding: Vec<u64> =
+                    replicas.iter().map(|r| r.outstanding).collect();
+                let target = router.route_among(&eligible, &outstanding);
+                replicas[target].enqueue(request);
+                try_start(
+                    target,
+                    now,
+                    cfg,
+                    idle_gpus_per_stage,
+                    &mut replicas,
+                    &mut requests,
+                    cost.as_mut(),
+                    &mut stagelog,
+                    &mut batch,
+                    &mut busy,
+                    &mut seq,
+                    &mut heap,
+                );
+            }
+            AsEventKind::IterDone { replica, plan } => {
+                let idx = replica as usize;
+                let fin = replicas[idx].complete_stage(&mut requests, &plan, now);
+                finished_count += fin.len() as u64;
+                for id in &fin {
+                    let r = &requests[*id as usize];
+                    recent.push_back((
+                        now,
+                        r.ttft().unwrap_or(0.0),
+                        r.e2e_latency().unwrap_or(0.0),
+                    ));
+                }
+                busy[idx] = false;
+                try_start(
+                    idx,
+                    now,
+                    cfg,
+                    idle_gpus_per_stage,
+                    &mut replicas,
+                    &mut requests,
+                    cost.as_mut(),
+                    &mut stagelog,
+                    &mut batch,
+                    &mut busy,
+                    &mut seq,
+                    &mut heap,
+                );
+                if state[idx] == RState::Draining {
+                    // Preemption during the drain may have pushed
+                    // requests back onto this replica's queue; they
+                    // must move to an active replica or they would
+                    // never be re-admitted.
+                    if replicas[idx].queue_len() > 0 {
+                        for t in reroute_queue(idx, &state, &mut replicas, &mut router) {
+                            try_start(
+                                t,
+                                now,
+                                cfg,
+                                idle_gpus_per_stage,
+                                &mut replicas,
+                                &mut requests,
+                                cost.as_mut(),
+                                &mut stagelog,
+                                &mut batch,
+                                &mut busy,
+                                &mut seq,
+                                &mut heap,
+                            );
+                        }
+                    }
+                    if !busy[idx] && !replicas[idx].has_work() {
+                        state[idx] = RState::Offline;
+                        timeline.offline(replica, now);
+                    }
+                }
+            }
+            AsEventKind::ReplicaOnline { replica } => {
+                if finished_count >= total {
+                    continue; // run is over; don't pollute the timeline
+                }
+                let idx = replica as usize;
+                // A cancelled provision may already be Offline.
+                if state[idx] == RState::Provisioning {
+                    state[idx] = RState::Active;
+                    timeline.online(replica, now);
+                    // Rebalance: a scale-up was triggered by backlog, so
+                    // the new replica takes its fair share of standing
+                    // queues instead of waiting for future arrivals.
+                    let actives: Vec<usize> = state
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| **s == RState::Active)
+                        .map(|(i, _)| i)
+                        .collect();
+                    let total_queued: usize =
+                        actives.iter().map(|&i| replicas[i].queue_len()).sum();
+                    let share = total_queued / actives.len().max(1);
+                    let mut want = share;
+                    for &j in &actives {
+                        if want == 0 {
+                            break;
+                        }
+                        if j == idx {
+                            continue;
+                        }
+                        let excess = replicas[j].queue_len().saturating_sub(share);
+                        let take = excess.min(want);
+                        if take > 0 {
+                            for id in replicas[j].steal_queued(take) {
+                                replicas[idx].enqueue(id);
+                            }
+                            want -= take;
+                        }
+                    }
+                    try_start(
+                        idx,
+                        now,
+                        cfg,
+                        idle_gpus_per_stage,
+                        &mut replicas,
+                        &mut requests,
+                        cost.as_mut(),
+                        &mut stagelog,
+                        &mut batch,
+                        &mut busy,
+                        &mut seq,
+                        &mut heap,
+                    );
+                }
+            }
+            AsEventKind::ScaleTick => {
+                if finished_count >= total {
+                    continue; // run is over; stop the tick chain
+                }
+                while recent
+                    .front()
+                    .map(|f| f.0 < now - window_s)
+                    .unwrap_or(false)
+                {
+                    recent.pop_front();
+                }
+                let active =
+                    state.iter().filter(|&&s| s == RState::Active).count() as u32;
+                let pending =
+                    state.iter().filter(|&&s| s == RState::Provisioning).count() as u32;
+                let queued: u64 =
+                    replicas.iter().map(|r| r.queue_len() as u64).sum();
+                let running: u64 =
+                    replicas.iter().map(|r| r.running_len() as u64).sum();
+                let ttfts: Vec<f64> = recent.iter().map(|f| f.1).collect();
+                let e2es: Vec<f64> = recent.iter().map(|f| f.2).collect();
+                let load = LoadSignals {
+                    t_s: now,
+                    queued,
+                    running,
+                    active_replicas: active,
+                    pending_replicas: pending,
+                    recent_qps: recent.len() as f64 / window_s.min(now.max(1e-9)),
+                    recent_ttft_p99_s: if ttfts.is_empty() {
+                        f64::NAN
+                    } else {
+                        percentile(&ttfts, 99.0)
+                    },
+                    recent_e2e_p99_s: if e2es.is_empty() {
+                        f64::NAN
+                    } else {
+                        percentile(&e2es, 99.0)
+                    },
+                    slo_ttft_s: cfg.slo_ttft_s,
+                    slo_e2e_s: cfg.slo_e2e_s,
+                };
+                let desired = controller.desired(&load, &grid.at(now));
+                let fleet = active + pending;
+                if desired > fleet {
+                    for _ in 0..(desired - fleet) {
+                        let id = replicas.len() as u32;
+                        replicas.push(ReplicaScheduler::new(id, cfg)?);
+                        state.push(RState::Provisioning);
+                        busy.push(false);
+                        timeline.provision(id, now);
+                        seq += 1;
+                        heap.push(Event {
+                            at: now + scale.cold_start_s,
+                            seq,
+                            kind: AsEventKind::ReplicaOnline { replica: id },
+                        });
+                    }
+                } else if desired < fleet {
+                    let mut shed = fleet - desired;
+                    // 1. Cancel cold starts (newest first): free.
+                    for idx in (0..replicas.len()).rev() {
+                        if shed == 0 {
+                            break;
+                        }
+                        if state[idx] == RState::Provisioning {
+                            state[idx] = RState::Offline;
+                            timeline.offline(idx as u32, now);
+                            shed -= 1;
+                        }
+                    }
+                    // 2. Gracefully drain the least-loaded active
+                    //    replicas, always keeping at least one active.
+                    while shed > 0 {
+                        let actives: Vec<usize> = state
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| **s == RState::Active)
+                            .map(|(i, _)| i)
+                            .collect();
+                        if actives.len() <= 1 {
+                            break;
+                        }
+                        let victim = *actives
+                            .iter()
+                            .min_by_key(|&&i| replicas[i].outstanding)
+                            .unwrap();
+                        state[victim] = RState::Draining;
+                        // Close scheduler-side admission too: without
+                        // this, preemption refugees would be silently
+                        // re-admitted onto the draining replica.
+                        replicas[victim].begin_drain();
+                        timeline.drain_start(victim as u32, now);
+                        for t in
+                            reroute_queue(victim, &state, &mut replicas, &mut router)
+                        {
+                            try_start(
+                                t,
+                                now,
+                                cfg,
+                                idle_gpus_per_stage,
+                                &mut replicas,
+                                &mut requests,
+                                cost.as_mut(),
+                                &mut stagelog,
+                                &mut batch,
+                                &mut busy,
+                                &mut seq,
+                                &mut heap,
+                            );
+                        }
+                        if !busy[victim] && !replicas[victim].has_work() {
+                            state[victim] = RState::Offline;
+                            timeline.offline(victim as u32, now);
+                        }
+                        shed -= 1;
+                    }
+                }
+                // Re-arm the tick only while progress is possible: at
+                // this point the popped tick was the only one pending,
+                // so a non-empty heap means arrivals/iterations/onlines
+                // are still in flight. An empty heap with unfinished
+                // requests is a deadlock — stop ticking so the loop
+                // exits and the ensure! below reports it.
+                if finished_count < total && !heap.is_empty() {
+                    seq += 1;
+                    heap.push(Event {
+                        at: now + scale.decision_interval_s,
+                        seq,
+                        kind: AsEventKind::ScaleTick,
+                    });
+                }
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        finished_count == total,
+        "autoscaled simulation ended with {finished_count}/{total} requests finished (deadlock?)"
+    );
+
+    timeline.close(last_time);
+    let preemptions = replicas.iter().map(|r| r.preemptions).sum();
+    let metrics = SimMetrics::compute(cfg, &requests, &stagelog, last_time, preemptions);
+    let (oracle_calls, oracle_hits) = cost.stats();
+    let policy = controller.policy_name();
+    Ok(AutoscaleOutput {
+        sim: SimOutput {
+            config: cfg.clone(),
+            requests,
+            stagelog,
+            metrics,
+            oracle_calls,
+            oracle_hits,
+        },
+        timeline,
+        decisions: controller.decisions,
+        policy,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::simconfig::{Arrival, CostModelKind, LengthDist};
+    use crate::config::simconfig::{
+        Arrival, CostModelKind, LengthDist, ScalingPolicyKind,
+    };
     use crate::exec::batch::StageCost;
 
     /// Constant-time mock oracle: every stage takes 10 ms.
@@ -366,5 +897,123 @@ mod tests {
             out_hi.metrics.makespan_s,
             out_lo.metrics.makespan_s
         );
+    }
+
+    // --- dynamic fleet ---
+
+    fn scale_cfg(policy: ScalingPolicyKind) -> AutoscaleConfig {
+        let mut s = AutoscaleConfig::default();
+        s.policy = policy;
+        s.decision_interval_s = 2.0;
+        s.cold_start_s = 1.0;
+        s
+    }
+
+    #[test]
+    fn static_policy_matches_fixed_fleet_engine() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 2;
+        cfg.num_requests = 80;
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+
+        let base = run_with_trace(&cfg, trace.clone()).unwrap();
+        let mut s = scale_cfg(ScalingPolicyKind::Static);
+        s.min_replicas = 2;
+        s.max_replicas = 2;
+        let auto =
+            run_autoscaled(&cfg, &s, &GridEnv::constant(150.0, 0.0), trace).unwrap();
+
+        assert!(auto.sim.requests.iter().all(|r| r.is_finished()));
+        assert_eq!(auto.timeline.max_fleet(), 2);
+        assert_eq!(auto.timeline.mean_fleet(), 2.0);
+        // Same trace, same fleet, same oracle: identical schedule.
+        let rel = (auto.sim.metrics.makespan_s - base.metrics.makespan_s).abs()
+            / base.metrics.makespan_s;
+        assert!(rel < 1e-2, "makespans diverge: {rel}");
+        assert_eq!(auto.sim.stagelog.len(), base.stagelog.len());
+    }
+
+    #[test]
+    fn reactive_scales_up_under_burst() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 1;
+        cfg.num_requests = 300;
+        cfg.arrival = Arrival::Poisson { qps: 60.0 };
+        cfg.batch_cap = 8; // small batches force a backlog
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+
+        let mut s = scale_cfg(ScalingPolicyKind::Reactive);
+        s.queue_high = 4.0;
+        let out =
+            run_autoscaled(&cfg, &s, &GridEnv::constant(150.0, 0.0), trace).unwrap();
+        assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+        assert!(
+            out.timeline.max_fleet() > 1,
+            "burst never scaled up: decisions {:?}",
+            out.decisions
+        );
+        // Replicas beyond the first went through a real cold start.
+        assert!(out
+            .timeline
+            .spans
+            .iter()
+            .skip(1)
+            .all(|sp| sp.online_s.map(|t| t >= sp.up_s + 1.0).unwrap_or(true)));
+    }
+
+    #[test]
+    fn carbon_policy_drains_on_dirty_grid_and_work_survives() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 3;
+        cfg.num_requests = 200;
+        cfg.arrival = Arrival::Poisson { qps: 8.0 };
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+
+        let s = scale_cfg(ScalingPolicyKind::CarbonAware);
+        // Permanently dirty grid: fleet must shed towards min_replicas.
+        let out =
+            run_autoscaled(&cfg, &s, &GridEnv::constant(500.0, 0.0), trace).unwrap();
+        assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+        let (_, downs) = out.timeline.scale_event_counts();
+        assert!(downs >= 2, "dirty grid should drain replicas");
+        // Drained replicas saw a graceful lifecycle.
+        for sp in &out.timeline.spans {
+            if let (Some(d), Some(down)) = (sp.drain_s, sp.down_s) {
+                assert!(down >= d, "offline before drain on {sp:?}");
+            }
+        }
+        assert!(out.timeline.mean_fleet() < 3.0);
+    }
+
+    #[test]
+    fn autoscaled_run_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.num_requests = 120;
+        cfg.arrival = Arrival::Poisson { qps: 30.0 };
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+        let s = scale_cfg(ScalingPolicyKind::Reactive);
+        let a = run_autoscaled_with_model(
+            &cfg,
+            &s,
+            &GridEnv::constant(150.0, 0.0),
+            trace.clone(),
+            Box::new(MockCost),
+        )
+        .unwrap();
+        let b = run_autoscaled_with_model(
+            &cfg,
+            &s,
+            &GridEnv::constant(150.0, 0.0),
+            trace,
+            Box::new(MockCost),
+        )
+        .unwrap();
+        assert_eq!(a.sim.metrics.makespan_s, b.sim.metrics.makespan_s);
+        assert_eq!(a.sim.stagelog.len(), b.sim.stagelog.len());
+        assert_eq!(a.timeline.events.len(), b.timeline.events.len());
     }
 }

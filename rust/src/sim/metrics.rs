@@ -30,11 +30,19 @@ pub struct SimMetrics {
     pub preemptions: u64,
     /// Mean queueing delay (arrival -> first scheduled).
     pub queue_delay_p50_s: f64,
+    /// Fraction of requests whose TTFT met `cfg.slo_ttft_s`
+    /// (unfinished requests count as misses).
+    pub slo_ttft_attained: f64,
+    /// Fraction of requests whose e2e latency met `cfg.slo_e2e_s`.
+    pub slo_e2e_attained: f64,
+    /// Fraction meeting both SLOs — the autoscaler's guard metric and
+    /// the sweep's service-quality axis.
+    pub slo_attained: f64,
 }
 
 impl SimMetrics {
     pub fn compute(
-        _cfg: &SimConfig,
+        cfg: &SimConfig,
         requests: &[Request],
         log: &StageLog,
         makespan_s: f64,
@@ -53,6 +61,24 @@ impl SimMetrics {
             })
             .collect();
         let total_tokens: u64 = requests.iter().map(|r| r.total_tokens()).sum();
+        let n_req = requests.len().max(1) as f64;
+        let ttft_ok = requests
+            .iter()
+            .filter(|r| r.ttft().map(|t| t <= cfg.slo_ttft_s).unwrap_or(false))
+            .count() as f64;
+        let e2e_ok = requests
+            .iter()
+            .filter(|r| {
+                r.e2e_latency().map(|t| t <= cfg.slo_e2e_s).unwrap_or(false)
+            })
+            .count() as f64;
+        let both_ok = requests
+            .iter()
+            .filter(|r| {
+                r.ttft().map(|t| t <= cfg.slo_ttft_s).unwrap_or(false)
+                    && r.e2e_latency().map(|t| t <= cfg.slo_e2e_s).unwrap_or(false)
+            })
+            .count() as f64;
         let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
         let mean = |v: &[f64]| {
             if v.is_empty() {
@@ -75,6 +101,9 @@ impl SimMetrics {
             stage_count: log.len() as u64,
             preemptions,
             queue_delay_p50_s: pc(&qdel, 50.0),
+            slo_ttft_attained: ttft_ok / n_req,
+            slo_e2e_attained: e2e_ok / n_req,
+            slo_attained: both_ok / n_req,
         }
     }
 
@@ -92,7 +121,10 @@ impl SimMetrics {
             .set("mean_batch_size", self.mean_batch_size)
             .set("stage_count", self.stage_count)
             .set("preemptions", self.preemptions)
-            .set("queue_delay_p50_s", self.queue_delay_p50_s);
+            .set("queue_delay_p50_s", self.queue_delay_p50_s)
+            .set("slo_ttft_attained", self.slo_ttft_attained)
+            .set("slo_e2e_attained", self.slo_e2e_attained)
+            .set("slo_attained", self.slo_attained);
         v
     }
 }
@@ -122,5 +154,27 @@ mod tests {
         assert_eq!(m.token_throughput, 30.0 / 3.0);
         let j = m.to_json();
         assert!(j.get("makespan_s").is_some());
+        assert!(j.get("slo_attained").is_some());
+    }
+
+    #[test]
+    fn slo_attainment_fractions() {
+        let mut cfg = SimConfig::default();
+        cfg.slo_ttft_s = 0.8;
+        cfg.slo_e2e_s = 2.0;
+        let mut reqs = vec![
+            Request::new(0, 0.0, 10, 5), // ttft 0.5 ok, e2e 1.0 ok
+            Request::new(1, 1.0, 10, 5), // ttft 1.0 miss, e2e 2.0 ok
+            Request::new(2, 2.0, 10, 5), // unfinished: misses both
+        ];
+        reqs[0].first_token_s = Some(0.5);
+        reqs[0].finished_s = Some(1.0);
+        reqs[1].first_token_s = Some(2.0);
+        reqs[1].finished_s = Some(3.0);
+        let log = StageLog::new();
+        let m = SimMetrics::compute(&cfg, &reqs, &log, 3.0, 0);
+        assert!((m.slo_ttft_attained - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.slo_e2e_attained - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.slo_attained - 1.0 / 3.0).abs() < 1e-12);
     }
 }

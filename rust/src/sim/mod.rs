@@ -4,5 +4,8 @@
 pub mod engine;
 pub mod metrics;
 
-pub use engine::{run, run_with_trace, SimOutput};
+pub use engine::{
+    run, run_autoscaled, run_autoscaled_with_model, run_with_trace, AutoscaleOutput,
+    SimOutput,
+};
 pub use metrics::SimMetrics;

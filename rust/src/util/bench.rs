@@ -112,7 +112,12 @@ impl Bench {
 
     /// One-shot measurement (for long end-to-end cases where iterating
     /// is impractical): runs once, records the time.
-    pub fn once<T>(&mut self, name: &str, mut f: impl FnMut() -> T, metric_of: impl Fn(&T) -> String) {
+    pub fn once<T>(
+        &mut self,
+        name: &str,
+        mut f: impl FnMut() -> T,
+        metric_of: impl Fn(&T) -> String,
+    ) {
         let t0 = Instant::now();
         let v = f();
         let dt = t0.elapsed().as_secs_f64();

@@ -1,0 +1,268 @@
+//! Integration tests for the autoscaling subsystem's energy contract:
+//! under a dynamic fleet, per-stage energy plus idle energy of *live*
+//! replicas must equal the binned (Eq. 5) demand signal the
+//! co-simulation consumes — and that signal's energy must survive the
+//! microgrid unchanged. Plus the end-to-end policy property the
+//! experiment claims: carbon-aware scaling emits less than the static
+//! fleet at equal-or-better SLO attainment.
+
+use vidur_energy::autoscale::GridEnv;
+use vidur_energy::config::simconfig::{
+    Arrival, AutoscaleConfig, CosimConfig, CostModelKind, LengthDist, ScalingPolicyKind,
+    SimConfig,
+};
+use vidur_energy::cosim::Environment;
+use vidur_energy::energy::EnergyAccountant;
+use vidur_energy::pipeline::{bin_stages_fleet, BinningBackend, LoadProfile};
+use vidur_energy::sim;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+fn bursty_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 800;
+    cfg.arrival = Arrival::Gamma { qps: 25.0, cv: 3.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 768,
+    };
+    cfg.batch_cap = 16; // force queues so the fleet really moves
+    cfg.seed = 0xC0;
+    cfg
+}
+
+fn dynamic_scale() -> AutoscaleConfig {
+    let mut s = AutoscaleConfig::default();
+    s.min_replicas = 1;
+    s.max_replicas = 4;
+    s.decision_interval_s = 10.0;
+    s.cold_start_s = 5.0;
+    s.queue_high = 4.0;
+    s
+}
+
+#[test]
+fn energy_conservation_under_dynamic_fleet() {
+    let cfg = bursty_cfg();
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let mut s = dynamic_scale();
+    s.policy = ScalingPolicyKind::Reactive;
+    // Alternating grid so the fleet both grows and sheds.
+    let grid = GridEnv::from_fns(
+        100.0,
+        200.0,
+        600.0,
+        0.0,
+        |t| if (t / 30.0) as u64 % 2 == 0 { 250.0 } else { 80.0 },
+        |_| 0.0,
+    );
+    let out = sim::run_autoscaled(&cfg, &s, &grid, trace).unwrap();
+    assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+    assert!(
+        out.timeline.max_fleet() > 1,
+        "scenario must actually scale: {:?}",
+        out.decisions
+    );
+
+    // 1. Fleet-aware accounting == fleet-aware Eq. 5 binning (the
+    //    per-stage + live-idle energy identity), within the binning
+    //    boundary tolerance.
+    let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+    let energy = acc.account_fleet(&cfg, &out.sim.stagelog, &out.timeline);
+    let binned = bin_stages_fleet(
+        &cfg,
+        &out.sim.stagelog,
+        &out.timeline,
+        10.0,
+        BinningBackend::Native,
+    )
+    .unwrap();
+    let profile = LoadProfile::from_binned(&binned);
+    let rel = (profile.total_energy_kwh() - energy.gpu_energy_kwh).abs()
+        / energy.gpu_energy_kwh;
+    assert!(
+        rel < 0.02,
+        "binned {} kWh vs accounted {} kWh (rel {rel})",
+        profile.total_energy_kwh(),
+        energy.gpu_energy_kwh
+    );
+
+    // 2. The cosim side consumes exactly that demand signal: total
+    //    microgrid load energy == profile energy.
+    let n = profile.len();
+    let mut env = Environment::new(CosimConfig {
+        interval_s: 10.0,
+        ..CosimConfig::default()
+    });
+    let res = env
+        .run_native(&profile.power_w, &vec![0.0; n], &vec![418.2; n])
+        .unwrap();
+    let rel2 = (res.total_energy_kwh - profile.total_energy_kwh()).abs()
+        / profile.total_energy_kwh();
+    assert!(
+        rel2 < 1e-9,
+        "cosim demand {} kWh vs profile {} kWh",
+        res.total_energy_kwh,
+        profile.total_energy_kwh()
+    );
+
+    // 3. Sanity: a static fleet of max size must cost at least as much
+    //    GPU-time as the dynamic one.
+    assert!(
+        energy.gpu_hours
+            <= s.max_replicas as f64 * out.timeline.horizon_s / 3600.0 + 1e-9
+    );
+}
+
+#[test]
+fn consolidation_saves_idle_energy_vs_static_fleet() {
+    // Light steady load on a 3-replica fleet: the reactive policy
+    // consolidates to one replica and the saved idle power must show
+    // up in the fleet-aware accounting.
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.replicas = 3;
+    cfg.num_requests = 600;
+    cfg.arrival = Arrival::Poisson { qps: 2.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 128,
+        max: 512,
+    };
+    cfg.seed = 0x1D1E;
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+
+    let mut s = dynamic_scale();
+    s.policy = ScalingPolicyKind::Reactive;
+    let grid = GridEnv::constant(150.0, 0.0);
+    let out = sim::run_autoscaled(&cfg, &s, &grid, trace.clone()).unwrap();
+    assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+    assert!(
+        out.timeline.mean_fleet() < 2.0,
+        "light load should consolidate, mean fleet {}",
+        out.timeline.mean_fleet()
+    );
+    let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+    let dynamic_kwh = acc
+        .account_fleet(&cfg, &out.sim.stagelog, &out.timeline)
+        .energy_kwh;
+
+    let st = sim::run_with_trace(&cfg, trace).unwrap();
+    let static_kwh = acc
+        .account(&cfg, &st.stagelog, st.metrics.makespan_s)
+        .energy_kwh;
+    assert!(
+        dynamic_kwh < 0.8 * static_kwh,
+        "dynamic {dynamic_kwh} kWh !<< static-3 {static_kwh} kWh"
+    );
+}
+
+#[test]
+fn carbon_aware_cuts_emissions_at_equal_or_better_slo() {
+    // The experiment's acceptance property on a controlled scenario:
+    // modest steady load, 3-replica static baseline, dirty-then-clean
+    // grid. Carbon-aware must emit less at equal-or-better attainment.
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.replicas = 3;
+    cfg.num_requests = 1_200;
+    cfg.arrival = Arrival::Poisson { qps: 2.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 128,
+        max: 512,
+    };
+    cfg.seed = 0x51;
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let span = trace.arrival_span_s();
+    let switch = span * 0.6;
+    let ci_at = move |t: f64| if t < switch { 480.0 } else { 70.0 };
+
+    let run_policy = |policy: ScalingPolicyKind| {
+        let mut s = AutoscaleConfig::default();
+        s.policy = policy;
+        s.decision_interval_s = 60.0;
+        s.cold_start_s = 30.0;
+        let grid = GridEnv::from_fns(100.0, 200.0, 600.0, 0.0, ci_at, |_| 0.0);
+        let out = sim::run_autoscaled(&cfg, &s, &grid, trace.clone()).unwrap();
+        assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+        let binned = bin_stages_fleet(
+            &cfg,
+            &out.sim.stagelog,
+            &out.timeline,
+            60.0,
+            BinningBackend::Native,
+        )
+        .unwrap();
+        let profile = LoadProfile::from_binned(&binned);
+        let n = profile.len();
+        let ci: Vec<f64> = (0..n).map(|i| ci_at(i as f64 * 60.0)).collect();
+        let mut env = Environment::new(CosimConfig::default());
+        let res = env
+            .run_native(&profile.power_w, &vec![0.0; n], &ci)
+            .unwrap();
+        (
+            res.net_footprint_g,
+            out.sim.metrics.slo_attained,
+            out.timeline.mean_fleet(),
+        )
+    };
+
+    let (static_g, static_slo, static_fleet) = run_policy(ScalingPolicyKind::Static);
+    let (carbon_g, carbon_slo, carbon_fleet) =
+        run_policy(ScalingPolicyKind::CarbonAware);
+
+    assert!((static_fleet - 3.0).abs() < 1e-9);
+    assert!(carbon_fleet < static_fleet, "carbon never shed");
+    assert!(
+        carbon_g < 0.95 * static_g,
+        "carbon {carbon_g} g !< static {static_g} g"
+    );
+    assert!(
+        carbon_slo >= static_slo - 0.05,
+        "SLO regressed: {carbon_slo} vs {static_slo}"
+    );
+}
+
+#[test]
+fn drained_work_is_conserved_under_aggressive_scaling() {
+    // Thrash the fleet (tiny interval, dirty/clean flip every 20 s,
+    // carbon policy oscillating between min and the 3-replica
+    // baseline): every request must still finish exactly once.
+    let mut cfg = bursty_cfg();
+    cfg.replicas = 3;
+    cfg.num_requests = 500;
+    cfg.arrival = Arrival::Poisson { qps: 5.0 };
+    let mut gen = WorkloadGenerator::from_config(&cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let mut s = dynamic_scale();
+    s.policy = ScalingPolicyKind::CarbonAware;
+    s.decision_interval_s = 5.0;
+    s.cold_start_s = 1.0;
+    let grid = GridEnv::from_fns(
+        100.0,
+        200.0,
+        600.0,
+        0.0,
+        |t| if (t / 20.0) as u64 % 2 == 0 { 500.0 } else { 50.0 },
+        |_| 0.0,
+    );
+    let out = sim::run_autoscaled(&cfg, &s, &grid, trace).unwrap();
+    assert_eq!(out.sim.requests.len(), 500);
+    assert!(out.sim.requests.iter().all(|r| r.is_finished()));
+    let (ups, downs) = out.timeline.scale_event_counts();
+    assert!(ups > 0 && downs > 0, "scenario must thrash: {ups} ups {downs} downs");
+    // Lifecycle order per span: up <= online <= drain <= down.
+    for sp in &out.timeline.spans {
+        if let Some(on) = sp.online_s {
+            assert!(on >= sp.up_s);
+        }
+        if let (Some(d), Some(down)) = (sp.drain_s, sp.down_s) {
+            assert!(down >= d);
+        }
+    }
+}

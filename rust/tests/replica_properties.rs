@@ -1,0 +1,181 @@
+//! Property tests for [`ReplicaScheduler`] invariants, driven by the
+//! crate's own proptest harness (`util::proptest`):
+//!
+//! 1. admission never over-allocates the paged KV cache;
+//! 2. preemption always evicts the youngest running request(s) —
+//!    survivors of an eviction form a prefix of the admission order;
+//! 3. drained replicas admit nothing, ever.
+
+use vidur_energy::cluster::kvcache::KvCache;
+use vidur_energy::config::simconfig::SchedulerKind;
+use vidur_energy::scheduler::replica::ReplicaScheduler;
+use vidur_energy::util::proptest::{check, gens};
+use vidur_energy::util::rng::Rng;
+use vidur_energy::workload::Request;
+
+fn random_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(
+                i as u64,
+                0.0,
+                rng.int_range(1, 200),
+                rng.int_range(1, 120),
+            )
+        })
+        .collect()
+}
+
+fn random_sched(rng: &mut Rng) -> ReplicaScheduler {
+    let kind = *rng.choose(&[
+        SchedulerKind::Vllm,
+        SchedulerKind::Sarathi,
+        SchedulerKind::Orca,
+    ]);
+    let batch_cap = rng.int_range(1, 16) as usize;
+    // Deliberately tight cache so preemption paths fire.
+    let blocks = rng.int_range(16, 96);
+    ReplicaScheduler::with_kv(0, kind, batch_cap, 64, KvCache::with_blocks(16, blocks))
+}
+
+#[test]
+fn property_admission_never_overallocates_kv() {
+    check(40, gens::u64_in(0, u64::MAX / 2), |&seed| {
+        let mut rng = Rng::new(seed);
+        let mut reqs = random_requests(&mut rng, 30);
+        let mut s = random_sched(&mut rng);
+        let mut next_arrival = 0usize;
+        let mut now = 0.0;
+        for _ in 0..2_000 {
+            // Interleave arrivals with scheduling.
+            if next_arrival < reqs.len() && rng.f64() < 0.3 {
+                s.enqueue(next_arrival as u64);
+                next_arrival += 1;
+            }
+            let Some(plan) = s.next_stage(&mut reqs, now) else {
+                if next_arrival >= reqs.len() {
+                    break;
+                }
+                s.enqueue(next_arrival as u64);
+                next_arrival += 1;
+                continue;
+            };
+            now += 0.01;
+            s.complete_stage(&mut reqs, &plan, now);
+            // The invariant proper: held + free == total, i.e. no
+            // over-allocation and no leaks, after every step.
+            s.kv().check_invariants()?;
+            if s.kv().free_blocks() > s.kv().total_blocks() {
+                return Err("free exceeds total".into());
+            }
+        }
+        if reqs.iter().any(|r| !r.is_finished()) && !s.has_work() && next_arrival >= reqs.len()
+        {
+            return Err("work lost: unfinished requests but scheduler idle".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_preemption_evicts_youngest_first() {
+    check(40, gens::u64_in(0, u64::MAX / 2), |&seed| {
+        let mut rng = Rng::new(seed);
+        // Long decodes against a tiny cache force repeated preemption.
+        let mut reqs: Vec<Request> = (0..12)
+            .map(|i| {
+                Request::new(i as u64, 0.0, rng.int_range(16, 64), rng.int_range(64, 256))
+            })
+            .collect();
+        let mut s = ReplicaScheduler::with_kv(
+            0,
+            SchedulerKind::Vllm,
+            8,
+            64,
+            KvCache::with_blocks(16, rng.int_range(8, 20)),
+        );
+        for i in 0..reqs.len() as u64 {
+            s.enqueue(i);
+        }
+        let mut now = 0.0;
+        for _ in 0..5_000 {
+            let before = s.running_ids();
+            let Some(plan) = s.next_stage(&mut reqs, now) else { break };
+            let after = s.running_ids();
+            // Survivors of `before` must be a *prefix* of `before`:
+            // preemption pops from the tail (the youngest) only.
+            let survivors: Vec<u64> = before
+                .iter()
+                .copied()
+                .filter(|id| after.contains(id))
+                .collect();
+            if survivors.as_slice() != &before[..survivors.len()] {
+                return Err(format!(
+                    "eviction skipped the youngest: before {before:?}, after {after:?}"
+                ));
+            }
+            now += 0.01;
+            s.complete_stage(&mut reqs, &plan, now);
+            s.kv().check_invariants()?;
+        }
+        if s.preemptions == 0 {
+            return Err("scenario produced no preemption; tighten it".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_drained_replicas_admit_nothing() {
+    check(40, gens::u64_in(0, u64::MAX / 2), |&seed| {
+        let mut rng = Rng::new(seed);
+        let mut reqs = random_requests(&mut rng, 24);
+        let mut s = random_sched(&mut rng);
+        // Warm up with some work, then drain mid-flight.
+        for i in 0..12u64 {
+            s.enqueue(i);
+        }
+        let mut now = 0.0;
+        let warm_steps = rng.int_range(0, 20);
+        for _ in 0..warm_steps {
+            let Some(plan) = s.next_stage(&mut reqs, now) else { break };
+            now += 0.01;
+            s.complete_stage(&mut reqs, &plan, now);
+        }
+        s.begin_drain();
+        if !s.is_draining() {
+            return Err("begin_drain did not latch".into());
+        }
+        let frozen = s.running_ids();
+        for i in 12..24u64 {
+            s.enqueue(i); // queued after drain: must never run here
+        }
+        for _ in 0..5_000 {
+            let Some(plan) = s.next_stage(&mut reqs, now) else { break };
+            // No new admissions: every planned id was running at drain
+            // time (preemption may shrink the running set, never grow it).
+            for &(id, _) in &plan.entries {
+                if !frozen.contains(&id) {
+                    return Err(format!(
+                        "drained replica ran request {id} admitted after drain"
+                    ));
+                }
+            }
+            now += 0.01;
+            s.complete_stage(&mut reqs, &plan, now);
+        }
+        // Running set fully drained; late arrivals still queued (or
+        // preempted back to the queue), ready for re-routing.
+        if s.running_len() != 0 {
+            return Err(format!("drain left {} running", s.running_len()));
+        }
+        let moved = s.drain_queue();
+        for id in 12..24u64 {
+            if !moved.contains(&id) {
+                return Err(format!("late request {id} vanished from the queue"));
+            }
+        }
+        s.kv().check_invariants()?;
+        Ok(())
+    });
+}
