@@ -1,0 +1,116 @@
+//! Bench: the parallel sweep executor on the Exp. 1 grid — serial vs
+//! 4-worker wall clock (acceptance: ≥2× at 4 workers on a 4-core
+//! machine), plus the telemetry memory story (peak resident stage
+//! records, materialized vs streaming). Emits `BENCH_sweep.json`
+//! (path overridable via `REPRO_BENCH_OUT`) so CI accumulates a perf
+//! trajectory across PRs.
+
+use std::time::Instant;
+use vidur_energy::config::simconfig::{CostModelKind, SimConfig};
+use vidur_energy::experiments::common::{run_cases_on, CaseResult};
+use vidur_energy::experiments::exp1::MODELS;
+use vidur_energy::runtime::ArtifactStore;
+use vidur_energy::sim;
+use vidur_energy::sweep::SweepExecutor;
+use vidur_energy::util::bench::fmt_time;
+use vidur_energy::util::json::Value;
+use vidur_energy::util::rng::case_seed;
+
+/// The Exp. 1 grid at bench scale (falls back to the native oracle
+/// when the compiled artifacts are absent).
+fn grid(fast: bool) -> Vec<SimConfig> {
+    let exps: &[u32] = if fast { &[7, 8] } else { &[8, 9, 10] };
+    let native = ArtifactStore::discover().is_err();
+    let mut cfgs = Vec::new();
+    for &(model, tp, pp) in MODELS {
+        for &e in exps {
+            let mut cfg = SimConfig::default();
+            cfg.model = model.into();
+            cfg.tp = tp;
+            cfg.pp = pp;
+            cfg.num_requests = 1u64 << e;
+            if native {
+                cfg.cost_model = CostModelKind::Native;
+            }
+            cfg.seed = case_seed(0xBE, cfgs.len() as u64);
+            cfgs.push(cfg);
+        }
+    }
+    cfgs
+}
+
+fn total_energy(results: &[CaseResult]) -> f64 {
+    results.iter().map(|r| r.energy_kwh()).sum()
+}
+
+fn main() {
+    let fast = std::env::var("REPRO_BENCH_FAST").is_ok();
+    let cfgs = grid(fast);
+    let n = cfgs.len();
+    eprintln!("sweep bench: {n} cases (exp1 grid, fast={fast})");
+
+    let t0 = Instant::now();
+    let serial = run_cases_on(&SweepExecutor::new(1), cfgs.clone()).unwrap();
+    let serial_s = t0.elapsed().as_secs_f64();
+    eprintln!("  serial  ({n} cases): {}", fmt_time(serial_s));
+
+    const JOBS: usize = 4;
+    let t0 = Instant::now();
+    let parallel = run_cases_on(&SweepExecutor::new(JOBS), cfgs).unwrap();
+    let parallel_s = t0.elapsed().as_secs_f64();
+    eprintln!("  {JOBS} workers ({n} cases): {}", fmt_time(parallel_s));
+
+    // Determinism smoke: the two sweeps are the same experiment.
+    assert_eq!(total_energy(&serial), total_energy(&parallel));
+
+    // Memory story: re-run the largest case materialized and compare
+    // its resident stage-record count against the streaming sink's
+    // resident bins.
+    let biggest = serial
+        .iter()
+        .max_by_key(|r| r.out.metrics.stage_count)
+        .unwrap();
+    let materialized = sim::run(&biggest.out.config).unwrap();
+    let peak_records = materialized.stagelog.len() as u64;
+    let peak_bins = serial
+        .iter()
+        .map(|r| r.peak_resident_bins)
+        .max()
+        .unwrap() as u64;
+
+    let speedup = serial_s / parallel_s.max(1e-9);
+    println!("\n## bench: sweep_executor\n");
+    println!("| case | wall | cases/s | metric |");
+    println!("|---|---|---|---|");
+    println!(
+        "| serial | {} | {:.2} | {} cases |",
+        fmt_time(serial_s),
+        n as f64 / serial_s,
+        n
+    );
+    println!(
+        "| {JOBS} workers | {} | {:.2} | speedup {speedup:.2}x |",
+        fmt_time(parallel_s),
+        n as f64 / parallel_s
+    );
+    println!(
+        "| telemetry | - | - | {peak_records} resident records (materialized) vs {peak_bins} bins (streaming) |"
+    );
+
+    let mut v = Value::obj();
+    v.set("bench", "sweep_executor")
+        .set("fast", fast)
+        .set("grid_cases", n as u64)
+        .set("jobs", JOBS as u64)
+        .set("serial_s", serial_s)
+        .set("parallel_s", parallel_s)
+        .set("speedup", speedup)
+        .set("cases_per_sec_serial", n as f64 / serial_s)
+        .set("cases_per_sec_parallel", n as f64 / parallel_s)
+        .set("peak_stage_records_materialized", peak_records)
+        .set("peak_resident_bins_streaming", peak_bins);
+    let out = std::env::var("REPRO_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    std::fs::write(&out, v.pretty()).unwrap();
+    eprintln!("wrote {out}");
+}

@@ -17,6 +17,7 @@ use crate::energy::EnergyAccountant;
 use crate::experiments;
 use crate::report;
 use crate::sim;
+use crate::sweep;
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::Value;
 use crate::workload::{Trace, WorkloadGenerator};
@@ -30,7 +31,7 @@ subcommands:
   simulate     run one inference simulation
   cosim        run the Vidur→Vessim integration case study
   autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
-  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all (--jobs N sweeps cases in parallel)
   multiregion  carbon-aware multi-region routing exploration
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
@@ -136,15 +137,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     v.set("config", cfg.to_json())
         .set("metrics", out.metrics.to_json())
         .set("energy", energy.to_json());
-    if out.oracle_calls > 0 {
-        let mut o = Value::obj();
-        o.set("calls", out.oracle_calls)
-            .set("hits", out.oracle_hits)
-            .set(
-                "hit_rate",
-                out.oracle_hits as f64 / out.oracle_calls as f64,
-            );
-        v.set("oracle_cache", o);
+    if out.oracle.calls > 0 {
+        v.set("oracle_cache", out.oracle.to_json());
     }
     println!("{}", v.pretty());
     if let Some(path) = args.get("stagelog") {
@@ -169,10 +163,12 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
         println!(
             "repro autoscale — sweep fleet-scaling policies over a day of grid signals\n\n\
              options:\n  --out <dir>   results directory (default: results)\n  \
+             --jobs <n>    sweep worker threads (default: all cores)\n  \
              --fast        compressed evening-window scenario"
         );
         return Ok(());
     }
+    apply_jobs(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
     // The save() call already printed the markdown table; surface the
@@ -201,10 +197,21 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
 
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.first() else {
-        bail!("usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|all> [--out results] [--fast]");
+        bail!(
+            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|all> \
+             [--out results] [--fast] [--jobs N]"
+        );
     };
+    apply_jobs(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     experiments::run_by_id(id, &out_dir, args.has("fast"))
+}
+
+/// Apply the sweep worker count: `--jobs N` (0 or absent = all cores).
+fn apply_jobs(args: &Args) -> Result<()> {
+    let jobs = args.u64_or("jobs", 0)? as usize;
+    sweep::set_default_jobs(jobs);
+    Ok(())
 }
 
 fn cmd_config() -> Result<()> {

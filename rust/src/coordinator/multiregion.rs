@@ -12,9 +12,10 @@
 //! Reports per-region energy and total emissions for both policies.
 
 use crate::config::simconfig::{CosimConfig, SimConfig};
-use crate::experiments::common::run_case;
 use crate::grid::{CarbonIntensityTrace, SolarModel};
-use crate::pipeline::{bin_stages, BinningBackend, LoadProfile};
+use crate::pipeline::LoadProfile;
+use crate::sim;
+use crate::telemetry::StreamingSink;
 use crate::util::cli::Args;
 use crate::util::csv::Table;
 use anyhow::Result;
@@ -153,15 +154,10 @@ pub fn cmd(args: &Args) -> Result<()> {
     if fast {
         cfg.num_requests = cfg.num_requests.min(512);
     }
-    let r = run_case(&cfg)?;
     let cosim = CosimConfig::default();
-    let binned = bin_stages(
-        &cfg,
-        &r.out.stagelog,
-        r.out.metrics.makespan_s,
-        cosim.interval_s,
-        BinningBackend::Native,
-    )?;
+    let mut sink = StreamingSink::new(&cfg, cosim.interval_s)?;
+    let r = sim::run_streaming(&cfg, &mut sink)?;
+    let binned = sink.binned_span(&cfg, r.metrics.makespan_s)?;
     let load = LoadProfile::from_binned(&binned);
     let res = simulate(&load, &default_regions(), cosim.interval_s, cfg.seed)?;
     println!("{}", res.table.to_markdown());

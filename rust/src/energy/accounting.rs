@@ -13,7 +13,7 @@
 use crate::autoscale::FleetTimeline;
 use crate::config::simconfig::SimConfig;
 use crate::power::PowerModel;
-use crate::telemetry::StageLog;
+use crate::telemetry::{StageLog, StageRecord};
 use crate::util::json::Value;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,6 +64,39 @@ impl EnergyReport {
     }
 }
 
+/// Online physical-mode accumulators over stage records: everything
+/// the Eq. 3/4 report needs that is linear in the stages. Both the
+/// materialized paths ([`EnergyAccountant::account`] /
+/// [`EnergyAccountant::account_fleet`]) and the streaming
+/// [`crate::telemetry::StreamingSink`] fold records through
+/// [`StageAggregates::add`] in production order, so the two paths
+/// produce identical floating-point sums.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageAggregates {
+    /// GPU-side stage energy (active GPUs at P(MFU), replica-idle GPUs
+    /// at P_idle), J — before the idle-gap fill.
+    pub joules: f64,
+    /// Active-GPU busy time, GPU-seconds.
+    pub busy_gpu_s: f64,
+    /// GPU-time covered by stage records (active + replica-idle).
+    pub covered_gpu_s: f64,
+    /// Peak active per-GPU power seen, W (0 until the first record;
+    /// the report floors it at P_idle).
+    pub peak_w: f64,
+}
+
+impl StageAggregates {
+    /// Fold one stage record under `model`'s power law.
+    pub fn add(&mut self, r: &StageRecord, model: &PowerModel, p_idle: f64) {
+        let p_active = model.power(r.mfu, true);
+        self.joules +=
+            (p_active * r.active_gpus as f64 + p_idle * r.idle_gpus as f64) * r.dt_s;
+        self.busy_gpu_s += r.dt_s * r.active_gpus as f64;
+        self.covered_gpu_s += r.dt_s * (r.active_gpus + r.idle_gpus) as f64;
+        self.peak_w = self.peak_w.max(p_active);
+    }
+}
+
 /// Computes Eq. 2–4 over a stage log.
 pub struct EnergyAccountant {
     pub mode: AccountingMode,
@@ -92,54 +125,78 @@ impl EnergyAccountant {
         self
     }
 
+    /// Fold a materialized log into the physical-mode aggregates (the
+    /// streaming sink accumulates the same sums online).
+    pub fn aggregate(&self, log: &StageLog) -> StageAggregates {
+        let p_idle = self.power_model.power(0.0, false);
+        let mut agg = StageAggregates::default();
+        for r in &log.records {
+            agg.add(r, &self.power_model, p_idle);
+        }
+        agg
+    }
+
     /// Account a finished run. `makespan_s` bounds the idle-gap term.
     pub fn account(&self, cfg: &SimConfig, log: &StageLog, makespan_s: f64) -> EnergyReport {
+        match self.mode {
+            AccountingMode::Physical => {
+                let agg = self.aggregate(log);
+                self.report(cfg, &agg, makespan_s)
+            }
+            AccountingMode::PaperEq3 => {
+                // E_op = Σ P(MFU_i) · H_i · PUE with H_i = Δt·G/3600;
+                // idle gaps are not charged (fidelity-comparison mode,
+                // materialized path only).
+                let g_total = cfg.total_gpus() as f64;
+                let mut agg = StageAggregates::default();
+                for r in &log.records {
+                    let p = self.power_model.power(r.mfu, true);
+                    agg.joules += p * g_total * r.dt_s;
+                    agg.busy_gpu_s += r.dt_s * r.active_gpus as f64;
+                    agg.peak_w = agg.peak_w.max(p);
+                }
+                self.finish(cfg, &agg, makespan_s)
+            }
+        }
+    }
+
+    /// Physical fixed-fleet report from pre-folded aggregates: charge
+    /// the idle gaps (every GPU-second of `R·TP·PP × makespan` not
+    /// covered by a stage record draws idle power) and finish Eq. 3/4.
+    ///
+    /// Physical mode only: `PaperEq3` charges all GPUs at stage power
+    /// and skips idle gaps, which the streaming aggregates don't
+    /// carry — use [`Self::account`] on a materialized log for it.
+    pub fn report(
+        &self,
+        cfg: &SimConfig,
+        agg: &StageAggregates,
+        makespan_s: f64,
+    ) -> EnergyReport {
+        assert!(
+            self.mode == AccountingMode::Physical,
+            "streaming aggregates carry physical-mode sums; PaperEq3 needs the \
+             materialized log (EnergyAccountant::account)"
+        );
+        let g_total = cfg.total_gpus() as f64;
+        let p_idle = self.power_model.power(0.0, false);
+        let total_gpu_s = g_total * makespan_s;
+        let idle_gpu_s = (total_gpu_s - agg.covered_gpu_s).max(0.0);
+        let mut agg = *agg;
+        agg.joules += idle_gpu_s * p_idle;
+        self.finish(cfg, &agg, makespan_s)
+    }
+
+    /// Shared Eq. 3/4 tail over final (joules, busy, peak) totals.
+    fn finish(&self, cfg: &SimConfig, agg: &StageAggregates, makespan_s: f64) -> EnergyReport {
         let g_total = cfg.total_gpus() as f64;
         let gpu = cfg.gpu_spec().expect("validated config");
         let p_idle = self.power_model.power(0.0, false);
-
-        let mut joules = 0.0; // GPU-side, before PUE
-        let mut busy_gpu_s = 0.0;
-        let mut peak = p_idle;
-
-        match self.mode {
-            AccountingMode::Physical => {
-                for r in &log.records {
-                    let p_active = self.power_model.power(r.mfu, true);
-                    let stage_j = (p_active * r.active_gpus as f64
-                        + p_idle * r.idle_gpus as f64)
-                        * r.dt_s;
-                    joules += stage_j;
-                    busy_gpu_s += r.dt_s * r.active_gpus as f64;
-                    peak = peak.max(p_active);
-                }
-                // Idle gaps: every GPU not covered by a stage record
-                // draws idle power for the remaining makespan.
-                let covered_gpu_s: f64 = log
-                    .records
-                    .iter()
-                    .map(|r| r.dt_s * (r.active_gpus + r.idle_gpus) as f64)
-                    .sum();
-                let total_gpu_s = g_total * makespan_s;
-                let idle_gpu_s = (total_gpu_s - covered_gpu_s).max(0.0);
-                joules += idle_gpu_s * p_idle;
-            }
-            AccountingMode::PaperEq3 => {
-                // E_op = Σ P(MFU_i) · H_i · PUE with H_i = Δt·G/3600.
-                for r in &log.records {
-                    let p = self.power_model.power(r.mfu, true);
-                    joules += p * g_total * r.dt_s;
-                    busy_gpu_s += r.dt_s * r.active_gpus as f64;
-                    peak = peak.max(p);
-                }
-            }
-        }
-
-        let gpu_energy_kwh = joules / 3.6e6;
+        let gpu_energy_kwh = agg.joules / 3.6e6;
         let energy_kwh = gpu_energy_kwh * cfg.pue;
         let gpu_hours = g_total * makespan_s / 3600.0;
         let avg_power_w = if makespan_s > 0.0 {
-            joules / makespan_s / g_total
+            agg.joules / makespan_s / g_total
         } else {
             0.0
         };
@@ -148,12 +205,12 @@ impl EnergyAccountant {
             energy_kwh,
             gpu_energy_kwh,
             avg_power_w,
-            peak_power_w: peak,
+            peak_power_w: agg.peak_w.max(p_idle),
             gpu_hours,
             operational_g: energy_kwh * self.grid_ci,
             embodied_g: gpu_hours * gpu.phi_manuf,
             busy_fraction: if makespan_s > 0.0 {
-                (busy_gpu_s / (g_total * makespan_s)).min(1.0)
+                (agg.busy_gpu_s / (g_total * makespan_s)).min(1.0)
             } else {
                 0.0
             },
@@ -174,29 +231,37 @@ impl EnergyAccountant {
         log: &StageLog,
         fleet: &FleetTimeline,
     ) -> EnergyReport {
+        let agg = self.aggregate(log);
+        self.report_fleet(cfg, &agg, fleet)
+    }
+
+    /// Fleet-aware physical report from pre-folded aggregates: idle
+    /// gaps are charged only for live GPU-time (dead replicas draw
+    /// nothing), and GPU-hours / embodied carbon follow the timeline.
+    ///
+    /// Physical mode only — see [`Self::report`].
+    pub fn report_fleet(
+        &self,
+        cfg: &SimConfig,
+        agg: &StageAggregates,
+        fleet: &FleetTimeline,
+    ) -> EnergyReport {
+        assert!(
+            self.mode == AccountingMode::Physical,
+            "streaming aggregates carry physical-mode sums; PaperEq3 needs the \
+             materialized log (EnergyAccountant::account)"
+        );
         let gpu = cfg.gpu_spec().expect("validated config");
         let p_idle = self.power_model.power(0.0, false);
         let gpus_per_replica = cfg.gpus_per_replica() as f64;
         let live_gpu_s = fleet.live_gpu_seconds(cfg.gpus_per_replica());
 
-        let mut joules = 0.0;
-        let mut busy_gpu_s = 0.0;
-        let mut covered_gpu_s = 0.0;
-        let mut peak = p_idle;
-        for r in &log.records {
-            let p_active = self.power_model.power(r.mfu, true);
-            joules +=
-                (p_active * r.active_gpus as f64 + p_idle * r.idle_gpus as f64) * r.dt_s;
-            busy_gpu_s += r.dt_s * r.active_gpus as f64;
-            covered_gpu_s += r.dt_s * (r.active_gpus + r.idle_gpus) as f64;
-            peak = peak.max(p_active);
-        }
         // Idle gaps: live GPU-time not covered by a stage record draws
         // idle power. Dead replicas draw nothing.
-        let idle_gpu_s = (live_gpu_s - covered_gpu_s).max(0.0);
-        joules += idle_gpu_s * p_idle;
+        let idle_gpu_s = (live_gpu_s - agg.covered_gpu_s).max(0.0);
+        let joules = agg.joules + idle_gpu_s * p_idle;
         debug_assert!(
-            covered_gpu_s <= live_gpu_s * (1.0 + 1e-9) + gpus_per_replica,
+            agg.covered_gpu_s <= live_gpu_s * (1.0 + 1e-9) + gpus_per_replica,
             "stages cover more GPU-time than the fleet has"
         );
 
@@ -210,12 +275,12 @@ impl EnergyAccountant {
             } else {
                 0.0
             },
-            peak_power_w: peak,
+            peak_power_w: agg.peak_w.max(p_idle),
             gpu_hours,
             operational_g: gpu_energy_kwh * cfg.pue * self.grid_ci,
             embodied_g: gpu_hours * gpu.phi_manuf,
             busy_fraction: if live_gpu_s > 0.0 {
-                (busy_gpu_s / live_gpu_s).min(1.0)
+                (agg.busy_gpu_s / live_gpu_s).min(1.0)
             } else {
                 0.0
             },

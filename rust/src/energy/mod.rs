@@ -3,4 +3,4 @@
 
 pub mod accounting;
 
-pub use accounting::{EnergyAccountant, EnergyReport, AccountingMode};
+pub use accounting::{AccountingMode, EnergyAccountant, EnergyReport, StageAggregates};

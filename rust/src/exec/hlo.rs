@@ -9,7 +9,7 @@
 //! up before falling back to execution.
 
 use super::batch::{BatchDesc, StageCost, R_MAX};
-use super::StageCostModel;
+use super::{OracleStats, StageCostModel};
 use crate::runtime::pjrt::cached_executable;
 use crate::runtime::Executable;
 use anyhow::Result;
@@ -36,6 +36,8 @@ pub struct HloCost {
     quantize: bool,
     pub calls: u64,
     pub hits: u64,
+    /// Times the memo table overflowed `CACHE_CAP` and was cleared.
+    pub resets: u64,
 }
 
 impl HloCost {
@@ -50,6 +52,7 @@ impl HloCost {
             quantize: true,
             calls: 0,
             hits: 0,
+            resets: 0,
         })
     }
 
@@ -154,6 +157,7 @@ impl StageCostModel for HloCost {
             .expect("stage oracle execution failed");
         if self.cache.len() >= CACHE_CAP {
             self.cache.clear();
+            self.resets += 1;
         }
         self.cache.insert(sig, cost);
         cost
@@ -163,7 +167,11 @@ impl StageCostModel for HloCost {
         "hlo"
     }
 
-    fn stats(&self) -> (u64, u64) {
-        (self.calls, self.hits)
+    fn stats(&self) -> OracleStats {
+        OracleStats {
+            calls: self.calls,
+            hits: self.hits,
+            resets: self.resets,
+        }
     }
 }

@@ -19,11 +19,52 @@ pub mod hlo;
 pub use batch::{BatchDesc, StageCost};
 
 use crate::config::simconfig::SimConfig;
+use crate::util::json::Value;
 use crate::util::rng::Rng;
+
+/// Memo-cache statistics of a cost oracle: every `stage_cost` call,
+/// how many were served from the cache, and how often the cache was
+/// reset after overflowing its capacity. Surfaced in the metrics JSON
+/// and each experiment's `meta.json` so sweep-performance regressions
+/// (a collapsing hit rate, reset thrash) are observable per run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OracleStats {
+    pub calls: u64,
+    pub hits: u64,
+    pub resets: u64,
+}
+
+impl OracleStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.calls as f64
+        }
+    }
+
+    /// Sum component-wise (aggregating a sweep's cases).
+    pub fn merge(&mut self, other: &OracleStats) {
+        self.calls += other.calls;
+        self.hits += other.hits;
+        self.resets += other.resets;
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("calls", self.calls)
+            .set("hits", self.hits)
+            .set("resets", self.resets)
+            .set("hit_rate", self.hit_rate());
+        v
+    }
+}
 
 /// The oracle interface the simulator hot path calls once per batch
 /// stage. Not `Send`: the PJRT client is thread-affine — parallel
-/// sweeps build one model per worker thread instead.
+/// sweeps ([`crate::sweep`]) build one model per worker thread instead
+/// (the compiled executable itself is shared per-thread through the
+/// `runtime::pjrt` thread-local cache, so each worker compiles once).
 pub trait StageCostModel {
     /// Cost of executing `batch` for ONE pipeline-parallel stage
     /// (layers/pp of the model on a TP group).
@@ -32,9 +73,9 @@ pub trait StageCostModel {
     /// Backend name for logs/reports.
     fn name(&self) -> &'static str;
 
-    /// (calls, memo-cache hits) — (0, 0) for backends without a cache.
-    fn stats(&self) -> (u64, u64) {
-        (0, 0)
+    /// Memo-cache statistics — all zero for backends without a cache.
+    fn stats(&self) -> OracleStats {
+        OracleStats::default()
     }
 }
 
@@ -112,7 +153,7 @@ impl StageCostModel for NoisyBox {
     fn name(&self) -> &'static str {
         "noisy"
     }
-    fn stats(&self) -> (u64, u64) {
+    fn stats(&self) -> OracleStats {
         self.inner.stats()
     }
 }

@@ -8,10 +8,13 @@
 //! 2.47 kgCO₂ gross, 69.2% offset by solar, battery ~0.8 full cycles /
 //! 47.2% average SoC / 64.8% idle, average CI 418.2 g/kWh.
 
-use super::common::{run_case, save};
+use super::common::{save, sweep_meta_parts};
 use crate::config::simconfig::{Arrival, CosimConfig, LengthDist, SimConfig};
 use crate::cosim::{CarbonAwareController, Environment};
-use crate::pipeline::{bin_stages, BinningBackend, LoadProfile};
+use crate::energy::EnergyAccountant;
+use crate::pipeline::LoadProfile;
+use crate::sim;
+use crate::telemetry::StreamingSink;
 use crate::util::csv::Table;
 use crate::util::json::Value;
 use anyhow::Result;
@@ -56,20 +59,19 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
 }
 
 pub fn run_full(out_dir: &Path, fast: bool) -> Result<CaseStudyOutput> {
-    // 1. Vidur side: simulate the inference workload.
+    // 1+2. Vidur side + Eq. 5 pipeline in one streaming pass: the
+    // 190k-request stage stream folds directly into the Vessim
+    // 1-minute bins and the energy aggregates as it is produced —
+    // O(bins) resident state instead of one record per stage.
     let cfg = workload_config(fast);
-    let r = run_case(&cfg)?;
-    let makespan = r.out.metrics.makespan_s;
-
-    // 2. Pipeline: Eq. 5 binning into the Vessim 1-minute resolution.
     let cosim_cfg = CosimConfig::default();
-    let binned = bin_stages(
-        &cfg,
-        &r.out.stagelog,
-        makespan,
-        cosim_cfg.interval_s,
-        BinningBackend::Native,
-    )?;
+    let acc = EnergyAccountant::paper_default(&cfg)?;
+    let mut sink =
+        StreamingSink::with_model(&cfg, cosim_cfg.interval_s, acc.power_model)?;
+    let out = sim::run_streaming(&cfg, &mut sink)?;
+    let makespan = out.metrics.makespan_s;
+    let energy = acc.report(&cfg, sink.aggregates(), makespan);
+    let binned = sink.binned_span(&cfg, makespan)?;
     let profile = LoadProfile::from_binned(&binned);
 
     // 3. Environment signals over the workload window, offset so the
@@ -202,8 +204,17 @@ pub fn run_full(out_dir: &Path, fast: bool) -> Result<CaseStudyOutput> {
         .set("figures", "fig6, fig7")
         .set("workload_makespan_s", makespan)
         .set("profile_minutes", n as u64)
-        .set("sim_metrics", r.out.metrics.to_json())
-        .set("energy_report", r.energy.to_json());
+        .set("sim_metrics", out.metrics.to_json())
+        .set("energy_report", energy.to_json())
+        .set(
+            "sweep",
+            sweep_meta_parts(
+                1,
+                out.oracle,
+                out.metrics.stage_count,
+                Some(sink.peak_resident_bins() as u64),
+            ),
+        );
     save(out_dir, "casestudy", &t, meta)?;
 
     // Fig. 6 data: time-resolved power flows.
@@ -256,19 +267,17 @@ mod tests {
         let mut cfg = workload_config(true);
         cfg.num_requests = 300;
         cfg.cost_model = CostModelKind::Native;
-        let r = run_case(&cfg).unwrap();
-        let binned = bin_stages(
-            &cfg,
-            &r.out.stagelog,
-            r.out.metrics.makespan_s,
-            60.0,
-            BinningBackend::Native,
-        )
-        .unwrap();
+        let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+        let mut sink = StreamingSink::with_model(&cfg, 60.0, acc.power_model).unwrap();
+        let out = sim::run_streaming(&cfg, &mut sink).unwrap();
+        let energy = acc.report(&cfg, sink.aggregates(), out.metrics.makespan_s);
+        let binned = sink.binned_span(&cfg, out.metrics.makespan_s).unwrap();
         let profile = LoadProfile::from_binned(&binned);
         assert!(!profile.is_empty());
+        // The sink held bins, not stages.
+        assert!(out.metrics.stage_count > sink.peak_resident_bins() as u64);
         // Binned energy equals accounted energy (before PUE) within 1%.
-        let direct = r.energy.gpu_energy_kwh;
+        let direct = energy.gpu_energy_kwh;
         let binned_kwh = profile.total_energy_kwh();
         assert!(
             (binned_kwh - direct).abs() / direct < 0.01,

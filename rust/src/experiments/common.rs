@@ -1,18 +1,33 @@
-//! Shared experiment plumbing: run one simulation case and collect the
-//! (power, energy, MFU, latency) quantities the paper's figures plot.
+//! Shared experiment plumbing: run simulation cases — in parallel
+//! across worker threads, with O(bins) streaming telemetry — and
+//! collect the (power, energy, MFU, latency) quantities the paper's
+//! figures plot.
 
 use crate::config::simconfig::SimConfig;
 use crate::energy::{EnergyAccountant, EnergyReport};
-use crate::sim::{self, SimOutput};
+use crate::exec::OracleStats;
+use crate::sim::{self, SimRun};
+use crate::sweep::SweepExecutor;
+use crate::telemetry::StreamingSink;
 use crate::util::csv::Table;
 use crate::util::json::Value;
 use anyhow::Result;
 use std::path::Path;
 
-/// One simulated configuration's headline numbers.
+/// Bin width of the per-case streaming sink. Experiments only consume
+/// scalar aggregates, so the width only bounds the sink's O(bins)
+/// memory; one minute matches the cosim interchange resolution.
+pub const CASE_BIN_INTERVAL_S: f64 = 60.0;
+
+/// One simulated configuration's headline numbers. Produced through
+/// the streaming telemetry path: no per-stage vector is ever
+/// materialized, so peak stage state is `peak_resident_bins` (O(bins))
+/// rather than `out.metrics.stage_count` (O(stages)).
 pub struct CaseResult {
-    pub out: SimOutput,
+    pub out: SimRun,
     pub energy: EnergyReport,
+    /// The streaming sink's peak resident bin count for this case.
+    pub peak_resident_bins: usize,
 }
 
 impl CaseResult {
@@ -25,14 +40,88 @@ impl CaseResult {
     pub fn mfu(&self) -> f64 {
         self.out.metrics.weighted_mfu
     }
+    pub fn batch_mean(&self) -> f64 {
+        self.out.stage_stats.mean_batch
+    }
+    pub fn batch_std(&self) -> f64 {
+        self.out.stage_stats.batch_std
+    }
 }
 
-/// Run one case with the paper's default accounting.
+/// Run one case with the paper's default accounting, streaming stage
+/// telemetry through an O(bins) sink.
 pub fn run_case(cfg: &SimConfig) -> Result<CaseResult> {
-    let out = sim::run(cfg)?;
     let acc = EnergyAccountant::paper_default(cfg)?;
-    let energy = acc.account(cfg, &out.stagelog, out.metrics.makespan_s);
-    Ok(CaseResult { out, energy })
+    let mut sink = StreamingSink::with_model(cfg, CASE_BIN_INTERVAL_S, acc.power_model)?;
+    let out = sim::run_streaming(cfg, &mut sink)?;
+    let energy = acc.report(cfg, sink.aggregates(), out.metrics.makespan_s);
+    Ok(CaseResult {
+        peak_resident_bins: sink.peak_resident_bins(),
+        out,
+        energy,
+    })
+}
+
+/// Run a case grid across the process-default worker count
+/// (`--jobs N`, else `available_parallelism`), returning results in
+/// case order regardless of completion order. Each worker thread
+/// builds its own cost oracle — the PJRT stack is thread-affine — and
+/// each case's workload seed lives in its `SimConfig`, so the output
+/// is byte-identical for any worker count.
+pub fn run_cases(cfgs: Vec<SimConfig>) -> Result<Vec<CaseResult>> {
+    run_cases_on(&SweepExecutor::with_default_jobs(), cfgs)
+}
+
+/// [`run_cases`] on an explicit executor (tests pin worker counts).
+pub fn run_cases_on(
+    executor: &SweepExecutor,
+    cfgs: Vec<SimConfig>,
+) -> Result<Vec<CaseResult>> {
+    executor.run(cfgs, |_, cfg| run_case(cfg))
+}
+
+/// Sweep-level metadata for an experiment's `meta.json`: aggregate
+/// oracle memo-cache statistics (so sweep perf regressions are
+/// observable run-over-run) and the telemetry footprint.
+pub fn sweep_meta(results: &[CaseResult]) -> Value {
+    let mut oracle = OracleStats::default();
+    let mut peak_bins = 0usize;
+    let mut stages = 0u64;
+    for r in results {
+        oracle.merge(&r.out.oracle);
+        peak_bins = peak_bins.max(r.peak_resident_bins);
+        stages += r.out.metrics.stage_count;
+    }
+    sweep_meta_parts(results.len() as u64, oracle, stages, Some(peak_bins as u64))
+}
+
+/// [`sweep_meta`] from pre-aggregated parts — for experiments that
+/// don't go through [`run_cases`] (the autoscale policy sweep, the
+/// single-case case study, the materialized ablation). Every
+/// experiment's `meta.json` carries this object under `sweep`.
+/// `peak_resident_bins: None` marks a materialized run (the resident
+/// stage state was the full record vector, reported as
+/// `total_stages`).
+pub fn sweep_meta_parts(
+    cases: u64,
+    oracle: OracleStats,
+    total_stages: u64,
+    peak_resident_bins: Option<u64>,
+) -> Value {
+    let mut v = Value::obj();
+    v.set("cases", cases)
+        .set("jobs", crate::sweep::default_jobs() as u64)
+        .set("oracle_cache", oracle.to_json())
+        .set("total_stages", total_stages);
+    match peak_resident_bins {
+        Some(b) => {
+            v.set("peak_resident_bins", b);
+        }
+        None => {
+            v.set("materialized", true);
+        }
+    }
+    v
 }
 
 /// Persist an experiment's table + metadata.

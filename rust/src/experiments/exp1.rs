@@ -4,10 +4,11 @@
 //! 70B+ at TP2/PP2) while total energy grows linearly, reaching
 //! ~16 kWh (CodeLlama-34B) and >80 kWh (70B+) at 2^16 requests.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
@@ -29,10 +30,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     } else {
         vec![8, 9, 10, 11, 12, 13, 14, 15, 16]
     };
-    let mut table = Table::new(&[
-        "model", "tp", "pp", "requests", "avg_power_w", "energy_kwh", "makespan_s",
-        "weighted_mfu",
-    ]);
+    let mut cases = Vec::new();
+    let mut cfgs = Vec::new();
     for &(model, tp, pp) in MODELS {
         for &e in &exps {
             let mut cfg = SimConfig::default();
@@ -40,25 +39,36 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg.tp = tp;
             cfg.pp = pp;
             cfg.num_requests = 1u64 << e;
-            cfg.seed = 0xE1 + e as u64;
-            let r = run_case(&cfg)?;
-            table.push_row(vec![
-                model.to_string(),
-                tp.to_string(),
-                pp.to_string(),
-                cfg.num_requests.to_string(),
-                format!("{:.1}", r.avg_power_w()),
-                format!("{:.3}", r.energy_kwh()),
-                format!("{:.1}", r.out.metrics.makespan_s),
-                format!("{:.4}", r.mfu()),
-            ]);
+            cfg.seed = case_seed(0xE1, cfgs.len() as u64);
+            cases.push((model, tp, pp, cfg.num_requests));
+            cfgs.push(cfg);
         }
     }
+    let results = run_cases(cfgs)?;
+
+    let mut table = Table::new(&[
+        "model", "tp", "pp", "requests", "avg_power_w", "energy_kwh", "makespan_s",
+        "weighted_mfu",
+    ]);
+    for (&(model, tp, pp, n), r) in cases.iter().zip(&results) {
+        table.push_row(vec![
+            model.to_string(),
+            tp.to_string(),
+            pp.to_string(),
+            n.to_string(),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.3}", r.energy_kwh()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+            format!("{:.4}", r.mfu()),
+        ]);
+    }
     let mut meta = Value::obj();
-    meta.set("figure", "fig2").set(
-        "paper_claim",
-        "power stable in request count; energy linear; ~16 kWh @34B/2^16, >80 kWh @70B+",
-    );
+    meta.set("figure", "fig2")
+        .set(
+            "paper_claim",
+            "power stable in request count; energy linear; ~16 kWh @34B/2^16, >80 kWh @70B+",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "exp1", &table, meta)?;
     Ok(table)
 }

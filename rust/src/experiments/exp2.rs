@@ -9,10 +9,11 @@
 //! decode; we sweep the ratio r = prefill/decode from 50:1 to 1:50 and
 //! report both conventions in the CSV (`pd_ratio` = prefill/decode).
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::{LengthDist, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
@@ -20,35 +21,44 @@ pub const RATIOS: &[f64] = &[50.0, 10.0, 2.0, 1.0, 0.5, 0.1, 0.02];
 pub const LENGTHS: &[u64] = &[128, 512, 1024, 2048, 4096];
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
-    let mut table = Table::new(&[
-        "pd_ratio", "request_len", "avg_power_w", "energy_kwh", "weighted_mfu",
-        "makespan_s",
-    ]);
     let ratios: &[f64] = if fast { &[50.0, 1.0, 0.02] } else { RATIOS };
     let lengths: &[u64] = if fast { &[128, 2048] } else { LENGTHS };
+    let mut cases = Vec::new();
+    let mut cfgs = Vec::new();
     for &ratio in ratios {
         for &len in lengths {
             let mut cfg = SimConfig::default();
             cfg.lengths = LengthDist::Fixed { total: len };
             cfg.prefill_decode_ratio = Some(ratio);
             cfg.num_requests = if fast { 192 } else { 1024 };
-            cfg.seed = 0xE2;
-            let r = run_case(&cfg)?;
-            table.push_row(vec![
-                format!("{ratio}"),
-                len.to_string(),
-                format!("{:.1}", r.avg_power_w()),
-                format!("{:.4}", r.energy_kwh()),
-                format!("{:.4}", r.mfu()),
-                format!("{:.1}", r.out.metrics.makespan_s),
-            ]);
+            cfg.seed = case_seed(0xE2, cfgs.len() as u64);
+            cases.push((ratio, len));
+            cfgs.push(cfg);
         }
     }
+    let results = run_cases(cfgs)?;
+
+    let mut table = Table::new(&[
+        "pd_ratio", "request_len", "avg_power_w", "energy_kwh", "weighted_mfu",
+        "makespan_s",
+    ]);
+    for (&(ratio, len), r) in cases.iter().zip(&results) {
+        table.push_row(vec![
+            format!("{ratio}"),
+            len.to_string(),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.4}", r.energy_kwh()),
+            format!("{:.4}", r.mfu()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+        ]);
+    }
     let mut meta = Value::obj();
-    meta.set("figure", "fig3").set(
-        "paper_claim",
-        "power/energy rise with request length; decode-heavy mixes cost more on long requests",
-    );
+    meta.set("figure", "fig3")
+        .set(
+            "paper_claim",
+            "power/energy rise with request length; decode-heavy mixes cost more on long requests",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "exp2", &table, meta)?;
     Ok(table)
 }

@@ -3,41 +3,52 @@
 //! variance past 32); average power rises and plateaus above cap 64;
 //! total energy falls with diminishing returns past cap 16.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
 pub const CAPS: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let caps: &[usize] = if fast { &[1, 8, 64, 128] } else { CAPS };
+    let cfgs: Vec<SimConfig> = caps
+        .iter()
+        .enumerate()
+        .map(|(i, &cap)| {
+            let mut cfg = SimConfig::default();
+            cfg.batch_cap = cap;
+            cfg.num_requests = if fast { 192 } else { 1024 };
+            cfg.seed = case_seed(0xE3, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
     let mut table = Table::new(&[
         "batch_cap", "actual_batch_mean", "actual_batch_std", "avg_power_w",
         "energy_kwh", "makespan_s",
     ]);
-    let caps: &[usize] = if fast { &[1, 8, 64, 128] } else { CAPS };
-    for &cap in caps {
-        let mut cfg = SimConfig::default();
-        cfg.batch_cap = cap;
-        cfg.num_requests = if fast { 192 } else { 1024 };
-        cfg.seed = 0xE3;
-        let r = run_case(&cfg)?;
+    for (&cap, r) in caps.iter().zip(&results) {
         table.push_row(vec![
             cap.to_string(),
-            format!("{:.2}", r.out.stagelog.batch_summary.mean()),
-            format!("{:.2}", r.out.stagelog.batch_summary.std()),
+            format!("{:.2}", r.batch_mean()),
+            format!("{:.2}", r.batch_std()),
             format!("{:.1}", r.avg_power_w()),
             format!("{:.4}", r.energy_kwh()),
             format!("{:.1}", r.out.metrics.makespan_s),
         ]);
     }
     let mut meta = Value::obj();
-    meta.set("figure", "fig4").set(
-        "paper_claim",
-        "actual batch sublinear in cap; power plateaus above 64; energy falls, diminishing past 16",
-    );
+    meta.set("figure", "fig4")
+        .set(
+            "paper_claim",
+            "actual batch sublinear in cap; power plateaus above 64; energy falls, diminishing past 16",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "exp3", &table, meta)?;
     Ok(table)
 }
@@ -54,11 +65,7 @@ mod tests {
         cfg.num_requests = 256;
         cfg.seed = 9;
         let r = run_case(&cfg).unwrap();
-        (
-            r.out.stagelog.batch_summary.mean(),
-            r.avg_power_w(),
-            r.energy_kwh(),
-        )
+        (r.batch_mean(), r.avg_power_w(), r.energy_kwh())
     }
 
     #[test]

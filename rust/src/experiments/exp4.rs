@@ -3,31 +3,40 @@
 //! rises with QPS and saturates near 360 W beyond QPS ≈ 5; total
 //! energy falls with QPS and converges toward ~0.5 kWh beyond QPS ≈ 8.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::{Arrival, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
 pub const QPS_GRID: &[f64] = &[0.1, 0.2, 0.5, 1.0, 2.0, 3.2, 5.0, 7.9, 12.6];
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
-    let mut table = Table::new(&[
-        "qps", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
-    ]);
     let n_requests: u64 = if fast { 512 } else { 1 << 14 };
     let grid: &[f64] = if fast {
         &[0.5, 2.0, 5.0, 12.6]
     } else {
         QPS_GRID
     };
-    for &qps in grid {
-        let mut cfg = SimConfig::default();
-        cfg.arrival = Arrival::Poisson { qps };
-        cfg.num_requests = n_requests;
-        cfg.seed = 0xE4;
-        let r = run_case(&cfg)?;
+    let cfgs: Vec<SimConfig> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &qps)| {
+            let mut cfg = SimConfig::default();
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.num_requests = n_requests;
+            cfg.seed = case_seed(0xE4, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
+    let mut table = Table::new(&[
+        "qps", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
+    ]);
+    for (&qps, r) in grid.iter().zip(&results) {
         table.push_row(vec![
             format!("{qps}"),
             format!("{:.1}", r.avg_power_w()),
@@ -37,10 +46,12 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         ]);
     }
     let mut meta = Value::obj();
-    meta.set("figure", "fig5").set(
-        "paper_claim",
-        "power saturates ~360 W past QPS 5; energy converges ~0.5 kWh past QPS 8 (2^14 requests)",
-    );
+    meta.set("figure", "fig5")
+        .set(
+            "paper_claim",
+            "power saturates ~360 W past QPS 5; energy converges ~0.5 kWh past QPS 8 (2^14 requests)",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "exp4", &table, meta)?;
     Ok(table)
 }

@@ -4,10 +4,11 @@
 //! 0.16–0.56 kWh with the most efficient settings TP2/PP1 and TP1/PP2
 //! — runtime reduction matters more than power reduction.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
@@ -24,22 +25,30 @@ pub const GRID: &[(u32, u32)] = &[
 ];
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
-    let mut table = Table::new(&[
-        "tp", "pp", "gpus", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
-    ]);
     let grid: &[(u32, u32)] = if fast {
         &[(1, 1), (2, 1), (1, 2), (2, 2)]
     } else {
         GRID
     };
-    for &(tp, pp) in grid {
-        let mut cfg = SimConfig::default();
-        cfg.model = "codellama-34b".into();
-        cfg.tp = tp;
-        cfg.pp = pp;
-        cfg.num_requests = if fast { 128 } else { 1024 };
-        cfg.seed = 0xE5;
-        let r = run_case(&cfg)?;
+    let cfgs: Vec<SimConfig> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &(tp, pp))| {
+            let mut cfg = SimConfig::default();
+            cfg.model = "codellama-34b".into();
+            cfg.tp = tp;
+            cfg.pp = pp;
+            cfg.num_requests = if fast { 128 } else { 1024 };
+            cfg.seed = case_seed(0xE5, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
+    let mut table = Table::new(&[
+        "tp", "pp", "gpus", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
+    ]);
+    for (&(tp, pp), r) in grid.iter().zip(&results) {
         table.push_row(vec![
             tp.to_string(),
             pp.to_string(),
@@ -51,10 +60,12 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         ]);
     }
     let mut meta = Value::obj();
-    meta.set("experiment", "exp5").set(
-        "paper_claim",
-        "power peaks at TP2/PP1, drops with higher parallelism; best energy at TP2/PP1 & TP1/PP2",
-    );
+    meta.set("experiment", "exp5")
+        .set(
+            "paper_claim",
+            "power peaks at TP2/PP1, drops with higher parallelism; best energy at TP2/PP1 & TP1/PP2",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "exp5", &table, meta)?;
     Ok(table)
 }

@@ -11,17 +11,20 @@
 //! high-CI hours unless the SLO guard vetoes it; solar-following rides
 //! the solar peak; reactive tracks queue depth alone.
 
-use super::common::save;
+use super::common::{save, sweep_meta_parts};
 use crate::autoscale::GridEnv;
+use crate::exec::OracleStats;
 use crate::config::simconfig::{
     Arrival, AutoscaleConfig, CosimConfig, CostModelKind, LengthDist, ScalingPolicyKind,
     SimConfig,
 };
 use crate::cosim::{default_signal_traces, default_signals, Environment};
 use crate::energy::EnergyAccountant;
-use crate::pipeline::{bin_stages_fleet, BinningBackend, LoadProfile};
+use crate::pipeline::LoadProfile;
 use crate::runtime::ArtifactStore;
-use crate::sim::{self, AutoscaleOutput};
+use crate::sim::{self, AutoscaleRun};
+use crate::sweep::SweepExecutor;
+use crate::telemetry::StreamingSink;
 use crate::util::csv::Table;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -119,14 +122,17 @@ pub fn scenario(fast: bool) -> (SimConfig, AutoscaleConfig, CosimConfig, f64, f6
 /// One policy's headline numbers after sim + accounting + cosim.
 pub struct PolicyResult {
     pub policy: &'static str,
-    pub out: AutoscaleOutput,
+    pub out: AutoscaleRun,
     pub energy_kwh: f64,
     pub net_footprint_g: f64,
     pub carbon_offset_frac: f64,
     pub renewable_share: f64,
+    /// The streaming sink's peak resident bin count for this policy.
+    pub peak_resident_bins: usize,
 }
 
-/// Run one policy of the sweep over a fixed trace.
+/// Run one policy of the sweep over a fixed trace, streaming the
+/// day-long stage telemetry through an O(bins) sink.
 pub fn run_policy(
     cfg: &SimConfig,
     scale_template: &AutoscaleConfig,
@@ -144,18 +150,12 @@ pub fn run_policy(
     let (solar_sig, ci_sig) = default_signal_traces(cosim, n_signal);
     let grid = GridEnv::from_signals(cosim, ci_sig, solar_sig);
 
-    let out = sim::run_autoscaled(cfg, &scale, &grid, trace)?;
-
-    // Fleet-aware accounting + Eq. 5 binning.
+    // Fleet-aware accounting + Eq. 5 binning, folded online.
     let acc = EnergyAccountant::paper_default(cfg)?;
-    let energy = acc.account_fleet(cfg, &out.sim.stagelog, &out.timeline);
-    let binned = bin_stages_fleet(
-        cfg,
-        &out.sim.stagelog,
-        &out.timeline,
-        cosim.interval_s,
-        BinningBackend::Native,
-    )?;
+    let mut sink = StreamingSink::with_model(cfg, cosim.interval_s, acc.power_model)?;
+    let out = sim::run_autoscaled_streaming(cfg, &scale, &grid, trace, &mut sink)?;
+    let energy = acc.report_fleet(cfg, sink.aggregates(), &out.timeline);
+    let binned = sink.binned(cfg, &out.timeline)?;
     let profile = LoadProfile::from_binned(&binned);
 
     // Co-simulate the time-varying demand against the same signals.
@@ -169,6 +169,7 @@ pub fn run_policy(
         net_footprint_g: res.net_footprint_g,
         carbon_offset_frac: res.carbon_offset_frac,
         renewable_share: res.renewable_share,
+        peak_resident_bins: sink.peak_resident_bins(),
         out,
     })
 }
@@ -201,8 +202,12 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     ]);
     let mut meta = Value::obj();
     let dir = out_dir.join("autoscale");
-    for &policy in POLICIES {
-        let r = run_policy(&cfg, &scale, &cosim, policy, horizon_s, trace.clone())?;
+    // The four policies are independent runs over the same trace:
+    // fan them out across the sweep workers.
+    let results = SweepExecutor::with_default_jobs().run(POLICIES.to_vec(), |_, &policy| {
+        run_policy(&cfg, &scale, &cosim, policy, horizon_s, trace.clone())
+    })?;
+    for r in &results {
         let m = &r.out.sim.metrics;
         let (ups, downs) = r.out.timeline.scale_event_counts();
         table.push_row(vec![
@@ -235,12 +240,29 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         meta.set(&format!("decisions_{}", r.policy), r.out.decisions.len() as u64);
     }
 
+    let mut oracle = OracleStats::default();
+    let mut total_stages = 0u64;
+    let mut peak_bins = 0usize;
+    for r in &results {
+        oracle.merge(&r.out.sim.oracle);
+        total_stages += r.out.sim.metrics.stage_count;
+        peak_bins = peak_bins.max(r.peak_resident_bins);
+    }
     meta.set("experiment", "autoscale")
         .set(
             "paper_claim",
             "carbon-aware autoscaling cuts net emissions vs the static fleet at \
              equal-or-better SLO attainment (extends the paper's §5 carbon-aware \
              direction to fleet capacity)",
+        )
+        .set(
+            "sweep",
+            sweep_meta_parts(
+                results.len() as u64,
+                oracle,
+                total_stages,
+                Some(peak_bins as u64),
+            ),
         )
         .set("requests", trace.len() as u64)
         .set("horizon_s", horizon_s)
@@ -260,6 +282,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
 mod tests {
     use super::*;
     use crate::autoscale::FleetTimeline;
+    use crate::pipeline::{bin_stages_fleet, BinningBackend};
 
     /// Tiny dirty→clean comparison: the carbon-aware fleet must emit
     /// less than the static fleet at equal-or-better SLO attainment —

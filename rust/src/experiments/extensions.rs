@@ -10,28 +10,38 @@
 //!   idle/peak envelope and compute/bandwidth balance shift energy
 //!   per request.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::{SchedulerKind, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
 pub fn run_sched(out_dir: &Path, fast: bool) -> Result<Table> {
+    let kinds = [
+        ("vllm", SchedulerKind::Vllm),
+        ("sarathi", SchedulerKind::Sarathi),
+        ("orca", SchedulerKind::Orca),
+    ];
+    let cfgs: Vec<SimConfig> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, kind))| {
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = kind;
+            cfg.num_requests = if fast { 256 } else { 2048 };
+            cfg.seed = case_seed(0x5C4ED, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
     let mut table = Table::new(&[
         "scheduler", "avg_power_w", "energy_kwh", "makespan_s", "ttft_p50_s",
         "e2e_p99_s", "mean_batch", "weighted_mfu",
     ]);
-    for (name, kind) in [
-        ("vllm", SchedulerKind::Vllm),
-        ("sarathi", SchedulerKind::Sarathi),
-        ("orca", SchedulerKind::Orca),
-    ] {
-        let mut cfg = SimConfig::default();
-        cfg.scheduler = kind;
-        cfg.num_requests = if fast { 256 } else { 2048 };
-        cfg.seed = 0x5C4ED;
-        let r = run_case(&cfg)?;
+    for (&(name, _), r) in kinds.iter().zip(&results) {
         table.push_row(vec![
             name.to_string(),
             format!("{:.1}", r.avg_power_w()),
@@ -44,39 +54,53 @@ pub fn run_sched(out_dir: &Path, fast: bool) -> Result<Table> {
         ]);
     }
     let mut meta = Value::obj();
-    meta.set("experiment", "sched").set(
-        "description",
-        "scheduler policy ablation: energy/latency across vLLM, Sarathi, Orca",
-    );
+    meta.set("experiment", "sched")
+        .set(
+            "description",
+            "scheduler policy ablation: energy/latency across vLLM, Sarathi, Orca",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "sched", &table, meta)?;
     Ok(table)
 }
 
 pub fn run_gpu(out_dir: &Path, fast: bool) -> Result<Table> {
+    let gpus = ["a100-80g", "h100", "a40"];
+    let n_requests: u64 = if fast { 256 } else { 2048 };
+    let cfgs: Vec<SimConfig> = gpus
+        .iter()
+        .enumerate()
+        .map(|(i, &gpu)| {
+            let mut cfg = SimConfig::default();
+            cfg.gpu = gpu.into();
+            cfg.num_requests = n_requests;
+            cfg.seed = case_seed(0x69B0, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
     let mut table = Table::new(&[
         "gpu", "avg_power_w", "energy_kwh", "wh_per_request", "makespan_s",
         "weighted_mfu",
     ]);
-    for gpu in ["a100-80g", "h100", "a40"] {
-        let mut cfg = SimConfig::default();
-        cfg.gpu = gpu.into();
-        cfg.num_requests = if fast { 256 } else { 2048 };
-        cfg.seed = 0x69B0;
-        let r = run_case(&cfg)?;
+    for (&gpu, r) in gpus.iter().zip(&results) {
         table.push_row(vec![
             gpu.to_string(),
             format!("{:.1}", r.avg_power_w()),
             format!("{:.4}", r.energy_kwh()),
-            format!("{:.4}", r.energy_kwh() * 1000.0 / cfg.num_requests as f64),
+            format!("{:.4}", r.energy_kwh() * 1000.0 / n_requests as f64),
             format!("{:.1}", r.out.metrics.makespan_s),
             format!("{:.4}", r.mfu()),
         ]);
     }
     let mut meta = Value::obj();
-    meta.set("experiment", "gpu").set(
-        "description",
-        "cross-GPU sweep over the paper's three calibrated SKUs (A100/H100/A40)",
-    );
+    meta.set("experiment", "gpu")
+        .set(
+            "description",
+            "cross-GPU sweep over the paper's three calibrated SKUs (A100/H100/A40)",
+        )
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "gpu", &table, meta)?;
     Ok(table)
 }

@@ -2,23 +2,32 @@
 //! Meta-Llama-3-8B. The paper shows MFU rising with QPS and plateauing
 //! near mfu_sat = 0.45 for QPS ≈ 5–7.9.
 
-use super::common::{run_case, save};
+use super::common::{run_cases, save, sweep_meta};
 use crate::config::simconfig::{Arrival, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
+use crate::util::rng::case_seed;
 use anyhow::Result;
 use std::path::Path;
 
 pub const QPS_GRID: &[f64] = &[0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 6.45, 7.9, 10.0, 12.6];
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    let cfgs: Vec<SimConfig> = QPS_GRID
+        .iter()
+        .enumerate()
+        .map(|(i, &qps)| {
+            let mut cfg = SimConfig::default();
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.num_requests = if fast { 192 } else { 1024 };
+            cfg.seed = case_seed(42, i as u64);
+            cfg
+        })
+        .collect();
+    let results = run_cases(cfgs)?;
+
     let mut table = Table::new(&["qps", "weighted_mfu", "avg_power_w", "achieved_qps"]);
-    for &qps in QPS_GRID {
-        let mut cfg = SimConfig::default();
-        cfg.arrival = Arrival::Poisson { qps };
-        cfg.num_requests = if fast { 192 } else { 1024 };
-        cfg.seed = 42;
-        let r = run_case(&cfg)?;
+    for (&qps, r) in QPS_GRID.iter().zip(&results) {
         table.push_row(vec![
             format!("{qps}"),
             format!("{:.4}", r.mfu()),
@@ -29,7 +38,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     let mut meta = Value::obj();
     meta.set("figure", "fig1")
         .set("description", "MFU vs QPS saturation, Meta-Llama-3-8B on A100")
-        .set("paper_claim", "MFU plateaus near 0.45 at QPS 5-7.9");
+        .set("paper_claim", "MFU plateaus near 0.45 at QPS 5-7.9")
+        .set("sweep", sweep_meta(&results));
     save(out_dir, "fig1", &table, meta)?;
     Ok(table)
 }

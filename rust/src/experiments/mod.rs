@@ -2,6 +2,14 @@
 //! (§4). Each experiment returns a [`crate::util::csv::Table`] with the
 //! same rows/series the paper reports and saves CSV + JSON under a
 //! results directory. See DESIGN.md §4 for the experiment index.
+//!
+//! Execution model (DESIGN.md §7): every experiment builds its case
+//! grid up front and hands it to [`common::run_cases`], which fans the
+//! cases across the sweep worker threads (`--jobs N`, default all
+//! cores) and streams each case's stage telemetry through an O(bins)
+//! sink. Case seeds derive from the case index
+//! ([`crate::util::rng::case_seed`]), so any worker count produces
+//! byte-identical CSVs.
 
 pub mod common;
 pub mod fig1;

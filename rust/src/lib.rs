@@ -37,6 +37,7 @@ pub mod power;
 pub mod energy;
 pub mod telemetry;
 pub mod sim;
+pub mod sweep;
 pub mod grid;
 pub mod battery;
 pub mod cosim;

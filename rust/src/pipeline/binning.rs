@@ -14,7 +14,7 @@
 use crate::autoscale::FleetTimeline;
 use crate::config::simconfig::SimConfig;
 use crate::runtime::{artifacts, pjrt::cached_executable};
-use crate::telemetry::StageLog;
+use crate::telemetry::{StageLog, StageRecord};
 use anyhow::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +44,116 @@ impl BinnedProfile {
     pub fn is_empty(&self) -> bool {
         self.power_w.is_empty()
     }
+}
+
+/// Online Eq. 5 accumulator: folds stage records into fixed-width
+/// (energy, covered-time) bins as they are produced, holding O(bins)
+/// state instead of the full stage vector. Both the native backend of
+/// [`bin_stages_fleet`] and the streaming
+/// [`crate::telemetry::StreamingSink`] run on this type, so on
+/// engine-produced logs — where every stage starts strictly before
+/// the horizon — the two paths are the same code and agree
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct BinAccumulator {
+    interval_s: f64,
+    p_idle: f64,
+    energy: Vec<f64>,
+    covered: Vec<f64>,
+}
+
+impl BinAccumulator {
+    pub fn new(interval_s: f64, p_idle: f64) -> Self {
+        BinAccumulator {
+            interval_s,
+            p_idle,
+            energy: Vec::new(),
+            covered: Vec::new(),
+        }
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.interval_s
+    }
+
+    /// Bins touched so far — the sink's peak resident state (the vec
+    /// only ever grows, so `len` == peak).
+    pub fn len(&self) -> usize {
+        self.energy.len()
+    }
+
+    /// Fold one stage sample into the bin containing its start
+    /// timestamp (the paper timestamps each batch stage with Vidur's
+    /// internal clock).
+    pub fn add(&mut self, r: &StageRecord) {
+        let b = (r.start_s / self.interval_s) as usize;
+        if b >= self.energy.len() {
+            self.energy.resize(b + 1, 0.0);
+            self.covered.resize(b + 1, 0.0);
+        }
+        self.energy[b] += r.replica_power_w(self.p_idle) * r.dt_s;
+        self.covered[b] += r.dt_s;
+    }
+
+    /// Finish against a fleet timeline: clamp to the horizon's bin
+    /// count and fill uncovered live GPU-time with idle power.
+    ///
+    /// Records starting past the horizon (possible only in synthetic
+    /// logs; the engine never emits one) fold into the last bin. That
+    /// lands them where the per-record `min(n_bins-1)` clamp would,
+    /// but as a bin-order fold rather than a record-order add — so on
+    /// such logs the last bin can differ from the materialized path
+    /// by float-association ulps. In-horizon records are bit-exact.
+    pub fn finish(&self, cfg: &SimConfig, fleet: &FleetTimeline) -> Result<BinnedProfile> {
+        let n_bins = ((fleet.horizon_s / self.interval_s).ceil() as usize).max(1);
+        let mut energy = self.energy.clone();
+        let mut covered = self.covered.clone();
+        if energy.len() > n_bins {
+            for b in n_bins..energy.len() {
+                energy[n_bins - 1] += energy[b];
+                covered[n_bins - 1] += covered[b];
+            }
+        }
+        energy.resize(n_bins, 0.0);
+        covered.resize(n_bins, 0.0);
+        idle_fill(cfg, fleet, self.interval_s, energy, covered)
+    }
+}
+
+/// Shared Eq. 5 tail: idle-fill live GPU-time not covered by stages
+/// and convert per-bin energy to average power. `energy`/`covered`
+/// must already have exactly the horizon's bin count.
+fn idle_fill(
+    cfg: &SimConfig,
+    fleet: &FleetTimeline,
+    interval_s: f64,
+    energy: Vec<f64>,
+    covered: Vec<f64>,
+) -> Result<BinnedProfile> {
+    let horizon_s = fleet.horizon_s;
+    let gpu = cfg.gpu_spec()?;
+    let p_idle = gpu.p_idle;
+    let gpus_per_replica = cfg.gpus_per_replica() as f64;
+    let n_bins = energy.len();
+
+    // The final bin only exists up to the horizon, not its full width,
+    // and bins where replicas were drained contain proportionally less
+    // idle time.
+    let mut power_w = Vec::with_capacity(n_bins);
+    for b in 0..n_bins {
+        let lo = b as f64 * interval_s;
+        let hi = (lo + interval_s).min(horizon_s);
+        let live_gpu_s = fleet.live_seconds_in(lo, hi) * gpus_per_replica;
+        let covered_gpu_s = covered[b] * gpus_per_replica;
+        let idle_gpu_s = (live_gpu_s - covered_gpu_s).max(0.0);
+        let joules = energy[b] + idle_gpu_s * p_idle;
+        power_w.push(joules / interval_s);
+    }
+    Ok(BinnedProfile {
+        interval_s,
+        power_w,
+        covered_s: covered,
+    })
 }
 
 /// Bin a stage log into `interval_s` windows. Samples are assigned to
@@ -82,46 +192,22 @@ pub fn bin_stages_fleet(
     backend: BinningBackend,
 ) -> Result<BinnedProfile> {
     anyhow::ensure!(interval_s > 0.0, "interval must be positive");
-    let horizon_s = fleet.horizon_s;
-    let n_bins = ((horizon_s / interval_s).ceil() as usize).max(1);
-    let gpu = cfg.gpu_spec()?;
-    let p_idle = gpu.p_idle;
-    let gpus_per_replica = cfg.gpus_per_replica() as f64;
+    let n_bins = ((fleet.horizon_s / interval_s).ceil() as usize).max(1);
+    let p_idle = cfg.gpu_spec()?.p_idle;
 
-    // Per-sample (bin, replica-power, dt, gpu-seconds).
-    let (energy, covered) = match backend {
+    match backend {
         BinningBackend::Native => {
-            let mut energy = vec![0.0f64; n_bins];
-            let mut covered = vec![0.0f64; n_bins];
+            let mut acc = BinAccumulator::new(interval_s, p_idle);
             for r in &log.records {
-                let b = ((r.start_s / interval_s) as usize).min(n_bins - 1);
-                energy[b] += r.replica_power_w(p_idle) * r.dt_s;
-                covered[b] += r.dt_s;
+                acc.add(r);
             }
-            (energy, covered)
+            acc.finish(cfg, fleet)
         }
-        BinningBackend::Hlo => bin_hlo(log, p_idle, interval_s, n_bins)?,
-    };
-
-    // Idle fill: live gpu-seconds not covered by stages draw idle
-    // power. The final bin only exists up to the horizon, not its full
-    // width, and bins where replicas were drained contain
-    // proportionally less idle time.
-    let mut power_w = Vec::with_capacity(n_bins);
-    for b in 0..n_bins {
-        let lo = b as f64 * interval_s;
-        let hi = (lo + interval_s).min(horizon_s);
-        let live_gpu_s = fleet.live_seconds_in(lo, hi) * gpus_per_replica;
-        let covered_gpu_s = covered[b] * gpus_per_replica;
-        let idle_gpu_s = (live_gpu_s - covered_gpu_s).max(0.0);
-        let joules = energy[b] + idle_gpu_s * p_idle;
-        power_w.push(joules / interval_s);
+        BinningBackend::Hlo => {
+            let (energy, covered) = bin_hlo(log, p_idle, interval_s, n_bins)?;
+            idle_fill(cfg, fleet, interval_s, energy, covered)
+        }
     }
-    Ok(BinnedProfile {
-        interval_s,
-        power_w,
-        covered_s: covered,
-    })
 }
 
 /// HLO-kernel accumulation in (N_SAMPLES, N_BINS) windows.

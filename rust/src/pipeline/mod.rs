@@ -5,5 +5,5 @@
 pub mod binning;
 pub mod profile;
 
-pub use binning::{bin_stages, bin_stages_fleet, BinnedProfile, BinningBackend};
+pub use binning::{bin_stages, bin_stages_fleet, BinAccumulator, BinnedProfile, BinningBackend};
 pub use profile::LoadProfile;

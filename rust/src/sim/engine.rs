@@ -13,16 +13,20 @@
 //! computes, the other (pp-1)·tp GPUs of the replica idle at
 //! `p_idle` and are charged as such by the energy accounting.
 //!
-//! Two entry families:
-//! * [`run`] / [`run_with_trace`] / [`run_with_model`] — the original
-//!   fixed-fleet engine;
-//! * [`run_autoscaled`] / [`run_autoscaled_with_model`] — the dynamic
-//!   fleet engine (DESIGN.md §6): replicas are provisioned with a
-//!   cold-start delay (drawing idle power while booting), gracefully
-//!   drained (admission closes, running requests finish, queued ones
-//!   re-route through the [`Router`]), and taken offline, under a
-//!   [`crate::autoscale::ScalingPolicy`] evaluated on a fixed decision
-//!   interval against load telemetry and grid signals.
+//! Two entry families, each generic over the telemetry sink
+//! (DESIGN.md §7 — pass a [`StageLog`] to materialize every record, or
+//! a [`crate::telemetry::StreamingSink`] to fold them online in
+//! O(bins) memory):
+//! * [`run`] / [`run_with_trace`] / [`run_with_model`] /
+//!   [`run_with_sink`] / [`run_streaming`] — the fixed-fleet engine;
+//! * [`run_autoscaled`] / [`run_autoscaled_with_model`] /
+//!   [`run_autoscaled_with_sink`] / [`run_autoscaled_streaming`] — the
+//!   dynamic fleet engine (DESIGN.md §6): replicas are provisioned
+//!   with a cold-start delay (drawing idle power while booting),
+//!   gracefully drained (admission closes, running requests finish,
+//!   queued ones re-route through the [`Router`]), and taken offline,
+//!   under a [`crate::autoscale::ScalingPolicy`] evaluated on a fixed
+//!   decision interval against load telemetry and grid signals.
 
 use crate::autoscale::{
     build_policy, FleetController, FleetTimeline, GridEnv, LoadSignals, ScaleDecision,
@@ -30,11 +34,11 @@ use crate::autoscale::{
 use crate::cluster::topology::ClusterTopology;
 use crate::config::simconfig::{AutoscaleConfig, SimConfig};
 use crate::exec::batch::BatchDesc;
-use crate::exec::{build_cost_model, StageCostModel};
+use crate::exec::{build_cost_model, OracleStats, StageCostModel};
 use crate::scheduler::replica::{ReplicaScheduler, StagePlan};
 use crate::scheduler::router::Router;
 use crate::sim::metrics::SimMetrics;
-use crate::telemetry::{StageLog, StageRecord};
+use crate::telemetry::{StageLog, StageRecord, StageSink, StageStats};
 use crate::util::stats::percentile;
 use crate::workload::{Request, Trace, WorkloadGenerator};
 use anyhow::Result;
@@ -101,20 +105,57 @@ impl<K> Ord for Event<K> {
     }
 }
 
-/// Everything a simulation run produces.
+/// What a simulation run produces regardless of sink: requests,
+/// summary metrics, stage aggregates, and oracle cache statistics.
+/// The caller's sink holds the per-stage telemetry (all records for a
+/// [`StageLog`], O(bins) folds for a streaming sink).
+pub struct SimRun {
+    pub config: SimConfig,
+    pub requests: Vec<Request>,
+    pub metrics: SimMetrics,
+    /// Sink-side stage aggregates (also folded into `metrics`).
+    pub stage_stats: StageStats,
+    /// Cost-oracle memo-cache statistics (zero for cache-less backends).
+    pub oracle: OracleStats,
+}
+
+/// Everything a materialized simulation run produces: [`SimRun`] plus
+/// the full per-stage log.
 pub struct SimOutput {
     pub config: SimConfig,
     pub requests: Vec<Request>,
     pub stagelog: StageLog,
     pub metrics: SimMetrics,
-    /// Cost-oracle call statistics (calls, cache hits) when the HLO
-    /// backend is used.
-    pub oracle_calls: u64,
-    pub oracle_hits: u64,
+    /// Cost-oracle memo-cache statistics (zero for cache-less backends).
+    pub oracle: OracleStats,
 }
 
-/// A dynamic-fleet run: the simulation output plus the replica
-/// lifecycle the energy layers need.
+impl SimOutput {
+    fn from_parts(run: SimRun, stagelog: StageLog) -> Self {
+        SimOutput {
+            config: run.config,
+            requests: run.requests,
+            stagelog,
+            metrics: run.metrics,
+            oracle: run.oracle,
+        }
+    }
+}
+
+/// A dynamic-fleet run against a caller-owned sink: the simulation
+/// run plus the replica lifecycle the energy layers need.
+pub struct AutoscaleRun {
+    pub sim: SimRun,
+    /// Per-replica existence intervals + lifecycle event log.
+    pub timeline: FleetTimeline,
+    /// Every scaling decision the controller took.
+    pub decisions: Vec<ScaleDecision>,
+    /// Name of the policy that drove the run.
+    pub policy: &'static str,
+}
+
+/// A materialized dynamic-fleet run: the simulation output plus the
+/// replica lifecycle the energy layers need.
 pub struct AutoscaleOutput {
     pub sim: SimOutput,
     /// Per-replica existence intervals + lifecycle event log.
@@ -127,8 +168,9 @@ pub struct AutoscaleOutput {
 
 /// Plan and price one iteration on `replica_idx`: asks the replica
 /// scheduler for the next stage plan, prices it through the oracle,
-/// logs `pp` stage records, and returns the iteration completion time
-/// with the plan — or None when the replica has nothing runnable.
+/// emits `pp` stage records into the sink, and returns the iteration
+/// completion time with the plan — or None when the replica has
+/// nothing runnable.
 fn plan_iteration(
     replica_idx: usize,
     now: f64,
@@ -137,7 +179,7 @@ fn plan_iteration(
     replicas: &mut [ReplicaScheduler],
     requests: &mut [Request],
     cost: &mut dyn StageCostModel,
-    stagelog: &mut StageLog,
+    sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
 ) -> Option<(f64, StagePlan)> {
     let plan = replicas[replica_idx].next_stage(requests, now)?;
@@ -149,7 +191,7 @@ fn plan_iteration(
     let c = cost.stage_cost(batch);
     // pp sequential stages, each logged separately.
     for s in 0..cfg.pp {
-        stagelog.push(StageRecord {
+        sink.record(StageRecord {
             replica: replica_idx as u32,
             pp_stage: s,
             start_s: now + s as f64 * c.t_stage_s,
@@ -181,12 +223,35 @@ pub fn run_with_trace(cfg: &SimConfig, trace: Trace) -> Result<SimOutput> {
     run_with_model(cfg, trace, cost)
 }
 
-/// Run with an explicit cost model (tests inject mocks here).
+/// Run with an explicit cost model, materializing the full stage log.
 pub fn run_with_model(
     cfg: &SimConfig,
     trace: Trace,
-    mut cost: Box<dyn StageCostModel>,
+    cost: Box<dyn StageCostModel>,
 ) -> Result<SimOutput> {
+    let mut stagelog = StageLog::new();
+    let run = run_with_sink(cfg, trace, cost, &mut stagelog)?;
+    Ok(SimOutput::from_parts(run, stagelog))
+}
+
+/// Run with a freshly generated workload against a caller-owned sink
+/// (typically a [`crate::telemetry::StreamingSink`] for O(bins) runs).
+pub fn run_streaming(cfg: &SimConfig, sink: &mut dyn StageSink) -> Result<SimRun> {
+    cfg.validate()?;
+    let mut gen = WorkloadGenerator::from_config(cfg);
+    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let cost = build_cost_model(cfg)?;
+    run_with_sink(cfg, trace, cost, sink)
+}
+
+/// The fixed-fleet engine core: explicit trace, cost model, and
+/// telemetry sink (tests inject mocks here).
+pub fn run_with_sink(
+    cfg: &SimConfig,
+    trace: Trace,
+    mut cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+) -> Result<SimRun> {
     let topo = ClusterTopology::from_config(cfg)?;
     let mut requests = trace.requests;
     requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
@@ -213,7 +278,6 @@ pub fn run_with_model(
         seq += 1;
     }
 
-    let mut stagelog = StageLog::new();
     let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
     let mut finished_count = 0u64;
     let total = requests.len() as u64;
@@ -238,7 +302,7 @@ pub fn run_with_model(
                         &mut replicas,
                         &mut requests,
                         cost.as_mut(),
-                        &mut stagelog,
+                        sink,
                         &mut batch,
                     ) {
                         busy[target] = true;
@@ -267,7 +331,7 @@ pub fn run_with_model(
                     &mut replicas,
                     &mut requests,
                     cost.as_mut(),
-                    &mut stagelog,
+                    sink,
                     &mut batch,
                 ) {
                     busy[idx] = true;
@@ -288,15 +352,14 @@ pub fn run_with_model(
     );
 
     let preemptions = replicas.iter().map(|r| r.preemptions).sum();
-    let metrics = SimMetrics::compute(cfg, &requests, &stagelog, last_time, preemptions);
-    let (oracle_calls, oracle_hits) = cost.stats();
-    Ok(SimOutput {
+    let stage_stats = sink.stats();
+    let metrics = SimMetrics::compute(cfg, &requests, &stage_stats, last_time, preemptions);
+    Ok(SimRun {
         config: cfg.clone(),
         requests,
-        stagelog,
         metrics,
-        oracle_calls,
-        oracle_hits,
+        stage_stats,
+        oracle: cost.stats(),
     })
 }
 
@@ -310,7 +373,7 @@ fn try_start(
     replicas: &mut [ReplicaScheduler],
     requests: &mut [Request],
     cost: &mut dyn StageCostModel,
-    stagelog: &mut StageLog,
+    sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
     busy: &mut [bool],
     seq: &mut u64,
@@ -327,7 +390,7 @@ fn try_start(
         replicas,
         requests,
         cost,
-        stagelog,
+        sink,
         batch,
     ) {
         busy[idx] = true;
@@ -390,21 +453,54 @@ pub fn run_autoscaled(
     run_autoscaled_with_model(cfg, scale, grid, trace, cost)
 }
 
-/// Dynamic-fleet engine: like [`run_with_model`] but the replica fleet
-/// grows and shrinks under the configured scaling policy.
+/// Dynamic-fleet run with an explicit cost model, materializing the
+/// full stage log.
+pub fn run_autoscaled_with_model(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+    cost: Box<dyn StageCostModel>,
+) -> Result<AutoscaleOutput> {
+    let mut stagelog = StageLog::new();
+    let run = run_autoscaled_with_sink(cfg, scale, grid, trace, cost, &mut stagelog)?;
+    Ok(AutoscaleOutput {
+        sim: SimOutput::from_parts(run.sim, stagelog),
+        timeline: run.timeline,
+        decisions: run.decisions,
+        policy: run.policy,
+    })
+}
+
+/// Dynamic-fleet run with the configured cost oracle against a
+/// caller-owned sink (O(bins) with a streaming sink).
+pub fn run_autoscaled_streaming(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+    sink: &mut dyn StageSink,
+) -> Result<AutoscaleRun> {
+    let cost = build_cost_model(cfg)?;
+    run_autoscaled_with_sink(cfg, scale, grid, trace, cost, sink)
+}
+
+/// Dynamic-fleet engine core: like [`run_with_sink`] but the replica
+/// fleet grows and shrinks under the configured scaling policy.
 ///
 /// Replica lifecycle: Provision (cold start, idle power, `cold_start_s`
 /// long) → Active → Draining (admission closed, queue re-routed,
 /// running requests finish) → Offline. The initial fleet is
 /// `cfg.replicas` clamped into the autoscaler bounds and is online at
 /// t = 0 with no cold start.
-pub fn run_autoscaled_with_model(
+pub fn run_autoscaled_with_sink(
     cfg: &SimConfig,
     scale: &AutoscaleConfig,
     grid: &GridEnv,
     trace: Trace,
     mut cost: Box<dyn StageCostModel>,
-) -> Result<AutoscaleOutput> {
+    sink: &mut dyn StageSink,
+) -> Result<AutoscaleRun> {
     cfg.validate()?;
     scale.validate()?;
     let topo = ClusterTopology::from_config(cfg)?;
@@ -446,7 +542,6 @@ pub fn run_autoscaled_with_model(
         kind: AsEventKind::ScaleTick,
     });
 
-    let mut stagelog = StageLog::new();
     let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
     let mut finished_count = 0u64;
     let total = requests.len() as u64;
@@ -489,7 +584,7 @@ pub fn run_autoscaled_with_model(
                     &mut replicas,
                     &mut requests,
                     cost.as_mut(),
-                    &mut stagelog,
+                    sink,
                     &mut batch,
                     &mut busy,
                     &mut seq,
@@ -517,7 +612,7 @@ pub fn run_autoscaled_with_model(
                     &mut replicas,
                     &mut requests,
                     cost.as_mut(),
-                    &mut stagelog,
+                    sink,
                     &mut batch,
                     &mut busy,
                     &mut seq,
@@ -538,7 +633,7 @@ pub fn run_autoscaled_with_model(
                                 &mut replicas,
                                 &mut requests,
                                 cost.as_mut(),
-                                &mut stagelog,
+                                sink,
                                 &mut batch,
                                 &mut busy,
                                 &mut seq,
@@ -598,7 +693,7 @@ pub fn run_autoscaled_with_model(
                         &mut replicas,
                         &mut requests,
                         cost.as_mut(),
-                        &mut stagelog,
+                        sink,
                         &mut batch,
                         &mut busy,
                         &mut seq,
@@ -709,7 +804,7 @@ pub fn run_autoscaled_with_model(
                                 &mut replicas,
                                 &mut requests,
                                 cost.as_mut(),
-                                &mut stagelog,
+                                sink,
                                 &mut batch,
                                 &mut busy,
                                 &mut seq,
@@ -748,17 +843,16 @@ pub fn run_autoscaled_with_model(
 
     timeline.close(last_time);
     let preemptions = replicas.iter().map(|r| r.preemptions).sum();
-    let metrics = SimMetrics::compute(cfg, &requests, &stagelog, last_time, preemptions);
-    let (oracle_calls, oracle_hits) = cost.stats();
+    let stage_stats = sink.stats();
+    let metrics = SimMetrics::compute(cfg, &requests, &stage_stats, last_time, preemptions);
     let policy = controller.policy_name();
-    Ok(AutoscaleOutput {
-        sim: SimOutput {
+    Ok(AutoscaleRun {
+        sim: SimRun {
             config: cfg.clone(),
             requests,
-            stagelog,
             metrics,
-            oracle_calls,
-            oracle_hits,
+            stage_stats,
+            oracle: cost.stats(),
         },
         timeline,
         decisions: controller.decisions,

@@ -3,7 +3,7 @@
 //! built from.
 
 use crate::config::simconfig::SimConfig;
-use crate::telemetry::StageLog;
+use crate::telemetry::StageStats;
 use crate::util::json::Value;
 use crate::util::stats::percentile;
 use crate::workload::Request;
@@ -44,7 +44,7 @@ impl SimMetrics {
     pub fn compute(
         cfg: &SimConfig,
         requests: &[Request],
-        log: &StageLog,
+        stages: &StageStats,
         makespan_s: f64,
         preemptions: u64,
     ) -> SimMetrics {
@@ -96,9 +96,9 @@ impl SimMetrics {
             e2e_p50_s: pc(&e2e, 50.0),
             e2e_p99_s: pc(&e2e, 99.0),
             norm_latency_s_per_tok: mean(&norm),
-            weighted_mfu: log.weighted_mfu(),
-            mean_batch_size: log.batch_summary.mean(),
-            stage_count: log.len() as u64,
+            weighted_mfu: stages.weighted_mfu,
+            mean_batch_size: stages.mean_batch,
+            stage_count: stages.stages,
             preemptions,
             queue_delay_p50_s: pc(&qdel, 50.0),
             slo_ttft_attained: ttft_ok / n_req,
@@ -146,8 +146,8 @@ mod tests {
         reqs[1].scheduled_s = Some(1.2);
         reqs[1].first_token_s = Some(2.0);
         reqs[1].finished_s = Some(3.0);
-        let log = StageLog::new();
-        let m = SimMetrics::compute(&SimConfig::default(), &reqs, &log, 3.0, 0);
+        let m =
+            SimMetrics::compute(&SimConfig::default(), &reqs, &StageStats::default(), 3.0, 0);
         assert!((m.achieved_qps - 2.0 / 3.0).abs() < 1e-9);
         assert!((m.ttft_p50_s - 0.75).abs() < 1e-9); // median of 0.5 and 1.0
         assert!((m.e2e_p50_s - 1.5).abs() < 1e-9); // median of 1.0 and 2.0
@@ -171,8 +171,7 @@ mod tests {
         reqs[0].finished_s = Some(1.0);
         reqs[1].first_token_s = Some(2.0);
         reqs[1].finished_s = Some(3.0);
-        let log = StageLog::new();
-        let m = SimMetrics::compute(&cfg, &reqs, &log, 3.0, 0);
+        let m = SimMetrics::compute(&cfg, &reqs, &StageStats::default(), 3.0, 0);
         assert!((m.slo_ttft_attained - 1.0 / 3.0).abs() < 1e-12);
         assert!((m.slo_e2e_attained - 2.0 / 3.0).abs() < 1e-12);
         assert!((m.slo_attained - 1.0 / 3.0).abs() < 1e-12);

@@ -5,7 +5,8 @@ pub mod engine;
 pub mod metrics;
 
 pub use engine::{
-    run, run_autoscaled, run_autoscaled_with_model, run_with_trace, AutoscaleOutput,
-    SimOutput,
+    run, run_autoscaled, run_autoscaled_streaming, run_autoscaled_with_model,
+    run_autoscaled_with_sink, run_streaming, run_with_model, run_with_sink,
+    run_with_trace, AutoscaleOutput, AutoscaleRun, SimOutput, SimRun,
 };
 pub use metrics::SimMetrics;

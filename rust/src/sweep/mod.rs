@@ -1,0 +1,252 @@
+//! Parallel sweep execution (DESIGN.md §7).
+//!
+//! Every paper experiment is a grid of independent simulation cases;
+//! [`SweepExecutor`] runs such a case list across `N` worker threads
+//! with a lock-free work queue over [`std::thread::scope`] — no
+//! external dependencies, no thread pool kept alive between sweeps.
+//!
+//! Design constraints, and how they are met:
+//! * **`!Send` cost oracles.** PJRT clients are thread-affine
+//!   ([`crate::exec::StageCostModel`] is deliberately not `Send`), so
+//!   cases never share an oracle across threads: each case builds its
+//!   model on the worker that claimed it, and the expensive compiled
+//!   artifact is reused per worker through the `runtime::pjrt`
+//!   thread-local executable cache (one compile per worker, not one
+//!   per case). Keeping the memo cache per *case* rather than per
+//!   worker makes the reported oracle statistics deterministic —
+//!   independent of which worker ran which case.
+//! * **Determinism.** Results are returned in case order regardless of
+//!   completion order, each case derives its RNG seed from its index
+//!   ([`crate::util::rng::case_seed`]) rather than shared sequential
+//!   state, and errors surface lowest-case-index first — so `--jobs 1`
+//!   and `--jobs 8` produce byte-identical experiment CSVs (asserted
+//!   in `tests/sweep_determinism.rs`).
+//! * **Panic safety.** A panicking case propagates out of
+//!   [`std::thread::scope`] and fails the sweep, never silently drops
+//!   a case.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide default worker count: 0 = auto (`available_parallelism`).
+/// Set once from the CLI's `--jobs` flag; experiment regenerators pick
+/// it up through [`SweepExecutor::with_default_jobs`] so their public
+/// signatures stay stable.
+static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Configure the process-default worker count (the CLI's `--jobs N`).
+/// 0 restores auto-detection.
+pub fn set_default_jobs(jobs: usize) {
+    DEFAULT_JOBS.store(jobs, Ordering::Relaxed);
+}
+
+/// The effective default worker count: the configured `--jobs`, or the
+/// machine's available parallelism.
+pub fn default_jobs() -> usize {
+    match DEFAULT_JOBS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// A work-queue executor for embarrassingly parallel sweep cases.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepExecutor {
+    jobs: usize,
+}
+
+impl SweepExecutor {
+    /// Executor with an explicit worker count (floored at 1).
+    pub fn new(jobs: usize) -> Self {
+        SweepExecutor {
+            jobs: jobs.max(1),
+        }
+    }
+
+    /// Executor honouring the process default (`--jobs`, else
+    /// `available_parallelism`).
+    pub fn with_default_jobs() -> Self {
+        SweepExecutor::new(default_jobs())
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run `f` over every case, fanning out across the worker threads,
+    /// and return the results **in case order** (independent of
+    /// completion order). `f` receives the case index and the case;
+    /// with one worker (or one case) everything runs inline on the
+    /// calling thread — no spawn, identical to the serial code path.
+    ///
+    /// If any case fails, workers stop claiming new cases (cases
+    /// already in flight finish), and the error of the lowest-index
+    /// failing case is returned — the same error the serial path stops
+    /// at, deterministic regardless of scheduling.
+    pub fn run<T, R, F>(&self, cases: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        T: Sync + Send,
+        R: Send,
+        F: Fn(usize, &T) -> Result<R> + Sync,
+    {
+        let n = cases.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let jobs = self.jobs.min(n);
+        if jobs == 1 {
+            return cases
+                .iter()
+                .enumerate()
+                .map(|(i, case)| f(i, case))
+                .collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let collected: Mutex<Vec<(usize, Result<R>)>> =
+            Mutex::new(Vec::with_capacity(n));
+
+        /// Raises the shared abort flag if its worker unwinds, so a
+        /// panicking case (like an Err one) stops the other workers
+        /// from claiming further cases while the panic propagates out
+        /// of the scope.
+        struct AbortOnPanic<'a>(&'a AtomicBool);
+        impl Drop for AbortOnPanic<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| {
+                    let _abort_guard = AbortOnPanic(&failed);
+                    // Buffer worker-locally; one lock per worker, not
+                    // one per case.
+                    let mut local: Vec<(usize, Result<R>)> = Vec::new();
+                    loop {
+                        // After any failure, stop claiming new cases
+                        // (in-flight cases finish) — matching the
+                        // serial path's stop-at-first-error.
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(i, &cases[i]);
+                        if r.is_err() {
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        local.push((i, r));
+                    }
+                    collected.lock().unwrap().extend(local);
+                });
+            }
+        });
+
+        let mut slots: Vec<Option<Result<R>>> = (0..n).map(|_| None).collect();
+        for (i, r) in collected.into_inner().unwrap() {
+            slots[i] = Some(r);
+        }
+        // Claims are monotone in case index and every claimed case ran,
+        // so unclaimed slots form a suffix strictly above the lowest
+        // failing index — walking in order surfaces that error (the
+        // same one the serial path would stop at) before any gap.
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot {
+                Some(r) => out.push(r?),
+                None => unreachable!("unclaimed sweep case without a prior error"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_case_order_regardless_of_jobs() {
+        let cases: Vec<u64> = (0..64).collect();
+        for jobs in [1, 2, 8] {
+            let out = SweepExecutor::new(jobs)
+                .run(cases.clone(), |i, &c| {
+                    // Uneven work so completion order differs from
+                    // case order.
+                    let spin = (c % 7) * 1000;
+                    let mut acc = 0u64;
+                    for k in 0..spin {
+                        acc = acc.wrapping_add(k);
+                    }
+                    std::hint::black_box(acc);
+                    Ok(i as u64 * 10 + c)
+                })
+                .unwrap();
+            let want: Vec<u64> = (0..64).map(|c| c * 11).collect();
+            assert_eq!(out, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let cases: Vec<u64> = (0..32).collect();
+        let err = SweepExecutor::new(4)
+            .run(cases, |i, _| {
+                if i == 5 || i == 20 {
+                    anyhow::bail!("case {i} failed")
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "case 5 failed");
+    }
+
+    #[test]
+    fn failure_stops_claiming_new_cases() {
+        let ran = AtomicUsize::new(0);
+        let cases: Vec<u64> = (0..1000).collect();
+        let err = SweepExecutor::new(2)
+            .run(cases, |i, _| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 0 {
+                    anyhow::bail!("boom")
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                Ok(i)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "boom");
+        assert!(
+            ran.load(Ordering::Relaxed) < 1000,
+            "workers kept claiming cases after the failure"
+        );
+    }
+
+    #[test]
+    fn empty_and_single_case() {
+        let ex = SweepExecutor::new(8);
+        let out: Vec<u64> = ex.run(Vec::<u64>::new(), |_, &c| Ok(c)).unwrap();
+        assert!(out.is_empty());
+        let out = ex.run(vec![7u64], |i, &c| Ok(c + i as u64)).unwrap();
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn jobs_floor_and_default() {
+        assert_eq!(SweepExecutor::new(0).jobs(), 1);
+        set_default_jobs(3);
+        assert_eq!(SweepExecutor::with_default_jobs().jobs(), 3);
+        set_default_jobs(0);
+        assert!(default_jobs() >= 1);
+    }
+}

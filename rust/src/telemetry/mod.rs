@@ -2,7 +2,14 @@
 //! of Vidur ("log MFU at the batch stage level instead of replica-wide
 //! averages"), which feeds both the energy accounting (Eq. 2–3) and the
 //! Vessim-side pipeline (Eq. 5).
+//!
+//! Two consumers behind one [`StageSink`] trait (DESIGN.md §7): the
+//! materialized [`StageLog`] (full record vector; per-stage CSV export)
+//! and the O(bins) [`StreamingSink`] (online Eq. 5 / Eq. 3 folding for
+//! sweeps and long traces).
 
+pub mod sink;
 pub mod stagelog;
 
+pub use sink::{StageSink, StageStats, StreamingSink};
 pub use stagelog::{StageLog, StageRecord};

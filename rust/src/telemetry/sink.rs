@@ -1,0 +1,268 @@
+//! Streaming stage telemetry (DESIGN.md §7).
+//!
+//! The engine emits one [`StageRecord`] per executed pipeline stage —
+//! millions at production traffic. [`StageSink`] abstracts what happens
+//! to them: the materialized [`StageLog`] keeps the full vector (needed
+//! for per-stage CSV export and the ablation's re-accounting under
+//! alternative power models), while [`StreamingSink`] folds each record
+//! online into Eq. 5 bins, summary aggregates, and energy totals — so
+//! a long run holds O(bins) state instead of O(stages).
+//!
+//! Parity is by construction, not by approximation: the streaming sink
+//! runs the *same* accumulation code the materialized paths run
+//! ([`BinAccumulator`] for Eq. 5, [`StageAggregates`] for Eq. 3/4), fed
+//! in the same record order, so both paths produce bit-identical
+//! profiles and reports (asserted in `tests/stream_parity.rs`).
+
+use crate::autoscale::FleetTimeline;
+use crate::config::simconfig::SimConfig;
+use crate::energy::StageAggregates;
+use crate::pipeline::{BinAccumulator, BinnedProfile};
+use crate::power::PowerModel;
+use crate::telemetry::{StageLog, StageRecord};
+use crate::util::stats::Summary;
+use anyhow::Result;
+
+/// Aggregates the metrics layer consumes, regardless of sink kind.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageStats {
+    /// Stage records produced.
+    pub stages: u64,
+    /// Duration-weighted mean MFU (Fig. 1's y-axis).
+    pub weighted_mfu: f64,
+    /// Mean actual batch size across stages (Fig. 4 panel A).
+    pub mean_batch: f64,
+    pub batch_std: f64,
+    /// Total busy GPU-seconds (active GPUs × stage durations).
+    pub busy_gpu_s: f64,
+    /// Busy span: earliest start to latest end (0,0 when empty).
+    pub span: (f64, f64),
+}
+
+/// Consumer of the engine's per-stage telemetry. Object-safe: the
+/// engine hot path takes `&mut dyn StageSink`.
+pub trait StageSink {
+    /// Accept one executed stage. Records arrive in production order
+    /// (the engine's event order), which sinks may rely on.
+    fn record(&mut self, r: StageRecord);
+
+    /// Aggregates for [`crate::sim::SimMetrics`].
+    fn stats(&self) -> StageStats;
+}
+
+impl StageSink for StageLog {
+    fn record(&mut self, r: StageRecord) {
+        self.push(r);
+    }
+
+    fn stats(&self) -> StageStats {
+        StageStats {
+            stages: self.len() as u64,
+            weighted_mfu: self.weighted_mfu(),
+            mean_batch: self.batch_summary.mean(),
+            batch_std: self.batch_summary.std(),
+            busy_gpu_s: self.busy_gpu_seconds(),
+            span: self.span(),
+        }
+    }
+}
+
+/// O(bins) streaming sink: folds stage records online into Eq. 5 bins
+/// (via the shared [`BinAccumulator`]), physical energy aggregates
+/// (via the shared [`StageAggregates`]), and the summary statistics
+/// the metrics layer needs — never retaining the records themselves.
+pub struct StreamingSink {
+    bins: BinAccumulator,
+    agg: StageAggregates,
+    power_model: PowerModel,
+    /// The accounting-side idle power (`power_model` at MFU 0, idle).
+    p_idle_acct: f64,
+    stages: u64,
+    /// Σ mfu·Δt and Σ Δt for the duration-weighted MFU.
+    mfu_dt: f64,
+    dt_sum: f64,
+    batch_summary: Summary,
+    span_lo: f64,
+    span_hi: f64,
+}
+
+impl StreamingSink {
+    /// Sink binning at `interval_s` under the paper-default power
+    /// model (Eq. 1 with the GPU's calibrated parameters).
+    pub fn new(cfg: &SimConfig, interval_s: f64) -> Result<Self> {
+        let model = PowerModel::paper_default(cfg.gpu_spec()?);
+        Self::with_model(cfg, interval_s, model)
+    }
+
+    /// Sink whose energy aggregates follow an explicit power model —
+    /// pass the same model the downstream [`EnergyAccountant`] uses,
+    /// or the report will silently mix power laws.
+    pub fn with_model(cfg: &SimConfig, interval_s: f64, model: PowerModel) -> Result<Self> {
+        anyhow::ensure!(interval_s > 0.0, "interval must be positive");
+        let gpu = cfg.gpu_spec()?;
+        Ok(StreamingSink {
+            bins: BinAccumulator::new(interval_s, gpu.p_idle),
+            agg: StageAggregates::default(),
+            p_idle_acct: model.power(0.0, false),
+            power_model: model,
+            stages: 0,
+            mfu_dt: 0.0,
+            dt_sum: 0.0,
+            batch_summary: Summary::new(),
+            span_lo: f64::INFINITY,
+            span_hi: f64::NEG_INFINITY,
+        })
+    }
+
+    /// Physical-mode energy aggregates (feed
+    /// [`EnergyAccountant::report`] / [`EnergyAccountant::report_fleet`]).
+    pub fn aggregates(&self) -> &StageAggregates {
+        &self.agg
+    }
+
+    /// Peak resident bin count — the sink's whole per-stage memory
+    /// footprint, O(makespan / interval) rather than O(stages).
+    pub fn peak_resident_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Eq. 5 profile against a dynamic-fleet timeline.
+    pub fn binned(&self, cfg: &SimConfig, fleet: &FleetTimeline) -> Result<BinnedProfile> {
+        self.bins.finish(cfg, fleet)
+    }
+
+    /// Eq. 5 profile for a fixed fleet over `makespan_s`.
+    pub fn binned_span(&self, cfg: &SimConfig, makespan_s: f64) -> Result<BinnedProfile> {
+        self.bins
+            .finish(cfg, &FleetTimeline::static_fleet(cfg.replicas, makespan_s))
+    }
+
+    /// The power model the aggregates were folded under.
+    pub fn power_model(&self) -> &PowerModel {
+        &self.power_model
+    }
+}
+
+impl StageSink for StreamingSink {
+    fn record(&mut self, r: StageRecord) {
+        self.bins.add(&r);
+        self.agg.add(&r, &self.power_model, self.p_idle_acct);
+        self.stages += 1;
+        self.mfu_dt += r.mfu * r.dt_s;
+        self.dt_sum += r.dt_s;
+        self.batch_summary.add(r.batch_size as f64);
+        self.span_lo = self.span_lo.min(r.start_s);
+        self.span_hi = self.span_hi.max(r.end_s());
+    }
+
+    fn stats(&self) -> StageStats {
+        StageStats {
+            stages: self.stages,
+            weighted_mfu: if self.dt_sum == 0.0 {
+                0.0
+            } else {
+                self.mfu_dt / self.dt_sum
+            },
+            mean_batch: self.batch_summary.mean(),
+            batch_std: self.batch_summary.std(),
+            // The same sum StageAggregates::add folds (same order).
+            busy_gpu_s: self.agg.busy_gpu_s,
+            span: if self.stages == 0 {
+                (0.0, 0.0)
+            } else {
+                (self.span_lo, self.span_hi)
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyAccountant;
+    use crate::scheduler::replica::StageKind;
+
+    fn rec(start: f64, dt: f64, mfu: f64, batch: u32) -> StageRecord {
+        StageRecord {
+            replica: 0,
+            pp_stage: 0,
+            start_s: start,
+            dt_s: dt,
+            batch_size: batch,
+            new_tokens: batch,
+            mfu,
+            power_w: 250.0,
+            active_gpus: 1,
+            idle_gpus: 0,
+            flops: 1e12,
+            kind: StageKind::Decode,
+        }
+    }
+
+    /// The two sinks agree on every aggregate for the same record
+    /// stream (the engine-level parity lives in tests/stream_parity.rs).
+    #[test]
+    fn sinks_agree_on_stats() {
+        let cfg = SimConfig::default();
+        let mut log = StageLog::new();
+        let mut stream = StreamingSink::new(&cfg, 10.0).unwrap();
+        for i in 0..100 {
+            let r = rec(i as f64 * 0.7, 0.5, 0.1 + (i % 5) as f64 * 0.05, 1 + i % 8);
+            StageSink::record(&mut log, r);
+            stream.record(r);
+        }
+        let a = StageSink::stats(&log);
+        let b = stream.stats();
+        assert_eq!(a.stages, b.stages);
+        assert_eq!(a.weighted_mfu, b.weighted_mfu);
+        assert_eq!(a.mean_batch, b.mean_batch);
+        assert_eq!(a.batch_std, b.batch_std);
+        assert_eq!(a.busy_gpu_s, b.busy_gpu_s);
+        assert_eq!(a.span, b.span);
+    }
+
+    /// Bins and energy match the materialized pipelines bit-for-bit.
+    #[test]
+    fn streaming_matches_materialized_binning_and_accounting() {
+        let cfg = SimConfig::default();
+        let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+        let mut log = StageLog::new();
+        let mut stream =
+            StreamingSink::with_model(&cfg, 10.0, acc.power_model).unwrap();
+        for i in 0..200 {
+            let r = rec(i as f64 * 0.4, 0.3, (i % 9) as f64 * 0.05, 1 + i % 4);
+            log.push(r);
+            stream.record(r);
+        }
+        let makespan = 90.0;
+        let mat = crate::pipeline::bin_stages(
+            &cfg,
+            &log,
+            makespan,
+            10.0,
+            crate::pipeline::BinningBackend::Native,
+        )
+        .unwrap();
+        let str_prof = stream.binned_span(&cfg, makespan).unwrap();
+        assert_eq!(mat.power_w, str_prof.power_w);
+        assert_eq!(mat.covered_s, str_prof.covered_s);
+
+        let mat_rep = acc.account(&cfg, &log, makespan);
+        let str_rep = acc.report(&cfg, stream.aggregates(), makespan);
+        assert_eq!(mat_rep.energy_kwh, str_rep.energy_kwh);
+        assert_eq!(mat_rep.avg_power_w, str_rep.avg_power_w);
+        assert_eq!(mat_rep.peak_power_w, str_rep.peak_power_w);
+        assert_eq!(mat_rep.busy_fraction, str_rep.busy_fraction);
+    }
+
+    #[test]
+    fn empty_sink_stats_are_zero() {
+        let cfg = SimConfig::default();
+        let s = StreamingSink::new(&cfg, 60.0).unwrap();
+        let st = s.stats();
+        assert_eq!(st.stages, 0);
+        assert_eq!(st.weighted_mfu, 0.0);
+        assert_eq!(st.span, (0.0, 0.0));
+        assert_eq!(s.peak_resident_bins(), 0);
+    }
+}

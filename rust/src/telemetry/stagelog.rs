@@ -1,9 +1,8 @@
 //! Batch-stage records and the stage log container.
 
 use crate::scheduler::replica::StageKind;
-use crate::util::csv::Table;
 use crate::util::stats::Summary;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 
 /// One executed batch stage (one pipeline-parallel stage of one
@@ -68,17 +67,16 @@ impl StageLog {
 
     /// Busy span: earliest start to latest end.
     pub fn span(&self) -> (f64, f64) {
+        if self.records.is_empty() {
+            return (0.0, 0.0);
+        }
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         for r in &self.records {
             lo = lo.min(r.start_s);
             hi = hi.max(r.end_s());
         }
-        if self.records.is_empty() {
-            (0.0, 0.0)
-        } else {
-            (lo, hi)
-        }
+        (lo, hi)
     }
 
     /// Total busy GPU-seconds (active GPUs × stage durations).
@@ -101,40 +99,55 @@ impl StageLog {
     }
 
     /// Export as CSV (one row per stage, the paper's per-stage JSON
-    /// equivalent).
+    /// equivalent). Streams straight through one buffered writer — no
+    /// per-field `String` allocations, no in-memory `Table` — since at
+    /// production traffic this file has millions of rows.
     pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut t = Table::new(&[
-            "replica", "pp_stage", "start_s", "dt_s", "batch_size", "new_tokens",
-            "mfu", "power_w", "active_gpus", "idle_gpus", "flops", "kind",
-        ]);
-        for r in &self.records {
-            t.push_row(vec![
-                r.replica.to_string(),
-                r.pp_stage.to_string(),
-                format!("{:.6}", r.start_s),
-                format!("{:.6}", r.dt_s),
-                r.batch_size.to_string(),
-                r.new_tokens.to_string(),
-                format!("{:.6}", r.mfu),
-                format!("{:.3}", r.power_w),
-                r.active_gpus.to_string(),
-                r.idle_gpus.to_string(),
-                format!("{:.3e}", r.flops),
-                match r.kind {
-                    StageKind::Prefill => "prefill",
-                    StageKind::Decode => "decode",
-                    StageKind::Mixed => "mixed",
-                }
-                .to_string(),
-            ]);
+        use std::io::Write as _;
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
         }
-        t.save(path)
+        let write_all = || -> std::io::Result<()> {
+            let file = std::fs::File::create(path)?;
+            let mut w = std::io::BufWriter::with_capacity(1 << 16, file);
+            writeln!(
+                w,
+                "replica,pp_stage,start_s,dt_s,batch_size,new_tokens,\
+                 mfu,power_w,active_gpus,idle_gpus,flops,kind"
+            )?;
+            for r in &self.records {
+                writeln!(
+                    w,
+                    "{},{},{:.6},{:.6},{},{},{:.6},{:.3},{},{},{:.3e},{}",
+                    r.replica,
+                    r.pp_stage,
+                    r.start_s,
+                    r.dt_s,
+                    r.batch_size,
+                    r.new_tokens,
+                    r.mfu,
+                    r.power_w,
+                    r.active_gpus,
+                    r.idle_gpus,
+                    r.flops,
+                    match r.kind {
+                        StageKind::Prefill => "prefill",
+                        StageKind::Decode => "decode",
+                        StageKind::Mixed => "mixed",
+                    },
+                )?;
+            }
+            w.flush()
+        };
+        write_all().with_context(|| format!("writing {path:?}"))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::csv::Table;
 
     fn rec(start: f64, dt: f64, mfu: f64, active: u32, idle: u32) -> StageRecord {
         StageRecord {

@@ -62,12 +62,29 @@ impl Table {
         out
     }
 
+    /// Stream the table through one buffered writer — large tables
+    /// (per-stage logs, minute-resolution profiles) never build a
+    /// second whole-file `String` on top of their rows.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
+        use std::io::Write as _;
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(&path, self.to_csv())
-            .with_context(|| format!("writing {:?}", path.as_ref()))
+        let write_all = || -> std::io::Result<()> {
+            let file = std::fs::File::create(path)?;
+            let mut w = std::io::BufWriter::with_capacity(1 << 16, file);
+            let mut line = String::new();
+            write_record(&mut line, &self.header);
+            w.write_all(line.as_bytes())?;
+            for row in &self.rows {
+                line.clear();
+                write_record(&mut line, row);
+                w.write_all(line.as_bytes())?;
+            }
+            w.flush()
+        };
+        write_all().with_context(|| format!("writing {path:?}"))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Table> {

@@ -1,0 +1,164 @@
+//! Streaming-sink parity: the O(bins) `StreamingSink` must reproduce
+//! the materialized `StageLog` path *exactly* — same Eq. 5 binned
+//! profile, same weighted MFU / busy GPU-seconds, same accounted
+//! energy — on both fixed-fleet and autoscaled runs. Exactness (not
+//! tolerance) is the contract: both paths run the same accumulation
+//! code in the same record order, so any drift is a real divergence.
+//!
+//! Plus the memory claim behind the refactor: the sink's peak resident
+//! state is O(bins), not O(stages).
+
+use vidur_energy::autoscale::GridEnv;
+use vidur_energy::config::simconfig::{
+    Arrival, AutoscaleConfig, CostModelKind, LengthDist, ScalingPolicyKind, SimConfig,
+};
+use vidur_energy::energy::EnergyAccountant;
+use vidur_energy::exec::build_cost_model;
+use vidur_energy::pipeline::{bin_stages, bin_stages_fleet, BinningBackend};
+use vidur_energy::sim;
+use vidur_energy::telemetry::StreamingSink;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+const INTERVAL_S: f64 = 10.0;
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 500;
+    cfg.arrival = Arrival::Poisson { qps: 12.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 768,
+    };
+    cfg.seed = 0x57E4;
+    cfg
+}
+
+fn trace_for(cfg: &SimConfig) -> Trace {
+    let mut gen = WorkloadGenerator::from_config(cfg);
+    Trace::new(gen.generate(cfg.num_requests))
+}
+
+fn assert_reports_identical(
+    a: &vidur_energy::energy::EnergyReport,
+    b: &vidur_energy::energy::EnergyReport,
+) {
+    assert_eq!(a.energy_kwh, b.energy_kwh);
+    assert_eq!(a.gpu_energy_kwh, b.gpu_energy_kwh);
+    assert_eq!(a.avg_power_w, b.avg_power_w);
+    assert_eq!(a.peak_power_w, b.peak_power_w);
+    assert_eq!(a.gpu_hours, b.gpu_hours);
+    assert_eq!(a.operational_g, b.operational_g);
+    assert_eq!(a.embodied_g, b.embodied_g);
+    assert_eq!(a.busy_fraction, b.busy_fraction);
+}
+
+#[test]
+fn streaming_matches_materialized_on_fixed_fleet() {
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    let trace = trace_for(&cfg);
+
+    let mat = sim::run_with_trace(&cfg, trace.clone()).unwrap();
+
+    let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+    let mut sink = StreamingSink::with_model(&cfg, INTERVAL_S, acc.power_model).unwrap();
+    let cost = build_cost_model(&cfg).unwrap();
+    let run = sim::run_with_sink(&cfg, trace, cost, &mut sink).unwrap();
+
+    // Identical simulation.
+    assert_eq!(mat.metrics.makespan_s, run.metrics.makespan_s);
+    assert_eq!(mat.metrics.stage_count, run.metrics.stage_count);
+    assert!(mat.metrics.stage_count > 0);
+
+    // Identical stage aggregates.
+    assert_eq!(mat.metrics.weighted_mfu, run.metrics.weighted_mfu);
+    assert_eq!(mat.metrics.mean_batch_size, run.metrics.mean_batch_size);
+    assert_eq!(mat.stagelog.busy_gpu_seconds(), run.stage_stats.busy_gpu_s);
+    assert_eq!(mat.stagelog.span(), run.stage_stats.span);
+
+    // Identical Eq. 5 binned profile.
+    let mat_prof = bin_stages(
+        &cfg,
+        &mat.stagelog,
+        mat.metrics.makespan_s,
+        INTERVAL_S,
+        BinningBackend::Native,
+    )
+    .unwrap();
+    let str_prof = sink.binned_span(&cfg, run.metrics.makespan_s).unwrap();
+    assert_eq!(mat_prof.power_w, str_prof.power_w);
+    assert_eq!(mat_prof.covered_s, str_prof.covered_s);
+
+    // Identical accounted energy.
+    let mat_rep = acc.account(&cfg, &mat.stagelog, mat.metrics.makespan_s);
+    let str_rep = acc.report(&cfg, sink.aggregates(), run.metrics.makespan_s);
+    assert_reports_identical(&mat_rep, &str_rep);
+
+    // The memory claim: resident bins ≪ resident stage records.
+    let bins = sink.peak_resident_bins() as u64;
+    assert!(
+        bins <= (run.metrics.makespan_s / INTERVAL_S) as u64 + 1,
+        "sink grew past the horizon: {bins} bins"
+    );
+    assert!(
+        bins * 10 < mat.metrics.stage_count,
+        "O(bins) claim violated: {bins} bins vs {} stages",
+        mat.metrics.stage_count
+    );
+}
+
+#[test]
+fn streaming_matches_materialized_on_autoscaled_run() {
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    cfg.batch_cap = 16; // force queues so the fleet really moves
+    let trace = trace_for(&cfg);
+
+    let mut scale = AutoscaleConfig::default();
+    scale.policy = ScalingPolicyKind::Reactive;
+    scale.min_replicas = 1;
+    scale.max_replicas = 4;
+    scale.decision_interval_s = 10.0;
+    scale.cold_start_s = 5.0;
+    scale.queue_high = 4.0;
+
+    let mat = sim::run_autoscaled(&cfg, &scale, &GridEnv::constant(150.0, 0.0), trace.clone())
+        .unwrap();
+
+    let acc = EnergyAccountant::paper_default(&cfg).unwrap();
+    let mut sink = StreamingSink::with_model(&cfg, INTERVAL_S, acc.power_model).unwrap();
+    let run = sim::run_autoscaled_streaming(
+        &cfg,
+        &scale,
+        &GridEnv::constant(150.0, 0.0),
+        trace,
+        &mut sink,
+    )
+    .unwrap();
+
+    assert_eq!(mat.sim.metrics.makespan_s, run.sim.metrics.makespan_s);
+    assert_eq!(mat.sim.metrics.stage_count, run.sim.metrics.stage_count);
+    assert_eq!(mat.timeline.events.len(), run.timeline.events.len());
+    assert_eq!(mat.timeline.horizon_s, run.timeline.horizon_s);
+    assert_eq!(mat.decisions.len(), run.decisions.len());
+
+    // Fleet-aware accounting parity.
+    let mat_rep = acc.account_fleet(&cfg, &mat.sim.stagelog, &mat.timeline);
+    let str_rep = acc.report_fleet(&cfg, sink.aggregates(), &run.timeline);
+    assert_reports_identical(&mat_rep, &str_rep);
+
+    // Fleet-aware Eq. 5 parity.
+    let mat_prof = bin_stages_fleet(
+        &cfg,
+        &mat.sim.stagelog,
+        &mat.timeline,
+        INTERVAL_S,
+        BinningBackend::Native,
+    )
+    .unwrap();
+    let str_prof = sink.binned(&cfg, &run.timeline).unwrap();
+    assert_eq!(mat_prof.power_w, str_prof.power_w);
+    assert_eq!(mat_prof.covered_s, str_prof.covered_s);
+}

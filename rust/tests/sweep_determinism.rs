@@ -1,0 +1,86 @@
+//! Sweep determinism: `--jobs 1` and `--jobs 8` must produce
+//! byte-identical experiment CSVs. Each case's RNG seed is derived
+//! from its case index (`util::rng::case_seed`) and results are
+//! returned in case order, so the worker count can only change
+//! wall-clock time, never output bytes.
+
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, SimConfig};
+use vidur_energy::experiments;
+use vidur_energy::experiments::common::{run_cases_on, CaseResult};
+use vidur_energy::sweep::{self, SweepExecutor};
+use vidur_energy::util::csv::Table;
+use vidur_energy::util::rng::case_seed;
+
+/// A small exp-shaped grid (QPS × batch cap) on the native oracle, so
+/// the test runs without compiled artifacts.
+fn grid() -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for &qps in &[1.0, 4.0, 10.0] {
+        for &cap in &[4usize, 16, 128] {
+            let mut cfg = SimConfig::default();
+            cfg.cost_model = CostModelKind::Native;
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.batch_cap = cap;
+            cfg.num_requests = 96;
+            cfg.seed = case_seed(0xD7, cfgs.len() as u64);
+            cfgs.push(cfg);
+        }
+    }
+    cfgs
+}
+
+/// Render results the way the experiment regenerators do — fixed
+/// formatting, row per case.
+fn render(results: &[CaseResult]) -> Table {
+    let mut t = Table::new(&["case", "avg_power_w", "energy_kwh", "makespan_s", "mfu"]);
+    for (i, r) in results.iter().enumerate() {
+        t.push_row(vec![
+            i.to_string(),
+            format!("{:.3}", r.avg_power_w()),
+            format!("{:.6}", r.energy_kwh()),
+            format!("{:.6}", r.out.metrics.makespan_s),
+            format!("{:.6}", r.mfu()),
+        ]);
+    }
+    t
+}
+
+#[test]
+fn jobs_1_and_8_produce_byte_identical_results() {
+    let serial = run_cases_on(&SweepExecutor::new(1), grid()).unwrap();
+    let par = run_cases_on(&SweepExecutor::new(8), grid()).unwrap();
+    assert_eq!(render(&serial).to_csv(), render(&par).to_csv());
+    // Oracle/telemetry metadata is deterministic too (per-case models).
+    for (a, b) in serial.iter().zip(&par) {
+        assert_eq!(a.out.oracle, b.out.oracle);
+        assert_eq!(a.peak_resident_bins, b.peak_resident_bins);
+        assert_eq!(a.out.metrics.stage_count, b.out.metrics.stage_count);
+    }
+}
+
+/// Experiment-level check through the real regenerator + CSV writer
+/// (needs the compiled HLO artifacts; skipped without them). Runs both
+/// worker counts sequentially in one test so the process-global
+/// `--jobs` setting never races another test.
+#[test]
+fn fig1_csv_identical_across_jobs() {
+    if vidur_energy::runtime::ArtifactStore::discover().is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let base = std::env::temp_dir().join("vidur_energy_sweep_det");
+    std::fs::remove_dir_all(&base).ok();
+    let d1 = base.join("jobs1");
+    let d8 = base.join("jobs8");
+
+    sweep::set_default_jobs(1);
+    experiments::fig1::run(&d1, true).unwrap();
+    sweep::set_default_jobs(8);
+    experiments::fig1::run(&d8, true).unwrap();
+    sweep::set_default_jobs(0);
+
+    let a = std::fs::read(d1.join("fig1/fig1.csv")).unwrap();
+    let b = std::fs::read(d8.join("fig1/fig1.csv")).unwrap();
+    assert_eq!(a, b, "fig1.csv differs between --jobs 1 and --jobs 8");
+    std::fs::remove_dir_all(&base).ok();
+}
