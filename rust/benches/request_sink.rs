@@ -1,0 +1,97 @@
+//! Bench: streaming request telemetry (DESIGN.md §8) — the lazy
+//! arrival + sketch-sink path vs the materialized request vector, on
+//! one workload: wall clock, and the memory story (peak live requests
+//! + sketch tuples vs one `Request` per submitted request). Emits
+//! `BENCH_reqsink.json` (path overridable via `REPRO_BENCH_OUT`) so CI
+//! accumulates a perf trajectory across PRs.
+
+use std::time::Instant;
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, LengthDist, SimConfig};
+use vidur_energy::exec::build_cost_model;
+use vidur_energy::sim;
+use vidur_energy::telemetry::{StreamingRequestSink, StreamingSink};
+use vidur_energy::util::bench::fmt_time;
+use vidur_energy::util::json::Value;
+use vidur_energy::workload::WorkloadGenerator;
+
+fn cfg(n: u64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.cost_model = CostModelKind::Native;
+    c.num_requests = n;
+    c.arrival = Arrival::Poisson { qps: 6.45 };
+    c.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 512,
+    };
+    c.seed = 0xBE5E;
+    c
+}
+
+fn main() {
+    let fast = std::env::var("REPRO_BENCH_FAST").is_ok();
+    let n: u64 = if fast { 20_000 } else { 200_000 };
+    let c = cfg(n);
+    eprintln!("request sink bench: {n} requests (fast={fast})");
+
+    // Materialized: request vector + stage log resident.
+    let t0 = Instant::now();
+    let mat = sim::run(&c).unwrap();
+    let mat_s = t0.elapsed().as_secs_f64();
+    eprintln!("  materialized: {}", fmt_time(mat_s));
+
+    // Streaming: lazy arrivals, request sketches, stage bins.
+    let t0 = Instant::now();
+    let mut source = WorkloadGenerator::from_config(&c).take(n);
+    let mut stage_sink = StreamingSink::new(&c, 60.0).unwrap();
+    let mut req_sink = StreamingRequestSink::new(&c);
+    let cost = build_cost_model(&c).unwrap();
+    let run = sim::run_with_sinks(&c, &mut source, cost, &mut stage_sink, &mut req_sink)
+        .unwrap();
+    let stream_s = t0.elapsed().as_secs_f64();
+    eprintln!("  streaming:    {}", fmt_time(stream_s));
+
+    // Determinism smoke: the two paths ran the same simulation.
+    assert_eq!(mat.metrics.makespan_s, run.metrics.makespan_s);
+    assert_eq!(mat.metrics.stage_count, run.metrics.stage_count);
+    assert_eq!(run.request_stats.finished, n);
+
+    // The p99 the sketch reports vs the exact p99, as a drift metric.
+    let p99_exact = mat.metrics.e2e_p99_s;
+    let p99_sketch = run.metrics.e2e_p99_s;
+    let drift = (p99_sketch - p99_exact).abs() / p99_exact.max(1e-9);
+
+    let resident_stream = run.peak_live_requests + req_sink.resident_tuples();
+    println!("\n## bench: request_sink\n");
+    println!("| case | wall | resident request state | metric |");
+    println!("|---|---|---|---|");
+    println!(
+        "| materialized | {} | {n} requests | e2e p99 {p99_exact:.3}s |",
+        fmt_time(mat_s)
+    );
+    println!(
+        "| streaming | {} | {} live + {} sketch tuples | e2e p99 {p99_sketch:.3}s ({:+.3}% drift) |",
+        fmt_time(stream_s),
+        run.peak_live_requests,
+        req_sink.resident_tuples(),
+        drift * 100.0
+    );
+
+    let mut v = Value::obj();
+    v.set("bench", "request_sink")
+        .set("fast", fast)
+        .set("requests", n)
+        .set("materialized_s", mat_s)
+        .set("streaming_s", stream_s)
+        .set("peak_live_requests", run.peak_live_requests as u64)
+        .set("sketch_tuples", req_sink.resident_tuples() as u64)
+        .set("resident_stream_total", resident_stream as u64)
+        .set("peak_resident_bins", stage_sink.peak_resident_bins() as u64)
+        .set("e2e_p99_exact_s", p99_exact)
+        .set("e2e_p99_sketch_s", p99_sketch)
+        .set("e2e_p99_rel_drift", drift);
+    let out = std::env::var("REPRO_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_reqsink.json".to_string());
+    std::fs::write(&out, v.pretty()).unwrap();
+    eprintln!("wrote {out}");
+}

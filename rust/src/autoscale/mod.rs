@@ -24,11 +24,13 @@
 
 pub mod controller;
 pub mod policy;
+pub mod window;
 
 pub use controller::{
     FleetController, FleetEvent, FleetEventKind, FleetTimeline, GridEnv, GridSignals,
     LoadSignals, ReplicaSpan, ScaleDecision,
 };
+pub use window::CompletionWindow;
 pub use policy::{
     build_policy, CarbonAwarePolicy, ReactivePolicy, ScalingPolicy, SolarFollowingPolicy,
     StaticPolicy,

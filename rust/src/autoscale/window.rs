@@ -1,0 +1,161 @@
+//! The autoscaler's recent-completion window, as a request-telemetry
+//! sink client (DESIGN.md §8).
+//!
+//! The engine feeds every completed request to this window alongside
+//! the caller's [`RequestSink`]; on each scaling tick the controller
+//! reads windowed completion rate and TTFT/e2e p99s from it. Keeping
+//! it behind the same trait as the metrics sinks means the scaling
+//! telemetry taps the identical completion stream — no second
+//! bookkeeping path inside the engine loop.
+
+use crate::telemetry::{RequestSink, RequestStats};
+use crate::util::stats::percentile;
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+/// Sliding window over recent completions: (finish time, TTFT, e2e).
+/// Memory is O(completions inside the window), bounded by the window
+/// length × completion rate — the engine prunes it every tick.
+#[derive(Debug)]
+pub struct CompletionWindow {
+    window_s: f64,
+    entries: VecDeque<(f64, f64, f64)>,
+}
+
+impl CompletionWindow {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0, "window must be positive");
+        CompletionWindow {
+            window_s,
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// The configured window length, seconds.
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Drop completions older than `now - window`.
+    pub fn prune(&mut self, now: f64) {
+        let cutoff = now - self.window_s;
+        while self.entries.front().map(|e| e.0 < cutoff).unwrap_or(false) {
+            self.entries.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Completions per second over the (elapsed part of the) window.
+    pub fn qps(&self, now: f64) -> f64 {
+        self.entries.len() as f64 / self.window_s.min(now.max(1e-9))
+    }
+
+    /// Windowed TTFT p99 (NaN when nothing completed recently).
+    pub fn ttft_p99(&self) -> f64 {
+        self.p99(|e| e.1)
+    }
+
+    /// Windowed e2e p99 (NaN when nothing completed recently).
+    pub fn e2e_p99(&self) -> f64 {
+        self.p99(|e| e.2)
+    }
+
+    fn p99(&self, f: impl Fn(&(f64, f64, f64)) -> f64) -> f64 {
+        if self.entries.is_empty() {
+            return f64::NAN;
+        }
+        let v: Vec<f64> = self.entries.iter().map(f).collect();
+        percentile(&v, 99.0)
+    }
+}
+
+impl RequestSink for CompletionWindow {
+    fn record(&mut self, r: &Request) {
+        // Completions arrive in finish order; an unfinished request
+        // (never produced by the engines) is ignored.
+        if let Some(fin) = r.finished_s {
+            self.entries.push_back((
+                fin,
+                r.ttft().unwrap_or(0.0),
+                r.e2e_latency().unwrap_or(0.0),
+            ));
+        }
+    }
+
+    /// Windowed view of the standard request aggregates — enough for a
+    /// dashboard tap; the engine's SLO metrics come from the primary
+    /// sink, not from here.
+    fn stats(&self) -> RequestStats {
+        let ttft: Vec<f64> = self.entries.iter().map(|e| e.1).collect();
+        let e2e: Vec<f64> = self.entries.iter().map(|e| e.2).collect();
+        let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+        RequestStats {
+            submitted: self.entries.len() as u64,
+            finished: self.entries.len() as u64,
+            ttft_p50_s: pc(&ttft, 50.0),
+            ttft_p99_s: pc(&ttft, 99.0),
+            e2e_p50_s: pc(&e2e, 50.0),
+            e2e_p99_s: pc(&e2e, 99.0),
+            ..RequestStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(id: u64, fin: f64, ttft: f64, e2e: f64) -> Request {
+        let mut r = Request::new(id, fin - e2e, 10, 5);
+        r.prefill_done = 10;
+        r.decode_done = 5;
+        r.scheduled_s = Some(fin - e2e);
+        r.first_token_s = Some(fin - e2e + ttft);
+        r.finished_s = Some(fin);
+        r
+    }
+
+    #[test]
+    fn window_prunes_and_reports() {
+        let mut w = CompletionWindow::new(100.0);
+        for i in 0..10u64 {
+            w.record(&done(i, i as f64 * 20.0, 0.5, 2.0));
+        }
+        assert_eq!(w.len(), 10);
+        // At t=200 the cutoff is 100: completions at 0, 20, 40, 60, 80
+        // fall out.
+        w.prune(200.0);
+        assert_eq!(w.len(), 5);
+        assert!((w.qps(200.0) - 5.0 / 100.0).abs() < 1e-12);
+        assert!((w.ttft_p99() - 0.5).abs() < 1e-12);
+        assert!((w.e2e_p99() - 2.0).abs() < 1e-12);
+        let st = w.stats();
+        assert_eq!(st.finished, 5);
+        assert_eq!(st.ttft_p50_s, 0.5);
+    }
+
+    #[test]
+    fn empty_window_is_nan_percentiles() {
+        let mut w = CompletionWindow::new(60.0);
+        assert!(w.ttft_p99().is_nan());
+        assert!(w.e2e_p99().is_nan());
+        assert_eq!(w.qps(30.0), 0.0);
+        w.prune(1000.0); // no-op on empty
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn early_window_uses_elapsed_time() {
+        let mut w = CompletionWindow::new(300.0);
+        w.record(&done(0, 10.0, 0.1, 1.0));
+        // Only 20 s elapsed: rate is 1/20, not 1/300.
+        assert!((w.qps(20.0) - 0.05).abs() < 1e-12);
+    }
+}

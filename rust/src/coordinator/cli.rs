@@ -18,6 +18,7 @@ use crate::experiments;
 use crate::report;
 use crate::sim;
 use crate::sweep;
+use crate::telemetry::StreamingSink;
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::Value;
 use crate::workload::{Trace, WorkloadGenerator};
@@ -115,7 +116,7 @@ fn sim_opts() -> Vec<OptSpec> {
         OptSpec { name: "cost-model", help: "stage oracle: hlo|native", default: Some("hlo") },
         OptSpec { name: "rf-noise", help: "lognormal latency noise sigma", default: Some("0") },
         OptSpec { name: "seed", help: "rng seed", default: None },
-        OptSpec { name: "stagelog", help: "write per-stage CSV here", default: None },
+        OptSpec { name: "stagelog", help: "write per-stage CSV here (materializes the run)", default: None },
         OptSpec { name: "config", help: "load SimConfig JSON file", default: None },
     ]
 }
@@ -130,20 +131,44 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         None => SimConfig::default(),
     };
     apply_sim_overrides(&mut cfg, args)?;
-    let out = sim::run(&cfg)?;
-    let acc = EnergyAccountant::paper_default(&cfg)?;
-    let energy = acc.account(&cfg, &out.stagelog, out.metrics.makespan_s);
     let mut v = Value::obj();
-    v.set("config", cfg.to_json())
-        .set("metrics", out.metrics.to_json())
-        .set("energy", energy.to_json());
-    if out.oracle.calls > 0 {
-        v.set("oracle_cache", out.oracle.to_json());
-    }
-    println!("{}", v.pretty());
+    v.set("config", cfg.to_json());
     if let Some(path) = args.get("stagelog") {
+        // Per-stage CSV export needs every record: materialized run.
+        let out = sim::run(&cfg)?;
+        let acc = EnergyAccountant::paper_default(&cfg)?;
+        let energy = acc.account(&cfg, &out.stagelog, out.metrics.makespan_s);
+        v.set("metrics", out.metrics.to_json())
+            .set("energy", energy.to_json());
+        if out.oracle.calls > 0 {
+            v.set("oracle_cache", out.oracle.to_json());
+        }
+        println!("{}", v.pretty());
         out.stagelog.save_csv(path)?;
         eprintln!("stage log -> {path}");
+    } else {
+        // Default: fully streaming run — arrivals are generated
+        // lazily, requests fold into latency sketches, stages into
+        // one-minute bins, so `--requests 2M` holds O(outstanding +
+        // bins) state (the CI smoke asserts exactly that from the
+        // telemetry object below).
+        let acc = EnergyAccountant::paper_default(&cfg)?;
+        let mut sink = StreamingSink::with_model(&cfg, 60.0, acc.power_model)?;
+        let run = sim::run_streaming(&cfg, &mut sink)?;
+        let energy = acc.report(&cfg, sink.aggregates(), run.metrics.makespan_s);
+        let mut telemetry = Value::obj();
+        telemetry
+            .set("submitted", run.request_stats.submitted)
+            .set("finished", run.request_stats.finished)
+            .set("peak_live_requests", run.peak_live_requests as u64)
+            .set("peak_resident_bins", sink.peak_resident_bins() as u64);
+        v.set("metrics", run.metrics.to_json())
+            .set("energy", energy.to_json())
+            .set("telemetry", telemetry);
+        if run.oracle.calls > 0 {
+            v.set("oracle_cache", run.oracle.to_json());
+        }
+        println!("{}", v.pretty());
     }
     Ok(())
 }

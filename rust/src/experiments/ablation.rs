@@ -107,7 +107,13 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         )
         .set(
             "sweep",
-            super::common::sweep_meta_parts(1, out.oracle, out.metrics.stage_count, None),
+            super::common::sweep_meta_parts(
+                1,
+                out.oracle,
+                out.metrics.stage_count,
+                None,
+                None,
+            ),
         );
     save(out_dir, "ablation", &table, meta)?;
     Ok(table)

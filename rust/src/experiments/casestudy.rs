@@ -208,13 +208,18 @@ pub fn run_full(out_dir: &Path, fast: bool) -> Result<CaseStudyOutput> {
         .set("energy_report", energy.to_json())
         .set(
             "sweep",
+            // The 190k requests streamed through the request sink:
+            // peak_live_requests records the engine's actual
+            // per-request footprint.
             sweep_meta_parts(
                 1,
                 out.oracle,
                 out.metrics.stage_count,
                 Some(sink.peak_resident_bins() as u64),
+                Some(out.peak_live_requests as u64),
             ),
-        );
+        )
+        .set("requests_finished", out.request_stats.finished);
     save(out_dir, "casestudy", &t, meta)?;
 
     // Fig. 6 data: time-resolved power flows.

@@ -31,6 +31,12 @@ pub struct CaseResult {
 }
 
 impl CaseResult {
+    /// The engine's peak live-request count for this case
+    /// (O(outstanding); requests stream through the request sink).
+    pub fn peak_live_requests(&self) -> usize {
+        self.out.peak_live_requests
+    }
+
     pub fn avg_power_w(&self) -> f64 {
         self.energy.avg_power_w
     }
@@ -49,7 +55,8 @@ impl CaseResult {
 }
 
 /// Run one case with the paper's default accounting, streaming stage
-/// telemetry through an O(bins) sink.
+/// telemetry through an O(bins) sink and request telemetry through
+/// latency sketches (no per-request vector is ever materialized).
 pub fn run_case(cfg: &SimConfig) -> Result<CaseResult> {
     let acc = EnergyAccountant::paper_default(cfg)?;
     let mut sink = StreamingSink::with_model(cfg, CASE_BIN_INTERVAL_S, acc.power_model)?;
@@ -86,13 +93,21 @@ pub fn run_cases_on(
 pub fn sweep_meta(results: &[CaseResult]) -> Value {
     let mut oracle = OracleStats::default();
     let mut peak_bins = 0usize;
+    let mut peak_live = 0usize;
     let mut stages = 0u64;
     for r in results {
         oracle.merge(&r.out.oracle);
         peak_bins = peak_bins.max(r.peak_resident_bins);
+        peak_live = peak_live.max(r.out.peak_live_requests);
         stages += r.out.metrics.stage_count;
     }
-    sweep_meta_parts(results.len() as u64, oracle, stages, Some(peak_bins as u64))
+    sweep_meta_parts(
+        results.len() as u64,
+        oracle,
+        stages,
+        Some(peak_bins as u64),
+        Some(peak_live as u64),
+    )
 }
 
 /// [`sweep_meta`] from pre-aggregated parts — for experiments that
@@ -101,18 +116,23 @@ pub fn sweep_meta(results: &[CaseResult]) -> Value {
 /// experiment's `meta.json` carries this object under `sweep`.
 /// `peak_resident_bins: None` marks a materialized run (the resident
 /// stage state was the full record vector, reported as
-/// `total_stages`).
+/// `total_stages`); `peak_live_requests: None` likewise marks the
+/// request side as materialized.
 pub fn sweep_meta_parts(
     cases: u64,
     oracle: OracleStats,
     total_stages: u64,
     peak_resident_bins: Option<u64>,
+    peak_live_requests: Option<u64>,
 ) -> Value {
     let mut v = Value::obj();
     v.set("cases", cases)
         .set("jobs", crate::sweep::default_jobs() as u64)
         .set("oracle_cache", oracle.to_json())
         .set("total_stages", total_stages);
+    if let Some(r) = peak_live_requests {
+        v.set("peak_live_requests", r);
+    }
     match peak_resident_bins {
         Some(b) => {
             v.set("peak_resident_bins", b);

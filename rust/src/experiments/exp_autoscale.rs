@@ -243,10 +243,12 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     let mut oracle = OracleStats::default();
     let mut total_stages = 0u64;
     let mut peak_bins = 0usize;
+    let mut peak_live = 0usize;
     for r in &results {
         oracle.merge(&r.out.sim.oracle);
         total_stages += r.out.sim.metrics.stage_count;
         peak_bins = peak_bins.max(r.peak_resident_bins);
+        peak_live = peak_live.max(r.out.sim.peak_live_requests);
     }
     meta.set("experiment", "autoscale")
         .set(
@@ -262,6 +264,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
                 oracle,
                 total_stages,
                 Some(peak_bins as u64),
+                Some(peak_live as u64),
             ),
         )
         .set("requests", trace.len() as u64)

@@ -17,7 +17,8 @@
 
 use crate::cluster::kvcache::KvCache;
 use crate::config::simconfig::{SchedulerKind, SimConfig};
-use crate::workload::request::{Phase, Request};
+use crate::workload::request::Phase;
+use crate::workload::store::RequestStore;
 use std::collections::VecDeque;
 
 /// vLLM's max_num_batched_tokens default — caps prompt tokens per
@@ -174,13 +175,13 @@ impl ReplicaScheduler {
     /// Admit queued requests while capacity (batch cap + KV) allows.
     /// KV is reserved for the full prompt plus one decode block of
     /// headroom. Draining replicas admit nothing.
-    fn admit(&mut self, reqs: &mut [Request], now: f64) {
+    fn admit<S: RequestStore + ?Sized>(&mut self, reqs: &mut S, now: f64) {
         if self.draining {
             return;
         }
         while self.running.len() < self.batch_cap {
             let Some(&id) = self.queue.front() else { break };
-            let r = &mut reqs[id as usize];
+            let r = reqs.req_mut(id);
             let need = r.prefill_tokens + 1;
             if !self.kv.admit(id, need) {
                 break; // head-of-line blocking, vLLM-style
@@ -192,25 +193,29 @@ impl ReplicaScheduler {
     }
 
     /// Plan the next batch stage, or None if nothing can run.
-    pub fn next_stage(&mut self, reqs: &mut [Request], now: f64) -> Option<StagePlan> {
-        self.admit(reqs, now);
+    pub fn next_stage<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        now: f64,
+    ) -> Option<StagePlan> {
+        self.admit(&mut *reqs, now);
         if self.running.is_empty() {
             return None;
         }
         match self.kind {
-            SchedulerKind::Vllm => self.plan_vllm(reqs),
-            SchedulerKind::Sarathi => self.plan_sarathi(reqs),
-            SchedulerKind::Orca => self.plan_orca(reqs),
+            SchedulerKind::Vllm => self.plan_vllm(&mut *reqs),
+            SchedulerKind::Sarathi => self.plan_sarathi(&mut *reqs),
+            SchedulerKind::Orca => self.plan_orca(&mut *reqs),
         }
     }
 
-    fn plan_vllm(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+    fn plan_vllm<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
         // Prefill-prioritized: if any running request still has prompt
         // tokens, run a prefill-only stage (whole prompts, token budget).
         let mut entries = Vec::new();
         let mut budget = MAX_BATCHED_TOKENS;
         for &id in &self.running {
-            let r = &reqs[id as usize];
+            let r = reqs.req(id);
             let rem = r.prefill_remaining();
             if rem > 0 && budget >= rem.min(budget) && budget > 0 {
                 let take = rem.min(budget);
@@ -224,17 +229,17 @@ impl ReplicaScheduler {
                 kind: StageKind::Prefill,
             });
         }
-        self.plan_decode(reqs)
+        self.plan_decode(&mut *reqs)
     }
 
-    fn plan_decode(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+    fn plan_decode<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
         // Grow KV by one token per running decode request; preempt the
         // youngest on allocation failure.
         loop {
             let mut ok = true;
             for idx in 0..self.running.len() {
                 let id = self.running[idx];
-                let r = &reqs[id as usize];
+                let r = reqs.req(id);
                 if r.phase() == Phase::Decode
                     && !self.kv.grow(id, r.context_len() + 1)
                 {
@@ -245,7 +250,7 @@ impl ReplicaScheduler {
             if ok {
                 break;
             }
-            self.preempt_youngest(reqs);
+            self.preempt_youngest(&mut *reqs);
             if self.running.is_empty() {
                 return None;
             }
@@ -253,7 +258,7 @@ impl ReplicaScheduler {
         let entries: Vec<(u64, u32)> = self
             .running
             .iter()
-            .filter(|&&id| reqs[id as usize].phase() == Phase::Decode)
+            .filter(|&&id| reqs.req(id).phase() == Phase::Decode)
             .map(|&id| (id, 1u32))
             .collect();
         if entries.is_empty() {
@@ -266,10 +271,10 @@ impl ReplicaScheduler {
         }
     }
 
-    fn plan_sarathi(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+    fn plan_sarathi<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
         // Mixed stage: all decodes first (1 token each), then prefill
         // chunks into the remaining token budget.
-        let decode_plan = self.plan_decode(reqs);
+        let decode_plan = self.plan_decode(&mut *reqs);
         let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
         let mut budget = self.chunk_size.saturating_sub(entries.len() as u64);
         let had_decodes = !entries.is_empty();
@@ -277,7 +282,7 @@ impl ReplicaScheduler {
             if budget == 0 {
                 break;
             }
-            let r = &reqs[id as usize];
+            let r = reqs.req(id);
             let rem = r.prefill_remaining();
             if rem > 0 {
                 let take = rem.min(budget);
@@ -288,7 +293,7 @@ impl ReplicaScheduler {
         if entries.is_empty() {
             return None;
         }
-        let kind = if had_decodes && entries.len() > self.count_decodes(reqs) {
+        let kind = if had_decodes && entries.len() > self.count_decodes(&*reqs) {
             StageKind::Mixed
         } else if had_decodes {
             StageKind::Decode
@@ -298,22 +303,22 @@ impl ReplicaScheduler {
         Some(StagePlan { entries, kind })
     }
 
-    fn count_decodes(&self, reqs: &[Request]) -> usize {
+    fn count_decodes<S: RequestStore + ?Sized>(&self, reqs: &S) -> usize {
         self.running
             .iter()
-            .filter(|&&id| reqs[id as usize].phase() == Phase::Decode)
+            .filter(|&&id| reqs.req(id).phase() == Phase::Decode)
             .count()
     }
 
-    fn plan_orca(&mut self, reqs: &mut [Request]) -> Option<StagePlan> {
+    fn plan_orca<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
         // Iteration-level mixed batch: full remaining prompts + all
         // decodes, no token budget.
-        let decode_plan = self.plan_decode(reqs);
+        let decode_plan = self.plan_decode(&mut *reqs);
         let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
         let had_decodes = !entries.is_empty();
         let mut had_prefill = false;
         for &id in &self.running {
-            let r = &reqs[id as usize];
+            let r = reqs.req(id);
             let rem = r.prefill_remaining();
             if rem > 0 {
                 entries.push((id, rem as u32));
@@ -331,12 +336,12 @@ impl ReplicaScheduler {
         Some(StagePlan { entries, kind })
     }
 
-    fn preempt_youngest(&mut self, reqs: &mut [Request]) {
+    fn preempt_youngest<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) {
         // Youngest = most recently admitted (vLLM preempts the lowest
         // priority request and restarts it by recomputation).
         if let Some(id) = self.running.pop() {
             self.kv.release(id);
-            let r = &mut reqs[id as usize];
+            let r = reqs.req_mut(id);
             r.prefill_done = 0; // recompute-style restart
             self.queue.push_front(id);
             self.preemptions += 1;
@@ -345,15 +350,15 @@ impl ReplicaScheduler {
 
     /// Apply a completed stage: advance progress, emit first tokens,
     /// retire finished requests. Returns the finished request ids.
-    pub fn complete_stage(
+    pub fn complete_stage<S: RequestStore + ?Sized>(
         &mut self,
-        reqs: &mut [Request],
+        reqs: &mut S,
         plan: &StagePlan,
         now: f64,
     ) -> Vec<u64> {
         let mut finished = Vec::new();
         for &(id, nt) in &plan.entries {
-            let r = &mut reqs[id as usize];
+            let r = reqs.req_mut(id);
             if r.prefill_remaining() > 0 {
                 r.prefill_done += nt as u64;
                 debug_assert!(r.prefill_done <= r.prefill_tokens);
@@ -385,6 +390,7 @@ impl ReplicaScheduler {
 mod tests {
     use super::*;
     use crate::cluster::kvcache::KvCache;
+    use crate::workload::request::Request;
 
     fn mk_reqs(specs: &[(u64, u64)]) -> Vec<Request> {
         specs

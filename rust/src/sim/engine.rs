@@ -13,23 +13,34 @@
 //! computes, the other (pp-1)·tp GPUs of the replica idle at
 //! `p_idle` and are charged as such by the energy accounting.
 //!
-//! Two entry families, each generic over the telemetry sink
-//! (DESIGN.md §7 — pass a [`StageLog`] to materialize every record, or
-//! a [`crate::telemetry::StreamingSink`] to fold them online in
-//! O(bins) memory):
+//! Memory model (DESIGN.md §8): the cores are streaming end to end.
+//! Arrivals are pulled one at a time from a [`RequestSource`] (exactly
+//! one pending-arrival event lives in the heap), outstanding requests
+//! live in a compact [`LiveRequests`] map that drops each entry the
+//! moment it completes and is handed to the [`RequestSink`], and stage
+//! records flow into the [`StageSink`]. A run is O(outstanding + bins)
+//! resident, independent of the request count.
+//!
+//! Two entry families, each generic over the telemetry sinks (pass
+//! materialized logs to keep every record, streaming sinks to fold
+//! them online):
 //! * [`run`] / [`run_with_trace`] / [`run_with_model`] /
-//!   [`run_with_sink`] / [`run_streaming`] — the fixed-fleet engine;
+//!   [`run_with_sink`] / [`run_with_sinks`] / [`run_streaming`] — the
+//!   fixed-fleet engine;
 //! * [`run_autoscaled`] / [`run_autoscaled_with_model`] /
-//!   [`run_autoscaled_with_sink`] / [`run_autoscaled_streaming`] — the
-//!   dynamic fleet engine (DESIGN.md §6): replicas are provisioned
-//!   with a cold-start delay (drawing idle power while booting),
-//!   gracefully drained (admission closes, running requests finish,
-//!   queued ones re-route through the [`Router`]), and taken offline,
-//!   under a [`crate::autoscale::ScalingPolicy`] evaluated on a fixed
-//!   decision interval against load telemetry and grid signals.
+//!   [`run_autoscaled_with_sink`] / [`run_autoscaled_with_sinks`] /
+//!   [`run_autoscaled_streaming`] — the dynamic fleet engine
+//!   (DESIGN.md §6): replicas are provisioned with a cold-start delay
+//!   (drawing idle power while booting), gracefully drained (admission
+//!   closes, running requests finish, queued ones re-route through the
+//!   [`Router`]), and taken offline, under a
+//!   [`crate::autoscale::ScalingPolicy`] evaluated on a fixed decision
+//!   interval against load telemetry ([`CompletionWindow`], itself a
+//!   request-sink client) and grid signals.
 
 use crate::autoscale::{
-    build_policy, FleetController, FleetTimeline, GridEnv, LoadSignals, ScaleDecision,
+    build_policy, CompletionWindow, FleetController, FleetTimeline, GridEnv, LoadSignals,
+    ScaleDecision,
 };
 use crate::cluster::topology::ClusterTopology;
 use crate::config::simconfig::{AutoscaleConfig, SimConfig};
@@ -38,12 +49,16 @@ use crate::exec::{build_cost_model, OracleStats, StageCostModel};
 use crate::scheduler::replica::{ReplicaScheduler, StagePlan};
 use crate::scheduler::router::Router;
 use crate::sim::metrics::SimMetrics;
-use crate::telemetry::{StageLog, StageRecord, StageSink, StageStats};
-use crate::util::stats::percentile;
-use crate::workload::{Request, Trace, WorkloadGenerator};
+use crate::telemetry::{
+    RequestLog, RequestSink, RequestStats, StageLog, StageRecord, StageSink, StageStats,
+    StreamingRequestSink,
+};
+use crate::workload::{
+    LiveRequests, Request, RequestSource, RequestStore, Trace, WorkloadGenerator,
+};
 use anyhow::Result;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 
 /// A scheduled fixed-fleet simulation event.
 #[derive(Debug)]
@@ -105,22 +120,27 @@ impl<K> Ord for Event<K> {
     }
 }
 
-/// What a simulation run produces regardless of sink: requests,
-/// summary metrics, stage aggregates, and oracle cache statistics.
-/// The caller's sink holds the per-stage telemetry (all records for a
-/// [`StageLog`], O(bins) folds for a streaming sink).
+/// What a simulation run produces regardless of sink kind: summary
+/// metrics plus the stage/request accumulators and oracle cache
+/// statistics. The caller's sinks hold the per-record telemetry (all
+/// records for the materialized logs, online folds for the streaming
+/// sinks); nothing here is O(requests) or O(stages).
 pub struct SimRun {
     pub config: SimConfig,
-    pub requests: Vec<Request>,
     pub metrics: SimMetrics,
     /// Sink-side stage aggregates (also folded into `metrics`).
     pub stage_stats: StageStats,
+    /// Sink-side request aggregates (also folded into `metrics`).
+    pub request_stats: RequestStats,
+    /// High-water mark of concurrently live requests inside the
+    /// engine — the per-request memory footprint (O(outstanding)).
+    pub peak_live_requests: usize,
     /// Cost-oracle memo-cache statistics (zero for cache-less backends).
     pub oracle: OracleStats,
 }
 
-/// Everything a materialized simulation run produces: [`SimRun`] plus
-/// the full per-stage log.
+/// Everything a materialized simulation run produces: the run plus the
+/// full request vector and per-stage log.
 pub struct SimOutput {
     pub config: SimConfig,
     pub requests: Vec<Request>,
@@ -130,19 +150,7 @@ pub struct SimOutput {
     pub oracle: OracleStats,
 }
 
-impl SimOutput {
-    fn from_parts(run: SimRun, stagelog: StageLog) -> Self {
-        SimOutput {
-            config: run.config,
-            requests: run.requests,
-            stagelog,
-            metrics: run.metrics,
-            oracle: run.oracle,
-        }
-    }
-}
-
-/// A dynamic-fleet run against a caller-owned sink: the simulation
+/// A dynamic-fleet run against caller-owned sinks: the simulation
 /// run plus the replica lifecycle the energy layers need.
 pub struct AutoscaleRun {
     pub sim: SimRun,
@@ -166,6 +174,35 @@ pub struct AutoscaleOutput {
     pub policy: &'static str,
 }
 
+/// Pull the next arrival (if any) out of the source: insert it into
+/// the live map and schedule its arrival event. The cores call this
+/// once at startup and once per arrival pop, so the heap never holds
+/// more than one pending arrival. Returns false when the source is
+/// exhausted.
+fn pull_arrival<K>(
+    source: &mut dyn RequestSource,
+    live: &mut LiveRequests,
+    heap: &mut BinaryHeap<Event<K>>,
+    seq: &mut u64,
+    submitted: &mut u64,
+    mk: impl FnOnce(u64) -> K,
+) -> bool {
+    match source.next_request() {
+        Some(r) => {
+            *submitted += 1;
+            *seq += 1;
+            heap.push(Event {
+                at: r.arrival_s,
+                seq: *seq,
+                kind: mk(r.id),
+            });
+            live.insert(r);
+            true
+        }
+        None => false,
+    }
+}
+
 /// Plan and price one iteration on `replica_idx`: asks the replica
 /// scheduler for the next stage plan, prices it through the oracle,
 /// emits `pp` stage records into the sink, and returns the iteration
@@ -177,16 +214,16 @@ fn plan_iteration(
     cfg: &SimConfig,
     idle_gpus_per_stage: u32,
     replicas: &mut [ReplicaScheduler],
-    requests: &mut [Request],
+    live: &mut LiveRequests,
     cost: &mut dyn StageCostModel,
     sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
 ) -> Option<(f64, StagePlan)> {
-    let plan = replicas[replica_idx].next_stage(requests, now)?;
+    let plan = replicas[replica_idx].next_stage(&mut *live, now)?;
     // Price one pipeline stage.
     batch.clear();
     for &(id, nt) in &plan.entries {
-        batch.push(nt, requests[id as usize].context_len() as u32);
+        batch.push(nt, live.req(id).context_len() as u32);
     }
     let c = cost.stage_cost(batch);
     // pp sequential stages, each logged separately.
@@ -209,9 +246,25 @@ fn plan_iteration(
     Some((now + c.t_stage_s * cfg.pp as f64, plan))
 }
 
+/// Retire the finished requests of one completed stage: drop them
+/// from the live map and hand them to the request sink(s) in finish
+/// order. Returns how many finished.
+fn retire_finished(
+    fin: &[u64],
+    live: &mut LiveRequests,
+    sinks: &mut [&mut dyn RequestSink],
+) -> u64 {
+    for &id in fin {
+        let done = live.remove(id);
+        for s in sinks.iter_mut() {
+            s.record(&done);
+        }
+    }
+    fin.len() as u64
+}
+
 /// Run the simulator with a freshly generated workload.
 pub fn run(cfg: &SimConfig) -> Result<SimOutput> {
-    cfg.validate()?;
     let mut gen = WorkloadGenerator::from_config(cfg);
     let trace = Trace::new(gen.generate(cfg.num_requests));
     run_with_trace(cfg, trace)
@@ -223,64 +276,80 @@ pub fn run_with_trace(cfg: &SimConfig, trace: Trace) -> Result<SimOutput> {
     run_with_model(cfg, trace, cost)
 }
 
-/// Run with an explicit cost model, materializing the full stage log.
+/// Run with an explicit cost model, materializing the full stage log
+/// and request vector.
 pub fn run_with_model(
     cfg: &SimConfig,
     trace: Trace,
     cost: Box<dyn StageCostModel>,
 ) -> Result<SimOutput> {
     let mut stagelog = StageLog::new();
-    let run = run_with_sink(cfg, trace, cost, &mut stagelog)?;
-    Ok(SimOutput::from_parts(run, stagelog))
+    let mut reqlog = RequestLog::new(cfg);
+    let mut source = trace.into_source();
+    let run = run_with_sinks(cfg, &mut source, cost, &mut stagelog, &mut reqlog)?;
+    Ok(SimOutput {
+        config: run.config,
+        requests: reqlog.into_requests(),
+        stagelog,
+        metrics: run.metrics,
+        oracle: run.oracle,
+    })
 }
 
-/// Run with a freshly generated workload against a caller-owned sink
-/// (typically a [`crate::telemetry::StreamingSink`] for O(bins) runs).
+/// Run with a lazily generated workload against a caller-owned stage
+/// sink; request telemetry streams through sketches. With a
+/// [`crate::telemetry::StreamingSink`] this is the fully streaming
+/// path: O(outstanding + bins) resident state end to end.
 pub fn run_streaming(cfg: &SimConfig, sink: &mut dyn StageSink) -> Result<SimRun> {
-    cfg.validate()?;
-    let mut gen = WorkloadGenerator::from_config(cfg);
-    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let mut source = WorkloadGenerator::from_config(cfg).take(cfg.num_requests);
     let cost = build_cost_model(cfg)?;
-    run_with_sink(cfg, trace, cost, sink)
+    let mut reqs = StreamingRequestSink::new(cfg);
+    run_with_sinks(cfg, &mut source, cost, sink, &mut reqs)
 }
 
-/// The fixed-fleet engine core: explicit trace, cost model, and
-/// telemetry sink (tests inject mocks here).
+/// Fixed-fleet run over an explicit trace and stage sink; request
+/// telemetry streams through sketches.
 pub fn run_with_sink(
     cfg: &SimConfig,
     trace: Trace,
-    mut cost: Box<dyn StageCostModel>,
+    cost: Box<dyn StageCostModel>,
     sink: &mut dyn StageSink,
 ) -> Result<SimRun> {
-    let topo = ClusterTopology::from_config(cfg)?;
-    let mut requests = trace.requests;
-    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-    // Request ids must index into the vec.
-    for (i, r) in requests.iter_mut().enumerate() {
-        r.id = i as u64;
-    }
+    let mut source = trace.into_source();
+    let mut reqs = StreamingRequestSink::new(cfg);
+    run_with_sinks(cfg, &mut source, cost, sink, &mut reqs)
+}
 
+/// The fixed-fleet engine core: explicit arrival source, cost model,
+/// and stage/request telemetry sinks (tests inject mocks here).
+pub fn run_with_sinks(
+    cfg: &SimConfig,
+    source: &mut dyn RequestSource,
+    mut cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<SimRun> {
+    cfg.validate()?;
+    let topo = ClusterTopology::from_config(cfg)?;
     let mut replicas: Vec<ReplicaScheduler> = (0..cfg.replicas)
         .map(|i| ReplicaScheduler::new(i, cfg))
         .collect::<Result<_>>()?;
     let mut router = Router::new(cfg.router, cfg.replicas as usize);
     let mut busy: Vec<bool> = vec![false; cfg.replicas as usize];
 
+    // O(outstanding) event state: one pending arrival + one in-flight
+    // iteration per replica.
     let mut heap: BinaryHeap<Event<EventKind>> =
-        BinaryHeap::with_capacity(requests.len() * 2);
+        BinaryHeap::with_capacity(cfg.replicas as usize * 2 + 4);
+    let mut live = LiveRequests::new();
     let mut seq = 0u64;
-    for r in &requests {
-        heap.push(Event {
-            at: r.arrival_s,
-            seq,
-            kind: EventKind::Arrival { request: r.id },
-        });
-        seq += 1;
-    }
+    let mut submitted = 0u64;
+    pull_arrival(source, &mut live, &mut heap, &mut seq, &mut submitted, |id| {
+        EventKind::Arrival { request: id }
+    });
 
     let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
     let mut finished_count = 0u64;
-    let total = requests.len() as u64;
     let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
 
     let mut last_time = 0.0f64;
@@ -289,6 +358,13 @@ pub fn run_with_sink(
         last_time = last_time.max(now);
         match ev.kind {
             EventKind::Arrival { request } => {
+                // Keep exactly one pending arrival: pull the successor
+                // before routing this one, so same-instant arrivals
+                // stay ordered ahead of the iteration completions
+                // pushed below.
+                pull_arrival(source, &mut live, &mut heap, &mut seq, &mut submitted, |id| {
+                    EventKind::Arrival { request: id }
+                });
                 let outstanding: Vec<u64> =
                     replicas.iter().map(|r| r.outstanding).collect();
                 let target = router.route(&outstanding);
@@ -300,7 +376,7 @@ pub fn run_with_sink(
                         cfg,
                         idle_gpus_per_stage,
                         &mut replicas,
-                        &mut requests,
+                        &mut live,
                         cost.as_mut(),
                         sink,
                         &mut batch,
@@ -320,8 +396,8 @@ pub fn run_with_sink(
             }
             EventKind::IterDone { replica, plan } => {
                 let idx = replica as usize;
-                let fin = replicas[idx].complete_stage(&mut requests, &plan, now);
-                finished_count += fin.len() as u64;
+                let fin = replicas[idx].complete_stage(&mut live, &plan, now);
+                finished_count += retire_finished(&fin, &mut live, &mut [&mut *requests]);
                 busy[idx] = false;
                 if let Some((at, plan)) = plan_iteration(
                     idx,
@@ -329,7 +405,7 @@ pub fn run_with_sink(
                     cfg,
                     idle_gpus_per_stage,
                     &mut replicas,
-                    &mut requests,
+                    &mut live,
                     cost.as_mut(),
                     sink,
                     &mut batch,
@@ -347,18 +423,21 @@ pub fn run_with_sink(
     }
 
     anyhow::ensure!(
-        finished_count == total,
-        "simulation ended with {finished_count}/{total} requests finished (deadlock?)"
+        finished_count == submitted,
+        "simulation ended with {finished_count}/{submitted} requests finished (deadlock?)"
     );
 
     let preemptions = replicas.iter().map(|r| r.preemptions).sum();
     let stage_stats = sink.stats();
-    let metrics = SimMetrics::compute(cfg, &requests, &stage_stats, last_time, preemptions);
+    let mut request_stats = requests.stats();
+    request_stats.submitted = submitted;
+    let metrics = SimMetrics::compute(&request_stats, &stage_stats, last_time, preemptions);
     Ok(SimRun {
         config: cfg.clone(),
-        requests,
         metrics,
         stage_stats,
+        request_stats,
+        peak_live_requests: live.peak_resident(),
         oracle: cost.stats(),
     })
 }
@@ -371,7 +450,7 @@ fn try_start(
     cfg: &SimConfig,
     idle_gpus_per_stage: u32,
     replicas: &mut [ReplicaScheduler],
-    requests: &mut [Request],
+    live: &mut LiveRequests,
     cost: &mut dyn StageCostModel,
     sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
@@ -388,7 +467,7 @@ fn try_start(
         cfg,
         idle_gpus_per_stage,
         replicas,
-        requests,
+        live,
         cost,
         sink,
         batch,
@@ -442,6 +521,39 @@ fn reroute_queue(
     touched
 }
 
+/// Move a fair share of the standing queue backlog onto the
+/// newly-online replica `idx`. The newcomer takes a *ceiling* share —
+/// `total_queued / n` would floor small backlogs to 0, leaving a
+/// freshly cold-started replica idle until the next arrival despite
+/// queued work — while donors keep at least the floor share.
+fn rebalance_onto(idx: usize, actives: &[usize], replicas: &mut [ReplicaScheduler]) {
+    let total_queued: usize = actives.iter().map(|&i| replicas[i].queue_len()).sum();
+    if total_queued == 0 {
+        return;
+    }
+    let n = actives.len().max(1);
+    let keep = total_queued / n;
+    let mut want = total_queued
+        .div_ceil(n)
+        .saturating_sub(replicas[idx].queue_len());
+    for &j in actives {
+        if want == 0 {
+            break;
+        }
+        if j == idx {
+            continue;
+        }
+        let excess = replicas[j].queue_len().saturating_sub(keep);
+        let take = excess.min(want);
+        if take > 0 {
+            for id in replicas[j].steal_queued(take) {
+                replicas[idx].enqueue(id);
+            }
+            want -= take;
+        }
+    }
+}
+
 /// Run the dynamic-fleet simulator with the configured cost oracle.
 pub fn run_autoscaled(
     cfg: &SimConfig,
@@ -454,7 +566,7 @@ pub fn run_autoscaled(
 }
 
 /// Dynamic-fleet run with an explicit cost model, materializing the
-/// full stage log.
+/// full stage log and request vector.
 pub fn run_autoscaled_with_model(
     cfg: &SimConfig,
     scale: &AutoscaleConfig,
@@ -463,9 +575,25 @@ pub fn run_autoscaled_with_model(
     cost: Box<dyn StageCostModel>,
 ) -> Result<AutoscaleOutput> {
     let mut stagelog = StageLog::new();
-    let run = run_autoscaled_with_sink(cfg, scale, grid, trace, cost, &mut stagelog)?;
+    let mut reqlog = RequestLog::new(cfg);
+    let mut source = trace.into_source();
+    let run = run_autoscaled_with_sinks(
+        cfg,
+        scale,
+        grid,
+        &mut source,
+        cost,
+        &mut stagelog,
+        &mut reqlog,
+    )?;
     Ok(AutoscaleOutput {
-        sim: SimOutput::from_parts(run.sim, stagelog),
+        sim: SimOutput {
+            config: run.sim.config,
+            requests: reqlog.into_requests(),
+            stagelog,
+            metrics: run.sim.metrics,
+            oracle: run.sim.oracle,
+        },
         timeline: run.timeline,
         decisions: run.decisions,
         policy: run.policy,
@@ -473,7 +601,8 @@ pub fn run_autoscaled_with_model(
 }
 
 /// Dynamic-fleet run with the configured cost oracle against a
-/// caller-owned sink (O(bins) with a streaming sink).
+/// caller-owned stage sink; request telemetry streams through
+/// sketches (O(outstanding + bins) with a streaming stage sink).
 pub fn run_autoscaled_streaming(
     cfg: &SimConfig,
     scale: &AutoscaleConfig,
@@ -485,7 +614,22 @@ pub fn run_autoscaled_streaming(
     run_autoscaled_with_sink(cfg, scale, grid, trace, cost, sink)
 }
 
-/// Dynamic-fleet engine core: like [`run_with_sink`] but the replica
+/// Dynamic-fleet run over an explicit trace, cost model, and stage
+/// sink; request telemetry streams through sketches.
+pub fn run_autoscaled_with_sink(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+    cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+) -> Result<AutoscaleRun> {
+    let mut source = trace.into_source();
+    let mut reqs = StreamingRequestSink::new(cfg);
+    run_autoscaled_with_sinks(cfg, scale, grid, &mut source, cost, sink, &mut reqs)
+}
+
+/// Dynamic-fleet engine core: like [`run_with_sinks`] but the replica
 /// fleet grows and shrinks under the configured scaling policy.
 ///
 /// Replica lifecycle: Provision (cold start, idle power, `cold_start_s`
@@ -493,22 +637,18 @@ pub fn run_autoscaled_streaming(
 /// running requests finish) → Offline. The initial fleet is
 /// `cfg.replicas` clamped into the autoscaler bounds and is online at
 /// t = 0 with no cold start.
-pub fn run_autoscaled_with_sink(
+pub fn run_autoscaled_with_sinks(
     cfg: &SimConfig,
     scale: &AutoscaleConfig,
     grid: &GridEnv,
-    trace: Trace,
+    source: &mut dyn RequestSource,
     mut cost: Box<dyn StageCostModel>,
     sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
 ) -> Result<AutoscaleRun> {
     cfg.validate()?;
     scale.validate()?;
     let topo = ClusterTopology::from_config(cfg)?;
-    let mut requests = trace.requests;
-    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-    for (i, r) in requests.iter_mut().enumerate() {
-        r.id = i as u64;
-    }
 
     let init = cfg.replicas.clamp(scale.min_replicas, scale.max_replicas);
     let mut replicas: Vec<ReplicaScheduler> = (0..init)
@@ -525,16 +665,18 @@ pub fn run_autoscaled_with_sink(
     let mut controller = FleetController::new(scale.clone(), build_policy(scale, init));
 
     let mut heap: BinaryHeap<Event<AsEventKind>> =
-        BinaryHeap::with_capacity(requests.len() * 2 + 64);
+        BinaryHeap::with_capacity(init as usize * 2 + 64);
+    let mut live = LiveRequests::new();
     let mut seq = 0u64;
-    for r in &requests {
-        heap.push(Event {
-            at: r.arrival_s,
-            seq,
-            kind: AsEventKind::Arrival { request: r.id },
-        });
-        seq += 1;
-    }
+    let mut submitted = 0u64;
+    let mut source_done = !pull_arrival(
+        source,
+        &mut live,
+        &mut heap,
+        &mut seq,
+        &mut submitted,
+        |id| AsEventKind::Arrival { request: id },
+    );
     seq += 1;
     heap.push(Event {
         at: scale.decision_interval_s,
@@ -544,12 +686,13 @@ pub fn run_autoscaled_with_sink(
 
     let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
     let mut finished_count = 0u64;
-    let total = requests.len() as u64;
     let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
 
-    // Recent-completion window feeding the SLO/throughput telemetry.
+    // Recent-completion window feeding the SLO/throughput telemetry —
+    // a request-sink client fed the same completion stream as the
+    // caller's sink.
     let window_s = (scale.decision_interval_s * 5.0).max(300.0);
-    let mut recent: VecDeque<(f64, f64, f64)> = VecDeque::new(); // (t, ttft, e2e)
+    let mut window = CompletionWindow::new(window_s);
 
     let mut last_time = 0.0f64;
     while let Some(ev) = heap.pop() {
@@ -566,6 +709,16 @@ pub fn run_autoscaled_with_sink(
         }
         match ev.kind {
             AsEventKind::Arrival { request } => {
+                if !source_done {
+                    source_done = !pull_arrival(
+                        source,
+                        &mut live,
+                        &mut heap,
+                        &mut seq,
+                        &mut submitted,
+                        |id| AsEventKind::Arrival { request: id },
+                    );
+                }
                 let eligible: Vec<usize> = state
                     .iter()
                     .enumerate()
@@ -582,7 +735,7 @@ pub fn run_autoscaled_with_sink(
                     cfg,
                     idle_gpus_per_stage,
                     &mut replicas,
-                    &mut requests,
+                    &mut live,
                     cost.as_mut(),
                     sink,
                     &mut batch,
@@ -593,16 +746,12 @@ pub fn run_autoscaled_with_sink(
             }
             AsEventKind::IterDone { replica, plan } => {
                 let idx = replica as usize;
-                let fin = replicas[idx].complete_stage(&mut requests, &plan, now);
-                finished_count += fin.len() as u64;
-                for id in &fin {
-                    let r = &requests[*id as usize];
-                    recent.push_back((
-                        now,
-                        r.ttft().unwrap_or(0.0),
-                        r.e2e_latency().unwrap_or(0.0),
-                    ));
-                }
+                let fin = replicas[idx].complete_stage(&mut live, &plan, now);
+                finished_count += retire_finished(
+                    &fin,
+                    &mut live,
+                    &mut [&mut window as &mut dyn RequestSink, &mut *requests],
+                );
                 busy[idx] = false;
                 try_start(
                     idx,
@@ -610,7 +759,7 @@ pub fn run_autoscaled_with_sink(
                     cfg,
                     idle_gpus_per_stage,
                     &mut replicas,
-                    &mut requests,
+                    &mut live,
                     cost.as_mut(),
                     sink,
                     &mut batch,
@@ -631,7 +780,7 @@ pub fn run_autoscaled_with_sink(
                                 cfg,
                                 idle_gpus_per_stage,
                                 &mut replicas,
-                                &mut requests,
+                                &mut live,
                                 cost.as_mut(),
                                 sink,
                                 &mut batch,
@@ -648,7 +797,7 @@ pub fn run_autoscaled_with_sink(
                 }
             }
             AsEventKind::ReplicaOnline { replica } => {
-                if finished_count >= total {
+                if source_done && finished_count >= submitted {
                     continue; // run is over; don't pollute the timeline
                 }
                 let idx = replica as usize;
@@ -657,41 +806,23 @@ pub fn run_autoscaled_with_sink(
                     state[idx] = RState::Active;
                     timeline.online(replica, now);
                     // Rebalance: a scale-up was triggered by backlog, so
-                    // the new replica takes its fair share of standing
-                    // queues instead of waiting for future arrivals.
+                    // the new replica takes its fair (ceiling) share of
+                    // standing queues instead of waiting for future
+                    // arrivals.
                     let actives: Vec<usize> = state
                         .iter()
                         .enumerate()
                         .filter(|(_, s)| **s == RState::Active)
                         .map(|(i, _)| i)
                         .collect();
-                    let total_queued: usize =
-                        actives.iter().map(|&i| replicas[i].queue_len()).sum();
-                    let share = total_queued / actives.len().max(1);
-                    let mut want = share;
-                    for &j in &actives {
-                        if want == 0 {
-                            break;
-                        }
-                        if j == idx {
-                            continue;
-                        }
-                        let excess = replicas[j].queue_len().saturating_sub(share);
-                        let take = excess.min(want);
-                        if take > 0 {
-                            for id in replicas[j].steal_queued(take) {
-                                replicas[idx].enqueue(id);
-                            }
-                            want -= take;
-                        }
-                    }
+                    rebalance_onto(idx, &actives, &mut replicas);
                     try_start(
                         idx,
                         now,
                         cfg,
                         idle_gpus_per_stage,
                         &mut replicas,
-                        &mut requests,
+                        &mut live,
                         cost.as_mut(),
                         sink,
                         &mut batch,
@@ -702,16 +833,10 @@ pub fn run_autoscaled_with_sink(
                 }
             }
             AsEventKind::ScaleTick => {
-                if finished_count >= total {
+                if source_done && finished_count >= submitted {
                     continue; // run is over; stop the tick chain
                 }
-                while recent
-                    .front()
-                    .map(|f| f.0 < now - window_s)
-                    .unwrap_or(false)
-                {
-                    recent.pop_front();
-                }
+                window.prune(now);
                 let active =
                     state.iter().filter(|&&s| s == RState::Active).count() as u32;
                 let pending =
@@ -720,25 +845,15 @@ pub fn run_autoscaled_with_sink(
                     replicas.iter().map(|r| r.queue_len() as u64).sum();
                 let running: u64 =
                     replicas.iter().map(|r| r.running_len() as u64).sum();
-                let ttfts: Vec<f64> = recent.iter().map(|f| f.1).collect();
-                let e2es: Vec<f64> = recent.iter().map(|f| f.2).collect();
                 let load = LoadSignals {
                     t_s: now,
                     queued,
                     running,
                     active_replicas: active,
                     pending_replicas: pending,
-                    recent_qps: recent.len() as f64 / window_s.min(now.max(1e-9)),
-                    recent_ttft_p99_s: if ttfts.is_empty() {
-                        f64::NAN
-                    } else {
-                        percentile(&ttfts, 99.0)
-                    },
-                    recent_e2e_p99_s: if e2es.is_empty() {
-                        f64::NAN
-                    } else {
-                        percentile(&e2es, 99.0)
-                    },
+                    recent_qps: window.qps(now),
+                    recent_ttft_p99_s: window.ttft_p99(),
+                    recent_e2e_p99_s: window.e2e_p99(),
                     slo_ttft_s: cfg.slo_ttft_s,
                     slo_e2e_s: cfg.slo_e2e_s,
                 };
@@ -802,7 +917,7 @@ pub fn run_autoscaled_with_sink(
                                 cfg,
                                 idle_gpus_per_stage,
                                 &mut replicas,
-                                &mut requests,
+                                &mut live,
                                 cost.as_mut(),
                                 sink,
                                 &mut batch,
@@ -824,7 +939,7 @@ pub fn run_autoscaled_with_sink(
                 // are still in flight. An empty heap with unfinished
                 // requests is a deadlock — stop ticking so the loop
                 // exits and the ensure! below reports it.
-                if finished_count < total && !heap.is_empty() {
+                if !heap.is_empty() {
                     seq += 1;
                     heap.push(Event {
                         at: now + scale.decision_interval_s,
@@ -837,21 +952,24 @@ pub fn run_autoscaled_with_sink(
     }
 
     anyhow::ensure!(
-        finished_count == total,
-        "autoscaled simulation ended with {finished_count}/{total} requests finished (deadlock?)"
+        finished_count == submitted,
+        "autoscaled simulation ended with {finished_count}/{submitted} requests finished (deadlock?)"
     );
 
     timeline.close(last_time);
     let preemptions = replicas.iter().map(|r| r.preemptions).sum();
     let stage_stats = sink.stats();
-    let metrics = SimMetrics::compute(cfg, &requests, &stage_stats, last_time, preemptions);
+    let mut request_stats = requests.stats();
+    request_stats.submitted = submitted;
+    let metrics = SimMetrics::compute(&request_stats, &stage_stats, last_time, preemptions);
     let policy = controller.policy_name();
     Ok(AutoscaleRun {
         sim: SimRun {
             config: cfg.clone(),
-            requests,
             metrics,
             stage_stats,
+            request_stats,
+            peak_live_requests: live.peak_resident(),
             oracle: cost.stats(),
         },
         timeline,
@@ -863,8 +981,9 @@ pub fn run_autoscaled_with_sink(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::kvcache::KvCache;
     use crate::config::simconfig::{
-        Arrival, CostModelKind, LengthDist, ScalingPolicyKind,
+        Arrival, CostModelKind, LengthDist, SchedulerKind, ScalingPolicyKind,
     };
     use crate::exec::batch::StageCost;
 
@@ -904,6 +1023,25 @@ mod tests {
         assert!(out.requests.iter().all(|r| r.is_finished()));
         assert!(out.metrics.makespan_s > 0.0);
         assert!(!out.stagelog.is_empty());
+    }
+
+    /// The lazy-arrival path and the materialized path are the same
+    /// simulation: identical schedule, identical exact aggregates.
+    #[test]
+    fn streaming_run_matches_materialized_run() {
+        let cfg = small_cfg();
+        let mat = run(&cfg).unwrap();
+        let mut stage_sink = StageLog::new();
+        let stream = run_streaming(&cfg, &mut stage_sink).unwrap();
+        assert_eq!(mat.metrics.makespan_s, stream.metrics.makespan_s);
+        assert_eq!(mat.metrics.stage_count, stream.metrics.stage_count);
+        assert_eq!(mat.metrics.achieved_qps, stream.metrics.achieved_qps);
+        assert_eq!(mat.metrics.token_throughput, stream.metrics.token_throughput);
+        assert_eq!(mat.metrics.slo_attained, stream.metrics.slo_attained);
+        assert_eq!(stream.request_stats.finished, 40);
+        assert_eq!(stream.request_stats.submitted, 40);
+        // The live map never held the whole workload resident.
+        assert!(stream.peak_live_requests <= 40);
     }
 
     #[test]
@@ -991,6 +1129,50 @@ mod tests {
             out_hi.metrics.makespan_s,
             out_lo.metrics.makespan_s
         );
+    }
+
+    // --- rebalance (ReplicaOnline) ---
+
+    fn bare_replica(id: u32) -> ReplicaScheduler {
+        ReplicaScheduler::with_kv(
+            id,
+            SchedulerKind::Vllm,
+            128,
+            512,
+            KvCache::with_blocks(16, 1000),
+        )
+    }
+
+    /// Satellite regression: with a 1-request backlog across 2 actives
+    /// the floor share was 0 and the cold-started replica idled; the
+    /// ceiling share hands it the queued request.
+    #[test]
+    fn rebalance_moves_small_backlog_to_new_replica() {
+        let mut reps = vec![bare_replica(0), bare_replica(1)];
+        reps[0].enqueue(7);
+        rebalance_onto(1, &[0, 1], &mut reps);
+        assert_eq!(reps[1].queue_len(), 1, "newcomer must take the backlog");
+        assert_eq!(reps[0].queue_len(), 0);
+    }
+
+    #[test]
+    fn rebalance_takes_ceiling_share_and_leaves_floor() {
+        let mut reps = vec![bare_replica(0), bare_replica(1)];
+        for id in 0..5 {
+            reps[0].enqueue(id);
+        }
+        rebalance_onto(1, &[0, 1], &mut reps);
+        // ceil(5/2) = 3 to the newcomer, floor(5/2) = 2 stay.
+        assert_eq!(reps[1].queue_len(), 3);
+        assert_eq!(reps[0].queue_len(), 2);
+    }
+
+    #[test]
+    fn rebalance_noop_without_backlog() {
+        let mut reps = vec![bare_replica(0), bare_replica(1)];
+        rebalance_onto(1, &[0, 1], &mut reps);
+        assert_eq!(reps[0].queue_len(), 0);
+        assert_eq!(reps[1].queue_len(), 0);
     }
 
     // --- dynamic fleet ---

@@ -1,20 +1,24 @@
 //! Simulation summary metrics: latency distributions, throughput,
 //! batching behaviour, MFU — the quantities the paper's figures are
 //! built from.
+//!
+//! Computed from the telemetry accumulators ([`RequestStats`] +
+//! [`StageStats`]) rather than request/stage vectors, so the same code
+//! serves the materialized and the streaming (O(outstanding + bins))
+//! paths — see DESIGN.md §8.
 
-use crate::config::simconfig::SimConfig;
-use crate::telemetry::StageStats;
+use crate::telemetry::{RequestStats, StageStats};
 use crate::util::json::Value;
-use crate::util::stats::percentile;
-use crate::workload::Request;
 
 #[derive(Debug, Clone)]
 pub struct SimMetrics {
     /// Wall-clock from t=0 to the last event.
     pub makespan_s: f64,
-    /// Achieved request throughput over the makespan.
+    /// Achieved request throughput over the makespan — *completed*
+    /// requests only (in-flight work is not throughput).
     pub achieved_qps: f64,
-    /// Total tokens processed (prefill + decode) per second.
+    /// Tokens actually processed (prefill + decode progress of
+    /// completed requests) per second — not the offered token budget.
     pub token_throughput: f64,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
@@ -28,7 +32,7 @@ pub struct SimMetrics {
     pub mean_batch_size: f64,
     pub stage_count: u64,
     pub preemptions: u64,
-    /// Mean queueing delay (arrival -> first scheduled).
+    /// Median queueing delay (arrival -> first scheduled).
     pub queue_delay_p50_s: f64,
     /// Fraction of requests whose TTFT met `cfg.slo_ttft_s`
     /// (unfinished requests count as misses).
@@ -41,69 +45,34 @@ pub struct SimMetrics {
 }
 
 impl SimMetrics {
+    /// Fold the two telemetry accumulators into the headline metrics.
+    /// `requests.submitted` must already be stamped by the engine (the
+    /// SLO denominators count offered requests, so anything still in
+    /// flight is a miss).
     pub fn compute(
-        cfg: &SimConfig,
-        requests: &[Request],
+        requests: &RequestStats,
         stages: &StageStats,
         makespan_s: f64,
         preemptions: u64,
     ) -> SimMetrics {
-        let ttft: Vec<f64> = requests.iter().filter_map(|r| r.ttft()).collect();
-        let e2e: Vec<f64> = requests.iter().filter_map(|r| r.e2e_latency()).collect();
-        let qdel: Vec<f64> = requests
-            .iter()
-            .filter_map(|r| r.scheduled_s.map(|s| s - r.arrival_s))
-            .collect();
-        let norm: Vec<f64> = requests
-            .iter()
-            .filter_map(|r| {
-                r.e2e_latency().map(|l| l / r.decode_tokens.max(1) as f64)
-            })
-            .collect();
-        let total_tokens: u64 = requests.iter().map(|r| r.total_tokens()).sum();
-        let n_req = requests.len().max(1) as f64;
-        let ttft_ok = requests
-            .iter()
-            .filter(|r| r.ttft().map(|t| t <= cfg.slo_ttft_s).unwrap_or(false))
-            .count() as f64;
-        let e2e_ok = requests
-            .iter()
-            .filter(|r| {
-                r.e2e_latency().map(|t| t <= cfg.slo_e2e_s).unwrap_or(false)
-            })
-            .count() as f64;
-        let both_ok = requests
-            .iter()
-            .filter(|r| {
-                r.ttft().map(|t| t <= cfg.slo_ttft_s).unwrap_or(false)
-                    && r.e2e_latency().map(|t| t <= cfg.slo_e2e_s).unwrap_or(false)
-            })
-            .count() as f64;
-        let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
-        let mean = |v: &[f64]| {
-            if v.is_empty() {
-                0.0
-            } else {
-                v.iter().sum::<f64>() / v.len() as f64
-            }
-        };
+        let n_req = requests.submitted.max(1) as f64;
         SimMetrics {
             makespan_s,
-            achieved_qps: requests.len() as f64 / makespan_s.max(1e-9),
-            token_throughput: total_tokens as f64 / makespan_s.max(1e-9),
-            ttft_p50_s: pc(&ttft, 50.0),
-            ttft_p99_s: pc(&ttft, 99.0),
-            e2e_p50_s: pc(&e2e, 50.0),
-            e2e_p99_s: pc(&e2e, 99.0),
-            norm_latency_s_per_tok: mean(&norm),
+            achieved_qps: requests.finished as f64 / makespan_s.max(1e-9),
+            token_throughput: requests.tokens_done() as f64 / makespan_s.max(1e-9),
+            ttft_p50_s: requests.ttft_p50_s,
+            ttft_p99_s: requests.ttft_p99_s,
+            e2e_p50_s: requests.e2e_p50_s,
+            e2e_p99_s: requests.e2e_p99_s,
+            norm_latency_s_per_tok: requests.norm_latency_mean_s_per_tok,
             weighted_mfu: stages.weighted_mfu,
             mean_batch_size: stages.mean_batch,
             stage_count: stages.stages,
             preemptions,
-            queue_delay_p50_s: pc(&qdel, 50.0),
-            slo_ttft_attained: ttft_ok / n_req,
-            slo_e2e_attained: e2e_ok / n_req,
-            slo_attained: both_ok / n_req,
+            queue_delay_p50_s: requests.queue_delay_p50_s,
+            slo_ttft_attained: requests.slo_ttft_ok as f64 / n_req,
+            slo_e2e_attained: requests.slo_e2e_ok as f64 / n_req,
+            slo_attained: requests.slo_both_ok as f64 / n_req,
         }
     }
 
@@ -133,21 +102,26 @@ impl SimMetrics {
 mod tests {
     use super::*;
     use crate::config::simconfig::SimConfig;
+    use crate::telemetry::{RequestLog, RequestSink};
+    use crate::workload::Request;
+
+    fn finished(id: u64, arrival: f64, sched: f64, first: f64, fin: f64) -> Request {
+        let mut r = Request::new(id, arrival, 10, 5);
+        r.prefill_done = 10;
+        r.decode_done = 5;
+        r.scheduled_s = Some(sched);
+        r.first_token_s = Some(first);
+        r.finished_s = Some(fin);
+        r
+    }
 
     #[test]
     fn metrics_from_synthetic_requests() {
-        let mut reqs = vec![
-            Request::new(0, 0.0, 10, 5),
-            Request::new(1, 1.0, 10, 5),
-        ];
-        reqs[0].scheduled_s = Some(0.0);
-        reqs[0].first_token_s = Some(0.5);
-        reqs[0].finished_s = Some(1.0);
-        reqs[1].scheduled_s = Some(1.2);
-        reqs[1].first_token_s = Some(2.0);
-        reqs[1].finished_s = Some(3.0);
-        let m =
-            SimMetrics::compute(&SimConfig::default(), &reqs, &StageStats::default(), 3.0, 0);
+        let mut log = RequestLog::new(&SimConfig::default());
+        log.record(&finished(0, 0.0, 0.0, 0.5, 1.0));
+        log.record(&finished(1, 1.0, 1.2, 2.0, 3.0));
+        let stats = log.stats(); // both finished: submitted == finished
+        let m = SimMetrics::compute(&stats, &StageStats::default(), 3.0, 0);
         assert!((m.achieved_qps - 2.0 / 3.0).abs() < 1e-9);
         assert!((m.ttft_p50_s - 0.75).abs() < 1e-9); // median of 0.5 and 1.0
         assert!((m.e2e_p50_s - 1.5).abs() < 1e-9); // median of 1.0 and 2.0
@@ -158,22 +132,35 @@ mod tests {
     }
 
     #[test]
-    fn slo_attainment_fractions() {
+    fn slo_attainment_counts_unfinished_as_misses() {
         let mut cfg = SimConfig::default();
         cfg.slo_ttft_s = 0.8;
         cfg.slo_e2e_s = 2.0;
-        let mut reqs = vec![
-            Request::new(0, 0.0, 10, 5), // ttft 0.5 ok, e2e 1.0 ok
-            Request::new(1, 1.0, 10, 5), // ttft 1.0 miss, e2e 2.0 ok
-            Request::new(2, 2.0, 10, 5), // unfinished: misses both
-        ];
-        reqs[0].first_token_s = Some(0.5);
-        reqs[0].finished_s = Some(1.0);
-        reqs[1].first_token_s = Some(2.0);
-        reqs[1].finished_s = Some(3.0);
-        let m = SimMetrics::compute(&cfg, &reqs, &StageStats::default(), 3.0, 0);
+        let mut log = RequestLog::new(&cfg);
+        // ttft 0.5 ok, e2e 1.0 ok.
+        log.record(&finished(0, 0.0, 0.0, 0.5, 1.0));
+        // ttft 1.0 miss, e2e 2.0 ok.
+        log.record(&finished(1, 1.0, 1.2, 2.0, 3.0));
+        // A third request never finished: the engine stamps it into
+        // the denominator without recording it.
+        let mut stats = log.stats();
+        stats.submitted = 3;
+        let m = SimMetrics::compute(&stats, &StageStats::default(), 3.0, 0);
         assert!((m.slo_ttft_attained - 1.0 / 3.0).abs() < 1e-12);
         assert!((m.slo_e2e_attained - 2.0 / 3.0).abs() < 1e-12);
         assert!((m.slo_attained - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// Satellite fixes: unfinished requests are not throughput, and
+    /// tokens are charged by progress, not budget.
+    #[test]
+    fn throughput_counts_finished_work_only() {
+        let mut log = RequestLog::new(&SimConfig::default());
+        log.record(&finished(0, 0.0, 0.0, 0.5, 1.0)); // 15 tokens done
+        let mut stats = log.stats();
+        stats.submitted = 4; // three more still in flight
+        let m = SimMetrics::compute(&stats, &StageStats::default(), 10.0, 0);
+        assert!((m.achieved_qps - 0.1).abs() < 1e-12, "qps {}", m.achieved_qps);
+        assert!((m.token_throughput - 1.5).abs() < 1e-12);
     }
 }

@@ -1,15 +1,23 @@
 //! Telemetry: per-batch-stage records — the paper's §3.2 modification
 //! of Vidur ("log MFU at the batch stage level instead of replica-wide
 //! averages"), which feeds both the energy accounting (Eq. 2–3) and the
-//! Vessim-side pipeline (Eq. 5).
+//! Vessim-side pipeline (Eq. 5) — plus per-request completion records
+//! feeding the latency/SLO metrics.
 //!
-//! Two consumers behind one [`StageSink`] trait (DESIGN.md §7): the
-//! materialized [`StageLog`] (full record vector; per-stage CSV export)
-//! and the O(bins) [`StreamingSink`] (online Eq. 5 / Eq. 3 folding for
-//! sweeps and long traces).
+//! Each stream has two consumers behind one object-safe trait:
+//!
+//! * stages ([`StageSink`], DESIGN.md §7): the materialized
+//!   [`StageLog`] (full record vector; per-stage CSV export) and the
+//!   O(bins) [`StreamingSink`] (online Eq. 5 / Eq. 3 folding);
+//! * requests ([`RequestSink`], DESIGN.md §8): the materialized
+//!   [`RequestLog`] (full request vector; exact percentiles) and the
+//!   [`StreamingRequestSink`] (online SLO counters, token totals, and
+//!   Greenwald–Khanna latency quantile sketches).
 
+pub mod reqsink;
 pub mod sink;
 pub mod stagelog;
 
+pub use reqsink::{RequestLog, RequestSink, RequestStats, StreamingRequestSink};
 pub use sink::{StageSink, StageStats, StreamingSink};
 pub use stagelog::{StageLog, StageRecord};

@@ -1,0 +1,387 @@
+//! Streaming request telemetry (DESIGN.md §8), mirroring the stage
+//! side's [`crate::telemetry::StageSink`].
+//!
+//! The engine hands every *completed* request to a [`RequestSink`] and
+//! then drops it from its live map — so what the sink keeps is the
+//! run's whole per-request memory. Two implementations:
+//!
+//! * [`RequestLog`] — materialized: retains every request (the
+//!   `SimOutput.requests` vector) and computes exact latency
+//!   percentiles at `stats()` time;
+//! * [`StreamingRequestSink`] — O(sketch): folds each completion into
+//!   SLO counters, token totals, a normalized-latency mean, and
+//!   Greenwald–Khanna [`QuantileSketch`]es for TTFT / e2e /
+//!   queue-delay / normalized latency.
+//!
+//! Parity contract (asserted in `tests/request_telemetry.rs`): counts,
+//! SLO fractions, and token totals are *exact* across sinks — they run
+//! the same folds on the same completion order. Quantiles from the
+//! streaming sink are approximate within the sketch's documented rank
+//! error ε ([`StreamingRequestSink::DEFAULT_EPS`]).
+
+use crate::config::simconfig::SimConfig;
+use crate::util::stats::{percentile, QuantileSketch};
+use crate::workload::Request;
+
+/// Aggregates the metrics layer consumes, regardless of sink kind.
+/// `submitted` is stamped by the engine (sinks only observe
+/// completions; requests still in flight at the end of a run count as
+/// SLO misses against it).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestStats {
+    /// Requests offered to the engine.
+    pub submitted: u64,
+    /// Requests that completed.
+    pub finished: u64,
+    /// Prompt tokens actually prefilled by completed requests.
+    pub prefill_tokens_done: u64,
+    /// Output tokens actually decoded by completed requests.
+    pub decode_tokens_done: u64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+    /// Median queueing delay (arrival → first scheduled).
+    pub queue_delay_p50_s: f64,
+    /// Mean normalized latency (s per output token) — vLLM's metric.
+    pub norm_latency_mean_s_per_tok: f64,
+    /// Completions whose TTFT met the configured SLO.
+    pub slo_ttft_ok: u64,
+    /// Completions whose e2e latency met the configured SLO.
+    pub slo_e2e_ok: u64,
+    /// Completions meeting both SLOs.
+    pub slo_both_ok: u64,
+}
+
+impl RequestStats {
+    /// Tokens actually processed (prefill + decode) by completions.
+    pub fn tokens_done(&self) -> u64 {
+        self.prefill_tokens_done + self.decode_tokens_done
+    }
+}
+
+/// Consumer of the engine's per-request telemetry. Object-safe: the
+/// engine cores take `&mut dyn RequestSink`. Requests arrive in
+/// completion order, which sinks may rely on.
+pub trait RequestSink {
+    /// Accept one completed request (its lifecycle timestamps and
+    /// progress counters are final).
+    fn record(&mut self, r: &Request);
+
+    /// Aggregates for [`crate::sim::SimMetrics`]. Implementations set
+    /// `submitted = finished`; the engine overrides it with the true
+    /// offered count.
+    fn stats(&self) -> RequestStats;
+}
+
+/// Shared per-completion fold: the exact counters both sinks must
+/// agree on (parity is by construction, not by approximation).
+#[derive(Debug, Clone, Copy, Default)]
+struct ExactFold {
+    finished: u64,
+    prefill_tokens_done: u64,
+    decode_tokens_done: u64,
+    slo_ttft_ok: u64,
+    slo_e2e_ok: u64,
+    slo_both_ok: u64,
+    norm_sum: f64,
+    norm_n: u64,
+}
+
+impl ExactFold {
+    fn add(&mut self, r: &Request, slo_ttft_s: f64, slo_e2e_s: f64) {
+        self.finished += 1;
+        self.prefill_tokens_done += r.prefill_done;
+        self.decode_tokens_done += r.decode_done;
+        let ttft_ok = r.ttft().map(|t| t <= slo_ttft_s).unwrap_or(false);
+        let e2e_ok = r.e2e_latency().map(|t| t <= slo_e2e_s).unwrap_or(false);
+        self.slo_ttft_ok += ttft_ok as u64;
+        self.slo_e2e_ok += e2e_ok as u64;
+        self.slo_both_ok += (ttft_ok && e2e_ok) as u64;
+        if let Some(l) = r.e2e_latency() {
+            self.norm_sum += l / r.decode_tokens.max(1) as f64;
+            self.norm_n += 1;
+        }
+    }
+
+    fn norm_mean(&self) -> f64 {
+        if self.norm_n == 0 {
+            0.0
+        } else {
+            self.norm_sum / self.norm_n as f64
+        }
+    }
+}
+
+/// Materialized request sink: keeps every completed request and
+/// answers with exact percentiles.
+#[derive(Debug)]
+pub struct RequestLog {
+    slo_ttft_s: f64,
+    slo_e2e_s: f64,
+    fold: ExactFold,
+    pub requests: Vec<Request>,
+}
+
+impl RequestLog {
+    /// Log judging SLOs against the run configuration's targets.
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self::with_slos(cfg.slo_ttft_s, cfg.slo_e2e_s)
+    }
+
+    pub fn with_slos(slo_ttft_s: f64, slo_e2e_s: f64) -> Self {
+        RequestLog {
+            slo_ttft_s,
+            slo_e2e_s,
+            fold: ExactFold::default(),
+            requests: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// The recorded requests in id (= arrival) order — the vector
+    /// `SimOutput.requests` exposes.
+    pub fn into_requests(mut self) -> Vec<Request> {
+        self.requests.sort_by_key(|r| r.id);
+        self.requests
+    }
+}
+
+impl RequestSink for RequestLog {
+    fn record(&mut self, r: &Request) {
+        self.fold.add(r, self.slo_ttft_s, self.slo_e2e_s);
+        self.requests.push(r.clone());
+    }
+
+    fn stats(&self) -> RequestStats {
+        let ttft: Vec<f64> = self.requests.iter().filter_map(|r| r.ttft()).collect();
+        let e2e: Vec<f64> = self
+            .requests
+            .iter()
+            .filter_map(|r| r.e2e_latency())
+            .collect();
+        let qdel: Vec<f64> = self
+            .requests
+            .iter()
+            .filter_map(|r| r.scheduled_s.map(|s| s - r.arrival_s))
+            .collect();
+        let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+        RequestStats {
+            submitted: self.fold.finished,
+            finished: self.fold.finished,
+            prefill_tokens_done: self.fold.prefill_tokens_done,
+            decode_tokens_done: self.fold.decode_tokens_done,
+            ttft_p50_s: pc(&ttft, 50.0),
+            ttft_p99_s: pc(&ttft, 99.0),
+            e2e_p50_s: pc(&e2e, 50.0),
+            e2e_p99_s: pc(&e2e, 99.0),
+            queue_delay_p50_s: pc(&qdel, 50.0),
+            norm_latency_mean_s_per_tok: self.fold.norm_mean(),
+            slo_ttft_ok: self.fold.slo_ttft_ok,
+            slo_e2e_ok: self.fold.slo_e2e_ok,
+            slo_both_ok: self.fold.slo_both_ok,
+        }
+    }
+}
+
+/// O(sketch) streaming request sink: the same exact fold as
+/// [`RequestLog`] plus Greenwald–Khanna sketches for the latency
+/// distributions — never retaining the requests themselves.
+#[derive(Debug)]
+pub struct StreamingRequestSink {
+    slo_ttft_s: f64,
+    slo_e2e_s: f64,
+    fold: ExactFold,
+    ttft: QuantileSketch,
+    e2e: QuantileSketch,
+    queue_delay: QuantileSketch,
+    norm: QuantileSketch,
+}
+
+impl StreamingRequestSink {
+    /// Default rank error: 0.1% of ranks — at 1M requests the p99 is
+    /// resolved to within ±1000 ranks while the sketch holds a few
+    /// thousand tuples.
+    pub const DEFAULT_EPS: f64 = 1e-3;
+
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self::with_epsilon(cfg, Self::DEFAULT_EPS)
+    }
+
+    pub fn with_epsilon(cfg: &SimConfig, eps: f64) -> Self {
+        StreamingRequestSink {
+            slo_ttft_s: cfg.slo_ttft_s,
+            slo_e2e_s: cfg.slo_e2e_s,
+            fold: ExactFold::default(),
+            ttft: QuantileSketch::new(eps),
+            e2e: QuantileSketch::new(eps),
+            queue_delay: QuantileSketch::new(eps),
+            norm: QuantileSketch::new(eps),
+        }
+    }
+
+    /// The sketches' rank-error parameter ε.
+    pub fn epsilon(&self) -> f64 {
+        self.ttft.epsilon()
+    }
+
+    /// Total resident sketch tuples across the four distributions —
+    /// the sink's whole per-request memory footprint.
+    pub fn resident_tuples(&self) -> usize {
+        self.ttft.resident_tuples()
+            + self.e2e.resident_tuples()
+            + self.queue_delay.resident_tuples()
+            + self.norm.resident_tuples()
+    }
+
+    /// Normalized-latency quantile (s per output token) — beyond the
+    /// mean that [`RequestStats`] carries.
+    pub fn norm_latency_quantile(&self, q: f64) -> Option<f64> {
+        self.norm.quantile(q)
+    }
+
+    /// Queue-delay quantile beyond the p50 in [`RequestStats`].
+    pub fn queue_delay_quantile(&self, q: f64) -> Option<f64> {
+        self.queue_delay.quantile(q)
+    }
+}
+
+impl RequestSink for StreamingRequestSink {
+    fn record(&mut self, r: &Request) {
+        self.fold.add(r, self.slo_ttft_s, self.slo_e2e_s);
+        if let Some(t) = r.ttft() {
+            self.ttft.add(t);
+        }
+        if let Some(l) = r.e2e_latency() {
+            self.e2e.add(l);
+            self.norm.add(l / r.decode_tokens.max(1) as f64);
+        }
+        if let Some(s) = r.scheduled_s {
+            self.queue_delay.add(s - r.arrival_s);
+        }
+    }
+
+    fn stats(&self) -> RequestStats {
+        // One flush per sketch regardless of how many quantiles are
+        // read off it.
+        let ttft = self.ttft.flushed();
+        let e2e = self.e2e.flushed();
+        let qdel = self.queue_delay.flushed();
+        let q = |s: &QuantileSketch, p: f64| s.quantile(p).unwrap_or(0.0);
+        RequestStats {
+            submitted: self.fold.finished,
+            finished: self.fold.finished,
+            prefill_tokens_done: self.fold.prefill_tokens_done,
+            decode_tokens_done: self.fold.decode_tokens_done,
+            ttft_p50_s: q(&ttft, 0.50),
+            ttft_p99_s: q(&ttft, 0.99),
+            e2e_p50_s: q(&e2e, 0.50),
+            e2e_p99_s: q(&e2e, 0.99),
+            queue_delay_p50_s: q(&qdel, 0.50),
+            norm_latency_mean_s_per_tok: self.fold.norm_mean(),
+            slo_ttft_ok: self.fold.slo_ttft_ok,
+            slo_e2e_ok: self.fold.slo_e2e_ok,
+            slo_both_ok: self.fold.slo_both_ok,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished_req(id: u64, arrival: f64, ttft: f64, e2e: f64) -> Request {
+        let mut r = Request::new(id, arrival, 100, 10);
+        r.prefill_done = 100;
+        r.decode_done = 10;
+        r.scheduled_s = Some(arrival + ttft * 0.5);
+        r.first_token_s = Some(arrival + ttft);
+        r.finished_s = Some(arrival + e2e);
+        r
+    }
+
+    /// The exact side of the parity contract: counts, token totals,
+    /// SLO counters, and the normalized-latency mean agree across
+    /// sinks on the same completion stream.
+    #[test]
+    fn sinks_agree_on_exact_aggregates() {
+        let cfg = SimConfig::default();
+        let mut log = RequestLog::new(&cfg);
+        let mut stream = StreamingRequestSink::new(&cfg);
+        for i in 0..500u64 {
+            let r = finished_req(
+                i,
+                i as f64 * 0.1,
+                0.05 + (i % 40) as f64,
+                1.0 + (i % 90) as f64,
+            );
+            log.record(&r);
+            stream.record(&r);
+        }
+        let a = log.stats();
+        let b = stream.stats();
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.prefill_tokens_done, b.prefill_tokens_done);
+        assert_eq!(a.decode_tokens_done, b.decode_tokens_done);
+        assert_eq!(a.slo_ttft_ok, b.slo_ttft_ok);
+        assert_eq!(a.slo_e2e_ok, b.slo_e2e_ok);
+        assert_eq!(a.slo_both_ok, b.slo_both_ok);
+        assert_eq!(
+            a.norm_latency_mean_s_per_tok,
+            b.norm_latency_mean_s_per_tok
+        );
+        assert_eq!(a.tokens_done(), 500 * 110);
+        // Quantiles: approximate, but within the sketch's rank error
+        // (coarse check here; the rank-level assertion lives in
+        // tests/request_telemetry.rs).
+        assert!((a.ttft_p50_s - b.ttft_p50_s).abs() <= 2.0);
+        assert!((a.e2e_p99_s - b.e2e_p99_s).abs() <= 3.0);
+    }
+
+    #[test]
+    fn into_requests_restores_id_order() {
+        let cfg = SimConfig::default();
+        let mut log = RequestLog::new(&cfg);
+        // Completion order ≠ id order.
+        for id in [2u64, 0, 1] {
+            log.record(&finished_req(id, id as f64, 0.5, 2.0));
+        }
+        let reqs = log.into_requests();
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_sinks_report_zeroes() {
+        let cfg = SimConfig::default();
+        let s = StreamingRequestSink::new(&cfg);
+        let st = s.stats();
+        assert_eq!(st.finished, 0);
+        assert_eq!(st.ttft_p99_s, 0.0);
+        assert_eq!(st.norm_latency_mean_s_per_tok, 0.0);
+        assert_eq!(s.resident_tuples(), 0);
+        assert_eq!(RequestLog::new(&cfg).stats(), st);
+    }
+
+    #[test]
+    fn unfinished_requests_count_as_slo_misses() {
+        let cfg = SimConfig::default();
+        let mut stream = StreamingRequestSink::new(&cfg);
+        let mut r = Request::new(0, 0.0, 100, 10);
+        r.scheduled_s = Some(0.5); // scheduled but never finished
+        stream.record(&r);
+        let st = stream.stats();
+        assert_eq!(st.finished, 1);
+        assert_eq!(st.slo_ttft_ok, 0);
+        assert_eq!(st.slo_e2e_ok, 0);
+        assert_eq!(st.slo_both_ok, 0);
+        assert_eq!(st.queue_delay_p50_s, 0.5);
+    }
+}

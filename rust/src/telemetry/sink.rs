@@ -141,6 +141,14 @@ impl StreamingSink {
     pub fn power_model(&self) -> &PowerModel {
         &self.power_model
     }
+
+    /// The running batch-size summary (count/mean/std/extrema) — the
+    /// same accumulator [`StageLog`] keeps, exposed so parity on the
+    /// extrema is testable (they once disagreed through `Summary`'s
+    /// derived `Default`).
+    pub fn batch_summary(&self) -> &Summary {
+        &self.batch_summary
+    }
 }
 
 impl StageSink for StreamingSink {
@@ -253,6 +261,35 @@ mod tests {
         assert_eq!(mat_rep.avg_power_w, str_rep.avg_power_w);
         assert_eq!(mat_rep.peak_power_w, str_rep.peak_power_w);
         assert_eq!(mat_rep.busy_fraction, str_rep.busy_fraction);
+    }
+
+    /// Satellite regression: `StageLog::new()` goes through
+    /// `Self::default()`, which used to hit `Summary`'s derived
+    /// `Default` (`min: 0.0`) — pinning `batch_summary.min()` at 0.0
+    /// even though batch sizes are ≥ 1. Both sinks must now agree on
+    /// the extrema, and the minimum must be a real batch size.
+    #[test]
+    fn sinks_agree_on_batch_extrema() {
+        let cfg = SimConfig::default();
+        let mut log = StageLog::new();
+        let mut stream = StreamingSink::new(&cfg, 10.0).unwrap();
+        for i in 0..50 {
+            let r = rec(i as f64 * 0.5, 0.4, 0.2, 3 + i % 9);
+            log.push(r);
+            stream.record(r);
+        }
+        let a = &log.batch_summary;
+        let b = stream.batch_summary();
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(
+            a.min(),
+            3.0,
+            "min must track the smallest batch, not the old 0.0 default"
+        );
+        assert_eq!(a.max(), 11.0);
     }
 
     #[test]

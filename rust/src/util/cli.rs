@@ -97,7 +97,7 @@ impl Args {
     }
 }
 
-/// Accept "65536", "2^16", "64k".
+/// Accept "65536", "2^16", "64k", "2M".
 pub fn parse_u64_friendly(s: &str) -> Result<u64> {
     let s = s.trim();
     if let Some((base, exp)) = s.split_once('^') {
@@ -107,6 +107,9 @@ pub fn parse_u64_friendly(s: &str) -> Result<u64> {
     }
     if let Some(k) = s.strip_suffix(['k', 'K']) {
         return Ok(k.trim().parse::<u64>()? * 1000);
+    }
+    if let Some(m) = s.strip_suffix(['m', 'M']) {
+        return Ok(m.trim().parse::<u64>()? * 1_000_000);
     }
     Ok(s.parse()?)
 }
@@ -164,6 +167,7 @@ mod tests {
     fn friendly_ints() {
         assert_eq!(parse_u64_friendly("2^16").unwrap(), 65536);
         assert_eq!(parse_u64_friendly("400k").unwrap(), 400_000);
+        assert_eq!(parse_u64_friendly("2M").unwrap(), 2_000_000);
         assert_eq!(parse_u64_friendly("1024").unwrap(), 1024);
     }
 

@@ -1,9 +1,10 @@
 //! Descriptive statistics used by the metrics / report layers:
-//! streaming mean/variance (Welford), exact percentiles, histograms,
-//! and a small linear-regression helper for trend checks in tests.
+//! streaming mean/variance (Welford), exact percentiles, ε-approximate
+//! streaming quantiles (Greenwald–Khanna), histograms, and a small
+//! linear-regression helper for trend checks in tests.
 
 /// Streaming mean / variance / extrema accumulator (Welford's method).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     n: u64,
     mean: f64,
@@ -11,6 +12,16 @@ pub struct Summary {
     min: f64,
     max: f64,
     sum: f64,
+}
+
+impl Default for Summary {
+    /// Identical to [`Summary::new`]. A derived `Default` would zero
+    /// the extrema (`min: 0.0, max: 0.0`), silently pinning `min()` of
+    /// any all-positive stream at 0 — the empty accumulator must start
+    /// at ±∞ so the first `add`/`merge` sets both.
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Summary {
@@ -106,6 +117,230 @@ pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
     v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// One Greenwald–Khanna tuple: a stored sample `v`, the gap `g`
+/// between its minimum rank and the previous tuple's, and the rank
+/// uncertainty `delta` (r_max = r_min + delta).
+#[derive(Debug, Clone, Copy)]
+struct GkEntry {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// ε-approximate streaming quantiles (Greenwald–Khanna, SIGMOD '01).
+///
+/// **Documented rank-error bound:** after `n` inserts, `quantile(q)`
+/// returns a stored sample whose rank in the sorted stream lies within
+/// `⌈εn⌉` of the target rank `q·n`. Space is O((1/ε)·log(εn)) tuples —
+/// independent of `n` for practical purposes — which is what lets the
+/// request-telemetry path keep TTFT/e2e latency distributions for
+/// multi-million-request runs without materializing them.
+///
+/// The structure maintains the GK invariant `g_i + Δ_i ≤ ⌊2εn⌋`
+/// (checked in tests). Inserts are O(1) amortized: samples buffer
+/// until ⌊1/(2ε)⌋ accumulate, then one sorted-merge + compress pass
+/// folds them into the tuple list — never a per-element `Vec::insert`
+/// on the hot path.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    eps: f64,
+    entries: Vec<GkEntry>,
+    /// Samples folded into `entries` (excludes the buffer).
+    n: u64,
+    /// Pending samples, folded in batches of `buffer_cap`.
+    buffer: Vec<f64>,
+    buffer_cap: usize,
+}
+
+impl QuantileSketch {
+    /// Sketch with relative rank error `eps` (0 < eps < 0.5).
+    pub fn new(eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 0.5, "eps must be in (0, 0.5)");
+        let buffer_cap = ((1.0 / (2.0 * eps)).floor() as usize).max(1);
+        QuantileSketch {
+            eps,
+            entries: Vec::new(),
+            n: 0,
+            buffer: Vec::with_capacity(buffer_cap),
+            buffer_cap,
+        }
+    }
+
+    /// The sketch's rank-error parameter ε.
+    pub fn epsilon(&self) -> f64 {
+        self.eps
+    }
+
+    /// Samples inserted so far.
+    pub fn count(&self) -> u64 {
+        self.n + self.buffer.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Resident tuples + buffered samples — the sketch's whole memory
+    /// footprint.
+    pub fn resident_tuples(&self) -> usize {
+        self.entries.len() + self.buffer.len()
+    }
+
+    /// Insert one sample. Non-finite values are rejected (they have no
+    /// rank): the caller feeds latencies/delays, which are finite.
+    pub fn add(&mut self, v: f64) {
+        assert!(v.is_finite(), "QuantileSketch::add({v}): not finite");
+        self.buffer.push(v);
+        if self.buffer.len() >= self.buffer_cap {
+            self.flush();
+        }
+    }
+
+    /// Fold the buffered samples into the tuple list: sort the batch,
+    /// then one merge pass applying the per-sample GK insert rule
+    /// (Δ = ⌊2εn⌋ − 1 interior, 0 at the running extremes), then
+    /// compress.
+    fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.buffer);
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let old = std::mem::take(&mut self.entries);
+        let mut out: Vec<GkEntry> = Vec::with_capacity(old.len() + buf.len());
+        let mut it_old = old.into_iter().peekable();
+        for v in buf {
+            self.n += 1;
+            while let Some(e) = it_old.peek() {
+                if e.v < v {
+                    out.push(it_old.next().expect("peeked"));
+                } else {
+                    break;
+                }
+            }
+            // Position-exact extremes (running min / running max) get
+            // Δ = 0; interior inserts carry the standard uncertainty.
+            let interior = !out.is_empty() && it_old.peek().is_some();
+            let delta = if interior {
+                ((2.0 * self.eps * self.n as f64).floor() as u64).saturating_sub(1)
+            } else {
+                0
+            };
+            out.push(GkEntry { v, g: 1, delta });
+        }
+        out.extend(it_old);
+        self.entries = out;
+        self.compress();
+        self.buffer = Vec::with_capacity(self.buffer_cap);
+    }
+
+    /// Merge mergeable neighbours in one backward pass, preserving the
+    /// stream minimum and maximum tuples.
+    fn compress(&mut self) {
+        if self.entries.len() <= 2 {
+            return;
+        }
+        let cap = (2.0 * self.eps * self.n as f64).floor() as u64;
+        let old = std::mem::take(&mut self.entries);
+        let len = old.len();
+        let mut rev: Vec<GkEntry> = Vec::with_capacity(len);
+        for (k, e) in old.into_iter().rev().enumerate() {
+            // k == 0 is the maximum, k == len-1 the minimum: keep both.
+            if k == 0 || k == len - 1 {
+                rev.push(e);
+                continue;
+            }
+            let nxt = rev.last_mut().expect("max pushed first");
+            if e.g + nxt.g + nxt.delta <= cap {
+                nxt.g += e.g; // fold e into its right neighbour
+            } else {
+                rev.push(e);
+            }
+        }
+        rev.reverse();
+        self.entries = rev;
+    }
+
+    /// A query-ready view: the sketch itself when nothing is buffered,
+    /// otherwise a flushed clone — so a caller issuing several
+    /// `quantile` queries (e.g. a `stats()` fold) pays for one flush,
+    /// not one per query.
+    pub fn flushed(&self) -> std::borrow::Cow<'_, QuantileSketch> {
+        if self.buffer.is_empty() {
+            std::borrow::Cow::Borrowed(self)
+        } else {
+            let mut c = self.clone();
+            c.flush();
+            std::borrow::Cow::Owned(c)
+        }
+    }
+
+    /// The quantile `q` ∈ [0, 1]: a stored sample whose rank is within
+    /// `⌈εn⌉` of `q·n`. `None` on an empty sketch. The extremes are
+    /// exact: `quantile(0.0)` is the stream minimum, `quantile(1.0)`
+    /// the maximum (both tuples survive compression untouched).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if !self.buffer.is_empty() {
+            return self.flushed().quantile(q);
+        }
+        if self.entries.is_empty() {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q == 0.0 {
+            return Some(self.entries[0].v);
+        }
+        if q == 1.0 {
+            return Some(self.entries[self.entries.len() - 1].v);
+        }
+        let target = q * self.n as f64;
+        let bound = (self.eps * self.n as f64).ceil();
+        let mut rmin = 0u64;
+        let mut best = self.entries[0].v;
+        let mut best_err = f64::INFINITY;
+        for e in &self.entries {
+            rmin += e.g;
+            let rmax = rmin + e.delta;
+            if rmin as f64 >= target - bound && rmax as f64 <= target + bound {
+                return Some(e.v);
+            }
+            // Fallback for tiny n (bound < 1): closest rank midpoint.
+            let err = ((rmin + rmax) as f64 / 2.0 - target).abs();
+            if err < best_err {
+                best_err = err;
+                best = e.v;
+            }
+        }
+        Some(best)
+    }
+
+    /// Percentile convenience (`p` ∈ [0, 100]), mirroring [`percentile`].
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        self.quantile(p / 100.0)
+    }
+
+    #[cfg(test)]
+    fn check_invariant(&self) {
+        let mut s = self.clone();
+        s.flush();
+        let cap = (2.0 * s.eps * s.n as f64).floor() as u64;
+        let mut total = 0u64;
+        for (i, e) in s.entries.iter().enumerate() {
+            total += e.g;
+            assert!(
+                e.g + e.delta <= cap.max(1),
+                "GK invariant violated at tuple {i}: g={} delta={} cap={cap}",
+                e.g,
+                e.delta
+            );
+            if i > 0 {
+                assert!(s.entries[i - 1].v <= e.v, "entries unsorted");
+            }
+        }
+        assert_eq!(total, s.n, "g's must sum to n");
+    }
 }
 
 /// Fixed-width histogram.
@@ -208,6 +443,60 @@ mod tests {
         assert!((a.var() - all.var()).abs() < 1e-9);
     }
 
+    /// Satellite regression: the derived `Default` used to zero the
+    /// extrema, so `Summary::default().min()` was pinned at 0.0 for
+    /// all-positive streams. `default()` must now be `new()` exactly,
+    /// under any interleaving of `add` and `merge`.
+    #[test]
+    fn summary_default_equals_new_under_add_and_merge() {
+        use crate::util::proptest::{check, gens};
+        check(60, gens::vec_f64(64, 0.5, 100.0), |xs| {
+            let mut via_new = Summary::new();
+            let mut via_default = Summary::default();
+            // Exercise merge too: fold halves through defaulted accs.
+            let mid = xs.len() / 2;
+            let mut left = Summary::default();
+            let mut right = Summary::default();
+            for (i, x) in xs.iter().enumerate() {
+                via_new.add(*x);
+                via_default.add(*x);
+                if i < mid {
+                    left.add(*x);
+                } else {
+                    right.add(*x);
+                }
+            }
+            left.merge(&right);
+            for (name, s) in [("add", &via_default), ("merge", &left)] {
+                if s.count() != via_new.count()
+                    || s.min() != via_new.min()
+                    || s.max() != via_new.max()
+                    || (s.mean() - via_new.mean()).abs() > 1e-9
+                    || (s.var() - via_new.var()).abs() > 1e-6
+                {
+                    return Err(format!(
+                        "default-{name} diverged from new: {s:?} vs {via_new:?}"
+                    ));
+                }
+                if !xs.is_empty() && s.min() <= 0.0 {
+                    return Err(format!(
+                        "min pinned at {} for positive stream (the old derive bug)",
+                        s.min()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_summary_extrema_are_infinite() {
+        let d = Summary::default();
+        assert_eq!(d.min(), f64::INFINITY);
+        assert_eq!(d.max(), f64::NEG_INFINITY);
+        assert_eq!(d.count(), 0);
+    }
+
     #[test]
     fn percentile_interpolates() {
         let xs = [1.0, 2.0, 3.0, 4.0];
@@ -220,6 +509,90 @@ mod tests {
     #[test]
     fn percentile_single_element() {
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    /// The sketch's whole contract: on adversarial input orders the
+    /// reported quantile's true rank stays within ⌈εn⌉ (+1 slack for
+    /// the interpolation-free answer) of the target rank.
+    #[test]
+    fn quantile_sketch_rank_error_bounded_on_adversarial_inputs() {
+        let eps = 0.01;
+        let n = 20_000usize;
+        let streams: Vec<(&str, Vec<f64>)> = vec![
+            ("ascending", (0..n).map(|i| i as f64).collect()),
+            ("descending", (0..n).map(|i| (n - i) as f64).collect()),
+            ("constant", vec![42.0; n]),
+            (
+                "sawtooth",
+                (0..n).map(|i| (i % 97) as f64 * 3.5).collect(),
+            ),
+            (
+                "two-spikes",
+                (0..n)
+                    .map(|i| if i % 2 == 0 { 1.0 } else { 1e6 })
+                    .collect(),
+            ),
+            (
+                "zipf-ish tail",
+                (0..n).map(|i| 1.0 / (1.0 + (i % 513) as f64)).collect(),
+            ),
+        ];
+        for (name, xs) in &streams {
+            let mut sk = QuantileSketch::new(eps);
+            for &x in xs {
+                sk.add(x);
+            }
+            sk.check_invariant();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let slack = (eps * n as f64).ceil() + 1.0;
+            for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                let v = sk.quantile(q).unwrap();
+                // True rank interval of v in the sorted stream.
+                let rank_lo = sorted.partition_point(|&x| x < v) as f64;
+                let rank_hi = sorted.partition_point(|&x| x <= v) as f64;
+                let target = q * n as f64;
+                assert!(
+                    rank_hi >= target - slack && rank_lo <= target + slack,
+                    "{name} q={q}: value {v} has rank [{rank_lo}, {rank_hi}], \
+                     target {target} ± {slack}"
+                );
+            }
+            // Space stays sublinear: the memory claim behind streaming
+            // request telemetry.
+            assert!(
+                sk.resident_tuples() < n / 4,
+                "{name}: sketch kept {} of {n} samples",
+                sk.resident_tuples()
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_sketch_small_n_is_exact() {
+        let mut sk = QuantileSketch::new(0.01);
+        assert_eq!(sk.quantile(0.5), None);
+        for x in [5.0, 1.0, 3.0] {
+            sk.add(x);
+        }
+        assert_eq!(sk.quantile(0.0), Some(1.0));
+        assert_eq!(sk.quantile(1.0), Some(5.0));
+        // Target rank 1.5, bound ⌈εn⌉ = 1: ranks 1 and 2 both satisfy
+        // the contract.
+        let med = sk.quantile(0.5).unwrap();
+        assert!(med == 1.0 || med == 3.0, "median {med}");
+        assert_eq!(sk.count(), 3);
+        assert_eq!(sk.percentile(100.0), Some(5.0));
+    }
+
+    #[test]
+    fn quantile_sketch_extremes_survive_compression() {
+        let mut sk = QuantileSketch::new(0.05);
+        for i in 0..10_000 {
+            sk.add((i % 1000) as f64);
+        }
+        assert_eq!(sk.quantile(0.0), Some(0.0));
+        assert_eq!(sk.quantile(1.0), Some(999.0));
     }
 
     #[test]

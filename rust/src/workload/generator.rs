@@ -6,6 +6,7 @@
 use crate::config::simconfig::{Arrival, LengthDist, SimConfig};
 use crate::util::rng::{Rng, Zipf};
 use crate::workload::request::Request;
+use crate::workload::store::RequestSource;
 
 /// Default prefill fraction when no P:D ratio is given: LLM chat
 /// workloads are prompt-heavy; Vidur's default traces use roughly
@@ -97,6 +98,36 @@ impl WorkloadGenerator {
     /// Generate a full workload of `n` requests (sorted by arrival).
     pub fn generate(&mut self, n: u64) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Turn the generator into a pull-based [`RequestSource`] capped at
+    /// `n` requests: the engine draws arrivals one at a time, so the
+    /// workload is never materialized — the lazy front of the
+    /// streaming-telemetry pipeline (DESIGN.md §8). Yields exactly the
+    /// same request stream as [`Self::generate`] on the same seed
+    /// (arrival clocks are monotone, ids sequential).
+    pub fn take(self, n: u64) -> LazyWorkload {
+        LazyWorkload {
+            gen: self,
+            remaining: n,
+        }
+    }
+}
+
+/// A capped, pull-based view over a [`WorkloadGenerator`]: O(1) memory
+/// regardless of request count.
+pub struct LazyWorkload {
+    gen: WorkloadGenerator,
+    remaining: u64,
+}
+
+impl RequestSource for LazyWorkload {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(self.gen.next_request())
     }
 }
 
@@ -203,6 +234,23 @@ mod tests {
         for r in g.generate(500) {
             assert!(r.total_tokens() <= 4096);
         }
+    }
+
+    #[test]
+    fn lazy_take_matches_generate() {
+        let materialized = gen(6.45, 99).generate(200);
+        let mut lazy = gen(6.45, 99).take(200);
+        let mut n = 0;
+        while let Some(r) = lazy.next_request() {
+            let m = &materialized[n];
+            assert_eq!(r.id, m.id);
+            assert_eq!(r.arrival_s, m.arrival_s);
+            assert_eq!(r.prefill_tokens, m.prefill_tokens);
+            assert_eq!(r.decode_tokens, m.decode_tokens);
+            n += 1;
+        }
+        assert_eq!(n, 200);
+        assert!(lazy.next_request().is_none(), "source must stay exhausted");
     }
 
     #[test]

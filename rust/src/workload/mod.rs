@@ -1,10 +1,13 @@
 //! Workload layer: requests, arrival processes, length distributions,
-//! trace export/replay — the Vidur-side request generators.
+//! trace export/replay, and the pull-based request plumbing the engine
+//! streams from — the Vidur-side request generators.
 
 pub mod request;
 pub mod generator;
+pub mod store;
 pub mod trace;
 
-pub use generator::WorkloadGenerator;
+pub use generator::{LazyWorkload, WorkloadGenerator};
 pub use request::{Request, RequestId};
-pub use trace::Trace;
+pub use store::{LiveRequests, RequestSource, RequestStore};
+pub use trace::{Trace, TraceSource};

@@ -1,0 +1,177 @@
+//! Request storage the scheduler and engine operate over.
+//!
+//! The schedulers address requests by id. Historically that storage
+//! was a `Vec<Request>` holding the *entire* workload (O(requests)
+//! resident for the whole run). [`RequestStore`] abstracts the id →
+//! request lookup so the engine can instead keep a [`LiveRequests`]
+//! map of only the outstanding requests — entries are inserted when
+//! the arrival event fires and dropped the moment the request
+//! completes and has been handed to the request sink
+//! ([`crate::telemetry::RequestSink`]). A multi-million-request run
+//! then holds O(outstanding) request state, not O(requests)
+//! (DESIGN.md §8).
+
+use crate::workload::request::Request;
+use std::collections::HashMap;
+
+/// Mutable id-addressed request storage.
+///
+/// Implemented by `[Request]` / `Vec<Request>` (tests and materialized
+/// traces, where `id` indexes the vector) and by [`LiveRequests`] (the
+/// engine's compact map of outstanding requests). Lookups panic on an
+/// unknown id: the schedulers only hold ids they were handed, so a
+/// miss is always an engine-side lifecycle bug.
+pub trait RequestStore {
+    fn req(&self, id: u64) -> &Request;
+    fn req_mut(&mut self, id: u64) -> &mut Request;
+}
+
+impl RequestStore for [Request] {
+    fn req(&self, id: u64) -> &Request {
+        &self[id as usize]
+    }
+    fn req_mut(&mut self, id: u64) -> &mut Request {
+        &mut self[id as usize]
+    }
+}
+
+impl RequestStore for Vec<Request> {
+    fn req(&self, id: u64) -> &Request {
+        &self[id as usize]
+    }
+    fn req_mut(&mut self, id: u64) -> &mut Request {
+        &mut self[id as usize]
+    }
+}
+
+/// Multiplicative hasher for the dense sequential request ids — the
+/// live map sits on the scheduler's per-stage lookup path, where the
+/// default SipHash would cost tens of millions of needless hash
+/// rounds per multi-million-request run. One Fibonacci multiply
+/// spreads sequential keys across buckets.
+#[derive(Clone, Copy, Default)]
+pub struct IdHasher(u64);
+
+impl std::hash::Hasher for IdHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        // Only u64 request ids are ever hashed; this path is for
+        // completeness.
+        for &b in bytes {
+            self.0 = self.0.rotate_left(8) ^ u64::from(b);
+        }
+        self.0 = self.0.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+type IdMap = HashMap<u64, Request, std::hash::BuildHasherDefault<IdHasher>>;
+
+/// The outstanding-request map: holds each request from its arrival
+/// event until completion, then drops it. Tracks the peak resident
+/// count — the engine's whole per-request memory footprint, asserted
+/// O(outstanding) in `tests/request_telemetry.rs`.
+#[derive(Debug, Default)]
+pub struct LiveRequests {
+    map: IdMap,
+    peak: usize,
+}
+
+impl LiveRequests {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit an arriving request. Ids must be unique while live.
+    pub fn insert(&mut self, r: Request) {
+        let prev = self.map.insert(r.id, r);
+        debug_assert!(prev.is_none(), "duplicate live request id");
+        self.peak = self.peak.max(self.map.len());
+    }
+
+    /// Retire a completed request, returning it for the sink.
+    pub fn remove(&mut self, id: u64) -> Request {
+        self.map
+            .remove(&id)
+            .unwrap_or_else(|| panic!("request {id} not live"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// High-water mark of concurrently live requests.
+    pub fn peak_resident(&self) -> usize {
+        self.peak
+    }
+}
+
+impl RequestStore for LiveRequests {
+    fn req(&self, id: u64) -> &Request {
+        self.map
+            .get(&id)
+            .unwrap_or_else(|| panic!("request {id} not live"))
+    }
+    fn req_mut(&mut self, id: u64) -> &mut Request {
+        self.map
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("request {id} not live"))
+    }
+}
+
+/// Pull-based arrival stream: yields requests one at a time in
+/// nondecreasing `arrival_s` order, so the engine keeps exactly one
+/// pending-arrival event in its heap instead of pre-pushing the whole
+/// workload. Implemented by [`crate::workload::trace::TraceSource`]
+/// (materialized traces) and [`crate::workload::generator::LazyWorkload`]
+/// (on-the-fly generation, the O(1)-memory front of the pipeline).
+pub trait RequestSource {
+    /// The next request, or `None` when the workload is exhausted.
+    /// Arrival times must be nondecreasing and ids unique.
+    fn next_request(&mut self) -> Option<Request>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_map_tracks_peak_and_drops_finished() {
+        let mut live = LiveRequests::new();
+        for i in 0..4u64 {
+            live.insert(Request::new(i, i as f64, 10, 5));
+        }
+        assert_eq!(live.len(), 4);
+        live.remove(1);
+        live.remove(3);
+        assert_eq!(live.len(), 2);
+        assert_eq!(live.peak_resident(), 4);
+        live.insert(Request::new(9, 9.0, 10, 5));
+        assert_eq!(live.peak_resident(), 4);
+        assert_eq!(live.req(9).id, 9);
+        live.req_mut(0).prefill_done = 3;
+        assert_eq!(live.req(0).prefill_done, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "not live")]
+    fn removing_unknown_id_panics() {
+        LiveRequests::new().remove(7);
+    }
+
+    #[test]
+    fn slice_store_indexes_by_id() {
+        let mut v = vec![Request::new(0, 0.0, 5, 5), Request::new(1, 1.0, 5, 5)];
+        assert_eq!(v.req(1).id, 1);
+        v.req_mut(0).decode_done = 2;
+        assert_eq!(v[0].decode_done, 2);
+    }
+}

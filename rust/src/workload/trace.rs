@@ -4,6 +4,7 @@
 
 use crate::util::csv::Table;
 use crate::workload::request::Request;
+use crate::workload::store::RequestSource;
 use anyhow::Result;
 use std::path::Path;
 
@@ -50,6 +51,18 @@ impl Trace {
         t.save(path)
     }
 
+    /// Consume the trace into a pull-based [`RequestSource`]: requests
+    /// sorted by arrival with ids reassigned to 0..n (the engine's
+    /// historical indexing contract), yielded one at a time.
+    pub fn into_source(mut self) -> TraceSource {
+        self.requests
+            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        TraceSource {
+            iter: self.requests.into_iter(),
+            next_id: 0,
+        }
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
         let t = Table::load(path)?;
         let ids = t.f64_col("id")?;
@@ -65,6 +78,22 @@ impl Trace {
             .collect();
         requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
         Ok(Trace { requests })
+    }
+}
+
+/// Arrival-ordered pull source over a materialized [`Trace`] (see
+/// [`Trace::into_source`]).
+pub struct TraceSource {
+    iter: std::vec::IntoIter<Request>,
+    next_id: u64,
+}
+
+impl RequestSource for TraceSource {
+    fn next_request(&mut self) -> Option<Request> {
+        let mut r = self.iter.next()?;
+        r.id = self.next_id;
+        self.next_id += 1;
+        Some(r)
     }
 }
 
@@ -96,6 +125,21 @@ mod tests {
             assert_eq!(a.decode_tokens, b.decode_tokens);
         }
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn into_source_sorts_and_reassigns_ids() {
+        let tr = Trace::new(vec![
+            Request::new(7, 4.0, 20, 5),
+            Request::new(3, 1.0, 10, 5),
+            Request::new(9, 2.5, 15, 5),
+        ]);
+        let mut src = tr.into_source();
+        let mut got = Vec::new();
+        while let Some(r) = src.next_request() {
+            got.push((r.id, r.arrival_s));
+        }
+        assert_eq!(got, vec![(0, 1.0), (1, 2.5), (2, 4.0)]);
     }
 
     #[test]

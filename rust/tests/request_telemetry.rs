@@ -1,0 +1,263 @@
+//! Streaming request telemetry: parity, determinism, and the memory
+//! claim (DESIGN.md §8).
+//!
+//! * Parity: the streaming request path (lazy arrivals + sketch sink)
+//!   must match the materialized path *exactly* on everything that is
+//!   a count or a sum — finished/submitted, token totals, SLO
+//!   fractions, throughput — because both run the same fold in the
+//!   same completion order. Latency quantiles are approximate, but
+//!   only within the sketch's documented rank-error bound ε.
+//! * Determinism: `--jobs 1` and `--jobs 8` sweeps produce identical
+//!   request metrics (the sinks are per-case state).
+//! * Memory: a 1M-request run holds O(outstanding + bins) resident
+//!   state — live map, sketch tuples, and bins all ≪ the request count.
+
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, LengthDist, SimConfig};
+use vidur_energy::exec::batch::{BatchDesc, StageCost};
+use vidur_energy::exec::StageCostModel;
+use vidur_energy::experiments::common::run_cases_on;
+use vidur_energy::sim;
+use vidur_energy::sweep::SweepExecutor;
+use vidur_energy::telemetry::{StreamingRequestSink, StreamingSink};
+use vidur_energy::util::rng::case_seed;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 500;
+    cfg.arrival = Arrival::Poisson { qps: 12.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 768,
+    };
+    cfg.seed = 0x9E57;
+    cfg
+}
+
+fn trace_for(cfg: &SimConfig) -> Trace {
+    let mut gen = WorkloadGenerator::from_config(cfg);
+    Trace::new(gen.generate(cfg.num_requests))
+}
+
+/// Assert `v`'s true rank in `sorted` lies within ⌈εn⌉ (+1 slack for
+/// the materialized side's order-statistic interpolation) of `q·n`.
+fn assert_rank_bounded(sorted: &[f64], v: f64, q: f64, eps: f64, what: &str) {
+    let n = sorted.len() as f64;
+    let rank_lo = sorted.partition_point(|&x| x < v) as f64;
+    let rank_hi = sorted.partition_point(|&x| x <= v) as f64;
+    let target = q * n;
+    let slack = (eps * n).ceil() + 1.0;
+    assert!(
+        rank_hi >= target - slack && rank_lo <= target + slack,
+        "{what}: sketch value {v} has rank [{rank_lo}, {rank_hi}], \
+         target {target} ± {slack} (n={n})"
+    );
+}
+
+#[test]
+fn streaming_request_metrics_match_materialized() {
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    let trace = trace_for(&cfg);
+
+    // Materialized: full request vector, exact percentiles.
+    let mat = sim::run_with_trace(&cfg, trace.clone()).unwrap();
+
+    // Streaming: lazy arrivals, sketch-based request sink.
+    let mut stage_sink = StreamingSink::new(&cfg, 10.0).unwrap();
+    let cost = vidur_energy::exec::build_cost_model(&cfg).unwrap();
+    let run = sim::run_with_sink(&cfg, trace, cost, &mut stage_sink).unwrap();
+
+    // Identical simulation schedule.
+    assert_eq!(mat.metrics.makespan_s, run.metrics.makespan_s);
+    assert_eq!(mat.metrics.stage_count, run.metrics.stage_count);
+
+    // Exact request-side parity: counts, throughput, token totals,
+    // SLO fractions, normalized-latency mean.
+    assert_eq!(run.request_stats.submitted, cfg.num_requests);
+    assert_eq!(run.request_stats.finished, cfg.num_requests);
+    assert_eq!(mat.metrics.achieved_qps, run.metrics.achieved_qps);
+    assert_eq!(mat.metrics.token_throughput, run.metrics.token_throughput);
+    assert_eq!(mat.metrics.slo_ttft_attained, run.metrics.slo_ttft_attained);
+    assert_eq!(mat.metrics.slo_e2e_attained, run.metrics.slo_e2e_attained);
+    assert_eq!(mat.metrics.slo_attained, run.metrics.slo_attained);
+    assert_eq!(
+        mat.metrics.norm_latency_s_per_tok,
+        run.metrics.norm_latency_s_per_tok
+    );
+
+    // Quantile parity within the sketch's rank-error bound, checked
+    // against the materialized samples.
+    let eps = StreamingRequestSink::DEFAULT_EPS;
+    let mut ttft: Vec<f64> = mat.requests.iter().filter_map(|r| r.ttft()).collect();
+    let mut e2e: Vec<f64> = mat
+        .requests
+        .iter()
+        .filter_map(|r| r.e2e_latency())
+        .collect();
+    let mut qdel: Vec<f64> = mat
+        .requests
+        .iter()
+        .filter_map(|r| r.scheduled_s.map(|s| s - r.arrival_s))
+        .collect();
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qdel.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_rank_bounded(&ttft, run.metrics.ttft_p50_s, 0.50, eps, "ttft p50");
+    assert_rank_bounded(&ttft, run.metrics.ttft_p99_s, 0.99, eps, "ttft p99");
+    assert_rank_bounded(&e2e, run.metrics.e2e_p50_s, 0.50, eps, "e2e p50");
+    assert_rank_bounded(&e2e, run.metrics.e2e_p99_s, 0.99, eps, "e2e p99");
+    assert_rank_bounded(
+        &qdel,
+        run.metrics.queue_delay_p50_s,
+        0.50,
+        eps,
+        "queue delay p50",
+    );
+}
+
+/// The same parity on an autoscaled run: the dynamic-fleet core feeds
+/// the identical completion stream to the request sink.
+#[test]
+fn streaming_request_metrics_match_materialized_autoscaled() {
+    use vidur_energy::autoscale::GridEnv;
+    use vidur_energy::config::simconfig::{AutoscaleConfig, ScalingPolicyKind};
+
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    cfg.batch_cap = 16;
+    let trace = trace_for(&cfg);
+    let mut scale = AutoscaleConfig::default();
+    scale.policy = ScalingPolicyKind::Reactive;
+    scale.min_replicas = 1;
+    scale.max_replicas = 4;
+    scale.decision_interval_s = 10.0;
+    scale.cold_start_s = 5.0;
+    scale.queue_high = 4.0;
+
+    let grid = GridEnv::constant(150.0, 0.0);
+    let mat = sim::run_autoscaled(&cfg, &scale, &grid, trace.clone()).unwrap();
+    let mut stage_sink = StreamingSink::new(&cfg, 10.0).unwrap();
+    let run = sim::run_autoscaled_streaming(
+        &cfg,
+        &scale,
+        &GridEnv::constant(150.0, 0.0),
+        trace,
+        &mut stage_sink,
+    )
+    .unwrap();
+
+    assert_eq!(mat.sim.metrics.makespan_s, run.sim.metrics.makespan_s);
+    assert_eq!(run.sim.request_stats.finished, cfg.num_requests);
+    assert_eq!(mat.sim.metrics.achieved_qps, run.sim.metrics.achieved_qps);
+    assert_eq!(
+        mat.sim.metrics.token_throughput,
+        run.sim.metrics.token_throughput
+    );
+    assert_eq!(mat.sim.metrics.slo_attained, run.sim.metrics.slo_attained);
+    assert_eq!(mat.timeline.events.len(), run.timeline.events.len());
+    assert_eq!(mat.decisions.len(), run.decisions.len());
+}
+
+/// Request metrics are byte-identical across sweep worker counts —
+/// each case owns its sinks, so parallelism can't perturb them.
+#[test]
+fn request_metrics_identical_across_jobs() {
+    let grid: Vec<SimConfig> = (0..6)
+        .map(|i| {
+            let mut cfg = base_cfg();
+            cfg.num_requests = 96;
+            cfg.arrival = Arrival::Poisson {
+                qps: 2.0 + 3.0 * (i % 3) as f64,
+            };
+            cfg.seed = case_seed(0x9E, i as u64);
+            cfg
+        })
+        .collect();
+    let serial = run_cases_on(&SweepExecutor::new(1), grid.clone()).unwrap();
+    let par = run_cases_on(&SweepExecutor::new(8), grid).unwrap();
+    for (a, b) in serial.iter().zip(&par) {
+        assert_eq!(a.out.request_stats, b.out.request_stats);
+        assert_eq!(a.out.peak_live_requests, b.out.peak_live_requests);
+        assert_eq!(a.out.metrics.ttft_p99_s, b.out.metrics.ttft_p99_s);
+        assert_eq!(a.out.metrics.e2e_p50_s, b.out.metrics.e2e_p50_s);
+        assert_eq!(
+            a.out.metrics.queue_delay_p50_s,
+            b.out.metrics.queue_delay_p50_s
+        );
+    }
+}
+
+/// Constant-time oracle so the 1M-request run prices stages without
+/// the roofline model (this test is about memory, not physics).
+struct FlatCost;
+impl StageCostModel for FlatCost {
+    fn stage_cost(&mut self, b: &BatchDesc) -> StageCost {
+        StageCost {
+            t_stage_s: 0.01,
+            flops: b.total_new_tokens() as f64 * 1e9,
+            mfu: 0.2,
+            power_w: 250.0,
+        }
+    }
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+}
+
+/// The acceptance criterion: a 1M+-request run completes with
+/// O(outstanding + bins) resident state — the live map, the latency
+/// sketches, and the stage bins all stay orders of magnitude below the
+/// request count.
+#[test]
+fn million_request_run_is_o_outstanding_plus_bins() {
+    const N: u64 = 1_000_000;
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native; // engine never builds it: FlatCost injected
+    cfg.num_requests = N;
+    cfg.arrival = Arrival::Poisson { qps: 5000.0 };
+    cfg.lengths = LengthDist::Fixed { total: 8 };
+    cfg.seed = 0x1A96E;
+
+    let mut source = WorkloadGenerator::from_config(&cfg).take(N);
+    let mut stage_sink = StreamingSink::new(&cfg, 60.0).unwrap();
+    let mut req_sink = StreamingRequestSink::new(&cfg);
+    let run = sim::run_with_sinks(
+        &cfg,
+        &mut source,
+        Box::new(FlatCost),
+        &mut stage_sink,
+        &mut req_sink,
+    )
+    .unwrap();
+
+    assert_eq!(run.request_stats.submitted, N);
+    assert_eq!(run.request_stats.finished, N);
+    assert_eq!(run.request_stats.tokens_done(), N * 8);
+
+    // O(outstanding): the live map never approached the request count.
+    assert!(
+        run.peak_live_requests < 50_000,
+        "live map peaked at {} of {N} requests",
+        run.peak_live_requests
+    );
+    // O(sketch): four sketches, each ≪ n tuples.
+    assert!(
+        req_sink.resident_tuples() < 200_000,
+        "sketches hold {} tuples for {N} requests",
+        req_sink.resident_tuples()
+    );
+    // O(bins): the stage sink folded everything into the horizon bins.
+    let horizon_bins = (run.metrics.makespan_s / 60.0) as usize + 2;
+    assert!(
+        stage_sink.peak_resident_bins() <= horizon_bins,
+        "bins {} > horizon {horizon_bins}",
+        stage_sink.peak_resident_bins()
+    );
+
+    // The latency distribution is still readable off the sketches.
+    assert!(run.metrics.ttft_p50_s > 0.0);
+    assert!(run.metrics.e2e_p99_s >= run.metrics.e2e_p50_s);
+}
