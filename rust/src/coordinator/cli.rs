@@ -5,11 +5,14 @@
 //!   cosim       — full Vidur→Vessim case-study pipeline
 //!   autoscale   — sweep fleet-scaling policies over a day of grid signals
 //!   experiment  — regenerate a paper table/figure (or `all`)
+//!   merge       — recombine sharded sweep outputs (DESIGN.md §9)
 //!   multiregion — carbon-aware multi-region routing exploration
 //!   policy      — model-size vs grid-condition policy exploration
 //!   config      — show the default (Table 1) configuration
 //!   report      — assemble results/ into one markdown report
 //!   trace       — generate and save a workload trace CSV
+//!
+//! The full flag-by-flag reference lives in `docs/CLI.md`.
 
 use crate::config::simconfig::{Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig};
 use crate::coordinator::{multiregion, policy};
@@ -32,12 +35,16 @@ subcommands:
   simulate     run one inference simulation
   cosim        run the Vidur→Vessim integration case study
   autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
-  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all (--jobs N sweeps cases in parallel)
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all
+               (--jobs N sweeps cases in parallel; --shard k/N splits the grid across machines)
+  merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
   multiregion  carbon-aware multi-region routing exploration
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
   report       assemble results/ into a markdown report
   trace        generate a workload trace CSV
+
+see docs/CLI.md for every flag of every subcommand
 ";
 
 /// Entry point used by main.rs.
@@ -55,6 +62,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "cosim" => cmd_cosim(&args),
         "autoscale" => cmd_autoscale(&args),
         "experiment" => cmd_experiment(&args),
+        "merge" => cmd_merge(&args),
         "multiregion" => multiregion::cmd(&args),
         "policy" => policy::cmd(&args),
         "config" => cmd_config(),
@@ -108,7 +116,7 @@ fn sim_opts() -> Vec<OptSpec> {
         OptSpec { name: "tp", help: "tensor parallelism", default: Some("1") },
         OptSpec { name: "pp", help: "pipeline parallelism", default: Some("1") },
         OptSpec { name: "replicas", help: "replica count", default: Some("1") },
-        OptSpec { name: "requests", help: "request count (supports 2^16, 400k)", default: Some("1024") },
+        OptSpec { name: "requests", help: "request count (supports 2^16, 400k, 2M)", default: Some("1024") },
         OptSpec { name: "qps", help: "Poisson arrival rate", default: Some("6.45") },
         OptSpec { name: "batch-cap", help: "max batch size", default: Some("128") },
         OptSpec { name: "fixed-len", help: "fixed total tokens per request", default: None },
@@ -189,11 +197,13 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
             "repro autoscale — sweep fleet-scaling policies over a day of grid signals\n\n\
              options:\n  --out <dir>   results directory (default: results)\n  \
              --jobs <n>    sweep worker threads (default: all cores)\n  \
+             --shard <k/N> run only policies k, k+N, … of the sweep (merge with `repro merge`)\n  \
              --fast        compressed evening-window scenario"
         );
         return Ok(());
     }
     apply_jobs(args)?;
+    apply_shard(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
     // The save() call already printed the markdown table; surface the
@@ -223,19 +233,67 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.first() else {
         bail!(
-            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|all> \
-             [--out results] [--fast] [--jobs N]"
+            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|all> \
+             [--out results] [--fast] [--jobs N] [--shard k/N]"
         );
     };
     apply_jobs(args)?;
+    apply_shard(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     experiments::run_by_id(id, &out_dir, args.has("fast"))
+}
+
+/// Recombine sharded sweep outputs (DESIGN.md §9): interleave shard
+/// CSV rows back into case order (byte-identical to an unsharded run),
+/// merge telemetry sidecars (exact counters summed, latency sketches
+/// GK-merged) and `meta.json` sweep stats (sum/max per field).
+fn cmd_merge(args: &Args) -> Result<()> {
+    if args.has("help") || args.positional.is_empty() {
+        println!(
+            "repro merge — recombine sharded sweep outputs into one results tree\n\n\
+             usage: repro merge <shard-dir>... [--out <dir>]\n\n\
+             options:\n  --out <dir>   merged results directory (default: results)\n\n\
+             each <shard-dir> is the --out directory of one `repro experiment\n\
+             ... --shard k/N` (or `repro autoscale --shard k/N`) run; pass all\n\
+             N of them to reassemble the full grid"
+        );
+        return Ok(());
+    }
+    let shard_dirs: Vec<PathBuf> = args.positional.iter().map(PathBuf::from).collect();
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let merged = sweep::merge_shard_dirs(&shard_dirs, &out_dir)?;
+    for m in &merged {
+        println!(
+            "merged {:<12} {} shard(s), {} rows{} -> {}",
+            m.id,
+            m.shards,
+            m.rows,
+            if m.complete { "" } else { " [INCOMPLETE]" },
+            out_dir.join(&m.id).display()
+        );
+    }
+    if merged.iter().any(|m| !m.complete) {
+        eprintln!(
+            "warning: some experiments are missing shards — \
+             re-run `repro merge` with all shard directories"
+        );
+    }
+    Ok(())
 }
 
 /// Apply the sweep worker count: `--jobs N` (0 or absent = all cores).
 fn apply_jobs(args: &Args) -> Result<()> {
     let jobs = args.u64_or("jobs", 0)? as usize;
     sweep::set_default_jobs(jobs);
+    Ok(())
+}
+
+/// Apply the cross-machine shard: `--shard k/N` (absent = whole grid).
+fn apply_shard(args: &Args) -> Result<()> {
+    match args.get("shard") {
+        Some(spec) => sweep::set_shard(Some(sweep::ShardSpec::parse(spec)?)),
+        None => sweep::set_shard(None),
+    }
     Ok(())
 }
 
@@ -315,5 +373,32 @@ mod tests {
     fn help_is_ok() {
         run(vec!["repro".into()]).unwrap();
         run(vec!["repro".into(), "help".into()]).unwrap();
+    }
+
+    #[test]
+    fn merge_without_dirs_prints_usage() {
+        run(vec!["repro".into(), "merge".into()]).unwrap();
+    }
+
+    #[test]
+    fn merge_of_missing_dir_fails() {
+        let r = run(vec![
+            "repro".into(),
+            "merge".into(),
+            "/nonexistent/shard-0".into(),
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_shard_spec_rejected_before_running() {
+        let r = run(vec![
+            "repro".into(),
+            "experiment".into(),
+            "exp1".into(),
+            "--shard".into(),
+            "9/4".into(),
+        ]);
+        assert!(r.unwrap_err().to_string().contains("shard index"));
     }
 }

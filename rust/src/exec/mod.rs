@@ -58,6 +58,17 @@ impl OracleStats {
             .set("hit_rate", self.hit_rate());
         v
     }
+
+    /// Reload stats serialized by [`OracleStats::to_json`] (the shard
+    /// telemetry sidecar / merged `meta.json`). `hit_rate` is derived,
+    /// not stored.
+    pub fn from_json(v: &Value) -> crate::Result<OracleStats> {
+        Ok(OracleStats {
+            calls: v.req_u64("calls")?,
+            hits: v.req_u64("hits")?,
+            resets: v.req_u64("resets")?,
+        })
+    }
 }
 
 /// The oracle interface the simulator hot path calls once per batch

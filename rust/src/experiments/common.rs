@@ -1,14 +1,14 @@
 //! Shared experiment plumbing: run simulation cases — in parallel
-//! across worker threads, with O(bins) streaming telemetry — and
-//! collect the (power, energy, MFU, latency) quantities the paper's
-//! figures plot.
+//! across worker threads, with O(bins) streaming telemetry, optionally
+//! sharded across machines (DESIGN.md §9) — and collect the (power,
+//! energy, MFU, latency) quantities the paper's figures plot.
 
 use crate::config::simconfig::SimConfig;
 use crate::energy::{EnergyAccountant, EnergyReport};
 use crate::exec::OracleStats;
 use crate::sim::{self, SimRun};
-use crate::sweep::SweepExecutor;
-use crate::telemetry::StreamingSink;
+use crate::sweep::{ShardSpec, SweepExecutor};
+use crate::telemetry::{LatencySketches, ShardTelemetry, StreamingRequestSink, StreamingSink};
 use crate::util::csv::Table;
 use crate::util::json::Value;
 use anyhow::Result;
@@ -28,6 +28,10 @@ pub struct CaseResult {
     pub energy: EnergyReport,
     /// The streaming sink's peak resident bin count for this case.
     pub peak_resident_bins: usize,
+    /// The case's latency sketches (TTFT / e2e / queue-delay /
+    /// normalized latency) — persisted in the shard telemetry sidecar
+    /// so sharded sweeps can merge distributions without re-running.
+    pub sketches: LatencySketches,
 }
 
 impl CaseResult {
@@ -60,26 +64,21 @@ impl CaseResult {
 pub fn run_case(cfg: &SimConfig) -> Result<CaseResult> {
     let acc = EnergyAccountant::paper_default(cfg)?;
     let mut sink = StreamingSink::with_model(cfg, CASE_BIN_INTERVAL_S, acc.power_model)?;
-    let out = sim::run_streaming(cfg, &mut sink)?;
+    let mut reqs = StreamingRequestSink::new(cfg);
+    let out = sim::run_streaming_with(cfg, &mut sink, &mut reqs)?;
     let energy = acc.report(cfg, sink.aggregates(), out.metrics.makespan_s);
     Ok(CaseResult {
         peak_resident_bins: sink.peak_resident_bins(),
+        sketches: reqs.into_sketches(),
         out,
         energy,
     })
 }
 
-/// Run a case grid across the process-default worker count
-/// (`--jobs N`, else `available_parallelism`), returning results in
-/// case order regardless of completion order. Each worker thread
-/// builds its own cost oracle — the PJRT stack is thread-affine — and
-/// each case's workload seed lives in its `SimConfig`, so the output
-/// is byte-identical for any worker count.
-pub fn run_cases(cfgs: Vec<SimConfig>) -> Result<Vec<CaseResult>> {
-    run_cases_on(&SweepExecutor::with_default_jobs(), cfgs)
-}
-
-/// [`run_cases`] on an explicit executor (tests pin worker counts).
+/// Run a case grid on an explicit executor, ignoring the process-wide
+/// shard (tests pin worker counts and compare raw result vectors).
+/// Experiments use [`run_grid`], which is shard-aware and keeps the
+/// global case indices.
 pub fn run_cases_on(
     executor: &SweepExecutor,
     cfgs: Vec<SimConfig>,
@@ -87,37 +86,97 @@ pub fn run_cases_on(
     executor.run(cfgs, |_, cfg| run_case(cfg))
 }
 
-/// Sweep-level metadata for an experiment's `meta.json`: aggregate
-/// oracle memo-cache statistics (so sweep perf regressions are
-/// observable run-over-run) and the telemetry footprint.
-pub fn sweep_meta(results: &[CaseResult]) -> Value {
-    let mut oracle = OracleStats::default();
-    let mut peak_bins = 0usize;
-    let mut peak_live = 0usize;
-    let mut stages = 0u64;
-    for r in results {
-        oracle.merge(&r.out.oracle);
-        peak_bins = peak_bins.max(r.peak_resident_bins);
-        peak_live = peak_live.max(r.out.peak_live_requests);
-        stages += r.out.metrics.stage_count;
-    }
-    sweep_meta_parts(
-        results.len() as u64,
-        oracle,
-        stages,
-        Some(peak_bins as u64),
-        Some(peak_live as u64),
-    )
+/// A (possibly shard-filtered) grid run: the cases this process
+/// actually executed, tagged with their **global** case indices so CSV
+/// rows keep their position in the full grid, plus the shard identity
+/// for the telemetry sidecar.
+pub struct GridRun {
+    /// Size of the full case grid, across all shards.
+    pub total_cases: usize,
+    /// The shard this process ran, `None` for an unsharded run.
+    pub shard: Option<ShardSpec>,
+    /// `(global case index, result)`, ascending by index.
+    pub results: Vec<(usize, CaseResult)>,
 }
 
-/// [`sweep_meta`] from pre-aggregated parts — for experiments that
-/// don't go through [`run_cases`] (the autoscale policy sweep, the
-/// single-case case study, the materialized ablation). Every
+impl GridRun {
+    /// Iterate the executed cases as `(global index, result)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &CaseResult)> {
+        self.results.iter().map(|(i, r)| (*i, r))
+    }
+
+    /// The `sweep` object for this run's `meta.json` (oracle cache,
+    /// telemetry footprint, shard identity) — read off the same
+    /// [`ShardTelemetry`] accumulator that backs the sidecar, so
+    /// `meta.json` and `telemetry.json` can never drift apart.
+    pub fn sweep_meta(&self) -> Value {
+        let tel = self.telemetry("");
+        sweep_meta_parts(
+            self.results.len() as u64,
+            tel.oracle,
+            tel.stages.stages,
+            Some(tel.peak_resident_bins),
+            Some(tel.peak_live_requests),
+        )
+    }
+
+    /// The mergeable telemetry sidecar for this run (DESIGN.md §9):
+    /// per-case request/stage accumulators and latency sketches folded
+    /// into one shard-level aggregate, keyed by global case index.
+    pub fn telemetry(&self, experiment: &str) -> ShardTelemetry {
+        let mut tel = ShardTelemetry::new(experiment, self.shard, self.total_cases as u64);
+        for (i, r) in &self.results {
+            tel.add_case(
+                *i as u64,
+                &r.out.request_stats,
+                &r.out.stage_stats,
+                &r.out.oracle,
+                &r.sketches,
+                r.peak_resident_bins as u64,
+                r.out.peak_live_requests as u64,
+            );
+        }
+        tel
+    }
+}
+
+/// Run the grid honouring the process-wide shard (`--shard k/N`, set
+/// via [`crate::sweep::set_shard`]): this process executes only the
+/// cases its shard owns (`index % N == k`). Case seeds were derived
+/// from **global** indices by the experiment, so shard assignment
+/// never changes a case's results — merged shard CSVs are
+/// byte-identical to an unsharded run's (`tests/shard_merge.rs`).
+pub fn run_grid(cfgs: Vec<SimConfig>) -> Result<GridRun> {
+    run_grid_on(&SweepExecutor::with_default_jobs(), cfgs)
+}
+
+/// [`run_grid`] on an explicit executor (tests pin worker counts).
+pub fn run_grid_on(executor: &SweepExecutor, cfgs: Vec<SimConfig>) -> Result<GridRun> {
+    let total_cases = cfgs.len();
+    let (shard, owned) = crate::sweep::shard::shard_owned(cfgs);
+    let indices: Vec<usize> = owned.iter().map(|(i, _)| *i).collect();
+    let results = executor.run(owned, |_, (_, cfg)| run_case(cfg))?;
+    Ok(GridRun {
+        total_cases,
+        shard,
+        // The executor returns results in case order, so they pair
+        // back with the global indices they were filtered from.
+        results: indices.into_iter().zip(results).collect(),
+    })
+}
+
+/// The `sweep` meta object from pre-aggregated parts — for experiments
+/// that don't go through [`run_grid`] (the autoscale policy sweep, the
+/// single-case case study, the materialized ablation); grid
+/// experiments get it via [`GridRun::sweep_meta`]. Every
 /// experiment's `meta.json` carries this object under `sweep`.
 /// `peak_resident_bins: None` marks a materialized run (the resident
 /// stage state was the full record vector, reported as
 /// `total_stages`); `peak_live_requests: None` likewise marks the
-/// request side as materialized.
+/// request side as materialized. A process-wide shard (`--shard k/N`)
+/// is recorded under `shard`; `repro merge` recombines these objects
+/// with per-field sum/max semantics
+/// ([`crate::sweep::merge::merge_sweep_values`]).
 pub fn sweep_meta_parts(
     cases: u64,
     oracle: OracleStats,
@@ -130,6 +189,9 @@ pub fn sweep_meta_parts(
         .set("jobs", crate::sweep::default_jobs() as u64)
         .set("oracle_cache", oracle.to_json())
         .set("total_stages", total_stages);
+    if let Some(s) = crate::sweep::active_shard() {
+        v.set("shard", s.label());
+    }
     if let Some(r) = peak_live_requests {
         v.set("peak_live_requests", r);
     }
@@ -158,4 +220,19 @@ pub fn save(
     // Also print the markdown form so terminal runs double as reports.
     println!("\n### {id}\n\n{}", table.to_markdown());
     Ok(())
+}
+
+/// [`save`] plus the telemetry sidecar — the persistence path for
+/// shardable grid experiments. Sharded and unsharded runs write the
+/// same layout (`<id>.csv`, `meta.json`, `telemetry.json`); `repro
+/// merge` recombines any number of such directories.
+pub fn save_grid(
+    out_dir: &Path,
+    id: &str,
+    table: &Table,
+    meta: Value,
+    grid: &GridRun,
+) -> Result<()> {
+    save(out_dir, id, table, meta)?;
+    grid.telemetry(id).save(&out_dir.join(id))
 }

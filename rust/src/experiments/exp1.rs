@@ -4,7 +4,7 @@
 //! 70B+ at TP2/PP2) while total energy grows linearly, reaching
 //! ~16 kWh (CodeLlama-34B) and >80 kWh (70B+) at 2^16 requests.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -44,13 +44,14 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfgs.push(cfg);
         }
     }
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "model", "tp", "pp", "requests", "avg_power_w", "energy_kwh", "makespan_s",
         "weighted_mfu",
     ]);
-    for (&(model, tp, pp, n), r) in cases.iter().zip(&results) {
+    for (i, r) in grid.iter() {
+        let (model, tp, pp, n) = cases[i];
         table.push_row(vec![
             model.to_string(),
             tp.to_string(),
@@ -68,8 +69,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "paper_claim",
             "power stable in request count; energy linear; ~16 kWh @34B/2^16, >80 kWh @70B+",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "exp1", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "exp1", &table, meta, &grid)?;
     Ok(table)
 }
 

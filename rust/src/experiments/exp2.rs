@@ -9,7 +9,7 @@
 //! decode; we sweep the ratio r = prefill/decode from 50:1 to 1:50 and
 //! report both conventions in the CSV (`pd_ratio` = prefill/decode).
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::{LengthDist, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -36,13 +36,14 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfgs.push(cfg);
         }
     }
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "pd_ratio", "request_len", "avg_power_w", "energy_kwh", "weighted_mfu",
         "makespan_s",
     ]);
-    for (&(ratio, len), r) in cases.iter().zip(&results) {
+    for (i, r) in grid.iter() {
+        let (ratio, len) = cases[i];
         table.push_row(vec![
             format!("{ratio}"),
             len.to_string(),
@@ -58,8 +59,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "paper_claim",
             "power/energy rise with request length; decode-heavy mixes cost more on long requests",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "exp2", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "exp2", &table, meta, &grid)?;
     Ok(table)
 }
 

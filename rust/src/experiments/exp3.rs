@@ -3,7 +3,7 @@
 //! variance past 32); average power rises and plateaus above cap 64;
 //! total energy falls with diminishing returns past cap 16.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -26,15 +26,15 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "batch_cap", "actual_batch_mean", "actual_batch_std", "avg_power_w",
         "energy_kwh", "makespan_s",
     ]);
-    for (&cap, r) in caps.iter().zip(&results) {
+    for (i, r) in grid.iter() {
         table.push_row(vec![
-            cap.to_string(),
+            caps[i].to_string(),
             format!("{:.2}", r.batch_mean()),
             format!("{:.2}", r.batch_std()),
             format!("{:.1}", r.avg_power_w()),
@@ -48,8 +48,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "paper_claim",
             "actual batch sublinear in cap; power plateaus above 64; energy falls, diminishing past 16",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "exp3", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "exp3", &table, meta, &grid)?;
     Ok(table)
 }
 

@@ -3,7 +3,7 @@
 //! rises with QPS and saturates near 360 W beyond QPS ≈ 5; total
 //! energy falls with QPS and converges toward ~0.5 kWh beyond QPS ≈ 8.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::{Arrival, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -31,12 +31,13 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let run = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "qps", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
     ]);
-    for (&qps, r) in grid.iter().zip(&results) {
+    for (i, r) in run.iter() {
+        let qps = grid[i];
         table.push_row(vec![
             format!("{qps}"),
             format!("{:.1}", r.avg_power_w()),
@@ -51,8 +52,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "paper_claim",
             "power saturates ~360 W past QPS 5; energy converges ~0.5 kWh past QPS 8 (2^14 requests)",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "exp4", &table, meta)?;
+        .set("sweep", run.sweep_meta());
+    save_grid(out_dir, "exp4", &table, meta, &run)?;
     Ok(table)
 }
 

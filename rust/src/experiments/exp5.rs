@@ -4,7 +4,7 @@
 //! 0.16–0.56 kWh with the most efficient settings TP2/PP1 and TP1/PP2
 //! — runtime reduction matters more than power reduction.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::SimConfig;
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -43,12 +43,13 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let run = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "tp", "pp", "gpus", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",
     ]);
-    for (&(tp, pp), r) in grid.iter().zip(&results) {
+    for (i, r) in run.iter() {
+        let (tp, pp) = grid[i];
         table.push_row(vec![
             tp.to_string(),
             pp.to_string(),
@@ -65,8 +66,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "paper_claim",
             "power peaks at TP2/PP1, drops with higher parallelism; best energy at TP2/PP1 & TP1/PP2",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "exp5", &table, meta)?;
+        .set("sweep", run.sweep_meta());
+    save_grid(out_dir, "exp5", &table, meta, &run)?;
     Ok(table)
 }
 

@@ -13,7 +13,6 @@
 
 use super::common::{save, sweep_meta_parts};
 use crate::autoscale::GridEnv;
-use crate::exec::OracleStats;
 use crate::config::simconfig::{
     Arrival, AutoscaleConfig, CosimConfig, CostModelKind, LengthDist, ScalingPolicyKind,
     SimConfig,
@@ -24,7 +23,7 @@ use crate::pipeline::LoadProfile;
 use crate::runtime::ArtifactStore;
 use crate::sim::{self, AutoscaleRun};
 use crate::sweep::SweepExecutor;
-use crate::telemetry::StreamingSink;
+use crate::telemetry::{LatencySketches, ShardTelemetry, StreamingRequestSink, StreamingSink};
 use crate::util::csv::Table;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -129,6 +128,9 @@ pub struct PolicyResult {
     pub renewable_share: f64,
     /// The streaming sink's peak resident bin count for this policy.
     pub peak_resident_bins: usize,
+    /// The policy run's latency sketches (for the shard telemetry
+    /// sidecar, DESIGN.md §9).
+    pub sketches: LatencySketches,
 }
 
 /// Run one policy of the sweep over a fixed trace, streaming the
@@ -153,7 +155,9 @@ pub fn run_policy(
     // Fleet-aware accounting + Eq. 5 binning, folded online.
     let acc = EnergyAccountant::paper_default(cfg)?;
     let mut sink = StreamingSink::with_model(cfg, cosim.interval_s, acc.power_model)?;
-    let out = sim::run_autoscaled_streaming(cfg, &scale, &grid, trace, &mut sink)?;
+    let mut reqs = StreamingRequestSink::new(cfg);
+    let out =
+        sim::run_autoscaled_streaming_with(cfg, &scale, &grid, trace, &mut sink, &mut reqs)?;
     let energy = acc.report_fleet(cfg, sink.aggregates(), &out.timeline);
     let binned = sink.binned(cfg, &out.timeline)?;
     let profile = LoadProfile::from_binned(&binned);
@@ -170,6 +174,7 @@ pub fn run_policy(
         carbon_offset_frac: res.carbon_offset_frac,
         renewable_share: res.renewable_share,
         peak_resident_bins: sink.peak_resident_bins(),
+        sketches: reqs.into_sketches(),
         out,
     })
 }
@@ -203,8 +208,13 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     let mut meta = Value::obj();
     let dir = out_dir.join("autoscale");
     // The four policies are independent runs over the same trace:
-    // fan them out across the sweep workers.
-    let results = SweepExecutor::with_default_jobs().run(POLICIES.to_vec(), |_, &policy| {
+    // fan them out across the sweep workers — and, under
+    // `--shard k/N`, across machines (case index = policy index;
+    // the trace is seed-deterministic, so every shard regenerates the
+    // identical workload).
+    let (shard, owned) = crate::sweep::shard::shard_owned(POLICIES.to_vec());
+    let indices: Vec<usize> = owned.iter().map(|(i, _)| *i).collect();
+    let results = SweepExecutor::with_default_jobs().run(owned, |_, &(_, policy)| {
         run_policy(&cfg, &scale, &cosim, policy, horizon_s, trace.clone())
     })?;
     for r in &results {
@@ -240,15 +250,19 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         meta.set(&format!("decisions_{}", r.policy), r.out.decisions.len() as u64);
     }
 
-    let mut oracle = OracleStats::default();
-    let mut total_stages = 0u64;
-    let mut peak_bins = 0usize;
-    let mut peak_live = 0usize;
-    for r in &results {
-        oracle.merge(&r.out.sim.oracle);
-        total_stages += r.out.sim.metrics.stage_count;
-        peak_bins = peak_bins.max(r.peak_resident_bins);
-        peak_live = peak_live.max(r.out.sim.peak_live_requests);
+    // One accumulator for both outputs: the `sweep` meta object is
+    // read back off the sidecar aggregate, so the two can never drift.
+    let mut telemetry = ShardTelemetry::new("autoscale", shard, POLICIES.len() as u64);
+    for (i, r) in indices.iter().zip(&results) {
+        telemetry.add_case(
+            *i as u64,
+            &r.out.sim.request_stats,
+            &r.out.sim.stage_stats,
+            &r.out.sim.oracle,
+            &r.sketches,
+            r.peak_resident_bins as u64,
+            r.out.sim.peak_live_requests as u64,
+        );
     }
     meta.set("experiment", "autoscale")
         .set(
@@ -261,10 +275,10 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             "sweep",
             sweep_meta_parts(
                 results.len() as u64,
-                oracle,
-                total_stages,
-                Some(peak_bins as u64),
-                Some(peak_live as u64),
+                telemetry.oracle,
+                telemetry.stages.stages,
+                Some(telemetry.peak_resident_bins),
+                Some(telemetry.peak_live_requests),
             ),
         )
         .set("requests", trace.len() as u64)
@@ -278,6 +292,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
         .set("sim_config", cfg.to_json())
         .set("cosim_config", cosim.to_json());
     save(out_dir, "autoscale", &table, meta)?;
+    telemetry.save(&dir)?;
     Ok(table)
 }
 

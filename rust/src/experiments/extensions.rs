@@ -10,7 +10,7 @@
 //!   idle/peak envelope and compute/bandwidth balance shift energy
 //!   per request.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::{SchedulerKind, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -35,13 +35,14 @@ pub fn run_sched(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "scheduler", "avg_power_w", "energy_kwh", "makespan_s", "ttft_p50_s",
         "e2e_p99_s", "mean_batch", "weighted_mfu",
     ]);
-    for (&(name, _), r) in kinds.iter().zip(&results) {
+    for (i, r) in grid.iter() {
+        let (name, _) = kinds[i];
         table.push_row(vec![
             name.to_string(),
             format!("{:.1}", r.avg_power_w()),
@@ -59,8 +60,8 @@ pub fn run_sched(out_dir: &Path, fast: bool) -> Result<Table> {
             "description",
             "scheduler policy ablation: energy/latency across vLLM, Sarathi, Orca",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "sched", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "sched", &table, meta, &grid)?;
     Ok(table)
 }
 
@@ -78,15 +79,15 @@ pub fn run_gpu(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&[
         "gpu", "avg_power_w", "energy_kwh", "wh_per_request", "makespan_s",
         "weighted_mfu",
     ]);
-    for (&gpu, r) in gpus.iter().zip(&results) {
+    for (i, r) in grid.iter() {
         table.push_row(vec![
-            gpu.to_string(),
+            gpus[i].to_string(),
             format!("{:.1}", r.avg_power_w()),
             format!("{:.4}", r.energy_kwh()),
             format!("{:.4}", r.energy_kwh() * 1000.0 / n_requests as f64),
@@ -100,8 +101,8 @@ pub fn run_gpu(out_dir: &Path, fast: bool) -> Result<Table> {
             "description",
             "cross-GPU sweep over the paper's three calibrated SKUs (A100/H100/A40)",
         )
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "gpu", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "gpu", &table, meta, &grid)?;
     Ok(table)
 }
 

@@ -2,7 +2,7 @@
 //! Meta-Llama-3-8B. The paper shows MFU rising with QPS and plateauing
 //! near mfu_sat = 0.45 for QPS ≈ 5–7.9.
 
-use super::common::{run_cases, save, sweep_meta};
+use super::common::{run_grid, save_grid};
 use crate::config::simconfig::{Arrival, SimConfig};
 use crate::util::csv::Table;
 use crate::util::json::Value;
@@ -24,10 +24,11 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let results = run_cases(cfgs)?;
+    let grid = run_grid(cfgs)?;
 
     let mut table = Table::new(&["qps", "weighted_mfu", "avg_power_w", "achieved_qps"]);
-    for (&qps, r) in QPS_GRID.iter().zip(&results) {
+    for (i, r) in grid.iter() {
+        let qps = QPS_GRID[i];
         table.push_row(vec![
             format!("{qps}"),
             format!("{:.4}", r.mfu()),
@@ -39,8 +40,8 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     meta.set("figure", "fig1")
         .set("description", "MFU vs QPS saturation, Meta-Llama-3-8B on A100")
         .set("paper_claim", "MFU plateaus near 0.45 at QPS 5-7.9")
-        .set("sweep", sweep_meta(&results));
-    save(out_dir, "fig1", &table, meta)?;
+        .set("sweep", grid.sweep_meta());
+    save_grid(out_dir, "fig1", &table, meta, &grid)?;
     Ok(table)
 }
 

@@ -4,12 +4,21 @@
 //! results directory. See DESIGN.md §4 for the experiment index.
 //!
 //! Execution model (DESIGN.md §7): every experiment builds its case
-//! grid up front and hands it to [`common::run_cases`], which fans the
+//! grid up front and hands it to [`common::run_grid`], which fans the
 //! cases across the sweep worker threads (`--jobs N`, default all
 //! cores) and streams each case's stage telemetry through an O(bins)
 //! sink. Case seeds derive from the case index
 //! ([`crate::util::rng::case_seed`]), so any worker count produces
 //! byte-identical CSVs.
+//!
+//! Cross-machine scale (DESIGN.md §9): under `--shard k/N` the same
+//! grid is partitioned by global case index across hosts; each shard
+//! writes its rows plus a mergeable telemetry sidecar, and `repro
+//! merge` recombines the shard directories into outputs byte-identical
+//! to an unsharded run. Single-case experiments (`casestudy`,
+//! `ablation`) belong to the shard that owns case 0 and are skipped —
+//! not failed — on every other shard, so `repro experiment all
+//! --shard k/N` shards the whole paper evaluation wholesale.
 
 pub mod common;
 pub mod fig1;
@@ -28,6 +37,19 @@ pub use common::{run_case, CaseResult};
 use anyhow::Result;
 use std::path::Path;
 
+/// Does the active shard (if any) own this single-case experiment?
+/// One-case grids live on the shard owning case 0; other shards skip
+/// them so `experiment all --shard k/N` needs no per-id exceptions.
+fn shard_owns_single_case(id: &str) -> bool {
+    match crate::sweep::active_shard() {
+        Some(s) if !s.owns(0) => {
+            eprintln!("shard {s}: skipping single-case experiment '{id}' (owned by shard 0)");
+            false
+        }
+        _ => true,
+    }
+}
+
 /// Run an experiment by id ("fig1", "exp1".."exp5", "casestudy",
 /// "ablation", or "all").
 pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
@@ -38,7 +60,9 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
         "exp3" => exp3::run(out_dir, fast).map(|_| ()),
         "exp4" => exp4::run(out_dir, fast).map(|_| ()),
         "exp5" => exp5::run(out_dir, fast).map(|_| ()),
+        "casestudy" if !shard_owns_single_case(id) => Ok(()),
         "casestudy" => casestudy::run(out_dir, fast).map(|_| ()),
+        "ablation" if !shard_owns_single_case(id) => Ok(()),
         "ablation" => ablation::run(out_dir, fast).map(|_| ()),
         "sched" => extensions::run_sched(out_dir, fast).map(|_| ()),
         "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),

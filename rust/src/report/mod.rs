@@ -1,8 +1,16 @@
 //! Report assembly: collect experiment outputs from a results
 //! directory into one markdown document (used by `repro report`).
+//!
+//! Shard-aware (DESIGN.md §9): an experiment directory carrying a
+//! telemetry sidecar gets a request-latency summary line computed from
+//! the (merged) sketches, and a directory that is still a single shard
+//! (`shard: k/N`) is flagged so a partial grid is never mistaken for
+//! the full figure — regenerate figures from the `repro merge` output,
+//! not from one shard.
 
 pub mod charts;
 
+use crate::telemetry::ShardTelemetry;
 use crate::util::csv::Table;
 use anyhow::Result;
 use std::path::Path;
@@ -49,6 +57,49 @@ pub fn assemble(dir: &Path) -> Result<String> {
                 }
             }
         }
+        // Telemetry sidecar: latency summary from the (merged)
+        // sketches, plus a loud flag on partial grids — whether an
+        // unmerged shard (`shard: k/N`) or a merge that was given only
+        // a subset of the shards (shard dropped but cases incomplete).
+        match ShardTelemetry::load(&dir.join(id)) {
+            Ok(Some(tel)) => {
+                if !tel.is_complete() {
+                    let origin = match tel.shard {
+                        Some(s) => format!("shard {s}"),
+                        None => "incomplete merge".to_string(),
+                    };
+                    out.push_str(&format!(
+                        "> **partial output — {origin}** ({} of {} cases); \
+                         combine all shards with `repro merge` before reading \
+                         figures off this table\n\n",
+                        tel.cases.len(),
+                        tel.total_cases
+                    ));
+                }
+                let r = &tel.requests;
+                if r.finished > 0 {
+                    out.push_str(&format!(
+                        "> telemetry: {} requests, ttft p50/p99 {:.3}/{:.3} s, \
+                         e2e p99 {:.2} s (sketch ε = {:.0e})\n\n",
+                        r.finished,
+                        r.ttft_p50_s,
+                        r.ttft_p99_s,
+                        r.e2e_p99_s,
+                        tel.sketches.e2e.epsilon()
+                    ));
+                }
+            }
+            Ok(None) => {}
+            Err(e) => {
+                // A corrupt sidecar must not silently demote a partial
+                // grid to "looks complete".
+                out.push_str(&format!(
+                    "> **warning:** unreadable telemetry sidecar ({e:#}); \
+                     if this directory came from a sharded run, its \
+                     completeness cannot be checked\n\n"
+                ));
+            }
+        }
         out.push_str(&table.to_markdown());
         // Attach ASCII figures where defined.
         for (fid, title, xcol, ycols) in FIGURES {
@@ -92,6 +143,37 @@ mod tests {
         let md = assemble(&dir).unwrap();
         assert!(md.contains("## fig1"));
         assert!(!md.contains("## exp1")); // absent results skipped
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unmerged_shard_output_is_flagged() {
+        use crate::sweep::ShardSpec;
+        let dir = std::env::temp_dir().join("vidur_energy_report_shard_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("exp3")).unwrap();
+        let mut t = Table::new(&["batch_cap", "energy_kwh"]);
+        t.push(&[8.0, 0.2]);
+        t.save(dir.join("exp3").join("exp3.csv")).unwrap();
+        let mut tel =
+            ShardTelemetry::new("exp3", Some(ShardSpec::new(1, 4).unwrap()), 8);
+        tel.cases = vec![1];
+        tel.save(&dir.join("exp3")).unwrap();
+        let md = assemble(&dir).unwrap();
+        assert!(md.contains("partial output — shard 1/4"), "{md}");
+        assert!(md.contains("repro merge"));
+
+        // A merge that was fed only a subset of shards drops the shard
+        // identity but is still incomplete — it must be flagged too.
+        tel.shard = None;
+        tel.save(&dir.join("exp3")).unwrap();
+        let md = assemble(&dir).unwrap();
+        assert!(md.contains("partial output — incomplete merge"), "{md}");
+
+        // A corrupt sidecar must surface as a warning, not silence.
+        std::fs::write(dir.join("exp3").join("telemetry.json"), "{ not json").unwrap();
+        let md = assemble(&dir).unwrap();
+        assert!(md.contains("unreadable telemetry sidecar"), "{md}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

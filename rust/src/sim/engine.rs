@@ -301,10 +301,21 @@ pub fn run_with_model(
 /// [`crate::telemetry::StreamingSink`] this is the fully streaming
 /// path: O(outstanding + bins) resident state end to end.
 pub fn run_streaming(cfg: &SimConfig, sink: &mut dyn StageSink) -> Result<SimRun> {
+    let mut reqs = StreamingRequestSink::new(cfg);
+    run_streaming_with(cfg, sink, &mut reqs)
+}
+
+/// [`run_streaming`] with a caller-owned request sink — for callers
+/// that need the sink's latency sketches afterwards (the sharded sweep
+/// path persists them in the telemetry sidecar, DESIGN.md §9).
+pub fn run_streaming_with(
+    cfg: &SimConfig,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<SimRun> {
     let mut source = WorkloadGenerator::from_config(cfg).take(cfg.num_requests);
     let cost = build_cost_model(cfg)?;
-    let mut reqs = StreamingRequestSink::new(cfg);
-    run_with_sinks(cfg, &mut source, cost, sink, &mut reqs)
+    run_with_sinks(cfg, &mut source, cost, sink, requests)
 }
 
 /// Fixed-fleet run over an explicit trace and stage sink; request
@@ -612,6 +623,22 @@ pub fn run_autoscaled_streaming(
 ) -> Result<AutoscaleRun> {
     let cost = build_cost_model(cfg)?;
     run_autoscaled_with_sink(cfg, scale, grid, trace, cost, sink)
+}
+
+/// [`run_autoscaled_streaming`] with a caller-owned request sink —
+/// the dynamic-fleet twin of [`run_streaming_with`] (the sharded
+/// autoscale sweep persists the sink's sketches, DESIGN.md §9).
+pub fn run_autoscaled_streaming_with(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    trace: Trace,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<AutoscaleRun> {
+    let cost = build_cost_model(cfg)?;
+    let mut source = trace.into_source();
+    run_autoscaled_with_sinks(cfg, scale, grid, &mut source, cost, sink, requests)
 }
 
 /// Dynamic-fleet run over an explicit trace, cost model, and stage

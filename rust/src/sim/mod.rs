@@ -5,9 +5,9 @@ pub mod engine;
 pub mod metrics;
 
 pub use engine::{
-    run, run_autoscaled, run_autoscaled_streaming, run_autoscaled_with_model,
-    run_autoscaled_with_sink, run_autoscaled_with_sinks, run_streaming, run_with_model,
-    run_with_sink, run_with_sinks, run_with_trace, AutoscaleOutput, AutoscaleRun,
-    SimOutput, SimRun,
+    run, run_autoscaled, run_autoscaled_streaming, run_autoscaled_streaming_with,
+    run_autoscaled_with_model, run_autoscaled_with_sink, run_autoscaled_with_sinks,
+    run_streaming, run_streaming_with, run_with_model, run_with_sink, run_with_sinks,
+    run_with_trace, AutoscaleOutput, AutoscaleRun, SimOutput, SimRun,
 };
 pub use metrics::SimMetrics;

@@ -1,0 +1,440 @@
+//! `repro merge` — recombine sharded sweep outputs (DESIGN.md §9).
+//!
+//! Each host of an N-way sharded sweep produced a results directory
+//! whose experiment subdirectories hold the shard's CSV rows, its
+//! `meta.json`, and the mergeable telemetry sidecar
+//! ([`crate::telemetry::ShardTelemetry`]). [`merge_shard_dirs`] folds
+//! those directories back into one results tree:
+//!
+//! * **CSV** — rows are re-interleaved by global case index (the
+//!   sidecar records each row's case) and written through the same
+//!   [`Table::save`] writer the experiments use, so the merged file is
+//!   **byte-identical** to what an unsharded run would have written:
+//!   every row was formatted by the same code from the same
+//!   case-seeded simulation, sharding only moved it between files.
+//! * **`telemetry.json`** — sidecars merge via
+//!   [`ShardTelemetry::merge`]: exact counters sum, peaks take maxima,
+//!   GK sketches combine within the documented rank bound, quantile
+//!   point-estimates are re-derived from the merged sketches.
+//! * **`meta.json`** — merged with per-field semantics for the `sweep`
+//!   object (see [`merge_sweep_values`]); other keys union with
+//!   first-shard-wins on conflicts.
+//! * **Everything else** (`fleet_*.csv`, case-study figures…) is
+//!   copied through; shards own disjoint cases, so name collisions
+//!   with differing content are protocol errors, not merges.
+//!
+//! Experiment directories *without* a sidecar (single-case experiments
+//! like `casestudy`/`ablation`, which only shard 0 runs) are copied
+//! wholesale when exactly one shard produced them.
+
+use crate::telemetry::{shard as sidecar, ShardTelemetry};
+use crate::util::csv::Table;
+use crate::util::json::{parse, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Summary of one merged experiment directory.
+#[derive(Debug)]
+pub struct MergedExperiment {
+    pub id: String,
+    /// Shard directories that contributed.
+    pub shards: usize,
+    /// Rows in the merged CSV (0 for sidecar-less copy-through dirs).
+    pub rows: usize,
+    /// Whether the merged telemetry covers the full case grid.
+    pub complete: bool,
+}
+
+/// Merge the experiment outputs under `shard_dirs` into `out_dir`.
+/// Every subdirectory name found in any shard dir is treated as one
+/// experiment id and merged independently; the result layout matches
+/// an unsharded `repro experiment` run.
+pub fn merge_shard_dirs(shard_dirs: &[PathBuf], out_dir: &Path) -> Result<Vec<MergedExperiment>> {
+    if shard_dirs.is_empty() {
+        bail!("nothing to merge: no shard directories given");
+    }
+    for d in shard_dirs {
+        if !d.is_dir() {
+            bail!("shard directory {d:?} does not exist");
+        }
+    }
+    // Group: experiment id -> the shard dirs containing it.
+    let mut by_id: BTreeMap<String, Vec<PathBuf>> = BTreeMap::new();
+    for dir in shard_dirs {
+        for entry in std::fs::read_dir(dir).with_context(|| format!("listing {dir:?}"))? {
+            let path = entry?.path();
+            if path.is_dir() {
+                let id = path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .ok_or_else(|| anyhow::anyhow!("unreadable directory name in {dir:?}"))?
+                    .to_string();
+                by_id.entry(id).or_default().push(path.clone());
+            }
+        }
+    }
+    if by_id.is_empty() {
+        bail!(
+            "no experiment subdirectories found under {shard_dirs:?} — \
+             pass the --out directories the sharded runs wrote"
+        );
+    }
+
+    let mut merged = Vec::new();
+    for (id, dirs) in by_id {
+        merged.push(merge_experiment(&id, &dirs, &out_dir.join(&id))?);
+    }
+    Ok(merged)
+}
+
+/// Merge one experiment id's shard directories into `out`.
+fn merge_experiment(id: &str, dirs: &[PathBuf], out: &Path) -> Result<MergedExperiment> {
+    // Load sidecars; order shards deterministically by shard index
+    // (input order as a tiebreak for shard-less sidecars).
+    let mut parts: Vec<(PathBuf, Option<ShardTelemetry>)> = Vec::new();
+    for d in dirs {
+        parts.push((d.clone(), ShardTelemetry::load(d)?));
+    }
+    let with_sidecar = parts.iter().filter(|(_, t)| t.is_some()).count();
+    if with_sidecar == 0 {
+        // Single-case experiments (casestudy, ablation): only one
+        // shard ran them; copy through untouched.
+        if parts.len() > 1 {
+            bail!(
+                "experiment '{id}' has no telemetry sidecar but appears in \
+                 {} shard directories — cannot merge without the sidecar's \
+                 case map (was it produced by a pre-sharding build?)",
+                parts.len()
+            );
+        }
+        copy_dir(&parts[0].0, out)?;
+        return Ok(MergedExperiment {
+            id: id.to_string(),
+            shards: 1,
+            rows: 0,
+            complete: true,
+        });
+    }
+    if with_sidecar != parts.len() {
+        bail!(
+            "experiment '{id}': some shard directories have a telemetry \
+             sidecar and some do not — mixed sharded/unsharded outputs \
+             cannot be merged"
+        );
+    }
+    parts.sort_by_key(|(_, t)| {
+        t.as_ref()
+            .and_then(|t| t.shard)
+            .map(|s| s.index)
+            .unwrap_or(u32::MAX)
+    });
+
+    // Fold telemetry + collect (case, row) pairs.
+    let mut telemetry: Option<ShardTelemetry> = None;
+    let mut rows: Vec<(u64, Vec<String>)> = Vec::new();
+    let mut header: Option<Vec<String>> = None;
+    let mut metas: Vec<Value> = Vec::new();
+    for (dir, part) in &parts {
+        let part = part.as_ref().expect("checked above");
+        let csv_path = dir.join(format!("{id}.csv"));
+        let table = Table::load(&csv_path)?;
+        if table.rows.len() != part.cases.len() {
+            bail!(
+                "{csv_path:?} has {} rows but its sidecar covers {} cases — \
+                 shard output is inconsistent",
+                table.rows.len(),
+                part.cases.len()
+            );
+        }
+        match &header {
+            None => header = Some(table.header.clone()),
+            Some(h) if *h != table.header => bail!(
+                "experiment '{id}': shard CSV headers disagree \
+                 ({h:?} vs {:?}) — shards must come from the same build",
+                table.header
+            ),
+            Some(_) => {}
+        }
+        for (case, row) in part.cases.iter().zip(table.rows) {
+            rows.push((*case, row));
+        }
+        if let Some(t) = telemetry.as_mut() {
+            t.merge(part).with_context(|| format!("merging {dir:?}"))?;
+        } else {
+            telemetry = Some(part.clone());
+        }
+        let meta_path = dir.join("meta.json");
+        if meta_path.exists() {
+            let text = std::fs::read_to_string(&meta_path)?;
+            metas.push(
+                parse(&text).map_err(|e| anyhow::anyhow!("parsing {meta_path:?}: {e}"))?,
+            );
+        }
+    }
+    let telemetry = telemetry.expect("at least one sidecar");
+    rows.sort_by_key(|(case, _)| *case);
+
+    // Write the merged tree.
+    std::fs::create_dir_all(out)?;
+    let table = Table {
+        header: header.expect("at least one shard CSV"),
+        rows: rows.into_iter().map(|(_, row)| row).collect(),
+    };
+    let n_rows = table.rows.len();
+    table.save(out.join(format!("{id}.csv")))?;
+    if !metas.is_empty() {
+        let merged_meta = merge_metas(&metas);
+        std::fs::write(out.join("meta.json"), merged_meta.pretty())?;
+    }
+    telemetry.save(out)?;
+
+    // Copy per-case extras (fleet timelines, figures) from every shard.
+    for (dir, _) in &parts {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default()
+                .to_string();
+            if name == format!("{id}.csv")
+                || name == "meta.json"
+                || name == sidecar::FILENAME
+            {
+                continue;
+            }
+            copy_checked(&path, &out.join(&name), id)?;
+        }
+    }
+
+    let complete = telemetry.is_complete();
+    if !complete {
+        eprintln!(
+            "warning: experiment '{id}' merged from {}/{} cases — \
+             some shards are missing; the CSV is a partial grid",
+            telemetry.cases.len(),
+            telemetry.total_cases
+        );
+    }
+    Ok(MergedExperiment {
+        id: id.to_string(),
+        shards: parts.len(),
+        rows: n_rows,
+        complete,
+    })
+}
+
+/// Merge shard `meta.json` documents: the `sweep` object merges with
+/// per-field semantics ([`merge_sweep_values`]); every other key
+/// unions, first (lowest-index) shard wins on conflicting values —
+/// experiment-constant keys (`figure`, `paper_claim`, configs) agree
+/// anyway, and per-shard keys (autoscale's `decisions_<policy>`) are
+/// disjoint.
+fn merge_metas(metas: &[Value]) -> Value {
+    let mut out = Value::obj();
+    // First-wins union of plain keys.
+    for meta in metas {
+        if let Value::Obj(m) = meta {
+            for (k, v) in m {
+                if k == "sweep" {
+                    continue;
+                }
+                if out.get(k).is_none() {
+                    out.set(k, v.clone());
+                }
+            }
+        }
+    }
+    let sweeps: Vec<&Value> = metas.iter().filter_map(|m| m.get("sweep")).collect();
+    if !sweeps.is_empty() {
+        out.set("sweep", merge_sweep_values(&sweeps));
+    }
+    out
+}
+
+/// Merge `meta.json`'s `sweep` objects with the correct per-field
+/// semantics — **sum** for work counters (`cases`, `total_stages`, the
+/// `oracle_cache` counters, with `hit_rate` recomputed), **max** for
+/// per-process peaks (`peak_resident_bins`, `peak_live_requests`,
+/// `jobs`), **or** for flags (`materialized`). Anything else would be
+/// wrong in a way that is easy to miss: naively taking the last
+/// shard's object silently reports one machine's peaks and one
+/// machine's oracle counters as if they covered the whole sweep.
+/// The per-shard `shard` label is dropped — the merged object speaks
+/// for the union.
+pub fn merge_sweep_values(sweeps: &[&Value]) -> Value {
+    let mut out = Value::obj();
+    let sum_u64 = |key: &str, objs: &[&Value]| -> Option<u64> {
+        let vals: Vec<u64> = objs.iter().filter_map(|v| v.get(key)?.as_u64()).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum())
+        }
+    };
+    let max_u64 = |key: &str, objs: &[&Value]| -> Option<u64> {
+        let vals: Vec<u64> = objs.iter().filter_map(|v| v.get(key)?.as_u64()).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            vals.iter().max().copied()
+        }
+    };
+    for (key, val) in [
+        ("cases", sum_u64("cases", sweeps)),
+        ("total_stages", sum_u64("total_stages", sweeps)),
+        ("jobs", max_u64("jobs", sweeps)),
+        ("peak_resident_bins", max_u64("peak_resident_bins", sweeps)),
+        ("peak_live_requests", max_u64("peak_live_requests", sweeps)),
+    ] {
+        if let Some(v) = val {
+            out.set(key, v);
+        }
+    }
+    if sweeps
+        .iter()
+        .any(|s| s.get("materialized").and_then(|v| v.as_bool()).unwrap_or(false))
+    {
+        out.set("materialized", true);
+    }
+    let oracles: Vec<&Value> = sweeps.iter().filter_map(|s| s.get("oracle_cache")).collect();
+    if !oracles.is_empty() {
+        let mut oc = Value::obj();
+        let calls = sum_u64("calls", &oracles).unwrap_or(0);
+        let hits = sum_u64("hits", &oracles).unwrap_or(0);
+        oc.set("calls", calls)
+            .set("hits", hits)
+            .set("resets", sum_u64("resets", &oracles).unwrap_or(0))
+            .set(
+                "hit_rate",
+                if calls == 0 { 0.0 } else { hits as f64 / calls as f64 },
+            );
+        out.set("oracle_cache", oc);
+    }
+    out
+}
+
+/// Recursive copy of a per-case extra (file or directory) with the
+/// disjointness guard: shards own disjoint cases, so a same-named
+/// file with *different* content coming from two shards is a protocol
+/// error, never a silent overwrite. Identical content is idempotent.
+fn copy_checked(src: &Path, dst: &Path, id: &str) -> Result<()> {
+    if src.is_dir() {
+        std::fs::create_dir_all(dst)?;
+        for entry in std::fs::read_dir(src).with_context(|| format!("listing {src:?}"))? {
+            let path = entry?.path();
+            let to = dst.join(path.file_name().expect("read_dir yields named entries"));
+            copy_checked(&path, &to, id)?;
+        }
+        return Ok(());
+    }
+    let content = std::fs::read(src)?;
+    if dst.exists() && std::fs::read(dst)? != content {
+        bail!(
+            "experiment '{id}': shards disagree on extra file {dst:?} — \
+             shard case sets were not disjoint?"
+        );
+    }
+    std::fs::write(dst, content).with_context(|| format!("copying {src:?} -> {dst:?}"))
+}
+
+/// Recursive directory copy (used for sidecar-less experiment dirs,
+/// which by construction have exactly one source shard).
+fn copy_dir(src: &Path, dst: &Path) -> Result<()> {
+    std::fs::create_dir_all(dst)?;
+    for entry in std::fs::read_dir(src).with_context(|| format!("listing {src:?}"))? {
+        let path = entry?.path();
+        let to = dst.join(path.file_name().expect("read_dir yields named entries"));
+        if path.is_dir() {
+            copy_dir(&path, &to)?;
+        } else {
+            std::fs::copy(&path, &to)
+                .with_context(|| format!("copying {path:?} -> {to:?}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep_obj(
+        cases: u64,
+        stages: u64,
+        jobs: u64,
+        peak_bins: u64,
+        calls: u64,
+        hits: u64,
+    ) -> Value {
+        let mut oc = Value::obj();
+        oc.set("calls", calls)
+            .set("hits", hits)
+            .set("resets", 1u64)
+            .set("hit_rate", 0.0);
+        let mut v = Value::obj();
+        v.set("cases", cases)
+            .set("total_stages", stages)
+            .set("jobs", jobs)
+            .set("peak_resident_bins", peak_bins)
+            .set("peak_live_requests", peak_bins * 2)
+            .set("oracle_cache", oc)
+            .set("shard", "0/2");
+        v
+    }
+
+    /// The satellite bugfix pinned down: merged sweep stats must use
+    /// sum semantics for work counters and max semantics for
+    /// per-process peaks — not last-shard-wins for either.
+    #[test]
+    fn sweep_meta_merges_with_max_vs_sum_semantics() {
+        let a = sweep_obj(5, 1000, 8, 40, 600, 500);
+        let b = sweep_obj(4, 800, 4, 70, 400, 100);
+        let m = merge_sweep_values(&[&a, &b]);
+        assert_eq!(m.get("cases").unwrap().as_u64(), Some(9)); // sum
+        assert_eq!(m.get("total_stages").unwrap().as_u64(), Some(1800)); // sum
+        assert_eq!(m.get("jobs").unwrap().as_u64(), Some(8)); // max
+        assert_eq!(m.get("peak_resident_bins").unwrap().as_u64(), Some(70)); // max
+        assert_eq!(m.get("peak_live_requests").unwrap().as_u64(), Some(140)); // max
+        let oc = m.get("oracle_cache").unwrap();
+        assert_eq!(oc.get("calls").unwrap().as_u64(), Some(1000)); // sum
+        assert_eq!(oc.get("hits").unwrap().as_u64(), Some(600)); // sum
+        assert_eq!(oc.get("resets").unwrap().as_u64(), Some(2)); // sum
+        // hit_rate recomputed from the merged counters, not averaged.
+        assert!((oc.get("hit_rate").unwrap().as_f64().unwrap() - 0.6).abs() < 1e-12);
+        // The per-shard label does not survive the merge.
+        assert!(m.get("shard").is_none());
+        assert!(m.get("materialized").is_none());
+    }
+
+    #[test]
+    fn metas_union_first_wins_and_sweep_is_special() {
+        let mut a = Value::obj();
+        a.set("figure", "fig2")
+            .set("decisions_static", 10u64)
+            .set("sweep", sweep_obj(2, 10, 2, 5, 10, 5));
+        let mut b = Value::obj();
+        b.set("figure", "fig2")
+            .set("decisions_reactive", 12u64)
+            .set("sweep", sweep_obj(2, 12, 3, 9, 10, 5));
+        let m = merge_metas(&[a, b]);
+        assert_eq!(m.get("figure").unwrap().as_str(), Some("fig2"));
+        // Disjoint per-shard keys union.
+        assert_eq!(m.get("decisions_static").unwrap().as_u64(), Some(10));
+        assert_eq!(m.get("decisions_reactive").unwrap().as_u64(), Some(12));
+        assert_eq!(m.at(&["sweep", "cases"]).unwrap().as_u64(), Some(4));
+        assert_eq!(m.at(&["sweep", "jobs"]).unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn missing_and_empty_dirs_error_clearly() {
+        let tmp = std::env::temp_dir().join("vidur_energy_merge_err");
+        std::fs::remove_dir_all(&tmp).ok();
+        std::fs::create_dir_all(tmp.join("empty")).unwrap();
+        assert!(merge_shard_dirs(&[], &tmp.join("out")).is_err());
+        assert!(merge_shard_dirs(&[tmp.join("nope")], &tmp.join("out")).is_err());
+        assert!(merge_shard_dirs(&[tmp.join("empty")], &tmp.join("out")).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

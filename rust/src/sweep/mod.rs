@@ -24,6 +24,21 @@
 //! * **Panic safety.** A panicking case propagates out of
 //!   [`std::thread::scope`] and fails the sweep, never silently drops
 //!   a case.
+//!
+//! Beyond one machine (DESIGN.md §9): the [`shard`] module partitions
+//! a case grid across hosts (`repro experiment --shard k/N` owns the
+//! cases with `index % N == k`), and the [`merge`] module recombines
+//! the per-shard output directories — CSVs byte-identical to an
+//! unsharded run, exact counters summed, latency sketches merged
+//! within the documented rank bound. The same case-index seeding that
+//! makes `--jobs` determinism hold makes shard assignment
+//! result-invariant, so adding hosts is purely a wall-clock decision.
+
+pub mod merge;
+pub mod shard;
+
+pub use merge::{merge_shard_dirs, MergedExperiment};
+pub use shard::{active_shard, set_shard, ShardSpec};
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -86,6 +101,21 @@ impl SweepExecutor {
     /// already in flight finish), and the error of the lowest-index
     /// failing case is returned — the same error the serial path stops
     /// at, deterministic regardless of scheduling.
+    ///
+    /// ```
+    /// use vidur_energy::sweep::SweepExecutor;
+    ///
+    /// // A toy grid: squares of 0..8, computed on 4 workers.
+    /// let out = SweepExecutor::new(4)
+    ///     .run((0u64..8).collect(), |i, &c| {
+    ///         assert_eq!(i as u64, c); // f sees the case index
+    ///         Ok(c * c)
+    ///     })
+    ///     .unwrap();
+    /// // Results come back in case order, whatever order workers
+    /// // finished in.
+    /// assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    /// ```
     pub fn run<T, R, F>(&self, cases: Vec<T>, f: F) -> Result<Vec<R>>
     where
         T: Sync + Send,

@@ -1,0 +1,171 @@
+//! Cross-machine sweep sharding (DESIGN.md §9): deterministic
+//! partitioning of an experiment's case grid across hosts.
+//!
+//! A [`ShardSpec`] `k/N` owns every case whose **global** case index
+//! `i` satisfies `i % N == k`. Ownership is a pure function of the
+//! index — and each case's RNG seed already is too
+//! ([`crate::util::rng::case_seed`]) — so running a grid sharded
+//! changes *which process* runs a case, never the case's results.
+//! That is the whole determinism argument behind `repro merge`
+//! reproducing byte-identical CSVs: shard outputs are the same rows
+//! the unsharded run would have written, just distributed.
+//!
+//! The active shard is process-global (set once from the CLI's
+//! `--shard k/N`, like the `--jobs` worker count), so experiment
+//! regenerators pick it up without signature churn.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One shard of an `N`-way partition: this process runs the cases with
+/// `index % total == index_of_this_shard`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Zero-based shard index, `< total`.
+    pub index: u32,
+    /// Total number of shards, ≥ 1.
+    pub total: u32,
+}
+
+impl ShardSpec {
+    pub fn new(index: u32, total: u32) -> Result<ShardSpec> {
+        if total == 0 {
+            bail!("shard total must be ≥ 1");
+        }
+        if index >= total {
+            bail!("shard index {index} out of range for {total} shards (indices are 0-based)");
+        }
+        Ok(ShardSpec { index, total })
+    }
+
+    /// Parse the CLI form `k/N` (zero-based `k`, e.g. `0/4` … `3/4`).
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let Some((k, n)) = s.split_once('/') else {
+            bail!("--shard expects k/N (e.g. 0/4), got '{s}'");
+        };
+        let index: u32 = k
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad shard index '{k}' in '{s}'"))?;
+        let total: u32 = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad shard count '{n}' in '{s}'"))?;
+        ShardSpec::new(index, total)
+    }
+
+    /// Does this shard own global case index `i`?
+    pub fn owns(&self, case_index: usize) -> bool {
+        case_index % self.total as usize == self.index as usize
+    }
+
+    /// How many of `total_cases` this shard owns.
+    pub fn count_owned(&self, total_cases: usize) -> usize {
+        (0..total_cases).filter(|&i| self.owns(i)).count()
+    }
+
+    /// The CLI / sidecar form `k/N`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.total)
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.total)
+    }
+}
+
+/// Process-wide active shard, packed into one atomic: 0 = unsharded,
+/// else `(total << 32) | (index + 1)` (total ≥ 1 makes the high word
+/// nonzero). Mirrors the `DEFAULT_JOBS` pattern next door.
+static ACTIVE_SHARD: AtomicU64 = AtomicU64::new(0);
+
+/// Set (or clear, with `None`) the process-wide shard — the CLI's
+/// `--shard k/N`.
+pub fn set_shard(shard: Option<ShardSpec>) {
+    let packed = match shard {
+        None => 0,
+        Some(s) => ((s.total as u64) << 32) | (s.index as u64 + 1),
+    };
+    ACTIVE_SHARD.store(packed, Ordering::Relaxed);
+}
+
+/// The process-wide active shard, if any.
+pub fn active_shard() -> Option<ShardSpec> {
+    match ACTIVE_SHARD.load(Ordering::Relaxed) {
+        0 => None,
+        packed => Some(ShardSpec {
+            index: (packed & 0xFFFF_FFFF) as u32 - 1,
+            total: (packed >> 32) as u32,
+        }),
+    }
+}
+
+/// Partition a case list by the process-wide active shard: returns the
+/// shard (if any) and the `(global index, case)` pairs this process
+/// owns, in ascending index order — the shared front half of every
+/// shardable sweep (`experiments::common::run_grid`, the autoscale
+/// policy sweep). With no active shard, every case is owned.
+pub fn shard_owned<T>(cases: Vec<T>) -> (Option<ShardSpec>, Vec<(usize, T)>) {
+    let shard = active_shard();
+    let total = cases.len();
+    let owned: Vec<(usize, T)> = cases
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| shard.map(|s| s.owns(*i)).unwrap_or(true))
+        .collect();
+    if let Some(s) = shard {
+        eprintln!("shard {s}: running {} of {total} cases", owned.len());
+    }
+    (shard, owned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_ownership_partition_the_grid() {
+        let shards: Vec<ShardSpec> =
+            (0..4).map(|k| ShardSpec::parse(&format!("{k}/4")).unwrap()).collect();
+        for i in 0..100usize {
+            let owners: Vec<u32> = shards
+                .iter()
+                .filter(|s| s.owns(i))
+                .map(|s| s.index)
+                .collect();
+            assert_eq!(owners.len(), 1, "case {i} owned by {owners:?}");
+            assert_eq!(owners[0] as usize, i % 4);
+        }
+        assert_eq!(shards[1].count_owned(10), 3); // 1, 5, 9
+        assert_eq!(shards[1].label(), "1/4");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ShardSpec::parse("4/4").is_err()); // 0-based
+        assert!(ShardSpec::parse("0/0").is_err());
+        assert!(ShardSpec::parse("1").is_err());
+        assert!(ShardSpec::parse("a/4").is_err());
+        assert!(ShardSpec::parse("1/b").is_err());
+        assert!(ShardSpec::parse("2/4").is_ok());
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let s = ShardSpec::parse("0/1").unwrap();
+        assert!((0..50).all(|i| s.owns(i)));
+        assert_eq!(s.count_owned(50), 50);
+    }
+
+    #[test]
+    fn shard_global_roundtrips() {
+        // Sequential set/get in one test: the static is process-global.
+        assert_eq!(active_shard(), None);
+        set_shard(Some(ShardSpec::new(2, 5).unwrap()));
+        assert_eq!(active_shard(), Some(ShardSpec { index: 2, total: 5 }));
+        set_shard(None);
+        assert_eq!(active_shard(), None);
+    }
+}

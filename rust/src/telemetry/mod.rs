@@ -13,11 +13,26 @@
 //!   [`RequestLog`] (full request vector; exact percentiles) and the
 //!   [`StreamingRequestSink`] (online SLO counters, token totals, and
 //!   Greenwald–Khanna latency quantile sketches).
+//!
+//! Every streaming accumulator is **mergeable** (DESIGN.md §9):
+//! [`RequestStats::merge`] / [`StageStats::merge`] sum exact counters
+//! and recombine weighted means, [`LatencySketches::merge`] combines
+//! the GK sketches within a documented rank-error bound, and
+//! [`ShardTelemetry`] packages all of it — plus the case-index map —
+//! into the `telemetry.json` sidecar that `repro experiment --shard
+//! k/N` writes and `repro merge` recombines. That sidecar is what
+//! makes a sweep sharded across machines equivalent to one big local
+//! run: CSVs merge byte-identically, counters exactly, quantiles
+//! within ε.
 
 pub mod reqsink;
+pub mod shard;
 pub mod sink;
 pub mod stagelog;
 
-pub use reqsink::{RequestLog, RequestSink, RequestStats, StreamingRequestSink};
+pub use reqsink::{
+    LatencySketches, RequestLog, RequestSink, RequestStats, StreamingRequestSink,
+};
+pub use shard::ShardTelemetry;
 pub use sink::{StageSink, StageStats, StreamingSink};
 pub use stagelog::{StageLog, StageRecord};

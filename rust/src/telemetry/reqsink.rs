@@ -18,10 +18,19 @@
 //! the same folds on the same completion order. Quantiles from the
 //! streaming sink are approximate within the sketch's documented rank
 //! error ε ([`StreamingRequestSink::DEFAULT_EPS`]).
+//!
+//! Both the counter accumulator ([`RequestStats::merge`]) and the
+//! sketch bundle ([`LatencySketches::merge`]) are mergeable across
+//! disjoint completion streams, which is what lets a cross-machine
+//! sweep recombine per-shard request telemetry (`repro merge`,
+//! DESIGN.md §9) without re-running: counters stay exact under any
+//! grouping, quantiles stay within the combined rank-error bound.
 
 use crate::config::simconfig::SimConfig;
+use crate::util::json::Value;
 use crate::util::stats::{percentile, QuantileSketch};
 use crate::workload::Request;
+use anyhow::Result;
 
 /// Aggregates the metrics layer consumes, regardless of sink kind.
 /// `submitted` is stamped by the engine (sinks only observe
@@ -45,6 +54,9 @@ pub struct RequestStats {
     pub queue_delay_p50_s: f64,
     /// Mean normalized latency (s per output token) — vLLM's metric.
     pub norm_latency_mean_s_per_tok: f64,
+    /// Completions contributing to the normalized-latency mean — the
+    /// mean's weight, carried so two `RequestStats` merge exactly.
+    pub norm_latency_n: u64,
     /// Completions whose TTFT met the configured SLO.
     pub slo_ttft_ok: u64,
     /// Completions whose e2e latency met the configured SLO.
@@ -57,6 +69,167 @@ impl RequestStats {
     /// Tokens actually processed (prefill + decode) by completions.
     pub fn tokens_done(&self) -> u64 {
         self.prefill_tokens_done + self.decode_tokens_done
+    }
+
+    /// Fold another (disjoint) completion stream's accumulator into
+    /// this one (DESIGN.md §9). Every counter sums exactly; the
+    /// normalized-latency mean recombines weighted by
+    /// `norm_latency_n`.
+    ///
+    /// The five quantile point-estimates (`ttft_p50_s` …
+    /// `queue_delay_p50_s`) are **not** mergeable from point values and
+    /// are reset to 0.0 — re-derive them from merged
+    /// [`LatencySketches`] via [`LatencySketches::apply_quantiles`]
+    /// (the shard telemetry merge does exactly that).
+    pub fn merge(&mut self, other: &RequestStats) {
+        let n = self.norm_latency_n + other.norm_latency_n;
+        self.norm_latency_mean_s_per_tok = if n == 0 {
+            0.0
+        } else {
+            (self.norm_latency_mean_s_per_tok * self.norm_latency_n as f64
+                + other.norm_latency_mean_s_per_tok * other.norm_latency_n as f64)
+                / n as f64
+        };
+        self.norm_latency_n = n;
+        self.submitted += other.submitted;
+        self.finished += other.finished;
+        self.prefill_tokens_done += other.prefill_tokens_done;
+        self.decode_tokens_done += other.decode_tokens_done;
+        self.slo_ttft_ok += other.slo_ttft_ok;
+        self.slo_e2e_ok += other.slo_e2e_ok;
+        self.slo_both_ok += other.slo_both_ok;
+        self.ttft_p50_s = 0.0;
+        self.ttft_p99_s = 0.0;
+        self.e2e_p50_s = 0.0;
+        self.e2e_p99_s = 0.0;
+        self.queue_delay_p50_s = 0.0;
+    }
+
+    /// Serialize for the shard telemetry sidecar. The quantile fields
+    /// ride along for human readers; the merge path recomputes them
+    /// from the sketches.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("submitted", self.submitted)
+            .set("finished", self.finished)
+            .set("prefill_tokens_done", self.prefill_tokens_done)
+            .set("decode_tokens_done", self.decode_tokens_done)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+            .set("e2e_p50_s", self.e2e_p50_s)
+            .set("e2e_p99_s", self.e2e_p99_s)
+            .set("queue_delay_p50_s", self.queue_delay_p50_s)
+            .set("norm_latency_mean_s_per_tok", self.norm_latency_mean_s_per_tok)
+            .set("norm_latency_n", self.norm_latency_n)
+            .set("slo_ttft_ok", self.slo_ttft_ok)
+            .set("slo_e2e_ok", self.slo_e2e_ok)
+            .set("slo_both_ok", self.slo_both_ok);
+        v
+    }
+
+    /// Reload stats serialized by [`RequestStats::to_json`].
+    pub fn from_json(v: &Value) -> Result<RequestStats> {
+        Ok(RequestStats {
+            submitted: v.req_u64("submitted")?,
+            finished: v.req_u64("finished")?,
+            prefill_tokens_done: v.req_u64("prefill_tokens_done")?,
+            decode_tokens_done: v.req_u64("decode_tokens_done")?,
+            ttft_p50_s: v.req_f64("ttft_p50_s")?,
+            ttft_p99_s: v.req_f64("ttft_p99_s")?,
+            e2e_p50_s: v.req_f64("e2e_p50_s")?,
+            e2e_p99_s: v.req_f64("e2e_p99_s")?,
+            queue_delay_p50_s: v.req_f64("queue_delay_p50_s")?,
+            norm_latency_mean_s_per_tok: v.req_f64("norm_latency_mean_s_per_tok")?,
+            norm_latency_n: v.req_u64("norm_latency_n")?,
+            slo_ttft_ok: v.req_u64("slo_ttft_ok")?,
+            slo_e2e_ok: v.req_u64("slo_e2e_ok")?,
+            slo_both_ok: v.req_u64("slo_both_ok")?,
+        })
+    }
+}
+
+/// The four latency-distribution sketches the streaming request sink
+/// maintains — TTFT, end-to-end, queue delay, normalized latency —
+/// bundled so they can travel together: out of a finished sink
+/// ([`StreamingRequestSink::into_sketches`]), into the shard telemetry
+/// sidecar (`to_json`/`from_json`), and across shards
+/// ([`LatencySketches::merge`], DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct LatencySketches {
+    pub ttft: QuantileSketch,
+    pub e2e: QuantileSketch,
+    pub queue_delay: QuantileSketch,
+    pub norm_latency: QuantileSketch,
+}
+
+impl LatencySketches {
+    /// Four empty sketches at rank error `eps`.
+    pub fn new(eps: f64) -> Self {
+        LatencySketches {
+            ttft: QuantileSketch::new(eps),
+            e2e: QuantileSketch::new(eps),
+            queue_delay: QuantileSketch::new(eps),
+            norm_latency: QuantileSketch::new(eps),
+        }
+    }
+
+    /// Merge another shard's sketches distribution-by-distribution
+    /// (each within the combined rank-error bound of
+    /// [`QuantileSketch::merge`]).
+    pub fn merge(&mut self, other: &LatencySketches) {
+        self.ttft.merge(&other.ttft);
+        self.e2e.merge(&other.e2e);
+        self.queue_delay.merge(&other.queue_delay);
+        self.norm_latency.merge(&other.norm_latency);
+    }
+
+    /// Total resident tuples across the four sketches.
+    pub fn resident_tuples(&self) -> usize {
+        self.ttft.resident_tuples()
+            + self.e2e.resident_tuples()
+            + self.queue_delay.resident_tuples()
+            + self.norm_latency.resident_tuples()
+    }
+
+    /// Overwrite `stats`'s quantile point-estimates from the sketches
+    /// — the step that makes a merged [`RequestStats`] whole again
+    /// after [`RequestStats::merge`] reset them.
+    pub fn apply_quantiles(&self, stats: &mut RequestStats) {
+        let q = |s: &QuantileSketch, p: f64| s.quantile(p).unwrap_or(0.0);
+        let ttft = self.ttft.flushed();
+        let e2e = self.e2e.flushed();
+        let qdel = self.queue_delay.flushed();
+        stats.ttft_p50_s = q(&ttft, 0.50);
+        stats.ttft_p99_s = q(&ttft, 0.99);
+        stats.e2e_p50_s = q(&e2e, 0.50);
+        stats.e2e_p99_s = q(&e2e, 0.99);
+        stats.queue_delay_p50_s = q(&qdel, 0.50);
+    }
+
+    /// Serialize for the shard telemetry sidecar.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("ttft", self.ttft.to_json())
+            .set("e2e", self.e2e.to_json())
+            .set("queue_delay", self.queue_delay.to_json())
+            .set("norm_latency", self.norm_latency.to_json());
+        v
+    }
+
+    /// Reload sketches serialized by [`LatencySketches::to_json`].
+    pub fn from_json(v: &Value) -> Result<LatencySketches> {
+        let s = |key: &str| -> Result<QuantileSketch> {
+            QuantileSketch::from_json(
+                v.get(key)
+                    .ok_or_else(|| anyhow::anyhow!("sketches missing '{key}'"))?,
+            )
+        };
+        Ok(LatencySketches {
+            ttft: s("ttft")?,
+            e2e: s("e2e")?,
+            queue_delay: s("queue_delay")?,
+            norm_latency: s("norm_latency")?,
+        })
     }
 }
 
@@ -184,6 +357,7 @@ impl RequestSink for RequestLog {
             e2e_p99_s: pc(&e2e, 99.0),
             queue_delay_p50_s: pc(&qdel, 50.0),
             norm_latency_mean_s_per_tok: self.fold.norm_mean(),
+            norm_latency_n: self.fold.norm_n,
             slo_ttft_ok: self.fold.slo_ttft_ok,
             slo_e2e_ok: self.fold.slo_e2e_ok,
             slo_both_ok: self.fold.slo_both_ok,
@@ -199,10 +373,7 @@ pub struct StreamingRequestSink {
     slo_ttft_s: f64,
     slo_e2e_s: f64,
     fold: ExactFold,
-    ttft: QuantileSketch,
-    e2e: QuantileSketch,
-    queue_delay: QuantileSketch,
-    norm: QuantileSketch,
+    sketches: LatencySketches,
 }
 
 impl StreamingRequestSink {
@@ -220,36 +391,43 @@ impl StreamingRequestSink {
             slo_ttft_s: cfg.slo_ttft_s,
             slo_e2e_s: cfg.slo_e2e_s,
             fold: ExactFold::default(),
-            ttft: QuantileSketch::new(eps),
-            e2e: QuantileSketch::new(eps),
-            queue_delay: QuantileSketch::new(eps),
-            norm: QuantileSketch::new(eps),
+            sketches: LatencySketches::new(eps),
         }
     }
 
     /// The sketches' rank-error parameter ε.
     pub fn epsilon(&self) -> f64 {
-        self.ttft.epsilon()
+        self.sketches.ttft.epsilon()
     }
 
     /// Total resident sketch tuples across the four distributions —
     /// the sink's whole per-request memory footprint.
     pub fn resident_tuples(&self) -> usize {
-        self.ttft.resident_tuples()
-            + self.e2e.resident_tuples()
-            + self.queue_delay.resident_tuples()
-            + self.norm.resident_tuples()
+        self.sketches.resident_tuples()
     }
 
     /// Normalized-latency quantile (s per output token) — beyond the
     /// mean that [`RequestStats`] carries.
     pub fn norm_latency_quantile(&self, q: f64) -> Option<f64> {
-        self.norm.quantile(q)
+        self.sketches.norm_latency.quantile(q)
     }
 
     /// Queue-delay quantile beyond the p50 in [`RequestStats`].
     pub fn queue_delay_quantile(&self, q: f64) -> Option<f64> {
-        self.queue_delay.quantile(q)
+        self.sketches.queue_delay.quantile(q)
+    }
+
+    /// Borrow the latency sketches (e.g. to serialize alongside
+    /// `stats()` without consuming the sink).
+    pub fn sketches(&self) -> &LatencySketches {
+        &self.sketches
+    }
+
+    /// Take the latency sketches out of a finished sink — the
+    /// per-case telemetry a sharded sweep persists so shards can later
+    /// merge into one distribution (DESIGN.md §9).
+    pub fn into_sketches(self) -> LatencySketches {
+        self.sketches
     }
 }
 
@@ -257,39 +435,36 @@ impl RequestSink for StreamingRequestSink {
     fn record(&mut self, r: &Request) {
         self.fold.add(r, self.slo_ttft_s, self.slo_e2e_s);
         if let Some(t) = r.ttft() {
-            self.ttft.add(t);
+            self.sketches.ttft.add(t);
         }
         if let Some(l) = r.e2e_latency() {
-            self.e2e.add(l);
-            self.norm.add(l / r.decode_tokens.max(1) as f64);
+            self.sketches.e2e.add(l);
+            self.sketches
+                .norm_latency
+                .add(l / r.decode_tokens.max(1) as f64);
         }
         if let Some(s) = r.scheduled_s {
-            self.queue_delay.add(s - r.arrival_s);
+            self.sketches.queue_delay.add(s - r.arrival_s);
         }
     }
 
     fn stats(&self) -> RequestStats {
-        // One flush per sketch regardless of how many quantiles are
-        // read off it.
-        let ttft = self.ttft.flushed();
-        let e2e = self.e2e.flushed();
-        let qdel = self.queue_delay.flushed();
-        let q = |s: &QuantileSketch, p: f64| s.quantile(p).unwrap_or(0.0);
-        RequestStats {
+        let mut st = RequestStats {
             submitted: self.fold.finished,
             finished: self.fold.finished,
             prefill_tokens_done: self.fold.prefill_tokens_done,
             decode_tokens_done: self.fold.decode_tokens_done,
-            ttft_p50_s: q(&ttft, 0.50),
-            ttft_p99_s: q(&ttft, 0.99),
-            e2e_p50_s: q(&e2e, 0.50),
-            e2e_p99_s: q(&e2e, 0.99),
-            queue_delay_p50_s: q(&qdel, 0.50),
             norm_latency_mean_s_per_tok: self.fold.norm_mean(),
+            norm_latency_n: self.fold.norm_n,
             slo_ttft_ok: self.fold.slo_ttft_ok,
             slo_e2e_ok: self.fold.slo_e2e_ok,
             slo_both_ok: self.fold.slo_both_ok,
-        }
+            ..RequestStats::default()
+        };
+        // One flush per sketch regardless of how many quantiles are
+        // read off it.
+        self.sketches.apply_quantiles(&mut st);
+        st
     }
 }
 
@@ -368,6 +543,65 @@ mod tests {
         assert_eq!(st.norm_latency_mean_s_per_tok, 0.0);
         assert_eq!(s.resident_tuples(), 0);
         assert_eq!(RequestLog::new(&cfg).stats(), st);
+    }
+
+    /// Shard-merge contract on the request side: recording a stream
+    /// split across two streaming sinks and merging their stats +
+    /// sketches reproduces the whole-stream accumulator — counters
+    /// exactly, quantiles within the combined rank bound.
+    #[test]
+    fn request_stats_and_sketches_merge_matches_unsharded() {
+        let cfg = SimConfig::default();
+        let mut whole = StreamingRequestSink::new(&cfg);
+        let mut a = StreamingRequestSink::new(&cfg);
+        let mut b = StreamingRequestSink::new(&cfg);
+        for i in 0..800u64 {
+            let r = finished_req(
+                i,
+                i as f64 * 0.05,
+                0.05 + (i % 37) as f64 * 0.3,
+                1.0 + (i % 83) as f64,
+            );
+            whole.record(&r);
+            if i % 2 == 0 {
+                a.record(&r);
+            } else {
+                b.record(&r);
+            }
+        }
+        let want = whole.stats();
+        let mut merged = a.stats();
+        merged.merge(&b.stats());
+        // Counters and the mean are exact.
+        assert_eq!(merged.submitted, want.submitted);
+        assert_eq!(merged.finished, want.finished);
+        assert_eq!(merged.prefill_tokens_done, want.prefill_tokens_done);
+        assert_eq!(merged.decode_tokens_done, want.decode_tokens_done);
+        assert_eq!(merged.slo_ttft_ok, want.slo_ttft_ok);
+        assert_eq!(merged.slo_e2e_ok, want.slo_e2e_ok);
+        assert_eq!(merged.slo_both_ok, want.slo_both_ok);
+        assert_eq!(merged.norm_latency_n, want.norm_latency_n);
+        assert!(
+            (merged.norm_latency_mean_s_per_tok - want.norm_latency_mean_s_per_tok).abs()
+                < 1e-12
+        );
+        // Quantiles were reset by merge() and come back from the
+        // merged sketches.
+        assert_eq!(merged.ttft_p50_s, 0.0);
+        let mut sk = a.into_sketches();
+        sk.merge(b.sketches());
+        sk.apply_quantiles(&mut merged);
+        // ε = 1e-3, n = 800 → rank bound ⌈εn⌉ = 1; the TTFT grid step
+        // is 0.3 s, e2e step 1 s: one rank is at most one step.
+        assert!((merged.ttft_p50_s - want.ttft_p50_s).abs() <= 0.3 + 1e-9);
+        assert!((merged.e2e_p99_s - want.e2e_p99_s).abs() <= 1.0 + 1e-9);
+        assert!((merged.queue_delay_p50_s - want.queue_delay_p50_s).abs() <= 0.15 + 1e-9);
+        // Sidecar round-trip of both halves is lossless.
+        let stats_back = RequestStats::from_json(&want.to_json()).unwrap();
+        assert_eq!(stats_back, want);
+        let sk_back = LatencySketches::from_json(&sk.to_json()).unwrap();
+        assert_eq!(sk_back.ttft.quantile(0.5), sk.ttft.quantile(0.5));
+        assert_eq!(sk_back.e2e.count(), sk.e2e.count());
     }
 
     #[test]

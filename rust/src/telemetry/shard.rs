@@ -1,0 +1,389 @@
+//! The shard telemetry sidecar (DESIGN.md §9).
+//!
+//! A sharded experiment run (`repro experiment <id> --shard k/N`)
+//! cannot put everything it knows into its CSV rows: the per-request
+//! latency *distributions*, the exact counter accumulators, and the
+//! sweep-level oracle/memory statistics all need to survive the trip
+//! to the merge host in mergeable form. [`ShardTelemetry`] is that
+//! container — one `telemetry.json` per experiment directory holding:
+//!
+//! * the global case indices this process ran (row ↔ case mapping for
+//!   the CSV merge);
+//! * the summed [`RequestStats`] counters and merged [`StageStats`];
+//! * Greenwald–Khanna sketch snapshots ([`LatencySketches`]) for
+//!   TTFT / e2e / queue-delay / normalized latency;
+//! * [`OracleStats`] and the peak-memory telemetry that feeds
+//!   `meta.json`'s `sweep` object.
+//!
+//! Unsharded runs write the same sidecar (with `shard: null`), so a
+//! merged N-shard run and an unsharded run produce structurally
+//! identical outputs — the parity that `tests/shard_merge.rs` pins
+//! down. [`ShardTelemetry::merge`] enforces the protocol: same
+//! experiment, same grid size, disjoint case sets; counters add
+//! exactly, peaks take maxima, sketches merge within the combined
+//! rank-error bound, and the quantile point-estimates are re-derived
+//! from the merged sketches.
+
+use crate::exec::OracleStats;
+use crate::sweep::ShardSpec;
+use crate::telemetry::{LatencySketches, RequestStats, StageStats, StreamingRequestSink};
+use crate::util::json::Value;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Format tag written into every sidecar; bumped on breaking changes.
+pub const FORMAT: &str = "vidur-energy/shard-telemetry/v1";
+
+/// The sidecar's file name inside an experiment directory.
+pub const FILENAME: &str = "telemetry.json";
+
+/// Mergeable telemetry of one shard (or of a whole unsharded run) of
+/// one experiment.
+#[derive(Debug, Clone)]
+pub struct ShardTelemetry {
+    /// Experiment id (`exp1`, `autoscale`, …).
+    pub experiment: String,
+    /// Which shard produced this; `None` for unsharded/merged output.
+    pub shard: Option<ShardSpec>,
+    /// Size of the full case grid (all shards together).
+    pub total_cases: u64,
+    /// Global case indices this telemetry covers, ascending — also the
+    /// row order of the accompanying CSV.
+    pub cases: Vec<u64>,
+    /// Worker threads used (`--jobs`); merged: max across shards.
+    pub jobs: u64,
+    /// Summed exact request counters across the covered cases.
+    pub requests: RequestStats,
+    /// Merged stage aggregates across the covered cases.
+    pub stages: StageStats,
+    /// Summed oracle memo-cache statistics.
+    pub oracle: OracleStats,
+    /// Latency sketch snapshots, merged across the covered cases.
+    pub sketches: LatencySketches,
+    /// Peak resident Eq. 5 bins of any covered case (max semantics).
+    pub peak_resident_bins: u64,
+    /// Peak live requests of any covered case (max semantics).
+    pub peak_live_requests: u64,
+}
+
+impl ShardTelemetry {
+    /// An empty accumulator for `experiment` over a `total_cases` grid.
+    pub fn new(experiment: &str, shard: Option<ShardSpec>, total_cases: u64) -> Self {
+        ShardTelemetry {
+            experiment: experiment.to_string(),
+            shard,
+            total_cases,
+            cases: Vec::new(),
+            jobs: crate::sweep::default_jobs() as u64,
+            requests: RequestStats::default(),
+            stages: StageStats::default(),
+            oracle: OracleStats::default(),
+            sketches: LatencySketches::new(StreamingRequestSink::DEFAULT_EPS),
+            peak_resident_bins: 0,
+            peak_live_requests: 0,
+        }
+    }
+
+    /// Fold one case's telemetry in (cases may arrive in any order;
+    /// the list is kept sorted).
+    pub fn add_case(
+        &mut self,
+        case_index: u64,
+        requests: &RequestStats,
+        stages: &StageStats,
+        oracle: &OracleStats,
+        sketches: &LatencySketches,
+        peak_resident_bins: u64,
+        peak_live_requests: u64,
+    ) {
+        let pos = self.cases.partition_point(|&c| c < case_index);
+        self.cases.insert(pos, case_index);
+        self.requests.merge(requests);
+        self.stages.merge(stages);
+        self.oracle.merge(oracle);
+        self.sketches.merge(sketches);
+        self.peak_resident_bins = self.peak_resident_bins.max(peak_resident_bins);
+        self.peak_live_requests = self.peak_live_requests.max(peak_live_requests);
+        // The quantile point-estimates in `requests` stay stale (zero)
+        // during accumulation; `to_json` re-derives them from the
+        // sketches once at serialization time.
+    }
+
+    /// Does this telemetry cover the entire grid (`0..total_cases`)?
+    pub fn is_complete(&self) -> bool {
+        self.cases.len() as u64 == self.total_cases
+            && self.cases.iter().enumerate().all(|(i, &c)| c == i as u64)
+    }
+
+    /// Merge another shard's telemetry into this one (the `repro
+    /// merge` core). Fails on protocol violations: different
+    /// experiments, different grid sizes, or overlapping case sets.
+    /// The result drops the shard identity (`shard: None`) — it now
+    /// speaks for the union.
+    pub fn merge(&mut self, other: &ShardTelemetry) -> Result<()> {
+        if self.experiment != other.experiment {
+            bail!(
+                "cannot merge telemetry of '{}' into '{}'",
+                other.experiment,
+                self.experiment
+            );
+        }
+        if self.total_cases != other.total_cases {
+            bail!(
+                "shard grids disagree: {} vs {} total cases — \
+                 shards must come from the same experiment invocation \
+                 (same --fast setting, same grid)",
+                self.total_cases,
+                other.total_cases
+            );
+        }
+        if let Some(dup) = other.cases.iter().find(|c| self.cases.binary_search(c).is_ok()) {
+            bail!(
+                "shards overlap: case {dup} appears in both — \
+                 each shard k/N must have run with a distinct k"
+            );
+        }
+        let mut cases = Vec::with_capacity(self.cases.len() + other.cases.len());
+        let (mut a, mut b) = (self.cases.iter().peekable(), other.cases.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (None, None) => break,
+                (Some(_), None) => cases.push(*a.next().unwrap()),
+                (None, Some(_)) => cases.push(*b.next().unwrap()),
+                (Some(&&x), Some(&&y)) => {
+                    if x <= y {
+                        cases.push(*a.next().unwrap());
+                    } else {
+                        cases.push(*b.next().unwrap());
+                    }
+                }
+            }
+        }
+        self.cases = cases;
+        self.shard = None;
+        self.jobs = self.jobs.max(other.jobs);
+        self.requests.merge(&other.requests);
+        self.stages.merge(&other.stages);
+        self.oracle.merge(&other.oracle);
+        self.sketches.merge(&other.sketches);
+        self.peak_resident_bins = self.peak_resident_bins.max(other.peak_resident_bins);
+        self.peak_live_requests = self.peak_live_requests.max(other.peak_live_requests);
+        self.sketches.apply_quantiles(&mut self.requests);
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        // One quantile derivation per serialization, however many
+        // cases were folded in.
+        let mut requests = self.requests;
+        self.sketches.apply_quantiles(&mut requests);
+        let mut v = Value::obj();
+        v.set("format", FORMAT)
+            .set("experiment", self.experiment.as_str())
+            .set(
+                "shard",
+                match self.shard {
+                    Some(s) => Value::Str(s.label()),
+                    None => Value::Null,
+                },
+            )
+            .set("total_cases", self.total_cases)
+            .set("cases", Value::Arr(self.cases.iter().map(|&c| Value::Num(c as f64)).collect()))
+            .set("jobs", self.jobs)
+            .set("requests", requests.to_json())
+            .set("stages", self.stages.to_json())
+            .set("oracle_cache", self.oracle.to_json())
+            .set("sketches", self.sketches.to_json())
+            .set("peak_resident_bins", self.peak_resident_bins)
+            .set("peak_live_requests", self.peak_live_requests);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<ShardTelemetry> {
+        let format = v.req_str("format")?;
+        if format != FORMAT {
+            bail!("unknown telemetry sidecar format '{format}' (expected '{FORMAT}')");
+        }
+        let shard = match v.get("shard") {
+            Some(Value::Str(s)) => Some(ShardSpec::parse(s)?),
+            Some(Value::Null) | None => None,
+            Some(other) => bail!("bad 'shard' field: {}", other.to_string()),
+        };
+        let mut cases = Vec::new();
+        for (i, c) in v
+            .get("cases")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("telemetry missing 'cases' array"))?
+            .iter()
+            .enumerate()
+        {
+            let c = c
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("bad case index at position {i}"))?;
+            if let Some(&last) = cases.last() {
+                anyhow::ensure!(c > last, "case indices must be strictly ascending");
+            }
+            cases.push(c);
+        }
+        Ok(ShardTelemetry {
+            experiment: v.req_str("experiment")?.to_string(),
+            shard,
+            total_cases: v.req_u64("total_cases")?,
+            cases,
+            jobs: v.req_u64("jobs")?,
+            requests: RequestStats::from_json(
+                v.get("requests")
+                    .ok_or_else(|| anyhow::anyhow!("telemetry missing 'requests'"))?,
+            )?,
+            stages: StageStats::from_json(
+                v.get("stages")
+                    .ok_or_else(|| anyhow::anyhow!("telemetry missing 'stages'"))?,
+            )?,
+            oracle: OracleStats::from_json(
+                v.get("oracle_cache")
+                    .ok_or_else(|| anyhow::anyhow!("telemetry missing 'oracle_cache'"))?,
+            )?,
+            sketches: LatencySketches::from_json(
+                v.get("sketches")
+                    .ok_or_else(|| anyhow::anyhow!("telemetry missing 'sketches'"))?,
+            )?,
+            peak_resident_bins: v.req_u64("peak_resident_bins")?,
+            peak_live_requests: v.req_u64("peak_live_requests")?,
+        })
+    }
+
+    /// Write the sidecar into `dir` as [`FILENAME`].
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(FILENAME);
+        std::fs::write(&path, self.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))
+    }
+
+    /// Load the sidecar from `dir`, or `Ok(None)` if there is none
+    /// (pre-sharding results, single-case experiments).
+    pub fn load(dir: &Path) -> Result<Option<ShardTelemetry>> {
+        let path = dir.join(FILENAME);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let v = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        Ok(Some(Self::from_json(&v).with_context(|| format!("{path:?}"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::SimConfig;
+    use crate::telemetry::RequestSink;
+    use crate::workload::Request;
+
+    fn sample_sink(ids: std::ops::Range<u64>) -> StreamingRequestSink {
+        let cfg = SimConfig::default();
+        let mut s = StreamingRequestSink::new(&cfg);
+        for i in ids {
+            let mut r = Request::new(i, i as f64, 64, 16);
+            r.prefill_done = 64;
+            r.decode_done = 16;
+            r.scheduled_s = Some(i as f64 + 0.1);
+            r.first_token_s = Some(i as f64 + 0.3 + (i % 11) as f64 * 0.05);
+            r.finished_s = Some(i as f64 + 2.0 + (i % 17) as f64 * 0.2);
+            s.record(&r);
+        }
+        s
+    }
+
+    fn shard_tel(k: u32, n: u32, cases: &[u64]) -> ShardTelemetry {
+        let mut t = ShardTelemetry::new("expX", Some(ShardSpec::new(k, n).unwrap()), 8);
+        for &c in cases {
+            let sink = sample_sink(c * 100..c * 100 + 50);
+            let mut st = sink.stats();
+            st.submitted = 50;
+            let stages = StageStats {
+                stages: 10 + c,
+                weighted_mfu: 0.3,
+                dt_sum: 5.0,
+                mean_batch: 4.0,
+                batch_std: 1.0,
+                busy_gpu_s: 5.0,
+                span: (c as f64, c as f64 + 9.0),
+            };
+            let oracle = OracleStats {
+                calls: 100,
+                hits: 90,
+                resets: c,
+            };
+            t.add_case(c, &st, &stages, &oracle, sink.sketches(), 3 + c, 20 + c);
+        }
+        t
+    }
+
+    #[test]
+    fn merge_enforces_protocol_and_combines_with_documented_semantics() {
+        let mut a = shard_tel(0, 2, &[0, 2, 4, 6]);
+        let b = shard_tel(1, 2, &[1, 3, 5, 7]);
+        let finished_a = a.requests.finished;
+        a.merge(&b).unwrap();
+        assert_eq!(a.shard, None);
+        assert_eq!(a.cases, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(a.is_complete());
+        // Sum semantics.
+        assert_eq!(a.requests.finished, finished_a + b.requests.finished);
+        assert_eq!(a.oracle.calls, 800);
+        assert_eq!(a.oracle.resets, (0..8).sum::<u64>());
+        assert_eq!(a.stages.stages, (0..8).map(|c| 10 + c).sum::<u64>());
+        // Max semantics (the meta.json bugfix: peaks must not be
+        // last-shard-wins or summed).
+        assert_eq!(a.peak_resident_bins, 3 + 7);
+        assert_eq!(a.peak_live_requests, 20 + 7);
+        // Quantiles re-derived from the merged sketches, not zeroed.
+        assert!(a.requests.ttft_p50_s > 0.0);
+        assert_eq!(a.sketches.e2e.count(), a.requests.finished);
+
+        // Protocol violations.
+        let mut c = shard_tel(0, 2, &[0, 2]);
+        assert!(c.merge(&shard_tel(0, 2, &[0])).is_err(), "overlap");
+        let mut d = ShardTelemetry::new("other", None, 8);
+        assert!(d.merge(&b).is_err(), "experiment mismatch");
+        let mut e = ShardTelemetry::new("expX", None, 9);
+        assert!(e.merge(&b).is_err(), "grid size mismatch");
+    }
+
+    #[test]
+    fn sidecar_roundtrips_through_disk() {
+        let t = shard_tel(1, 4, &[1, 5]);
+        let dir = std::env::temp_dir().join("vidur_energy_shard_tel_test");
+        std::fs::remove_dir_all(&dir).ok();
+        t.save(&dir).unwrap();
+        let back = ShardTelemetry::load(&dir).unwrap().unwrap();
+        assert_eq!(back.experiment, t.experiment);
+        assert_eq!(back.shard, t.shard);
+        assert_eq!(back.cases, t.cases);
+        assert_eq!(back.total_cases, t.total_cases);
+        // Serialization applies the sketch-derived quantiles; the
+        // in-memory accumulator keeps them stale until then.
+        let mut want_requests = t.requests;
+        t.sketches.apply_quantiles(&mut want_requests);
+        assert_eq!(back.requests, want_requests);
+        assert!(back.requests.ttft_p50_s > 0.0);
+        assert_eq!(back.stages.stages, t.stages.stages);
+        assert_eq!(back.stages.weighted_mfu, t.stages.weighted_mfu);
+        assert_eq!(back.oracle, t.oracle);
+        assert_eq!(back.peak_resident_bins, t.peak_resident_bins);
+        assert_eq!(
+            back.sketches.ttft.quantile(0.99),
+            t.sketches.ttft.quantile(0.99)
+        );
+        // Absent sidecar is None, not an error.
+        let empty = std::env::temp_dir().join("vidur_energy_shard_tel_none");
+        std::fs::remove_dir_all(&empty).ok();
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(ShardTelemetry::load(&empty).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+}

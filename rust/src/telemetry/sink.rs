@@ -20,16 +20,27 @@ use crate::energy::StageAggregates;
 use crate::pipeline::{BinAccumulator, BinnedProfile};
 use crate::power::PowerModel;
 use crate::telemetry::{StageLog, StageRecord};
+use crate::util::json::Value;
 use crate::util::stats::Summary;
 use anyhow::Result;
 
 /// Aggregates the metrics layer consumes, regardless of sink kind.
+///
+/// Mergeable (DESIGN.md §9): [`StageStats::merge`] combines the
+/// accumulators of two disjoint record streams — counts and sums add,
+/// the weighted means recombine through their weights (`dt_sum` for
+/// MFU, `stages` for batch statistics), spans union. That is what lets
+/// per-shard stage telemetry from a cross-machine sweep fold into one
+/// experiment-level aggregate without re-running.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageStats {
     /// Stage records produced.
     pub stages: u64,
     /// Duration-weighted mean MFU (Fig. 1's y-axis).
     pub weighted_mfu: f64,
+    /// Total stage duration Σ Δt — `weighted_mfu`'s weight, carried so
+    /// two `StageStats` can merge their means exactly.
+    pub dt_sum: f64,
     /// Mean actual batch size across stages (Fig. 4 panel A).
     pub mean_batch: f64,
     pub batch_std: f64,
@@ -37,6 +48,72 @@ pub struct StageStats {
     pub busy_gpu_s: f64,
     /// Busy span: earliest start to latest end (0,0 when empty).
     pub span: (f64, f64),
+}
+
+impl StageStats {
+    /// Fold another (disjoint) record stream's aggregates into this
+    /// one. Per-field semantics: `stages`, `dt_sum`, `busy_gpu_s` sum;
+    /// `weighted_mfu` recombines weighted by `dt_sum`; the batch
+    /// mean/std recombine via Chan's parallel-variance formula weighted
+    /// by `stages`; `span` is the union (empty sides are ignored).
+    pub fn merge(&mut self, other: &StageStats) {
+        if other.stages == 0 {
+            return;
+        }
+        if self.stages == 0 {
+            *self = *other;
+            return;
+        }
+        let (n1, n2) = (self.stages as f64, other.stages as f64);
+        // Batch summary: reconstruct m2 from the sample std, merge, and
+        // re-derive. Exact up to float rounding (counters stay exact).
+        let m2_1 = self.batch_std * self.batch_std * (n1 - 1.0).max(0.0);
+        let m2_2 = other.batch_std * other.batch_std * (n2 - 1.0).max(0.0);
+        let d = other.mean_batch - self.mean_batch;
+        let n = n1 + n2;
+        let mean = self.mean_batch + d * n2 / n;
+        let m2 = m2_1 + m2_2 + d * d * n1 * n2 / n;
+        self.mean_batch = mean;
+        self.batch_std = if n > 1.0 { (m2 / (n - 1.0)).sqrt() } else { 0.0 };
+
+        let dt = self.dt_sum + other.dt_sum;
+        self.weighted_mfu = if dt == 0.0 {
+            0.0
+        } else {
+            (self.weighted_mfu * self.dt_sum + other.weighted_mfu * other.dt_sum) / dt
+        };
+        self.dt_sum = dt;
+        self.busy_gpu_s += other.busy_gpu_s;
+        self.stages += other.stages;
+        self.span = (self.span.0.min(other.span.0), self.span.1.max(other.span.1));
+    }
+
+    /// Serialize for the shard telemetry sidecar.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("stages", self.stages)
+            .set("weighted_mfu", self.weighted_mfu)
+            .set("dt_sum", self.dt_sum)
+            .set("mean_batch", self.mean_batch)
+            .set("batch_std", self.batch_std)
+            .set("busy_gpu_s", self.busy_gpu_s)
+            .set("span_lo", self.span.0)
+            .set("span_hi", self.span.1);
+        v
+    }
+
+    /// Reload stats serialized by [`StageStats::to_json`].
+    pub fn from_json(v: &Value) -> Result<StageStats> {
+        Ok(StageStats {
+            stages: v.req_u64("stages")?,
+            weighted_mfu: v.req_f64("weighted_mfu")?,
+            dt_sum: v.req_f64("dt_sum")?,
+            mean_batch: v.req_f64("mean_batch")?,
+            batch_std: v.req_f64("batch_std")?,
+            busy_gpu_s: v.req_f64("busy_gpu_s")?,
+            span: (v.req_f64("span_lo")?, v.req_f64("span_hi")?),
+        })
+    }
 }
 
 /// Consumer of the engine's per-stage telemetry. Object-safe: the
@@ -59,6 +136,7 @@ impl StageSink for StageLog {
         StageStats {
             stages: self.len() as u64,
             weighted_mfu: self.weighted_mfu(),
+            dt_sum: self.records.iter().map(|r| r.dt_s).sum(),
             mean_batch: self.batch_summary.mean(),
             batch_std: self.batch_summary.std(),
             busy_gpu_s: self.busy_gpu_seconds(),
@@ -95,8 +173,9 @@ impl StreamingSink {
     }
 
     /// Sink whose energy aggregates follow an explicit power model —
-    /// pass the same model the downstream [`EnergyAccountant`] uses,
-    /// or the report will silently mix power laws.
+    /// pass the same model the downstream
+    /// [`EnergyAccountant`](crate::energy::EnergyAccountant) uses, or
+    /// the report will silently mix power laws.
     pub fn with_model(cfg: &SimConfig, interval_s: f64, model: PowerModel) -> Result<Self> {
         anyhow::ensure!(interval_s > 0.0, "interval must be positive");
         let gpu = cfg.gpu_spec()?;
@@ -115,7 +194,8 @@ impl StreamingSink {
     }
 
     /// Physical-mode energy aggregates (feed
-    /// [`EnergyAccountant::report`] / [`EnergyAccountant::report_fleet`]).
+    /// [`EnergyAccountant::report`](crate::energy::EnergyAccountant::report) /
+    /// [`EnergyAccountant::report_fleet`](crate::energy::EnergyAccountant::report_fleet)).
     pub fn aggregates(&self) -> &StageAggregates {
         &self.agg
     }
@@ -171,6 +251,7 @@ impl StageSink for StreamingSink {
             } else {
                 self.mfu_dt / self.dt_sum
             },
+            dt_sum: self.dt_sum,
             mean_batch: self.batch_summary.mean(),
             batch_std: self.batch_summary.std(),
             // The same sum StageAggregates::add folds (same order).
@@ -290,6 +371,53 @@ mod tests {
             "min must track the smallest batch, not the old 0.0 default"
         );
         assert_eq!(a.max(), 11.0);
+    }
+
+    /// Shard-merge contract: splitting one record stream across two
+    /// sinks and merging their `StageStats` reproduces the whole-stream
+    /// aggregates (counters exactly, weighted means to float
+    /// tolerance), and the sidecar JSON round-trip is lossless.
+    #[test]
+    fn stage_stats_merge_matches_unsharded_and_roundtrips() {
+        let cfg = SimConfig::default();
+        let mut whole = StreamingSink::new(&cfg, 10.0).unwrap();
+        let mut a = StreamingSink::new(&cfg, 10.0).unwrap();
+        let mut b = StreamingSink::new(&cfg, 10.0).unwrap();
+        for i in 0..300 {
+            let dt = 0.2 + (i % 3) as f64 * 0.1;
+            let r = rec(i as f64 * 0.3, dt, (i % 7) as f64 * 0.06, 1 + i % 9);
+            whole.record(r);
+            if i % 2 == 0 {
+                a.record(r);
+            } else {
+                b.record(r);
+            }
+        }
+        let mut merged = a.stats();
+        merged.merge(&b.stats());
+        let want = whole.stats();
+        assert_eq!(merged.stages, want.stages);
+        assert_eq!(merged.span, want.span);
+        assert!((merged.busy_gpu_s - want.busy_gpu_s).abs() < 1e-9);
+        assert!((merged.dt_sum - want.dt_sum).abs() < 1e-9);
+        assert!((merged.weighted_mfu - want.weighted_mfu).abs() < 1e-12);
+        assert!((merged.mean_batch - want.mean_batch).abs() < 1e-12);
+        assert!((merged.batch_std - want.batch_std).abs() < 1e-9);
+        // Merge with an empty side is the identity.
+        let mut lhs = want;
+        lhs.merge(&StageStats::default());
+        assert_eq!(lhs.stages, want.stages);
+        assert_eq!(lhs.span, want.span);
+        let mut rhs = StageStats::default();
+        rhs.merge(&want);
+        assert_eq!(rhs.stages, want.stages);
+        assert_eq!(rhs.weighted_mfu, want.weighted_mfu);
+        // JSON round-trip.
+        let back = StageStats::from_json(&want.to_json()).unwrap();
+        assert_eq!(back.stages, want.stages);
+        assert_eq!(back.weighted_mfu, want.weighted_mfu);
+        assert_eq!(back.dt_sum, want.dt_sum);
+        assert_eq!(back.span, want.span);
     }
 
     #[test]

@@ -82,6 +82,32 @@ impl Value {
         }
     }
 
+    /// Required numeric field — deserializers of versioned formats
+    /// (the shard telemetry sidecar) use these so a missing key fails
+    /// loudly with the key name instead of defaulting to zero.
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("missing/non-numeric json field '{key}'"))
+    }
+
+    /// Required integer field (JSON numbers are f64; exact for < 2^53).
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        let x = self.req_f64(key)?;
+        anyhow::ensure!(
+            x >= 0.0 && x == x.trunc(),
+            "json field '{key}' is not a non-negative integer: {x}"
+        );
+        Ok(x as u64)
+    }
+
+    /// Required string field.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing/non-string json field '{key}'"))
+    }
+
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -221,12 +247,19 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Value, ParseError> {
@@ -509,5 +542,27 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn required_accessors_fail_loudly() {
+        let v = parse(r#"{"n": 3, "x": 0.5, "s": "hi"}"#).unwrap();
+        assert_eq!(v.req_u64("n").unwrap(), 3);
+        assert_eq!(v.req_f64("x").unwrap(), 0.5);
+        assert_eq!(v.req_str("s").unwrap(), "hi");
+        assert!(v.req_u64("x").is_err()); // not an integer
+        assert!(v.req_f64("missing").is_err());
+        assert!(v.req_str("n").is_err());
+    }
+
+    #[test]
+    fn f64_roundtrips_exactly_through_serializer() {
+        // The shard-telemetry sidecar relies on this: Rust's `{}`
+        // float formatting is shortest-roundtrip, so JSON-serialized
+        // accumulators reload bit-identical.
+        for x in [0.1, 1.0 / 3.0, 6.45e-3, 1.234567890123456e300] {
+            let s = Value::Num(x).to_string();
+            assert_eq!(parse(&s).unwrap().as_f64().unwrap(), x, "{s}");
+        }
     }
 }

@@ -2,6 +2,19 @@
 //! streaming mean/variance (Welford), exact percentiles, ε-approximate
 //! streaming quantiles (Greenwald–Khanna), histograms, and a small
 //! linear-regression helper for trend checks in tests.
+//!
+//! Every accumulator here is **mergeable**: [`Summary::merge`] combines
+//! two Welford states exactly (Chan's parallel formula), and
+//! [`QuantileSketch::merge`] combines two GK sketches with a documented
+//! combined rank-error bound (DESIGN.md §9). Merge is what lets
+//! per-shard telemetry from a cross-machine sweep (`repro experiment
+//! --shard k/N` … `repro merge`) recombine into one distribution
+//! without re-running anything. Both types serialize to the crate's
+//! [`crate::util::json::Value`] for the shard telemetry sidecar;
+//! floats round-trip bit-exactly (shortest-roundtrip formatting).
+
+use crate::util::json::Value;
+use anyhow::Result;
 
 /// Streaming mean / variance / extrema accumulator (Welford's method).
 #[derive(Debug, Clone)]
@@ -143,6 +156,31 @@ struct GkEntry {
 /// until ⌊1/(2ε)⌋ accumulate, then one sorted-merge + compress pass
 /// folds them into the tuple list — never a per-element `Vec::insert`
 /// on the hot path.
+///
+/// Sketches built on different machines (sweep shards) combine with
+/// [`QuantileSketch::merge`] and survive disk round-trips through
+/// [`QuantileSketch::to_json`] / [`QuantileSketch::from_json`]:
+///
+/// ```
+/// use vidur_energy::util::stats::QuantileSketch;
+///
+/// // Two shards each see half of a 0..2000 stream.
+/// let mut a = QuantileSketch::new(0.01);
+/// let mut b = QuantileSketch::new(0.01);
+/// for i in 0..1000 {
+///     a.add(i as f64);
+///     b.add((1000 + i) as f64);
+/// }
+/// a.merge(&b);
+/// assert_eq!(a.count(), 2000);
+/// // Rank error stays within ⌈ε·n⌉ = 20 ranks of the true median;
+/// // the stream is 1-per-rank, so value error ≤ 20 too.
+/// let p50 = a.quantile(0.5).unwrap();
+/// assert!((p50 - 1000.0).abs() <= 21.0, "p50 {p50}");
+/// // Extremes stay exact through merge + compression.
+/// assert_eq!(a.quantile(0.0), Some(0.0));
+/// assert_eq!(a.quantile(1.0), Some(1999.0));
+/// ```
 #[derive(Debug, Clone)]
 pub struct QuantileSketch {
     eps: f64,
@@ -319,6 +357,158 @@ impl QuantileSketch {
     /// Percentile convenience (`p` ∈ [0, 100]), mirroring [`percentile`].
     pub fn percentile(&self, p: f64) -> Option<f64> {
         self.quantile(p / 100.0)
+    }
+
+    /// Merge another sketch into this one (standard GK combine +
+    /// compress; DESIGN.md §9). The result summarizes the concatenation
+    /// of both input streams without re-observing any sample.
+    ///
+    /// **Combined rank-error bound.** Merging sketches with absolute
+    /// rank uncertainties `ε₁n₁` and `ε₂n₂` yields a sketch whose
+    /// queries are within `ε₁n₁ + ε₂n₂` ranks of the target over the
+    /// `n = n₁ + n₂` combined samples — i.e. an effective
+    /// `ε_merged = (ε₁n₁ + ε₂n₂)/n ≤ max(ε₁, ε₂) ≤ ε₁ + ε₂`. In the
+    /// usual case of equal-ε shards (the sweep sharding path) the bound
+    /// is simply ε again, however many shards are folded in, because
+    /// the absolute uncertainties add exactly as the counts do.
+    /// [`QuantileSketch::epsilon`] reports the merged effective ε.
+    ///
+    /// Mechanics: both tuple lists are flushed, merge-sorted by value,
+    /// and each tuple's Δ is widened by the rank slack the *other*
+    /// sketch contributes at that position (`g + Δ − 1` of the other
+    /// side's next tuple) — this keeps every tuple's `[rmin, rmax]`
+    /// interval sound for the combined stream, preserving the GK
+    /// invariant `g + Δ ≤ 2·ε_merged·n` that `quantile` relies on. The
+    /// running minimum and maximum of both inputs survive as the first
+    /// and last tuples, so `quantile(0.0)` / `quantile(1.0)` stay
+    /// exact. A final compress pass restores O((1/ε)·log(εn)) space.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.count() == 0 {
+            return;
+        }
+        if self.count() == 0 {
+            *self = other.clone();
+            return;
+        }
+        let a = self.flushed().into_owned();
+        let flushed_b;
+        let b: &QuantileSketch = if other.buffer.is_empty() {
+            other
+        } else {
+            flushed_b = other.flushed().into_owned();
+            &flushed_b
+        };
+
+        let n = a.n + b.n;
+        let eps = (a.eps * a.n as f64 + b.eps * b.n as f64) / n as f64;
+        let mut out: Vec<GkEntry> = Vec::with_capacity(a.entries.len() + b.entries.len());
+        let mut ia = a.entries.iter().copied().peekable();
+        let mut ib = b.entries.iter().copied().peekable();
+        loop {
+            match (ia.peek().copied(), ib.peek().copied()) {
+                (None, None) => break,
+                // Past the other sketch's maximum: it contributes no
+                // further rank slack, tuples pass through unchanged.
+                (Some(e), None) => {
+                    out.push(e);
+                    ia.next();
+                }
+                (None, Some(e)) => {
+                    out.push(e);
+                    ib.next();
+                }
+                (Some(ea), Some(eb)) => {
+                    // Take the smaller head; widen its Δ by the other
+                    // side's local uncertainty (its next tuple's
+                    // g + Δ − 1 unresolved ranks).
+                    let (mut e, slack) = if ea.v <= eb.v {
+                        ia.next();
+                        (ea, eb.g + eb.delta)
+                    } else {
+                        ib.next();
+                        (eb, ea.g + ea.delta)
+                    };
+                    e.delta += slack.saturating_sub(1);
+                    out.push(e);
+                }
+            }
+        }
+
+        self.eps = eps;
+        self.n = n;
+        self.entries = out;
+        self.buffer_cap = ((1.0 / (2.0 * eps)).floor() as usize).max(1);
+        self.buffer = Vec::with_capacity(self.buffer_cap);
+        self.compress();
+    }
+
+    /// Serialize the (flushed) sketch for the shard telemetry sidecar:
+    /// `{eps, n, entries: [[v, g, delta], …]}`. Floats round-trip
+    /// bit-exactly through the crate's JSON writer; `g`/`Δ` are exact
+    /// below 2^53.
+    pub fn to_json(&self) -> Value {
+        let s = self.flushed();
+        let mut v = Value::obj();
+        let entries: Vec<Value> = s
+            .entries
+            .iter()
+            .map(|e| {
+                Value::Arr(vec![
+                    Value::Num(e.v),
+                    Value::Num(e.g as f64),
+                    Value::Num(e.delta as f64),
+                ])
+            })
+            .collect();
+        v.set("eps", s.eps)
+            .set("n", s.n)
+            .set("entries", Value::Arr(entries));
+        v
+    }
+
+    /// Reload a sketch serialized by [`QuantileSketch::to_json`].
+    pub fn from_json(v: &Value) -> Result<QuantileSketch> {
+        let eps = v.req_f64("eps")?;
+        anyhow::ensure!(eps > 0.0 && eps < 0.5, "sketch eps {eps} outside (0, 0.5)");
+        let n = v.req_u64("n")?;
+        let raw = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("sketch missing 'entries' array"))?;
+        let mut entries = Vec::with_capacity(raw.len());
+        let mut total_g = 0u64;
+        let mut prev = f64::NEG_INFINITY;
+        for (i, e) in raw.iter().enumerate() {
+            let t = e
+                .as_arr()
+                .filter(|t| t.len() == 3)
+                .ok_or_else(|| anyhow::anyhow!("sketch entry {i} is not a [v,g,delta] triple"))?;
+            let (v, g, delta) = (
+                t[0].as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("entry {i}: bad v"))?,
+                t[1].as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("entry {i}: bad g"))?,
+                t[2].as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("entry {i}: bad delta"))?,
+            );
+            anyhow::ensure!(v.is_finite() && v >= prev, "entry {i}: values unsorted");
+            anyhow::ensure!(g >= 1, "entry {i}: g must be ≥ 1");
+            prev = v;
+            total_g += g;
+            entries.push(GkEntry { v, g, delta });
+        }
+        anyhow::ensure!(
+            total_g == n,
+            "sketch tuple gaps sum to {total_g}, expected n = {n}"
+        );
+        let buffer_cap = ((1.0 / (2.0 * eps)).floor() as usize).max(1);
+        Ok(QuantileSketch {
+            eps,
+            entries,
+            n,
+            buffer: Vec::with_capacity(buffer_cap),
+            buffer_cap,
+        })
     }
 
     #[cfg(test)]
@@ -583,6 +773,191 @@ mod tests {
         assert!(med == 1.0 || med == 3.0, "median {med}");
         assert_eq!(sk.count(), 3);
         assert_eq!(sk.percentile(100.0), Some(5.0));
+    }
+
+    /// The adversarial streams from the insert-path test, re-run
+    /// through the shard path: split each stream round-robin across k
+    /// shards, sketch each shard independently, fold the shards with
+    /// `merge`, and assert the merged sketch still answers within the
+    /// documented combined rank error (equal-ε shards ⇒ bound stays
+    /// ⌈εn⌉).
+    #[test]
+    fn merged_shard_sketches_stay_rank_bounded_on_adversarial_inputs() {
+        let eps = 0.01;
+        let n = 20_000usize;
+        let streams: Vec<(&str, Vec<f64>)> = vec![
+            ("ascending", (0..n).map(|i| i as f64).collect()),
+            ("descending", (0..n).map(|i| (n - i) as f64).collect()),
+            ("constant", vec![42.0; n]),
+            ("sawtooth", (0..n).map(|i| (i % 97) as f64 * 3.5).collect()),
+            (
+                "two-spikes",
+                (0..n)
+                    .map(|i| if i % 2 == 0 { 1.0 } else { 1e6 })
+                    .collect(),
+            ),
+            (
+                "zipf-ish tail",
+                (0..n).map(|i| 1.0 / (1.0 + (i % 513) as f64)).collect(),
+            ),
+        ];
+        for shards in [2usize, 4] {
+            for (name, xs) in &streams {
+                let mut parts: Vec<QuantileSketch> =
+                    (0..shards).map(|_| QuantileSketch::new(eps)).collect();
+                for (i, &x) in xs.iter().enumerate() {
+                    parts[i % shards].add(x);
+                }
+                let mut merged = QuantileSketch::new(eps);
+                for p in &parts {
+                    merged.merge(p);
+                }
+                assert_eq!(merged.count(), n as u64);
+                merged.check_invariant();
+                assert!(
+                    (merged.epsilon() - eps).abs() < 1e-12,
+                    "{name}: equal-ε shards must merge back to ε, got {}",
+                    merged.epsilon()
+                );
+                let mut sorted = xs.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let slack = (eps * n as f64).ceil() + 1.0;
+                for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                    let v = merged.quantile(q).unwrap();
+                    let rank_lo = sorted.partition_point(|&x| x < v) as f64;
+                    let rank_hi = sorted.partition_point(|&x| x <= v) as f64;
+                    let target = q * n as f64;
+                    assert!(
+                        rank_hi >= target - slack && rank_lo <= target + slack,
+                        "{name} x{shards} q={q}: value {v} has rank \
+                         [{rank_lo}, {rank_hi}], target {target} ± {slack}"
+                    );
+                }
+                assert!(
+                    merged.resident_tuples() < n / 4,
+                    "{name} x{shards}: merged sketch kept {} of {n}",
+                    merged.resident_tuples()
+                );
+            }
+        }
+    }
+
+    /// Merge order must not matter beyond the shared bound, and merging
+    /// with an empty sketch must be the identity in both directions.
+    #[test]
+    fn sketch_merge_order_independent_within_bound_and_empty_identity() {
+        let eps = 0.02;
+        let n = 6_000usize;
+        let xs: Vec<f64> = (0..n).map(|i| ((i * 7919) % 10_007) as f64).collect();
+        let mut parts: Vec<QuantileSketch> =
+            (0..3).map(|_| QuantileSketch::new(eps)).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 3].add(x);
+        }
+        let fold = |order: &[usize]| {
+            let mut m = QuantileSketch::new(eps);
+            for &k in order {
+                m.merge(&parts[k]);
+            }
+            m
+        };
+        let abc = fold(&[0, 1, 2]);
+        let cba = fold(&[2, 1, 0]);
+        let bound = 2.0 * (eps * n as f64).ceil() + 2.0; // each answer ±⌈εn⌉ ranks
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let ra = sorted.partition_point(|&x| x < abc.quantile(q).unwrap()) as f64;
+            let rb = sorted.partition_point(|&x| x < cba.quantile(q).unwrap()) as f64;
+            assert!(
+                (ra - rb).abs() <= bound,
+                "q={q}: fold orders disagree beyond 2⌈εn⌉: {ra} vs {rb}"
+            );
+        }
+        // Empty in both directions.
+        let mut empty = QuantileSketch::new(eps);
+        empty.merge(&abc);
+        assert_eq!(empty.count(), abc.count());
+        assert_eq!(empty.quantile(1.0), abc.quantile(1.0));
+        let mut lhs = abc.clone();
+        lhs.merge(&QuantileSketch::new(eps));
+        assert_eq!(lhs.count(), abc.count());
+        assert_eq!(lhs.quantile(0.5), abc.quantile(0.5));
+    }
+
+    /// Serialization round-trip is lossless: the reloaded sketch
+    /// answers every quantile identically and keeps merging.
+    #[test]
+    fn sketch_json_roundtrip_is_exact() {
+        let mut sk = QuantileSketch::new(0.005);
+        for i in 0..5_000 {
+            sk.add(((i * 31) % 977) as f64 * 0.125 + 0.1);
+        }
+        let back = QuantileSketch::from_json(&sk.to_json()).unwrap();
+        assert_eq!(back.count(), sk.count());
+        assert_eq!(back.epsilon(), sk.epsilon());
+        for q in [0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(back.quantile(q), sk.quantile(q), "q={q}");
+        }
+        // Parse back through text too (what the sidecar actually does).
+        let text = sk.to_json().pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back2 = QuantileSketch::from_json(&parsed).unwrap();
+        assert_eq!(back2.quantile(0.5), sk.quantile(0.5));
+        // Corrupt payloads are rejected, not mis-read.
+        let mut bad = sk.to_json();
+        bad.set("n", 3u64); // no longer matches Σg
+        assert!(QuantileSketch::from_json(&bad).is_err());
+    }
+
+    /// Satellite property: `Summary::merge` is associative and
+    /// order-independent (up to float tolerance) — the guarantee the
+    /// shard merge relies on when folding per-shard accumulators in
+    /// whatever order the shard dirs are listed.
+    #[test]
+    fn summary_merge_associative_and_order_independent() {
+        use crate::util::proptest::{check, gens};
+        check(80, gens::vec_f64(96, -50.0, 50.0), |xs| {
+            let third = (xs.len() / 3).max(1);
+            let mut parts: Vec<Summary> = Vec::new();
+            for chunk in xs.chunks(third) {
+                let mut s = Summary::new();
+                for &x in chunk {
+                    s.add(x);
+                }
+                parts.push(s);
+            }
+            let fold = |order: Vec<usize>| {
+                let mut acc = Summary::new();
+                for i in order {
+                    acc.merge(&parts[i]);
+                }
+                acc
+            };
+            let fwd = fold((0..parts.len()).collect());
+            let rev = fold((0..parts.len()).rev().collect());
+            // Right-nested association: merge the tail first.
+            let mut tail = Summary::new();
+            for p in parts.iter().skip(1).rev() {
+                let mut t = p.clone();
+                t.merge(&tail);
+                tail = t;
+            }
+            let mut nested = parts[0].clone();
+            nested.merge(&tail);
+            for (name, s) in [("reversed", &rev), ("nested", &nested)] {
+                if s.count() != fwd.count()
+                    || s.min() != fwd.min()
+                    || s.max() != fwd.max()
+                    || (s.sum() - fwd.sum()).abs() > 1e-9 * (1.0 + fwd.sum().abs())
+                    || (s.mean() - fwd.mean()).abs() > 1e-9
+                    || (s.var() - fwd.var()).abs() > 1e-6
+                {
+                    return Err(format!("{name} fold diverged: {s:?} vs {fwd:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Cross-machine sharding parity (DESIGN.md §9): running a sweep grid
+//! under `--shard k/N` on N (simulated) hosts and recombining with
+//! `repro merge` must reproduce the unsharded run — CSVs
+//! byte-identical, exact telemetry counters equal, merged latency
+//! sketches within the documented combined rank bound.
+//!
+//! Everything lives in ONE test function run sequentially: the shard
+//! setting is process-global (like `--jobs`), so parallel test threads
+//! must not interleave `set_shard` calls.
+
+use std::path::PathBuf;
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, SimConfig};
+use vidur_energy::experiments::common::{run_grid, save_grid, GridRun};
+use vidur_energy::sweep::{self, merge_shard_dirs, ShardSpec};
+use vidur_energy::telemetry::ShardTelemetry;
+use vidur_energy::util::csv::Table;
+use vidur_energy::util::json::Value;
+use vidur_energy::util::rng::case_seed;
+
+const ID: &str = "gridtest";
+
+/// An exp-shaped grid (QPS × batch cap) on the native oracle. Seeds
+/// derive from the **global** case index, exactly like the real
+/// experiment regenerators — the property sharding relies on.
+fn grid_cfgs() -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for &qps in &[1.0, 4.0, 10.0] {
+        for &cap in &[4usize, 16, 128] {
+            let mut cfg = SimConfig::default();
+            cfg.cost_model = CostModelKind::Native;
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.batch_cap = cap;
+            cfg.num_requests = 96;
+            cfg.seed = case_seed(0x5A4D, cfgs.len() as u64);
+            cfgs.push(cfg);
+        }
+    }
+    cfgs
+}
+
+/// Render + persist one (possibly sharded) run the way experiment
+/// regenerators do: fixed row formatting, `save_grid` layout.
+fn run_and_save(out: &PathBuf) -> GridRun {
+    let run = run_grid(grid_cfgs()).unwrap();
+    let mut t = Table::new(&["case", "avg_power_w", "energy_kwh", "makespan_s", "mfu"]);
+    for (i, r) in run.iter() {
+        t.push_row(vec![
+            i.to_string(),
+            format!("{:.3}", r.avg_power_w()),
+            format!("{:.6}", r.energy_kwh()),
+            format!("{:.6}", r.out.metrics.makespan_s),
+            format!("{:.6}", r.mfu()),
+        ]);
+    }
+    let mut meta = Value::obj();
+    meta.set("experiment", ID).set("sweep", run.sweep_meta());
+    save_grid(out, ID, &t, meta, &run).unwrap();
+    run
+}
+
+fn read(path: PathBuf) -> Vec<u8> {
+    std::fs::read(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+}
+
+#[test]
+fn sharded_runs_merge_back_to_the_unsharded_outputs() {
+    let base = std::env::temp_dir().join("vidur_energy_shard_merge");
+    std::fs::remove_dir_all(&base).ok();
+
+    // Ground truth: the unsharded run.
+    sweep::set_shard(None);
+    let unsharded_dir = base.join("unsharded");
+    let unsharded_run = run_and_save(&unsharded_dir);
+    assert_eq!(unsharded_run.results.len(), 9);
+    let want_csv = read(unsharded_dir.join(ID).join(format!("{ID}.csv")));
+    let want_tel = ShardTelemetry::load(&unsharded_dir.join(ID)).unwrap().unwrap();
+    assert!(want_tel.is_complete());
+    assert_eq!(want_tel.shard, None);
+
+    for shards in [2u32, 4] {
+        // "N machines": one sharded run per k, each into its own dir.
+        let mut shard_dirs = Vec::new();
+        for k in 0..shards {
+            sweep::set_shard(Some(ShardSpec::new(k, shards).unwrap()));
+            let dir = base.join(format!("{shards}way-{k}"));
+            let run = run_and_save(&dir);
+            assert_eq!(
+                run.results.len(),
+                ShardSpec::new(k, shards).unwrap().count_owned(9)
+            );
+            let tel = ShardTelemetry::load(&dir.join(ID)).unwrap().unwrap();
+            assert_eq!(tel.shard, Some(ShardSpec::new(k, shards).unwrap()));
+            assert!(!tel.is_complete());
+            shard_dirs.push(dir);
+        }
+        sweep::set_shard(None);
+
+        // Merge — in scrambled order, to prove order independence.
+        shard_dirs.reverse();
+        let merged_dir = base.join(format!("{shards}way-merged"));
+        let merged = merge_shard_dirs(&shard_dirs, &merged_dir).unwrap();
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].id, ID);
+        assert_eq!(merged[0].shards, shards as usize);
+        assert_eq!(merged[0].rows, 9);
+        assert!(merged[0].complete);
+
+        // 1. The headline guarantee: byte-identical CSV.
+        let got_csv = read(merged_dir.join(ID).join(format!("{ID}.csv")));
+        assert_eq!(
+            got_csv, want_csv,
+            "{shards}-way merged CSV differs from the unsharded run"
+        );
+
+        // 2. Exact accumulators equal.
+        let got = ShardTelemetry::load(&merged_dir.join(ID)).unwrap().unwrap();
+        assert!(got.is_complete());
+        assert_eq!(got.shard, None);
+        assert_eq!(got.requests.submitted, want_tel.requests.submitted);
+        assert_eq!(got.requests.finished, want_tel.requests.finished);
+        assert_eq!(
+            got.requests.prefill_tokens_done,
+            want_tel.requests.prefill_tokens_done
+        );
+        assert_eq!(
+            got.requests.decode_tokens_done,
+            want_tel.requests.decode_tokens_done
+        );
+        assert_eq!(got.requests.slo_ttft_ok, want_tel.requests.slo_ttft_ok);
+        assert_eq!(got.requests.slo_e2e_ok, want_tel.requests.slo_e2e_ok);
+        assert_eq!(got.requests.slo_both_ok, want_tel.requests.slo_both_ok);
+        assert_eq!(got.requests.norm_latency_n, want_tel.requests.norm_latency_n);
+        assert_eq!(got.stages.stages, want_tel.stages.stages);
+        assert_eq!(got.oracle, want_tel.oracle);
+        assert_eq!(got.peak_resident_bins, want_tel.peak_resident_bins);
+        assert_eq!(got.peak_live_requests, want_tel.peak_live_requests);
+        assert!(
+            (got.requests.norm_latency_mean_s_per_tok
+                - want_tel.requests.norm_latency_mean_s_per_tok)
+                .abs()
+                < 1e-12
+        );
+        assert!((got.stages.busy_gpu_s - want_tel.stages.busy_gpu_s).abs() < 1e-9);
+        assert!((got.stages.weighted_mfu - want_tel.stages.weighted_mfu).abs() < 1e-9);
+
+        // 3. Merged sketches: same sample counts, quantiles within the
+        //    documented combined rank bound. ε = 1e-3, n < 1000 ⇒ the
+        //    rank bound ⌈εn⌉ = 1 on both sides: answers may differ by
+        //    at most a couple of neighbouring order statistics.
+        assert_eq!(got.sketches.e2e.count(), want_tel.sketches.e2e.count());
+        assert_eq!(got.sketches.ttft.count(), want_tel.sketches.ttft.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let a = got.sketches.e2e.quantile(q).unwrap();
+            let b = want_tel.sketches.e2e.quantile(q).unwrap();
+            assert!(
+                (a - b).abs() <= 0.1 * b.abs().max(1.0),
+                "{shards}-way e2e q{q}: merged {a} vs unsharded {b}"
+            );
+        }
+        // Exact extremes survive every merge.
+        assert_eq!(got.sketches.e2e.quantile(0.0), want_tel.sketches.e2e.quantile(0.0));
+        assert_eq!(got.sketches.e2e.quantile(1.0), want_tel.sketches.e2e.quantile(1.0));
+
+        // 4. Merged meta.json: sum/max semantics reassemble the
+        //    unsharded sweep stats (the satellite bugfix).
+        let load_meta = |dir: &PathBuf| {
+            let text = String::from_utf8(read(dir.join(ID).join("meta.json"))).unwrap();
+            vidur_energy::util::json::parse(&text).unwrap()
+        };
+        let got_meta = load_meta(&merged_dir);
+        let want_meta = load_meta(&unsharded_dir);
+        for key in ["cases", "total_stages", "peak_resident_bins", "peak_live_requests"] {
+            assert_eq!(
+                got_meta.at(&["sweep", key]).and_then(|v| v.as_u64()),
+                want_meta.at(&["sweep", key]).and_then(|v| v.as_u64()),
+                "sweep.{key} diverged after merge"
+            );
+        }
+        let oracle_calls =
+            |m: &Value| m.at(&["sweep", "oracle_cache", "calls"]).and_then(|v| v.as_u64());
+        assert_eq!(oracle_calls(&got_meta), oracle_calls(&want_meta));
+        // The per-shard label must not leak into merged output.
+        assert!(got_meta.at(&["sweep", "shard"]).is_none());
+    }
+
+    // Protocol errors: the same shard twice must be rejected, never
+    // silently double-counted.
+    sweep::set_shard(Some(ShardSpec::new(0, 2).unwrap()));
+    let dup_a = base.join("dup-a");
+    let dup_b = base.join("dup-b");
+    run_and_save(&dup_a);
+    run_and_save(&dup_b);
+    sweep::set_shard(None);
+    let err = merge_shard_dirs(&[dup_a, dup_b], &base.join("dup-merged")).unwrap_err();
+    assert!(
+        err.to_string().contains("overlap"),
+        "expected overlap error, got: {err}"
+    );
+
+    std::fs::remove_dir_all(&base).ok();
+}
