@@ -7,71 +7,74 @@
 //! it behind the same trait as the metrics sinks means the scaling
 //! telemetry taps the identical completion stream — no second
 //! bookkeeping path inside the engine loop.
+//!
+//! Since DESIGN.md §10 the ring-buffer mechanics live in the shared
+//! [`TimeWindow`] (`util::stats`) — the same substrate the live-watch
+//! windows (`telemetry::window`) run on. The eviction convention is
+//! the shared one, audited when the window was lifted: an entry whose
+//! finish time lands **exactly** on `now − window` is retained (the
+//! window is the inclusive trailing interval `[now − window, now]`);
+//! only strictly older entries fall out. A regression test below pins
+//! that boundary.
 
 use crate::telemetry::{RequestSink, RequestStats};
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, TimeWindow};
 use crate::workload::Request;
-use std::collections::VecDeque;
 
-/// Sliding window over recent completions: (finish time, TTFT, e2e).
-/// Memory is O(completions inside the window), bounded by the window
-/// length × completion rate — the engine prunes it every tick.
+/// Sliding window over recent completions, keyed by finish time and
+/// carrying (TTFT, e2e) samples. Memory is O(completions inside the
+/// window), bounded by the window length × completion rate — the
+/// engine prunes it every tick.
 #[derive(Debug)]
 pub struct CompletionWindow {
-    window_s: f64,
-    entries: VecDeque<(f64, f64, f64)>,
+    window: TimeWindow<(f64, f64)>,
 }
 
 impl CompletionWindow {
     pub fn new(window_s: f64) -> Self {
-        assert!(window_s > 0.0, "window must be positive");
         CompletionWindow {
-            window_s,
-            entries: VecDeque::new(),
+            window: TimeWindow::new(window_s),
         }
     }
 
     /// The configured window length, seconds.
     pub fn window_s(&self) -> f64 {
-        self.window_s
+        self.window.window_s()
     }
 
-    /// Drop completions older than `now - window`.
+    /// Drop completions strictly older than `now - window`.
     pub fn prune(&mut self, now: f64) {
-        let cutoff = now - self.window_s;
-        while self.entries.front().map(|e| e.0 < cutoff).unwrap_or(false) {
-            self.entries.pop_front();
-        }
+        self.window.prune(now);
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.window.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.window.is_empty()
     }
 
     /// Completions per second over the (elapsed part of the) window.
     pub fn qps(&self, now: f64) -> f64 {
-        self.entries.len() as f64 / self.window_s.min(now.max(1e-9))
+        self.window.rate(now)
     }
 
     /// Windowed TTFT p99 (NaN when nothing completed recently).
     pub fn ttft_p99(&self) -> f64 {
-        self.p99(|e| e.1)
+        self.p99(|&(ttft, _)| ttft)
     }
 
     /// Windowed e2e p99 (NaN when nothing completed recently).
     pub fn e2e_p99(&self) -> f64 {
-        self.p99(|e| e.2)
+        self.p99(|&(_, e2e)| e2e)
     }
 
-    fn p99(&self, f: impl Fn(&(f64, f64, f64)) -> f64) -> f64 {
-        if self.entries.is_empty() {
+    fn p99(&self, f: impl Fn(&(f64, f64)) -> f64) -> f64 {
+        if self.window.is_empty() {
             return f64::NAN;
         }
-        let v: Vec<f64> = self.entries.iter().map(f).collect();
+        let v: Vec<f64> = self.window.iter().map(|(_, s)| f(s)).collect();
         percentile(&v, 99.0)
     }
 }
@@ -81,11 +84,8 @@ impl RequestSink for CompletionWindow {
         // Completions arrive in finish order; an unfinished request
         // (never produced by the engines) is ignored.
         if let Some(fin) = r.finished_s {
-            self.entries.push_back((
-                fin,
-                r.ttft().unwrap_or(0.0),
-                r.e2e_latency().unwrap_or(0.0),
-            ));
+            self.window
+                .push(fin, (r.ttft().unwrap_or(0.0), r.e2e_latency().unwrap_or(0.0)));
         }
     }
 
@@ -93,12 +93,12 @@ impl RequestSink for CompletionWindow {
     /// dashboard tap; the engine's SLO metrics come from the primary
     /// sink, not from here.
     fn stats(&self) -> RequestStats {
-        let ttft: Vec<f64> = self.entries.iter().map(|e| e.1).collect();
-        let e2e: Vec<f64> = self.entries.iter().map(|e| e.2).collect();
+        let ttft: Vec<f64> = self.window.iter().map(|(_, s)| s.0).collect();
+        let e2e: Vec<f64> = self.window.iter().map(|(_, s)| s.1).collect();
         let pc = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
         RequestStats {
-            submitted: self.entries.len() as u64,
-            finished: self.entries.len() as u64,
+            submitted: self.window.len() as u64,
+            finished: self.window.len() as u64,
             ttft_p50_s: pc(&ttft, 50.0),
             ttft_p99_s: pc(&ttft, 99.0),
             e2e_p50_s: pc(&e2e, 50.0),
@@ -157,5 +157,24 @@ mod tests {
         w.record(&done(0, 10.0, 0.1, 1.0));
         // Only 20 s elapsed: rate is 1/20, not 1/300.
         assert!((w.qps(20.0) - 0.05).abs() < 1e-12);
+    }
+
+    /// Satellite regression (boundary audit): the convention kept when
+    /// the window was rebased onto the shared `TimeWindow` is the
+    /// *inclusive* cutoff — a completion landing exactly at
+    /// `now − window` survives the prune; anything strictly older
+    /// falls out. The pre-rebase code (`e.0 < cutoff`) behaved the
+    /// same; this pins it so neither side drifts.
+    #[test]
+    fn prune_boundary_is_inclusive() {
+        let mut w = CompletionWindow::new(100.0);
+        w.record(&done(0, 50.0, 0.5, 2.0));
+        w.record(&done(1, 99.0, 0.5, 2.0));
+        // cutoff = 50.0: the t = 50.0 entry is exactly on it — kept.
+        w.prune(150.0);
+        assert_eq!(w.len(), 2, "entry at the cutoff must be retained");
+        // One epsilon later it is strictly older — evicted.
+        w.prune(150.0 + 1e-9);
+        assert_eq!(w.len(), 1);
     }
 }

@@ -6,6 +6,7 @@
 //!   autoscale   — sweep fleet-scaling policies over a day of grid signals
 //!   experiment  — regenerate a paper table/figure (or `all`)
 //!   merge       — recombine sharded sweep outputs (DESIGN.md §9)
+//!   watch       — tail/aggregate live sweep snapshots (DESIGN.md §10)
 //!   multiregion — carbon-aware multi-region routing exploration
 //!   policy      — model-size vs grid-condition policy exploration
 //!   config      — show the default (Table 1) configuration
@@ -36,8 +37,10 @@ subcommands:
   cosim        run the Vidur→Vessim integration case study
   autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
   experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all
-               (--jobs N sweeps cases in parallel; --shard k/N splits the grid across machines)
+               (--jobs N sweeps cases in parallel; --shard k/N splits the grid across machines;
+                --watch[=stderr|json:PATH] live dashboard / snapshot log)
   merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
+  watch        tail/aggregate live sweep snapshots: repro watch <dir-or-jsonl>... [--follow]
   multiregion  carbon-aware multi-region routing exploration
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
@@ -63,6 +66,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "autoscale" => cmd_autoscale(&args),
         "experiment" => cmd_experiment(&args),
         "merge" => cmd_merge(&args),
+        "watch" => cmd_watch(&args),
         "multiregion" => multiregion::cmd(&args),
         "policy" => policy::cmd(&args),
         "config" => cmd_config(),
@@ -198,12 +202,15 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
              options:\n  --out <dir>   results directory (default: results)\n  \
              --jobs <n>    sweep worker threads (default: all cores)\n  \
              --shard <k/N> run only policies k, k+N, … of the sweep (merge with `repro merge`)\n  \
+             --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
+             --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
              --fast        compressed evening-window scenario"
         );
         return Ok(());
     }
     apply_jobs(args)?;
     apply_shard(args)?;
+    apply_watch(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
     // The save() call already printed the markdown table; surface the
@@ -234,11 +241,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.first() else {
         bail!(
             "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|all> \
-             [--out results] [--fast] [--jobs N] [--shard k/N]"
+             [--out results] [--fast] [--jobs N] [--shard k/N] \
+             [--watch[=stderr|json:PATH]] [--watch-cadence s]"
         );
     };
     apply_jobs(args)?;
     apply_shard(args)?;
+    apply_watch(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     experiments::run_by_id(id, &out_dir, args.has("fast"))
 }
@@ -295,6 +304,163 @@ fn apply_shard(args: &Args) -> Result<()> {
         None => sweep::set_shard(None),
     }
     Ok(())
+}
+
+/// Apply the live-watch configuration (DESIGN.md §10): bare `--watch`
+/// = in-place stderr dashboard, `--watch=json:PATH` = JSONL snapshot
+/// log for `repro watch`; `--watch-cadence <s>` sets the sim-time
+/// snapshot period. Absent = watching off (the zero-overhead default).
+fn apply_watch(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(spec) = args.get("watch") {
+        Some(report::live::WatchConfig::parse(spec)?)
+    } else if args.has("watch") {
+        Some(report::live::WatchConfig::stderr())
+    } else {
+        None
+    };
+    anyhow::ensure!(
+        !args.has("watch-cadence"),
+        "--watch-cadence needs a value (e.g. --watch-cadence 30)"
+    );
+    anyhow::ensure!(
+        cfg.is_some() || args.get("watch-cadence").is_none(),
+        "--watch-cadence has no effect without --watch"
+    );
+    if let Some(c) = cfg.as_mut() {
+        c.cadence_s = args.f64_or("watch-cadence", c.cadence_s)?;
+        anyhow::ensure!(c.cadence_s > 0.0, "--watch-cadence must be positive");
+        c.window_s = c.window_s.max(c.cadence_s);
+    }
+    report::live::set_watch(cfg);
+    Ok(())
+}
+
+/// Tail/aggregate live sweep snapshots (DESIGN.md §10): read the
+/// `watch.jsonl` files under the given directories (one per shard of a
+/// cross-machine sweep, or the file paths directly) and render one
+/// aggregate dashboard; `--follow` re-reads on a wall-clock interval.
+fn cmd_watch(args: &Args) -> Result<()> {
+    if args.has("help") || args.positional.is_empty() {
+        println!(
+            "repro watch — tail/aggregate live sweep snapshots\n\n\
+             usage: repro watch <dir-or-jsonl>... [--follow] [--interval <s>]\n\n\
+             each path is a watch.jsonl written by `repro experiment/autoscale\n\
+             --watch=json:PATH`, or a directory searched for watch.jsonl (itself\n\
+             and one level of subdirectories — the shape of sharded --out trees)\n\n\
+             options:\n  --follow        keep re-reading and re-rendering\n  \
+             --interval <s>  wall-clock refresh period with --follow (default 5)"
+        );
+        return Ok(());
+    }
+    let paths: Vec<PathBuf> = args.positional.iter().map(PathBuf::from).collect();
+    // `--follow results/` would bind the path as the switch's *value*
+    // under the tiny parser's rules, silently un-following and
+    // dropping the path — reject it loudly instead.
+    anyhow::ensure!(
+        args.get("follow").is_none(),
+        "--follow takes no value; put it after the paths \
+         (repro watch <dir-or-jsonl>... --follow)"
+    );
+    let follow = args.has("follow");
+    // The same loud-validation standard as --watch-cadence: a flag
+    // that would silently do nothing (or something else) is an error.
+    anyhow::ensure!(
+        !args.has("interval"),
+        "--interval needs a value (e.g. --interval 10)"
+    );
+    anyhow::ensure!(
+        follow || args.get("interval").is_none(),
+        "--interval has no effect without --follow"
+    );
+    let interval = args.f64_or("interval", 5.0)?;
+    anyhow::ensure!(
+        interval >= 0.5,
+        "--interval must be at least 0.5 seconds, got {interval}"
+    );
+    let mut first = true;
+    // Per-file incremental tail state for --follow: logs are
+    // append-only, so each tick parses only the appended suffix —
+    // O(new bytes), never a full re-read of a day-long log.
+    let mut cache: std::collections::BTreeMap<PathBuf, report::live::TailState> =
+        std::collections::BTreeMap::new();
+    loop {
+        // In follow mode a path may simply not exist *yet* (a shard
+        // host that hasn't created its --out tree) and a file may be
+        // caught mid-rewrite: wait for the stragglers, per path, while
+        // the shards that are already streaming keep rendering.
+        // Single-shot keeps the loud errors.
+        let files = if follow {
+            let mut files = Vec::new();
+            for p in &paths {
+                match report::live::discover_watch_files(std::slice::from_ref(p)) {
+                    Ok(mut f) => files.append(&mut f),
+                    Err(e) => eprintln!("waiting: {e:#}"),
+                }
+            }
+            files.sort();
+            files.dedup();
+            files
+        } else {
+            report::live::discover_watch_files(&paths)?
+        };
+        let mut changed = first;
+        // A log that vanished from discovery (deleted/renamed shard
+        // dir) must stop contributing to the aggregate.
+        let before = cache.len();
+        cache.retain(|k, _| files.contains(k));
+        changed |= cache.len() != before;
+        for f in &files {
+            let state = cache.entry(f.clone()).or_default();
+            match report::live::tail_snapshots(f, state) {
+                Ok(grew) => {
+                    changed |= grew;
+                    // A follower picks the torn tail up next tick; a
+                    // single shot won't, so it says so.
+                    if !follow {
+                        report::live::warn_if_torn_tail(f, state);
+                    }
+                }
+                Err(e) if follow => {
+                    // Parse errors already self-reset; reset here too
+                    // for I/O errors (an NFS flap), so an unreadable
+                    // shard's stale snapshots — including live
+                    // qps/watts — drop out of the render until the
+                    // file is readable again and reparses in full.
+                    *state = report::live::TailState::default();
+                    changed = true;
+                    eprintln!("waiting: {e:#}");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let total: usize = cache.values().map(|s| s.snapshots.len()).sum();
+        if total == 0 {
+            if !follow {
+                bail!(
+                    "no watch snapshots found under {paths:?} — pass the \
+                     watch.jsonl files (or their directories) of a \
+                     `--watch=json:` run"
+                );
+            }
+            eprintln!("no snapshots yet under {paths:?} — waiting…");
+        } else if changed {
+            // Only changed ticks pay for aggregation (over borrows —
+            // nothing is cloned); quiet ticks keep the last render.
+            let aggs = report::live::aggregate(
+                cache.values().flat_map(|s| s.snapshots.iter()),
+            );
+            if follow && !first {
+                // Redraw in place.
+                print!("\x1b[2J\x1b[H");
+            }
+            println!("{}", report::live::render_watch(&aggs, files.len()));
+        }
+        if !follow {
+            return Ok(());
+        }
+        first = false;
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
 }
 
 fn cmd_config() -> Result<()> {
@@ -388,6 +554,46 @@ mod tests {
             "/nonexistent/shard-0".into(),
         ]);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn watch_without_paths_prints_usage() {
+        run(vec!["repro".into(), "watch".into()]).unwrap();
+    }
+
+    #[test]
+    fn watch_of_missing_path_fails() {
+        let r = run(vec![
+            "repro".into(),
+            "watch".into(),
+            "/nonexistent/watch.jsonl".into(),
+        ]);
+        assert!(r.is_err());
+    }
+
+    /// `--watch` forms parse into the right process-global config (and
+    /// a bad spec is rejected before any sweep starts).
+    #[test]
+    fn apply_watch_sets_and_clears_the_global() {
+        use crate::report::live::{self, WatchTarget};
+        let _guard = live::WATCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        apply_watch(&args(&["--watch=json:w.jsonl", "--watch-cadence", "30"])).unwrap();
+        let cfg = live::active_watch().unwrap();
+        assert_eq!(cfg.target, WatchTarget::Json("w.jsonl".into()));
+        assert_eq!(cfg.cadence_s, 30.0);
+        // Bare switch = stderr dashboard.
+        apply_watch(&args(&["--watch"])).unwrap();
+        assert_eq!(live::active_watch().unwrap().target, WatchTarget::Stderr);
+        // Absent = off.
+        apply_watch(&args(&[])).unwrap();
+        assert_eq!(live::active_watch(), None);
+        assert!(apply_watch(&args(&["--watch=tcp:99"])).is_err());
+        assert!(apply_watch(&args(&["--watch", "--watch-cadence", "0"])).is_err());
+        // A cadence without --watch is a mistake, not a silent no-op.
+        assert!(apply_watch(&args(&["--watch-cadence", "9"])).is_err());
+        live::set_watch(None);
     }
 
     #[test]

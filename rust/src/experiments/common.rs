@@ -6,6 +6,7 @@
 use crate::config::simconfig::SimConfig;
 use crate::energy::{EnergyAccountant, EnergyReport};
 use crate::exec::OracleStats;
+use crate::report::live;
 use crate::sim::{self, SimRun};
 use crate::sweep::{ShardSpec, SweepExecutor};
 use crate::telemetry::{LatencySketches, ShardTelemetry, StreamingRequestSink, StreamingSink};
@@ -62,10 +63,22 @@ impl CaseResult {
 /// telemetry through an O(bins) sink and request telemetry through
 /// latency sketches (no per-request vector is ever materialized).
 pub fn run_case(cfg: &SimConfig) -> Result<CaseResult> {
+    run_case_watched(cfg, None)
+}
+
+/// [`run_case`] with an optional live-watch tap (DESIGN.md §10). When
+/// watching, [`live::run_observed`] fans the primary sinks out to the
+/// case's rolling windows — the primaries still answer `stats()` and
+/// still feed the accounting, so every persisted output is
+/// **byte-identical** to an unobserved run (asserted in
+/// `tests/watch_observer.rs`).
+pub fn run_case_watched(cfg: &SimConfig, watch: Option<live::CaseTap>) -> Result<CaseResult> {
     let acc = EnergyAccountant::paper_default(cfg)?;
     let mut sink = StreamingSink::with_model(cfg, CASE_BIN_INTERVAL_S, acc.power_model)?;
     let mut reqs = StreamingRequestSink::new(cfg);
-    let out = sim::run_streaming_with(cfg, &mut sink, &mut reqs)?;
+    let out = live::run_observed(watch, cfg, acc.grid_ci, &mut sink, &mut reqs, |s, r| {
+        sim::run_streaming_with(cfg, s, r)
+    })?;
     let energy = acc.report(cfg, sink.aggregates(), out.metrics.makespan_s);
     Ok(CaseResult {
         peak_resident_bins: sink.peak_resident_bins(),
@@ -91,12 +104,19 @@ pub fn run_cases_on(
 /// rows keep their position in the full grid, plus the shard identity
 /// for the telemetry sidecar.
 pub struct GridRun {
+    /// Experiment id (`exp1`, `fig1`, …) — names the telemetry sidecar
+    /// and the watch snapshot stream.
+    pub experiment: String,
     /// Size of the full case grid, across all shards.
     pub total_cases: usize,
     /// The shard this process ran, `None` for an unsharded run.
     pub shard: Option<ShardSpec>,
     /// `(global case index, result)`, ascending by index.
     pub results: Vec<(usize, CaseResult)>,
+    /// Lazily-built telemetry aggregate — [`GridRun::sweep_meta`] and
+    /// the `save_grid` sidecar both read it, and folding every case's
+    /// GK sketches is O(cases × sketch), so build it once.
+    telemetry: std::cell::OnceCell<ShardTelemetry>,
 }
 
 impl GridRun {
@@ -110,7 +130,7 @@ impl GridRun {
     /// [`ShardTelemetry`] accumulator that backs the sidecar, so
     /// `meta.json` and `telemetry.json` can never drift apart.
     pub fn sweep_meta(&self) -> Value {
-        let tel = self.telemetry("");
+        let tel = self.telemetry();
         sweep_meta_parts(
             self.results.len() as u64,
             tel.oracle,
@@ -123,20 +143,24 @@ impl GridRun {
     /// The mergeable telemetry sidecar for this run (DESIGN.md §9):
     /// per-case request/stage accumulators and latency sketches folded
     /// into one shard-level aggregate, keyed by global case index.
-    pub fn telemetry(&self, experiment: &str) -> ShardTelemetry {
-        let mut tel = ShardTelemetry::new(experiment, self.shard, self.total_cases as u64);
-        for (i, r) in &self.results {
-            tel.add_case(
-                *i as u64,
-                &r.out.request_stats,
-                &r.out.stage_stats,
-                &r.out.oracle,
-                &r.sketches,
-                r.peak_resident_bins as u64,
-                r.out.peak_live_requests as u64,
-            );
-        }
-        tel
+    /// Built once, cached for subsequent calls.
+    pub fn telemetry(&self) -> &ShardTelemetry {
+        self.telemetry.get_or_init(|| {
+            let mut tel =
+                ShardTelemetry::new(&self.experiment, self.shard, self.total_cases as u64);
+            for (i, r) in &self.results {
+                tel.add_case(
+                    *i as u64,
+                    &r.out.request_stats,
+                    &r.out.stage_stats,
+                    &r.out.oracle,
+                    &r.sketches,
+                    r.peak_resident_bins as u64,
+                    r.out.peak_live_requests as u64,
+                );
+            }
+            tel
+        })
     }
 }
 
@@ -146,22 +170,41 @@ impl GridRun {
 /// from **global** indices by the experiment, so shard assignment
 /// never changes a case's results — merged shard CSVs are
 /// byte-identical to an unsharded run's (`tests/shard_merge.rs`).
-pub fn run_grid(cfgs: Vec<SimConfig>) -> Result<GridRun> {
-    run_grid_on(&SweepExecutor::with_default_jobs(), cfgs)
+///
+/// Also honours the process-wide watch (`--watch`, DESIGN.md §10):
+/// when set, every case streams rolling-window snapshots to the live
+/// view through a telemetry fan-out — without perturbing any output.
+pub fn run_grid(experiment: &str, cfgs: Vec<SimConfig>) -> Result<GridRun> {
+    run_grid_on(&SweepExecutor::with_default_jobs(), experiment, cfgs)
 }
 
 /// [`run_grid`] on an explicit executor (tests pin worker counts).
-pub fn run_grid_on(executor: &SweepExecutor, cfgs: Vec<SimConfig>) -> Result<GridRun> {
+pub fn run_grid_on(
+    executor: &SweepExecutor,
+    experiment: &str,
+    cfgs: Vec<SimConfig>,
+) -> Result<GridRun> {
     let total_cases = cfgs.len();
     let (shard, owned) = crate::sweep::shard::shard_owned(cfgs);
+    let view = live::open_view(experiment, total_cases as u64, owned.len() as u64, shard)?;
     let indices: Vec<usize> = owned.iter().map(|(i, _)| *i).collect();
-    let results = executor.run(owned, |_, (_, cfg)| run_case(cfg))?;
+    let results = executor.run(owned, |_, (gi, cfg)| {
+        run_case_watched(
+            cfg,
+            view.as_ref().map(|v| live::CaseTap {
+                view: v.clone(),
+                case_index: *gi as u64,
+            }),
+        )
+    })?;
     Ok(GridRun {
+        experiment: experiment.to_string(),
         total_cases,
         shard,
         // The executor returns results in case order, so they pair
         // back with the global indices they were filtered from.
         results: indices.into_iter().zip(results).collect(),
+        telemetry: std::cell::OnceCell::new(),
     })
 }
 
@@ -234,5 +277,5 @@ pub fn save_grid(
     grid: &GridRun,
 ) -> Result<()> {
     save(out_dir, id, table, meta)?;
-    grid.telemetry(id).save(&out_dir.join(id))
+    grid.telemetry().save(&out_dir.join(id))
 }

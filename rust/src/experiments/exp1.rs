@@ -44,7 +44,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfgs.push(cfg);
         }
     }
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("exp1", cfgs)?;
 
     let mut table = Table::new(&[
         "model", "tp", "pp", "requests", "avg_power_w", "energy_kwh", "makespan_s",

@@ -36,7 +36,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfgs.push(cfg);
         }
     }
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("exp2", cfgs)?;
 
     let mut table = Table::new(&[
         "pd_ratio", "request_len", "avg_power_w", "energy_kwh", "weighted_mfu",

@@ -26,7 +26,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("exp3", cfgs)?;
 
     let mut table = Table::new(&[
         "batch_cap", "actual_batch_mean", "actual_batch_std", "avg_power_w",

@@ -31,7 +31,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let run = run_grid(cfgs)?;
+    let run = run_grid("exp4", cfgs)?;
 
     let mut table = Table::new(&[
         "qps", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",

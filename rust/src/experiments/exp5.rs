@@ -43,7 +43,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let run = run_grid(cfgs)?;
+    let run = run_grid("exp5", cfgs)?;
 
     let mut table = Table::new(&[
         "tp", "pp", "gpus", "avg_power_w", "energy_kwh", "makespan_s", "weighted_mfu",

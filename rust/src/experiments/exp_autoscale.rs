@@ -20,6 +20,7 @@ use crate::config::simconfig::{
 use crate::cosim::{default_signal_traces, default_signals, Environment};
 use crate::energy::EnergyAccountant;
 use crate::pipeline::LoadProfile;
+use crate::report::live;
 use crate::runtime::ArtifactStore;
 use crate::sim::{self, AutoscaleRun};
 use crate::sweep::SweepExecutor;
@@ -143,6 +144,22 @@ pub fn run_policy(
     horizon_s: f64,
     trace: Trace,
 ) -> Result<PolicyResult> {
+    run_policy_watched(cfg, scale_template, cosim, policy, horizon_s, trace, None)
+}
+
+/// [`run_policy`] with an optional live-watch tap (DESIGN.md §10):
+/// under `--watch` the day-long run streams rolling-window snapshots
+/// through a telemetry fan-out — the primary sinks, and therefore the
+/// policy table and sidecar, are untouched.
+pub fn run_policy_watched(
+    cfg: &SimConfig,
+    scale_template: &AutoscaleConfig,
+    cosim: &CosimConfig,
+    policy: ScalingPolicyKind,
+    horizon_s: f64,
+    trace: Trace,
+    watch: Option<live::CaseTap>,
+) -> Result<PolicyResult> {
     let mut scale = scale_template.clone();
     scale.policy = policy;
 
@@ -156,8 +173,9 @@ pub fn run_policy(
     let acc = EnergyAccountant::paper_default(cfg)?;
     let mut sink = StreamingSink::with_model(cfg, cosim.interval_s, acc.power_model)?;
     let mut reqs = StreamingRequestSink::new(cfg);
-    let out =
-        sim::run_autoscaled_streaming_with(cfg, &scale, &grid, trace, &mut sink, &mut reqs)?;
+    let out = live::run_observed(watch, cfg, acc.grid_ci, &mut sink, &mut reqs, |s, r| {
+        sim::run_autoscaled_streaming_with(cfg, &scale, &grid, trace, s, r)
+    })?;
     let energy = acc.report_fleet(cfg, sink.aggregates(), &out.timeline);
     let binned = sink.binned(cfg, &out.timeline)?;
     let profile = LoadProfile::from_binned(&binned);
@@ -213,9 +231,21 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     // the trace is seed-deterministic, so every shard regenerates the
     // identical workload).
     let (shard, owned) = crate::sweep::shard::shard_owned(POLICIES.to_vec());
+    let view = live::open_view("autoscale", POLICIES.len() as u64, owned.len() as u64, shard)?;
     let indices: Vec<usize> = owned.iter().map(|(i, _)| *i).collect();
-    let results = SweepExecutor::with_default_jobs().run(owned, |_, &(_, policy)| {
-        run_policy(&cfg, &scale, &cosim, policy, horizon_s, trace.clone())
+    let results = SweepExecutor::with_default_jobs().run(owned, |_, &(gi, policy)| {
+        run_policy_watched(
+            &cfg,
+            &scale,
+            &cosim,
+            policy,
+            horizon_s,
+            trace.clone(),
+            view.as_ref().map(|v| live::CaseTap {
+                view: v.clone(),
+                case_index: gi as u64,
+            }),
+        )
     })?;
     for r in &results {
         let m = &r.out.sim.metrics;

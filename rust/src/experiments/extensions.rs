@@ -35,7 +35,7 @@ pub fn run_sched(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("sched", cfgs)?;
 
     let mut table = Table::new(&[
         "scheduler", "avg_power_w", "energy_kwh", "makespan_s", "ttft_p50_s",
@@ -79,7 +79,7 @@ pub fn run_gpu(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("gpu", cfgs)?;
 
     let mut table = Table::new(&[
         "gpu", "avg_power_w", "energy_kwh", "wh_per_request", "makespan_s",

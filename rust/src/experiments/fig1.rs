@@ -24,7 +24,7 @@ pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
             cfg
         })
         .collect();
-    let grid = run_grid(cfgs)?;
+    let grid = run_grid("fig1", cfgs)?;
 
     let mut table = Table::new(&["qps", "weighted_mfu", "avg_power_w", "achieved_qps"]);
     for (i, r) in grid.iter() {

@@ -50,6 +50,19 @@ fn shard_owns_single_case(id: &str) -> bool {
     }
 }
 
+/// Single-case experiments don't run through the watched sweep paths:
+/// with `--watch` active, say so instead of silently emitting nothing
+/// (DESIGN.md §10 — their value is the final summary table, not a
+/// case-progress stream).
+fn note_unwatched_single_case(id: &str) {
+    if crate::report::live::active_watch().is_some() {
+        eprintln!(
+            "watch: single-case experiment '{id}' emits no live snapshots \
+             (DESIGN.md §10)"
+        );
+    }
+}
+
 /// Run an experiment by id ("fig1", "exp1".."exp5", "casestudy",
 /// "ablation", or "all").
 pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
@@ -61,9 +74,15 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
         "exp4" => exp4::run(out_dir, fast).map(|_| ()),
         "exp5" => exp5::run(out_dir, fast).map(|_| ()),
         "casestudy" if !shard_owns_single_case(id) => Ok(()),
-        "casestudy" => casestudy::run(out_dir, fast).map(|_| ()),
+        "casestudy" => {
+            note_unwatched_single_case(id);
+            casestudy::run(out_dir, fast).map(|_| ())
+        }
         "ablation" if !shard_owns_single_case(id) => Ok(()),
-        "ablation" => ablation::run(out_dir, fast).map(|_| ()),
+        "ablation" => {
+            note_unwatched_single_case(id);
+            ablation::run(out_dir, fast).map(|_| ())
+        }
         "sched" => extensions::run_sched(out_dir, fast).map(|_| ()),
         "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),
         "autoscale" => exp_autoscale::run(out_dir, fast).map(|_| ()),

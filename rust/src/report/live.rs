@@ -1,0 +1,886 @@
+//! Live sweep observability (DESIGN.md §10): the view side of the
+//! watch pipeline.
+//!
+//! The telemetry side (`telemetry::window`) produces [`Snapshot`]s;
+//! this module decides what happens to them. One [`LiveView`] exists
+//! per watched experiment run, shared (`Arc<Mutex>`) by every sweep
+//! worker:
+//!
+//! * `--watch` / `--watch=stderr` — re-renders an in-place terminal
+//!   dashboard on stderr (cases done/total, live QPS, rolling p50/p99
+//!   TTFT, watts, cumulative kWh/gCO₂, shard id);
+//! * `--watch=json:PATH` — appends one machine-readable JSONL line per
+//!   snapshot, flushed immediately so `repro watch` can tail it from
+//!   another process (or another machine, over a shared filesystem).
+//!
+//! `repro watch <dir-or-file>...` reads such JSONL files — one per
+//! shard of a cross-machine sweep — and [`aggregate`]s them: per-case
+//! *latest* snapshots are summed into experiment totals (cumulative
+//! fields) and live rates (windowed fields of still-running cases), so
+//! the operator sees one dashboard for the whole fleet. The final
+//! aggregate of `done` snapshots equals the `meta.json` /
+//! `telemetry.json` totals — asserted by `tests/watch_observer.rs` and
+//! the CI watch-smoke.
+//!
+//! The watch configuration is process-global (set once from the CLI,
+//! like `--jobs` and `--shard`) so experiment regenerators pick it up
+//! without signature churn.
+
+use crate::config::simconfig::SimConfig;
+use crate::sweep::ShardSpec;
+use crate::telemetry::window::{CaseWatch, Snapshot, SnapshotEmitter};
+use crate::telemetry::{FanoutRequestSink, FanoutStageSink, RequestSink, StageSink};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Default JSONL file name looked up inside watch directories.
+pub const WATCH_FILENAME: &str = "watch.jsonl";
+
+/// Where snapshots go.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WatchTarget {
+    /// In-place terminal dashboard on stderr.
+    Stderr,
+    /// Append JSONL snapshot lines to this path.
+    Json(PathBuf),
+}
+
+/// The `--watch` configuration: target plus the sim-time emission
+/// cadence and the rolling-window span the snapshots aggregate over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WatchConfig {
+    pub target: WatchTarget,
+    /// Sim-time seconds between snapshots of one case.
+    pub cadence_s: f64,
+    /// Rolling-window span for the windowed fields, sim-time seconds.
+    pub window_s: f64,
+}
+
+impl WatchConfig {
+    /// The bare `--watch` default: stderr dashboard, one snapshot per
+    /// simulated minute, 5-minute rolling window (the bin and
+    /// autoscaler-window scales next door).
+    pub fn stderr() -> WatchConfig {
+        WatchConfig {
+            target: WatchTarget::Stderr,
+            cadence_s: 60.0,
+            window_s: 300.0,
+        }
+    }
+
+    /// Parse the `--watch=<spec>` forms: `stderr` or `json:PATH`.
+    pub fn parse(spec: &str) -> Result<WatchConfig> {
+        let mut cfg = WatchConfig::stderr();
+        if spec == "stderr" {
+            return Ok(cfg);
+        }
+        if let Some(path) = spec.strip_prefix("json:") {
+            if path.is_empty() {
+                bail!("--watch=json: needs a path (e.g. --watch=json:watch.jsonl)");
+            }
+            cfg.target = WatchTarget::Json(PathBuf::from(path));
+            return Ok(cfg);
+        }
+        bail!("--watch expects 'stderr' or 'json:PATH', got '{spec}'");
+    }
+}
+
+/// Process-wide watch configuration (the CLI's `--watch`), mirroring
+/// the `--jobs` / `--shard` globals next door.
+static ACTIVE_WATCH: Mutex<Option<WatchConfig>> = Mutex::new(None);
+
+/// Serializes tests that mutate the process-global watch (they live in
+/// more than one module of this crate, and the libtest harness runs
+/// them on parallel threads).
+#[cfg(test)]
+pub(crate) static WATCH_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Set (or clear, with `None`) the process-wide watch configuration.
+pub fn set_watch(cfg: Option<WatchConfig>) {
+    *ACTIVE_WATCH.lock().unwrap() = cfg;
+}
+
+/// The process-wide watch configuration, if any.
+pub fn active_watch() -> Option<WatchConfig> {
+    ACTIVE_WATCH.lock().unwrap().clone()
+}
+
+enum ViewOutput {
+    /// Terminal dashboard; remembers how many lines the last render
+    /// used so the next one can redraw in place.
+    Stderr { last_lines: usize },
+    Json {
+        w: std::io::BufWriter<std::fs::File>,
+        /// A write failure is reported once (not once per snapshot) —
+        /// a full disk mid-sweep must not fail the sweep, but it must
+        /// not be silent either.
+        warned: bool,
+    },
+}
+
+/// Watch-log paths this process has already opened. The *first* open
+/// of a path truncates it — a fresh invocation must not mix its
+/// snapshot stream with a previous (possibly aborted) run's, whose
+/// stale `done` lines would win the latest-per-case aggregation —
+/// while later opens in the same process (`experiment all` runs one
+/// `LiveView` per experiment) append to the shared file.
+static OPENED_LOGS: Mutex<BTreeSet<PathBuf>> = Mutex::new(BTreeSet::new());
+
+/// Process-wide snapshot sequence. One counter across every view, so
+/// `seq` stays strictly increasing through a whole `experiment all`
+/// log (several views appending to one shared file) — the per-file
+/// well-formedness invariant the CI watch-smoke asserts.
+static SNAPSHOT_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// One watched experiment run's snapshot consumer. Stamps the
+/// process-wide snapshot fields (`seq`, `cases_done`, `cases_total`)
+/// and renders/appends. Shared across sweep workers behind
+/// `Arc<Mutex>`.
+pub struct LiveView {
+    cfg: WatchConfig,
+    experiment: String,
+    shard: Option<String>,
+    /// Full grid size across all shards (stamped into snapshots —
+    /// the unit `repro watch` aggregates against).
+    cases_total: u64,
+    /// Cases *this process* owns (= total unless sharded) — the
+    /// stderr dashboard's denominator, or a shard would count its
+    /// local completions against the global grid and never look done.
+    cases_owned: u64,
+    done_cases: BTreeSet<u64>,
+    /// Latest snapshot per case — maintained for the stderr dashboard
+    /// only (the JSON path has no reader for it).
+    latest: BTreeMap<u64, Snapshot>,
+    out: ViewOutput,
+}
+
+impl LiveView {
+    /// Open a view for one experiment run. A JSON target is truncated
+    /// on its first open in this process (a fresh invocation never
+    /// mixes with a previous run's stream) and appended to on later
+    /// opens (`experiment all` runs one view per experiment over one
+    /// shared file; every line is self-describing).
+    pub fn open(
+        cfg: &WatchConfig,
+        experiment: &str,
+        cases_total: u64,
+        cases_owned: u64,
+        shard: Option<ShardSpec>,
+    ) -> Result<LiveView> {
+        let out = match &cfg.target {
+            WatchTarget::Stderr => ViewOutput::Stderr { last_lines: 0 },
+            WatchTarget::Json(path) => {
+                if let Some(dir) = path.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                let fresh = OPENED_LOGS.lock().unwrap().insert(path.clone());
+                let mut opts = std::fs::OpenOptions::new();
+                opts.create(true).write(true);
+                if fresh {
+                    // First open this process: start a clean stream.
+                    opts.truncate(true);
+                } else {
+                    // Same process, next experiment (`experiment all`):
+                    // share the file; every line is self-describing.
+                    opts.append(true);
+                }
+                let file = opts
+                    .open(path)
+                    .with_context(|| format!("opening watch log {path:?}"))?;
+                ViewOutput::Json {
+                    w: std::io::BufWriter::new(file),
+                    warned: false,
+                }
+            }
+        };
+        Ok(LiveView {
+            cfg: cfg.clone(),
+            experiment: experiment.to_string(),
+            shard: shard.map(|s| s.label()),
+            cases_total,
+            cases_owned,
+            done_cases: BTreeSet::new(),
+            latest: BTreeMap::new(),
+            out,
+        })
+    }
+
+    /// The emitter handed to each case's [`CaseWatch`].
+    pub fn emitter(view: Arc<Mutex<LiveView>>) -> SnapshotEmitter {
+        Arc::new(move |s: &mut Snapshot| {
+            // A poisoned lock means another worker panicked mid-render;
+            // the run is failing anyway — don't double-panic here.
+            if let Ok(mut v) = view.lock() {
+                v.emit(s);
+            }
+        })
+    }
+
+    fn emit(&mut self, s: &mut Snapshot) {
+        s.seq = SNAPSHOT_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if s.done {
+            self.done_cases.insert(s.case_index);
+        }
+        s.cases_done = self.done_cases.len() as u64;
+        s.cases_owned = self.cases_owned;
+        s.cases_total = self.cases_total;
+        if matches!(self.out, ViewOutput::Stderr { .. }) {
+            // Only the dashboard renders from per-case state; the JSON
+            // path would clone every snapshot into a map nothing reads.
+            self.latest.insert(s.case_index, s.clone());
+        }
+        match &mut self.out {
+            ViewOutput::Json { w, warned } => {
+                // One line per snapshot, flushed immediately so a
+                // concurrent `repro watch` never waits on the buffer.
+                // Failures must not kill the sweep, but say so once.
+                let r = writeln!(w, "{}", s.to_json().to_string()).and_then(|_| w.flush());
+                if let Err(e) = r {
+                    if !*warned {
+                        *warned = true;
+                        eprintln!(
+                            "warning: watch log write failed ({e}); \
+                             further snapshots of this run may be lost"
+                        );
+                    }
+                }
+            }
+            ViewOutput::Stderr { last_lines } => {
+                let text = render_dashboard(
+                    &self.experiment,
+                    self.shard.as_deref(),
+                    self.done_cases.len() as u64,
+                    self.cases_owned,
+                    self.latest.values(),
+                );
+                let lines = text.lines().count();
+                // Move up over the previous render and clear it.
+                if *last_lines > 0 {
+                    eprint!("\x1b[{}A\x1b[J", *last_lines);
+                }
+                eprint!("{text}");
+                *last_lines = lines;
+            }
+        }
+    }
+}
+
+/// Render the in-place dashboard from per-case latest snapshots.
+/// Cumulative columns sum over every case; live columns (qps, watts)
+/// sum over cases still running; rolling latencies come from the most
+/// recently emitted snapshot.
+fn render_dashboard<'a>(
+    experiment: &str,
+    shard: Option<&str>,
+    cases_done: u64,
+    cases_owned: u64,
+    latest: impl Iterator<Item = &'a Snapshot>,
+) -> String {
+    let mut finished = 0u64;
+    let mut energy = 0.0;
+    let mut gco2 = 0.0;
+    let mut qps = 0.0;
+    let mut power = 0.0;
+    let mut newest: Option<&Snapshot> = None;
+    for s in latest {
+        finished += s.finished;
+        energy += s.energy_kwh;
+        gco2 += s.gco2_g;
+        if !s.done {
+            qps += s.qps;
+            power += s.power_w;
+        }
+        if newest.map(|n| s.seq > n.seq).unwrap_or(true) {
+            newest = Some(s);
+        }
+    }
+    let shard = shard.map(|s| format!(" [shard {s}]")).unwrap_or_default();
+    let mut out = format!(
+        "⚡ {experiment}{shard}  cases {cases_done}/{cases_owned}  \
+         requests {finished}  qps {qps:.2}\n"
+    );
+    if let Some(n) = newest {
+        out.push_str(&format!(
+            "   t={:.0}s  ttft p50/p99 {:.3}/{:.3} s  e2e p99 {:.2} s  mfu {:.3}\n",
+            n.t_s, n.ttft_p50_s, n.ttft_p99_s, n.e2e_p99_s, n.mfu
+        ));
+    }
+    out.push_str(&format!(
+        "   power {power:.0} W  energy {energy:.4} kWh  carbon {gco2:.1} g\n"
+    ));
+    out
+}
+
+/// Open the process-wide watch (if configured) for one experiment run.
+/// Returns `None` when watching is off — the zero-overhead default.
+pub fn open_view(
+    experiment: &str,
+    cases_total: u64,
+    cases_owned: u64,
+    shard: Option<ShardSpec>,
+) -> Result<Option<Arc<Mutex<LiveView>>>> {
+    match active_watch() {
+        None => Ok(None),
+        Some(cfg) => Ok(Some(Arc::new(Mutex::new(LiveView::open(
+            &cfg,
+            experiment,
+            cases_total,
+            cases_owned,
+            shard,
+        )?)))),
+    }
+}
+
+/// Handle a sweep worker uses to attach the watch to one case: the
+/// shared view plus the case's global grid index.
+#[derive(Clone)]
+pub struct CaseTap {
+    pub view: Arc<Mutex<LiveView>>,
+    pub case_index: u64,
+}
+
+impl CaseTap {
+    /// Build the case's [`CaseWatch`] (windows + cadence + emitter).
+    /// `ci_g_per_kwh` is the accounting carbon intensity used for the
+    /// cumulative gCO₂ line.
+    pub fn attach(&self, cfg: &SimConfig, ci_g_per_kwh: f64) -> Result<CaseWatch> {
+        let (watch_cfg, experiment, shard) = {
+            let v = self.view.lock().unwrap();
+            (v.cfg.clone(), v.experiment.clone(), v.shard.clone())
+        };
+        CaseWatch::new(
+            cfg,
+            watch_cfg.window_s,
+            watch_cfg.cadence_s,
+            ci_g_per_kwh,
+            &experiment,
+            shard,
+            self.case_index,
+            LiveView::emitter(self.view.clone()),
+        )
+    }
+}
+
+/// Run a simulation case through `run`, optionally observed: with a
+/// tap, the primary sinks are fanned out to the case's rolling windows
+/// ([`FanoutStageSink`]/[`FanoutRequestSink`]) and the final `done`
+/// snapshot is emitted after the run; without one, the primaries pass
+/// straight through. The one place the watch wiring lives — the grid
+/// sweep and the autoscale policy sweep both call this.
+///
+/// `ci_g_per_kwh` is the accounting carbon intensity for the
+/// cumulative gCO₂ snapshot line. The primaries answer `stats()` and
+/// keep feeding the accounting, so persisted outputs are byte-
+/// identical either way (`tests/watch_observer.rs`).
+pub fn run_observed<T>(
+    tap: Option<CaseTap>,
+    cfg: &SimConfig,
+    ci_g_per_kwh: f64,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+    run: impl FnOnce(&mut dyn StageSink, &mut dyn RequestSink) -> Result<T>,
+) -> Result<T> {
+    match tap {
+        None => run(sink, requests),
+        Some(tap) => {
+            let w = tap.attach(cfg, ci_g_per_kwh)?;
+            let (mut stage_tap, mut req_tap) = w.taps();
+            let mut fan_stage = FanoutStageSink::new(vec![sink, &mut stage_tap]);
+            let mut fan_req = FanoutRequestSink::new(vec![requests, &mut req_tap]);
+            let out = run(&mut fan_stage, &mut fan_req)?;
+            w.finish();
+            Ok(out)
+        }
+    }
+}
+
+// ---- `repro watch`: read + aggregate snapshot logs ----------------
+
+/// Resolve the CLI's positional arguments to snapshot files: a file is
+/// taken as-is; a directory contributes its own `watch.jsonl` plus any
+/// in its immediate subdirectories (the shape of a sweep `--out`
+/// tree).
+pub fn discover_watch_files(paths: &[PathBuf]) -> Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_file() {
+            files.push(p.clone());
+            continue;
+        }
+        if !p.is_dir() {
+            bail!("watch path {p:?} is neither a file nor a directory");
+        }
+        let own = p.join(WATCH_FILENAME);
+        if own.is_file() {
+            files.push(own);
+        }
+        for entry in std::fs::read_dir(p).with_context(|| format!("listing {p:?}"))? {
+            let sub = entry?.path().join(WATCH_FILENAME);
+            if sub.is_file() {
+                files.push(sub);
+            }
+        }
+    }
+    files.sort();
+    files.dedup();
+    Ok(files)
+}
+
+/// Read every snapshot line of one JSONL file — [`tail_snapshots`]
+/// from a fresh state, so both readers share one parsing and one
+/// torn-tail policy: an unterminated final line (a writer mid-append)
+/// is skipped with a stderr warning; malformed *complete* lines are
+/// real corruption and error out.
+pub fn read_snapshots(path: &Path) -> Result<Vec<Snapshot>> {
+    let mut state = TailState::default();
+    tail_snapshots(path, &mut state)?;
+    warn_if_torn_tail(path, &state);
+    Ok(state.snapshots)
+}
+
+/// Warn when the last read stopped short of the file end — the
+/// unparsed bytes are an incomplete final line, and on a *finished*
+/// log that line held a case's `done` totals, so the skip must not be
+/// silent. Judged from the read itself ([`TailState::torn`]), not a
+/// fresh stat, so a live writer appending between read and warn can't
+/// fake a torn tail.
+pub fn warn_if_torn_tail(path: &Path, state: &TailState) {
+    if state.torn {
+        eprintln!(
+            "warning: {path:?} has an incomplete final line \
+             (writer mid-append?); its snapshot was not counted"
+        );
+    }
+}
+
+/// Incremental tail state for one snapshot log: the byte offset of
+/// the first unparsed byte plus everything parsed so far. Logs are
+/// append-only within one run, so a follower only ever parses the
+/// appended suffix — O(new bytes) per refresh instead of re-reading a
+/// day-long log in full every tick.
+#[derive(Debug, Default)]
+pub struct TailState {
+    /// First byte not yet parsed (always just past a newline, so the
+    /// next read starts line-aligned).
+    pub offset: u64,
+    /// Snapshots parsed so far, in file order.
+    pub snapshots: Vec<Snapshot>,
+    /// Whether the last read ended on an incomplete line (bytes past
+    /// the final newline **at read time** — re-stating the file later
+    /// would race a live writer into false torn-tail warnings).
+    pub torn: bool,
+}
+
+/// Fold newly appended **complete** lines of `path` into `state`;
+/// bytes after the last newline (a writer mid-append) stay unparsed
+/// until a later call. A file that *shrank* is a fresh run that
+/// truncated the log: the state resets and reparses — and the reset
+/// alone counts as a change, so a follower re-renders even before the
+/// new run's first line lands. Returns whether anything changed.
+/// Malformed complete lines error out *and reset the state*: a log
+/// that was truncated and regrew past the old offset between polls
+/// parses misaligned mid-line, and the reset makes the next attempt
+/// restart from byte 0 — self-healing for restarts, still loud on
+/// every attempt for genuine interior corruption.
+pub fn tail_snapshots(path: &Path, state: &mut TailState) -> Result<bool> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let len = f.metadata()?.len();
+    let reset = len < state.offset;
+    if reset {
+        *state = TailState::default();
+    }
+    if len == state.offset {
+        state.torn = false;
+        return Ok(reset);
+    }
+    f.seek(SeekFrom::Start(state.offset))?;
+    let mut buf = String::new();
+    f.take(len - state.offset)
+        .read_to_string(&mut buf)
+        .with_context(|| format!("reading {path:?}"))?;
+    let Some(last_nl) = buf.rfind('\n') else {
+        state.torn = true;
+        return Ok(reset); // only an incomplete tail so far
+    };
+    state.torn = last_nl + 1 < buf.len();
+    // Stage, then commit: on success a retrying follower never
+    // double-counts; on failure the whole state resets (see above).
+    let mut fresh = Vec::new();
+    for line in buf[..last_nl].lines().filter(|l| !l.trim().is_empty()) {
+        let parsed = crate::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .and_then(|v| Snapshot::from_json(&v))
+            .with_context(|| format!("{path:?} past byte {}", state.offset));
+        match parsed {
+            Ok(s) => fresh.push(s),
+            Err(e) => {
+                *state = TailState::default();
+                return Err(e);
+            }
+        }
+    }
+    let changed = reset || !fresh.is_empty();
+    state.snapshots.extend(fresh);
+    state.offset += last_nl as u64 + 1;
+    Ok(changed)
+}
+
+/// One experiment's aggregate over every shard's snapshots.
+#[derive(Debug, Clone)]
+pub struct ExpAggregate {
+    pub experiment: String,
+    /// Shard labels seen (empty-string key for unsharded snapshots).
+    pub shards: BTreeSet<String>,
+    pub cases_total: u64,
+    /// Cases whose latest snapshot is `done`.
+    pub cases_done: u64,
+    /// Σ over per-case latest snapshots (cumulative fields).
+    pub finished: u64,
+    pub stages: u64,
+    pub energy_kwh: f64,
+    pub gco2_g: f64,
+    /// Σ windowed rates over cases still running.
+    pub qps: f64,
+    pub power_w: f64,
+    /// Furthest case sim time seen.
+    pub max_t_s: f64,
+    /// Rolling latencies of the most recent snapshot.
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub e2e_p99_s: f64,
+}
+
+/// Fold snapshots (from any number of shard files, in any order) into
+/// per-experiment aggregates. Within one experiment the latest
+/// snapshot per (shard, case) wins — shards own disjoint global case
+/// indices, so summing latest snapshots reproduces sweep totals.
+/// Takes borrows so a tailing caller can aggregate its cache without
+/// cloning thousands of accumulated snapshots per refresh.
+pub fn aggregate<'a>(snaps: impl IntoIterator<Item = &'a Snapshot>) -> Vec<ExpAggregate> {
+    // (experiment, shard label, case) -> latest snapshot. Keys borrow
+    // from the snapshots — a follower re-aggregating a long history
+    // every refresh must not pay two String clones per snapshot.
+    let mut latest: BTreeMap<(&str, &str, u64), &Snapshot> = BTreeMap::new();
+    for s in snaps {
+        let key = (
+            s.experiment.as_str(),
+            s.shard.as_deref().unwrap_or(""),
+            s.case_index,
+        );
+        let slot = latest.entry(key).or_insert(s);
+        // Files replay in write order; `seq` orders within one file,
+        // `t_s`/`done` break ties across files of the same shard.
+        if (s.done, s.t_s, s.seq) >= (slot.done, slot.t_s, slot.seq) {
+            *slot = s;
+        }
+    }
+    let mut by_exp: BTreeMap<String, ExpAggregate> = BTreeMap::new();
+    let mut newest: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+    for ((exp, shard_label, _), s) in &latest {
+        let agg = by_exp.entry(exp.to_string()).or_insert_with(|| ExpAggregate {
+            experiment: exp.to_string(),
+            shards: BTreeSet::new(),
+            cases_total: 0,
+            cases_done: 0,
+            finished: 0,
+            stages: 0,
+            energy_kwh: 0.0,
+            gco2_g: 0.0,
+            qps: 0.0,
+            power_w: 0.0,
+            max_t_s: 0.0,
+            ttft_p50_s: 0.0,
+            ttft_p99_s: 0.0,
+            e2e_p99_s: 0.0,
+        });
+        if !shard_label.is_empty() {
+            agg.shards.insert(shard_label.to_string());
+        }
+        agg.cases_total = agg.cases_total.max(s.cases_total);
+        agg.cases_done += s.done as u64;
+        agg.finished += s.finished;
+        agg.stages += s.stages;
+        agg.energy_kwh += s.energy_kwh;
+        agg.gco2_g += s.gco2_g;
+        if !s.done {
+            agg.qps += s.qps;
+            agg.power_w += s.power_w;
+        }
+        agg.max_t_s = agg.max_t_s.max(s.t_s);
+        let key = (s.t_s, s.seq);
+        if newest.get(*exp).map(|&n| key >= n).unwrap_or(true) {
+            newest.insert(exp.to_string(), key);
+            agg.ttft_p50_s = s.ttft_p50_s;
+            agg.ttft_p99_s = s.ttft_p99_s;
+            agg.e2e_p99_s = s.e2e_p99_s;
+        }
+    }
+    by_exp.into_values().collect()
+}
+
+/// Render the `repro watch` dashboard for the aggregates.
+pub fn render_watch(aggs: &[ExpAggregate], files: usize) -> String {
+    let mut out = format!("repro watch — {files} snapshot file(s)\n");
+    for a in aggs {
+        let shard = if a.shards.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " [{} shard(s): {}]",
+                a.shards.len(),
+                a.shards.iter().cloned().collect::<Vec<_>>().join(", ")
+            )
+        };
+        out.push_str(&format!(
+            "\n⚡ {}{}  cases {}/{}  t={:.0}s\n",
+            a.experiment, shard, a.cases_done, a.cases_total, a.max_t_s
+        ));
+        out.push_str(&format!(
+            "   requests {}  qps {:.2}  ttft p50/p99 {:.3}/{:.3} s  e2e p99 {:.2} s\n",
+            a.finished, a.qps, a.ttft_p50_s, a.ttft_p99_s, a.e2e_p99_s
+        ));
+        out.push_str(&format!(
+            "   power {:.0} W  energy {:.4} kWh  carbon {:.1} g  ({} stages)\n",
+            a.power_w, a.energy_kwh, a.gco2_g, a.stages
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(exp: &str, shard: Option<&str>, case: u64, seq: u64, t: f64, done: bool) -> Snapshot {
+        Snapshot {
+            experiment: exp.to_string(),
+            shard: shard.map(|s| s.to_string()),
+            case_index: case,
+            seq,
+            t_s: t,
+            done,
+            cases_done: 0,
+            cases_owned: 4,
+            cases_total: 4,
+            finished: 100 + case,
+            stages: 10 * (case + 1),
+            qps: 2.0,
+            ttft_p50_s: 0.4,
+            ttft_p99_s: 1.9,
+            e2e_p50_s: 3.0,
+            e2e_p99_s: 9.0,
+            norm_latency_p50_s_per_tok: 0.2,
+            power_w: 500.0,
+            mfu: 0.3,
+            energy_kwh: 0.5,
+            gco2_g: 200.0,
+        }
+    }
+
+    #[test]
+    fn watch_config_parses_targets() {
+        assert_eq!(WatchConfig::parse("stderr").unwrap().target, WatchTarget::Stderr);
+        assert_eq!(
+            WatchConfig::parse("json:out/w.jsonl").unwrap().target,
+            WatchTarget::Json(PathBuf::from("out/w.jsonl"))
+        );
+        assert!(WatchConfig::parse("json:").is_err());
+        assert!(WatchConfig::parse("tcp:1234").is_err());
+    }
+
+    #[test]
+    fn watch_global_roundtrips() {
+        let _guard = WATCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_watch(None);
+        assert_eq!(active_watch(), None);
+        set_watch(Some(WatchConfig::stderr()));
+        assert_eq!(active_watch(), Some(WatchConfig::stderr()));
+        set_watch(None);
+        assert_eq!(active_watch(), None);
+    }
+
+    /// Aggregation across two shard files: latest-per-case wins,
+    /// cumulative fields sum, live rates only count running cases.
+    #[test]
+    fn aggregate_sums_latest_per_case_across_shards() {
+        let snaps = vec![
+            // shard 0/2 owns cases 0 and 2; case 0 has an older
+            // snapshot that must lose to its final one.
+            snap("expX", Some("0/2"), 0, 1, 60.0, false),
+            snap("expX", Some("0/2"), 0, 2, 120.0, true),
+            snap("expX", Some("0/2"), 2, 3, 90.0, false),
+            // shard 1/2 owns cases 1 and 3.
+            snap("expX", Some("1/2"), 1, 1, 150.0, true),
+            snap("expX", Some("1/2"), 3, 2, 30.0, false),
+            // An unrelated experiment aggregates separately.
+            snap("other", None, 0, 1, 10.0, true),
+        ];
+        let aggs = aggregate(&snaps);
+        assert_eq!(aggs.len(), 2);
+        let x = aggs.iter().find(|a| a.experiment == "expX").unwrap();
+        assert_eq!(x.cases_total, 4);
+        assert_eq!(x.cases_done, 2); // cases 0 and 1
+        assert_eq!(x.shards.len(), 2);
+        // finished sums the latest snapshot of each of the 4 cases.
+        assert_eq!(x.finished, (100) + (101) + (102) + (103));
+        assert_eq!(x.stages, 10 + 20 + 30 + 40);
+        assert!((x.energy_kwh - 2.0).abs() < 1e-12);
+        // Live rates: only the two running cases contribute.
+        assert!((x.qps - 4.0).abs() < 1e-12);
+        assert!((x.power_w - 1000.0).abs() < 1e-12);
+        assert_eq!(x.max_t_s, 150.0);
+        let other = aggs.iter().find(|a| a.experiment == "other").unwrap();
+        assert_eq!(other.cases_done, 1);
+        assert!(other.shards.is_empty());
+        // Rendering mentions both experiments.
+        let text = render_watch(&aggs, 2);
+        assert!(text.contains("expX") && text.contains("other"), "{text}");
+    }
+
+    /// JSONL reading: well-formed lines parse; a torn final line is
+    /// tolerated (live tail), interior corruption is an error.
+    #[test]
+    fn read_snapshots_tolerates_torn_tail_only() {
+        let dir = std::env::temp_dir().join("vidur_energy_live_read");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(WATCH_FILENAME);
+        let a = snap("expX", None, 0, 1, 60.0, false).to_json().to_string();
+        let b = snap("expX", None, 0, 2, 120.0, true).to_json().to_string();
+        std::fs::write(&p, format!("{a}\n{b}\n{{\"format\":\"vidur")).unwrap();
+        let snaps = read_snapshots(&p).unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert!(snaps[1].done);
+        // Interior corruption is not silently skipped.
+        std::fs::write(&p, format!("{a}\nnot json\n{b}\n")).unwrap();
+        assert!(read_snapshots(&p).is_err());
+        // Discovery: the file directly, the dir, and a parent of
+        // shard dirs all resolve to the same file.
+        std::fs::write(&p, format!("{a}\n")).unwrap();
+        let direct = discover_watch_files(&[p.clone()]).unwrap();
+        let via_dir = discover_watch_files(&[dir.clone()]).unwrap();
+        assert_eq!(direct, via_dir);
+        let sub = dir.join("shard0");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(sub.join(WATCH_FILENAME), format!("{b}\n")).unwrap();
+        let both = discover_watch_files(&[dir.clone()]).unwrap();
+        assert_eq!(both.len(), 2);
+        assert!(discover_watch_files(&[dir.join("nope")]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The follower's incremental reader: only appended complete lines
+    /// are parsed (a torn tail waits for its remainder), quiet ticks
+    /// report no change, and a shrunken file (fresh run truncated the
+    /// log) resets the state.
+    #[test]
+    fn tail_snapshots_parses_appended_suffix_and_resets_on_truncate() {
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join("vidur_energy_live_tail");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        let a = snap("expX", None, 0, 1, 60.0, false).to_json().to_string();
+        let b = snap("expX", None, 0, 2, 120.0, false).to_json().to_string();
+        let c = snap("expX", None, 0, 3, 180.0, true).to_json().to_string();
+
+        std::fs::write(&p, format!("{a}\n")).unwrap();
+        let mut st = TailState::default();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 1);
+
+        // Append one complete line plus the torn start of another.
+        let append = |text: &str| {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            write!(f, "{text}").unwrap();
+        };
+        append(&format!("{b}\n"));
+        append(&c[..10]);
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 2, "torn tail must wait");
+        assert!(st.torn, "read-time torn flag must be set");
+        // Quiet tick: nothing new.
+        assert!(!tail_snapshots(&p, &mut st).unwrap());
+        // The remainder arrives; the line completes.
+        append(&format!("{}\n", &c[10..]));
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 3);
+        assert!(st.snapshots[2].done);
+        assert!(!st.torn);
+
+        // A shorter rewrite is a fresh run: state resets and reparses.
+        std::fs::write(&p, format!("{a}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 1);
+        assert_eq!(st.snapshots[0], snap("expX", None, 0, 1, 60.0, false));
+
+        // Reset to a still-empty file is itself a change (the follower
+        // must drop the stale render), with nothing parsed yet.
+        std::fs::write(&p, "").unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert!(st.snapshots.is_empty());
+        assert!(!tail_snapshots(&p, &mut st).unwrap());
+
+        // Self-heal: a log truncated and regrown *past* the old offset
+        // between polls parses misaligned, errors once, resets — and
+        // the next attempt reparses the fresh run from the start.
+        std::fs::write(&p, format!("{a}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        let long = snap("expX-much-longer-name", None, 7, 9, 240.0, true)
+            .to_json()
+            .to_string();
+        assert!(
+            long.len() > a.len() + 1,
+            "regrown first line must strictly span the old offset"
+        );
+        std::fs::write(&p, format!("{long}\n{long}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).is_err(), "misaligned parse must error");
+        assert_eq!(st.offset, 0, "error must reset the state");
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 2);
+        assert_eq!(st.snapshots[1].case_index, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// End-to-end through a JSON-target LiveView: snapshots get
+    /// stamped with monotone seq and case progress, and the file
+    /// round-trips through the reader.
+    #[test]
+    fn live_view_stamps_and_appends_jsonl() {
+        let dir = std::env::temp_dir().join("vidur_energy_live_view");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("w.jsonl");
+        let cfg = WatchConfig {
+            target: WatchTarget::Json(path.clone()),
+            cadence_s: 60.0,
+            window_s: 300.0,
+        };
+        let view = Arc::new(Mutex::new(
+            LiveView::open(&cfg, "expX", 2, 1, Some(ShardSpec::new(1, 2).unwrap())).unwrap(),
+        ));
+        let emit = LiveView::emitter(view.clone());
+        let mut s1 = snap("expX", Some("1/2"), 1, 0, 60.0, false);
+        let mut s2 = snap("expX", Some("1/2"), 1, 0, 120.0, true);
+        (*emit)(&mut s1);
+        (*emit)(&mut s2);
+        // seq is a process-wide counter (other tests may have bumped
+        // it): only the strict ordering is guaranteed.
+        assert!(s2.seq > s1.seq);
+        assert_eq!(s1.cases_done, 0);
+        assert_eq!(s2.cases_done, 1);
+        assert_eq!(s2.cases_total, 2);
+        drop(view);
+        let back = read_snapshots(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], s1);
+        assert_eq!(back[1], s2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,8 +7,13 @@
 //! (`shard: k/N`) is flagged so a partial grid is never mistaken for
 //! the full figure — regenerate figures from the `repro merge` output,
 //! not from one shard.
+//!
+//! The [`live`] module is the *during*-a-run counterpart (DESIGN.md
+//! §10): `--watch` dashboards and the `repro watch` snapshot
+//! aggregator, fed by the telemetry fan-out instead of result files.
 
 pub mod charts;
+pub mod live;
 
 use crate::telemetry::ShardTelemetry;
 use crate::util::csv::Table;

@@ -1,0 +1,188 @@
+//! Fan-out telemetry sinks (DESIGN.md §10).
+//!
+//! A run's telemetry stream has exactly one producer (the engine) but
+//! may want several consumers: the normal accumulator that feeds
+//! metrics and sidecars, *plus* an observer — a live dashboard window,
+//! a debug tap, a secondary log. [`FanoutStageSink`] /
+//! [`FanoutRequestSink`] broadcast every record to N sinks behind the
+//! same object-safe traits the engine already takes, so attaching an
+//! observer requires **zero engine changes** — the sink seam is the
+//! whole integration surface.
+//!
+//! The first sink is the **primary**: `stats()` answers from it alone,
+//! so a fanned-out run returns byte-identical [`StageStats`] /
+//! [`RequestStats`] to an un-fanned run over the same primary — the
+//! observer-parity guarantee `tests/watch_observer.rs` asserts end to
+//! end (CSVs, `meta.json`, `telemetry.json` all unchanged by watching).
+//!
+//! Sinks are borrowed mutably (not boxed) so the caller keeps
+//! ownership of its accumulators and can read them after the run:
+//!
+//! ```
+//! use vidur_energy::telemetry::{FanoutStageSink, StageLog, StageSink};
+//!
+//! let mut primary = StageLog::new();
+//! let mut observer = StageLog::new();
+//! {
+//!     let mut fan = FanoutStageSink::new(vec![&mut primary, &mut observer]);
+//!     // (the engine would call fan.record(..) for every stage)
+//!     assert_eq!(fan.stats().stages, 0);
+//! }
+//! assert_eq!(primary.len(), observer.len()); // both saw every record
+//! ```
+
+use crate::telemetry::{RequestSink, RequestStats, StageRecord, StageSink, StageStats};
+use crate::workload::Request;
+
+/// Broadcasts each stage record to every attached sink; `stats()` is
+/// the first (primary) sink's.
+pub struct FanoutStageSink<'a> {
+    sinks: Vec<&'a mut dyn StageSink>,
+}
+
+impl<'a> FanoutStageSink<'a> {
+    /// Fan out over `sinks`; the first is the primary (must exist).
+    pub fn new(sinks: Vec<&'a mut dyn StageSink>) -> Self {
+        assert!(!sinks.is_empty(), "fan-out needs a primary sink");
+        FanoutStageSink { sinks }
+    }
+
+    /// Number of attached sinks (primary included).
+    pub fn len(&self) -> usize {
+        self.sinks.len()
+    }
+}
+
+impl StageSink for FanoutStageSink<'_> {
+    fn record(&mut self, r: StageRecord) {
+        for s in self.sinks.iter_mut() {
+            s.record(r);
+        }
+    }
+
+    fn stats(&self) -> StageStats {
+        self.sinks[0].stats()
+    }
+}
+
+/// Broadcasts each completed request to every attached sink; `stats()`
+/// is the first (primary) sink's.
+pub struct FanoutRequestSink<'a> {
+    sinks: Vec<&'a mut dyn RequestSink>,
+}
+
+impl<'a> FanoutRequestSink<'a> {
+    /// Fan out over `sinks`; the first is the primary (must exist).
+    pub fn new(sinks: Vec<&'a mut dyn RequestSink>) -> Self {
+        assert!(!sinks.is_empty(), "fan-out needs a primary sink");
+        FanoutRequestSink { sinks }
+    }
+
+    /// Number of attached sinks (primary included).
+    pub fn len(&self) -> usize {
+        self.sinks.len()
+    }
+}
+
+impl RequestSink for FanoutRequestSink<'_> {
+    fn record(&mut self, r: &Request) {
+        for s in self.sinks.iter_mut() {
+            s.record(r);
+        }
+    }
+
+    fn stats(&self) -> RequestStats {
+        self.sinks[0].stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::SimConfig;
+    use crate::scheduler::replica::StageKind;
+    use crate::telemetry::{RequestLog, StageLog, StreamingRequestSink, StreamingSink};
+
+    fn rec(start: f64, mfu: f64, batch: u32) -> StageRecord {
+        StageRecord {
+            replica: 0,
+            pp_stage: 0,
+            start_s: start,
+            dt_s: 0.4,
+            batch_size: batch,
+            new_tokens: batch,
+            mfu,
+            power_w: 250.0,
+            active_gpus: 1,
+            idle_gpus: 0,
+            flops: 1e12,
+            kind: StageKind::Decode,
+        }
+    }
+
+    fn req(id: u64) -> Request {
+        let mut r = Request::new(id, id as f64, 64, 16);
+        r.prefill_done = 64;
+        r.decode_done = 16;
+        r.scheduled_s = Some(id as f64 + 0.1);
+        r.first_token_s = Some(id as f64 + 0.5);
+        r.finished_s = Some(id as f64 + 3.0);
+        r
+    }
+
+    /// The parity contract: a fanned-out run's primary stats equal an
+    /// un-fanned run's, and every observer saw every record.
+    #[test]
+    fn fanout_is_transparent_to_the_primary() {
+        let cfg = SimConfig::default();
+        // Reference: primary alone.
+        let mut alone = StreamingSink::new(&cfg, 10.0).unwrap();
+        // Fanned: identical primary + a materialized observer.
+        let mut primary = StreamingSink::new(&cfg, 10.0).unwrap();
+        let mut observer = StageLog::new();
+        {
+            let mut fan = FanoutStageSink::new(vec![&mut primary, &mut observer]);
+            assert_eq!(fan.len(), 2);
+            for i in 0..120 {
+                let r = rec(i as f64 * 0.5, 0.1 + (i % 7) as f64 * 0.05, 1 + i % 6);
+                alone.record(r);
+                fan.record(r);
+            }
+            let fan_stats = fan.stats();
+            assert_eq!(fan_stats.stages, alone.stats().stages);
+            assert_eq!(fan_stats.weighted_mfu, alone.stats().weighted_mfu);
+        }
+        assert_eq!(observer.len(), 120);
+        assert_eq!(primary.stats().stages, 120);
+        assert_eq!(primary.stats().busy_gpu_s, alone.stats().busy_gpu_s);
+    }
+
+    #[test]
+    fn request_fanout_broadcasts_and_answers_from_primary() {
+        let cfg = SimConfig::default();
+        let mut alone = StreamingRequestSink::new(&cfg);
+        let mut primary = StreamingRequestSink::new(&cfg);
+        let mut observer = RequestLog::new(&cfg);
+        {
+            let mut fan = FanoutRequestSink::new(vec![&mut primary, &mut observer]);
+            for i in 0..80u64 {
+                let r = req(i);
+                alone.record(&r);
+                fan.record(&r);
+            }
+            let a = fan.stats();
+            let b = alone.stats();
+            assert_eq!(a.finished, b.finished);
+            assert_eq!(a.slo_both_ok, b.slo_both_ok);
+            assert_eq!(a.ttft_p50_s, b.ttft_p50_s);
+        }
+        assert_eq!(observer.len(), 80);
+        assert_eq!(primary.stats().finished, 80);
+    }
+
+    #[test]
+    #[should_panic(expected = "primary")]
+    fn empty_fanout_is_rejected() {
+        FanoutStageSink::new(Vec::new());
+    }
+}

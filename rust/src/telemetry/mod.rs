@@ -25,14 +25,25 @@
 //! run: CSVs merge byte-identically, counters exactly, quantiles
 //! within ε.
 
+//!
+//! Because both consumers sit behind object-safe traits, a stream can
+//! also be **fanned out** (DESIGN.md §10): [`FanoutStageSink`] /
+//! [`FanoutRequestSink`] broadcast each record to N sinks — the normal
+//! accumulator *plus* an observer such as the rolling-window live view
+//! in [`window`] — without the engine knowing anyone is watching.
+
+pub mod fanout;
 pub mod reqsink;
 pub mod shard;
 pub mod sink;
 pub mod stagelog;
+pub mod window;
 
+pub use fanout::{FanoutRequestSink, FanoutStageSink};
 pub use reqsink::{
     LatencySketches, RequestLog, RequestSink, RequestStats, StreamingRequestSink,
 };
 pub use shard::ShardTelemetry;
 pub use sink::{StageSink, StageStats, StreamingSink};
 pub use stagelog::{StageLog, StageRecord};
+pub use window::{CaseWatch, Snapshot, SnapshotEmitter, WindowedRequests, WindowedStages};

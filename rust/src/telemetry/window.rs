@@ -1,0 +1,896 @@
+//! Rolling-window telemetry and watch snapshots (DESIGN.md §10).
+//!
+//! The sweep sinks answer *end-of-run* questions; a live view needs
+//! *recent* ones: what is the completion rate right now, the rolling
+//! p99 TTFT, the current draw in watts. This module builds those
+//! answers on the shared [`TimeWindow`] ring buffer
+//! (`util::stats`, the same shape `autoscale::CompletionWindow` runs
+//! on):
+//!
+//! * [`WindowedRequests`] — a [`RequestSink`] keeping the trailing
+//!   window of completions (TTFT / e2e / normalized-latency samples +
+//!   token counts) alongside cumulative totals;
+//! * [`WindowedStages`] — a [`StageSink`] keeping the trailing window
+//!   of stage samples (duration, MFU·dt, busy GPU-time, stage joules)
+//!   alongside cumulative stage energy;
+//! * [`Snapshot`] — the cheap serializable struct a dashboard consumes
+//!   (one JSONL line per snapshot, format
+//!   [`SNAPSHOT_FORMAT`]);
+//! * [`CaseWatch`] — glues one simulation case's two windows together
+//!   and emits a [`Snapshot`] every `cadence_s` of **simulation
+//!   time**, plus one final `done` snapshot carrying the case totals.
+//!
+//! Windowed counters are incremental (adjusted on push/evict, never
+//! rescanned) and must equal an exact recompute over the retained
+//! suffix — a property test below drives random streams and window
+//! sizes through both paths. Windowed quantiles are *exact* over the
+//! retained samples (the window already holds them; no sketch needed —
+//! the ε-sketches remain the right tool for the unbounded cumulative
+//! distributions, and stay untouched in the primary sinks).
+//!
+//! Everything here attaches through [`crate::telemetry::fanout`]; the
+//! engine is untouched.
+
+use crate::config::simconfig::SimConfig;
+use crate::telemetry::{RequestSink, RequestStats, StageRecord, StageSink, StageStats};
+use crate::util::json::Value;
+use crate::util::stats::{percentile, percentile_sorted, Summary, TimeWindow};
+use crate::workload::Request;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Format tag written into every snapshot line; bumped on breaking
+/// changes.
+pub const SNAPSHOT_FORMAT: &str = "vidur-energy/watch-snapshot/v1";
+
+/// One completed request's windowed sample.
+#[derive(Debug, Clone)]
+struct ReqSample {
+    ttft: Option<f64>,
+    e2e: Option<f64>,
+    norm: Option<f64>,
+    tokens: u64,
+}
+
+/// Rolling window over recent completions + cumulative request totals.
+/// Keyed by finish time (the completion stream is monotone in it).
+#[derive(Debug)]
+pub struct WindowedRequests {
+    window: TimeWindow<ReqSample>,
+    /// Incremental Σ tokens over the retained window.
+    win_tokens: u64,
+    /// Cumulative completions.
+    finished: u64,
+    /// Cumulative prefill+decode tokens of completions.
+    tokens_done: u64,
+    /// Latest completion time seen.
+    last_t: f64,
+}
+
+impl WindowedRequests {
+    pub fn new(window_s: f64) -> Self {
+        WindowedRequests {
+            window: TimeWindow::new(window_s),
+            win_tokens: 0,
+            finished: 0,
+            tokens_done: 0,
+            last_t: 0.0,
+        }
+    }
+
+    /// Fold one completion in and evict entries that fell out of the
+    /// trailing window.
+    pub fn observe(&mut self, r: &Request) {
+        // Completions arrive in finish order; the clamp keeps the
+        // window keys monotone even for a hypothetical caller feeding
+        // an unfinished request (no `finished_s`), whose arrival-time
+        // fallback could otherwise lodge a stale entry behind newer
+        // ones and inflate the windowed rates until it drained out.
+        let t = r.finished_s.unwrap_or(r.arrival_s).max(self.last_t);
+        let tokens = r.prefill_done + r.decode_done;
+        self.finished += 1;
+        self.tokens_done += tokens;
+        self.last_t = self.last_t.max(t);
+        self.window.push(
+            t,
+            ReqSample {
+                ttft: r.ttft(),
+                e2e: r.e2e_latency(),
+                norm: r.e2e_latency().map(|l| l / r.decode_tokens.max(1) as f64),
+                tokens,
+            },
+        );
+        self.win_tokens += tokens;
+        self.prune(self.last_t);
+    }
+
+    /// Completions retained in the window.
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Tokens retained in the window (incremental; equals the exact
+    /// recompute over the retained suffix).
+    pub fn window_tokens(&self) -> u64 {
+        self.win_tokens
+    }
+
+    /// Cumulative completions.
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    /// Cumulative tokens of completions.
+    pub fn tokens_done(&self) -> u64 {
+        self.tokens_done
+    }
+
+    /// Latest completion time seen (0 before the first).
+    pub fn last_t(&self) -> f64 {
+        self.last_t
+    }
+
+    /// Windowed completions per second.
+    pub fn qps(&self, now: f64) -> f64 {
+        self.window.rate(now)
+    }
+
+    fn collect(&self, f: impl Fn(&ReqSample) -> Option<f64>) -> Vec<f64> {
+        self.window.iter().filter_map(|(_, s)| f(s)).collect()
+    }
+
+    fn windowed_quantile(&self, f: impl Fn(&ReqSample) -> Option<f64>, p: f64) -> Option<f64> {
+        let v = self.collect(f);
+        if v.is_empty() {
+            None
+        } else {
+            Some(percentile(&v, p))
+        }
+    }
+
+    /// Exact windowed TTFT percentile (`p` ∈ [0, 100]).
+    pub fn ttft_percentile(&self, p: f64) -> Option<f64> {
+        self.windowed_quantile(|s| s.ttft, p)
+    }
+
+    /// Exact windowed e2e-latency percentile.
+    pub fn e2e_percentile(&self, p: f64) -> Option<f64> {
+        self.windowed_quantile(|s| s.e2e, p)
+    }
+
+    /// Exact windowed normalized-latency percentile (s per output
+    /// token).
+    pub fn norm_latency_percentile(&self, p: f64) -> Option<f64> {
+        self.windowed_quantile(|s| s.norm, p)
+    }
+
+    /// Evict without observing (e.g. on a timer tick).
+    pub fn prune(&mut self, now: f64) {
+        let win_tokens = &mut self.win_tokens;
+        self.window.prune_each(now, |_, s| *win_tokens -= s.tokens);
+    }
+
+    /// One-pass read-out of the three windowed latency distributions —
+    /// each collected and sorted once, however many percentiles a
+    /// snapshot then reads off it (the per-percentile accessors above
+    /// re-collect per call, which is fine for a single quantile but
+    /// 5× the work for a full snapshot).
+    pub fn latencies(&self) -> WindowedLatencies {
+        let mut l = WindowedLatencies {
+            ttft: self.collect(|s| s.ttft),
+            e2e: self.collect(|s| s.e2e),
+            norm: self.collect(|s| s.norm),
+        };
+        for v in [&mut l.ttft, &mut l.e2e, &mut l.norm] {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        l
+    }
+}
+
+/// Sorted windowed latency samples ([`WindowedRequests::latencies`]);
+/// percentile reads are O(1) interpolations on the sorted vectors.
+pub struct WindowedLatencies {
+    ttft: Vec<f64>,
+    e2e: Vec<f64>,
+    norm: Vec<f64>,
+}
+
+impl WindowedLatencies {
+    fn pc(v: &[f64], p: f64) -> Option<f64> {
+        if v.is_empty() {
+            None
+        } else {
+            Some(percentile_sorted(v, p))
+        }
+    }
+
+    /// Windowed TTFT percentile (`p` ∈ [0, 100]).
+    pub fn ttft(&self, p: f64) -> Option<f64> {
+        Self::pc(&self.ttft, p)
+    }
+
+    /// Windowed e2e-latency percentile.
+    pub fn e2e(&self, p: f64) -> Option<f64> {
+        Self::pc(&self.e2e, p)
+    }
+
+    /// Windowed normalized-latency percentile (s per output token).
+    pub fn norm_latency(&self, p: f64) -> Option<f64> {
+        Self::pc(&self.norm, p)
+    }
+}
+
+impl RequestSink for WindowedRequests {
+    fn record(&mut self, r: &Request) {
+        self.observe(r);
+    }
+
+    /// A **windowed** view of the request aggregates (dashboard tap);
+    /// run-level SLO metrics come from the primary sink, never from
+    /// here.
+    fn stats(&self) -> RequestStats {
+        let lat = self.latencies();
+        let q = |v: Option<f64>| v.unwrap_or(0.0);
+        RequestStats {
+            submitted: self.window.len() as u64,
+            finished: self.window.len() as u64,
+            ttft_p50_s: q(lat.ttft(50.0)),
+            ttft_p99_s: q(lat.ttft(99.0)),
+            e2e_p50_s: q(lat.e2e(50.0)),
+            e2e_p99_s: q(lat.e2e(99.0)),
+            ..RequestStats::default()
+        }
+    }
+}
+
+/// One executed stage's windowed sample.
+#[derive(Debug, Clone)]
+struct StageSample {
+    dt_s: f64,
+    mfu_dt: f64,
+    busy_gpu_s: f64,
+    joules: f64,
+    batch: f64,
+}
+
+/// Rolling window over recent stages + cumulative stage energy. Keyed
+/// by stage **end** time; pruned against the running maximum so the
+/// bounded skew between pipeline stages of different replicas never
+/// runs the window backwards.
+#[derive(Debug)]
+pub struct WindowedStages {
+    window: TimeWindow<StageSample>,
+    p_idle: f64,
+    win_dt: f64,
+    win_mfu_dt: f64,
+    win_busy: f64,
+    win_joules: f64,
+    /// Cumulative stage count.
+    stages: u64,
+    /// Cumulative stage-covered energy, J (active GPUs at the stage's
+    /// Eq. 1 power + replica-idle GPUs at `p_idle`; between-stage idle
+    /// gaps are *not* filled — that is the accountant's job, so this is
+    /// a live lower bound on the accounted total).
+    joules: f64,
+    last_t: f64,
+}
+
+impl WindowedStages {
+    pub fn new(window_s: f64, p_idle: f64) -> Self {
+        WindowedStages {
+            window: TimeWindow::new(window_s),
+            p_idle,
+            win_dt: 0.0,
+            win_mfu_dt: 0.0,
+            win_busy: 0.0,
+            win_joules: 0.0,
+            stages: 0,
+            joules: 0.0,
+            last_t: 0.0,
+        }
+    }
+
+    /// Fold one stage record in and evict what fell out of the window.
+    pub fn observe(&mut self, r: &StageRecord) {
+        let t = r.end_s();
+        let joules = r.replica_power_w(self.p_idle) * r.dt_s;
+        self.stages += 1;
+        self.joules += joules;
+        self.last_t = self.last_t.max(t);
+        let s = StageSample {
+            dt_s: r.dt_s,
+            mfu_dt: r.mfu * r.dt_s,
+            busy_gpu_s: r.dt_s * r.active_gpus as f64,
+            joules,
+            batch: r.batch_size as f64,
+        };
+        self.win_dt += s.dt_s;
+        self.win_mfu_dt += s.mfu_dt;
+        self.win_busy += s.busy_gpu_s;
+        self.win_joules += s.joules;
+        self.window.push(t, s);
+        // One eviction path: prune() owns the counter bookkeeping.
+        self.prune(self.last_t);
+    }
+
+    /// Stages retained in the window.
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Cumulative stage count.
+    pub fn stages(&self) -> u64 {
+        self.stages
+    }
+
+    /// Cumulative stage-covered energy, kWh (see `joules` note).
+    pub fn energy_kwh(&self) -> f64 {
+        self.joules / 3.6e6
+    }
+
+    /// Latest stage end time seen.
+    pub fn last_t(&self) -> f64 {
+        self.last_t
+    }
+
+    /// Windowed average power, W: stage joules in the window over the
+    /// (elapsed part of the) window.
+    pub fn power_w(&self, now: f64) -> f64 {
+        self.win_joules / self.window.elapsed(now)
+    }
+
+    /// Windowed duration-weighted MFU.
+    pub fn mfu(&self) -> f64 {
+        if self.win_dt == 0.0 {
+            0.0
+        } else {
+            self.win_mfu_dt / self.win_dt
+        }
+    }
+
+    /// Windowed busy GPU-seconds.
+    pub fn busy_gpu_s(&self) -> f64 {
+        self.win_busy
+    }
+
+    /// Evict without observing (e.g. before taking a snapshot at a
+    /// time past the last stage).
+    pub fn prune(&mut self, now: f64) {
+        let (dt, mfu, busy, j) = (
+            &mut self.win_dt,
+            &mut self.win_mfu_dt,
+            &mut self.win_busy,
+            &mut self.win_joules,
+        );
+        self.window.prune_each(now, |_, s| {
+            *dt -= s.dt_s;
+            *mfu -= s.mfu_dt;
+            *busy -= s.busy_gpu_s;
+            *j -= s.joules;
+        });
+    }
+}
+
+impl StageSink for WindowedStages {
+    fn record(&mut self, r: StageRecord) {
+        self.observe(&r);
+    }
+
+    /// A **windowed** view of the stage aggregates (dashboard tap);
+    /// run-level metrics come from the primary sink.
+    fn stats(&self) -> StageStats {
+        let mut batch = Summary::new();
+        let mut span = (f64::INFINITY, f64::NEG_INFINITY);
+        for (t, s) in self.window.iter() {
+            batch.add(s.batch);
+            span = (span.0.min(t - s.dt_s), span.1.max(t));
+        }
+        let n = self.window.len() as u64;
+        StageStats {
+            stages: n,
+            weighted_mfu: self.mfu(),
+            dt_sum: self.win_dt,
+            mean_batch: if n == 0 { 0.0 } else { batch.mean() },
+            batch_std: batch.std(),
+            busy_gpu_s: self.win_busy,
+            span: if n == 0 { (0.0, 0.0) } else { span },
+        }
+    }
+}
+
+/// One dashboard/JSONL snapshot of a running (or finished) case.
+/// Rolling fields cover the trailing window; `finished`, `stages`,
+/// `energy_kwh`, `gco2_g` are cumulative for the case, so summing the
+/// `done` snapshots across cases reproduces the sweep totals that land
+/// in `meta.json`/`telemetry.json` (the CI watch-smoke checks exactly
+/// that).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Experiment id (`exp1`, `autoscale`, …).
+    pub experiment: String,
+    /// Shard that produced this (`k/N`), `None` unsharded.
+    pub shard: Option<String>,
+    /// Global case index within the experiment grid.
+    pub case_index: u64,
+    /// Process-wide emission sequence number (strictly increasing
+    /// across cases; stamped by the live view).
+    pub seq: u64,
+    /// Case simulation time of the snapshot, seconds (monotone per
+    /// case).
+    pub t_s: f64,
+    /// Final snapshot of a completed case (carries the case totals).
+    pub done: bool,
+    /// Cases finished so far by this process (stamped by the view;
+    /// **shard-local** under `--shard`).
+    pub cases_done: u64,
+    /// Cases this process owns — `cases_done`'s denominator; equals
+    /// `cases_total` unless sharded (stamped by the view).
+    pub cases_owned: u64,
+    /// Full grid size across all shards (stamped by the view).
+    pub cases_total: u64,
+    /// Cumulative completions of this case.
+    pub finished: u64,
+    /// Cumulative stages of this case.
+    pub stages: u64,
+    /// Windowed completion rate, 1/s.
+    pub qps: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+    pub norm_latency_p50_s_per_tok: f64,
+    /// Windowed average power, W.
+    pub power_w: f64,
+    /// Windowed duration-weighted MFU.
+    pub mfu: f64,
+    /// Cumulative stage-covered energy, kWh.
+    pub energy_kwh: f64,
+    /// Cumulative operational carbon at the accounting CI, g.
+    pub gco2_g: f64,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("format", SNAPSHOT_FORMAT)
+            .set("experiment", self.experiment.as_str())
+            .set(
+                "shard",
+                match &self.shard {
+                    Some(s) => Value::Str(s.clone()),
+                    None => Value::Null,
+                },
+            )
+            .set("case", self.case_index)
+            .set("seq", self.seq)
+            .set("t_s", self.t_s)
+            .set("done", self.done)
+            .set("cases_done", self.cases_done)
+            .set("cases_owned", self.cases_owned)
+            .set("cases_total", self.cases_total)
+            .set("finished", self.finished)
+            .set("stages", self.stages)
+            .set("qps", self.qps)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+            .set("e2e_p50_s", self.e2e_p50_s)
+            .set("e2e_p99_s", self.e2e_p99_s)
+            .set(
+                "norm_latency_p50_s_per_tok",
+                self.norm_latency_p50_s_per_tok,
+            )
+            .set("power_w", self.power_w)
+            .set("mfu", self.mfu)
+            .set("energy_kwh", self.energy_kwh)
+            .set("gco2_g", self.gco2_g);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Snapshot> {
+        let format = v.req_str("format")?;
+        anyhow::ensure!(
+            format == SNAPSHOT_FORMAT,
+            "unknown watch snapshot format '{format}' (expected '{SNAPSHOT_FORMAT}')"
+        );
+        let shard = match v.get("shard") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(Value::Null) | None => None,
+            Some(other) => anyhow::bail!("bad 'shard' field: {}", other.to_string()),
+        };
+        Ok(Snapshot {
+            experiment: v.req_str("experiment")?.to_string(),
+            shard,
+            case_index: v.req_u64("case")?,
+            seq: v.req_u64("seq")?,
+            t_s: v.req_f64("t_s")?,
+            done: v
+                .get("done")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| anyhow::anyhow!("missing/non-bool json field 'done'"))?,
+            cases_done: v.req_u64("cases_done")?,
+            cases_owned: v.req_u64("cases_owned")?,
+            cases_total: v.req_u64("cases_total")?,
+            finished: v.req_u64("finished")?,
+            stages: v.req_u64("stages")?,
+            qps: v.req_f64("qps")?,
+            ttft_p50_s: v.req_f64("ttft_p50_s")?,
+            ttft_p99_s: v.req_f64("ttft_p99_s")?,
+            e2e_p50_s: v.req_f64("e2e_p50_s")?,
+            e2e_p99_s: v.req_f64("e2e_p99_s")?,
+            norm_latency_p50_s_per_tok: v.req_f64("norm_latency_p50_s_per_tok")?,
+            power_w: v.req_f64("power_w")?,
+            mfu: v.req_f64("mfu")?,
+            energy_kwh: v.req_f64("energy_kwh")?,
+            gco2_g: v.req_f64("gco2_g")?,
+        })
+    }
+}
+
+/// Receives each emitted snapshot; the live view stamps the
+/// process-wide fields (`seq`, `cases_done`, `cases_total`) and
+/// renders/appends it. `Send + Sync` because sweep cases emit from
+/// worker threads.
+pub type SnapshotEmitter = Arc<dyn Fn(&mut Snapshot) + Send + Sync>;
+
+/// Shared state of one observed case (single-threaded: a sweep case
+/// runs wholly on the worker that claimed it, so `Rc<RefCell>` is the
+/// right tool — the cross-thread boundary is the emitter).
+struct WatchState {
+    experiment: String,
+    shard: Option<String>,
+    case_index: u64,
+    cadence_s: f64,
+    ci_g_per_kwh: f64,
+    req: WindowedRequests,
+    stage: WindowedStages,
+    next_emit_s: f64,
+    last_emit_t: f64,
+    emit: SnapshotEmitter,
+}
+
+impl WatchState {
+    fn now(&self) -> f64 {
+        self.req.last_t().max(self.stage.last_t())
+    }
+
+    fn snapshot(&self, t: f64, done: bool) -> Snapshot {
+        let q = |v: Option<f64>| v.unwrap_or(0.0);
+        // One collect + sort per distribution for all five quantiles.
+        let lat = self.req.latencies();
+        Snapshot {
+            experiment: self.experiment.clone(),
+            shard: self.shard.clone(),
+            case_index: self.case_index,
+            seq: 0,        // stamped by the view
+            cases_done: 0, // stamped by the view
+            cases_owned: 0,
+            cases_total: 0,
+            t_s: t,
+            done,
+            finished: self.req.finished(),
+            stages: self.stage.stages(),
+            qps: self.req.qps(t),
+            ttft_p50_s: q(lat.ttft(50.0)),
+            ttft_p99_s: q(lat.ttft(99.0)),
+            e2e_p50_s: q(lat.e2e(50.0)),
+            e2e_p99_s: q(lat.e2e(99.0)),
+            norm_latency_p50_s_per_tok: q(lat.norm_latency(50.0)),
+            power_w: self.stage.power_w(t),
+            mfu: self.stage.mfu(),
+            energy_kwh: self.stage.energy_kwh(),
+            gco2_g: self.stage.energy_kwh() * self.ci_g_per_kwh,
+        }
+    }
+
+    fn emit_at(&mut self, t: f64, done: bool) {
+        // Monotone-per-case guard: pipeline-stage skew may hand us a
+        // timestamp slightly behind the last emission.
+        let t = t.max(self.last_emit_t);
+        self.last_emit_t = t;
+        // Each window was last pruned at its *own* stream's latest
+        // time; when one stream lags the other (e.g. no completion for
+        // a whole window during a saturated prefill phase) it would
+        // otherwise report stale rates at the snapshot time.
+        self.req.prune(t);
+        self.stage.prune(t);
+        let mut s = self.snapshot(t, done);
+        // `Arc<dyn Fn>` has no `Fn` impl of its own: call through the
+        // deref'd trait object.
+        (*self.emit)(&mut s);
+    }
+
+    fn maybe_emit(&mut self) {
+        let t = self.now();
+        if t >= self.next_emit_s {
+            self.emit_at(t, false);
+            // One snapshot per crossing, however much sim time the
+            // triggering event skipped.
+            self.next_emit_s = (t / self.cadence_s).floor() * self.cadence_s + self.cadence_s;
+        }
+    }
+}
+
+/// Live-watch attachment for one simulation case: a pair of sink taps
+/// (stage + request) over shared rolling windows, emitting a
+/// [`Snapshot`] every `cadence_s` of simulation time and once more at
+/// [`CaseWatch::finish`]. Attach the taps through the fan-out sinks;
+/// the primary accumulators — and therefore every persisted output —
+/// are untouched.
+pub struct CaseWatch {
+    state: Rc<RefCell<WatchState>>,
+}
+
+impl CaseWatch {
+    /// `window_s` is the rolling-window span, `cadence_s` the sim-time
+    /// emission period, `ci_g_per_kwh` the carbon intensity used for
+    /// the cumulative gCO₂ line.
+    pub fn new(
+        cfg: &SimConfig,
+        window_s: f64,
+        cadence_s: f64,
+        ci_g_per_kwh: f64,
+        experiment: &str,
+        shard: Option<String>,
+        case_index: u64,
+        emit: SnapshotEmitter,
+    ) -> Result<CaseWatch> {
+        anyhow::ensure!(cadence_s > 0.0, "watch cadence must be positive");
+        let p_idle = cfg.gpu_spec()?.p_idle;
+        Ok(CaseWatch {
+            state: Rc::new(RefCell::new(WatchState {
+                experiment: experiment.to_string(),
+                shard,
+                case_index,
+                cadence_s,
+                ci_g_per_kwh,
+                req: WindowedRequests::new(window_s),
+                stage: WindowedStages::new(window_s, p_idle),
+                next_emit_s: cadence_s,
+                last_emit_t: 0.0,
+                emit,
+            })),
+        })
+    }
+
+    /// The two sink taps to attach behind the fan-outs.
+    pub fn taps(&self) -> (WatchStageTap, WatchRequestTap) {
+        (
+            WatchStageTap {
+                state: self.state.clone(),
+            },
+            WatchRequestTap {
+                state: self.state.clone(),
+            },
+        )
+    }
+
+    /// Emit the final `done` snapshot (carries the case totals).
+    pub fn finish(&self) {
+        let mut st = self.state.borrow_mut();
+        let t = st.now();
+        st.emit_at(t, true);
+    }
+}
+
+/// Stage-side tap of a [`CaseWatch`].
+pub struct WatchStageTap {
+    state: Rc<RefCell<WatchState>>,
+}
+
+impl StageSink for WatchStageTap {
+    fn record(&mut self, r: StageRecord) {
+        let mut st = self.state.borrow_mut();
+        st.stage.observe(&r);
+        st.maybe_emit();
+    }
+
+    fn stats(&self) -> StageStats {
+        self.state.borrow().stage.stats()
+    }
+}
+
+/// Request-side tap of a [`CaseWatch`].
+pub struct WatchRequestTap {
+    state: Rc<RefCell<WatchState>>,
+}
+
+impl RequestSink for WatchRequestTap {
+    fn record(&mut self, r: &Request) {
+        let mut st = self.state.borrow_mut();
+        st.req.observe(r);
+        st.maybe_emit();
+    }
+
+    fn stats(&self) -> RequestStats {
+        self.state.borrow().req.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::replica::StageKind;
+    use std::sync::Mutex;
+
+    fn done_req(id: u64, fin: f64, ttft: f64, e2e: f64) -> Request {
+        let mut r = Request::new(id, fin - e2e, 40, 10);
+        r.prefill_done = 40;
+        r.decode_done = 10;
+        r.scheduled_s = Some(fin - e2e);
+        r.first_token_s = Some(fin - e2e + ttft);
+        r.finished_s = Some(fin);
+        r
+    }
+
+    fn stage(end: f64, dt: f64, mfu: f64, batch: u32) -> StageRecord {
+        StageRecord {
+            replica: 0,
+            pp_stage: 0,
+            start_s: end - dt,
+            dt_s: dt,
+            batch_size: batch,
+            new_tokens: batch,
+            mfu,
+            power_w: 300.0,
+            active_gpus: 1,
+            idle_gpus: 0,
+            flops: 1e12,
+            kind: StageKind::Decode,
+        }
+    }
+
+    /// Property (satellite): windowed counters and quantiles over a
+    /// sliding window equal an exact recompute on the retained suffix
+    /// for random streams and window sizes.
+    #[test]
+    fn windowed_requests_match_exact_recompute() {
+        use crate::util::proptest::{check, gens};
+        check(60, gens::vec_f64(48, 0.05, 9.0), |dts| {
+            for window_s in [1.0, 12.0, 200.0] {
+                let mut w = WindowedRequests::new(window_s);
+                let mut t = 0.0;
+                for (i, dt) in dts.iter().enumerate() {
+                    t += dt;
+                    let ttft = 0.1 + (i % 13) as f64 * 0.21;
+                    let e2e = 1.0 + (i % 7) as f64 * 1.7;
+                    w.observe(&done_req(i as u64, t, ttft, e2e));
+                    // Exact recompute over the retained suffix.
+                    let tokens: u64 = w.window.iter().map(|(_, s)| s.tokens).sum();
+                    if tokens != w.window_tokens() {
+                        return Err(format!(
+                            "win tokens {} != recompute {tokens} (step {i}, window {window_s})",
+                            w.window_tokens()
+                        ));
+                    }
+                    let ttfts: Vec<f64> =
+                        w.window.iter().filter_map(|(_, s)| s.ttft).collect();
+                    let want = percentile(&ttfts, 99.0);
+                    let got = w.ttft_percentile(99.0).unwrap();
+                    if (got - want).abs() > 1e-12 {
+                        return Err(format!("windowed p99 {got} != exact {want}"));
+                    }
+                }
+                if w.finished() != dts.len() as u64 {
+                    return Err("cumulative count drifted".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Same property on the stage side (all four incremental sums).
+    #[test]
+    fn windowed_stages_match_exact_recompute() {
+        use crate::util::proptest::{check, gens};
+        check(60, gens::vec_f64(48, 0.05, 9.0), |dts| {
+            for window_s in [1.0, 15.0, 500.0] {
+                let mut w = WindowedStages::new(window_s, 100.0);
+                let mut t = 0.0;
+                for (i, step) in dts.iter().enumerate() {
+                    t += step;
+                    w.observe(&stage(t, 0.2 + (i % 5) as f64 * 0.1, 0.3, 1 + (i % 8) as u32));
+                    let (mut dt, mut mfu, mut busy, mut j) = (0.0, 0.0, 0.0, 0.0);
+                    for (_, s) in w.window.iter() {
+                        dt += s.dt_s;
+                        mfu += s.mfu_dt;
+                        busy += s.busy_gpu_s;
+                        j += s.joules;
+                    }
+                    for (name, inc, exact) in [
+                        ("dt", w.win_dt, dt),
+                        ("mfu_dt", w.win_mfu_dt, mfu),
+                        ("busy", w.win_busy, busy),
+                        ("joules", w.win_joules, j),
+                    ] {
+                        if (inc - exact).abs() > 1e-6 * (1.0 + exact.abs()) {
+                            return Err(format!(
+                                "win {name} {inc} != recompute {exact} \
+                                 (step {i}, window {window_s})"
+                            ));
+                        }
+                    }
+                }
+                if w.stages() != dts.len() as u64 {
+                    return Err("cumulative stage count drifted".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Boundary cases the property's random streams may miss: empty
+    /// window, single event, and eviction exactly at the cutoff.
+    #[test]
+    fn window_boundary_cases() {
+        let w = WindowedRequests::new(60.0);
+        assert_eq!(w.window_len(), 0);
+        assert_eq!(w.ttft_percentile(99.0), None);
+        assert_eq!(w.qps(30.0), 0.0);
+
+        let mut one = WindowedRequests::new(60.0);
+        one.observe(&done_req(0, 10.0, 0.5, 2.0));
+        assert_eq!(one.window_len(), 1);
+        assert_eq!(one.ttft_percentile(50.0), Some(0.5));
+        // Elapsed-aware rate: 1 completion over 10 s, not over 60 s.
+        assert!((one.qps(10.0) - 0.1).abs() < 1e-12);
+
+        // Entry exactly at the cutoff is retained (inclusive window).
+        let mut edge = WindowedRequests::new(10.0);
+        edge.observe(&done_req(0, 5.0, 0.5, 2.0));
+        edge.observe(&done_req(1, 15.0, 0.5, 2.0)); // cutoff = 5.0
+        assert_eq!(edge.window_len(), 2, "t == cutoff must survive");
+        edge.observe(&done_req(2, 15.1, 0.5, 2.0)); // cutoff = 5.1
+        assert_eq!(edge.window_len(), 2, "t < cutoff must fall out");
+    }
+
+    /// CaseWatch emits on the sim-time cadence, stamps monotone
+    /// per-case times, and finish() emits the `done` totals snapshot.
+    #[test]
+    fn case_watch_emits_on_cadence_and_finishes_with_totals() {
+        let cfg = SimConfig::default();
+        let got: Arc<Mutex<Vec<Snapshot>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = got.clone();
+        let emit: SnapshotEmitter = Arc::new(move |s: &mut Snapshot| {
+            sink.lock().unwrap().push(s.clone());
+        });
+        let watch = CaseWatch::new(
+            &cfg, 300.0, 60.0, 400.0, "expX", Some("0/2".into()), 3, emit,
+        )
+        .unwrap();
+        {
+            let (mut st, mut rq) = watch.taps();
+            for i in 0..50u64 {
+                let t = i as f64 * 5.0; // 0..245 s: crosses 60/120/180/240
+                st.record(stage(t + 0.4, 0.4, 0.25, 4));
+                rq.record(&done_req(i, t + 0.5, 0.3, 1.5));
+            }
+        }
+        watch.finish();
+        let snaps = got.lock().unwrap();
+        // Cadence crossings at 60, 120, 180, 240 plus the final one.
+        assert_eq!(snaps.len(), 5, "{snaps:?}");
+        assert!(snaps[..4].iter().all(|s| !s.done));
+        let last = snaps.last().unwrap();
+        assert!(last.done);
+        assert_eq!(last.finished, 50);
+        assert_eq!(last.stages, 50);
+        assert_eq!(last.experiment, "expX");
+        assert_eq!(last.shard.as_deref(), Some("0/2"));
+        assert_eq!(last.case_index, 3);
+        assert!(last.energy_kwh > 0.0);
+        assert!((last.gco2_g - last.energy_kwh * 400.0).abs() < 1e-12);
+        // Per-case sim time is monotone.
+        for w in snaps.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s);
+        }
+        // JSON round-trip is lossless (seq/cases stamped or not).
+        let back = Snapshot::from_json(&last.to_json()).unwrap();
+        assert_eq!(back, *last);
+        let text = last.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(Snapshot::from_json(&parsed).unwrap(), *last);
+    }
+}

@@ -15,6 +15,95 @@
 
 use crate::util::json::Value;
 use anyhow::Result;
+use std::collections::VecDeque;
+
+/// A sliding time window over timestamped samples — the shared shape
+/// behind every rolling-window aggregator in the crate (the
+/// autoscaler's [`crate::autoscale::CompletionWindow`], the live-watch
+/// windows in [`crate::telemetry::window`]).
+///
+/// Entries are `(t, payload)` pairs appended in stream order;
+/// [`TimeWindow::prune`] evicts from the front while the front entry
+/// is **strictly older** than `now - window_s`. The retained interval
+/// is therefore the *inclusive* `[now - window_s, now]` — an entry
+/// whose timestamp lands exactly on the cutoff stays in the window
+/// (the convention `CompletionWindow` has always used; pinned by a
+/// regression test there).
+///
+/// Timestamps are expected to be non-decreasing (both the completion
+/// stream and the per-replica stage stream satisfy this up to bounded
+/// pipeline-stage skew). Eviction stops at the first front entry at or
+/// past the cutoff, so the retained set is always a *suffix of the
+/// insertion order* — the precise object the windowed-counter property
+/// tests recompute against.
+#[derive(Debug, Clone)]
+pub struct TimeWindow<T> {
+    window_s: f64,
+    entries: VecDeque<(f64, T)>,
+}
+
+impl<T> TimeWindow<T> {
+    /// A window spanning the trailing `window_s` seconds (must be > 0).
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0, "window must be positive");
+        TimeWindow {
+            window_s,
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// The configured window length, seconds.
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Append one sample at time `t`.
+    pub fn push(&mut self, t: f64, v: T) {
+        self.entries.push_back((t, v));
+    }
+
+    /// Evict entries strictly older than `now - window_s`.
+    pub fn prune(&mut self, now: f64) {
+        self.prune_each(now, |_, _| {});
+    }
+
+    /// [`TimeWindow::prune`] with an eviction callback — how windowed
+    /// accumulators keep incremental counters exact: every quantity
+    /// added on `push` is subtracted here when its entry leaves.
+    pub fn prune_each(&mut self, now: f64, mut on_evict: impl FnMut(f64, &T)) {
+        let cutoff = now - self.window_s;
+        while self.entries.front().map(|e| e.0 < cutoff).unwrap_or(false) {
+            let (t, v) = self.entries.pop_front().expect("front checked");
+            on_evict(t, &v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate the retained `(t, payload)` entries, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, &T)> {
+        self.entries.iter().map(|(t, v)| (*t, v))
+    }
+
+    /// The averaging span at time `now`: the window length, except
+    /// early in a run — before one full window has elapsed — where it
+    /// is the elapsed time. The shared divisor every windowed rate
+    /// (completions/s, watts) uses.
+    pub fn elapsed(&self, now: f64) -> f64 {
+        self.window_s.min(now.max(1e-9))
+    }
+
+    /// Entries per second over [`TimeWindow::elapsed`].
+    pub fn rate(&self, now: f64) -> f64 {
+        self.entries.len() as f64 / self.elapsed(now)
+    }
+}
 
 /// Streaming mean / variance / extrema accumulator (Welford's method).
 #[derive(Debug, Clone)]
@@ -968,6 +1057,69 @@ mod tests {
         }
         assert_eq!(sk.quantile(0.0), Some(0.0));
         assert_eq!(sk.quantile(1.0), Some(999.0));
+    }
+
+    /// The shared window's eviction semantics, pinned: retained ⇔
+    /// `t ≥ now − window` (inclusive cutoff), suffix-of-insertion
+    /// order, and the incremental-counter contract of `prune_each`.
+    #[test]
+    fn time_window_prunes_inclusive_cutoff_suffix() {
+        let mut w: TimeWindow<u64> = TimeWindow::new(10.0);
+        for i in 0..6u64 {
+            w.push(i as f64 * 5.0, i); // t = 0, 5, 10, 15, 20, 25
+        }
+        let mut evicted = Vec::new();
+        // cutoff = 10: t = 0, 5 evicted; t = 10 exactly is retained.
+        w.prune_each(20.0, |t, &v| evicted.push((t, v)));
+        assert_eq!(evicted, vec![(0.0, 0), (5.0, 1)]);
+        assert_eq!(w.len(), 4);
+        let kept: Vec<f64> = w.iter().map(|(t, _)| t).collect();
+        assert_eq!(kept, vec![10.0, 15.0, 20.0, 25.0]);
+        // rate: 4 entries over a full window.
+        assert!((w.rate(20.0) - 0.4).abs() < 1e-12);
+        // Early-window rate divides by elapsed time, not window length.
+        let mut early: TimeWindow<()> = TimeWindow::new(100.0);
+        early.push(1.0, ());
+        assert!((early.rate(4.0) - 0.25).abs() < 1e-12);
+        // Empty-window cases.
+        let mut empty: TimeWindow<()> = TimeWindow::new(5.0);
+        assert!(empty.is_empty());
+        empty.prune(1e9); // no-op
+        assert_eq!(empty.len(), 0);
+        assert_eq!(empty.rate(10.0), 0.0);
+    }
+
+    /// Property: for random monotone streams and window sizes, a
+    /// counter maintained incrementally through `push`/`prune_each`
+    /// equals an exact recompute over the retained suffix after every
+    /// step (single-event streams included via the generator's n = 1).
+    #[test]
+    fn time_window_incremental_equals_retained_recompute() {
+        use crate::util::proptest::{check, gens};
+        check(80, gens::vec_f64(64, 0.01, 7.0), |dts| {
+            for window_s in [0.5, 3.0, 25.0] {
+                let mut w: TimeWindow<f64> = TimeWindow::new(window_s);
+                let mut sum = 0.0f64;
+                let mut t = 0.0f64;
+                for (i, dt) in dts.iter().enumerate() {
+                    t += dt;
+                    let v = (i as f64).sin() * 10.0 + 11.0;
+                    w.push(t, v);
+                    sum += v;
+                    w.prune_each(t, |_, x| sum -= x);
+                    let exact: f64 = w.iter().map(|(_, x)| *x).sum();
+                    if (sum - exact).abs() > 1e-9 {
+                        return Err(format!(
+                            "incremental {sum} != retained {exact} at step {i}, window {window_s}"
+                        ));
+                    }
+                    if w.iter().any(|(ts, _)| ts < t - window_s) {
+                        return Err(format!("stale entry survived prune at t={t}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

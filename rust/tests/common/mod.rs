@@ -1,0 +1,203 @@
+//! Shared deterministic test harness for the integration suite.
+//!
+//! Four fast-moving PRs each re-implemented the same fixtures — a
+//! small native-oracle `SimConfig`, a 3×3 case grid with
+//! `case_seed`-derived seeds, a flat-cost oracle, tempdir sweep
+//! runners, and CSV/JSON readers. They live here once now;
+//! `stream_parity.rs`, `request_telemetry.rs`, `sweep_determinism.rs`,
+//! `shard_merge.rs`, and `watch_observer.rs` all build on this module.
+//!
+//! Everything is deterministic by construction: configs take explicit
+//! seed bases (each test keeps the constant it always used, so
+//! behaviour is unchanged by the consolidation), grids derive per-case
+//! seeds from **global** case indices via `util::rng::case_seed` —
+//! exactly like the real experiment regenerators, which is the
+//! property the sharding/determinism tests rely on.
+
+// Each integration-test binary compiles its own copy of this module
+// and uses a different slice of it.
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+use vidur_energy::config::simconfig::{Arrival, CostModelKind, LengthDist, SimConfig};
+use vidur_energy::energy::EnergyReport;
+use vidur_energy::exec::batch::{BatchDesc, StageCost};
+use vidur_energy::exec::StageCostModel;
+use vidur_energy::experiments::common::{run_grid, save_grid, CaseResult, GridRun};
+use vidur_energy::util::csv::Table;
+use vidur_energy::util::json::Value;
+use vidur_energy::util::rng::case_seed;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
+
+/// Rows of the standard 3×3 test grid ([`grid_cfgs`]).
+pub const GRID_CASES: usize = 9;
+
+/// The standard single-run workload: native oracle (no compiled
+/// artifacts needed), 500 Poisson arrivals at 12 QPS, Zipf lengths.
+/// `seed` keeps each test's historical constant.
+pub fn stream_cfg(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cost_model = CostModelKind::Native;
+    cfg.num_requests = 500;
+    cfg.arrival = Arrival::Poisson { qps: 12.0 };
+    cfg.lengths = LengthDist::Zipf {
+        theta: 0.6,
+        min: 64,
+        max: 768,
+    };
+    cfg.seed = seed;
+    cfg
+}
+
+/// Materialize `cfg`'s workload as a fixed trace (held constant across
+/// the runs a parity test compares).
+pub fn trace_for(cfg: &SimConfig) -> Trace {
+    let mut gen = WorkloadGenerator::from_config(cfg);
+    Trace::new(gen.generate(cfg.num_requests))
+}
+
+/// The standard exp-shaped mini grid (QPS × batch cap, 3×3, 96
+/// requests per case) on the native oracle. Seeds derive from the
+/// **global** case index under `seed_base`, exactly like the real
+/// experiment regenerators.
+pub fn grid_cfgs(seed_base: u64) -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for &qps in &[1.0, 4.0, 10.0] {
+        for &cap in &[4usize, 16, 128] {
+            let mut cfg = SimConfig::default();
+            cfg.cost_model = CostModelKind::Native;
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.batch_cap = cap;
+            cfg.num_requests = 96;
+            cfg.seed = case_seed(seed_base, cfgs.len() as u64);
+            cfgs.push(cfg);
+        }
+    }
+    cfgs
+}
+
+/// Constant-time cost oracle for tests about memory/scheduling rather
+/// than physics: every stage takes 10 ms at fixed power/MFU.
+pub struct FlatCost;
+
+impl StageCostModel for FlatCost {
+    fn stage_cost(&mut self, b: &BatchDesc) -> StageCost {
+        StageCost {
+            t_stage_s: 0.01,
+            flops: b.total_new_tokens() as f64 * 1e9,
+            mfu: 0.2,
+            power_w: 250.0,
+        }
+    }
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+}
+
+/// Render grid results the way the experiment regenerators do — fixed
+/// formatting, one row per case, rows labelled by **global** case
+/// index. Byte-comparing two of these tables is the determinism/
+/// sharding contract.
+pub fn render_cases<'a>(rows: impl Iterator<Item = (usize, &'a CaseResult)>) -> Table {
+    let mut t = Table::new(&["case", "avg_power_w", "energy_kwh", "makespan_s", "mfu"]);
+    for (i, r) in rows {
+        t.push_row(vec![
+            i.to_string(),
+            format!("{:.3}", r.avg_power_w()),
+            format!("{:.6}", r.energy_kwh()),
+            format!("{:.6}", r.out.metrics.makespan_s),
+            format!("{:.6}", r.mfu()),
+        ]);
+    }
+    t
+}
+
+/// Run the (possibly shard-filtered, possibly watched) standard grid
+/// and persist it in the `save_grid` layout (`<id>.csv`, `meta.json`,
+/// `telemetry.json`) under `out/<id>` — the tempdir sweep runner the
+/// shard-merge and watch tests share.
+pub fn run_and_save_grid(out: &Path, id: &str, seed_base: u64) -> GridRun {
+    let run = run_grid(id, grid_cfgs(seed_base)).unwrap();
+    let table = render_cases(run.iter());
+    let mut meta = Value::obj();
+    meta.set("experiment", id).set("sweep", run.sweep_meta());
+    save_grid(out, id, &table, meta, &run).unwrap();
+    run
+}
+
+/// Exact-equality comparison of two energy reports (the streaming-vs-
+/// materialized and watched-vs-unwatched contracts are bit-exact, not
+/// tolerance-based).
+pub fn assert_energy_reports_identical(a: &EnergyReport, b: &EnergyReport) {
+    assert_eq!(a.energy_kwh, b.energy_kwh);
+    assert_eq!(a.gpu_energy_kwh, b.gpu_energy_kwh);
+    assert_eq!(a.avg_power_w, b.avg_power_w);
+    assert_eq!(a.peak_power_w, b.peak_power_w);
+    assert_eq!(a.gpu_hours, b.gpu_hours);
+    assert_eq!(a.operational_g, b.operational_g);
+    assert_eq!(a.embodied_g, b.embodied_g);
+    assert_eq!(a.busy_fraction, b.busy_fraction);
+}
+
+/// Assert `v`'s true rank in `sorted` lies within ⌈εn⌉ (+1 slack for
+/// the materialized side's order-statistic interpolation) of `q·n` —
+/// the sketch-quantile parity check.
+pub fn assert_rank_bounded(sorted: &[f64], v: f64, q: f64, eps: f64, what: &str) {
+    let n = sorted.len() as f64;
+    let rank_lo = sorted.partition_point(|&x| x < v) as f64;
+    let rank_hi = sorted.partition_point(|&x| x <= v) as f64;
+    let target = q * n;
+    let slack = (eps * n).ceil() + 1.0;
+    assert!(
+        rank_hi >= target - slack && rank_lo <= target + slack,
+        "{what}: sketch value {v} has rank [{rank_lo}, {rank_hi}], \
+         target {target} ± {slack} (n={n})"
+    );
+}
+
+/// A scratch directory under the system tempdir. Pre-cleaned on
+/// creation; removed on drop **unless the test is panicking**, so
+/// failing runs leave their artifacts behind for inspection.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(name: &str) -> TempDir {
+        let path = std::env::temp_dir().join(name);
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::create_dir_all(&path).unwrap();
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, rel: impl AsRef<Path>) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            std::fs::remove_dir_all(&self.path).ok();
+        }
+    }
+}
+
+/// Read a file's raw bytes (byte-identity assertions), with a useful
+/// panic message on absence.
+pub fn read_bytes(path: impl AsRef<Path>) -> Vec<u8> {
+    let path = path.as_ref();
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+}
+
+/// Parse a JSON result file (`meta.json`, sidecars, snapshot lines).
+pub fn load_json(path: impl AsRef<Path>) -> Value {
+    let path = path.as_ref();
+    let text = String::from_utf8(read_bytes(path)).unwrap();
+    vidur_energy::util::json::parse(&text)
+        .unwrap_or_else(|e| panic!("parsing {path:?}: {e}"))
+}

@@ -11,49 +11,23 @@
 //!   request metrics (the sinks are per-case state).
 //! * Memory: a 1M-request run holds O(outstanding + bins) resident
 //!   state — live map, sketch tuples, and bins all ≪ the request count.
+//!
+//! Fixtures (config, flat-cost oracle, rank-bound assertion) come from
+//! the shared harness in `tests/common`.
 
+mod common;
+
+use common::{assert_rank_bounded, stream_cfg, trace_for, FlatCost};
 use vidur_energy::config::simconfig::{Arrival, CostModelKind, LengthDist, SimConfig};
-use vidur_energy::exec::batch::{BatchDesc, StageCost};
-use vidur_energy::exec::StageCostModel;
 use vidur_energy::experiments::common::run_cases_on;
 use vidur_energy::sim;
 use vidur_energy::sweep::SweepExecutor;
 use vidur_energy::telemetry::{StreamingRequestSink, StreamingSink};
 use vidur_energy::util::rng::case_seed;
-use vidur_energy::workload::{Trace, WorkloadGenerator};
+use vidur_energy::workload::WorkloadGenerator;
 
 fn base_cfg() -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.cost_model = CostModelKind::Native;
-    cfg.num_requests = 500;
-    cfg.arrival = Arrival::Poisson { qps: 12.0 };
-    cfg.lengths = LengthDist::Zipf {
-        theta: 0.6,
-        min: 64,
-        max: 768,
-    };
-    cfg.seed = 0x9E57;
-    cfg
-}
-
-fn trace_for(cfg: &SimConfig) -> Trace {
-    let mut gen = WorkloadGenerator::from_config(cfg);
-    Trace::new(gen.generate(cfg.num_requests))
-}
-
-/// Assert `v`'s true rank in `sorted` lies within ⌈εn⌉ (+1 slack for
-/// the materialized side's order-statistic interpolation) of `q·n`.
-fn assert_rank_bounded(sorted: &[f64], v: f64, q: f64, eps: f64, what: &str) {
-    let n = sorted.len() as f64;
-    let rank_lo = sorted.partition_point(|&x| x < v) as f64;
-    let rank_hi = sorted.partition_point(|&x| x <= v) as f64;
-    let target = q * n;
-    let slack = (eps * n).ceil() + 1.0;
-    assert!(
-        rank_hi >= target - slack && rank_lo <= target + slack,
-        "{what}: sketch value {v} has rank [{rank_lo}, {rank_hi}], \
-         target {target} ± {slack} (n={n})"
-    );
+    stream_cfg(0x9E57)
 }
 
 #[test]
@@ -190,27 +164,11 @@ fn request_metrics_identical_across_jobs() {
     }
 }
 
-/// Constant-time oracle so the 1M-request run prices stages without
-/// the roofline model (this test is about memory, not physics).
-struct FlatCost;
-impl StageCostModel for FlatCost {
-    fn stage_cost(&mut self, b: &BatchDesc) -> StageCost {
-        StageCost {
-            t_stage_s: 0.01,
-            flops: b.total_new_tokens() as f64 * 1e9,
-            mfu: 0.2,
-            power_w: 250.0,
-        }
-    }
-    fn name(&self) -> &'static str {
-        "flat"
-    }
-}
-
 /// The acceptance criterion: a 1M+-request run completes with
 /// O(outstanding + bins) resident state — the live map, the latency
 /// sketches, and the stage bins all stay orders of magnitude below the
-/// request count.
+/// request count. The constant-time oracle is the harness's `FlatCost`
+/// (this test is about memory, not physics).
 #[test]
 fn million_request_run_is_o_outstanding_plus_bins() {
     const N: u64 = 1_000_000;

@@ -7,72 +7,37 @@
 //! Everything lives in ONE test function run sequentially: the shard
 //! setting is process-global (like `--jobs`), so parallel test threads
 //! must not interleave `set_shard` calls.
+//!
+//! Fixtures (grid, renderer, tempdir runner, readers) come from the
+//! shared harness in `tests/common`; this file keeps its historical
+//! seed base.
 
-use std::path::PathBuf;
-use vidur_energy::config::simconfig::{Arrival, CostModelKind, SimConfig};
-use vidur_energy::experiments::common::{run_grid, save_grid, GridRun};
+mod common;
+
+use common::{load_json, read_bytes, run_and_save_grid, TempDir};
+use std::path::{Path, PathBuf};
+use vidur_energy::experiments::common::GridRun;
 use vidur_energy::sweep::{self, merge_shard_dirs, ShardSpec};
 use vidur_energy::telemetry::ShardTelemetry;
-use vidur_energy::util::csv::Table;
 use vidur_energy::util::json::Value;
-use vidur_energy::util::rng::case_seed;
 
 const ID: &str = "gridtest";
+const SEED_BASE: u64 = 0x5A4D;
 
-/// An exp-shaped grid (QPS × batch cap) on the native oracle. Seeds
-/// derive from the **global** case index, exactly like the real
-/// experiment regenerators — the property sharding relies on.
-fn grid_cfgs() -> Vec<SimConfig> {
-    let mut cfgs = Vec::new();
-    for &qps in &[1.0, 4.0, 10.0] {
-        for &cap in &[4usize, 16, 128] {
-            let mut cfg = SimConfig::default();
-            cfg.cost_model = CostModelKind::Native;
-            cfg.arrival = Arrival::Poisson { qps };
-            cfg.batch_cap = cap;
-            cfg.num_requests = 96;
-            cfg.seed = case_seed(0x5A4D, cfgs.len() as u64);
-            cfgs.push(cfg);
-        }
-    }
-    cfgs
-}
-
-/// Render + persist one (possibly sharded) run the way experiment
-/// regenerators do: fixed row formatting, `save_grid` layout.
-fn run_and_save(out: &PathBuf) -> GridRun {
-    let run = run_grid(grid_cfgs()).unwrap();
-    let mut t = Table::new(&["case", "avg_power_w", "energy_kwh", "makespan_s", "mfu"]);
-    for (i, r) in run.iter() {
-        t.push_row(vec![
-            i.to_string(),
-            format!("{:.3}", r.avg_power_w()),
-            format!("{:.6}", r.energy_kwh()),
-            format!("{:.6}", r.out.metrics.makespan_s),
-            format!("{:.6}", r.mfu()),
-        ]);
-    }
-    let mut meta = Value::obj();
-    meta.set("experiment", ID).set("sweep", run.sweep_meta());
-    save_grid(out, ID, &t, meta, &run).unwrap();
-    run
-}
-
-fn read(path: PathBuf) -> Vec<u8> {
-    std::fs::read(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+fn run_and_save(out: &Path) -> GridRun {
+    run_and_save_grid(out, ID, SEED_BASE)
 }
 
 #[test]
 fn sharded_runs_merge_back_to_the_unsharded_outputs() {
-    let base = std::env::temp_dir().join("vidur_energy_shard_merge");
-    std::fs::remove_dir_all(&base).ok();
+    let base = TempDir::new("vidur_energy_shard_merge");
 
     // Ground truth: the unsharded run.
     sweep::set_shard(None);
     let unsharded_dir = base.join("unsharded");
     let unsharded_run = run_and_save(&unsharded_dir);
     assert_eq!(unsharded_run.results.len(), 9);
-    let want_csv = read(unsharded_dir.join(ID).join(format!("{ID}.csv")));
+    let want_csv = read_bytes(unsharded_dir.join(ID).join(format!("{ID}.csv")));
     let want_tel = ShardTelemetry::load(&unsharded_dir.join(ID)).unwrap().unwrap();
     assert!(want_tel.is_complete());
     assert_eq!(want_tel.shard, None);
@@ -106,7 +71,7 @@ fn sharded_runs_merge_back_to_the_unsharded_outputs() {
         assert!(merged[0].complete);
 
         // 1. The headline guarantee: byte-identical CSV.
-        let got_csv = read(merged_dir.join(ID).join(format!("{ID}.csv")));
+        let got_csv = read_bytes(merged_dir.join(ID).join(format!("{ID}.csv")));
         assert_eq!(
             got_csv, want_csv,
             "{shards}-way merged CSV differs from the unsharded run"
@@ -163,10 +128,7 @@ fn sharded_runs_merge_back_to_the_unsharded_outputs() {
 
         // 4. Merged meta.json: sum/max semantics reassemble the
         //    unsharded sweep stats (the satellite bugfix).
-        let load_meta = |dir: &PathBuf| {
-            let text = String::from_utf8(read(dir.join(ID).join("meta.json"))).unwrap();
-            vidur_energy::util::json::parse(&text).unwrap()
-        };
+        let load_meta = |dir: &PathBuf| load_json(dir.join(ID).join("meta.json"));
         let got_meta = load_meta(&merged_dir);
         let want_meta = load_meta(&unsharded_dir);
         for key in ["cases", "total_stages", "peak_resident_bins", "peak_live_requests"] {
@@ -183,6 +145,40 @@ fn sharded_runs_merge_back_to_the_unsharded_outputs() {
         assert!(got_meta.at(&["sweep", "shard"]).is_none());
     }
 
+    // Sidecar-less single-case directories (the casestudy/ablation
+    // shape: only shard 0 runs them, and they carry no telemetry.json
+    // — their CSVs are summary tables, not case grids) are copied
+    // through wholesale when exactly one shard produced them, and are
+    // an error when more than one did. This pins the documented merge
+    // contract the PR-4 log overstated ("written by sharded AND
+    // unsharded runs" is true of *grid* experiments only).
+    {
+        let single = base.join("2way-single");
+        std::fs::create_dir_all(single.join("soloexp")).unwrap();
+        std::fs::write(single.join("soloexp/soloexp.csv"), "metric,value\nx,1\n").unwrap();
+        std::fs::write(single.join("soloexp/meta.json"), "{\"table\": \"t9\"}").unwrap();
+        let other = base.join("2way-empty");
+        std::fs::create_dir_all(&other).unwrap();
+        let out = base.join("single-merged");
+        let merged = merge_shard_dirs(&[single.clone(), other.clone()], &out).unwrap();
+        let solo = merged.iter().find(|m| m.id == "soloexp").unwrap();
+        assert_eq!(solo.shards, 1);
+        assert!(solo.complete);
+        assert_eq!(
+            read_bytes(out.join("soloexp/soloexp.csv")),
+            read_bytes(single.join("soloexp/soloexp.csv"))
+        );
+        assert!(!out.join("soloexp").join("telemetry.json").exists());
+        // The same sidecar-less id in TWO shard dirs cannot be merged.
+        std::fs::create_dir_all(other.join("soloexp")).unwrap();
+        std::fs::write(other.join("soloexp/soloexp.csv"), "metric,value\nx,2\n").unwrap();
+        let err = merge_shard_dirs(&[single, other], &base.join("single-err")).unwrap_err();
+        assert!(
+            err.to_string().contains("no telemetry sidecar"),
+            "expected sidecar-less multi-shard error, got: {err}"
+        );
+    }
+
     // Protocol errors: the same shard twice must be rejected, never
     // silently double-counted.
     sweep::set_shard(Some(ShardSpec::new(0, 2).unwrap()));
@@ -196,6 +192,4 @@ fn sharded_runs_merge_back_to_the_unsharded_outputs() {
         err.to_string().contains("overlap"),
         "expected overlap error, got: {err}"
     );
-
-    std::fs::remove_dir_all(&base).ok();
 }

@@ -7,51 +7,24 @@
 //!
 //! Plus the memory claim behind the refactor: the sink's peak resident
 //! state is O(bins), not O(stages).
+//!
+//! Fixtures come from the shared harness in `tests/common`.
 
+mod common;
+
+use common::{assert_energy_reports_identical, stream_cfg, trace_for};
 use vidur_energy::autoscale::GridEnv;
-use vidur_energy::config::simconfig::{
-    Arrival, AutoscaleConfig, CostModelKind, LengthDist, ScalingPolicyKind, SimConfig,
-};
+use vidur_energy::config::simconfig::{AutoscaleConfig, ScalingPolicyKind, SimConfig};
 use vidur_energy::energy::EnergyAccountant;
 use vidur_energy::exec::build_cost_model;
 use vidur_energy::pipeline::{bin_stages, bin_stages_fleet, BinningBackend};
 use vidur_energy::sim;
 use vidur_energy::telemetry::StreamingSink;
-use vidur_energy::workload::{Trace, WorkloadGenerator};
 
 const INTERVAL_S: f64 = 10.0;
 
 fn base_cfg() -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.cost_model = CostModelKind::Native;
-    cfg.num_requests = 500;
-    cfg.arrival = Arrival::Poisson { qps: 12.0 };
-    cfg.lengths = LengthDist::Zipf {
-        theta: 0.6,
-        min: 64,
-        max: 768,
-    };
-    cfg.seed = 0x57E4;
-    cfg
-}
-
-fn trace_for(cfg: &SimConfig) -> Trace {
-    let mut gen = WorkloadGenerator::from_config(cfg);
-    Trace::new(gen.generate(cfg.num_requests))
-}
-
-fn assert_reports_identical(
-    a: &vidur_energy::energy::EnergyReport,
-    b: &vidur_energy::energy::EnergyReport,
-) {
-    assert_eq!(a.energy_kwh, b.energy_kwh);
-    assert_eq!(a.gpu_energy_kwh, b.gpu_energy_kwh);
-    assert_eq!(a.avg_power_w, b.avg_power_w);
-    assert_eq!(a.peak_power_w, b.peak_power_w);
-    assert_eq!(a.gpu_hours, b.gpu_hours);
-    assert_eq!(a.operational_g, b.operational_g);
-    assert_eq!(a.embodied_g, b.embodied_g);
-    assert_eq!(a.busy_fraction, b.busy_fraction);
+    stream_cfg(0x57E4)
 }
 
 #[test]
@@ -94,7 +67,7 @@ fn streaming_matches_materialized_on_fixed_fleet() {
     // Identical accounted energy.
     let mat_rep = acc.account(&cfg, &mat.stagelog, mat.metrics.makespan_s);
     let str_rep = acc.report(&cfg, sink.aggregates(), run.metrics.makespan_s);
-    assert_reports_identical(&mat_rep, &str_rep);
+    assert_energy_reports_identical(&mat_rep, &str_rep);
 
     // The memory claim: resident bins ≪ resident stage records.
     let bins = sink.peak_resident_bins() as u64;
@@ -147,7 +120,7 @@ fn streaming_matches_materialized_on_autoscaled_run() {
     // Fleet-aware accounting parity.
     let mat_rep = acc.account_fleet(&cfg, &mat.sim.stagelog, &mat.timeline);
     let str_rep = acc.report_fleet(&cfg, sink.aggregates(), &run.timeline);
-    assert_reports_identical(&mat_rep, &str_rep);
+    assert_energy_reports_identical(&mat_rep, &str_rep);
 
     // Fleet-aware Eq. 5 parity.
     let mat_prof = bin_stages_fleet(

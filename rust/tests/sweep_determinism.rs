@@ -3,53 +3,32 @@
 //! from its case index (`util::rng::case_seed`) and results are
 //! returned in case order, so the worker count can only change
 //! wall-clock time, never output bytes.
+//!
+//! The mini grid and the fixed-format renderer live in the shared
+//! harness (`tests/common`); this file keeps its historical seed base.
 
-use vidur_energy::config::simconfig::{Arrival, CostModelKind, SimConfig};
+mod common;
+
+use common::{grid_cfgs, render_cases};
+use vidur_energy::config::simconfig::SimConfig;
 use vidur_energy::experiments;
-use vidur_energy::experiments::common::{run_cases_on, CaseResult};
+use vidur_energy::experiments::common::run_cases_on;
 use vidur_energy::sweep::{self, SweepExecutor};
-use vidur_energy::util::csv::Table;
-use vidur_energy::util::rng::case_seed;
 
 /// A small exp-shaped grid (QPS × batch cap) on the native oracle, so
 /// the test runs without compiled artifacts.
 fn grid() -> Vec<SimConfig> {
-    let mut cfgs = Vec::new();
-    for &qps in &[1.0, 4.0, 10.0] {
-        for &cap in &[4usize, 16, 128] {
-            let mut cfg = SimConfig::default();
-            cfg.cost_model = CostModelKind::Native;
-            cfg.arrival = Arrival::Poisson { qps };
-            cfg.batch_cap = cap;
-            cfg.num_requests = 96;
-            cfg.seed = case_seed(0xD7, cfgs.len() as u64);
-            cfgs.push(cfg);
-        }
-    }
-    cfgs
-}
-
-/// Render results the way the experiment regenerators do — fixed
-/// formatting, row per case.
-fn render(results: &[CaseResult]) -> Table {
-    let mut t = Table::new(&["case", "avg_power_w", "energy_kwh", "makespan_s", "mfu"]);
-    for (i, r) in results.iter().enumerate() {
-        t.push_row(vec![
-            i.to_string(),
-            format!("{:.3}", r.avg_power_w()),
-            format!("{:.6}", r.energy_kwh()),
-            format!("{:.6}", r.out.metrics.makespan_s),
-            format!("{:.6}", r.mfu()),
-        ]);
-    }
-    t
+    grid_cfgs(0xD7)
 }
 
 #[test]
 fn jobs_1_and_8_produce_byte_identical_results() {
     let serial = run_cases_on(&SweepExecutor::new(1), grid()).unwrap();
     let par = run_cases_on(&SweepExecutor::new(8), grid()).unwrap();
-    assert_eq!(render(&serial).to_csv(), render(&par).to_csv());
+    assert_eq!(
+        render_cases(serial.iter().enumerate()).to_csv(),
+        render_cases(par.iter().enumerate()).to_csv()
+    );
     // Oracle/telemetry metadata is deterministic too (per-case models).
     for (a, b) in serial.iter().zip(&par) {
         assert_eq!(a.out.oracle, b.out.oracle);

@@ -1,0 +1,191 @@
+//! Live-watch observer parity and aggregation (DESIGN.md §10).
+//!
+//! The whole point of the fan-out design is that *watching a sweep
+//! cannot change it*: with `--watch` enabled every case streams
+//! rolling-window snapshots to the live view, while the primary sinks
+//! — and therefore every persisted output — remain byte-identical to
+//! an unobserved run. This file asserts that end to end, for both
+//! `--jobs 1` and `--jobs 8`, then checks the snapshot log itself
+//! (well-formed, monotone per case, totals equal to the
+//! `telemetry.json` sidecar) and the `repro watch` aggregation across
+//! two sharded watch logs.
+//!
+//! Everything lives in ONE test function run sequentially: the watch,
+//! shard, and jobs settings are process-global.
+
+mod common;
+
+use common::{read_bytes, run_and_save_grid, TempDir, GRID_CASES};
+use std::collections::BTreeMap;
+use std::path::Path;
+use vidur_energy::report::live::{
+    self, aggregate, discover_watch_files, read_snapshots, render_watch, WatchConfig,
+    WatchTarget,
+};
+use vidur_energy::sweep::{self, ShardSpec};
+use vidur_energy::telemetry::window::Snapshot;
+use vidur_energy::telemetry::ShardTelemetry;
+
+const ID: &str = "watchgrid";
+const SEED_BASE: u64 = 0x3A7C;
+
+fn watch_json(path: &Path) -> Option<WatchConfig> {
+    Some(WatchConfig {
+        target: WatchTarget::Json(path.to_path_buf()),
+        cadence_s: 20.0, // several intermediate snapshots per case
+        window_s: 100.0,
+    })
+}
+
+/// The three persisted outputs of one grid run.
+fn output_bytes(dir: &Path) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+    (
+        read_bytes(dir.join(ID).join(format!("{ID}.csv"))),
+        read_bytes(dir.join(ID).join("meta.json")),
+        read_bytes(dir.join(ID).join("telemetry.json")),
+    )
+}
+
+#[test]
+fn watching_never_changes_outputs_and_snapshots_aggregate_correctly() {
+    let base = TempDir::new("vidur_energy_watch_observer");
+    sweep::set_shard(None);
+    live::set_watch(None);
+
+    // --- Observer parity, --jobs 1 and --jobs 8 -------------------
+    let mut watched_outputs = Vec::new();
+    for jobs in [1usize, 8] {
+        sweep::set_default_jobs(jobs);
+        live::set_watch(None);
+        let plain_dir = base.join(format!("plain{jobs}"));
+        run_and_save_grid(&plain_dir, ID, SEED_BASE);
+
+        let watched_dir = base.join(format!("watched{jobs}"));
+        let log = watched_dir.join("watch.jsonl");
+        live::set_watch(watch_json(&log));
+        run_and_save_grid(&watched_dir, ID, SEED_BASE);
+        live::set_watch(None);
+
+        let plain = output_bytes(&plain_dir);
+        let watched = output_bytes(&watched_dir);
+        assert_eq!(plain.0, watched.0, "jobs={jobs}: CSV changed under --watch");
+        assert_eq!(
+            plain.1, watched.1,
+            "jobs={jobs}: meta.json changed under --watch"
+        );
+        assert_eq!(
+            plain.2, watched.2,
+            "jobs={jobs}: telemetry.json changed under --watch"
+        );
+        assert!(log.is_file(), "watched run produced no snapshot log");
+        watched_outputs.push((watched_dir, log));
+    }
+
+    // --- The snapshot log itself ----------------------------------
+    let (watched_dir, log) = &watched_outputs[1]; // the jobs=8 run
+    let snaps = read_snapshots(log).unwrap();
+    assert!(
+        snaps.len() >= GRID_CASES,
+        "expected at least one snapshot per case, got {}",
+        snaps.len()
+    );
+    // seq is strictly increasing in write order (the view stamps it
+    // under one lock, whatever the worker interleaving).
+    for w in snaps.windows(2) {
+        assert!(w[1].seq > w[0].seq, "seq not strictly increasing");
+    }
+    // Per-case sim time is monotone, each case ends with exactly one
+    // `done` snapshot, and cases_done reaches the full grid.
+    let mut by_case: BTreeMap<u64, Vec<&Snapshot>> = BTreeMap::new();
+    for s in &snaps {
+        assert_eq!(s.experiment, ID);
+        assert_eq!(s.cases_total, GRID_CASES as u64);
+        assert_eq!(s.cases_owned, GRID_CASES as u64, "unsharded: owned == total");
+        assert_eq!(s.shard, None);
+        by_case.entry(s.case_index).or_default().push(s);
+    }
+    assert_eq!(by_case.len(), GRID_CASES, "every case must emit");
+    for (case, ss) in &by_case {
+        for w in ss.windows(2) {
+            assert!(
+                w[1].t_s >= w[0].t_s,
+                "case {case}: t_s not monotone ({} then {})",
+                w[0].t_s,
+                w[1].t_s
+            );
+        }
+        assert!(
+            ss.last().unwrap().done,
+            "case {case}: last snapshot not final"
+        );
+        assert_eq!(
+            ss.iter().filter(|s| s.done).count(),
+            1,
+            "case {case}: exactly one final snapshot expected"
+        );
+        // Cumulative fields never decrease.
+        for w in ss.windows(2) {
+            assert!(w[1].finished >= w[0].finished);
+            assert!(w[1].stages >= w[0].stages);
+            assert!(w[1].energy_kwh >= w[0].energy_kwh);
+        }
+    }
+    assert_eq!(snaps.last().unwrap().cases_done, GRID_CASES as u64);
+
+    // Final snapshots carry the case totals: summed, they equal the
+    // telemetry sidecar the same run persisted.
+    let tel = ShardTelemetry::load(&watched_dir.join(ID)).unwrap().unwrap();
+    let finished: u64 = by_case.values().map(|ss| ss.last().unwrap().finished).sum();
+    let stages: u64 = by_case.values().map(|ss| ss.last().unwrap().stages).sum();
+    assert_eq!(finished, tel.requests.finished);
+    assert_eq!(stages, tel.stages.stages);
+
+    // --- `repro watch` across two shard dirs ----------------------
+    let mut shard_dirs = Vec::new();
+    for k in 0..2u32 {
+        let dir = base.join(format!("shard{k}"));
+        sweep::set_shard(Some(ShardSpec::new(k, 2).unwrap()));
+        live::set_watch(watch_json(&dir.join("watch.jsonl")));
+        run_and_save_grid(&dir, ID, SEED_BASE);
+        live::set_watch(None);
+        shard_dirs.push(dir);
+    }
+    sweep::set_shard(None);
+    sweep::set_default_jobs(0);
+
+    let files = discover_watch_files(&shard_dirs).unwrap();
+    assert_eq!(files.len(), 2, "one watch.jsonl per shard dir");
+    let mut all = Vec::new();
+    for f in &files {
+        all.extend(read_snapshots(f).unwrap());
+    }
+    // Sharded snapshots pair a shard-local denominator with the global
+    // grid size (2-way over 9 cases: shards own 5 and 4).
+    for s in &all {
+        assert!(s.cases_owned == 4 || s.cases_owned == 5, "{s:?}");
+        assert_eq!(s.cases_total, GRID_CASES as u64);
+        assert!(s.cases_done <= s.cases_owned);
+    }
+    let aggs = aggregate(&all);
+    assert_eq!(aggs.len(), 1);
+    let a = &aggs[0];
+    assert_eq!(a.experiment, ID);
+    assert_eq!(a.cases_total, GRID_CASES as u64);
+    assert_eq!(a.cases_done, GRID_CASES as u64, "both shards finished");
+    assert_eq!(
+        a.shards.iter().cloned().collect::<Vec<_>>(),
+        vec!["0/2".to_string(), "1/2".to_string()]
+    );
+    // The aggregate of the two shards' final snapshots equals the
+    // unsharded totals (same grid, same seeds — the §9 determinism
+    // carried into the live view).
+    assert_eq!(a.finished, tel.requests.finished);
+    assert_eq!(a.stages, tel.stages.stages);
+    // All cases done ⇒ no live rates left.
+    assert_eq!(a.qps, 0.0);
+    assert_eq!(a.power_w, 0.0);
+    // And the renderer produces a dashboard naming the experiment.
+    let text = render_watch(&aggs, files.len());
+    assert!(text.contains(ID), "{text}");
+    assert!(text.contains("cases 9/9"), "{text}");
+}
