@@ -1,0 +1,137 @@
+//! Bench: the serve plane's broadcast hot path (DESIGN.md §11) — hub
+//! publish/drain throughput under 0/1/4/8 concurrent SSE subscribers,
+//! plus snapshot→SSE frame serialization. Emits `BENCH_serve.json`
+//! (path overridable via `REPRO_BENCH_OUT`) so CI accumulates a perf
+//! trajectory across PRs.
+//!
+//! The numbers bound how much a live dashboard can cost a sweep: every
+//! watched case emission goes through `SnapshotHub::publish` once the
+//! server is up, so publish must stay far below the cost of the batch
+//! stages whose telemetry it carries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use vidur_energy::serve::sse::{sse_frame, Next, SnapshotHub, DEFAULT_HUB_CAPACITY};
+use vidur_energy::telemetry::window::Snapshot;
+use vidur_energy::util::bench::fmt_time;
+use vidur_energy::util::json::Value;
+
+fn snap(seq: u64) -> Snapshot {
+    Snapshot {
+        experiment: "bench".into(),
+        shard: None,
+        case_index: seq % 9,
+        seq,
+        t_s: seq as f64 * 0.05,
+        done: false,
+        cases_done: 0,
+        cases_owned: 9,
+        cases_total: 9,
+        finished: seq,
+        stages: seq * 3,
+        qps: 12.0,
+        ttft_p50_s: 0.08,
+        ttft_p99_s: 0.31,
+        e2e_p50_s: 1.4,
+        e2e_p99_s: 4.2,
+        norm_latency_p50_s_per_tok: 0.011,
+        power_w: 412.0,
+        mfu: 0.47,
+        energy_kwh: seq as f64 * 1e-6,
+        gco2_g: seq as f64 * 4e-4,
+    }
+}
+
+/// Publish `n` snapshots through a hub with `subs` draining
+/// subscribers; returns (publisher wall seconds, events delivered
+/// across all subscribers).
+fn run_scenario(n: u64, subs: usize) -> (f64, u64) {
+    let hub = Arc::new(SnapshotHub::new(DEFAULT_HUB_CAPACITY));
+    let delivered = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..subs {
+        let (hub, delivered) = (hub.clone(), delivered.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut cursor = hub.cursor_oldest();
+            let mut last_seq = 0u64;
+            loop {
+                match hub.next(cursor, Duration::from_millis(50)) {
+                    Next::Event(arrival, s) => {
+                        cursor = arrival + 1;
+                        last_seq = s.seq;
+                        delivered.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Next::Lagged(resume_at) => cursor = resume_at,
+                    Next::Timeout => {}
+                    Next::Closed => return last_seq,
+                }
+            }
+        }));
+    }
+    let t0 = Instant::now();
+    for seq in 1..=n {
+        hub.publish(snap(seq));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    hub.close();
+    for h in handles {
+        // Every subscriber drains to the final snapshot before Closed:
+        // close() only flips a flag, retained events still deliver.
+        assert_eq!(h.join().unwrap(), n, "subscriber fell short of seq {n}");
+    }
+    (wall, delivered.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let fast = std::env::var("REPRO_BENCH_FAST").is_ok();
+    let n: u64 = if fast { 5_000 } else { 50_000 };
+    eprintln!("serve sse bench: {n} snapshots (fast={fast})");
+
+    let mut v = Value::obj();
+    v.set("bench", "serve_sse").set("fast", fast).set("snapshots", n);
+
+    println!("\n## bench: serve_sse\n");
+    println!("| subscribers | publish wall | ns/publish | events delivered |");
+    println!("|---|---|---|---|");
+    let mut scenarios = Value::obj();
+    for subs in [0usize, 1, 4, 8] {
+        let (wall, delivered) = run_scenario(n, subs);
+        let ns = wall * 1e9 / n as f64;
+        println!(
+            "| {subs} | {} | {ns:.0} | {delivered} |",
+            fmt_time(wall)
+        );
+        let mut s = Value::obj();
+        s.set("publish_s", wall).set("ns_per_publish", ns).set(
+            "events_delivered",
+            delivered,
+        );
+        scenarios.set(&format!("subs_{subs}"), s);
+    }
+    v.set("scenarios", scenarios);
+
+    // Frame serialization: snapshot -> JSON -> SSE frame, the per-event
+    // cost each subscriber connection pays.
+    let t0 = Instant::now();
+    let mut bytes = 0usize;
+    for seq in 1..=n {
+        let s = snap(seq);
+        let frame = sse_frame(Some("snapshot"), Some(s.seq), &s.to_json().to_string());
+        bytes += frame.len();
+    }
+    let ser_wall = t0.elapsed().as_secs_f64();
+    let ser_ns = ser_wall * 1e9 / n as f64;
+    println!(
+        "| serialize-only | {} | {ser_ns:.0} | {bytes} bytes |",
+        fmt_time(ser_wall)
+    );
+    v.set("serialize_s", ser_wall)
+        .set("serialize_ns_per_frame", ser_ns)
+        .set("frame_bytes_total", bytes as u64);
+
+    let out =
+        std::env::var("REPRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&out, v.pretty()).unwrap();
+    eprintln!("wrote {out}");
+}

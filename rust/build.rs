@@ -1,0 +1,25 @@
+//! Embed the git describe string (when a git checkout and binary are
+//! available) so `repro --version` and `GET /healthz` can report the
+//! exact build alongside the crate version. Absence of git is not an
+//! error — release tarballs and sandboxed builds simply omit the
+//! suffix (`util::version` treats the env var as optional).
+
+use std::process::Command;
+
+fn main() {
+    // Re-run when HEAD moves so the string tracks the checkout. The
+    // repository root is one level above the cargo package.
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+    println!("cargo:rerun-if-changed=../.git/refs");
+    let describe = Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default();
+    if !describe.is_empty() {
+        println!("cargo:rustc-env=REPRO_GIT_DESCRIBE={describe}");
+    }
+}

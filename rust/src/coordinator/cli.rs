@@ -7,6 +7,7 @@
 //!   experiment  — regenerate a paper table/figure (or `all`)
 //!   merge       — recombine sharded sweep outputs (DESIGN.md §9)
 //!   watch       — tail/aggregate live sweep snapshots (DESIGN.md §10)
+//!   serve       — HTTP/SSE telemetry + control surface (DESIGN.md §11)
 //!   multiregion — carbon-aware multi-region routing exploration
 //!   policy      — model-size vs grid-condition policy exploration
 //!   config      — show the default (Table 1) configuration
@@ -41,6 +42,7 @@ subcommands:
                 --watch[=stderr|json:PATH] live dashboard / snapshot log)
   merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
   watch        tail/aggregate live sweep snapshots: repro watch <dir-or-jsonl>... [--follow]
+  serve        HTTP/SSE telemetry + control surface: repro serve [<dir-or-jsonl>...] [--addr H:P]
   multiregion  carbon-aware multi-region routing exploration
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
@@ -67,11 +69,16 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "merge" => cmd_merge(&args),
         "watch" => cmd_watch(&args),
+        "serve" => cmd_serve(&args),
         "multiregion" => multiregion::cmd(&args),
         "policy" => policy::cmd(&args),
         "config" => cmd_config(),
         "report" => cmd_report(&args),
         "trace" => cmd_trace(&args),
+        "version" | "--version" | "-V" => {
+            println!("repro {}", crate::util::version::version_string());
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             print!("{TOP_USAGE}");
             Ok(())
@@ -463,6 +470,62 @@ fn cmd_watch(args: &Args) -> Result<()> {
     }
 }
 
+/// Serve the live telemetry plane over HTTP/SSE (DESIGN.md §11):
+/// follow watch JSONL files/directories like `repro watch` and expose
+/// them as `/v1/fleet` + `/v1/snapshots`, plus host sweeps submitted
+/// to `POST /v1/sweeps` (their snapshots broadcast in process, their
+/// artifacts land under `--out`, byte-identical to an unserved run).
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "repro serve — zero-dep HTTP/SSE telemetry and control surface\n\n\
+             usage: repro serve [<dir-or-jsonl>...] [--addr HOST:PORT] [--out <dir>]\n\n\
+             each positional path is followed like `repro watch --follow` (a\n\
+             watch.jsonl, or a directory searched for them); hosted sweeps are\n\
+             submitted over HTTP and need no paths at all\n\n\
+             options:\n  --addr <host:port>  bind address (default 127.0.0.1:7878; :0 picks a port)\n  \
+             --out <dir>         hosted sweep outputs root (default serve-results)\n  \
+             --interval <s>      follower poll period (default 0.25)\n\n\
+             endpoints (format {}):\n  \
+             GET  /healthz        build identity + liveness\n  \
+             GET  /v1/fleet       aggregated fleet state as JSON\n  \
+             GET  /v1/snapshots   SSE snapshot stream (Last-Event-ID resume)\n  \
+             POST /v1/sweeps      submit {{\"experiment\": ..., \"jobs\": N, \"shard\": \"k/N\", \"fast\": bool}}\n  \
+             GET  /v1/sweeps[/id] submitted sweep status",
+            crate::serve::state::SERVE_FORMAT
+        );
+        return Ok(());
+    }
+    // The loud-validation standard of cmd_watch: a switch the parser
+    // would silently misread is an error, not a surprise.
+    anyhow::ensure!(
+        !args.has("addr"),
+        "--addr needs a value (e.g. --addr 0.0.0.0:7878)"
+    );
+    anyhow::ensure!(!args.has("out"), "--out needs a value (e.g. --out serve-results)");
+    anyhow::ensure!(
+        !args.has("interval"),
+        "--interval needs a value (e.g. --interval 1)"
+    );
+    let interval = args.f64_or("interval", 0.25)?;
+    anyhow::ensure!(
+        interval >= 0.05,
+        "--interval must be at least 0.05 seconds, got {interval}"
+    );
+    let mut cfg = crate::serve::ServeConfig::new(&args.str_or("addr", "127.0.0.1:7878"));
+    cfg.follow = args.positional.iter().map(PathBuf::from).collect();
+    cfg.out = PathBuf::from(args.str_or("out", "serve-results"));
+    cfg.poll_interval = std::time::Duration::from_secs_f64(interval);
+    let server = crate::serve::Server::start(cfg)?;
+    eprintln!(
+        "repro serve {} listening on http://{}",
+        crate::util::version::version_string(),
+        server.addr()
+    );
+    server.run();
+    Ok(())
+}
+
 fn cmd_config() -> Result<()> {
     let mut v = Value::obj();
     v.set("sim (Table 1a)", SimConfig::default().to_json())
@@ -594,6 +657,27 @@ mod tests {
         // A cadence without --watch is a mistake, not a silent no-op.
         assert!(apply_watch(&args(&["--watch-cadence", "9"])).is_err());
         live::set_watch(None);
+    }
+
+    #[test]
+    fn version_and_serve_help_are_ok() {
+        run(vec!["repro".into(), "--version".into()]).unwrap();
+        run(vec!["repro".into(), "version".into()]).unwrap();
+        run(vec!["repro".into(), "serve".into(), "--help".into()]).unwrap();
+    }
+
+    #[test]
+    fn serve_flag_mistakes_are_loud() {
+        // --addr swallowing the next flag / given bare.
+        let r = run(vec!["repro".into(), "serve".into(), "--addr".into()]);
+        assert!(r.unwrap_err().to_string().contains("--addr needs a value"));
+        let r = run(vec![
+            "repro".into(),
+            "serve".into(),
+            "--interval".into(),
+            "0.001".into(),
+        ]);
+        assert!(r.unwrap_err().to_string().contains("--interval"));
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod report;
 pub mod experiments;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

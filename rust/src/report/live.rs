@@ -135,6 +135,52 @@ static OPENED_LOGS: Mutex<BTreeSet<PathBuf>> = Mutex::new(BTreeSet::new());
 /// well-formedness invariant the CI watch-smoke asserts.
 static SNAPSHOT_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
+/// Observes every snapshot a [`LiveView`] emits, *after* the view
+/// stamped the process-wide fields. Read-only by design: taps fan out
+/// to observers (the serve plane's broadcast hub), they never alter
+/// the stream the primary target renders/appends.
+pub type SnapshotTap = Arc<dyn Fn(&Snapshot) + Send + Sync>;
+
+/// Registered snapshot taps, keyed by registration id so a shutting-
+/// down observer can remove exactly its own tap. Process-global like
+/// the watch config: views are constructed deep inside experiment
+/// regenerators, and threading an observer handle through them would
+/// churn every signature for one observability seam.
+static SNAPSHOT_TAPS: Mutex<Vec<(u64, SnapshotTap)>> = Mutex::new(Vec::new());
+static SNAPSHOT_TAP_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Register a tap called with every stamped snapshot any view emits
+/// from now on. Returns the id to pass to [`remove_snapshot_tap`].
+pub fn add_snapshot_tap(tap: SnapshotTap) -> u64 {
+    let id = SNAPSHOT_TAP_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+    SNAPSHOT_TAPS
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .push((id, tap));
+    id
+}
+
+/// Remove a previously registered tap; unknown ids are a no-op (an
+/// observer may race its own shutdown).
+pub fn remove_snapshot_tap(id: u64) {
+    SNAPSHOT_TAPS
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .retain(|(i, _)| *i != id);
+}
+
+/// The registered taps, cloned out of the lock — callers invoke them
+/// unlocked so a slow tap never stalls registration (or another view's
+/// emit beyond its own lock).
+fn snapshot_taps() -> Vec<SnapshotTap> {
+    SNAPSHOT_TAPS
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|(_, t)| t.clone())
+        .collect()
+}
+
 /// One watched experiment run's snapshot consumer. Stamps the
 /// process-wide snapshot fields (`seq`, `cases_done`, `cases_total`)
 /// and renders/appends. Shared across sweep workers behind
@@ -266,6 +312,13 @@ impl LiveView {
                 eprint!("{text}");
                 *last_lines = lines;
             }
+        }
+        // Fan the stamped snapshot out to process-wide observers (the
+        // serve plane). Taps run while this view is locked — emission
+        // order per view stays the tap's delivery order — but outside
+        // the registry lock, so a tap can never deadlock registration.
+        for tap in snapshot_taps() {
+            (*tap)(s);
         }
     }
 }
@@ -532,6 +585,15 @@ pub fn tail_snapshots(path: &Path, state: &mut TailState) -> Result<bool> {
     Ok(changed)
 }
 
+/// Whether `new` supersedes `old` as the latest state of one
+/// (experiment, shard, case) slot. Files replay in write order; `seq`
+/// orders within one file, `t_s`/`done` break ties across files of the
+/// same shard. `>=` (not `>`): an equal-keyed replay refreshes the
+/// slot, which keeps "last seen wins" for byte-identical re-reads.
+pub fn snapshot_supersedes(new: &Snapshot, old: &Snapshot) -> bool {
+    (new.done, new.t_s, new.seq) >= (old.done, old.t_s, old.seq)
+}
+
 /// One experiment's aggregate over every shard's snapshots.
 #[derive(Debug, Clone)]
 pub struct ExpAggregate {
@@ -557,6 +619,37 @@ pub struct ExpAggregate {
     pub e2e_p99_s: f64,
 }
 
+impl ExpAggregate {
+    /// JSON shape served by `GET /v1/fleet` — field names mirror the
+    /// struct (shards as a sorted array).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        let mut v = crate::util::json::Value::obj();
+        v.set("experiment", self.experiment.as_str())
+            .set(
+                "shards",
+                crate::util::json::Value::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| crate::util::json::Value::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set("cases_total", self.cases_total)
+            .set("cases_done", self.cases_done)
+            .set("finished", self.finished)
+            .set("stages", self.stages)
+            .set("energy_kwh", self.energy_kwh)
+            .set("gco2_g", self.gco2_g)
+            .set("qps", self.qps)
+            .set("power_w", self.power_w)
+            .set("max_t_s", self.max_t_s)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+            .set("e2e_p99_s", self.e2e_p99_s);
+        v
+    }
+}
+
 /// Fold snapshots (from any number of shard files, in any order) into
 /// per-experiment aggregates. Within one experiment the latest
 /// snapshot per (shard, case) wins — shards own disjoint global case
@@ -575,9 +668,7 @@ pub fn aggregate<'a>(snaps: impl IntoIterator<Item = &'a Snapshot>) -> Vec<ExpAg
             s.case_index,
         );
         let slot = latest.entry(key).or_insert(s);
-        // Files replay in write order; `seq` orders within one file,
-        // `t_s`/`done` break ties across files of the same shard.
-        if (s.done, s.t_s, s.seq) >= (slot.done, slot.t_s, slot.seq) {
+        if snapshot_supersedes(s, slot) {
             *slot = s;
         }
     }
@@ -704,6 +795,90 @@ mod tests {
         assert_eq!(active_watch(), Some(WatchConfig::stderr()));
         set_watch(None);
         assert_eq!(active_watch(), None);
+    }
+
+    /// The slot-ordering rule the aggregator and the serve fleet map
+    /// share: done beats running, then sim time, then seq; equal keys
+    /// refresh (last seen wins).
+    #[test]
+    fn snapshot_supersedes_orders_done_then_time_then_seq() {
+        let running = snap("expX", None, 0, 5, 100.0, false);
+        let done = snap("expX", None, 0, 2, 50.0, true);
+        assert!(snapshot_supersedes(&done, &running));
+        assert!(!snapshot_supersedes(&running, &done));
+        let later = snap("expX", None, 0, 1, 200.0, false);
+        assert!(snapshot_supersedes(&later, &running));
+        let newer_seq = snap("expX", None, 0, 6, 100.0, false);
+        assert!(snapshot_supersedes(&newer_seq, &running));
+        // Equal keys refresh the slot.
+        assert!(snapshot_supersedes(&running, &running.clone()));
+    }
+
+    /// Registered taps observe every stamped snapshot a view emits;
+    /// removal stops delivery.
+    #[test]
+    fn snapshot_taps_observe_stamped_snapshots() {
+        let got: Arc<Mutex<Vec<Snapshot>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = got.clone();
+        let id = add_snapshot_tap(Arc::new(move |s: &Snapshot| {
+            sink.lock().unwrap().push(s.clone());
+        }));
+        let dir = std::env::temp_dir().join("vidur_energy_live_tap");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = WatchConfig {
+            target: WatchTarget::Json(dir.join("w.jsonl")),
+            cadence_s: 60.0,
+            window_s: 300.0,
+        };
+        let view = Arc::new(Mutex::new(LiveView::open(&cfg, "expT", 1, 1, None).unwrap()));
+        let emit = LiveView::emitter(view.clone());
+        let mut s = snap("expT", None, 0, 0, 60.0, true);
+        (*emit)(&mut s);
+        {
+            let seen = got.lock().unwrap();
+            // Other tests emit concurrently through the same global
+            // registry — find our own snapshot rather than asserting
+            // an exclusive stream.
+            let ours: Vec<_> = seen.iter().filter(|x| x.experiment == "expT").collect();
+            assert_eq!(ours.len(), 1);
+            // The tap saw the *stamped* snapshot.
+            assert!(ours[0].seq > 0);
+            assert_eq!(ours[0].cases_done, 1);
+        }
+        remove_snapshot_tap(id);
+        let mut s2 = snap("expT", None, 0, 0, 120.0, true);
+        (*emit)(&mut s2);
+        let seen = got.lock().unwrap();
+        assert_eq!(
+            seen.iter().filter(|x| x.experiment == "expT").count(),
+            1,
+            "removed tap must not receive further snapshots"
+        );
+        drop(seen);
+        drop(view);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// ExpAggregate::to_json mirrors the struct fields.
+    #[test]
+    fn exp_aggregate_serializes_fields() {
+        let aggs = aggregate(&[
+            snap("expX", Some("0/2"), 0, 1, 60.0, true),
+            snap("expX", Some("1/2"), 1, 2, 90.0, false),
+        ]);
+        let v = aggs[0].to_json();
+        assert_eq!(v.req_str("experiment").unwrap(), "expX");
+        assert_eq!(v.req_u64("cases_done").unwrap(), 1);
+        assert_eq!(v.req_u64("finished").unwrap(), 100 + 101);
+        let shards = match v.get("shards") {
+            Some(crate::util::json::Value::Arr(a)) => a.len(),
+            other => panic!("bad shards field: {other:?}"),
+        };
+        assert_eq!(shards, 2);
+        assert!((v.req_f64("max_t_s").unwrap() - 90.0).abs() < 1e-12);
+        // Round-trips through the parser.
+        let text = v.to_string();
+        crate::util::json::parse(&text).unwrap();
     }
 
     /// Aggregation across two shard files: latest-per-case wins,

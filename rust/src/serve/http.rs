@@ -1,0 +1,448 @@
+//! Minimal HTTP/1.1 head parsing and response framing for the serve
+//! plane (DESIGN.md §11). std-only, pure functions — every byte-level
+//! decision lives here so the unit tests can drive torn reads,
+//! pipelined requests and hostile input without a socket in sight.
+//!
+//! Scope is deliberately narrow: the serve plane speaks exactly the
+//! slice of HTTP/1.1 its own endpoints need (GET/POST, fixed
+//! `Content-Length` bodies, a handful of headers). Everything outside
+//! that slice is *rejected loudly* with the right status code rather
+//! than half-implemented: chunked transfer encoding → 501, unknown
+//! versions → 505, header obs-folding → 400. A malformed request must
+//! never panic the server — the connection handler turns every
+//! [`HttpError`] into a well-formed error response.
+
+use std::collections::BTreeMap;
+
+/// Cap on the request head (request line + headers). Our biggest
+/// legitimate head is a `Last-Event-ID` resume — tiny; 16 KiB leaves
+/// room for chatty proxies while bounding a hostile slowloris feed.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Cap on a request body. `POST /v1/sweeps` bodies are < 1 KiB; 1 MiB
+/// is generous headroom, beyond it we answer 413 instead of buffering.
+pub const MAX_BODY_BYTES: u64 = 1024 * 1024;
+
+/// Cap on the header count (each costs a map entry; 64 is far above
+/// anything a real client sends).
+pub const MAX_HEADERS: usize = 64;
+
+/// A request-level failure mapped to an HTTP status. The connection
+/// handler renders it as a JSON error body; it never propagates as a
+/// panic or a process error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            msg: msg.into(),
+        }
+    }
+}
+
+/// The parsed request head.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Head {
+    /// Request method, verbatim (methods are case-sensitive).
+    pub method: String,
+    /// Percent-decoded path, without the query string.
+    pub path: String,
+    /// Percent-decoded `k=v` query pairs, in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with lowercased names (values trimmed, verbatim case).
+    pub headers: BTreeMap<String, String>,
+}
+
+impl Head {
+    /// Header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// First query parameter with this name.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The declared body length: `Content-Length` when present and
+    /// well-formed, 0 when absent. Chunked bodies are refused at parse
+    /// time, so absence really does mean "no body".
+    pub fn content_length(&self) -> Result<u64, HttpError> {
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => v
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| HttpError::new(400, format!("bad content-length '{v}'"))),
+        }
+    }
+}
+
+/// Outcome of a head-parse attempt over the bytes buffered so far.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseOutcome {
+    /// No complete head yet — read more bytes and try again.
+    Incomplete,
+    /// A complete head; `consumed` bytes of the buffer belong to it
+    /// (the rest is body and/or the next pipelined request).
+    Ready { head: Head, consumed: usize },
+}
+
+/// Find the end of the head: the first blank line. Accepts `\r\n\r\n`
+/// and bare `\n\n` (curl and friends always send CRLF; being liberal
+/// here costs nothing and keeps hand-rolled test clients simple).
+/// Returns (head bytes, total consumed through the terminator).
+fn find_head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let lf = buf.windows(2).position(|w| w == b"\n\n");
+    match (crlf, lf) {
+        (Some(c), Some(l)) if l < c => Some((l, l + 2)),
+        (Some(c), _) => Some((c, c + 4)),
+        (None, Some(l)) => Some((l, l + 2)),
+        (None, None) => None,
+    }
+}
+
+/// Percent-decode a path/query component; stray or truncated escapes
+/// pass through verbatim (we never serve filesystem paths, so lenient
+/// decoding cannot escape anything).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'%' && i + 3 <= bytes.len() {
+            // Byte-wise, not `&s[..]`: a str slice could land mid-char
+            // next to a multi-byte sequence and panic.
+            let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).ok();
+            if let Some(v) = hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
+                out.push(v);
+                i += 3;
+                continue;
+            }
+        }
+        if b == b'+' {
+            out.push(b' ');
+        } else {
+            out.push(b);
+        }
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Split a raw target into (decoded path, decoded query pairs).
+fn parse_target(target: &str) -> (String, Vec<(String, String)>) {
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let query = raw_query
+        .map(|q| {
+            q.split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (percent_decode(k), percent_decode(v)),
+                    None => (percent_decode(kv), String::new()),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    (percent_decode(raw_path), query)
+}
+
+/// Try to parse one request head from the front of `buf`.
+///
+/// * Not enough bytes yet → `Ok(Incomplete)` — unless the buffer
+///   already exceeds [`MAX_HEAD_BYTES`] without a terminator, which is
+///   a 431.
+/// * A complete but malformed head → `Err` with the right status.
+/// * A complete well-formed head → `Ready` with the consumed length,
+///   so the connection loop can drain it and immediately re-parse the
+///   remainder (pipelining).
+pub fn parse_head(buf: &[u8]) -> Result<ParseOutcome, HttpError> {
+    let Some((head_len, consumed)) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::new(431, "request head too large"));
+        }
+        return Ok(ParseOutcome::Incomplete);
+    };
+    if head_len > MAX_HEAD_BYTES {
+        return Err(HttpError::new(431, "request head too large"));
+    }
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))?;
+    let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line '{request_line}'"),
+            ))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(
+            505,
+            format!("unsupported protocol version '{version}'"),
+        ));
+    }
+    if !target.starts_with('/') {
+        // Absolute-form / CONNECT targets — not this server's job.
+        return Err(HttpError::new(400, format!("unsupported target '{target}'")));
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            // RFC 7230 deprecated obs-folding; refusing is the
+            // conforming behaviour and dodges request-smuggling games.
+            return Err(HttpError::new(400, "folded header lines are not supported"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header line '{line}'")));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::new(400, format!("malformed header name '{name}'")));
+        }
+        headers.insert(name.to_ascii_lowercase(), value.trim().to_string());
+        if headers.len() > MAX_HEADERS {
+            return Err(HttpError::new(431, "too many headers"));
+        }
+    }
+    if let Some(te) = headers.get("transfer-encoding") {
+        return Err(HttpError::new(
+            501,
+            format!("transfer-encoding '{te}' is not supported"),
+        ));
+    }
+    let (path, query) = parse_target(target);
+    Ok(ParseOutcome::Ready {
+        head: Head {
+            method: method.to_string(),
+            path,
+            query,
+            headers,
+        },
+        consumed,
+    })
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Frame a complete HTTP/1.1 response. `extra_headers` are verbatim
+/// `Name: value` lines (e.g. `Allow: GET` on a 405).
+pub fn response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra_headers: &[&str],
+) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+        status_text(status),
+        body.len()
+    );
+    for h in extra_headers {
+        out.push_str(h);
+        out.push_str("\r\n");
+    }
+    out.push_str("\r\n");
+    let mut bytes = out.into_bytes();
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+/// Frame a JSON error body for an [`HttpError`].
+pub fn error_response(e: &HttpError) -> Vec<u8> {
+    let mut v = crate::util::json::Value::obj();
+    v.set("error", e.msg.as_str());
+    response(e.status, "application/json", v.to_string().as_bytes(), &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready(buf: &[u8]) -> (Head, usize) {
+        match parse_head(buf).unwrap() {
+            ParseOutcome::Ready { head, consumed } => (head, consumed),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_a_plain_get() {
+        let raw = b"GET /v1/fleet HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n";
+        let (h, consumed) = ready(raw);
+        assert_eq!(consumed, raw.len());
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.path, "/v1/fleet");
+        assert!(h.query.is_empty());
+        assert_eq!(h.header("host"), Some("x"));
+        assert_eq!(h.header("HOST"), Some("x"), "lookup is case-insensitive");
+        assert_eq!(h.content_length().unwrap(), 0);
+    }
+
+    #[test]
+    fn parses_query_and_percent_escapes() {
+        let raw = b"GET /v1/snapshots?last_event_id=42&x=a%20b&flag HTTP/1.1\r\n\r\n";
+        let (h, _) = ready(raw);
+        assert_eq!(h.path, "/v1/snapshots");
+        assert_eq!(h.query_param("last_event_id"), Some("42"));
+        assert_eq!(h.query_param("x"), Some("a b"));
+        assert_eq!(h.query_param("flag"), Some(""));
+        assert_eq!(h.query_param("missing"), None);
+    }
+
+    /// Torn reads: every prefix of a valid request must parse as
+    /// Incomplete (never an error, never a panic) until the blank line
+    /// lands.
+    #[test]
+    fn torn_reads_stay_incomplete_until_terminator() {
+        let raw = b"POST /v1/sweeps HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}";
+        let end = raw.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        for cut in 0..end {
+            assert_eq!(
+                parse_head(&raw[..cut]).unwrap(),
+                ParseOutcome::Incomplete,
+                "prefix of {cut} bytes"
+            );
+        }
+        let (h, consumed) = ready(raw);
+        assert_eq!(consumed, end, "body bytes are not consumed by the head");
+        assert_eq!(h.content_length().unwrap(), 2);
+    }
+
+    /// Pipelining: two requests back-to-back parse one at a time via
+    /// the consumed offset.
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let raw: &[u8] = b"GET /healthz HTTP/1.1\r\n\r\nGET /v1/fleet HTTP/1.1\r\n\r\n";
+        let (h1, c1) = ready(raw);
+        assert_eq!(h1.path, "/healthz");
+        let (h2, c2) = ready(&raw[c1..]);
+        assert_eq!(h2.path, "/v1/fleet");
+        assert_eq!(c1 + c2, raw.len());
+    }
+
+    #[test]
+    fn bare_lf_terminator_is_accepted() {
+        let (h, consumed) = ready(b"GET / HTTP/1.1\nHost: x\n\n");
+        assert_eq!(h.path, "/");
+        assert_eq!(h.header("host"), Some("x"));
+        assert_eq!(consumed, b"GET / HTTP/1.1\nHost: x\n\n".len());
+    }
+
+    #[test]
+    fn hostile_input_errors_cleanly() {
+        // Garbage request line.
+        let e = parse_head(b"NOT A REQUEST LINE AT ALL\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        // Unsupported version.
+        let e = parse_head(b"GET / HTTP/2.0\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 505);
+        // Bad header line.
+        let e = parse_head(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        // Folded header.
+        let e = parse_head(b"GET / HTTP/1.1\r\nA: b\r\n c\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        // Chunked body.
+        let e = parse_head(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 501);
+        // Non-UTF-8 head.
+        let e = parse_head(b"GET /\xff\xfe HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        // Absolute-form target.
+        let e = parse_head(b"GET http://x/ HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        // Bad content-length surfaces on the accessor.
+        let (h, _) = ready(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n");
+        assert_eq!(h.content_length().unwrap_err().status, 400);
+    }
+
+    /// An oversized head without a terminator is a 431, not unbounded
+    /// buffering; with a terminator past the cap likewise.
+    #[test]
+    fn oversized_heads_are_bounded() {
+        let mut big = b"GET /".to_vec();
+        big.resize(big.len() + MAX_HEAD_BYTES + 10, b'a');
+        assert_eq!(parse_head(&big).unwrap_err().status, 431);
+        let mut terminated = b"GET / HTTP/1.1\r\n".to_vec();
+        while terminated.len() <= MAX_HEAD_BYTES {
+            terminated.extend_from_slice(b"X-Filler: yyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyy\r\n");
+        }
+        terminated.extend_from_slice(b"\r\n");
+        assert_eq!(parse_head(&terminated).unwrap_err().status, 431);
+        // Too many individually-small headers likewise.
+        let mut many = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 2) {
+            many.extend_from_slice(format!("H{i}: v\r\n").as_bytes());
+        }
+        many.extend_from_slice(b"\r\n");
+        assert_eq!(parse_head(&many).unwrap_err().status, 431);
+    }
+
+    /// Random byte soup must never panic the parser — every outcome is
+    /// Incomplete, Ready or a clean HttpError.
+    #[test]
+    fn fuzzed_bytes_never_panic() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBADC0DE);
+        for _ in 0..500 {
+            let len = (rng.next_u64() % 200) as usize;
+            let buf: Vec<u8> = (0..len).map(|_| (rng.next_u64() % 256) as u8).collect();
+            let _ = parse_head(&buf);
+        }
+        // And byte soup appended to a valid prefix.
+        for _ in 0..200 {
+            let mut buf = b"GET /x HTTP/1.1\r\n".to_vec();
+            let len = (rng.next_u64() % 100) as usize;
+            buf.extend((0..len).map(|_| (rng.next_u64() % 256) as u8));
+            let _ = parse_head(&buf);
+        }
+    }
+
+    #[test]
+    fn response_frames_status_headers_and_body() {
+        let bytes = response(405, "application/json", b"{}", &["Allow: GET"]);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Allow: GET\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+        let err = error_response(&HttpError::new(400, "nope"));
+        let err = String::from_utf8(err).unwrap();
+        assert!(err.contains(r#"{"error": "nope"}"#) || err.contains(r#"{"error":"nope"}"#), "{err}");
+    }
+}

@@ -1,0 +1,473 @@
+//! `repro serve` — a zero-dependency HTTP/SSE surface over the live
+//! telemetry plane (DESIGN.md §11).
+//!
+//! The watch pipeline (DESIGN.md §10) already streams [`Snapshot`]s
+//! two ways: in process through [`crate::report::live::LiveView`], and
+//! across processes/machines through watch JSONL files. This module
+//! puts an HTTP server in front of both so dashboards, `curl`, and
+//! fleet tooling can consume them without a shared filesystem:
+//!
+//! | Endpoint              | Method | Body                                    |
+//! |-----------------------|--------|-----------------------------------------|
+//! | `/healthz`            | GET    | build identity + liveness               |
+//! | `/v1/fleet`           | GET    | `repro watch` aggregation as JSON       |
+//! | `/v1/snapshots`       | GET    | SSE stream of snapshots (resumable)     |
+//! | `/v1/sweeps`          | POST   | submit a sweep to run in this process   |
+//! | `/v1/sweeps`          | GET    | all submitted sweeps                    |
+//! | `/v1/sweeps/<id>`     | GET    | one submitted sweep's status            |
+//!
+//! Implementation choices, deliberately boring: std-only HTTP/1.1
+//! (the crate's no-dependency rule is a feature, not a handicap —
+//! the protocol slice we need is small, see [`http`]), blocking
+//! thread-per-connection I/O (subscriber counts are single-digit
+//! operators, not the open internet), and observation-only semantics:
+//! serving a sweep changes none of its artifacts — `tests/serve_http.rs`
+//! asserts byte-identical outputs with and without the server.
+
+pub mod http;
+pub mod sse;
+pub mod state;
+
+use crate::report::live::{self, TailState};
+use crate::telemetry::window::Snapshot;
+use crate::util::version;
+use anyhow::{Context, Result};
+use http::{parse_head, Head, HttpError, ParseOutcome};
+use sse::Next;
+use state::{ServeState, SweepRequest, SweepRunner, SERVE_FORMAT};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Server configuration (the `repro serve` flags).
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port —
+    /// the tests rely on it).
+    pub addr: String,
+    /// Watch JSONL files or sweep output directories to follow, as
+    /// `repro watch` would.
+    pub follow: Vec<PathBuf>,
+    /// Root directory for hosted sweep outputs (`<out>/sweep-<id>`).
+    pub out: PathBuf,
+    /// Executes submitted sweeps (tests inject a stub).
+    pub runner: SweepRunner,
+    /// Poll interval for the file followers.
+    pub poll_interval: Duration,
+    /// SSE keep-alive comment interval on quiet streams.
+    pub keepalive: Duration,
+}
+
+impl ServeConfig {
+    pub fn new(addr: &str) -> ServeConfig {
+        ServeConfig {
+            addr: addr.to_string(),
+            follow: Vec::new(),
+            out: PathBuf::from("serve-results"),
+            runner: state::default_runner(),
+            poll_interval: Duration::from_millis(250),
+            keepalive: Duration::from_secs(15),
+        }
+    }
+}
+
+/// A running server: bound listener plus its accept / follower /
+/// sweep-worker threads. Dropping it without [`Server::shutdown`]
+/// leaves the threads running (the CLI's foreground mode just parks).
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    shutdown: Arc<AtomicBool>,
+    tap_id: u64,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads. The process-wide
+    /// snapshot tap is registered here, so any watched sweep this
+    /// process runs — hosted via `POST /v1/sweeps` or started by other
+    /// code — is broadcast live.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serve address {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(ServeState::new(cfg.out.clone()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let tap_state = state.clone();
+        let tap_id = live::add_snapshot_tap(Arc::new(move |s: &Snapshot| {
+            tap_state.ingest(s);
+        }));
+
+        let mut threads = Vec::new();
+
+        // Accept loop: nonblocking accept + sleep, one handler thread
+        // per connection. Handler threads are detached — they exit on
+        // their own when the peer hangs up or the hub closes.
+        {
+            let (state, shutdown) = (state.clone(), shutdown.clone());
+            let keepalive = cfg.keepalive;
+            threads.push(std::thread::spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let (state, shutdown) = (state.clone(), shutdown.clone());
+                            std::thread::spawn(move || {
+                                handle_connection(stream, &state, &shutdown, keepalive);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(100)),
+                    }
+                }
+            }));
+        }
+
+        // File followers: one thread polling every followed path with
+        // the watch pipeline's incremental tail reader.
+        if !cfg.follow.is_empty() {
+            let (state, shutdown) = (state.clone(), shutdown.clone());
+            let (follow, poll) = (cfg.follow.clone(), cfg.poll_interval);
+            threads.push(std::thread::spawn(move || {
+                follow_files(&follow, &state, &shutdown, poll);
+            }));
+        }
+
+        // Sweep worker: drains the submission queue sequentially (the
+        // jobs/shard/watch configuration is process-global — see
+        // `state::SweepRegistry`).
+        {
+            let (state, shutdown) = (state.clone(), shutdown.clone());
+            let runner = cfg.runner.clone();
+            threads.push(std::thread::spawn(move || {
+                state.sweeps.run_worker(runner, &shutdown);
+            }));
+        }
+
+        Ok(Server {
+            addr,
+            state,
+            shutdown,
+            tap_id,
+            threads,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state handle (tests inspect the fleet directly).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Stop accepting, close every SSE stream, finish queued sweeps,
+    /// and join the server threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        live::remove_snapshot_tap(self.tap_id);
+        self.state.hub.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Foreground mode for the CLI: parks until the process is killed
+    /// (the accept thread owns the listener and never exits on its
+    /// own).
+    pub fn run(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Follow watch files/directories, folding fresh snapshots into the
+/// serve state. Tolerant by design, mirroring `repro watch --follow`:
+/// paths may not exist yet (a sweep that has not started), files may
+/// be truncated and rewritten (fresh runs), a parse error resets that
+/// file's state and retries next tick.
+fn follow_files(
+    follow: &[PathBuf],
+    state: &Arc<ServeState>,
+    shutdown: &AtomicBool,
+    poll: Duration,
+) {
+    // Per-file tail state plus how many of its snapshots we ingested.
+    let mut tails: BTreeMap<PathBuf, (TailState, usize)> = BTreeMap::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        let existing: Vec<PathBuf> = follow.iter().filter(|p| p.exists()).cloned().collect();
+        let files = live::discover_watch_files(&existing).unwrap_or_default();
+        for f in files {
+            let (tail, ingested) = tails.entry(f.clone()).or_default();
+            match live::tail_snapshots(&f, tail) {
+                Ok(_) => {
+                    if tail.snapshots.len() < *ingested {
+                        // The file shrank (fresh run): replay from the
+                        // start — ingest dedups exact replays.
+                        *ingested = 0;
+                    }
+                    for s in &tail.snapshots[*ingested..] {
+                        state.ingest(s);
+                    }
+                    *ingested = tail.snapshots.len();
+                }
+                Err(_) => {
+                    // tail_snapshots reset its state; re-ingest from 0
+                    // next tick once the file parses again.
+                    *ingested = 0;
+                }
+            }
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// Per-connection loop: buffered incremental reads, head parsing,
+/// routing, pipelining. Every malformed input becomes a well-formed
+/// error response — never a panic, never a dead server.
+fn handle_connection(
+    stream: TcpStream,
+    state: &Arc<ServeState>,
+    shutdown: &AtomicBool,
+    keepalive: Duration,
+) {
+    let mut stream = stream;
+    // Short read timeouts keep the loop responsive to shutdown without
+    // busy-waiting on idle keep-alive connections.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        match parse_head(&buf) {
+            Err(e) => {
+                let _ = stream.write_all(&http::error_response(&e));
+                return; // framing is lost; drop the connection
+            }
+            Ok(ParseOutcome::Ready { head, consumed }) => {
+                buf.drain(..consumed);
+                let body = match read_body(&mut stream, &mut buf, &head, shutdown) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = stream.write_all(&http::error_response(&e));
+                        return;
+                    }
+                };
+                if head.method == "GET" && head.path == "/v1/snapshots" {
+                    // The SSE stream takes the connection over and
+                    // never returns to pipelining.
+                    stream_snapshots(&mut stream, &head, state, shutdown, keepalive);
+                    return;
+                }
+                let resp = match route(state, &head, &body) {
+                    Ok(bytes) => bytes,
+                    Err(e) => http::error_response(&e),
+                };
+                if stream.write_all(&resp).is_err() {
+                    return;
+                }
+                // Loop on: `buf` may already hold the next pipelined
+                // request.
+            }
+            Ok(ParseOutcome::Incomplete) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match stream.read(&mut chunk) {
+                    Ok(0) => return, // peer closed
+                    Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        continue;
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    }
+}
+
+/// Read the declared request body (some of it may already sit in
+/// `buf` behind the head).
+fn read_body(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    head: &Head,
+    shutdown: &AtomicBool,
+) -> Result<Vec<u8>, HttpError> {
+    let len = head.content_length()?;
+    if len > http::MAX_BODY_BYTES {
+        return Err(HttpError::new(413, "request body too large"));
+    }
+    let len = len as usize;
+    let mut chunk = [0u8; 8192];
+    while buf.len() < len {
+        if shutdown.load(Ordering::SeqCst) {
+            return Err(HttpError::new(500, "server shutting down"));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(HttpError::new(400, "connection closed mid-body")),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        }
+    }
+    Ok(buf.drain(..len).collect())
+}
+
+/// Route one parsed request to its JSON response.
+fn route(state: &ServeState, head: &Head, body: &[u8]) -> Result<Vec<u8>, HttpError> {
+    let json = |v: crate::util::json::Value, status: u16| {
+        http::response(status, "application/json", v.to_string().as_bytes(), &[])
+    };
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/") | ("GET", "/index.json") => {
+            let mut v = crate::util::json::Value::obj();
+            v.set("format", SERVE_FORMAT).set(
+                "endpoints",
+                crate::util::json::Value::Arr(
+                    [
+                        "GET /healthz",
+                        "GET /v1/fleet",
+                        "GET /v1/snapshots (SSE)",
+                        "GET /v1/sweeps",
+                        "GET /v1/sweeps/<id>",
+                        "POST /v1/sweeps",
+                    ]
+                    .iter()
+                    .map(|s| crate::util::json::Value::Str((*s).to_string()))
+                    .collect(),
+                ),
+            );
+            Ok(json(v, 200))
+        }
+        ("GET", "/healthz") => {
+            let mut v = crate::util::json::Value::obj();
+            v.set("format", SERVE_FORMAT)
+                .set("status", "ok")
+                .set("version", version::CRATE_VERSION)
+                .set(
+                    "git",
+                    match version::git_describe() {
+                        Some(g) => crate::util::json::Value::Str(g.to_string()),
+                        None => crate::util::json::Value::Null,
+                    },
+                )
+                .set("version_string", version::version_string());
+            Ok(json(v, 200))
+        }
+        ("GET", "/v1/fleet") => Ok(json(state.fleet_json(), 200)),
+        ("GET", "/v1/sweeps") => Ok(json(state.sweeps.jobs_json(), 200)),
+        ("GET", p) if p.starts_with("/v1/sweeps/") => {
+            let id = p["/v1/sweeps/".len()..]
+                .parse::<u64>()
+                .map_err(|_| HttpError::new(400, format!("bad sweep id in '{p}'")))?;
+            match state.sweeps.job_json(id) {
+                Some(v) => Ok(json(v, 200)),
+                None => Err(HttpError::new(404, format!("no sweep with id {id}"))),
+            }
+        }
+        ("POST", "/v1/sweeps") => {
+            let text = std::str::from_utf8(body)
+                .map_err(|_| HttpError::new(400, "request body is not valid UTF-8"))?;
+            let parsed = crate::util::json::parse(text)
+                .map_err(|e| HttpError::new(400, format!("bad json body: {e}")))?;
+            let req = SweepRequest::from_json(&parsed)
+                .map_err(|e| HttpError::new(400, format!("{e:#}")))?;
+            let id = state.sweeps.submit(req);
+            let v = state
+                .sweeps
+                .job_json(id)
+                .expect("job visible immediately after submit");
+            Ok(json(v, 202))
+        }
+        // Known paths with the wrong method answer 405 + Allow, per
+        // the RFC, so clients learn the contract instead of guessing.
+        (_, "/v1/sweeps") => Ok(method_not_allowed("GET, POST")),
+        (_, "/" | "/index.json" | "/healthz" | "/v1/fleet" | "/v1/snapshots") => {
+            Ok(method_not_allowed("GET"))
+        }
+        (_, p) if p.starts_with("/v1/sweeps/") => Ok(method_not_allowed("GET")),
+        (_, p) => Err(HttpError::new(404, format!("no such endpoint '{p}'"))),
+    }
+}
+
+/// A 405 with the `Allow` header naming the methods the path accepts.
+fn method_not_allowed(allow: &str) -> Vec<u8> {
+    let mut v = crate::util::json::Value::obj();
+    v.set("error", format!("method not allowed (allow: {allow})"));
+    let allow_header = format!("Allow: {allow}");
+    http::response(
+        405,
+        "application/json",
+        v.to_string().as_bytes(),
+        &[allow_header.as_str()],
+    )
+}
+
+/// The `/v1/snapshots` SSE stream. Resume: `Last-Event-ID` (header or
+/// `last_event_id` query parameter) carries the last snapshot `seq`
+/// the client saw; delivery restarts just after it. Without one, the
+/// retained history replays from the oldest so a fresh dashboard
+/// catches up to the fleet's current state.
+fn stream_snapshots(
+    stream: &mut TcpStream,
+    head: &Head,
+    state: &ServeState,
+    shutdown: &AtomicBool,
+    keepalive: Duration,
+) {
+    let resume = head
+        .header("last-event-id")
+        .or_else(|| head.query_param("last_event_id"))
+        .and_then(|v| v.trim().parse::<u64>().ok());
+    let mut cursor = match resume {
+        Some(seq) => state.hub.cursor_after_seq(seq),
+        None => state.hub.cursor_oldest(),
+    };
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                  Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        return;
+    }
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            let _ = stream.write_all(sse::sse_comment("server shutting down").as_bytes());
+            return;
+        }
+        let frame = match state.hub.next(cursor, keepalive) {
+            Next::Event(n, s) => {
+                cursor = n + 1;
+                sse::sse_frame(Some("snapshot"), Some(s.seq), &s.to_json().to_string())
+            }
+            Next::Lagged(resume_at) => {
+                let skipped = resume_at.saturating_sub(cursor);
+                cursor = resume_at;
+                sse::sse_comment(&format!("lagged: {skipped} snapshot(s) skipped"))
+            }
+            Next::Timeout => sse::sse_comment("keep-alive"),
+            Next::Closed => {
+                let _ = stream.write_all(sse::sse_comment("stream closed").as_bytes());
+                return;
+            }
+        };
+        if stream.write_all(frame.as_bytes()).is_err() {
+            return; // subscriber went away
+        }
+    }
+}

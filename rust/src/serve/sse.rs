@@ -1,0 +1,314 @@
+//! Server-Sent Events framing and the snapshot broadcast hub
+//! (DESIGN.md §11).
+//!
+//! SSE is the transport of choice here because it is *plain HTTP*: a
+//! `text/event-stream` response body that never ends, one event per
+//! blank-line-terminated frame, resumable via `Last-Event-ID`. No
+//! upgrade handshake, no masking, no frames to parse on the write
+//! side — exactly what a zero-dependency server can afford, and
+//! `curl -N` / `EventSource` consume it natively.
+//!
+//! The [`SnapshotHub`] is the fan-out point between the watch pipeline
+//! (one publisher thread per sweep worker, via the process-wide
+//! snapshot tap) and any number of SSE subscriber connections. It is a
+//! bounded ring: publishers never block (a slow subscriber costs
+//! *itself* a [`Next::Lagged`] gap, never the sweep), and subscribers
+//! wait on a condvar with a timeout so they can interleave keep-alive
+//! comments and shutdown checks with delivery.
+//!
+//! Cursors are **arrival numbers** (0-based count of snapshots ever
+//! published), not snapshot `seq`: several views of an `experiment
+//! all` run publish interleaved, and arrival order is the only total
+//! order the hub itself can guarantee. `Last-Event-ID` resume maps the
+//! client's last seen `seq` back onto the earliest retained arrival
+//! after it.
+
+use crate::telemetry::window::Snapshot;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Default ring capacity: at one snapshot per simulated minute per
+/// case, 4096 spans hours of history for a 9-case grid — enough that
+/// a resuming dashboard rarely sees a gap, small enough to be noise
+/// in memory.
+pub const DEFAULT_HUB_CAPACITY: usize = 4096;
+
+/// What a subscriber gets from [`SnapshotHub::next`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Next {
+    /// The snapshot at the cursor; the returned cursor is the arrival
+    /// number to pass back for the one after it.
+    Event(u64, Snapshot),
+    /// The cursor fell off the ring (slow subscriber); delivery resumes
+    /// at the returned oldest-retained arrival. The count of skipped
+    /// snapshots is `returned - requested`.
+    Lagged(u64),
+    /// Nothing new within the timeout — send a keep-alive and retry.
+    Timeout,
+    /// The hub shut down; the stream is over.
+    Closed,
+}
+
+struct HubInner {
+    /// Snapshots ever published (the next arrival number).
+    arrivals: u64,
+    /// Retained suffix: (arrival number, snapshot), oldest first.
+    ring: VecDeque<(u64, Snapshot)>,
+    cap: usize,
+    closed: bool,
+}
+
+/// Bounded broadcast ring for [`Snapshot`]s: non-blocking publish,
+/// condvar-timeout subscribe, explicit lag signalling.
+pub struct SnapshotHub {
+    inner: Mutex<HubInner>,
+    cond: Condvar,
+}
+
+impl SnapshotHub {
+    pub fn new(cap: usize) -> SnapshotHub {
+        SnapshotHub {
+            inner: Mutex::new(HubInner {
+                arrivals: 0,
+                ring: VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Publish one snapshot. Never blocks beyond the mutex: when the
+    /// ring is full the oldest entry is dropped (slow subscribers see
+    /// [`Next::Lagged`]).
+    pub fn publish(&self, s: Snapshot) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.closed {
+            return;
+        }
+        let n = g.arrivals;
+        g.arrivals += 1;
+        g.ring.push_back((n, s));
+        while g.ring.len() > g.cap {
+            g.ring.pop_front();
+        }
+        drop(g);
+        self.cond.notify_all();
+    }
+
+    /// Close the hub: publishes stop, every waiting subscriber wakes
+    /// with [`Next::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Cursor for "everything retained" — the oldest arrival still in
+    /// the ring (a fresh subscriber replays the available history; for
+    /// a live fleet that is exactly the state it needs to catch up).
+    pub fn cursor_oldest(&self) -> u64 {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.ring.front().map(|(n, _)| *n).unwrap_or(g.arrivals)
+    }
+
+    /// Cursor for "only what happens next" (no replay).
+    pub fn cursor_now(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).arrivals
+    }
+
+    /// Cursor resuming *after* the snapshot with sequence `last_seq`:
+    /// the first retained arrival whose snapshot has `seq > last_seq`,
+    /// or the live end when everything retained was already seen. A
+    /// `last_seq` older than the ring simply replays from the oldest —
+    /// the client asked for history the ring no longer holds.
+    pub fn cursor_after_seq(&self, last_seq: u64) -> u64 {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.ring
+            .iter()
+            .find(|(_, s)| s.seq > last_seq)
+            .map(|(n, _)| *n)
+            .unwrap_or(g.arrivals)
+    }
+
+    /// Block (up to `timeout`) for the snapshot at arrival `cursor`.
+    pub fn next(&self, cursor: u64, timeout: Duration) -> Next {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(front) = g.ring.front().map(|(n, _)| *n) {
+                if cursor < front {
+                    return Next::Lagged(front);
+                }
+                if cursor < g.arrivals {
+                    let idx = (cursor - front) as usize;
+                    let (n, s) = &g.ring[idx];
+                    debug_assert_eq!(*n, cursor);
+                    return Next::Event(*n, s.clone());
+                }
+            }
+            if g.closed {
+                return Next::Closed;
+            }
+            let (guard, res) = self
+                .cond
+                .wait_timeout(g, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+            g = guard;
+            if res.timed_out() {
+                // Re-check once after the timeout: a publish may have
+                // raced the wakeup.
+                if g.ring.back().map(|(n, _)| *n >= cursor).unwrap_or(false) || g.closed {
+                    continue;
+                }
+                return Next::Timeout;
+            }
+        }
+    }
+}
+
+/// Frame one SSE event. Multi-line data is split across `data:` lines
+/// per the spec; the blank line terminates the frame.
+pub fn sse_frame(event: Option<&str>, id: Option<u64>, data: &str) -> String {
+    let mut out = String::new();
+    if let Some(e) = event {
+        out.push_str("event: ");
+        out.push_str(e);
+        out.push('\n');
+    }
+    if let Some(i) = id {
+        out.push_str(&format!("id: {i}\n"));
+    }
+    for line in data.split('\n') {
+        out.push_str("data: ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push('\n');
+    out
+}
+
+/// An SSE comment line (keep-alive; clients ignore it).
+pub fn sse_comment(text: &str) -> String {
+    format!(": {text}\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn snap(seq: u64) -> Snapshot {
+        Snapshot {
+            experiment: "expX".into(),
+            shard: None,
+            case_index: seq % 4,
+            seq,
+            t_s: seq as f64,
+            done: false,
+            cases_done: 0,
+            cases_owned: 4,
+            cases_total: 4,
+            finished: 0,
+            stages: 0,
+            qps: 0.0,
+            ttft_p50_s: 0.0,
+            ttft_p99_s: 0.0,
+            e2e_p50_s: 0.0,
+            e2e_p99_s: 0.0,
+            norm_latency_p50_s_per_tok: 0.0,
+            power_w: 0.0,
+            mfu: 0.0,
+            energy_kwh: 0.0,
+            gco2_g: 0.0,
+        }
+    }
+
+    #[test]
+    fn sse_frames_follow_the_spec_shape() {
+        let f = sse_frame(Some("snapshot"), Some(7), "{\"a\":1}");
+        assert_eq!(f, "event: snapshot\nid: 7\ndata: {\"a\":1}\n\n");
+        // Multi-line data splits into one data: line per line.
+        let f = sse_frame(None, None, "line1\nline2");
+        assert_eq!(f, "data: line1\ndata: line2\n\n");
+        assert_eq!(sse_comment("keep-alive"), ": keep-alive\n\n");
+    }
+
+    #[test]
+    fn hub_delivers_in_order_and_signals_lag() {
+        let hub = SnapshotHub::new(4);
+        assert_eq!(hub.cursor_now(), 0);
+        assert_eq!(hub.cursor_oldest(), 0);
+        for i in 1..=3 {
+            hub.publish(snap(i));
+        }
+        let mut cur = hub.cursor_oldest();
+        let mut seqs = Vec::new();
+        while let Next::Event(n, s) = hub.next(cur, Duration::from_millis(1)) {
+            cur = n + 1;
+            seqs.push(s.seq);
+        }
+        assert_eq!(seqs, vec![1, 2, 3]);
+        assert_eq!(hub.next(cur, Duration::from_millis(1)), Next::Timeout);
+
+        // Overflow: cap 4, publish 6 more — the oldest fall off and a
+        // stale cursor is told where delivery resumes.
+        for i in 4..=9 {
+            hub.publish(snap(i));
+        }
+        match hub.next(0, Duration::from_millis(1)) {
+            Next::Lagged(resume) => {
+                assert_eq!(resume, 5, "ring holds arrivals 5..=8 (snaps 6..=9)");
+                match hub.next(resume, Duration::from_millis(1)) {
+                    Next::Event(_, s) => assert_eq!(s.seq, 6),
+                    other => panic!("expected event after lag, got {other:?}"),
+                }
+            }
+            other => panic!("expected Lagged, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cursor_after_seq_resumes_past_the_given_sequence() {
+        let hub = SnapshotHub::new(16);
+        for i in [10, 20, 30] {
+            hub.publish(snap(i));
+        }
+        // Resume after seq 20 → arrival of seq 30 (arrival 2).
+        let cur = hub.cursor_after_seq(20);
+        match hub.next(cur, Duration::from_millis(1)) {
+            Next::Event(_, s) => assert_eq!(s.seq, 30),
+            other => panic!("{other:?}"),
+        }
+        // Everything seen already → live end (timeout until new data).
+        let cur = hub.cursor_after_seq(30);
+        assert_eq!(hub.next(cur, Duration::from_millis(1)), Next::Timeout);
+        // Ancient seq → oldest retained.
+        assert_eq!(hub.cursor_after_seq(0), 0);
+    }
+
+    /// A subscriber blocked in next() wakes on publish from another
+    /// thread, and close() ends every stream.
+    #[test]
+    fn blocking_subscriber_wakes_on_publish_and_close() {
+        let hub = Arc::new(SnapshotHub::new(16));
+        let h2 = hub.clone();
+        let t = std::thread::spawn(move || {
+            let first = h2.next(0, Duration::from_secs(10));
+            let second = h2.next(1, Duration::from_secs(10));
+            (first, second)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        hub.publish(snap(1));
+        std::thread::sleep(Duration::from_millis(30));
+        hub.close();
+        let (first, second) = t.join().unwrap();
+        match first {
+            Next::Event(0, s) => assert_eq!(s.seq, 1),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(second, Next::Closed);
+        // Publishing after close is a no-op.
+        hub.publish(snap(2));
+        assert_eq!(hub.cursor_now(), 1);
+    }
+}

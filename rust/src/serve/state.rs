@@ -1,0 +1,447 @@
+//! Shared state behind the serve endpoints (DESIGN.md §11): the
+//! latest-per-case fleet map, the broadcast hub, and the background
+//! sweep registry.
+//!
+//! Everything here is observation bookkeeping plus a thin job queue —
+//! none of it touches the simulation itself. Hosted sweeps run through
+//! the exact same `experiments::run_by_id` path the CLI uses, with the
+//! watch configured to a JSONL file inside the job's own output
+//! directory, so a served sweep's artifacts are byte-identical to an
+//! unserved run's (`tests/serve_http.rs` asserts this).
+
+use crate::report::live::{self, snapshot_supersedes};
+use crate::serve::sse::{SnapshotHub, DEFAULT_HUB_CAPACITY};
+use crate::sweep::ShardSpec;
+use crate::telemetry::window::Snapshot;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Format tag on every JSON body the serve plane emits; bumped on
+/// breaking contract changes (the endpoint contract is part of the
+/// crate's public surface — see DESIGN.md §11).
+pub const SERVE_FORMAT: &str = "vidur-energy/serve/v1";
+
+/// One sweep-submission request (`POST /v1/sweeps` body).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRequest {
+    /// Experiment id (`exp1`, `autoscale`, `all`, …).
+    pub experiment: String,
+    /// Worker threads for the sweep (the CLI's `--jobs`).
+    pub jobs: usize,
+    /// Shard label (`k/N`) or `None` for the whole grid.
+    pub shard: Option<String>,
+    /// Reduced-size run (the CLI's `--fast`).
+    pub fast: bool,
+    /// Output directory, assigned by the registry (`<out>/sweep-<id>`).
+    pub out: PathBuf,
+}
+
+impl SweepRequest {
+    /// Parse and validate a submission body. Unknown experiments and
+    /// malformed shards are rejected here — before a job is enqueued —
+    /// so the client gets a 400, not a job that fails later.
+    pub fn from_json(v: &Value) -> Result<SweepRequest> {
+        let experiment = v.req_str("experiment")?.to_string();
+        let known = crate::report::EXPERIMENT_IDS.contains(&experiment.as_str())
+            || experiment == "all";
+        anyhow::ensure!(
+            known,
+            "unknown experiment '{experiment}' (expected one of {}, or 'all')",
+            crate::report::EXPERIMENT_IDS.join(", ")
+        );
+        let jobs = match v.get("jobs") {
+            None => crate::sweep::default_jobs(),
+            Some(j) => {
+                let j = j
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("'jobs' must be a positive integer"))?;
+                anyhow::ensure!(j >= 1, "'jobs' must be >= 1");
+                j as usize
+            }
+        };
+        let shard = match v.get("shard") {
+            None | Some(Value::Null) => None,
+            Some(s) => {
+                let s = s
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("'shard' must be a string like '0/2'"))?;
+                ShardSpec::parse(s)?; // validate now, run later
+                Some(s.to_string())
+            }
+        };
+        let fast = match v.get("fast") {
+            None => false,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("'fast' must be a boolean"))?,
+        };
+        Ok(SweepRequest {
+            experiment,
+            jobs,
+            shard,
+            fast,
+            out: PathBuf::new(), // assigned on submit
+        })
+    }
+}
+
+/// Lifecycle of a submitted sweep job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SweepStatus {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+impl SweepStatus {
+    fn as_str(&self) -> &str {
+        match self {
+            SweepStatus::Queued => "queued",
+            SweepStatus::Running => "running",
+            SweepStatus::Done => "done",
+            SweepStatus::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Executes one sweep request (injectable: tests swap the real
+/// experiment runner for a tiny deterministic grid).
+pub type SweepRunner = Arc<dyn Fn(&SweepRequest) -> Result<()> + Send + Sync>;
+
+struct SweepJob {
+    id: u64,
+    req: SweepRequest,
+    status: SweepStatus,
+}
+
+/// The submitted-sweeps registry: a queue drained by one worker
+/// thread. Sequential on purpose — sweep concurrency lives *inside* a
+/// sweep (`--jobs`), and the watch/jobs/shard configuration is
+/// process-global, so two hosted sweeps running at once would fight
+/// over it.
+pub struct SweepRegistry {
+    jobs: Mutex<Vec<SweepJob>>,
+    cond: Condvar,
+    out_root: PathBuf,
+}
+
+impl SweepRegistry {
+    pub fn new(out_root: PathBuf) -> SweepRegistry {
+        SweepRegistry {
+            jobs: Mutex::new(Vec::new()),
+            cond: Condvar::new(),
+            out_root,
+        }
+    }
+
+    /// Enqueue a validated request; returns the job id (1-based) after
+    /// assigning the job its own output directory.
+    pub fn submit(&self, mut req: SweepRequest) -> u64 {
+        let mut g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let id = g.len() as u64 + 1;
+        req.out = self.out_root.join(format!("sweep-{id}"));
+        g.push(SweepJob {
+            id,
+            req,
+            status: SweepStatus::Queued,
+        });
+        drop(g);
+        self.cond.notify_all();
+        id
+    }
+
+    /// Status of one job as the `/v1/sweeps/<id>` JSON body.
+    pub fn job_json(&self, id: u64) -> Option<Value> {
+        let g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        g.iter().find(|j| j.id == id).map(job_to_json)
+    }
+
+    /// All jobs, newest last (`/v1/sweeps` GET body).
+    pub fn jobs_json(&self) -> Value {
+        let g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let mut v = Value::obj();
+        v.set("format", SERVE_FORMAT)
+            .set("sweeps", Value::Arr(g.iter().map(job_to_json).collect()));
+        v
+    }
+
+    /// Worker loop: claim the oldest queued job, run it, record the
+    /// outcome; park on the condvar (with a timeout, to observe
+    /// `shutdown`) when the queue is empty. Runs until `shutdown` *and*
+    /// the queue is idle — an accepted job is never abandoned.
+    pub fn run_worker(&self, runner: SweepRunner, shutdown: &AtomicBool) {
+        loop {
+            let claimed = {
+                let mut g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(j) = g.iter_mut().find(|j| j.status == SweepStatus::Queued) {
+                        j.status = SweepStatus::Running;
+                        break Some((j.id, j.req.clone()));
+                    }
+                    if shutdown.load(Ordering::SeqCst) {
+                        break None;
+                    }
+                    let (guard, _) = self
+                        .cond
+                        .wait_timeout(g, Duration::from_millis(100))
+                        .unwrap_or_else(|e| e.into_inner());
+                    g = guard;
+                }
+            };
+            let Some((id, req)) = claimed else { return };
+            let outcome = (*runner)(&req);
+            let mut g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(j) = g.iter_mut().find(|j| j.id == id) {
+                j.status = match outcome {
+                    Ok(()) => SweepStatus::Done,
+                    Err(e) => SweepStatus::Failed(format!("{e:#}")),
+                };
+            }
+        }
+    }
+}
+
+fn job_to_json(j: &SweepJob) -> Value {
+    let mut v = Value::obj();
+    v.set("id", j.id)
+        .set("experiment", j.req.experiment.as_str())
+        .set("jobs", j.req.jobs as u64)
+        .set(
+            "shard",
+            match &j.req.shard {
+                Some(s) => Value::Str(s.clone()),
+                None => Value::Null,
+            },
+        )
+        .set("fast", j.req.fast)
+        .set("out", j.req.out.display().to_string())
+        .set("status", j.status.as_str());
+    if let SweepStatus::Failed(msg) = &j.status {
+        v.set("error", msg.as_str());
+    }
+    v
+}
+
+/// The sweep runner the CLI uses: configure the process-global
+/// jobs/shard/watch the way the `repro experiment` command line would,
+/// run the experiment, restore the globals. The watch target is a
+/// JSONL file inside the job's output directory — the server's own
+/// snapshot tap picks the stream up in process, and `repro watch
+/// <out>` keeps working on the same file after the server exits.
+pub fn default_runner() -> SweepRunner {
+    Arc::new(|req: &SweepRequest| {
+        let shard = match &req.shard {
+            Some(s) => Some(ShardSpec::parse(s)?),
+            None => None,
+        };
+        std::fs::create_dir_all(&req.out)?;
+        let prev_jobs = crate::sweep::default_jobs();
+        crate::sweep::set_default_jobs(req.jobs);
+        crate::sweep::set_shard(shard);
+        let mut watch = live::WatchConfig::stderr();
+        watch.target = live::WatchTarget::Json(req.out.join(live::WATCH_FILENAME));
+        live::set_watch(Some(watch));
+        let result = crate::experiments::run_by_id(&req.experiment, &req.out, req.fast);
+        live::set_watch(None);
+        crate::sweep::set_shard(None);
+        crate::sweep::set_default_jobs(prev_jobs);
+        result
+    })
+}
+
+/// The state every connection handler shares: the broadcast hub, the
+/// latest-per-(experiment, shard, case) fleet map, and the sweep
+/// registry.
+pub struct ServeState {
+    pub hub: SnapshotHub,
+    fleet: Mutex<BTreeMap<(String, String, u64), Snapshot>>,
+    pub sweeps: SweepRegistry,
+}
+
+impl ServeState {
+    pub fn new(out_root: PathBuf) -> ServeState {
+        ServeState {
+            hub: SnapshotHub::new(DEFAULT_HUB_CAPACITY),
+            fleet: Mutex::new(BTreeMap::new()),
+            sweeps: SweepRegistry::new(out_root),
+        }
+    }
+
+    /// Fold one snapshot in: update the fleet map (same supersedes
+    /// rule as `repro watch`'s aggregation) and broadcast it. Both the
+    /// in-process tap and the file followers call this, so a snapshot
+    /// that arrives twice (tap + follower on the same file) lands in
+    /// the same slot instead of double counting.
+    pub fn ingest(&self, s: &Snapshot) {
+        let key = (
+            s.experiment.clone(),
+            s.shard.clone().unwrap_or_default(),
+            s.case_index,
+        );
+        {
+            let mut fleet = self.fleet.lock().unwrap_or_else(|e| e.into_inner());
+            match fleet.get_mut(&key) {
+                Some(slot) => {
+                    // Stale (older by the supersedes order) or an
+                    // exact replay (a follower reset re-reading a file
+                    // whose snapshots the tap already delivered):
+                    // neither re-broadcasts.
+                    if *slot == *s || !snapshot_supersedes(s, slot) {
+                        return;
+                    }
+                    *slot = s.clone();
+                }
+                None => {
+                    fleet.insert(key, s.clone());
+                }
+            }
+        }
+        self.hub.publish(s.clone());
+    }
+
+    /// The `/v1/fleet` body: `repro watch`'s aggregation over the
+    /// latest-per-case snapshots, as JSON.
+    pub fn fleet_json(&self) -> Value {
+        let fleet = self.fleet.lock().unwrap_or_else(|e| e.into_inner());
+        let aggs = live::aggregate(fleet.values());
+        let mut v = Value::obj();
+        v.set("format", SERVE_FORMAT)
+            .set("snapshots_seen", self.hub.cursor_now())
+            .set(
+                "experiments",
+                Value::Arr(aggs.iter().map(|a| a.to_json()).collect()),
+            );
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(exp: &str, case: u64, seq: u64, t: f64, done: bool) -> Snapshot {
+        Snapshot {
+            experiment: exp.to_string(),
+            shard: None,
+            case_index: case,
+            seq,
+            t_s: t,
+            done,
+            cases_done: 0,
+            cases_owned: 2,
+            cases_total: 2,
+            finished: 10 + case,
+            stages: 5,
+            qps: 1.0,
+            ttft_p50_s: 0.1,
+            ttft_p99_s: 0.2,
+            e2e_p50_s: 0.5,
+            e2e_p99_s: 1.0,
+            norm_latency_p50_s_per_tok: 0.01,
+            power_w: 400.0,
+            mfu: 0.4,
+            energy_kwh: 0.2,
+            gco2_g: 80.0,
+        }
+    }
+
+    #[test]
+    fn sweep_request_validation_rejects_bad_bodies() {
+        let parse = |text: &str| {
+            SweepRequest::from_json(&crate::util::json::parse(text).unwrap())
+        };
+        let ok = parse(r#"{"experiment": "exp1", "jobs": 2, "shard": "0/2", "fast": true}"#)
+            .unwrap();
+        assert_eq!(ok.experiment, "exp1");
+        assert_eq!(ok.jobs, 2);
+        assert_eq!(ok.shard.as_deref(), Some("0/2"));
+        assert!(ok.fast);
+        // Defaults: jobs from the process default, no shard, not fast.
+        let d = parse(r#"{"experiment": "autoscale"}"#).unwrap();
+        assert_eq!(d.jobs, crate::sweep::default_jobs());
+        assert_eq!(d.shard, None);
+        assert!(!d.fast);
+        assert!(parse(r#"{"experiment": "all"}"#).is_ok());
+        // Rejections, each naming its problem.
+        assert!(parse(r#"{"experiment": "nope"}"#).is_err());
+        assert!(parse(r#"{"jobs": 2}"#).is_err());
+        assert!(parse(r#"{"experiment": "exp1", "jobs": 0}"#).is_err());
+        assert!(parse(r#"{"experiment": "exp1", "jobs": "two"}"#).is_err());
+        assert!(parse(r#"{"experiment": "exp1", "shard": "9/2"}"#).is_err());
+        assert!(parse(r#"{"experiment": "exp1", "shard": 2}"#).is_err());
+        assert!(parse(r#"{"experiment": "exp1", "fast": "yes"}"#).is_err());
+    }
+
+    #[test]
+    fn ingest_keeps_latest_per_case_and_broadcasts_fresh_only() {
+        let st = ServeState::new(PathBuf::from("unused"));
+        st.ingest(&snap("expX", 0, 1, 60.0, false));
+        st.ingest(&snap("expX", 1, 2, 60.0, false));
+        // A stale replay (older by every key) must not rebroadcast.
+        st.ingest(&snap("expX", 0, 1, 30.0, false));
+        assert_eq!(st.hub.cursor_now(), 2, "stale snapshot rebroadcast");
+        // A superseding snapshot updates the slot and broadcasts.
+        st.ingest(&snap("expX", 0, 3, 120.0, true));
+        assert_eq!(st.hub.cursor_now(), 3);
+        // An exact replay (follower re-reading a file the tap already
+        // delivered) is dropped too.
+        st.ingest(&snap("expX", 0, 3, 120.0, true));
+        assert_eq!(st.hub.cursor_now(), 3, "exact replay rebroadcast");
+        let v = st.fleet_json();
+        assert_eq!(v.req_str("format").unwrap(), SERVE_FORMAT);
+        let exps = v.get("experiments").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(exps.len(), 1);
+        assert_eq!(exps[0].req_u64("cases_done").unwrap(), 1);
+        assert_eq!(exps[0].req_u64("finished").unwrap(), 10 + 11);
+    }
+
+    #[test]
+    fn registry_runs_jobs_in_submission_order() {
+        let reg = Arc::new(SweepRegistry::new(PathBuf::from("serve-out")));
+        let ran: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = ran.clone();
+        let runner: SweepRunner = Arc::new(move |req: &SweepRequest| {
+            sink.lock().unwrap().push(req.experiment.clone());
+            if req.experiment == "exp2" {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        let id1 = reg.submit(SweepRequest {
+            experiment: "exp1".into(),
+            jobs: 1,
+            shard: None,
+            fast: true,
+            out: PathBuf::new(),
+        });
+        let id2 = reg.submit(SweepRequest {
+            experiment: "exp2".into(),
+            jobs: 1,
+            shard: None,
+            fast: true,
+            out: PathBuf::new(),
+        });
+        assert_eq!((id1, id2), (1, 2));
+        // Output dirs are assigned per job under the registry root.
+        let j1 = reg.job_json(id1).unwrap();
+        assert!(j1.req_str("out").unwrap().ends_with("sweep-1"));
+        assert_eq!(j1.req_str("status").unwrap(), "queued");
+
+        let shutdown = AtomicBool::new(true); // drain the queue, then stop
+        reg.run_worker(runner, &shutdown);
+        assert_eq!(*ran.lock().unwrap(), vec!["exp1", "exp2"]);
+        assert_eq!(reg.job_json(id1).unwrap().req_str("status").unwrap(), "done");
+        let j2 = reg.job_json(id2).unwrap();
+        assert_eq!(j2.req_str("status").unwrap(), "failed");
+        assert!(j2.req_str("error").unwrap().contains("boom"));
+        assert_eq!(reg.job_json(99), None);
+        let all = reg.jobs_json();
+        assert_eq!(all.get("sweeps").and_then(|s| s.as_arr()).unwrap().len(), 2);
+    }
+}

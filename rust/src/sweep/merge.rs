@@ -184,7 +184,7 @@ fn merge_experiment(id: &str, dirs: &[PathBuf], out: &Path) -> Result<MergedExpe
     let n_rows = table.rows.len();
     table.save(out.join(format!("{id}.csv")))?;
     if !metas.is_empty() {
-        let merged_meta = merge_metas(&metas);
+        let merged_meta = merge_metas(&metas)?;
         std::fs::write(out.join("meta.json"), merged_meta.pretty())?;
     }
     telemetry.save(out)?;
@@ -230,8 +230,10 @@ fn merge_experiment(id: &str, dirs: &[PathBuf], out: &Path) -> Result<MergedExpe
 /// unions, first (lowest-index) shard wins on conflicting values —
 /// experiment-constant keys (`figure`, `paper_claim`, configs) agree
 /// anyway, and per-shard keys (autoscale's `decisions_<policy>`) are
-/// disjoint.
-fn merge_metas(metas: &[Value]) -> Value {
+/// disjoint. Everything flowing through here came out of parsed (i.e.
+/// arbitrarily shaped) shard files, so mutation goes through the
+/// non-panicking `try_set`.
+fn merge_metas(metas: &[Value]) -> Result<Value> {
     let mut out = Value::obj();
     // First-wins union of plain keys.
     for meta in metas {
@@ -241,16 +243,16 @@ fn merge_metas(metas: &[Value]) -> Value {
                     continue;
                 }
                 if out.get(k).is_none() {
-                    out.set(k, v.clone());
+                    out.try_set(k, v.clone())?;
                 }
             }
         }
     }
     let sweeps: Vec<&Value> = metas.iter().filter_map(|m| m.get("sweep")).collect();
     if !sweeps.is_empty() {
-        out.set("sweep", merge_sweep_values(&sweeps));
+        out.try_set("sweep", merge_sweep_values(&sweeps)?)?;
     }
-    out
+    Ok(out)
 }
 
 /// Merge `meta.json`'s `sweep` objects with the correct per-field
@@ -263,7 +265,7 @@ fn merge_metas(metas: &[Value]) -> Value {
 /// machine's oracle counters as if they covered the whole sweep.
 /// The per-shard `shard` label is dropped — the merged object speaks
 /// for the union.
-pub fn merge_sweep_values(sweeps: &[&Value]) -> Value {
+pub fn merge_sweep_values(sweeps: &[&Value]) -> Result<Value> {
     let mut out = Value::obj();
     let sum_u64 = |key: &str, objs: &[&Value]| -> Option<u64> {
         let vals: Vec<u64> = objs.iter().filter_map(|v| v.get(key)?.as_u64()).collect();
@@ -289,30 +291,30 @@ pub fn merge_sweep_values(sweeps: &[&Value]) -> Value {
         ("peak_live_requests", max_u64("peak_live_requests", sweeps)),
     ] {
         if let Some(v) = val {
-            out.set(key, v);
+            out.try_set(key, v)?;
         }
     }
     if sweeps
         .iter()
         .any(|s| s.get("materialized").and_then(|v| v.as_bool()).unwrap_or(false))
     {
-        out.set("materialized", true);
+        out.try_set("materialized", true)?;
     }
     let oracles: Vec<&Value> = sweeps.iter().filter_map(|s| s.get("oracle_cache")).collect();
     if !oracles.is_empty() {
         let mut oc = Value::obj();
         let calls = sum_u64("calls", &oracles).unwrap_or(0);
         let hits = sum_u64("hits", &oracles).unwrap_or(0);
-        oc.set("calls", calls)
-            .set("hits", hits)
-            .set("resets", sum_u64("resets", &oracles).unwrap_or(0))
-            .set(
+        oc.try_set("calls", calls)?
+            .try_set("hits", hits)?
+            .try_set("resets", sum_u64("resets", &oracles).unwrap_or(0))?
+            .try_set(
                 "hit_rate",
                 if calls == 0 { 0.0 } else { hits as f64 / calls as f64 },
-            );
-        out.set("oracle_cache", oc);
+            )?;
+        out.try_set("oracle_cache", oc)?;
     }
-    out
+    Ok(out)
 }
 
 /// Recursive copy of a per-case extra (file or directory) with the
@@ -391,7 +393,7 @@ mod tests {
     fn sweep_meta_merges_with_max_vs_sum_semantics() {
         let a = sweep_obj(5, 1000, 8, 40, 600, 500);
         let b = sweep_obj(4, 800, 4, 70, 400, 100);
-        let m = merge_sweep_values(&[&a, &b]);
+        let m = merge_sweep_values(&[&a, &b]).unwrap();
         assert_eq!(m.get("cases").unwrap().as_u64(), Some(9)); // sum
         assert_eq!(m.get("total_stages").unwrap().as_u64(), Some(1800)); // sum
         assert_eq!(m.get("jobs").unwrap().as_u64(), Some(8)); // max
@@ -418,7 +420,7 @@ mod tests {
         b.set("figure", "fig2")
             .set("decisions_reactive", 12u64)
             .set("sweep", sweep_obj(2, 12, 3, 9, 10, 5));
-        let m = merge_metas(&[a, b]);
+        let m = merge_metas(&[a, b]).unwrap();
         assert_eq!(m.get("figure").unwrap().as_str(), Some("fig2"));
         // Disjoint per-shard keys union.
         assert_eq!(m.get("decisions_static").unwrap().as_u64(), Some(10));

@@ -535,6 +535,20 @@ impl Snapshot {
 /// worker threads.
 pub type SnapshotEmitter = Arc<dyn Fn(&mut Snapshot) + Send + Sync>;
 
+/// Combine emitters into one that calls each in order on the same
+/// snapshot. Later emitters see mutations made by earlier ones — the
+/// convention (shared with [`crate::report::live::LiveView::emitter`])
+/// is that the *first* emitter stamps the process-wide fields and the
+/// rest only observe, which is exactly what the serve plane's
+/// broadcast tap wants.
+pub fn fan_emitters(emitters: Vec<SnapshotEmitter>) -> SnapshotEmitter {
+    Arc::new(move |s: &mut Snapshot| {
+        for e in &emitters {
+            (*e)(s);
+        }
+    })
+}
+
 /// Shared state of one observed case (single-threaded: a sweep case
 /// runs wholly on the worker that claimed it, so `Rc<RefCell>` is the
 /// right tool — the cross-thread boundary is the emitter).
@@ -844,6 +858,29 @@ mod tests {
         assert_eq!(edge.window_len(), 2, "t == cutoff must survive");
         edge.observe(&done_req(2, 15.1, 0.5, 2.0)); // cutoff = 5.1
         assert_eq!(edge.window_len(), 2, "t < cutoff must fall out");
+    }
+
+    /// fan_emitters calls every emitter in order on the same snapshot,
+    /// so later emitters observe earlier stamps.
+    #[test]
+    fn fan_emitters_runs_all_in_order() {
+        let log: Arc<Mutex<Vec<(u64, &'static str)>>> = Arc::new(Mutex::new(Vec::new()));
+        let (l1, l2) = (log.clone(), log.clone());
+        let stamp: SnapshotEmitter = Arc::new(move |s: &mut Snapshot| {
+            s.seq = 7;
+            l1.lock().unwrap().push((s.seq, "stamp"));
+        });
+        let observe: SnapshotEmitter = Arc::new(move |s: &mut Snapshot| {
+            l2.lock().unwrap().push((s.seq, "observe"));
+        });
+        let fan = fan_emitters(vec![stamp, observe]);
+        let cfg = SimConfig::default();
+        let watch =
+            CaseWatch::new(&cfg, 300.0, 60.0, 400.0, "expX", None, 0, fan).unwrap();
+        watch.finish();
+        let got = log.lock().unwrap();
+        // The observer ran after the stamper and saw its mutation.
+        assert_eq!(*got, vec![(7, "stamp"), (7, "observe")]);
     }
 
     /// CaseWatch emits on the sim-time cadence, stamps monotone

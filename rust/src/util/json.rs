@@ -25,13 +25,42 @@ impl Value {
         Value::Obj(BTreeMap::new())
     }
 
+    /// Insert into an object, panicking on a non-object receiver —
+    /// the builder-style API for values whose shape is statically
+    /// known (`Value::obj()` literals). When the receiver came from
+    /// [`parse`] — i.e. its shape is decided by whoever wrote the
+    /// input — use [`Value::try_set`] instead: a malformed document
+    /// must surface as an `Err`, never abort the process (the serve
+    /// plane's request handlers depend on this).
     pub fn set(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
-        if let Value::Obj(m) = self {
-            m.insert(key.to_string(), v.into());
-        } else {
-            panic!("set() on non-object json value");
+        if let Err(e) = self.try_set(key, v) {
+            panic!("{e}");
         }
         self
+    }
+
+    /// Non-panicking [`Value::set`]: inserts into an object receiver,
+    /// errors (naming the key and the actual variant) on anything
+    /// else.
+    pub fn try_set(&mut self, key: &str, v: impl Into<Value>) -> anyhow::Result<&mut Self> {
+        if let Value::Obj(m) = self {
+            m.insert(key.to_string(), v.into());
+            Ok(self)
+        } else {
+            anyhow::bail!("set('{key}') on non-object json value ({})", self.kind())
+        }
+    }
+
+    /// The JSON type of this value, for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
     }
 
     pub fn get(&self, key: &str) -> Option<&Value> {
@@ -524,6 +553,37 @@ mod tests {
         let back = parse(&s).unwrap();
         assert_eq!(back.get("n").unwrap().as_u64(), Some(3));
         assert_eq!(back.get("arr").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// The satellite bugfix pinned down: mutating a value whose shape
+    /// came from the wire must be able to fail as a `Result`, not
+    /// abort the process.
+    #[test]
+    fn try_set_rejects_every_non_object_receiver() {
+        for (text, kind) in [
+            ("null", "null"),
+            ("true", "bool"),
+            ("3.5", "number"),
+            ("\"s\"", "string"),
+            ("[1,2]", "array"),
+        ] {
+            let mut v = parse(text).unwrap();
+            let err = v.try_set("k", 1u64).err().expect(kind).to_string();
+            assert!(err.contains("'k'") && err.contains(kind), "{err}");
+            assert_eq!(v, parse(text).unwrap(), "receiver must be untouched");
+        }
+        // Object receivers succeed and chain like set().
+        let mut v = parse("{}").unwrap();
+        v.try_set("a", 1u64).unwrap().try_set("b", "x").unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(v.kind(), "object");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-object json value")]
+    fn set_still_panics_on_non_object() {
+        Value::Null.set("k", 1u64);
     }
 
     #[test]

@@ -11,3 +11,4 @@ pub mod csv;
 pub mod cli;
 pub mod bench;
 pub mod proptest;
+pub mod version;

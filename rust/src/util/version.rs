@@ -1,0 +1,40 @@
+//! Build identity, embedded once and surfaced everywhere that answers
+//! "what exactly is running?": `repro --version` and the serve plane's
+//! `GET /healthz` (DESIGN.md §11).
+
+/// The crate version from Cargo.toml.
+pub const CRATE_VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The `git describe --always --dirty --tags` string captured at build
+/// time by `build.rs`, when the build ran inside a git checkout with a
+/// git binary available; `None` otherwise (release tarballs, sandboxed
+/// builds).
+pub fn git_describe() -> Option<&'static str> {
+    option_env!("REPRO_GIT_DESCRIBE")
+}
+
+/// Human-facing one-liner: `0.1.0 (1a2b3c4)` with a checkout, `0.1.0`
+/// without.
+pub fn version_string() -> String {
+    match git_describe() {
+        Some(g) => format!("{CRATE_VERSION} ({g})"),
+        None => CRATE_VERSION.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_string_always_carries_the_crate_version() {
+        assert!(!CRATE_VERSION.is_empty());
+        let s = version_string();
+        assert!(s.starts_with(CRATE_VERSION), "{s}");
+        // With a describe string it must appear too.
+        if let Some(g) = git_describe() {
+            assert!(!g.is_empty());
+            assert!(s.contains(g), "{s}");
+        }
+    }
+}

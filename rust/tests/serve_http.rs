@@ -1,0 +1,352 @@
+//! `repro serve` end to end over a loopback socket (DESIGN.md §11).
+//!
+//! The serve plane's contract has three legs, all asserted here with
+//! nothing but `std::net::TcpStream` (no curl, no client crate):
+//!
+//! 1. **Observation only** — a sweep hosted through `POST /v1/sweeps`
+//!    persists byte-identical artifacts (`<id>.csv`, `meta.json`,
+//!    `telemetry.json`) to the same grid run without any server.
+//! 2. **Totals agree** — `/v1/fleet` over a followed watch log reports
+//!    the same finished/stages totals as the `telemetry.json` sidecar
+//!    the watched run persisted (i.e. the same aggregation `repro
+//!    watch` performs), and the final SSE snapshots sum to the same.
+//! 3. **Hostile input is survivable** — garbage bytes, bogus paths,
+//!    wrong methods and malformed bodies get well-formed 4xx answers
+//!    and the server keeps serving.
+//!
+//! Everything lives in ONE test function run sequentially: the watch,
+//! shard, and jobs settings are process-global (same constraint as
+//! `watch_observer.rs`).
+
+mod common;
+
+use common::{read_bytes, run_and_save_grid, TempDir, GRID_CASES};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use vidur_energy::report::live::{self, WatchConfig, WatchTarget};
+use vidur_energy::serve::state::{SweepRequest, SweepRunner};
+use vidur_energy::serve::{ServeConfig, Server};
+use vidur_energy::sweep;
+use vidur_energy::telemetry::window::Snapshot;
+use vidur_energy::telemetry::ShardTelemetry;
+use vidur_energy::util::json::{parse, Value};
+
+/// Followed (pre-recorded) watch-log experiment.
+const ID: &str = "servegrid";
+/// Experiment id the injected sweep runner produces.
+const HOSTED_ID: &str = "servehosted";
+const SEED_BASE: u64 = 0x5E12;
+
+fn watch_json(path: &Path) -> Option<WatchConfig> {
+    Some(WatchConfig {
+        target: WatchTarget::Json(path.to_path_buf()),
+        cadence_s: 20.0, // several intermediate snapshots per case
+        window_s: 100.0,
+    })
+}
+
+/// The three persisted outputs of one grid run.
+fn output_bytes(dir: &Path, id: &str) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+    (
+        read_bytes(dir.join(id).join(format!("{id}.csv"))),
+        read_bytes(dir.join(id).join("meta.json")),
+        read_bytes(dir.join(id).join("telemetry.json")),
+    )
+}
+
+/// One HTTP/1.1 exchange over a fresh connection. Returns
+/// (status, head text, body text).
+fn http_request(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+    read_response(&mut stream)
+}
+
+/// Read one Content-Length-framed response off the stream.
+fn read_response(stream: &mut TcpStream) -> (u16, String, String) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..pos]).to_string();
+            let cl: usize = head
+                .lines()
+                .find_map(|l| {
+                    l.to_ascii_lowercase()
+                        .strip_prefix("content-length:")
+                        .map(|v| v.trim().parse().unwrap())
+                })
+                .unwrap_or(0);
+            let body_start = pos + 4;
+            while buf.len() < body_start + cl {
+                let n = stream.read(&mut chunk).expect("reading response body");
+                assert!(n > 0, "connection closed mid-body");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            let status: u16 = head
+                .split_whitespace()
+                .nth(1)
+                .unwrap_or_else(|| panic!("bad status line in {head:?}"))
+                .parse()
+                .unwrap();
+            let body = String::from_utf8_lossy(&buf[body_start..body_start + cl]).to_string();
+            return (status, head, body);
+        }
+        let n = stream.read(&mut chunk).expect("reading response head");
+        assert!(n > 0, "connection closed before response head");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// GET returning parsed JSON.
+fn get_json(addr: &str, path: &str) -> (u16, Value) {
+    let (status, _, body) = http_request(addr, "GET", path, None);
+    let v = parse(&body).unwrap_or_else(|e| panic!("GET {path}: bad json body {body:?}: {e}"));
+    (status, v)
+}
+
+/// Poll `f` until it returns Some or the deadline passes.
+fn poll_until<T>(what: &str, timeout: Duration, mut f: impl FnMut() -> Option<T>) -> T {
+    let start = Instant::now();
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(start.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Find one experiment's aggregate in a `/v1/fleet` body.
+fn fleet_exp(v: &Value, id: &str) -> Option<Value> {
+    v.get("experiments")?
+        .as_arr()?
+        .iter()
+        .find(|e| e.req_str("experiment").ok() == Some(id))
+        .cloned()
+}
+
+#[test]
+fn serve_is_observation_only_and_mirrors_the_telemetry_plane() {
+    let base = TempDir::new("vidur_energy_serve_http");
+    sweep::set_shard(None);
+    live::set_watch(None);
+    // Pin the worker count: meta.json records it, so the plain and
+    // served runs must agree for byte parity.
+    sweep::set_default_jobs(2);
+
+    // --- Baselines: plain runs of both grids, no watch, no server --
+    let plain_dir = base.join("plain");
+    run_and_save_grid(&plain_dir, ID, SEED_BASE);
+    let plain_hosted_dir = base.join("plain_hosted");
+    run_and_save_grid(&plain_hosted_dir, HOSTED_ID, SEED_BASE);
+
+    // --- A watched run producing the log the server will follow ----
+    let watched_dir = base.join("watched");
+    let log = watched_dir.join("watch.jsonl");
+    live::set_watch(watch_json(&log));
+    run_and_save_grid(&watched_dir, ID, SEED_BASE);
+    live::set_watch(None);
+    // Watching is byte-neutral (the §10 contract the serve plane
+    // builds on).
+    assert_eq!(output_bytes(&plain_dir, ID), output_bytes(&watched_dir, ID));
+    let sidecar = ShardTelemetry::load(&watched_dir.join(ID)).unwrap().unwrap();
+
+    // --- Start the server: follow the watched dir, host sweeps -----
+    let serve_out = base.join("serve-out");
+    let runner: SweepRunner = Arc::new(move |req: &SweepRequest| {
+        // The default runner shape (state::default_runner) against the
+        // test grid instead of a real experiment: configure the
+        // process-global jobs + watch, run, restore.
+        std::fs::create_dir_all(&req.out)?;
+        sweep::set_default_jobs(req.jobs);
+        let mut watch = WatchConfig::stderr();
+        watch.target = WatchTarget::Json(req.out.join("watch.jsonl"));
+        watch.cadence_s = 20.0;
+        watch.window_s = 100.0;
+        live::set_watch(Some(watch));
+        run_and_save_grid(&req.out, HOSTED_ID, SEED_BASE);
+        live::set_watch(None);
+        sweep::set_default_jobs(2);
+        Ok(())
+    });
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.follow = vec![watched_dir.clone()];
+    cfg.out = serve_out.clone();
+    cfg.runner = runner;
+    cfg.poll_interval = Duration::from_millis(50);
+    cfg.keepalive = Duration::from_millis(500);
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr().to_string();
+
+    // --- /healthz: build identity ----------------------------------
+    let (status, health) = get_json(&addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(health.req_str("format").unwrap(), "vidur-energy/serve/v1");
+    assert_eq!(health.req_str("status").unwrap(), "ok");
+    assert_eq!(
+        health.req_str("version").unwrap(),
+        vidur_energy::util::version::CRATE_VERSION
+    );
+    assert!(health
+        .req_str("version_string")
+        .unwrap()
+        .starts_with(vidur_energy::util::version::CRATE_VERSION));
+
+    // --- /v1/fleet converges on the followed log's totals ----------
+    let fleet = poll_until("fleet to ingest the watch log", Duration::from_secs(30), || {
+        let (status, v) = get_json(&addr, "/v1/fleet");
+        assert_eq!(status, 200);
+        let exp = fleet_exp(&v, ID)?;
+        (exp.req_u64("cases_done").ok()? == GRID_CASES as u64).then_some(exp)
+    });
+    assert_eq!(fleet.req_u64("cases_total").unwrap(), GRID_CASES as u64);
+    assert_eq!(fleet.req_u64("finished").unwrap(), sidecar.requests.finished);
+    assert_eq!(fleet.req_u64("stages").unwrap(), sidecar.stages.stages);
+    // Same numbers `repro watch` computes from the same log.
+    let watch_aggs = live::aggregate(&live::read_snapshots(&log).unwrap());
+    assert_eq!(watch_aggs.len(), 1);
+    assert_eq!(watch_aggs[0].finished, sidecar.requests.finished);
+    assert_eq!(watch_aggs[0].stages, sidecar.stages.stages);
+
+    // --- SSE stream: full replay sums to the sidecar too ------------
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        stream
+            .write_all(b"GET /v1/snapshots?last_event_id=0 HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let mut text = String::new();
+        let mut chunk = [0u8; 4096];
+        let mut done_cases: BTreeMap<u64, Snapshot> = BTreeMap::new();
+        let start = Instant::now();
+        while done_cases.len() < GRID_CASES {
+            assert!(
+                start.elapsed() < Duration::from_secs(30),
+                "SSE replay incomplete: {} of {GRID_CASES} done cases",
+                done_cases.len()
+            );
+            let n = stream.read(&mut chunk).expect("reading SSE stream");
+            assert!(n > 0, "SSE stream closed early");
+            text.push_str(&String::from_utf8_lossy(&chunk[..n]));
+            // Parse complete frames (terminated by a blank line) off
+            // the front; keep the torn tail for the next read.
+            while let Some(end) = text.find("\n\n") {
+                let frame: String = text[..end].to_string();
+                text.drain(..end + 2);
+                let data: String = frame
+                    .lines()
+                    .filter_map(|l| l.strip_prefix("data: "))
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                if data.is_empty() {
+                    continue; // keep-alive comment
+                }
+                let s = Snapshot::from_json(&parse(&data).unwrap()).unwrap();
+                if s.experiment == ID && s.done {
+                    done_cases.insert(s.case_index, s);
+                }
+            }
+        }
+        let finished: u64 = done_cases.values().map(|s| s.finished).sum();
+        let stages: u64 = done_cases.values().map(|s| s.stages).sum();
+        assert_eq!(finished, sidecar.requests.finished, "SSE totals vs sidecar");
+        assert_eq!(stages, sidecar.stages.stages, "SSE totals vs sidecar");
+    }
+
+    // --- Hostile input: 4xx answers, server stays up ----------------
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        stream.write_all(b"COMPLETE GARBAGE\r\n\r\n").unwrap();
+        let (status, _, body) = read_response(&mut stream);
+        assert_eq!(status, 400, "{body}");
+        assert!(parse(&body).unwrap().get("error").is_some());
+    }
+    let (status, _, _) = http_request(&addr, "GET", "/no/such/endpoint", None);
+    assert_eq!(status, 404);
+    let (status, head, _) = http_request(&addr, "DELETE", "/healthz", None);
+    assert_eq!(status, 405);
+    assert!(head.contains("Allow: GET"), "{head}");
+    let (status, _, _) = http_request(&addr, "POST", "/v1/sweeps", Some("not json"));
+    assert_eq!(status, 400);
+    let (status, _, body) =
+        http_request(&addr, "POST", "/v1/sweeps", Some(r#"{"experiment": "nope"}"#));
+    assert_eq!(status, 400);
+    assert!(body.contains("unknown experiment"), "{body}");
+    let (status, _, _) = http_request(&addr, "GET", "/v1/sweeps/999", None);
+    assert_eq!(status, 404);
+    // Still alive after all of that.
+    assert_eq!(get_json(&addr, "/healthz").0, 200);
+
+    // --- Hosted sweep: submit, await, byte-compare ------------------
+    let (status, _, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/sweeps",
+        Some(r#"{"experiment": "exp1", "jobs": 2}"#),
+    );
+    assert_eq!(status, 202, "{body}");
+    let job = parse(&body).unwrap();
+    let job_id = job.req_u64("id").unwrap();
+    assert_eq!(job.req_str("status").unwrap(), "queued");
+    let job_out = std::path::PathBuf::from(job.req_str("out").unwrap());
+    assert_eq!(job_out, serve_out.join(format!("sweep-{job_id}")));
+
+    let final_status = poll_until("hosted sweep to finish", Duration::from_secs(120), || {
+        let (status, v) = get_json(&addr, &format!("/v1/sweeps/{job_id}"));
+        assert_eq!(status, 200);
+        let s = v.req_str("status").unwrap().to_string();
+        (s == "done" || s == "failed").then_some(s)
+    });
+    assert_eq!(final_status, "done");
+    // The hosted run's artifacts are byte-identical to the plain run's:
+    // serving (and the live broadcast it implies) changed nothing.
+    assert_eq!(
+        output_bytes(&plain_hosted_dir, HOSTED_ID),
+        output_bytes(&job_out, HOSTED_ID),
+        "hosted sweep artifacts differ from the unserved run"
+    );
+    // Its snapshots were broadcast in process: the fleet now reports
+    // the hosted experiment complete, with totals matching *its*
+    // sidecar.
+    let hosted_sidecar = ShardTelemetry::load(&job_out.join(HOSTED_ID)).unwrap().unwrap();
+    let (status, fleet_now) = get_json(&addr, "/v1/fleet");
+    assert_eq!(status, 200);
+    let hosted = fleet_exp(&fleet_now, HOSTED_ID).expect("hosted experiment in fleet");
+    assert_eq!(hosted.req_u64("cases_done").unwrap(), GRID_CASES as u64);
+    assert_eq!(
+        hosted.req_u64("finished").unwrap(),
+        hosted_sidecar.requests.finished
+    );
+    assert_eq!(hosted.req_u64("stages").unwrap(), hosted_sidecar.stages.stages);
+    // The sweep list knows the job too.
+    let (_, sweeps) = get_json(&addr, "/v1/sweeps");
+    assert_eq!(
+        sweeps.get("sweeps").and_then(|s| s.as_arr()).unwrap().len(),
+        1
+    );
+
+    server.shutdown();
+    sweep::set_default_jobs(0);
+    live::set_watch(None);
+}
