@@ -1,19 +1,26 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation: stage-oracle
-//! latency (native vs HLO uncached vs HLO memo-cached), Eq. 5 binning
-//! backends, the event engine's stage throughput, and workload
-//! generation.
+//! latency (native vs HLO vs precomputed surface), Eq. 5 binning
+//! backends, the event engine on both schedulers (calendar queue vs
+//! reference heap), and workload generation. Emits
+//! `BENCH_hotpath.json` (path overridable via
+//! `REPRO_BENCH_HOTPATH_OUT`) so CI can compare against the committed
+//! baseline and flag >2× regressions on the tracked cases.
 
 use vidur_energy::config::simconfig::{Arrival, CostModelKind, ExecParams, LengthDist, SimConfig};
 use vidur_energy::config::{gpus, models};
 use vidur_energy::exec::batch::BatchDesc;
 use vidur_energy::exec::hlo::HloCost;
 use vidur_energy::exec::native::NativeCost;
-use vidur_energy::exec::StageCostModel;
+use vidur_energy::exec::surface::{SurfaceCost, SurfaceInner};
+use vidur_energy::exec::{build_cost_model, StageCostModel};
 use vidur_energy::pipeline::{bin_stages, BinningBackend};
 use vidur_energy::sim;
+use vidur_energy::sim::{run_with_sinks, run_with_sinks_heap};
+use vidur_energy::telemetry::{RequestLog, StageLog};
 use vidur_energy::util::bench::{black_box, Bench};
+use vidur_energy::util::json::Value;
 use vidur_energy::util::rng::Rng;
-use vidur_energy::workload::WorkloadGenerator;
+use vidur_energy::workload::{Trace, WorkloadGenerator};
 
 fn decode_batch(n: usize, ctx: u32) -> BatchDesc {
     let mut b = BatchDesc::new(
@@ -37,6 +44,13 @@ fn main() {
     let batch = decode_batch(64, 1024);
     bench.case("native stage_cost (64-req decode)", || {
         black_box(NativeCost::compute(&batch))
+    });
+
+    // --- Precomputed surface oracle (warm table) ---
+    let mut surface = SurfaceCost::with_inner(SurfaceInner::Native);
+    surface.stage_cost(&batch); // build the table outside the timed loop
+    bench.case("surface stage_cost (64-req decode)", || {
+        black_box(surface.stage_cost(&batch))
     });
 
     if artifacts {
@@ -69,6 +83,13 @@ fn main() {
         || sim::run(&cfg).unwrap().stagelog.len(),
         |n| format!("{n} stages"),
     );
+    let mut cfg_surface = cfg.clone();
+    cfg_surface.cost_model = CostModelKind::Surface;
+    bench.case_with_metric(
+        "event engine, 2k requests (surface)",
+        || sim::run(&cfg_surface).unwrap().stagelog.len(),
+        |n| format!("{n} stages"),
+    );
     if artifacts {
         let mut cfg_hlo = cfg.clone();
         cfg_hlo.cost_model = CostModelKind::Hlo;
@@ -78,6 +99,50 @@ fn main() {
             |n| format!("{n} stages"),
         );
     }
+
+    // --- Scheduler differential: calendar queue vs reference heap on
+    // the identical trace (both paths include sink overhead, so the
+    // delta isolates the event scheduler itself) ---
+    let trace = {
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        Trace::new(gen.generate(cfg.num_requests))
+    };
+    bench.case_with_metric(
+        "engine scheduler: calendar queue",
+        || {
+            let mut stages = StageLog::new();
+            let mut reqs = RequestLog::new(&cfg);
+            let mut src = trace.clone().into_source();
+            let run = run_with_sinks(
+                &cfg,
+                &mut src,
+                build_cost_model(&cfg).unwrap(),
+                &mut stages,
+                &mut reqs,
+            )
+            .unwrap();
+            run.metrics.stage_count
+        },
+        |n| format!("{n} stages"),
+    );
+    bench.case_with_metric(
+        "engine scheduler: binary heap",
+        || {
+            let mut stages = StageLog::new();
+            let mut reqs = RequestLog::new(&cfg);
+            let mut src = trace.clone().into_source();
+            let run = run_with_sinks_heap(
+                &cfg,
+                &mut src,
+                build_cost_model(&cfg).unwrap(),
+                &mut stages,
+                &mut reqs,
+            )
+            .unwrap();
+            run.metrics.stage_count
+        },
+        |n| format!("{n} stages"),
+    );
 
     // --- Eq. 5 binning backends over a real stage log ---
     let out = sim::run(&cfg).unwrap();
@@ -109,5 +174,28 @@ fn main() {
         black_box(g.generate(10_000).len())
     });
 
-    bench.run();
+    let results = bench.run();
+
+    // Persist the trajectory point for CI's regression gate.
+    let mut cases = Vec::new();
+    for r in &results {
+        let mut c = Value::obj();
+        c.set("name", r.name.as_str())
+            .set("iters", r.iters)
+            .set("mean_s", r.mean_s)
+            .set("p50_s", r.p50_s)
+            .set("p99_s", r.p99_s)
+            .set("std_s", r.std_s)
+            .set("metric", r.metric.as_str());
+        cases.push(c);
+    }
+    let mut v = Value::obj();
+    v.set("bench", "hotpath")
+        .set("fast", std::env::var("REPRO_BENCH_FAST").is_ok())
+        .set("artifacts", artifacts)
+        .set("cases", Value::Arr(cases));
+    let out = std::env::var("REPRO_BENCH_HOTPATH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&out, v.pretty()).unwrap();
+    eprintln!("wrote {out}");
 }

@@ -1,9 +1,10 @@
 //! Bench: the parallel sweep executor on the Exp. 1 grid — serial vs
 //! 4-worker wall clock (acceptance: ≥2× at 4 workers on a 4-core
-//! machine), plus the telemetry memory story (peak resident stage
-//! records, materialized vs streaming). Emits `BENCH_sweep.json`
-//! (path overridable via `REPRO_BENCH_OUT`) so CI accumulates a perf
-//! trajectory across PRs.
+//! machine), the surface-oracle single-core speedup on the same grid
+//! (the perf_opt contract, DESIGN.md §12), plus the telemetry memory
+//! story (peak resident stage records, materialized vs streaming).
+//! Emits `BENCH_sweep.json` (path overridable via `REPRO_BENCH_OUT`)
+//! so CI accumulates a perf trajectory across PRs.
 
 use std::time::Instant;
 use vidur_energy::config::simconfig::{CostModelKind, SimConfig};
@@ -54,6 +55,23 @@ fn main() {
     let serial_s = t0.elapsed().as_secs_f64();
     eprintln!("  serial  ({n} cases): {}", fmt_time(serial_s));
 
+    // Same grid, single core, surface oracle: the hot path answers
+    // stage costs from the precomputed surface instead of re-deriving
+    // them per stage. Energy is recorded as a relative delta (the
+    // surface is an approximation of its inner oracle, not bit-equal).
+    let surface_cfgs: Vec<SimConfig> = cfgs
+        .iter()
+        .map(|c| {
+            let mut c = c.clone();
+            c.cost_model = CostModelKind::Surface;
+            c
+        })
+        .collect();
+    let t0 = Instant::now();
+    let surface = run_cases_on(&SweepExecutor::new(1), surface_cfgs).unwrap();
+    let serial_surface_s = t0.elapsed().as_secs_f64();
+    eprintln!("  surface ({n} cases): {}", fmt_time(serial_surface_s));
+
     const JOBS: usize = 4;
     let t0 = Instant::now();
     let parallel = run_cases_on(&SweepExecutor::new(JOBS), cfgs).unwrap();
@@ -79,6 +97,9 @@ fn main() {
         .unwrap() as u64;
 
     let speedup = serial_s / parallel_s.max(1e-9);
+    let speedup_surface = serial_s / serial_surface_s.max(1e-9);
+    let surface_energy_rel =
+        (total_energy(&surface) - total_energy(&serial)).abs() / total_energy(&serial).max(1e-12);
     println!("\n## bench: sweep_executor\n");
     println!("| case | wall | cases/s | metric |");
     println!("|---|---|---|---|");
@@ -87,6 +108,11 @@ fn main() {
         fmt_time(serial_s),
         n as f64 / serial_s,
         n
+    );
+    println!(
+        "| surface oracle | {} | {:.2} | speedup {speedup_surface:.2}x, energy Δ {surface_energy_rel:.2e} |",
+        fmt_time(serial_surface_s),
+        n as f64 / serial_surface_s
     );
     println!(
         "| {JOBS} workers | {} | {:.2} | speedup {speedup:.2}x |",
@@ -103,8 +129,11 @@ fn main() {
         .set("grid_cases", n as u64)
         .set("jobs", JOBS as u64)
         .set("serial_s", serial_s)
+        .set("serial_surface_s", serial_surface_s)
         .set("parallel_s", parallel_s)
         .set("speedup", speedup)
+        .set("speedup_surface", speedup_surface)
+        .set("surface_energy_rel_delta", surface_energy_rel)
         .set("cases_per_sec_serial", n as f64 / serial_s)
         .set("cases_per_sec_parallel", n as f64 / parallel_s)
         .set("peak_stage_records_materialized", peak_records)

@@ -65,6 +65,10 @@ pub enum CostModelKind {
     /// AOT-compiled JAX/Pallas stage oracle via PJRT (default; the
     /// three-layer architecture's request-path artifact).
     Hlo,
+    /// Interpolated cost surface (DESIGN.md §12): per-config tables
+    /// sampled once from an inner oracle (HLO when artifacts are
+    /// present, else native) and shared across sweep workers.
+    Surface,
 }
 
 /// Execution-model calibration knobs (see DESIGN.md §5 — substitutes
@@ -250,6 +254,7 @@ impl SimConfig {
                 match self.cost_model {
                     CostModelKind::Native => "native",
                     CostModelKind::Hlo => "hlo",
+                    CostModelKind::Surface => "surface",
                 },
             )
             .set("batch_cap", self.batch_cap)
@@ -385,6 +390,7 @@ impl SimConfig {
             cost_model: match gs("cost_model", "hlo").as_str() {
                 "native" => CostModelKind::Native,
                 "hlo" => CostModelKind::Hlo,
+                "surface" => CostModelKind::Surface,
                 k => bail!("unknown cost model '{k}'"),
             },
             batch_cap: gu("batch_cap", d.batch_cap as u64) as usize,

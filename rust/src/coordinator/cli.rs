@@ -19,6 +19,7 @@
 use crate::config::simconfig::{Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig};
 use crate::coordinator::{multiregion, policy};
 use crate::energy::EnergyAccountant;
+use crate::exec;
 use crate::experiments;
 use crate::report;
 use crate::sim;
@@ -111,13 +112,31 @@ pub fn apply_sim_overrides(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     if args.get("pd-ratio").is_some() {
         cfg.prefill_decode_ratio = Some(args.f64_or("pd-ratio", 4.0)?);
     }
-    cfg.cost_model = match args.str_or("cost-model", "hlo").as_str() {
-        "native" => CostModelKind::Native,
-        "hlo" => CostModelKind::Hlo,
-        other => bail!("unknown --cost-model '{other}' (native|hlo)"),
-    };
+    cfg.cost_model = parse_oracle_kind(&args.str_or("cost-model", "hlo"), "--cost-model")?;
     cfg.exec.rf_noise_std = args.f64_or("rf-noise", cfg.exec.rf_noise_std)?;
     cfg.validate()
+}
+
+fn parse_oracle_kind(s: &str, flag: &str) -> Result<CostModelKind> {
+    Ok(match s {
+        "native" => CostModelKind::Native,
+        "hlo" => CostModelKind::Hlo,
+        "surface" => CostModelKind::Surface,
+        other => bail!("unknown {flag} '{other}' (native|hlo|surface)"),
+    })
+}
+
+/// Apply the process-wide stage-oracle override: `--oracle
+/// <native|hlo|surface>` wins over every config's `cost_model` —
+/// including the per-case configs that experiment grids build
+/// internally, which `--cost-model` cannot reach. Absent = no
+/// override.
+fn apply_oracle(args: &Args) -> Result<()> {
+    match args.get("oracle") {
+        Some(s) => exec::set_oracle_override(Some(parse_oracle_kind(s, "--oracle")?)),
+        None => exec::set_oracle_override(None),
+    }
+    Ok(())
 }
 
 fn sim_opts() -> Vec<OptSpec> {
@@ -132,7 +151,8 @@ fn sim_opts() -> Vec<OptSpec> {
         OptSpec { name: "batch-cap", help: "max batch size", default: Some("128") },
         OptSpec { name: "fixed-len", help: "fixed total tokens per request", default: None },
         OptSpec { name: "pd-ratio", help: "prefill:decode ratio", default: None },
-        OptSpec { name: "cost-model", help: "stage oracle: hlo|native", default: Some("hlo") },
+        OptSpec { name: "cost-model", help: "stage oracle: hlo|native|surface", default: Some("hlo") },
+        OptSpec { name: "oracle", help: "process-wide oracle override (native|hlo|surface)", default: None },
         OptSpec { name: "rf-noise", help: "lognormal latency noise sigma", default: Some("0") },
         OptSpec { name: "seed", help: "rng seed", default: None },
         OptSpec { name: "stagelog", help: "write per-stage CSV here (materializes the run)", default: None },
@@ -145,6 +165,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         print!("{}", usage("repro simulate", "one inference run", &sim_opts()));
         return Ok(());
     }
+    apply_oracle(args)?;
     let mut cfg = match args.get("config") {
         Some(path) => SimConfig::load(path)?,
         None => SimConfig::default(),
@@ -211,6 +232,7 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
              --shard <k/N> run only policies k, k+N, … of the sweep (merge with `repro merge`)\n  \
              --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
              --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
+             --oracle <native|hlo|surface>  override every case's stage oracle\n  \
              --fast        compressed evening-window scenario"
         );
         return Ok(());
@@ -218,6 +240,7 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
     apply_jobs(args)?;
     apply_shard(args)?;
     apply_watch(args)?;
+    apply_oracle(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
     // The save() call already printed the markdown table; surface the
@@ -249,12 +272,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         bail!(
             "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|all> \
              [--out results] [--fast] [--jobs N] [--shard k/N] \
-             [--watch[=stderr|json:PATH]] [--watch-cadence s]"
+             [--watch[=stderr|json:PATH]] [--watch-cadence s] [--oracle native|hlo|surface]"
         );
     };
     apply_jobs(args)?;
     apply_shard(args)?;
     apply_watch(args)?;
+    apply_oracle(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     experiments::run_by_id(id, &out_dir, args.has("fast"))
 }
@@ -590,6 +614,33 @@ mod tests {
     fn bad_model_rejected() {
         let mut cfg = SimConfig::default();
         assert!(apply_sim_overrides(&mut cfg, &args(&["--model", "gpt9"])).is_err());
+    }
+
+    /// `--cost-model surface` parses; `--oracle` values parse or fail
+    /// loudly. The override global itself stays None here — setting it
+    /// would race with concurrently running engine tests that build
+    /// cost models.
+    #[test]
+    fn oracle_flags_parse() {
+        let mut cfg = SimConfig::default();
+        apply_sim_overrides(&mut cfg, &args(&["--cost-model", "surface"])).unwrap();
+        assert_eq!(cfg.cost_model, CostModelKind::Surface);
+        assert!(apply_sim_overrides(&mut cfg, &args(&["--cost-model", "rf"])).is_err());
+
+        assert_eq!(
+            parse_oracle_kind("native", "--oracle").unwrap(),
+            CostModelKind::Native
+        );
+        assert_eq!(
+            parse_oracle_kind("surface", "--oracle").unwrap(),
+            CostModelKind::Surface
+        );
+        assert!(parse_oracle_kind("rf", "--oracle").is_err());
+        // A bad --oracle value fails before touching the global.
+        assert!(apply_oracle(&args(&["--oracle", "rf"])).is_err());
+        // Absent flag clears the override (the default state).
+        apply_oracle(&args(&[])).unwrap();
+        assert_eq!(exec::oracle_override(), None);
     }
 
     #[test]

@@ -46,29 +46,35 @@ impl BatchDesc {
         }
     }
 
+    #[inline]
     pub fn clear(&mut self) {
         self.new_tokens.clear();
         self.context.clear();
     }
 
+    #[inline]
     pub fn push(&mut self, new_tokens: u32, context: u32) {
         assert!(self.new_tokens.len() < R_MAX, "batch exceeds R_MAX");
         self.new_tokens.push(new_tokens);
         self.context.push(context);
     }
 
+    #[inline]
     pub fn len(&self) -> usize {
         self.new_tokens.len()
     }
+    #[inline]
     pub fn is_empty(&self) -> bool {
         self.new_tokens.is_empty()
     }
 
+    #[inline]
     pub fn total_new_tokens(&self) -> u64 {
         self.new_tokens.iter().map(|&t| t as u64).sum()
     }
 
     /// Count of requests doing prefill (chunk > 1) vs decode (1 token).
+    #[inline]
     pub fn prefill_count(&self) -> usize {
         self.new_tokens.iter().filter(|&&t| t > 1).count()
     }
@@ -95,6 +101,7 @@ impl BatchDesc {
 
     /// Eq. 1 power at a given MFU (used by the noise wrapper to keep
     /// power consistent after perturbing latency).
+    #[inline]
     pub fn gpu_power(&self, mfu: f64) -> f64 {
         self.gpu.power(mfu)
     }

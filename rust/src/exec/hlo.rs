@@ -6,38 +6,62 @@
 //! count sublinear in simulated stages: batch compositions are rounded
 //! to token buckets (context to 256, prefill chunks to 128 — both far
 //! below the weight-read term they perturb), sorted, hashed, and looked
-//! up before falling back to execution.
+//! up before falling back to execution. The cache is a two-generation
+//! [`SegmentedMemo`] (second-chance eviction), so overflow drops only
+//! the cold half instead of resetting the hot working set.
+//!
+//! Hot-path allocation: zero. The canonical-pairs scratch is a reused
+//! field, and a last-call fast path skips the quantize/sort/hash
+//! rebuild entirely when the raw batch composition and config repeat —
+//! the common steady-decode case, where consecutive stages price the
+//! identical batch.
 
 use super::batch::{BatchDesc, StageCost, R_MAX};
+use super::memo::SegmentedMemo;
 use super::{OracleStats, StageCostModel};
 use crate::runtime::pjrt::cached_executable;
 use crate::runtime::Executable;
 use anyhow::Result;
-use std::rc::Rc;
-use std::collections::HashMap;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::rc::Rc;
 
 /// Context-length quantization bucket (tokens).
 const CTX_BUCKET: u32 = 256;
 /// Prefill-chunk quantization bucket (tokens).
 const PREFILL_BUCKET: u32 = 128;
-/// Cache entries beyond which the memo table is reset.
+/// Memo resident-entry ceiling. Split across the two generations of
+/// the segmented cache (per-generation capacity `CACHE_CAP / 2`), so
+/// the memory bound matches the old clear-on-overflow limit.
 const CACHE_CAP: usize = 1 << 20;
 
 pub struct HloCost {
     exe: Rc<Executable>,
-    cache: HashMap<u64, StageCost>,
+    cache: SegmentedMemo<StageCost>,
     /// Reused padded input buffers (zero-allocation hot path).
     nt_buf: Vec<f32>,
     ctx_buf: Vec<f32>,
     act_buf: Vec<f32>,
     /// Quantization on/off (exact signatures when off).
     quantize: bool,
+    /// Reused canonical-pairs scratch; always holds the pairs of the
+    /// most recent signature (`last_sig`), so a fast-path hit can still
+    /// execute on a memo miss.
+    pairs: Vec<(u32, u32)>,
+    /// Raw composition + config of the previous call: when they repeat
+    /// exactly, `last_sig` is reused without rebuilding the pairs.
+    last_nt: Vec<u32>,
+    last_ctx: Vec<u32>,
+    last_tp: u32,
+    last_pp: u32,
+    last_model: &'static str,
+    last_gpu: &'static str,
+    last_flops_eff: u64,
+    last_t_overhead: u64,
+    last_sig: u64,
+    has_last: bool,
     pub calls: u64,
     pub hits: u64,
-    /// Times the memo table overflowed `CACHE_CAP` and was cleared.
-    pub resets: u64,
 }
 
 impl HloCost {
@@ -45,14 +69,24 @@ impl HloCost {
         let exe = cached_executable("stage_oracle")?;
         Ok(HloCost {
             exe,
-            cache: HashMap::new(),
+            cache: SegmentedMemo::new(CACHE_CAP / 2),
             nt_buf: vec![0.0; R_MAX],
             ctx_buf: vec![0.0; R_MAX],
             act_buf: vec![0.0; R_MAX],
             quantize: true,
+            pairs: Vec::with_capacity(R_MAX),
+            last_nt: Vec::with_capacity(R_MAX),
+            last_ctx: Vec::with_capacity(R_MAX),
+            last_tp: 0,
+            last_pp: 0,
+            last_model: "",
+            last_gpu: "",
+            last_flops_eff: 0,
+            last_t_overhead: 0,
+            last_sig: 0,
+            has_last: false,
             calls: 0,
             hits: 0,
-            resets: 0,
         })
     }
 
@@ -61,6 +95,11 @@ impl HloCost {
     pub fn exact(mut self) -> Self {
         self.quantize = false;
         self
+    }
+
+    /// Times the memo overflowed and dropped its cold generation.
+    pub fn resets(&self) -> u64 {
+        self.cache.resets
     }
 
     /// Build the canonical (quantized) batch representation used both
@@ -73,9 +112,9 @@ impl HloCost {
     /// to the sum bucket (512 tokens of KV ≈ 0.4% of one weight read).
     /// Prefill entries keep per-request identity (the t² causal term
     /// is nonlinear) with chunk/context bucketing.
-    fn signature(&self, batch: &BatchDesc, pairs: &mut Vec<(u32, u32)>) -> u64 {
+    fn signature(quantize: bool, batch: &BatchDesc, pairs: &mut Vec<(u32, u32)>) -> u64 {
         pairs.clear();
-        if !self.quantize {
+        if !quantize {
             for i in 0..batch.len() {
                 pairs.push((batch.new_tokens[i], batch.context[i]));
             }
@@ -114,11 +153,42 @@ impl HloCost {
         h.finish()
     }
 
-    fn execute(&mut self, pairs: &[(u32, u32)], batch: &BatchDesc) -> Result<StageCost> {
+    /// True when `batch` is byte-for-byte the previous call's input —
+    /// the signature is guaranteed unchanged and need not be rebuilt.
+    #[inline]
+    fn same_as_last(&self, batch: &BatchDesc) -> bool {
+        self.has_last
+            && self.last_tp == batch.tp
+            && self.last_pp == batch.pp
+            && self.last_model == batch.model.name
+            && self.last_gpu == batch.gpu.name
+            && self.last_flops_eff == batch.exec.flops_eff.to_bits()
+            && self.last_t_overhead == batch.exec.t_overhead.to_bits()
+            && self.last_nt == batch.new_tokens
+            && self.last_ctx == batch.context
+    }
+
+    #[inline]
+    fn remember(&mut self, batch: &BatchDesc, sig: u64) {
+        self.last_nt.clear();
+        self.last_nt.extend_from_slice(&batch.new_tokens);
+        self.last_ctx.clear();
+        self.last_ctx.extend_from_slice(&batch.context);
+        self.last_tp = batch.tp;
+        self.last_pp = batch.pp;
+        self.last_model = batch.model.name;
+        self.last_gpu = batch.gpu.name;
+        self.last_flops_eff = batch.exec.flops_eff.to_bits();
+        self.last_t_overhead = batch.exec.t_overhead.to_bits();
+        self.last_sig = sig;
+        self.has_last = true;
+    }
+
+    fn execute(&mut self, batch: &BatchDesc) -> Result<StageCost> {
         self.nt_buf.iter_mut().for_each(|x| *x = 0.0);
         self.ctx_buf.iter_mut().for_each(|x| *x = 0.0);
         self.act_buf.iter_mut().for_each(|x| *x = 0.0);
-        for (i, &(nt, ctx)) in pairs.iter().enumerate() {
+        for (i, &(nt, ctx)) in self.pairs.iter().enumerate() {
             self.nt_buf[i] = nt as f32;
             self.ctx_buf[i] = ctx as f32;
             self.act_buf[i] = 1.0;
@@ -145,20 +215,23 @@ impl HloCost {
 impl StageCostModel for HloCost {
     fn stage_cost(&mut self, batch: &BatchDesc) -> StageCost {
         debug_assert!(batch.len() <= R_MAX);
-        let mut pairs = Vec::with_capacity(batch.len());
-        let sig = self.signature(batch, &mut pairs);
         self.calls += 1;
-        if let Some(c) = self.cache.get(&sig) {
+        let sig = if self.same_as_last(batch) {
+            self.last_sig
+        } else {
+            let mut pairs = std::mem::take(&mut self.pairs);
+            let sig = Self::signature(self.quantize, batch, &mut pairs);
+            self.pairs = pairs;
+            self.remember(batch, sig);
+            sig
+        };
+        if let Some(c) = self.cache.get(sig) {
             self.hits += 1;
-            return *c;
+            return c;
         }
         let cost = self
-            .execute(&pairs, batch)
+            .execute(batch)
             .expect("stage oracle execution failed");
-        if self.cache.len() >= CACHE_CAP {
-            self.cache.clear();
-            self.resets += 1;
-        }
         self.cache.insert(sig, cost);
         cost
     }
@@ -171,7 +244,8 @@ impl StageCostModel for HloCost {
         OracleStats {
             calls: self.calls,
             hits: self.hits,
-            resets: self.resets,
+            resets: self.cache.resets,
+            ..Default::default()
         }
     }
 }

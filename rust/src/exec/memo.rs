@@ -1,0 +1,153 @@
+//! Segmented (second-chance) memo cache for the stage oracles.
+//!
+//! The previous eviction policy was `HashMap::clear()` on overflow:
+//! one cold signature past `CACHE_CAP` discarded every hot entry and
+//! forced the oracle to re-execute the steady-state working set —
+//! visible in telemetry as reset thrash. `SegmentedMemo` keeps two
+//! generations instead: inserts land in `cur`; when `cur` fills, it
+//! becomes `prev` and only the *old* `prev` (entries not touched for a
+//! full generation) is dropped. A hit in `prev` promotes the entry
+//! back into `cur`, so anything accessed at least once per generation
+//! survives forever.
+//!
+//! Invariant (pinned by `working_set_within_cap_never_resets`): a
+//! working set of at most `cap` distinct keys never loses an entry and
+//! never increments `resets`. Worst-case resident size is `2 * cap`
+//! (both segments full), so callers size `cap` at half their old
+//! hard limit to keep the same memory ceiling.
+
+use std::collections::HashMap;
+
+/// Two-generation memo map with second-chance eviction.
+#[derive(Debug)]
+pub struct SegmentedMemo<V> {
+    cur: HashMap<u64, V>,
+    prev: HashMap<u64, V>,
+    cap: usize,
+    /// Rotations that actually dropped entries (a non-empty old
+    /// generation was discarded). Rotations of an empty `prev` are
+    /// free and not counted.
+    pub resets: u64,
+}
+
+impl<V: Copy> SegmentedMemo<V> {
+    /// `cap` is the per-generation capacity; resident size is bounded
+    /// by `2 * cap`.
+    pub fn new(cap: usize) -> Self {
+        SegmentedMemo {
+            cur: HashMap::new(),
+            prev: HashMap::new(),
+            cap: cap.max(1),
+            resets: 0,
+        }
+    }
+
+    /// Look `key` up in either generation; a `prev` hit promotes the
+    /// entry into `cur` so it survives the next rotation.
+    #[inline]
+    pub fn get(&mut self, key: u64) -> Option<V> {
+        if let Some(&v) = self.cur.get(&key) {
+            return Some(v);
+        }
+        if let Some(v) = self.prev.remove(&key) {
+            self.insert(key, v);
+            return Some(v);
+        }
+        None
+    }
+
+    /// Insert `key`, rotating generations when `cur` is full.
+    #[inline]
+    pub fn insert(&mut self, key: u64, value: V) {
+        if self.cur.len() >= self.cap && !self.cur.contains_key(&key) {
+            let dropped = std::mem::take(&mut self.prev);
+            if !dropped.is_empty() {
+                self.resets += 1;
+            }
+            self.prev = std::mem::take(&mut self.cur);
+        }
+        self.cur.insert(key, value);
+    }
+
+    /// Total resident entries across both generations.
+    pub fn len(&self) -> usize {
+        self.cur.len() + self.prev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cur.is_empty() && self.prev.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn working_set_within_cap_never_resets() {
+        // The satellite invariant: a working set <= cap cycles forever
+        // without losing a single entry or counting a reset.
+        let cap = 8;
+        let mut memo: SegmentedMemo<u64> = SegmentedMemo::new(cap);
+        for round in 0..50 {
+            for k in 0..cap as u64 {
+                match memo.get(k) {
+                    Some(v) => assert_eq!(v, k * 10),
+                    None => {
+                        assert_eq!(round, 0, "entry {k} lost after round {round}");
+                        memo.insert(k, k * 10);
+                    }
+                }
+            }
+        }
+        assert_eq!(memo.resets, 0);
+        assert_eq!(memo.len(), cap);
+    }
+
+    #[test]
+    fn overflow_keeps_recent_generation() {
+        let mut memo: SegmentedMemo<u64> = SegmentedMemo::new(4);
+        // Fill two full generations (8 distinct cold keys).
+        for k in 0..8 {
+            memo.insert(k, k);
+        }
+        // No entries dropped yet: first rotation retired an empty prev.
+        assert_eq!(memo.resets, 0);
+        assert_eq!(memo.len(), 8);
+        // A third generation drops the oldest four, keeps 4..8.
+        for k in 8..12 {
+            memo.insert(k, k);
+        }
+        assert_eq!(memo.resets, 1);
+        for k in 4..12 {
+            assert_eq!(memo.get(k), Some(k), "recent key {k} evicted");
+        }
+        for k in 0..4 {
+            assert_eq!(memo.get(k), None, "cold key {k} survived");
+        }
+    }
+
+    #[test]
+    fn prev_hit_promotes() {
+        let mut memo: SegmentedMemo<u64> = SegmentedMemo::new(2);
+        memo.insert(1, 11);
+        memo.insert(2, 22);
+        memo.insert(3, 33); // rotates: prev = {1, 2}
+        assert_eq!(memo.get(1), Some(11)); // promoted into cur
+        memo.insert(4, 44); // rotates: prev = {1, 3}; {2} dropped
+        memo.insert(5, 55);
+        assert_eq!(memo.get(1), Some(11), "promoted entry lost");
+        assert_eq!(memo.get(2), None);
+    }
+
+    #[test]
+    fn resident_bounded_by_two_cap() {
+        let cap = 16;
+        let mut memo: SegmentedMemo<u64> = SegmentedMemo::new(cap);
+        for k in 0..10_000 {
+            memo.insert(k, k);
+            assert!(memo.len() <= 2 * cap);
+        }
+        assert!(memo.resets > 0);
+    }
+}

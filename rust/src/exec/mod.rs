@@ -1,26 +1,33 @@
 //! Execution-time / MFU / power oracle for batch stages.
 //!
-//! Two interchangeable backends behind [`StageCostModel`]:
+//! Three interchangeable backends behind [`StageCostModel`]:
 //! * [`native::NativeCost`] — pure-rust analytical roofline (mirrors
 //!   python/compile/kernels/ref.py exactly; used for cross-checking and
 //!   fast sweeps);
 //! * [`hlo::HloCost`] — the AOT-compiled JAX/Pallas stage oracle
 //!   executed via PJRT (the three-layer architecture's default hot
-//!   path), with a quantized-signature memo cache.
+//!   path), with a quantized-signature memo cache;
+//! * [`surface::SurfaceCost`] — the interpolated cost surface
+//!   (DESIGN.md §12): per-config tables sampled once from an inner
+//!   oracle and shared process-wide, reducing each stage query to an
+//!   O(batch) aggregate pass + bilinear interpolation.
 //!
-//! Both substitute Vidur's random-forest runtime predictor (see
+//! All substitute Vidur's random-forest runtime predictor (see
 //! DESIGN.md §5); an optional log-normal noise layer emulates the
 //! learned predictor's spread.
 
 pub mod batch;
+pub mod memo;
 pub mod native;
 pub mod hlo;
+pub mod surface;
 
 pub use batch::{BatchDesc, StageCost};
 
-use crate::config::simconfig::SimConfig;
+use crate::config::simconfig::{CostModelKind, SimConfig};
 use crate::util::json::Value;
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Memo-cache statistics of a cost oracle: every `stage_cost` call,
 /// how many were served from the cache, and how often the cache was
@@ -32,6 +39,11 @@ pub struct OracleStats {
     pub calls: u64,
     pub hits: u64,
     pub resets: u64,
+    /// Cost-surface tables built ([`surface::SurfaceCost`]); zero for
+    /// the other backends. Summed across a sweep's cases, this is the
+    /// number of distinct configurations priced (each built once
+    /// process-wide, regardless of `--jobs`).
+    pub surface_builds: u64,
 }
 
 impl OracleStats {
@@ -48,6 +60,7 @@ impl OracleStats {
         self.calls += other.calls;
         self.hits += other.hits;
         self.resets += other.resets;
+        self.surface_builds += other.surface_builds;
     }
 
     pub fn to_json(&self) -> Value {
@@ -55,18 +68,24 @@ impl OracleStats {
         v.set("calls", self.calls)
             .set("hits", self.hits)
             .set("resets", self.resets)
+            .set("surface_builds", self.surface_builds)
             .set("hit_rate", self.hit_rate());
         v
     }
 
     /// Reload stats serialized by [`OracleStats::to_json`] (the shard
     /// telemetry sidecar / merged `meta.json`). `hit_rate` is derived,
-    /// not stored.
+    /// not stored; `surface_builds` is optional so sidecars written
+    /// before the surface oracle existed still parse.
     pub fn from_json(v: &Value) -> crate::Result<OracleStats> {
         Ok(OracleStats {
             calls: v.req_u64("calls")?,
             hits: v.req_u64("hits")?,
             resets: v.req_u64("resets")?,
+            surface_builds: v
+                .get("surface_builds")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0),
         })
     }
 }
@@ -126,13 +145,40 @@ impl<M: StageCostModel> StageCostModel for NoisyCost<M> {
     }
 }
 
-/// Build the configured cost model (native or HLO-oracle), wrapped in
-/// noise when `exec.rf_noise_std > 0`.
+/// Process-wide oracle override (`--oracle` on the CLI): when set, it
+/// wins over every `SimConfig::cost_model` — the lever that lets one
+/// flag retarget experiment suites whose grids build their own
+/// configs. Same process-global pattern as `sweep::set_default_jobs`.
+static ORACLE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_oracle_override(kind: Option<CostModelKind>) {
+    let v = match kind {
+        None => 0,
+        Some(CostModelKind::Native) => 1,
+        Some(CostModelKind::Hlo) => 2,
+        Some(CostModelKind::Surface) => 3,
+    };
+    ORACLE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+pub fn oracle_override() -> Option<CostModelKind> {
+    match ORACLE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Some(CostModelKind::Native),
+        2 => Some(CostModelKind::Hlo),
+        3 => Some(CostModelKind::Surface),
+        _ => None,
+    }
+}
+
+/// Build the configured cost model (native, HLO-oracle, or surface),
+/// wrapped in noise when `exec.rf_noise_std > 0`. A process-wide
+/// [`set_oracle_override`] takes precedence over the config.
 pub fn build_cost_model(cfg: &SimConfig) -> crate::Result<Box<dyn StageCostModel>> {
-    use crate::config::simconfig::CostModelKind;
-    let base: Box<dyn StageCostModel> = match cfg.cost_model {
+    let kind = oracle_override().unwrap_or(cfg.cost_model);
+    let base: Box<dyn StageCostModel> = match kind {
         CostModelKind::Native => Box::new(native::NativeCost::new()),
         CostModelKind::Hlo => Box::new(hlo::HloCost::new()?),
+        CostModelKind::Surface => Box::new(surface::SurfaceCost::new()),
     };
     if cfg.exec.rf_noise_std > 0.0 {
         Ok(Box::new(NoisyBox {

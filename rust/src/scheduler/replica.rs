@@ -193,26 +193,48 @@ impl ReplicaScheduler {
     }
 
     /// Plan the next batch stage, or None if nothing can run.
+    ///
+    /// Allocating convenience wrapper around
+    /// [`Self::next_stage_into`] (the engine hot path uses the latter
+    /// with a pooled vector; see `sim::arena`).
     pub fn next_stage<S: RequestStore + ?Sized>(
         &mut self,
         reqs: &mut S,
         now: f64,
     ) -> Option<StagePlan> {
+        let mut entries = Vec::new();
+        let kind = self.next_stage_into(&mut *reqs, now, &mut entries)?;
+        Some(StagePlan { entries, kind })
+    }
+
+    /// Plan the next batch stage into a caller-provided (cleared)
+    /// entries buffer; returns the stage kind, or None if nothing can
+    /// run (the buffer is left empty in that case).
+    pub fn next_stage_into<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        now: f64,
+        entries: &mut Vec<(u64, u32)>,
+    ) -> Option<StageKind> {
+        entries.clear();
         self.admit(&mut *reqs, now);
         if self.running.is_empty() {
             return None;
         }
         match self.kind {
-            SchedulerKind::Vllm => self.plan_vllm(&mut *reqs),
-            SchedulerKind::Sarathi => self.plan_sarathi(&mut *reqs),
-            SchedulerKind::Orca => self.plan_orca(&mut *reqs),
+            SchedulerKind::Vllm => self.plan_vllm(&mut *reqs, entries),
+            SchedulerKind::Sarathi => self.plan_sarathi(&mut *reqs, entries),
+            SchedulerKind::Orca => self.plan_orca(&mut *reqs, entries),
         }
     }
 
-    fn plan_vllm<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
+    fn plan_vllm<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        entries: &mut Vec<(u64, u32)>,
+    ) -> Option<StageKind> {
         // Prefill-prioritized: if any running request still has prompt
         // tokens, run a prefill-only stage (whole prompts, token budget).
-        let mut entries = Vec::new();
         let mut budget = MAX_BATCHED_TOKENS;
         for &id in &self.running {
             let r = reqs.req(id);
@@ -224,15 +246,16 @@ impl ReplicaScheduler {
             }
         }
         if !entries.is_empty() {
-            return Some(StagePlan {
-                entries,
-                kind: StageKind::Prefill,
-            });
+            return Some(StageKind::Prefill);
         }
-        self.plan_decode(&mut *reqs)
+        self.plan_decode(&mut *reqs, entries)
     }
 
-    fn plan_decode<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
+    fn plan_decode<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        entries: &mut Vec<(u64, u32)>,
+    ) -> Option<StageKind> {
         // Grow KV by one token per running decode request; preempt the
         // youngest on allocation failure.
         loop {
@@ -255,27 +278,27 @@ impl ReplicaScheduler {
                 return None;
             }
         }
-        let entries: Vec<(u64, u32)> = self
-            .running
-            .iter()
-            .filter(|&&id| reqs.req(id).phase() == Phase::Decode)
-            .map(|&id| (id, 1u32))
-            .collect();
+        entries.extend(
+            self.running
+                .iter()
+                .filter(|&&id| reqs.req(id).phase() == Phase::Decode)
+                .map(|&id| (id, 1u32)),
+        );
         if entries.is_empty() {
             None
         } else {
-            Some(StagePlan {
-                entries,
-                kind: StageKind::Decode,
-            })
+            Some(StageKind::Decode)
         }
     }
 
-    fn plan_sarathi<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
+    fn plan_sarathi<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        entries: &mut Vec<(u64, u32)>,
+    ) -> Option<StageKind> {
         // Mixed stage: all decodes first (1 token each), then prefill
         // chunks into the remaining token budget.
-        let decode_plan = self.plan_decode(&mut *reqs);
-        let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
+        self.plan_decode(&mut *reqs, entries);
         let mut budget = self.chunk_size.saturating_sub(entries.len() as u64);
         let had_decodes = !entries.is_empty();
         for &id in &self.running {
@@ -300,7 +323,7 @@ impl ReplicaScheduler {
         } else {
             StageKind::Prefill
         };
-        Some(StagePlan { entries, kind })
+        Some(kind)
     }
 
     fn count_decodes<S: RequestStore + ?Sized>(&self, reqs: &S) -> usize {
@@ -310,11 +333,14 @@ impl ReplicaScheduler {
             .count()
     }
 
-    fn plan_orca<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) -> Option<StagePlan> {
+    fn plan_orca<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        entries: &mut Vec<(u64, u32)>,
+    ) -> Option<StageKind> {
         // Iteration-level mixed batch: full remaining prompts + all
         // decodes, no token budget.
-        let decode_plan = self.plan_decode(&mut *reqs);
-        let mut entries = decode_plan.map(|p| p.entries).unwrap_or_default();
+        self.plan_decode(&mut *reqs, entries);
         let had_decodes = !entries.is_empty();
         let mut had_prefill = false;
         for &id in &self.running {
@@ -333,7 +359,7 @@ impl ReplicaScheduler {
             (true, false) => StageKind::Prefill,
             _ => StageKind::Decode,
         };
-        Some(StagePlan { entries, kind })
+        Some(kind)
     }
 
     fn preempt_youngest<S: RequestStore + ?Sized>(&mut self, reqs: &mut S) {
@@ -350,6 +376,8 @@ impl ReplicaScheduler {
 
     /// Apply a completed stage: advance progress, emit first tokens,
     /// retire finished requests. Returns the finished request ids.
+    ///
+    /// Allocating wrapper around [`Self::complete_stage_into`].
     pub fn complete_stage<S: RequestStore + ?Sized>(
         &mut self,
         reqs: &mut S,
@@ -357,7 +385,22 @@ impl ReplicaScheduler {
         now: f64,
     ) -> Vec<u64> {
         let mut finished = Vec::new();
-        for &(id, nt) in &plan.entries {
+        self.complete_stage_into(&mut *reqs, &plan.entries, now, &mut finished);
+        finished
+    }
+
+    /// Apply a completed stage, appending finished request ids to a
+    /// caller-provided buffer (clear it first; the engine reuses one
+    /// per run).
+    pub fn complete_stage_into<S: RequestStore + ?Sized>(
+        &mut self,
+        reqs: &mut S,
+        entries: &[(u64, u32)],
+        now: f64,
+        finished: &mut Vec<u64>,
+    ) {
+        let first_new = finished.len();
+        for &(id, nt) in entries {
             let r = reqs.req_mut(id);
             if r.prefill_remaining() > 0 {
                 r.prefill_done += nt as u64;
@@ -377,12 +420,11 @@ impl ReplicaScheduler {
                 finished.push(id);
             }
         }
-        for id in &finished {
+        for id in &finished[first_new..] {
             self.kv.release(*id);
             self.running.retain(|x| x != id);
             self.outstanding = self.outstanding.saturating_sub(1);
         }
-        finished
     }
 }
 

@@ -1,0 +1,84 @@
+//! Reusable scratch buffers for the event-loop hot path.
+//!
+//! Steady-state simulation used to allocate on every event: a fresh
+//! `entries` vector per planned stage (inside
+//! `ReplicaScheduler::next_stage`), a `finished` vector per completed
+//! stage, and per-arrival `outstanding`/`eligible` snapshots for the
+//! router. [`StageScratch`] pools all of them: stage-entry vectors
+//! cycle through [`StageScratch::take_entries`] /
+//! [`StageScratch::recycle_entries`] (a plan's vector is reclaimed
+//! when its completion event fires), and the flat buffers are cleared
+//! and refilled in place. After warm-up the per-event allocation
+//! count drops to zero; capacity only grows when a new high-water
+//! mark is hit.
+//!
+//! Rare control-plane paths (autoscale rebalancing, drain rerouting,
+//! scale ticks) still allocate — they fire per decision interval, not
+//! per stage, and keeping them allocation-free would complicate
+//! borrow lifetimes for no measurable gain.
+
+/// Per-engine-run scratch space. Create one per simulation run; the
+/// engine threads it through planning and completion.
+#[derive(Default)]
+pub struct StageScratch {
+    /// Recycled stage-entry vectors (each cleared before pooling).
+    entry_pool: Vec<Vec<(u64, u32)>>,
+    /// Finished-request ids of the stage being completed.
+    pub finished: Vec<u64>,
+    /// Per-replica outstanding counts snapshot for the router.
+    pub outstanding: Vec<u64>,
+    /// Routing-eligible replica indices (autoscaled engine).
+    pub eligible: Vec<usize>,
+}
+
+impl StageScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty entries vector, reusing pooled capacity when available.
+    #[inline]
+    pub fn take_entries(&mut self) -> Vec<(u64, u32)> {
+        self.entry_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a stage's entries vector to the pool once its completion
+    /// has been applied.
+    #[inline]
+    pub fn recycle_entries(&mut self, mut v: Vec<(u64, u32)>) {
+        v.clear();
+        self.entry_pool.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_recycle_preserves_capacity() {
+        let mut s = StageScratch::new();
+        let mut v = s.take_entries();
+        assert!(v.is_empty());
+        for i in 0..100 {
+            v.push((i, 1));
+        }
+        let cap = v.capacity();
+        s.recycle_entries(v);
+        let v2 = s.take_entries();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap, "pooled capacity lost");
+    }
+
+    #[test]
+    fn pool_grows_only_to_high_water_mark() {
+        let mut s = StageScratch::new();
+        let a = s.take_entries();
+        let b = s.take_entries();
+        s.recycle_entries(a);
+        s.recycle_entries(b);
+        assert_eq!(s.entry_pool.len(), 2);
+        let _ = s.take_entries();
+        assert_eq!(s.entry_pool.len(), 1);
+    }
+}

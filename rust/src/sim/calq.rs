@@ -1,0 +1,436 @@
+//! Event queues for the discrete-event cores: the classic binary heap
+//! and a calendar queue (Brown 1988), behind one [`EventQueue`] trait
+//! so the engines are generic over the scheduler and the heap stays
+//! available for differential testing.
+//!
+//! The calendar queue buckets events by time slot (`slot = ⌊at/width⌋`,
+//! bucket = `slot mod nbuckets`): push appends to a bucket, pop scans
+//! forward from the current slot — O(1) amortized for the
+//! near-uniform event streams a simulation produces, vs the heap's
+//! O(log n). Events landing a full calendar lap or more ahead of the
+//! current slot (autoscale ticks, cold-start completions) go to a
+//! sorted *overflow* list and migrate into buckets as the clock
+//! reaches them; when the bucket population outgrows the calendar it
+//! rebuilds with twice the buckets and a width re-estimated from the
+//! populated span (≈3 slots per resident event).
+//!
+//! Ordering contract (pinned by the in-module differential tests and
+//! `rust/tests/calq_parity.rs`): both implementations pop in exactly
+//! the order the engine's original `BinaryHeap<Event>` did — ascending
+//! event time, ties broken by push order via an internal sequence
+//! counter that increments on every push. Equal times always share a
+//! slot, hence a bucket, so the tie-break never crosses structures.
+//!
+//! Discipline: like any discrete-event schedule, events must not be
+//! pushed *before* the most recently popped event time (the engine
+//! only schedules at `now` or later). The calendar relies on this to
+//! advance its clock monotonically and debug-asserts it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event: firing time, push-order sequence, payload.
+struct Event<K> {
+    at: f64,
+    seq: u64,
+    kind: K,
+}
+
+impl<K> PartialEq for Event<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<K> Eq for Event<K> {}
+impl<K> PartialOrd for Event<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<K> Ord for Event<K> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed comparison; ties broken by insertion order.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// `a` pops strictly before `b`.
+#[inline]
+fn earlier<K>(a: &Event<K>, b: &Event<K>) -> bool {
+    match a.at.partial_cmp(&b.at) {
+        Some(Ordering::Less) => true,
+        Some(Ordering::Greater) => false,
+        _ => a.seq < b.seq,
+    }
+}
+
+/// The event-scheduler interface of the simulation cores. Pops return
+/// `(time, payload)` in ascending time order with push-order
+/// tie-breaking; the sequence counter lives inside the queue.
+pub trait EventQueue<K> {
+    fn push(&mut self, at: f64, kind: K);
+    fn pop(&mut self) -> Option<(f64, K)>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The original `BinaryHeap` scheduler — O(log n), kept as the
+/// differential-testing reference ([`crate::sim::run_with_sinks_heap`]).
+pub struct HeapQueue<K> {
+    heap: BinaryHeap<Event<K>>,
+    seq: u64,
+}
+
+impl<K> HeapQueue<K> {
+    pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+    pub fn with_capacity(n: usize) -> Self {
+        HeapQueue {
+            heap: BinaryHeap::with_capacity(n),
+            seq: 0,
+        }
+    }
+}
+
+impl<K> Default for HeapQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> EventQueue<K> for HeapQueue<K> {
+    fn push(&mut self, at: f64, kind: K) {
+        self.seq += 1;
+        self.heap.push(Event {
+            at,
+            seq: self.seq,
+            kind,
+        });
+    }
+    fn pop(&mut self) -> Option<(f64, K)> {
+        self.heap.pop().map(|e| (e.at, e.kind))
+    }
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 16;
+const MIN_WIDTH: f64 = 1e-9;
+
+/// Calendar-queue scheduler — O(1) amortized push/pop.
+pub struct CalendarQueue<K> {
+    /// `nbuckets` (a power of two) vectors; every resident event's
+    /// slot lies in `[cur_slot, cur_slot + nbuckets)`, so each bucket
+    /// holds events of exactly one slot value.
+    buckets: Vec<Vec<Event<K>>>,
+    /// Seconds per slot.
+    width: f64,
+    /// Slot of the most recently popped event (the scan start).
+    cur_slot: u64,
+    /// Events resident in `buckets` (excludes `overflow`).
+    in_buckets: usize,
+    /// Far-future events, sorted descending by (at, seq): the back is
+    /// the earliest and migrates into buckets as the clock advances.
+    overflow: Vec<Event<K>>,
+    seq: u64,
+}
+
+impl<K> CalendarQueue<K> {
+    /// Default geometry: 64 buckets of 50 ms — tuned to the engine's
+    /// stage times; the adaptive rebuild corrects any mismatch.
+    pub fn new() -> Self {
+        Self::with_params(64, 0.05)
+    }
+
+    /// Explicit geometry (tests). `nbuckets` is rounded up to a power
+    /// of two and clamped to `[16, 65536]`.
+    pub fn with_params(nbuckets: usize, width: f64) -> Self {
+        let nb = nbuckets.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: (0..nb).map(|_| Vec::new()).collect(),
+            width: width.max(MIN_WIDTH),
+            cur_slot: 0,
+            in_buckets: 0,
+            overflow: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, at: f64) -> u64 {
+        (at / self.width) as u64
+    }
+
+    /// First slot beyond the calendar's reach from `cur_slot`.
+    #[inline]
+    fn horizon(&self) -> u64 {
+        self.cur_slot.saturating_add(self.buckets.len() as u64)
+    }
+
+    #[inline]
+    fn bucket_of(&self, slot: u64) -> usize {
+        (slot & (self.buckets.len() as u64 - 1)) as usize
+    }
+
+    fn insert(&mut self, e: Event<K>) {
+        let s = self.slot(e.at);
+        debug_assert!(
+            s >= self.cur_slot,
+            "event at {} pushed before the queue's current slot",
+            e.at
+        );
+        if s < self.horizon() {
+            let b = self.bucket_of(s);
+            self.buckets[b].push(e);
+            self.in_buckets += 1;
+        } else {
+            let pos = self.overflow.partition_point(|o| earlier(&e, o));
+            self.overflow.insert(pos, e);
+        }
+    }
+
+    /// Pull every overflow event now within the calendar horizon into
+    /// its bucket (called after `cur_slot` advances via an overflow pop).
+    fn migrate(&mut self) {
+        let h = self.horizon();
+        while let Some(o) = self.overflow.last() {
+            if self.slot(o.at) >= h {
+                break;
+            }
+            let e = self.overflow.pop().expect("checked non-empty");
+            let b = self.bucket_of(self.slot(e.at));
+            self.buckets[b].push(e);
+            self.in_buckets += 1;
+        }
+    }
+
+    /// Re-bucket everything into `nb` buckets with a width re-estimated
+    /// from the populated span (targets ≈3 slots per event, keeping
+    /// buckets short and scans shorter).
+    fn rebuild(&mut self, nb: usize) {
+        let nb = nb.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let mut all: Vec<Event<K>> = Vec::with_capacity(self.len());
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for e in &all {
+            lo = lo.min(e.at);
+            hi = hi.max(e.at);
+        }
+        if all.len() > 1 && hi > lo {
+            self.width = ((hi - lo) * 3.0 / all.len() as f64).max(MIN_WIDTH);
+        }
+        if self.buckets.len() != nb {
+            self.buckets.resize_with(nb, Vec::new);
+        }
+        self.in_buckets = 0;
+        self.cur_slot = if lo.is_finite() { self.slot(lo) } else { 0 };
+        for e in all {
+            self.insert(e);
+        }
+    }
+}
+
+impl<K> Default for CalendarQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> EventQueue<K> for CalendarQueue<K> {
+    fn push(&mut self, at: f64, kind: K) {
+        self.seq += 1;
+        self.insert(Event {
+            at,
+            seq: self.seq,
+            kind,
+        });
+        if self.in_buckets > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            let nb = self.buckets.len() * 2;
+            self.rebuild(nb);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, K)> {
+        if self.in_buckets == 0 {
+            // Everything (if anything) is in overflow: jump the clock.
+            let e = self.overflow.pop()?;
+            self.cur_slot = self.slot(e.at);
+            self.migrate();
+            return Some((e.at, e.kind));
+        }
+        let mut s = self.cur_slot;
+        loop {
+            // An overflow event at an already-passed (empty) slot is
+            // the minimum: no bucket event can precede it.
+            if let Some(o) = self.overflow.last() {
+                if self.slot(o.at) < s {
+                    let e = self.overflow.pop().expect("checked non-empty");
+                    self.cur_slot = self.slot(e.at);
+                    self.migrate();
+                    return Some((e.at, e.kind));
+                }
+            }
+            let b = self.bucket_of(s);
+            if !self.buckets[b].is_empty() {
+                // Every event in this bucket shares slot `s`.
+                let mut mi = 0;
+                for i in 1..self.buckets[b].len() {
+                    if earlier(&self.buckets[b][i], &self.buckets[b][mi]) {
+                        mi = i;
+                    }
+                }
+                if let Some(o) = self.overflow.last() {
+                    if self.slot(o.at) == s && earlier(o, &self.buckets[b][mi]) {
+                        let e = self.overflow.pop().expect("checked non-empty");
+                        self.cur_slot = s;
+                        self.migrate();
+                        return Some((e.at, e.kind));
+                    }
+                }
+                let e = self.buckets[b].swap_remove(mi);
+                self.in_buckets -= 1;
+                self.cur_slot = s;
+                return Some((e.at, e.kind));
+            }
+            // in_buckets > 0 bounds this scan: some bucket within
+            // [cur_slot, horizon) is non-empty.
+            s += 1;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.in_buckets + self.overflow.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_pops_none() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mks: [fn() -> Box<dyn EventQueue<u64>>; 2] = [
+            || Box::new(CalendarQueue::<u64>::new()),
+            || Box::new(HeapQueue::<u64>::new()),
+        ];
+        for mk in mks {
+            let mut q = mk();
+            for k in 0..20u64 {
+                q.push(1.25, k);
+            }
+            q.push(0.5, 100);
+            for want in std::iter::once(100).chain(0..20u64) {
+                assert_eq!(q.pop().map(|(_, k)| k), Some(want));
+            }
+            assert!(q.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn resize_and_overflow_drain_sorted() {
+        // Degenerate geometry forces both the overflow path (huge
+        // times vs tiny width) and several rebuilds (500 events into
+        // 16 buckets).
+        let mut q: CalendarQueue<u64> = CalendarQueue::with_params(16, 1e-3);
+        let mut rng = Rng::new(7);
+        for k in 0..500u64 {
+            let at = if k % 7 == 0 {
+                1e6 + rng.f64() * 1e3
+            } else {
+                rng.f64() * 50.0
+            };
+            q.push(at, k);
+        }
+        assert_eq!(q.len(), 500);
+        let mut last = f64::NEG_INFINITY;
+        let mut n = 0;
+        while let Some((at, _)) = q.pop() {
+            assert!(at >= last, "out of order: {at} after {last}");
+            last = at;
+            n += 1;
+        }
+        assert_eq!(n, 500);
+    }
+
+    /// The satellite differential test: random event streams obeying
+    /// the DES discipline (pushes never precede the last pop) drive
+    /// the calendar and the heap through identical (time, payload)
+    /// pop sequences — including exact ties and far-future events.
+    #[test]
+    fn random_streams_match_heap() {
+        check(60, gens::u64_in(0, u64::MAX / 2), |&seed| {
+            let mut rng = Rng::new(seed);
+            let nb = *rng.choose(&[16usize, 32, 64]);
+            let width = *rng.choose(&[1e-3, 0.05, 1.0, 60.0]);
+            let mut cal: CalendarQueue<u64> = CalendarQueue::with_params(nb, width);
+            let mut heap: HeapQueue<u64> = HeapQueue::new();
+            let mut now = 0.0f64;
+            let mut key = 0u64;
+            for _ in 0..400 {
+                if rng.f64() < 0.6 || (cal.is_empty() && heap.is_empty()) {
+                    // Push 1–4 events at/after `now`; offsets mix
+                    // exact ties, bucket-local, lap-distant, and
+                    // overflow-distant times.
+                    for _ in 0..rng.int_range(1, 4) {
+                        let off = match rng.int_range(0, 5) {
+                            0 => 0.0,
+                            1 => rng.f64() * 0.01,
+                            2 => rng.f64() * 1.0,
+                            3 => rng.f64() * 1e3,
+                            _ => 1e5 + rng.f64() * 1e5,
+                        };
+                        cal.push(now + off, key);
+                        heap.push(now + off, key);
+                        key += 1;
+                    }
+                } else {
+                    let a = cal.pop();
+                    let b = heap.pop();
+                    if a != b {
+                        return Err(format!("divergence: cal {a:?} vs heap {b:?}"));
+                    }
+                    if let Some((at, _)) = a {
+                        now = at;
+                    }
+                }
+                if cal.len() != heap.len() {
+                    return Err(format!("len drift: {} vs {}", cal.len(), heap.len()));
+                }
+            }
+            // Drain to the end: full order parity.
+            loop {
+                let a = cal.pop();
+                let b = heap.pop();
+                if a != b {
+                    return Err(format!("drain divergence: cal {a:?} vs heap {b:?}"));
+                }
+                if a.is_none() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+    }
+}

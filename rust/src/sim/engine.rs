@@ -1,11 +1,22 @@
 //! Discrete-event simulation engine.
 //!
 //! Events: request arrivals and replica iteration completions, ordered
-//! by simulation time in a binary heap. Each replica executes one
-//! iteration (= `pp` sequential pipeline stages of one batch) at a
-//! time; the cost of a stage comes from the configured oracle (AOT
-//! HLO by default, native roofline otherwise), and every pipeline
-//! stage is logged as a [`StageRecord`] — the paper's granularity.
+//! by simulation time in a calendar queue ([`crate::sim::calq`] —
+//! O(1) amortized vs the heap's O(log n); the original binary heap
+//! remains available through [`run_with_sinks_heap`] /
+//! [`run_autoscaled_with_sinks_heap`] for differential testing, and
+//! `tests/calq_parity.rs` proves both produce byte-identical
+//! telemetry). Each replica executes one iteration (= `pp` sequential
+//! pipeline stages of one batch) at a time; the cost of a stage comes
+//! from the configured oracle (AOT HLO by default, native roofline or
+//! interpolated surface otherwise), and every pipeline stage is
+//! logged as a [`StageRecord`] — the paper's granularity.
+//!
+//! Allocation model: the hot path is allocation-free at steady state.
+//! Stage-entry vectors cycle through a [`StageScratch`] pool
+//! (planned into by `ReplicaScheduler::next_stage_into`, reclaimed
+//! when the iteration's completion event fires), and the
+//! finished/outstanding/eligible buffers are reused per event.
 //!
 //! Pipeline-parallel note: stages of one iteration run back-to-back
 //! (no cross-iteration microbatch overlap), matching the conservative
@@ -15,7 +26,7 @@
 //!
 //! Memory model (DESIGN.md §8): the cores are streaming end to end.
 //! Arrivals are pulled one at a time from a [`RequestSource`] (exactly
-//! one pending-arrival event lives in the heap), outstanding requests
+//! one pending-arrival event lives in the event queue), outstanding requests
 //! live in a compact [`LiveRequests`] map that drops each entry the
 //! moment it completes and is handed to the [`RequestSink`], and stage
 //! records flow into the [`StageSink`]. A run is O(outstanding + bins)
@@ -48,6 +59,8 @@ use crate::exec::batch::BatchDesc;
 use crate::exec::{build_cost_model, OracleStats, StageCostModel};
 use crate::scheduler::replica::{ReplicaScheduler, StagePlan};
 use crate::scheduler::router::Router;
+use crate::sim::arena::StageScratch;
+use crate::sim::calq::{CalendarQueue, EventQueue, HeapQueue};
 use crate::sim::metrics::SimMetrics;
 use crate::telemetry::{
     RequestLog, RequestSink, RequestStats, StageLog, StageRecord, StageSink, StageStats,
@@ -57,8 +70,6 @@ use crate::workload::{
     LiveRequests, Request, RequestSource, RequestStore, Trace, WorkloadGenerator,
 };
 use anyhow::Result;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// A scheduled fixed-fleet simulation event.
 #[derive(Debug)]
@@ -90,34 +101,6 @@ enum RState {
     Draining,
     /// Gone.
     Offline,
-}
-
-struct Event<K> {
-    at: f64,
-    seq: u64,
-    kind: K,
-}
-
-impl<K> PartialEq for Event<K> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<K> Eq for Event<K> {}
-impl<K> PartialOrd for Event<K> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<K> Ord for Event<K> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reversed comparison; ties broken by insertion order.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
 }
 
 /// What a simulation run produces regardless of sink kind: summary
@@ -176,26 +159,20 @@ pub struct AutoscaleOutput {
 
 /// Pull the next arrival (if any) out of the source: insert it into
 /// the live map and schedule its arrival event. The cores call this
-/// once at startup and once per arrival pop, so the heap never holds
-/// more than one pending arrival. Returns false when the source is
-/// exhausted.
-fn pull_arrival<K>(
+/// once at startup and once per arrival pop, so the event queue never
+/// holds more than one pending arrival. Returns false when the source
+/// is exhausted.
+fn pull_arrival<K, Q: EventQueue<K>>(
     source: &mut dyn RequestSource,
     live: &mut LiveRequests,
-    heap: &mut BinaryHeap<Event<K>>,
-    seq: &mut u64,
+    queue: &mut Q,
     submitted: &mut u64,
     mk: impl FnOnce(u64) -> K,
 ) -> bool {
     match source.next_request() {
         Some(r) => {
             *submitted += 1;
-            *seq += 1;
-            heap.push(Event {
-                at: r.arrival_s,
-                seq: *seq,
-                kind: mk(r.id),
-            });
+            queue.push(r.arrival_s, mk(r.id));
             live.insert(r);
             true
         }
@@ -218,8 +195,17 @@ fn plan_iteration(
     cost: &mut dyn StageCostModel,
     sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
+    scratch: &mut StageScratch,
 ) -> Option<(f64, StagePlan)> {
-    let plan = replicas[replica_idx].next_stage(&mut *live, now)?;
+    // Plan into a pooled entries vector (recycled when this
+    // iteration's completion event fires): no per-stage allocation.
+    let mut entries = scratch.take_entries();
+    let Some(kind) = replicas[replica_idx].next_stage_into(&mut *live, now, &mut entries)
+    else {
+        scratch.recycle_entries(entries);
+        return None;
+    };
+    let plan = StagePlan { entries, kind };
     // Price one pipeline stage.
     batch.clear();
     for &(id, nt) in &plan.entries {
@@ -332,13 +318,39 @@ pub fn run_with_sink(
 }
 
 /// The fixed-fleet engine core: explicit arrival source, cost model,
-/// and stage/request telemetry sinks (tests inject mocks here).
+/// and stage/request telemetry sinks (tests inject mocks here). Runs
+/// on the calendar-queue scheduler.
 pub fn run_with_sinks(
+    cfg: &SimConfig,
+    source: &mut dyn RequestSource,
+    cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<SimRun> {
+    run_with_sinks_on(cfg, source, cost, sink, requests, CalendarQueue::new())
+}
+
+/// [`run_with_sinks`] on the reference binary-heap scheduler — the
+/// differential-testing hook (`tests/calq_parity.rs` proves both
+/// produce byte-identical telemetry).
+pub fn run_with_sinks_heap(
+    cfg: &SimConfig,
+    source: &mut dyn RequestSource,
+    cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<SimRun> {
+    let queue = HeapQueue::with_capacity(cfg.replicas as usize * 2 + 4);
+    run_with_sinks_on(cfg, source, cost, sink, requests, queue)
+}
+
+fn run_with_sinks_on<Q: EventQueue<EventKind>>(
     cfg: &SimConfig,
     source: &mut dyn RequestSource,
     mut cost: Box<dyn StageCostModel>,
     sink: &mut dyn StageSink,
     requests: &mut dyn RequestSink,
+    mut queue: Q,
 ) -> Result<SimRun> {
     cfg.validate()?;
     let topo = ClusterTopology::from_config(cfg)?;
@@ -350,12 +362,10 @@ pub fn run_with_sinks(
 
     // O(outstanding) event state: one pending arrival + one in-flight
     // iteration per replica.
-    let mut heap: BinaryHeap<Event<EventKind>> =
-        BinaryHeap::with_capacity(cfg.replicas as usize * 2 + 4);
     let mut live = LiveRequests::new();
-    let mut seq = 0u64;
+    let mut scratch = StageScratch::new();
     let mut submitted = 0u64;
-    pull_arrival(source, &mut live, &mut heap, &mut seq, &mut submitted, |id| {
+    pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
         EventKind::Arrival { request: id }
     });
 
@@ -364,21 +374,22 @@ pub fn run_with_sinks(
     let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
 
     let mut last_time = 0.0f64;
-    while let Some(ev) = heap.pop() {
-        let now = ev.at;
+    while let Some((now, ev)) = queue.pop() {
         last_time = last_time.max(now);
-        match ev.kind {
+        match ev {
             EventKind::Arrival { request } => {
                 // Keep exactly one pending arrival: pull the successor
                 // before routing this one, so same-instant arrivals
                 // stay ordered ahead of the iteration completions
                 // pushed below.
-                pull_arrival(source, &mut live, &mut heap, &mut seq, &mut submitted, |id| {
+                pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
                     EventKind::Arrival { request: id }
                 });
-                let outstanding: Vec<u64> =
-                    replicas.iter().map(|r| r.outstanding).collect();
-                let target = router.route(&outstanding);
+                scratch.outstanding.clear();
+                scratch
+                    .outstanding
+                    .extend(replicas.iter().map(|r| r.outstanding));
+                let target = router.route(&scratch.outstanding);
                 replicas[target].enqueue(request);
                 if !busy[target] {
                     if let Some((at, plan)) = plan_iteration(
@@ -391,24 +402,31 @@ pub fn run_with_sinks(
                         cost.as_mut(),
                         sink,
                         &mut batch,
+                        &mut scratch,
                     ) {
                         busy[target] = true;
-                        seq += 1;
-                        heap.push(Event {
+                        queue.push(
                             at,
-                            seq,
-                            kind: EventKind::IterDone {
+                            EventKind::IterDone {
                                 replica: target as u32,
                                 plan,
                             },
-                        });
+                        );
                     }
                 }
             }
             EventKind::IterDone { replica, plan } => {
                 let idx = replica as usize;
-                let fin = replicas[idx].complete_stage(&mut live, &plan, now);
-                finished_count += retire_finished(&fin, &mut live, &mut [&mut *requests]);
+                scratch.finished.clear();
+                replicas[idx].complete_stage_into(
+                    &mut live,
+                    &plan.entries,
+                    now,
+                    &mut scratch.finished,
+                );
+                finished_count +=
+                    retire_finished(&scratch.finished, &mut live, &mut [&mut *requests]);
+                scratch.recycle_entries(plan.entries);
                 busy[idx] = false;
                 if let Some((at, plan)) = plan_iteration(
                     idx,
@@ -420,14 +438,10 @@ pub fn run_with_sinks(
                     cost.as_mut(),
                     sink,
                     &mut batch,
+                    &mut scratch,
                 ) {
                     busy[idx] = true;
-                    seq += 1;
-                    heap.push(Event {
-                        at,
-                        seq,
-                        kind: EventKind::IterDone { replica, plan },
-                    });
+                    queue.push(at, EventKind::IterDone { replica, plan });
                 }
             }
         }
@@ -455,7 +469,7 @@ pub fn run_with_sinks(
 
 /// Start an iteration on `idx` if it is free and has runnable work;
 /// pushes the completion event.
-fn try_start(
+fn try_start<Q: EventQueue<AsEventKind>>(
     idx: usize,
     now: f64,
     cfg: &SimConfig,
@@ -465,9 +479,9 @@ fn try_start(
     cost: &mut dyn StageCostModel,
     sink: &mut dyn StageSink,
     batch: &mut BatchDesc,
+    scratch: &mut StageScratch,
     busy: &mut [bool],
-    seq: &mut u64,
-    heap: &mut BinaryHeap<Event<AsEventKind>>,
+    queue: &mut Q,
 ) {
     if busy[idx] {
         return;
@@ -482,17 +496,16 @@ fn try_start(
         cost,
         sink,
         batch,
+        scratch,
     ) {
         busy[idx] = true;
-        *seq += 1;
-        heap.push(Event {
+        queue.push(
             at,
-            seq: *seq,
-            kind: AsEventKind::IterDone {
+            AsEventKind::IterDone {
                 replica: idx as u32,
                 plan,
             },
-        });
+        );
     }
 }
 
@@ -669,9 +682,46 @@ pub fn run_autoscaled_with_sinks(
     scale: &AutoscaleConfig,
     grid: &GridEnv,
     source: &mut dyn RequestSource,
+    cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<AutoscaleRun> {
+    run_autoscaled_with_sinks_on(
+        cfg,
+        scale,
+        grid,
+        source,
+        cost,
+        sink,
+        requests,
+        CalendarQueue::new(),
+    )
+}
+
+/// [`run_autoscaled_with_sinks`] on the reference binary-heap
+/// scheduler — the differential-testing hook for the dynamic fleet.
+pub fn run_autoscaled_with_sinks_heap(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    source: &mut dyn RequestSource,
+    cost: Box<dyn StageCostModel>,
+    sink: &mut dyn StageSink,
+    requests: &mut dyn RequestSink,
+) -> Result<AutoscaleRun> {
+    let queue = HeapQueue::with_capacity(cfg.replicas as usize * 2 + 64);
+    run_autoscaled_with_sinks_on(cfg, scale, grid, source, cost, sink, requests, queue)
+}
+
+fn run_autoscaled_with_sinks_on<Q: EventQueue<AsEventKind>>(
+    cfg: &SimConfig,
+    scale: &AutoscaleConfig,
+    grid: &GridEnv,
+    source: &mut dyn RequestSource,
     mut cost: Box<dyn StageCostModel>,
     sink: &mut dyn StageSink,
     requests: &mut dyn RequestSink,
+    mut queue: Q,
 ) -> Result<AutoscaleRun> {
     cfg.validate()?;
     scale.validate()?;
@@ -691,25 +741,13 @@ pub fn run_autoscaled_with_sinks(
     }
     let mut controller = FleetController::new(scale.clone(), build_policy(scale, init));
 
-    let mut heap: BinaryHeap<Event<AsEventKind>> =
-        BinaryHeap::with_capacity(init as usize * 2 + 64);
     let mut live = LiveRequests::new();
-    let mut seq = 0u64;
+    let mut scratch = StageScratch::new();
     let mut submitted = 0u64;
-    let mut source_done = !pull_arrival(
-        source,
-        &mut live,
-        &mut heap,
-        &mut seq,
-        &mut submitted,
-        |id| AsEventKind::Arrival { request: id },
-    );
-    seq += 1;
-    heap.push(Event {
-        at: scale.decision_interval_s,
-        seq,
-        kind: AsEventKind::ScaleTick,
+    let mut source_done = !pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
+        AsEventKind::Arrival { request: id }
     });
+    queue.push(scale.decision_interval_s, AsEventKind::ScaleTick);
 
     let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
     let mut finished_count = 0u64;
@@ -722,39 +760,38 @@ pub fn run_autoscaled_with_sinks(
     let mut window = CompletionWindow::new(window_s);
 
     let mut last_time = 0.0f64;
-    while let Some(ev) = heap.pop() {
-        let now = ev.at;
+    while let Some((now, ev)) = queue.pop() {
         // Only workload progress defines the makespan: control-plane
         // events (ticks, cold-start completions) trailing the last
         // request must not inflate it — or the timeline horizon, which
         // would charge phantom whole-fleet idle energy.
         if matches!(
-            ev.kind,
+            ev,
             AsEventKind::Arrival { .. } | AsEventKind::IterDone { .. }
         ) {
             last_time = last_time.max(now);
         }
-        match ev.kind {
+        match ev {
             AsEventKind::Arrival { request } => {
                 if !source_done {
-                    source_done = !pull_arrival(
-                        source,
-                        &mut live,
-                        &mut heap,
-                        &mut seq,
-                        &mut submitted,
-                        |id| AsEventKind::Arrival { request: id },
-                    );
+                    source_done =
+                        !pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
+                            AsEventKind::Arrival { request: id }
+                        });
                 }
-                let eligible: Vec<usize> = state
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, s)| **s == RState::Active)
-                    .map(|(i, _)| i)
-                    .collect();
-                let outstanding: Vec<u64> =
-                    replicas.iter().map(|r| r.outstanding).collect();
-                let target = router.route_among(&eligible, &outstanding);
+                scratch.eligible.clear();
+                scratch.eligible.extend(
+                    state
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| **s == RState::Active)
+                        .map(|(i, _)| i),
+                );
+                scratch.outstanding.clear();
+                scratch
+                    .outstanding
+                    .extend(replicas.iter().map(|r| r.outstanding));
+                let target = router.route_among(&scratch.eligible, &scratch.outstanding);
                 replicas[target].enqueue(request);
                 try_start(
                     target,
@@ -766,19 +803,26 @@ pub fn run_autoscaled_with_sinks(
                     cost.as_mut(),
                     sink,
                     &mut batch,
+                    &mut scratch,
                     &mut busy,
-                    &mut seq,
-                    &mut heap,
+                    &mut queue,
                 );
             }
             AsEventKind::IterDone { replica, plan } => {
                 let idx = replica as usize;
-                let fin = replicas[idx].complete_stage(&mut live, &plan, now);
+                scratch.finished.clear();
+                replicas[idx].complete_stage_into(
+                    &mut live,
+                    &plan.entries,
+                    now,
+                    &mut scratch.finished,
+                );
                 finished_count += retire_finished(
-                    &fin,
+                    &scratch.finished,
                     &mut live,
                     &mut [&mut window as &mut dyn RequestSink, &mut *requests],
                 );
+                scratch.recycle_entries(plan.entries);
                 busy[idx] = false;
                 try_start(
                     idx,
@@ -790,9 +834,9 @@ pub fn run_autoscaled_with_sinks(
                     cost.as_mut(),
                     sink,
                     &mut batch,
+                    &mut scratch,
                     &mut busy,
-                    &mut seq,
-                    &mut heap,
+                    &mut queue,
                 );
                 if state[idx] == RState::Draining {
                     // Preemption during the drain may have pushed
@@ -811,9 +855,9 @@ pub fn run_autoscaled_with_sinks(
                                 cost.as_mut(),
                                 sink,
                                 &mut batch,
+                                &mut scratch,
                                 &mut busy,
-                                &mut seq,
-                                &mut heap,
+                                &mut queue,
                             );
                         }
                     }
@@ -853,9 +897,9 @@ pub fn run_autoscaled_with_sinks(
                         cost.as_mut(),
                         sink,
                         &mut batch,
+                        &mut scratch,
                         &mut busy,
-                        &mut seq,
-                        &mut heap,
+                        &mut queue,
                     );
                 }
             }
@@ -893,12 +937,10 @@ pub fn run_autoscaled_with_sinks(
                         state.push(RState::Provisioning);
                         busy.push(false);
                         timeline.provision(id, now);
-                        seq += 1;
-                        heap.push(Event {
-                            at: now + scale.cold_start_s,
-                            seq,
-                            kind: AsEventKind::ReplicaOnline { replica: id },
-                        });
+                        queue.push(
+                            now + scale.cold_start_s,
+                            AsEventKind::ReplicaOnline { replica: id },
+                        );
                     }
                 } else if desired < fleet {
                     let mut shed = fleet - desired;
@@ -948,9 +990,9 @@ pub fn run_autoscaled_with_sinks(
                                 cost.as_mut(),
                                 sink,
                                 &mut batch,
+                                &mut scratch,
                                 &mut busy,
-                                &mut seq,
-                                &mut heap,
+                                &mut queue,
                             );
                         }
                         if !busy[victim] && !replicas[victim].has_work() {
@@ -962,17 +1004,12 @@ pub fn run_autoscaled_with_sinks(
                 }
                 // Re-arm the tick only while progress is possible: at
                 // this point the popped tick was the only one pending,
-                // so a non-empty heap means arrivals/iterations/onlines
-                // are still in flight. An empty heap with unfinished
+                // so a non-empty queue means arrivals/iterations/onlines
+                // are still in flight. An empty queue with unfinished
                 // requests is a deadlock — stop ticking so the loop
                 // exits and the ensure! below reports it.
-                if !heap.is_empty() {
-                    seq += 1;
-                    heap.push(Event {
-                        at: now + scale.decision_interval_s,
-                        seq,
-                        kind: AsEventKind::ScaleTick,
-                    });
+                if !queue.is_empty() {
+                    queue.push(now + scale.decision_interval_s, AsEventKind::ScaleTick);
                 }
             }
         }
@@ -1318,5 +1355,103 @@ mod tests {
         assert_eq!(a.sim.metrics.makespan_s, b.sim.metrics.makespan_s);
         assert_eq!(a.sim.stagelog.len(), b.sim.stagelog.len());
         assert_eq!(a.timeline.events.len(), b.timeline.events.len());
+    }
+
+    // --- calendar queue vs binary heap: exact event-order parity ---
+
+    /// The calendar-queue engine is the same simulation as the heap
+    /// engine, bit for bit: identical stage records and exact metric
+    /// equality (tests/calq_parity.rs extends this to byte-identical
+    /// CSV exports).
+    #[test]
+    fn calendar_and_heap_engines_are_identical() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 2;
+        cfg.num_requests = 120;
+        cfg.arrival = Arrival::Poisson { qps: 30.0 };
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+
+        let mut cal_stages = StageLog::new();
+        let mut cal_reqs = RequestLog::new(&cfg);
+        let mut src = trace.clone().into_source();
+        let cal = run_with_sinks(
+            &cfg,
+            &mut src,
+            Box::new(MockCost),
+            &mut cal_stages,
+            &mut cal_reqs,
+        )
+        .unwrap();
+
+        let mut heap_stages = StageLog::new();
+        let mut heap_reqs = RequestLog::new(&cfg);
+        let mut src = trace.into_source();
+        let heap = run_with_sinks_heap(
+            &cfg,
+            &mut src,
+            Box::new(MockCost),
+            &mut heap_stages,
+            &mut heap_reqs,
+        )
+        .unwrap();
+
+        assert_eq!(cal.metrics.makespan_s, heap.metrics.makespan_s);
+        assert_eq!(cal.metrics.stage_count, heap.metrics.stage_count);
+        assert_eq!(cal_stages.len(), heap_stages.len());
+        for (a, b) in cal_stages.records.iter().zip(&heap_stages.records) {
+            assert_eq!(a.replica, b.replica);
+            assert_eq!(a.start_s, b.start_s);
+            assert_eq!(a.batch_size, b.batch_size);
+            assert_eq!(a.new_tokens, b.new_tokens);
+        }
+    }
+
+    #[test]
+    fn autoscaled_calendar_and_heap_engines_are_identical() {
+        let mut cfg = small_cfg();
+        cfg.num_requests = 150;
+        cfg.arrival = Arrival::Poisson { qps: 40.0 };
+        cfg.batch_cap = 8;
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+        let s = scale_cfg(ScalingPolicyKind::Reactive);
+        let grid = GridEnv::constant(150.0, 0.0);
+
+        let mut cal_stages = StageLog::new();
+        let mut cal_reqs = RequestLog::new(&cfg);
+        let mut src = trace.clone().into_source();
+        let cal = run_autoscaled_with_sinks(
+            &cfg,
+            &s,
+            &grid,
+            &mut src,
+            Box::new(MockCost),
+            &mut cal_stages,
+            &mut cal_reqs,
+        )
+        .unwrap();
+
+        let mut heap_stages = StageLog::new();
+        let mut heap_reqs = RequestLog::new(&cfg);
+        let mut src = trace.into_source();
+        let heap = run_autoscaled_with_sinks_heap(
+            &cfg,
+            &s,
+            &grid,
+            &mut src,
+            Box::new(MockCost),
+            &mut heap_stages,
+            &mut heap_reqs,
+        )
+        .unwrap();
+
+        assert_eq!(cal.sim.metrics.makespan_s, heap.sim.metrics.makespan_s);
+        assert_eq!(cal_stages.len(), heap_stages.len());
+        assert_eq!(cal.timeline.events.len(), heap.timeline.events.len());
+        assert_eq!(cal.decisions.len(), heap.decisions.len());
+        for (a, b) in cal_stages.records.iter().zip(&heap_stages.records) {
+            assert_eq!((a.replica, a.start_s), (b.replica, b.start_s));
+        }
     }
 }

@@ -1,13 +1,18 @@
-//! The Vidur-like discrete-event inference simulator: event queue,
-//! replica iteration loop, and summary metrics.
+//! The Vidur-like discrete-event inference simulator: event
+//! schedulers (calendar queue + reference heap, [`calq`]), reusable
+//! hot-path scratch ([`arena`]), the replica iteration loop, and
+//! summary metrics.
 
+pub mod arena;
+pub mod calq;
 pub mod engine;
 pub mod metrics;
 
 pub use engine::{
     run, run_autoscaled, run_autoscaled_streaming, run_autoscaled_streaming_with,
     run_autoscaled_with_model, run_autoscaled_with_sink, run_autoscaled_with_sinks,
-    run_streaming, run_streaming_with, run_with_model, run_with_sink, run_with_sinks,
-    run_with_trace, AutoscaleOutput, AutoscaleRun, SimOutput, SimRun,
+    run_autoscaled_with_sinks_heap, run_streaming, run_streaming_with, run_with_model,
+    run_with_sink, run_with_sinks, run_with_sinks_heap, run_with_trace, AutoscaleOutput,
+    AutoscaleRun, SimOutput, SimRun,
 };
 pub use metrics::SimMetrics;

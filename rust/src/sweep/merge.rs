@@ -309,6 +309,10 @@ pub fn merge_sweep_values(sweeps: &[&Value]) -> Result<Value> {
             .try_set("hits", hits)?
             .try_set("resets", sum_u64("resets", &oracles).unwrap_or(0))?
             .try_set(
+                "surface_builds",
+                sum_u64("surface_builds", &oracles).unwrap_or(0),
+            )?
+            .try_set(
                 "hit_rate",
                 if calls == 0 { 0.0 } else { hits as f64 / calls as f64 },
             )?;

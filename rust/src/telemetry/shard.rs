@@ -316,6 +316,7 @@ mod tests {
                 calls: 100,
                 hits: 90,
                 resets: c,
+                surface_builds: 1,
             };
             t.add_case(c, &st, &stages, &oracle, sink.sketches(), 3 + c, 20 + c);
         }

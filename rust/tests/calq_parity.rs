@@ -1,0 +1,143 @@
+//! Calendar-queue vs binary-heap engine parity (DESIGN.md §12).
+//!
+//! The calendar queue replaces the engines' `BinaryHeap` on the hot
+//! path; correctness rests on both schedulers popping events in
+//! exactly the same order (ascending time, push-order tie-break).
+//! `sim::calq`'s in-module differential tests pin that at the queue
+//! level; these tests pin it end to end: the same trace through
+//! [`vidur_energy::sim::run_with_sinks`] (calendar) and
+//! [`vidur_energy::sim::run_with_sinks_heap`] (heap) must produce
+//! byte-identical stage CSVs, bit-equal metrics, and identical
+//! request lifecycles — fixed fleet and autoscaled alike.
+
+mod common;
+
+use common::{read_bytes, stream_cfg, trace_for, TempDir};
+use vidur_energy::autoscale::GridEnv;
+use vidur_energy::config::simconfig::{AutoscaleConfig, ScalingPolicyKind};
+use vidur_energy::exec::build_cost_model;
+use vidur_energy::sim::{
+    run_autoscaled_with_sinks, run_autoscaled_with_sinks_heap, run_with_sinks,
+    run_with_sinks_heap,
+};
+use vidur_energy::telemetry::{RequestLog, StageLog};
+
+#[test]
+fn fixed_fleet_stage_csvs_are_byte_identical() {
+    let mut cfg = stream_cfg(0xCA1);
+    cfg.replicas = 2;
+    let trace = trace_for(&cfg);
+    let tmp = TempDir::new("calq_parity_fixed");
+
+    let mut cal_stages = StageLog::new();
+    let mut cal_reqs = RequestLog::new(&cfg);
+    let mut src = trace.clone().into_source();
+    let cal = run_with_sinks(
+        &cfg,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        &mut cal_stages,
+        &mut cal_reqs,
+    )
+    .unwrap();
+
+    let mut heap_stages = StageLog::new();
+    let mut heap_reqs = RequestLog::new(&cfg);
+    let mut src = trace.into_source();
+    let heap = run_with_sinks_heap(
+        &cfg,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        &mut heap_stages,
+        &mut heap_reqs,
+    )
+    .unwrap();
+
+    // Bit-equal summary metrics (no tolerance).
+    assert_eq!(cal.metrics.makespan_s, heap.metrics.makespan_s);
+    assert_eq!(cal.metrics.stage_count, heap.metrics.stage_count);
+    assert_eq!(cal.metrics.achieved_qps, heap.metrics.achieved_qps);
+    assert_eq!(cal.metrics.token_throughput, heap.metrics.token_throughput);
+    assert_eq!(cal.oracle.calls, heap.oracle.calls);
+
+    // Identical request lifecycles, in order.
+    let cal_r = cal_reqs.into_requests();
+    let heap_r = heap_reqs.into_requests();
+    assert_eq!(cal_r.len(), heap_r.len());
+    for (a, b) in cal_r.iter().zip(&heap_r) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.scheduled_s, b.scheduled_s);
+        assert_eq!(a.first_token_s, b.first_token_s);
+        assert_eq!(a.finished_s, b.finished_s);
+    }
+
+    // The satellite contract: byte-identical CSV exports.
+    let cal_csv = tmp.join("cal.csv");
+    let heap_csv = tmp.join("heap.csv");
+    cal_stages.save_csv(&cal_csv).unwrap();
+    heap_stages.save_csv(&heap_csv).unwrap();
+    assert_eq!(
+        read_bytes(&cal_csv),
+        read_bytes(&heap_csv),
+        "stage CSVs diverge between calendar and heap engines"
+    );
+}
+
+#[test]
+fn autoscaled_stage_csvs_are_byte_identical() {
+    let mut cfg = stream_cfg(0xCA2);
+    cfg.num_requests = 300;
+    cfg.batch_cap = 8;
+    let trace = trace_for(&cfg);
+    let mut scale = AutoscaleConfig::default();
+    scale.policy = ScalingPolicyKind::Reactive;
+    scale.decision_interval_s = 2.0;
+    scale.cold_start_s = 1.0;
+    scale.queue_high = 4.0;
+    let grid = GridEnv::constant(150.0, 0.0);
+    let tmp = TempDir::new("calq_parity_auto");
+
+    let mut cal_stages = StageLog::new();
+    let mut cal_reqs = RequestLog::new(&cfg);
+    let mut src = trace.clone().into_source();
+    let cal = run_autoscaled_with_sinks(
+        &cfg,
+        &scale,
+        &grid,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        &mut cal_stages,
+        &mut cal_reqs,
+    )
+    .unwrap();
+
+    let mut heap_stages = StageLog::new();
+    let mut heap_reqs = RequestLog::new(&cfg);
+    let mut src = trace.into_source();
+    let heap = run_autoscaled_with_sinks_heap(
+        &cfg,
+        &scale,
+        &grid,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        &mut heap_stages,
+        &mut heap_reqs,
+    )
+    .unwrap();
+
+    assert_eq!(cal.sim.metrics.makespan_s, heap.sim.metrics.makespan_s);
+    assert_eq!(cal.sim.metrics.stage_count, heap.sim.metrics.stage_count);
+    assert_eq!(cal.decisions.len(), heap.decisions.len());
+    assert_eq!(cal.timeline.events.len(), heap.timeline.events.len());
+    assert_eq!(cal.timeline.max_fleet(), heap.timeline.max_fleet());
+
+    let cal_csv = tmp.join("cal.csv");
+    let heap_csv = tmp.join("heap.csv");
+    cal_stages.save_csv(&cal_csv).unwrap();
+    heap_stages.save_csv(&heap_csv).unwrap();
+    assert_eq!(
+        read_bytes(&cal_csv),
+        read_bytes(&heap_csv),
+        "autoscaled stage CSVs diverge between calendar and heap engines"
+    );
+}
