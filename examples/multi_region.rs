@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
     }
     let res = simulate(&load, &regions, cosim.interval_s, cfg.seed)?;
     println!("\n{}", res.table.to_markdown());
+    println!("\n{}", res.summary.to_markdown());
     println!(
         "greedy lowest-CI routing: {:.0} g vs static {:.0} g ({:+.1}%)",
         res.greedy_g,

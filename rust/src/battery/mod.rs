@@ -165,4 +165,69 @@ mod tests {
         assert!(b.soc.is_finite());
         assert_eq!(b.soc, soc0); // no time elapsed, no energy moved
     }
+
+    /// Property: any random interleaving of charge/discharge calls
+    /// (random powers and step sizes)
+    /// * conserves energy up to round-trip efficiency — terminals-out
+    ///   never exceeds (initial stored + terminals-in × η_c) × η_d;
+    /// * keeps the SoC ledger exact: soc movement equals
+    ///   charged × η_c − discharged / η_d;
+    /// * never leaves the [soc_min, soc_max] window;
+    /// * keeps `full_cycles()` monotone nondecreasing.
+    #[test]
+    fn random_interleavings_conserve_energy_and_soc_window() {
+        use crate::util::proptest::{check, gens};
+        use crate::util::rng::Rng;
+        check(60, gens::u64_in(0, u64::MAX / 2), |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut b = batt();
+            let stored0_wh = (b.soc - b.soc_min) * b.capacity_wh;
+            let (mut in_wh, mut out_wh) = (0.0f64, 0.0f64);
+            let mut last_cycles = b.full_cycles();
+            let eps = 1e-6;
+            for step in 0..200 {
+                let power = rng.uniform(0.0, 300.0);
+                let dt = rng.uniform(0.0, 900.0);
+                if rng.f64() < 0.5 {
+                    in_wh += b.charge(power, dt) * dt / 3600.0;
+                } else {
+                    out_wh += b.discharge(power, dt) * dt / 3600.0;
+                }
+                if !(b.soc_min - eps..=b.soc_max + eps).contains(&b.soc) {
+                    return Err(format!(
+                        "seed {seed} step {step}: soc {} left [{}, {}]",
+                        b.soc, b.soc_min, b.soc_max
+                    ));
+                }
+                let cycles = b.full_cycles();
+                if cycles < last_cycles - eps {
+                    return Err(format!(
+                        "seed {seed} step {step}: full_cycles went {last_cycles} -> {cycles}"
+                    ));
+                }
+                last_cycles = cycles;
+                // Round-trip conservation: everything at the output
+                // terminals came through both efficiency losses.
+                let max_out = (stored0_wh + in_wh * b.eff_charge) * b.eff_discharge;
+                if out_wh > max_out + eps {
+                    return Err(format!(
+                        "seed {seed} step {step}: out {out_wh} Wh > ({stored0_wh} + \
+                         {in_wh}·ηc)·ηd = {max_out} Wh"
+                    ));
+                }
+                // Exact ledger: SoC movement == net terminal energy
+                // through the efficiencies.
+                let expect_soc = 0.5
+                    + (b.charged_wh * b.eff_charge - b.discharged_wh / b.eff_discharge)
+                        / b.capacity_wh;
+                if (b.soc - expect_soc).abs() > 1e-6 {
+                    return Err(format!(
+                        "seed {seed} step {step}: soc ledger drift {} vs {}",
+                        b.soc, expect_soc
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
 }

@@ -445,6 +445,9 @@ pub struct CosimConfig {
     pub ci_mean: f64,
     /// Hour-of-day (UTC-ish sim time) the workload starts.
     pub start_hour: f64,
+    /// Per-watt-hour overhead for moving load to a remote region
+    /// (network + marshalling), as a fraction of the moved energy.
+    pub transfer_overhead: f64,
     pub seed: u64,
 }
 
@@ -467,6 +470,7 @@ impl Default for CosimConfig {
             ci_high: 200.0,
             ci_mean: 418.2,
             start_hour: 6.0,
+            transfer_overhead: 0.05,
             seed: 0xCA150,
         }
     }
@@ -500,6 +504,9 @@ impl CosimConfig {
         if self.ci_low >= self.ci_high {
             bail!("ci_low must be < ci_high");
         }
+        if self.transfer_overhead < 0.0 {
+            bail!("transfer_overhead must be >= 0");
+        }
         Ok(())
     }
 
@@ -520,6 +527,7 @@ impl CosimConfig {
             .set("ci_high", self.ci_high)
             .set("ci_mean", self.ci_mean)
             .set("start_hour", self.start_hour)
+            .set("transfer_overhead", self.transfer_overhead)
             .set("seed", self.seed);
         v
     }
@@ -547,6 +555,7 @@ impl CosimConfig {
             ci_high: gf("ci_high", d.ci_high),
             ci_mean: gf("ci_mean", d.ci_mean),
             start_hour: gf("start_hour", d.start_hour),
+            transfer_overhead: gf("transfer_overhead", d.transfer_overhead),
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
         };
         cfg.validate()?;
@@ -745,6 +754,7 @@ mod tests {
         let mut c = CosimConfig::default();
         c.solar_capacity_w = 1200.0;
         c.start_hour = 0.0;
+        c.transfer_overhead = 0.12;
         let back = CosimConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }

@@ -8,7 +8,7 @@
 //!   merge       — recombine sharded sweep outputs (DESIGN.md §9)
 //!   watch       — tail/aggregate live sweep snapshots (DESIGN.md §10)
 //!   serve       — HTTP/SSE telemetry + control surface (DESIGN.md §11)
-//!   multiregion — carbon-aware multi-region routing exploration
+//!   multiregion — carbon-aware global routing sweep over simulated regional fleets
 //!   policy      — model-size vs grid-condition policy exploration
 //!   config      — show the default (Table 1) configuration
 //!   report      — assemble results/ into one markdown report
@@ -17,7 +17,8 @@
 //! The full flag-by-flag reference lives in `docs/CLI.md`.
 
 use crate::config::simconfig::{Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig};
-use crate::coordinator::{multiregion, policy};
+use crate::coordinator::fleet::RoutePolicyKind;
+use crate::coordinator::policy;
 use crate::energy::EnergyAccountant;
 use crate::exec;
 use crate::experiments;
@@ -38,13 +39,13 @@ subcommands:
   simulate     run one inference simulation
   cosim        run the Vidur→Vessim integration case study
   autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
-  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale all
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale multiregion all
                (--jobs N sweeps cases in parallel; --shard k/N splits the grid across machines;
                 --watch[=stderr|json:PATH] live dashboard / snapshot log)
   merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
   watch        tail/aggregate live sweep snapshots: repro watch <dir-or-jsonl>... [--follow]
   serve        HTTP/SSE telemetry + control surface: repro serve [<dir-or-jsonl>...] [--addr H:P]
-  multiregion  carbon-aware multi-region routing exploration
+  multiregion  carbon-aware global routing sweep: route policies x regions x battery sizes
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
   report       assemble results/ into a markdown report
@@ -71,7 +72,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "merge" => cmd_merge(&args),
         "watch" => cmd_watch(&args),
         "serve" => cmd_serve(&args),
-        "multiregion" => multiregion::cmd(&args),
+        "multiregion" => cmd_multiregion(&args),
         "policy" => policy::cmd(&args),
         "config" => cmd_config(),
         "report" => cmd_report(&args),
@@ -267,10 +268,89 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_multiregion(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "repro multiregion — carbon-aware global routing sweep over simulated regional \
+             fleets (DESIGN.md §13)\n\n\
+             options:\n  --out <dir>            results directory (default: results)\n  \
+             --route-policy <list>  comma-separated policies to sweep (default: all four:\n                         \
+             static-home,greedy-ci,latency-slo-carbon,battery-soc-aware)\n  \
+             --regions <n>          fix the region-count axis to one value (default: 1,3; fast: 3)\n  \
+             --rtt-ms <ms>          one-way RTT from the router to every remote region (default: 50)\n  \
+             --transfer-overhead <f>  cross-region transfer energy overhead fraction\n                           \
+             (default: CosimConfig.transfer_overhead = 0.05)\n  \
+             --jobs <n>    sweep worker threads (default: all cores)\n  \
+             --shard <k/N> run only cases k, k+N, … of the grid (merge with `repro merge`)\n  \
+             --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
+             --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
+             --oracle <native|hlo|surface>  override every case's stage oracle\n  \
+             --fast        reduced grid: 3 regions, one battery size, fewer requests"
+        );
+        return Ok(());
+    }
+    apply_jobs(args)?;
+    apply_shard(args)?;
+    apply_watch(args)?;
+    apply_oracle(args)?;
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let fast = args.has("fast");
+    let mut opts = experiments::exp_multiregion::MultiRegionOpts::defaults(fast);
+    if let Some(spec) = args.get("route-policy") {
+        let mut policies = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let Some(p) = RoutePolicyKind::parse(part) else {
+                bail!(
+                    "unknown route policy '{part}' (known: static-home, greedy-ci, \
+                     latency-slo-carbon, battery-soc-aware)"
+                );
+            };
+            policies.push(p);
+        }
+        anyhow::ensure!(!policies.is_empty(), "--route-policy needs at least one policy");
+        opts.policies = policies;
+    }
+    if args.get("regions").is_some() {
+        let n = args.u64_or("regions", 3)? as usize;
+        anyhow::ensure!(n >= 1, "--regions must be >= 1");
+        opts.region_counts = vec![n];
+    }
+    opts.rtt_s = args.f64_or("rtt-ms", opts.rtt_s * 1_000.0)? / 1_000.0;
+    anyhow::ensure!(opts.rtt_s >= 0.0, "--rtt-ms must be >= 0");
+    if args.get("transfer-overhead").is_some() {
+        let t = args.f64_or("transfer-overhead", 0.0)?;
+        anyhow::ensure!(t >= 0.0, "--transfer-overhead must be >= 0");
+        opts.transfer_overhead = Some(t);
+    }
+    let table = experiments::exp_multiregion::run_with(&out_dir, fast, &opts)?;
+    // The save() call already printed the markdown table; surface the
+    // headline comparison (first row of each policy) on top.
+    let by = |policy: &str, col: &str| -> Option<f64> {
+        let c = table.col_index(col).ok()?;
+        table
+            .rows
+            .iter()
+            .find(|r| r[0] == policy)
+            .and_then(|r| r[c].parse().ok())
+    };
+    if let (Some(sg), Some(gg)) = (
+        by("static-home", "net_footprint_g"),
+        by("greedy-ci", "net_footprint_g"),
+    ) {
+        if sg > 0.0 {
+            println!(
+                "greedy-ci vs static-home: {:+.1}% net emissions",
+                (gg / sg - 1.0) * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.first() else {
         bail!(
-            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|all> \
+            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|multiregion|all> \
              [--out results] [--fast] [--jobs N] [--shard k/N] \
              [--watch[=stderr|json:PATH]] [--watch-cadence s] [--oracle native|hlo|surface]"
         );

@@ -1,0 +1,544 @@
+//! Regional-fleet coordinator (DESIGN.md §13): request-granularity
+//! carbon-aware global routing.
+//!
+//! Where [`crate::coordinator::multiregion`] compares policies by
+//! arithmetic over a pre-binned load profile, this layer actually
+//! *runs* the fleet: every [`FleetRegion`] owns a simulated cluster
+//! (engine replicas + optional per-region
+//! [`crate::autoscale::FleetController`] + a
+//! [`crate::cosim::Microgrid`] with battery and solar + a
+//! phase-shifted [`crate::grid::CarbonIntensityTrace`]), all advanced
+//! on one shared clock by [`crate::sim::run_multifleet`]. A
+//! [`RoutePolicy`] assigns each request at admission time from live
+//! signals — grid CI, battery state of charge, queue depth, and the
+//! inter-region RTT measured against the TTFT SLO.
+//!
+//! Accounting is two-tier (the same split the autoscale experiment
+//! uses): inside the engine the microgrid is stepped with an
+//! *advisory* demand estimate so the battery SoC the router sees moves
+//! with fleet activity; after the run, each region's streamed stage
+//! records are binned against its replica timeline and co-simulated
+//! ([`crate::cosim::Environment`]) against the exact same CI/solar
+//! series the closed-form oracle samples
+//! ([`crate::coordinator::multiregion::region_series`]) — which is
+//! what makes the degenerate-case equivalence test meaningful.
+
+use crate::autoscale::GridEnv;
+use crate::battery::Battery;
+use crate::config::simconfig::{AutoscaleConfig, CosimConfig, SimConfig};
+use crate::coordinator::multiregion::{region_series, Region};
+use crate::cosim::{CosimResult, Environment, Microgrid};
+use crate::energy::{EnergyAccountant, EnergyReport};
+use crate::exec::build_cost_model;
+use crate::grid::{CarbonIntensityTrace, SolarModel};
+use crate::power::PowerModel;
+use crate::report::live;
+use crate::sim::{self, MultiFleetRun, RegionSim};
+use crate::telemetry::{StreamingRequestSink, StreamingSink};
+use crate::workload::RequestSource;
+use anyhow::{ensure, Result};
+
+/// Live per-region state a [`RoutePolicy`] decides from. One snapshot
+/// per region, taken at the arrival instant on the shared clock.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionSignals {
+    /// Grid carbon intensity right now, gCO₂/kWh.
+    pub ci_g_per_kwh: f64,
+    /// Solar generation right now, W.
+    pub solar_w: f64,
+    /// Advisory fleet demand estimate (active replicas × est. W).
+    pub est_demand_w: f64,
+    /// Battery state of charge, fraction of capacity.
+    pub battery_soc: f64,
+    /// Battery SoC floor (discharge stops here).
+    pub soc_min: f64,
+    /// Battery SoC ceiling (charge stops here).
+    pub soc_max: f64,
+    /// Outstanding (queued + running) requests in the region.
+    pub queue_depth: u64,
+    /// Replicas currently serving traffic.
+    pub active_replicas: u32,
+    /// One-way RTT from the router to this region, seconds (0 at home).
+    pub rtt_s: f64,
+    /// Fractional energy overhead of moving a request here (0 at home).
+    pub transfer_overhead: f64,
+}
+
+/// Object-safe admission-time routing policy: pick the region index
+/// for one request. Called once per arrival with one snapshot per
+/// region; index 0 is the home region.
+pub trait RoutePolicy {
+    fn route(&mut self, arrival_s: f64, signals: &[RegionSignals]) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Effective grams-per-kWh cost of serving in a region right now:
+/// transfer overhead inflates remote energy, and solar covering the
+/// estimated demand discounts it. With zero solar this collapses to
+/// `(1 + overhead) × ci` — exactly the closed-form oracle's greedy
+/// scan — which is what the degenerate-case equivalence relies on.
+fn effective_cost(s: &RegionSignals) -> f64 {
+    let headroom = if s.est_demand_w > 0.0 {
+        (s.solar_w / s.est_demand_w).min(1.0)
+    } else {
+        0.0
+    };
+    (1.0 + s.transfer_overhead) * s.ci_g_per_kwh * (1.0 - headroom)
+}
+
+/// First index minimizing `cost` (strict `<` scan, so the home region
+/// wins ties — the same tie-break as `multiregion::simulate`).
+fn argmin_by(signals: &[RegionSignals], mut cost: impl FnMut(&RegionSignals) -> f64) -> usize {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for (i, s) in signals.iter().enumerate() {
+        let c = cost(s);
+        if c < best_cost {
+            best_cost = c;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Everything stays in the home region — the byte-neutrality baseline.
+struct StaticHomePolicy;
+impl RoutePolicy for StaticHomePolicy {
+    fn route(&mut self, _arrival_s: f64, _signals: &[RegionSignals]) -> usize {
+        0
+    }
+    fn name(&self) -> &'static str {
+        "static-home"
+    }
+}
+
+/// Route to the lowest effective-CI region, ignoring latency.
+struct GreedyCiPolicy;
+impl RoutePolicy for GreedyCiPolicy {
+    fn route(&mut self, _arrival_s: f64, signals: &[RegionSignals]) -> usize {
+        argmin_by(signals, effective_cost)
+    }
+    fn name(&self) -> &'static str {
+        "greedy-ci"
+    }
+}
+
+/// Lowest effective CI among regions whose RTT fits inside the TTFT
+/// SLO budget (a remote hop may spend at most a quarter of it); falls
+/// back to home when nothing remote is feasible.
+struct SloCarbonPolicy {
+    slo_ttft_s: f64,
+}
+impl RoutePolicy for SloCarbonPolicy {
+    fn route(&mut self, _arrival_s: f64, signals: &[RegionSignals]) -> usize {
+        let budget = 0.25 * self.slo_ttft_s;
+        argmin_by(signals, |s| {
+            if s.rtt_s <= budget {
+                effective_cost(s)
+            } else {
+                f64::INFINITY
+            }
+        })
+    }
+    fn name(&self) -> &'static str {
+        "latency-slo-carbon"
+    }
+}
+
+/// Follow the renewables: effective CI discounted by how full the
+/// region's battery is — stored clean energy makes a region cheaper.
+struct SocAwarePolicy;
+impl RoutePolicy for SocAwarePolicy {
+    fn route(&mut self, _arrival_s: f64, signals: &[RegionSignals]) -> usize {
+        argmin_by(signals, |s| {
+            let span = (s.soc_max - s.soc_min).max(1e-9);
+            let frac = ((s.battery_soc - s.soc_min) / span).clamp(0.0, 1.0);
+            effective_cost(s) * (1.0 - 0.5 * frac)
+        })
+    }
+    fn name(&self) -> &'static str {
+        "battery-soc-aware"
+    }
+}
+
+/// The built-in routing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicyKind {
+    StaticHome,
+    GreedyCi,
+    LatencySloCarbon,
+    BatterySocAware,
+}
+
+impl RoutePolicyKind {
+    pub fn all() -> [RoutePolicyKind; 4] {
+        [
+            RoutePolicyKind::StaticHome,
+            RoutePolicyKind::GreedyCi,
+            RoutePolicyKind::LatencySloCarbon,
+            RoutePolicyKind::BatterySocAware,
+        ]
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicyKind::StaticHome => "static-home",
+            RoutePolicyKind::GreedyCi => "greedy-ci",
+            RoutePolicyKind::LatencySloCarbon => "latency-slo-carbon",
+            RoutePolicyKind::BatterySocAware => "battery-soc-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoutePolicyKind> {
+        match s.trim().replace('_', "-").as_str() {
+            "static-home" | "static" => Some(RoutePolicyKind::StaticHome),
+            "greedy-ci" | "greedy" => Some(RoutePolicyKind::GreedyCi),
+            "latency-slo-carbon" | "slo-carbon" => Some(RoutePolicyKind::LatencySloCarbon),
+            "battery-soc-aware" | "soc-aware" | "battery" => Some(RoutePolicyKind::BatterySocAware),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy. `slo_ttft_s` parameterizes the
+    /// latency-aware policy's RTT budget.
+    pub fn build(self, slo_ttft_s: f64) -> Box<dyn RoutePolicy> {
+        match self {
+            RoutePolicyKind::StaticHome => Box::new(StaticHomePolicy),
+            RoutePolicyKind::GreedyCi => Box::new(GreedyCiPolicy),
+            RoutePolicyKind::LatencySloCarbon => Box::new(SloCarbonPolicy { slo_ttft_s }),
+            RoutePolicyKind::BatterySocAware => Box::new(SocAwarePolicy),
+        }
+    }
+}
+
+/// One region of the global fleet: its grid environment plus the
+/// simulated cluster and microgrid it owns.
+#[derive(Debug, Clone)]
+pub struct FleetRegion {
+    pub region: Region,
+    /// Initial (and, without `scale`, fixed) replica count.
+    pub replicas: u32,
+    /// Per-region autoscaler; `None` keeps the fleet fixed.
+    pub scale: Option<AutoscaleConfig>,
+    /// One-way RTT from the router (home region) to here, seconds.
+    pub rtt_s: f64,
+    /// Microgrid parameters: battery, interval, transfer overhead.
+    pub cosim: CosimConfig,
+}
+
+impl FleetRegion {
+    /// A region with the default microgrid, no autoscaler, no RTT.
+    pub fn new(region: Region, replicas: u32) -> Self {
+        FleetRegion {
+            region,
+            replicas,
+            scale: None,
+            rtt_s: 0.0,
+            cosim: CosimConfig::default(),
+        }
+    }
+}
+
+/// The whole global fleet: regions (index 0 = home, where requests
+/// arrive), the routing policy, and an optional power-model override.
+#[derive(Debug, Clone)]
+pub struct GlobalFleetSpec {
+    pub regions: Vec<FleetRegion>,
+    pub policy: RoutePolicyKind,
+    /// Override the accounting power model (e.g. a zero-idle model for
+    /// the degenerate-case oracle test, where always-on remote
+    /// replicas must not book idle watts the closed-form path never
+    /// sees). `None` uses the paper-default model.
+    pub power_model: Option<PowerModel>,
+}
+
+/// Per-region outcome: routing, fleet shape, and the two energy views
+/// (fleet-aware accounting and microgrid co-simulation).
+pub struct RegionReport {
+    pub name: String,
+    /// Requests the policy routed here.
+    pub routed: u64,
+    pub mean_fleet: f64,
+    pub max_fleet: u32,
+    /// GPU-side accounted energy (stages + idle fill), kWh.
+    pub gpu_energy_kwh: f64,
+    /// Eq. 5 binned demand integrated over the run, kWh (equals
+    /// `gpu_energy_kwh` — the conservation test pins this).
+    pub binned_energy_kwh: f64,
+    /// Full fleet-aware accounting report (PUE, embodied, peak).
+    pub energy: EnergyReport,
+    /// Microgrid co-simulation of the region's (overhead-inflated)
+    /// demand against its CI/solar series.
+    pub cosim: CosimResult,
+    /// Battery SoC at the end of the in-engine advisory stepping.
+    pub final_soc: f64,
+}
+
+/// A complete global-routing run: the engine output plus per-region
+/// accounting and the fleet-level rollups.
+pub struct GlobalRunResult {
+    pub run: MultiFleetRun,
+    pub regions: Vec<RegionReport>,
+    /// Σ per-region GPU-side energy, kWh.
+    pub fleet_gpu_energy_kwh: f64,
+    /// Σ per-region net grid-import emissions, gCO₂.
+    pub fleet_emissions_g: f64,
+    /// Requests served outside the home region.
+    pub moved_requests: u64,
+    /// Largest per-region streaming-sink bin residency (memory bound).
+    pub peak_resident_bins: usize,
+}
+
+/// Build a region's live grid environment: the same
+/// [`CarbonIntensityTrace`]/[`SolarModel`] sampling as
+/// [`region_series`], wrapped as closures with the time-zone phase
+/// baked in, so the router's live signals and the post-hoc accounting
+/// draw from one source of truth.
+fn region_grid(r: &Region, seed: u64) -> GridEnv {
+    let trace = CarbonIntensityTrace {
+        mean: r.ci_mean,
+        seed,
+        ..CarbonIntensityTrace::default()
+    };
+    let ci_low = (trace.mean - trace.diurnal_amplitude).max(40.0);
+    let ci_high = trace.mean + trace.diurnal_amplitude;
+    let solar = SolarModel {
+        capacity_w: r.solar_w,
+        ..SolarModel::default()
+    };
+    let off = r.tz_offset_h * 3600.0;
+    GridEnv::from_fns(
+        ci_low,
+        ci_high,
+        r.solar_w,
+        0.0,
+        move |t| trace.base_at(t + off),
+        move |t| solar.clear_sky_w(t + off),
+    )
+}
+
+/// Run the global fleet: route every request of `source` across
+/// `spec.regions` under `spec.policy`, then account each region's
+/// energy and emissions. `tap` (when watching) observes the home
+/// region's telemetry live.
+pub fn run_global(
+    cfg: &SimConfig,
+    spec: &GlobalFleetSpec,
+    source: &mut dyn RequestSource,
+    tap: Option<live::CaseTap>,
+) -> Result<GlobalRunResult> {
+    ensure!(
+        !spec.regions.is_empty(),
+        "global fleet needs at least one region"
+    );
+    let n = spec.regions.len();
+    let acc = EnergyAccountant::paper_default(cfg)?;
+    let model = spec.power_model.unwrap_or(acc.power_model);
+    let interval_s = spec.regions[0].cosim.interval_s;
+
+    let mut sinks = Vec::with_capacity(n);
+    let mut reqsinks = Vec::with_capacity(n);
+    let mut grids = Vec::with_capacity(n);
+    let mut microgrids = Vec::with_capacity(n);
+    for (i, fr) in spec.regions.iter().enumerate() {
+        sinks.push(StreamingSink::with_model(cfg, fr.cosim.interval_s, model)?);
+        reqsinks.push(StreamingRequestSink::new(cfg));
+        grids.push(region_grid(&fr.region, cfg.seed ^ (i as u64)));
+        microgrids.push(Microgrid::new(Battery::from_config(&fr.cosim)));
+    }
+    // Advisory per-replica wattage for the in-engine microgrid/router
+    // signals (authoritative energy comes from the post-hoc binning).
+    let power_est_w = model.power(0.3, true) * cfg.gpus_per_replica() as f64;
+
+    let cost = build_cost_model(cfg)?;
+    let mut policy = spec.policy.build(cfg.slo_ttft_s);
+    let grid_ci = acc.grid_ci;
+
+    let (home_sinks, rest_sinks) = sinks.split_at_mut(1);
+    let (home_reqs, rest_reqs) = reqsinks.split_at_mut(1);
+    let run = live::run_observed(
+        tap,
+        cfg,
+        grid_ci,
+        &mut home_sinks[0],
+        &mut home_reqs[0],
+        |s, r| {
+            let mut grids_it = grids.into_iter();
+            let mut micro_it = microgrids.into_iter();
+            let mut specs: Vec<RegionSim<'_>> = Vec::with_capacity(n);
+            let fr0 = &spec.regions[0];
+            specs.push(RegionSim {
+                replicas: fr0.replicas,
+                scale: fr0.scale.clone(),
+                grid: grids_it.next().unwrap(),
+                rtt_s: 0.0,
+                power_est_w,
+                microgrid: micro_it.next().unwrap(),
+                interval_s: fr0.cosim.interval_s,
+                transfer_overhead: 0.0,
+                sink: s,
+                requests: r,
+            });
+            for ((fr, sk), rq) in spec.regions[1..]
+                .iter()
+                .zip(rest_sinks.iter_mut())
+                .zip(rest_reqs.iter_mut())
+            {
+                specs.push(RegionSim {
+                    replicas: fr.replicas,
+                    scale: fr.scale.clone(),
+                    grid: grids_it.next().unwrap(),
+                    rtt_s: fr.rtt_s.max(0.0),
+                    power_est_w,
+                    microgrid: micro_it.next().unwrap(),
+                    interval_s: fr.cosim.interval_s,
+                    transfer_overhead: fr.cosim.transfer_overhead,
+                    sink: sk,
+                    requests: rq,
+                });
+            }
+            sim::run_multifleet(cfg, source, cost, policy.as_mut(), specs)
+        },
+    )?;
+
+    // Post-hoc authoritative accounting: bin each region's streamed
+    // stages against its own timeline, then co-simulate the
+    // (overhead-inflated) demand against the oracle's CI/solar series.
+    let rlist: Vec<Region> = spec.regions.iter().map(|fr| fr.region.clone()).collect();
+    let mut binned = Vec::with_capacity(n);
+    for (i, sk) in sinks.iter().enumerate() {
+        binned.push(sk.binned(cfg, &run.per_region[i].timeline)?);
+    }
+    let n_bins = binned.iter().map(|b| b.len()).max().unwrap_or(0);
+    let (ci, solar) = region_series(&rlist, n_bins, interval_s, cfg.seed);
+
+    let racc = EnergyAccountant {
+        power_model: model,
+        ..acc
+    };
+    let mut regions_out = Vec::with_capacity(n);
+    let mut fleet_gpu_energy_kwh = 0.0;
+    let mut fleet_emissions_g = 0.0;
+    for (i, fr) in spec.regions.iter().enumerate() {
+        let rr = &run.per_region[i];
+        let energy = racc.report_fleet(cfg, sinks[i].aggregates(), &rr.timeline);
+        let b = &binned[i];
+        let len = b.len();
+        let overhead = if i == 0 {
+            1.0
+        } else {
+            1.0 + fr.cosim.transfer_overhead
+        };
+        let load: Vec<f64> = b.power_w.iter().map(|w| w * overhead).collect();
+        let mut env = Environment::new(fr.cosim.clone());
+        let cosim = env.run_native(&load, &solar[i][..len], &ci[i][..len])?;
+        fleet_gpu_energy_kwh += energy.gpu_energy_kwh;
+        fleet_emissions_g += cosim.net_footprint_g;
+        regions_out.push(RegionReport {
+            name: fr.region.name.clone(),
+            routed: rr.routed,
+            mean_fleet: rr.timeline.mean_fleet(),
+            max_fleet: rr.timeline.max_fleet(),
+            gpu_energy_kwh: energy.gpu_energy_kwh,
+            binned_energy_kwh: b.total_energy_kwh(),
+            energy,
+            cosim,
+            final_soc: rr.final_soc,
+        });
+    }
+    let moved_requests = run.per_region.iter().skip(1).map(|r| r.routed).sum();
+    let peak_resident_bins = sinks
+        .iter()
+        .map(|s| s.peak_resident_bins())
+        .max()
+        .unwrap_or(0);
+    Ok(GlobalRunResult {
+        run,
+        regions: regions_out,
+        fleet_gpu_energy_kwh,
+        fleet_emissions_g,
+        moved_requests,
+        peak_resident_bins,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(ci: f64, overhead: f64, rtt_s: f64) -> RegionSignals {
+        RegionSignals {
+            ci_g_per_kwh: ci,
+            solar_w: 0.0,
+            est_demand_w: 300.0,
+            battery_soc: 0.5,
+            soc_min: 0.2,
+            soc_max: 0.8,
+            queue_depth: 0,
+            active_replicas: 1,
+            rtt_s,
+            transfer_overhead: overhead,
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for k in RoutePolicyKind::all() {
+            assert_eq!(RoutePolicyKind::parse(k.as_str()), Some(k));
+            assert_eq!(k.build(0.5).name(), k.as_str());
+        }
+        assert_eq!(
+            RoutePolicyKind::parse("greedy_ci"),
+            Some(RoutePolicyKind::GreedyCi)
+        );
+        assert_eq!(
+            RoutePolicyKind::parse("static"),
+            Some(RoutePolicyKind::StaticHome)
+        );
+        assert_eq!(RoutePolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn static_home_always_routes_home() {
+        let mut p = RoutePolicyKind::StaticHome.build(0.5);
+        let s = [sig(900.0, 0.0, 0.0), sig(10.0, 0.05, 0.05)];
+        assert_eq!(p.route(0.0, &s), 0);
+    }
+
+    #[test]
+    fn greedy_ci_picks_cheapest_effective_and_breaks_ties_home() {
+        let mut p = RoutePolicyKind::GreedyCi.build(0.5);
+        // Remote is cheaper even after the 5% transfer overhead.
+        let s = [sig(400.0, 0.0, 0.0), sig(120.0, 0.05, 0.05)];
+        assert_eq!(p.route(0.0, &s), 1);
+        // Equal effective cost: the strict-< scan keeps traffic home.
+        let s = [sig(105.0, 0.0, 0.0), sig(100.0, 0.05, 0.05)];
+        assert_eq!(p.route(0.0, &s), 0);
+        // Solar headroom discounts a region's effective CI.
+        let mut covered = sig(400.0, 0.0, 0.0);
+        covered.solar_w = 300.0; // covers the whole est_demand_w
+        let s = [sig(120.0, 0.0, 0.0), covered];
+        assert_eq!(p.route(0.0, &s), 1);
+    }
+
+    #[test]
+    fn slo_policy_excludes_regions_beyond_the_rtt_budget() {
+        // TTFT SLO 0.4 s → RTT budget 0.1 s.
+        let mut p = RoutePolicyKind::LatencySloCarbon.build(0.4);
+        let far = sig(10.0, 0.05, 0.2); // cheapest, but too far
+        let near = sig(120.0, 0.05, 0.05);
+        assert_eq!(p.route(0.0, &[sig(400.0, 0.0, 0.0), far, near]), 2);
+        // Nothing feasible but home → home.
+        assert_eq!(p.route(0.0, &[sig(400.0, 0.0, 0.0), far]), 0);
+    }
+
+    #[test]
+    fn soc_aware_prefers_the_fuller_battery_at_equal_ci() {
+        let mut p = RoutePolicyKind::BatterySocAware.build(0.5);
+        let mut full = sig(200.0, 0.0, 0.0);
+        full.battery_soc = 0.8;
+        let mut empty = sig(200.0, 0.0, 0.0);
+        empty.battery_soc = 0.2;
+        assert_eq!(p.route(0.0, &[empty, full]), 1);
+    }
+}

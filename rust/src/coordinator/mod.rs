@@ -1,7 +1,10 @@
 //! The L3 coordinator binary's guts: CLI dispatch plus the
 //! carbon-aware extensions (§5 "future directions", implemented):
-//! multi-region routing and the model-size policy explorer.
+//! multi-region routing — closed-form ([`multiregion`]) and
+//! request-granularity ([`fleet`]) — and the model-size policy
+//! explorer.
 
 pub mod cli;
+pub mod fleet;
 pub mod multiregion;
 pub mod policy;

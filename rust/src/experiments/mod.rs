@@ -31,6 +31,7 @@ pub mod casestudy;
 pub mod ablation;
 pub mod extensions;
 pub mod exp_autoscale;
+pub mod exp_multiregion;
 
 pub use common::{run_case, CaseResult};
 
@@ -86,10 +87,11 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
         "sched" => extensions::run_sched(out_dir, fast).map(|_| ()),
         "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),
         "autoscale" => exp_autoscale::run(out_dir, fast).map(|_| ()),
+        "multiregion" => exp_multiregion::run(out_dir, fast).map(|_| ()),
         "all" => {
             for id in [
                 "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy",
-                "ablation", "sched", "gpu", "autoscale",
+                "ablation", "sched", "gpu", "autoscale", "multiregion",
             ] {
                 eprintln!("=== experiment {id} ===");
                 run_by_id(id, out_dir, fast)?;
@@ -97,7 +99,7 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, autoscale, all"
+            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, autoscale, multiregion, all"
         ),
     }
 }

@@ -116,23 +116,25 @@ impl BinAccumulator {
         }
         energy.resize(n_bins, 0.0);
         covered.resize(n_bins, 0.0);
-        idle_fill(cfg, fleet, self.interval_s, energy, covered)
+        idle_fill(cfg, fleet, self.interval_s, self.p_idle, energy, covered)
     }
 }
 
 /// Shared Eq. 5 tail: idle-fill live GPU-time not covered by stages
 /// and convert per-bin energy to average power. `energy`/`covered`
-/// must already have exactly the horizon's bin count.
+/// must already have exactly the horizon's bin count. `p_idle` is the
+/// same idle wattage the stages were accumulated under — callers with
+/// an overridden power model (e.g. an idle-free accounting model) get
+/// a profile coherent with that model rather than the hardware spec.
 fn idle_fill(
     cfg: &SimConfig,
     fleet: &FleetTimeline,
     interval_s: f64,
+    p_idle: f64,
     energy: Vec<f64>,
     covered: Vec<f64>,
 ) -> Result<BinnedProfile> {
     let horizon_s = fleet.horizon_s;
-    let gpu = cfg.gpu_spec()?;
-    let p_idle = gpu.p_idle;
     let gpus_per_replica = cfg.gpus_per_replica() as f64;
     let n_bins = energy.len();
 
@@ -205,7 +207,7 @@ pub fn bin_stages_fleet(
         }
         BinningBackend::Hlo => {
             let (energy, covered) = bin_hlo(log, p_idle, interval_s, n_bins)?;
-            idle_fill(cfg, fleet, interval_s, energy, covered)
+            idle_fill(cfg, fleet, interval_s, p_idle, energy, covered)
         }
     }
 }

@@ -55,6 +55,8 @@ use crate::autoscale::{
 };
 use crate::cluster::topology::ClusterTopology;
 use crate::config::simconfig::{AutoscaleConfig, SimConfig};
+use crate::coordinator::fleet::{RegionSignals, RoutePolicy};
+use crate::cosim::Microgrid;
 use crate::exec::batch::BatchDesc;
 use crate::exec::{build_cost_model, OracleStats, StageCostModel};
 use crate::scheduler::replica::{ReplicaScheduler, StagePlan};
@@ -63,8 +65,8 @@ use crate::sim::arena::StageScratch;
 use crate::sim::calq::{CalendarQueue, EventQueue, HeapQueue};
 use crate::sim::metrics::SimMetrics;
 use crate::telemetry::{
-    RequestLog, RequestSink, RequestStats, StageLog, StageRecord, StageSink, StageStats,
-    StreamingRequestSink,
+    LatencySketches, RequestLog, RequestSink, RequestStats, StageLog, StageRecord, StageSink,
+    StageStats, StreamingRequestSink,
 };
 use crate::workload::{
     LiveRequests, Request, RequestSource, RequestStore, Trace, WorkloadGenerator,
@@ -1042,6 +1044,693 @@ fn run_autoscaled_with_sinks_on<Q: EventQueue<AsEventKind>>(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Multi-fleet (regional) engine — DESIGN.md §13.
+// ---------------------------------------------------------------------------
+
+/// Events of the multi-fleet engine: the autoscaled events tagged with
+/// their region, plus the routed-arrival hop.
+#[derive(Debug)]
+enum MrEventKind {
+    /// A request arriving at the global router (home region's door).
+    Arrival { request: u64 },
+    /// A routed request landing in a remote region after the RTT.
+    RemoteArrival { region: u32, request: u64 },
+    IterDone { region: u32, replica: u32, plan: StagePlan },
+    ReplicaOnline { region: u32, replica: u32 },
+    ScaleTick { region: u32 },
+}
+
+/// One region's slice of a multi-fleet run: the simulated cluster,
+/// its grid environment, the advisory microgrid, and the caller-owned
+/// telemetry sinks. Replica ids are region-local (dense from 0).
+pub struct RegionSim<'a> {
+    /// Initial (and, without `scale`, fixed) replica count.
+    pub replicas: u32,
+    /// Per-region autoscaler; `None` keeps the fleet fixed.
+    pub scale: Option<AutoscaleConfig>,
+    /// Live CI/solar signals for this region's router + controller.
+    pub grid: GridEnv,
+    /// One-way RTT from the router to this region, seconds (0 = home).
+    pub rtt_s: f64,
+    /// Advisory per-replica demand estimate, W (drives the microgrid
+    /// stepping the router's battery-SoC signal comes from; the
+    /// authoritative energy accounting bins the stage records instead).
+    pub power_est_w: f64,
+    /// Battery + solar microgrid, stepped on `interval_s` inside the
+    /// run so routing sees a live state of charge.
+    pub microgrid: Microgrid,
+    /// Microgrid stepping interval, seconds.
+    pub interval_s: f64,
+    /// Fractional energy overhead of serving a moved request here
+    /// (0 at home) — surfaced to the route policy.
+    pub transfer_overhead: f64,
+    pub sink: &'a mut dyn StageSink,
+    pub requests: &'a mut dyn RequestSink,
+}
+
+/// Per-region outcome of a multi-fleet run.
+pub struct RegionRun {
+    /// Replica lifecycle (region-local ids, shared clock horizon).
+    pub timeline: FleetTimeline,
+    /// Requests the route policy sent here.
+    pub routed: u64,
+    /// This region's stage aggregates (its sink's view).
+    pub stage_stats: StageStats,
+    /// This region's request aggregates (`submitted` = `routed`).
+    pub request_stats: RequestStats,
+    /// Scaling decisions of the region's controller (empty if fixed).
+    pub decisions: Vec<ScaleDecision>,
+    /// Scaling policy name, or `"fixed"` without a controller.
+    pub scaling_policy: &'static str,
+    /// Battery SoC after the advisory microgrid stepping.
+    pub final_soc: f64,
+}
+
+/// What a multi-fleet run produces: fleet-wide metrics (merged across
+/// regions) plus the per-region breakdown.
+pub struct MultiFleetRun {
+    pub config: SimConfig,
+    pub metrics: SimMetrics,
+    /// Stage aggregates merged across every region.
+    pub stage_stats: StageStats,
+    /// Fleet-wide request aggregates (an internal sink fed every
+    /// completion; per-region sinks keep their own).
+    pub request_stats: RequestStats,
+    /// Fleet-wide latency sketches (for telemetry sidecars).
+    pub sketches: LatencySketches,
+    pub per_region: Vec<RegionRun>,
+    pub peak_live_requests: usize,
+    pub oracle: OracleStats,
+    /// Name of the route policy that drove the run.
+    pub route_policy: &'static str,
+}
+
+/// Internal per-region state of the multi-fleet core.
+struct MrRegion<'a> {
+    spec: RegionSim<'a>,
+    replicas: Vec<ReplicaScheduler>,
+    rstate: Vec<RState>,
+    busy: Vec<bool>,
+    router: Router,
+    timeline: FleetTimeline,
+    controller: Option<FleetController>,
+    window: CompletionWindow,
+    routed: u64,
+    /// Microgrid stepping frontier (advisory accounting clock).
+    grid_t: f64,
+}
+
+impl MrRegion<'_> {
+    fn active_count(&self) -> u32 {
+        self.rstate.iter().filter(|&&s| s == RState::Active).count() as u32
+    }
+
+    /// Step the advisory microgrid up to `now` in `interval_s` chunks:
+    /// active replicas draw the estimated wattage against the region's
+    /// live solar/CI, moving the battery SoC the router reads.
+    fn advance_microgrid(&mut self, now: f64) {
+        let dt = self.spec.interval_s;
+        if dt <= 0.0 {
+            return;
+        }
+        while self.grid_t + dt <= now {
+            let g = self.spec.grid.at(self.grid_t);
+            let demand = self.active_count() as f64 * self.spec.power_est_w;
+            self.spec
+                .microgrid
+                .step(self.grid_t, demand, g.solar_w, g.ci, dt);
+            self.grid_t += dt;
+        }
+    }
+
+    /// Snapshot the live routing signals at `now`.
+    fn signals(&self, now: f64) -> RegionSignals {
+        let g = self.spec.grid.at(now);
+        let active = self.active_count();
+        let b = &self.spec.microgrid.battery;
+        RegionSignals {
+            ci_g_per_kwh: g.ci,
+            solar_w: g.solar_w,
+            est_demand_w: active as f64 * self.spec.power_est_w,
+            battery_soc: b.soc,
+            soc_min: b.soc_min,
+            soc_max: b.soc_max,
+            queue_depth: self.replicas.iter().map(|r| r.outstanding).sum(),
+            active_replicas: active,
+            rtt_s: self.spec.rtt_s,
+            transfer_overhead: self.spec.transfer_overhead,
+        }
+    }
+}
+
+/// Start an iteration on region `region`, replica `idx`, if it is free
+/// and has runnable work; pushes the completion event and counts it as
+/// in-flight work.
+#[allow(clippy::too_many_arguments)]
+fn mr_try_start(
+    region: u32,
+    idx: usize,
+    now: f64,
+    cfg: &SimConfig,
+    idle_gpus_per_stage: u32,
+    rg: &mut MrRegion<'_>,
+    live: &mut LiveRequests,
+    cost: &mut dyn StageCostModel,
+    batch: &mut BatchDesc,
+    scratch: &mut StageScratch,
+    queue: &mut CalendarQueue<MrEventKind>,
+    inflight: &mut u64,
+) {
+    if rg.busy[idx] {
+        return;
+    }
+    if let Some((at, plan)) = plan_iteration(
+        idx,
+        now,
+        cfg,
+        idle_gpus_per_stage,
+        &mut rg.replicas,
+        live,
+        cost,
+        &mut *rg.spec.sink,
+        batch,
+        scratch,
+    ) {
+        rg.busy[idx] = true;
+        *inflight += 1;
+        queue.push(
+            at,
+            MrEventKind::IterDone {
+                region,
+                replica: idx as u32,
+                plan,
+            },
+        );
+    }
+}
+
+/// Admit one request into region `region` (home arrivals and remote
+/// landings share this): route it across the region's replicas and
+/// kick the target. A fixed-fleet region uses the plain `route` call
+/// the fixed core uses — the single-region byte-neutrality hinges on
+/// that — while an autoscaled region routes among Active replicas.
+#[allow(clippy::too_many_arguments)]
+fn mr_admit(
+    region: u32,
+    request: u64,
+    now: f64,
+    cfg: &SimConfig,
+    idle_gpus_per_stage: u32,
+    rg: &mut MrRegion<'_>,
+    live: &mut LiveRequests,
+    cost: &mut dyn StageCostModel,
+    batch: &mut BatchDesc,
+    scratch: &mut StageScratch,
+    queue: &mut CalendarQueue<MrEventKind>,
+    inflight: &mut u64,
+) {
+    scratch.outstanding.clear();
+    scratch
+        .outstanding
+        .extend(rg.replicas.iter().map(|r| r.outstanding));
+    let target = if rg.controller.is_some() {
+        scratch.eligible.clear();
+        scratch.eligible.extend(
+            rg.rstate
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s == RState::Active)
+                .map(|(i, _)| i),
+        );
+        rg.router.route_among(&scratch.eligible, &scratch.outstanding)
+    } else {
+        rg.router.route(&scratch.outstanding)
+    };
+    rg.replicas[target].enqueue(request);
+    mr_try_start(
+        region,
+        target,
+        now,
+        cfg,
+        idle_gpus_per_stage,
+        rg,
+        live,
+        cost,
+        batch,
+        scratch,
+        queue,
+        inflight,
+    );
+}
+
+/// Multi-fleet engine core (DESIGN.md §13): every region's fleet,
+/// controller, and microgrid advance on one shared clock; `policy`
+/// assigns each arriving request to a region from live signals, and a
+/// remote assignment pays the region's RTT before admission.
+///
+/// With one region configured the event sequence — and therefore the
+/// per-region sink telemetry — is byte-identical to
+/// [`run_with_sinks`]: same pull/route/plan order, no control-plane
+/// events (ticks exist only for autoscaled regions), no signal
+/// snapshots (the single-region fast path skips the router entirely).
+///
+/// Termination: `inflight` counts queued workload events (arrivals,
+/// remote hops, iterations, cold starts). Scale ticks re-arm only
+/// while such work exists, so idle regions' mutual tick chains cannot
+/// keep the loop alive — and a deadlocked run drains to zero and is
+/// reported by the final ensure, exactly like the single-fleet cores.
+pub fn run_multifleet(
+    cfg: &SimConfig,
+    source: &mut dyn RequestSource,
+    mut cost: Box<dyn StageCostModel>,
+    policy: &mut dyn RoutePolicy,
+    regions: Vec<RegionSim<'_>>,
+) -> Result<MultiFleetRun> {
+    cfg.validate()?;
+    anyhow::ensure!(!regions.is_empty(), "multi-fleet run needs at least one region");
+    let topo = ClusterTopology::from_config(cfg)?;
+    let mut queue: CalendarQueue<MrEventKind> = CalendarQueue::new();
+
+    let mut fleet: Vec<MrRegion<'_>> = Vec::with_capacity(regions.len());
+    for (ri, spec) in regions.into_iter().enumerate() {
+        if let Some(s) = &spec.scale {
+            s.validate()?;
+        }
+        let init = match &spec.scale {
+            Some(s) => spec.replicas.clamp(s.min_replicas, s.max_replicas),
+            None => spec.replicas,
+        };
+        anyhow::ensure!(init >= 1, "region {ri} has no replicas");
+        let replicas: Vec<ReplicaScheduler> = (0..init)
+            .map(|i| ReplicaScheduler::new(i, cfg))
+            .collect::<Result<_>>()?;
+        let mut timeline = FleetTimeline::new();
+        for i in 0..init {
+            timeline.provision(i, 0.0);
+            timeline.online(i, 0.0);
+        }
+        let controller = spec
+            .scale
+            .as_ref()
+            .map(|s| FleetController::new(s.clone(), build_policy(s, init)));
+        let window_s = spec
+            .scale
+            .as_ref()
+            .map(|s| (s.decision_interval_s * 5.0).max(300.0))
+            .unwrap_or(300.0);
+        if let Some(s) = &spec.scale {
+            queue.push(
+                s.decision_interval_s,
+                MrEventKind::ScaleTick { region: ri as u32 },
+            );
+        }
+        fleet.push(MrRegion {
+            replicas,
+            rstate: vec![RState::Active; init as usize],
+            busy: vec![false; init as usize],
+            router: Router::new(cfg.router, init as usize),
+            timeline,
+            controller,
+            window: CompletionWindow::new(window_s),
+            routed: 0,
+            grid_t: 0.0,
+            spec,
+        });
+    }
+    let n_regions = fleet.len();
+
+    let mut live = LiveRequests::new();
+    let mut scratch = StageScratch::new();
+    let mut fleet_reqs = StreamingRequestSink::new(cfg);
+    let mut submitted = 0u64;
+    let mut source_done = !pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
+        MrEventKind::Arrival { request: id }
+    });
+    // Queued workload events (everything but scale ticks): the tick
+    // chains' liveness condition.
+    let mut inflight: u64 = if source_done { 0 } else { 1 };
+
+    let mut batch = BatchDesc::new(topo.model, topo.gpu, cfg.tp, cfg.pp, cfg.exec.clone());
+    let mut finished_count = 0u64;
+    let idle_gpus_per_stage = (cfg.pp - 1) * cfg.tp;
+    let mut signals: Vec<RegionSignals> = Vec::with_capacity(n_regions);
+
+    let mut last_time = 0.0f64;
+    while let Some((now, ev)) = queue.pop() {
+        if !matches!(ev, MrEventKind::ScaleTick { .. }) {
+            inflight -= 1;
+        }
+        // Only workload progress defines the makespan (same rule as
+        // the autoscaled core): trailing control-plane events must not
+        // inflate it or the timeline horizons.
+        if matches!(
+            ev,
+            MrEventKind::Arrival { .. }
+                | MrEventKind::RemoteArrival { .. }
+                | MrEventKind::IterDone { .. }
+        ) {
+            last_time = last_time.max(now);
+        }
+        match ev {
+            MrEventKind::Arrival { request } => {
+                if !source_done {
+                    source_done =
+                        !pull_arrival(source, &mut live, &mut queue, &mut submitted, |id| {
+                            MrEventKind::Arrival { request: id }
+                        });
+                    if !source_done {
+                        inflight += 1;
+                    }
+                }
+                let target = if n_regions == 1 {
+                    // Single-region fast path: no snapshots, no policy
+                    // call — keeps the event stream byte-identical to
+                    // the fixed core.
+                    0
+                } else {
+                    signals.clear();
+                    for rg in fleet.iter_mut() {
+                        rg.advance_microgrid(now);
+                        signals.push(rg.signals(now));
+                    }
+                    policy.route(now, &signals).min(n_regions - 1)
+                };
+                fleet[target].routed += 1;
+                if target == 0 {
+                    mr_admit(
+                        0,
+                        request,
+                        now,
+                        cfg,
+                        idle_gpus_per_stage,
+                        &mut fleet[0],
+                        &mut live,
+                        cost.as_mut(),
+                        &mut batch,
+                        &mut scratch,
+                        &mut queue,
+                        &mut inflight,
+                    );
+                } else {
+                    let rtt = fleet[target].spec.rtt_s.max(0.0);
+                    queue.push(
+                        now + rtt,
+                        MrEventKind::RemoteArrival {
+                            region: target as u32,
+                            request,
+                        },
+                    );
+                    inflight += 1;
+                }
+            }
+            MrEventKind::RemoteArrival { region, request } => {
+                mr_admit(
+                    region,
+                    request,
+                    now,
+                    cfg,
+                    idle_gpus_per_stage,
+                    &mut fleet[region as usize],
+                    &mut live,
+                    cost.as_mut(),
+                    &mut batch,
+                    &mut scratch,
+                    &mut queue,
+                    &mut inflight,
+                );
+            }
+            MrEventKind::IterDone { region, replica, plan } => {
+                let idx = replica as usize;
+                let rg = &mut fleet[region as usize];
+                scratch.finished.clear();
+                rg.replicas[idx].complete_stage_into(
+                    &mut live,
+                    &plan.entries,
+                    now,
+                    &mut scratch.finished,
+                );
+                finished_count += retire_finished(
+                    &scratch.finished,
+                    &mut live,
+                    &mut [
+                        &mut rg.window as &mut dyn RequestSink,
+                        &mut *rg.spec.requests,
+                        &mut fleet_reqs,
+                    ],
+                );
+                scratch.recycle_entries(plan.entries);
+                rg.busy[idx] = false;
+                mr_try_start(
+                    region,
+                    idx,
+                    now,
+                    cfg,
+                    idle_gpus_per_stage,
+                    rg,
+                    &mut live,
+                    cost.as_mut(),
+                    &mut batch,
+                    &mut scratch,
+                    &mut queue,
+                    &mut inflight,
+                );
+                if rg.rstate[idx] == RState::Draining {
+                    if rg.replicas[idx].queue_len() > 0 {
+                        for t in reroute_queue(idx, &rg.rstate, &mut rg.replicas, &mut rg.router)
+                        {
+                            mr_try_start(
+                                region,
+                                t,
+                                now,
+                                cfg,
+                                idle_gpus_per_stage,
+                                rg,
+                                &mut live,
+                                cost.as_mut(),
+                                &mut batch,
+                                &mut scratch,
+                                &mut queue,
+                                &mut inflight,
+                            );
+                        }
+                    }
+                    if !rg.busy[idx] && !rg.replicas[idx].has_work() {
+                        rg.rstate[idx] = RState::Offline;
+                        rg.timeline.offline(replica, now);
+                    }
+                }
+            }
+            MrEventKind::ReplicaOnline { region, replica } => {
+                if source_done && finished_count >= submitted {
+                    continue; // run is over; don't pollute the timeline
+                }
+                let idx = replica as usize;
+                let rg = &mut fleet[region as usize];
+                if rg.rstate[idx] == RState::Provisioning {
+                    rg.rstate[idx] = RState::Active;
+                    rg.timeline.online(replica, now);
+                    let actives: Vec<usize> = rg
+                        .rstate
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| **s == RState::Active)
+                        .map(|(i, _)| i)
+                        .collect();
+                    rebalance_onto(idx, &actives, &mut rg.replicas);
+                    mr_try_start(
+                        region,
+                        idx,
+                        now,
+                        cfg,
+                        idle_gpus_per_stage,
+                        rg,
+                        &mut live,
+                        cost.as_mut(),
+                        &mut batch,
+                        &mut scratch,
+                        &mut queue,
+                        &mut inflight,
+                    );
+                }
+            }
+            MrEventKind::ScaleTick { region } => {
+                if source_done && finished_count >= submitted {
+                    continue; // run is over; stop this region's chain
+                }
+                let rg = &mut fleet[region as usize];
+                let (decision_interval_s, cold_start_s) = match &rg.spec.scale {
+                    Some(s) => (s.decision_interval_s, s.cold_start_s),
+                    None => continue,
+                };
+                rg.window.prune(now);
+                let active = rg.active_count();
+                let pending = rg
+                    .rstate
+                    .iter()
+                    .filter(|&&s| s == RState::Provisioning)
+                    .count() as u32;
+                let queued: u64 = rg.replicas.iter().map(|r| r.queue_len() as u64).sum();
+                let running: u64 = rg.replicas.iter().map(|r| r.running_len() as u64).sum();
+                let load = LoadSignals {
+                    t_s: now,
+                    queued,
+                    running,
+                    active_replicas: active,
+                    pending_replicas: pending,
+                    recent_qps: rg.window.qps(now),
+                    recent_ttft_p99_s: rg.window.ttft_p99(),
+                    recent_e2e_p99_s: rg.window.e2e_p99(),
+                    slo_ttft_s: cfg.slo_ttft_s,
+                    slo_e2e_s: cfg.slo_e2e_s,
+                };
+                let desired = rg
+                    .controller
+                    .as_mut()
+                    .expect("scale tick implies a controller")
+                    .desired(&load, &rg.spec.grid.at(now));
+                let have = active + pending;
+                if desired > have {
+                    for _ in 0..(desired - have) {
+                        let id = rg.replicas.len() as u32;
+                        rg.replicas.push(ReplicaScheduler::new(id, cfg)?);
+                        rg.rstate.push(RState::Provisioning);
+                        rg.busy.push(false);
+                        rg.timeline.provision(id, now);
+                        queue.push(
+                            now + cold_start_s,
+                            MrEventKind::ReplicaOnline {
+                                region,
+                                replica: id,
+                            },
+                        );
+                        inflight += 1;
+                    }
+                } else if desired < have {
+                    let mut shed = have - desired;
+                    // 1. Cancel cold starts (newest first): free.
+                    for idx in (0..rg.replicas.len()).rev() {
+                        if shed == 0 {
+                            break;
+                        }
+                        if rg.rstate[idx] == RState::Provisioning {
+                            rg.rstate[idx] = RState::Offline;
+                            rg.timeline.offline(idx as u32, now);
+                            shed -= 1;
+                        }
+                    }
+                    // 2. Gracefully drain the least-loaded active
+                    //    replicas, always keeping at least one active.
+                    while shed > 0 {
+                        let actives: Vec<usize> = rg
+                            .rstate
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| **s == RState::Active)
+                            .map(|(i, _)| i)
+                            .collect();
+                        if actives.len() <= 1 {
+                            break;
+                        }
+                        let victim = *actives
+                            .iter()
+                            .min_by_key(|&&i| rg.replicas[i].outstanding)
+                            .unwrap();
+                        rg.rstate[victim] = RState::Draining;
+                        rg.replicas[victim].begin_drain();
+                        rg.timeline.drain_start(victim as u32, now);
+                        for t in
+                            reroute_queue(victim, &rg.rstate, &mut rg.replicas, &mut rg.router)
+                        {
+                            mr_try_start(
+                                region,
+                                t,
+                                now,
+                                cfg,
+                                idle_gpus_per_stage,
+                                rg,
+                                &mut live,
+                                cost.as_mut(),
+                                &mut batch,
+                                &mut scratch,
+                                &mut queue,
+                                &mut inflight,
+                            );
+                        }
+                        if !rg.busy[victim] && !rg.replicas[victim].has_work() {
+                            rg.rstate[victim] = RState::Offline;
+                            rg.timeline.offline(victim as u32, now);
+                        }
+                        shed -= 1;
+                    }
+                }
+                // Re-arm only while workload events are in flight: an
+                // empty workload queue with unfinished requests is a
+                // deadlock — let every tick chain die so the loop
+                // exits and the ensure below reports it. (The plain
+                // `!queue.is_empty()` test of the single-fleet core
+                // would livelock here: two idle regions' ticks keep
+                // each other alive forever.)
+                if inflight > 0 {
+                    queue.push(
+                        now + decision_interval_s,
+                        MrEventKind::ScaleTick { region },
+                    );
+                }
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        finished_count == submitted,
+        "multi-fleet simulation ended with {finished_count}/{submitted} requests finished (deadlock?)"
+    );
+
+    let mut preemptions = 0u64;
+    let mut merged: Option<StageStats> = None;
+    let mut per_region = Vec::with_capacity(fleet.len());
+    for mut rg in fleet {
+        rg.timeline.close(last_time);
+        preemptions += rg.replicas.iter().map(|r| r.preemptions).sum::<u64>();
+        let stage_stats = rg.spec.sink.stats();
+        match merged.as_mut() {
+            None => merged = Some(stage_stats),
+            Some(m) => m.merge(&stage_stats),
+        }
+        let mut request_stats = rg.spec.requests.stats();
+        request_stats.submitted = rg.routed;
+        let scaling_policy = rg
+            .controller
+            .as_ref()
+            .map(|c| c.policy_name())
+            .unwrap_or("fixed");
+        per_region.push(RegionRun {
+            timeline: rg.timeline,
+            routed: rg.routed,
+            stage_stats,
+            request_stats,
+            decisions: rg.controller.map(|c| c.decisions).unwrap_or_default(),
+            scaling_policy,
+            final_soc: rg.spec.microgrid.battery.soc,
+        });
+    }
+    let stage_stats = merged.expect("at least one region");
+    let mut request_stats = fleet_reqs.stats();
+    request_stats.submitted = submitted;
+    let metrics = SimMetrics::compute(&request_stats, &stage_stats, last_time, preemptions);
+    Ok(MultiFleetRun {
+        config: cfg.clone(),
+        metrics,
+        stage_stats,
+        request_stats,
+        sketches: fleet_reqs.into_sketches(),
+        per_region,
+        peak_live_requests: live.peak_resident(),
+        oracle: cost.stats(),
+        route_policy: policy.name(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1453,5 +2142,122 @@ mod tests {
         for (a, b) in cal_stages.records.iter().zip(&heap_stages.records) {
             assert_eq!((a.replica, a.start_s), (b.replica, b.start_s));
         }
+    }
+
+    fn mr_region<'a>(
+        replicas: u32,
+        scale: Option<AutoscaleConfig>,
+        ci: f64,
+        rtt_s: f64,
+        sink: &'a mut dyn StageSink,
+        requests: &'a mut dyn RequestSink,
+    ) -> RegionSim<'a> {
+        use crate::battery::Battery;
+        use crate::config::simconfig::CosimConfig;
+        RegionSim {
+            replicas,
+            scale,
+            grid: GridEnv::constant(ci, 0.0),
+            rtt_s,
+            power_est_w: 300.0,
+            microgrid: Microgrid::new(Battery::from_config(&CosimConfig::default())),
+            interval_s: 60.0,
+            transfer_overhead: if rtt_s > 0.0 { 0.05 } else { 0.0 },
+            sink,
+            requests,
+        }
+    }
+
+    /// One fixed-fleet region under the multi-fleet core is the same
+    /// simulation as the fixed core: identical event order, identical
+    /// telemetry (the byte-neutrality the integration test pins at the
+    /// CSV level).
+    #[test]
+    fn single_region_multifleet_matches_fixed_fleet_engine() {
+        use crate::coordinator::fleet::RoutePolicyKind;
+
+        let mut cfg = small_cfg();
+        cfg.replicas = 2;
+        cfg.num_requests = 60;
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+
+        let mut base_stages = StageLog::new();
+        let mut base_reqs = RequestLog::new(&cfg);
+        let mut src = trace.clone().into_source();
+        let base = run_with_sinks(
+            &cfg,
+            &mut src,
+            Box::new(MockCost),
+            &mut base_stages,
+            &mut base_reqs,
+        )
+        .unwrap();
+
+        let mut stages = StageLog::new();
+        let mut reqs = RequestLog::new(&cfg);
+        let mut src = trace.into_source();
+        let mut policy = RoutePolicyKind::StaticHome.build(cfg.slo_ttft_s);
+        let region = mr_region(cfg.replicas, None, 418.2, 0.0, &mut stages, &mut reqs);
+        let run = run_multifleet(
+            &cfg,
+            &mut src,
+            Box::new(MockCost),
+            policy.as_mut(),
+            vec![region],
+        )
+        .unwrap();
+
+        assert_eq!(base.metrics.makespan_s, run.metrics.makespan_s);
+        assert_eq!(base.metrics.stage_count, run.metrics.stage_count);
+        assert_eq!(base_stages.len(), stages.len());
+        for (a, b) in base_stages.records.iter().zip(&stages.records) {
+            assert_eq!((a.replica, a.start_s, a.dt_s), (b.replica, b.start_s, b.dt_s));
+        }
+        assert_eq!(run.per_region.len(), 1);
+        assert_eq!(run.per_region[0].routed, cfg.num_requests);
+        assert_eq!(run.per_region[0].scaling_policy, "fixed");
+    }
+
+    /// Three regions (home autoscaled, remotes fixed) under greedy-ci:
+    /// every request finishes exactly once, the per-region routing
+    /// counts partition the workload, and the cheapest region wins the
+    /// bulk of the traffic despite its RTT.
+    #[test]
+    fn multifleet_routes_across_regions_and_conserves_requests() {
+        use crate::coordinator::fleet::RoutePolicyKind;
+
+        let mut cfg = small_cfg();
+        cfg.num_requests = 60;
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        let trace = Trace::new(gen.generate(cfg.num_requests));
+        let mut src = trace.into_source();
+
+        let mut s0 = StageLog::new();
+        let mut s1 = StageLog::new();
+        let mut s2 = StageLog::new();
+        let mut r0 = RequestLog::new(&cfg);
+        let mut r1 = RequestLog::new(&cfg);
+        let mut r2 = RequestLog::new(&cfg);
+        let scale = scale_cfg(ScalingPolicyKind::Reactive);
+        let mut policy = RoutePolicyKind::GreedyCi.build(cfg.slo_ttft_s);
+        let regions = vec![
+            mr_region(1, Some(scale), 418.2, 0.0, &mut s0, &mut r0),
+            mr_region(1, None, 650.0, 0.05, &mut s1, &mut r1),
+            mr_region(1, None, 120.0, 0.05, &mut s2, &mut r2),
+        ];
+        let run = run_multifleet(&cfg, &mut src, Box::new(MockCost), policy.as_mut(), regions)
+            .unwrap();
+
+        assert_eq!(run.request_stats.finished, 60);
+        let routed: u64 = run.per_region.iter().map(|r| r.routed).sum();
+        assert_eq!(routed, 60);
+        let finished: u64 = run.per_region.iter().map(|r| r.request_stats.finished).sum();
+        assert_eq!(finished, 60);
+        // Constant CIs: greedy-ci always picks the 120 g/kWh region.
+        assert_eq!(run.per_region[2].routed, 60);
+        assert_eq!(run.route_policy, "greedy-ci");
+        // The remote hop delays admission, never loses a request.
+        assert!(run.metrics.makespan_s > 0.0);
     }
 }

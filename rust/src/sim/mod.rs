@@ -11,8 +11,8 @@ pub mod metrics;
 pub use engine::{
     run, run_autoscaled, run_autoscaled_streaming, run_autoscaled_streaming_with,
     run_autoscaled_with_model, run_autoscaled_with_sink, run_autoscaled_with_sinks,
-    run_autoscaled_with_sinks_heap, run_streaming, run_streaming_with, run_with_model,
-    run_with_sink, run_with_sinks, run_with_sinks_heap, run_with_trace, AutoscaleOutput,
-    AutoscaleRun, SimOutput, SimRun,
+    run_autoscaled_with_sinks_heap, run_multifleet, run_streaming, run_streaming_with,
+    run_with_model, run_with_sink, run_with_sinks, run_with_sinks_heap, run_with_trace,
+    AutoscaleOutput, AutoscaleRun, MultiFleetRun, RegionRun, RegionSim, SimOutput, SimRun,
 };
 pub use metrics::SimMetrics;

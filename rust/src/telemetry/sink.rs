@@ -178,9 +178,12 @@ impl StreamingSink {
     /// the report will silently mix power laws.
     pub fn with_model(cfg: &SimConfig, interval_s: f64, model: PowerModel) -> Result<Self> {
         anyhow::ensure!(interval_s > 0.0, "interval must be positive");
-        let gpu = cfg.gpu_spec()?;
+        cfg.gpu_spec()?;
         Ok(StreamingSink {
-            bins: BinAccumulator::new(interval_s, gpu.p_idle),
+            // Bin under the same idle wattage the model accounts with,
+            // so an overridden model yields a coherent Eq. 5 profile
+            // (paper default: identical to the GPU spec's p_idle).
+            bins: BinAccumulator::new(interval_s, model.power(0.0, false)),
             agg: StageAggregates::default(),
             p_idle_acct: model.power(0.0, false),
             power_model: model,

@@ -4,10 +4,12 @@
 
 pub mod request;
 pub mod generator;
+pub mod split;
 pub mod store;
 pub mod trace;
 
 pub use generator::{LazyWorkload, WorkloadGenerator};
 pub use request::{Request, RequestId};
+pub use split::{split_round_robin, split_trace, SplitSource};
 pub use store::{LiveRequests, RequestSource, RequestStore};
 pub use trace::{Trace, TraceSource};

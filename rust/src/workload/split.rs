@@ -1,0 +1,111 @@
+//! Region-splitting [`RequestSource`] adapter: partition one arrival
+//! stream across N regions for independently-driven per-region fleets
+//! (the pre-partitioned counterpart of the admission-time router in
+//! [`crate::coordinator::fleet`] — useful for baselines where the
+//! assignment is fixed up front rather than decided per request).
+//!
+//! Each partition preserves arrival order and re-ids its requests
+//! densely from 0, so a partition is a self-contained workload any
+//! engine entry point accepts.
+
+use crate::workload::{Request, RequestSource, Trace};
+
+/// One region's share of a split workload. Implements
+/// [`RequestSource`], yielding its requests in arrival order.
+pub struct SplitSource {
+    requests: std::vec::IntoIter<Request>,
+}
+
+impl SplitSource {
+    pub fn len_hint(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+impl RequestSource for SplitSource {
+    fn next_request(&mut self) -> Option<Request> {
+        self.requests.next()
+    }
+}
+
+/// Split `trace` into `n_regions` partitions with an explicit
+/// assignment function (request → region index, clamped into range).
+/// Requests keep their arrival times; ids are re-issued densely per
+/// partition.
+pub fn split_trace(
+    trace: &Trace,
+    n_regions: usize,
+    mut assign: impl FnMut(&Request) -> usize,
+) -> Vec<SplitSource> {
+    assert!(n_regions > 0, "cannot split into zero regions");
+    let mut parts: Vec<Vec<Request>> = (0..n_regions).map(|_| Vec::new()).collect();
+    for r in &trace.requests {
+        let region = assign(r).min(n_regions - 1);
+        let id = parts[region].len() as u64;
+        parts[region].push(Request::new(
+            id,
+            r.arrival_s,
+            r.prefill_tokens,
+            r.decode_tokens,
+        ));
+    }
+    parts
+        .into_iter()
+        .map(|requests| SplitSource {
+            requests: requests.into_iter(),
+        })
+        .collect()
+}
+
+/// Round-robin split: request k goes to region k mod n.
+pub fn split_round_robin(trace: &Trace, n_regions: usize) -> Vec<SplitSource> {
+    let mut k = 0usize;
+    split_trace(trace, n_regions, move |_| {
+        let r = k % n_regions.max(1);
+        k += 1;
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simconfig::SimConfig;
+    use crate::workload::WorkloadGenerator;
+
+    fn trace(n: u64) -> Trace {
+        let mut cfg = SimConfig::default();
+        cfg.num_requests = n;
+        let mut gen = WorkloadGenerator::from_config(&cfg);
+        Trace::new(gen.generate(n))
+    }
+
+    #[test]
+    fn partitions_are_exhaustive_and_order_preserving() {
+        let t = trace(50);
+        let parts = split_round_robin(&t, 3);
+        assert_eq!(parts.len(), 3);
+        let mut total = 0usize;
+        for mut p in parts {
+            let mut last = f64::NEG_INFINITY;
+            let mut next_id = 0u64;
+            while let Some(r) = p.next_request() {
+                assert!(r.arrival_s >= last, "arrival order broken");
+                assert_eq!(r.id, next_id, "ids not dense");
+                last = r.arrival_s;
+                next_id += 1;
+                total += 1;
+            }
+        }
+        assert_eq!(total, 50, "split lost or duplicated requests");
+    }
+
+    #[test]
+    fn assignment_function_is_respected_and_clamped() {
+        let t = trace(10);
+        // Everything to region 7 of 2 → clamped to the last region.
+        let parts = split_trace(&t, 2, |_| 7);
+        assert_eq!(parts[0].len_hint(), 0);
+        assert_eq!(parts[1].len_hint(), 10);
+    }
+}

@@ -1,0 +1,256 @@
+//! Integration tests for the regional-fleet routing subsystem
+//! (DESIGN.md §13), pinning the three contracts the refactor claims:
+//!
+//! 1. **Degenerate-case oracle** — with zero RTT, zero cold-start, one
+//!    always-on replica per region, a zero-idle power model, no solar,
+//!    and an inert battery, the request-level greedy-ci router books
+//!    the same emissions as the legacy closed-form
+//!    `multiregion::simulate_with_overhead` greedy placement.
+//! 2. **Energy conservation** — per region, fleet-aware accounted GPU
+//!    energy == integrated Eq. 5 binned demand == the microgrid
+//!    co-simulation's load energy (at zero transfer overhead).
+//! 3. **Single-region byte-neutrality** — one region under the
+//!    `static-home` router is not just "close to" the plain engine, it
+//!    writes byte-identical stage and request CSVs.
+//!
+//! Fixtures come from the shared harness in `tests/common`.
+
+mod common;
+
+use common::{read_bytes, stream_cfg, trace_for, TempDir};
+use std::path::Path;
+use vidur_energy::autoscale::GridEnv;
+use vidur_energy::battery::Battery;
+use vidur_energy::config::simconfig::CosimConfig;
+use vidur_energy::coordinator::fleet::{
+    run_global, FleetRegion, GlobalFleetSpec, RoutePolicyKind,
+};
+use vidur_energy::coordinator::multiregion::{simulate_with_overhead, Region};
+use vidur_energy::cosim::Microgrid;
+use vidur_energy::exec::build_cost_model;
+use vidur_energy::pipeline::LoadProfile;
+use vidur_energy::power::{PowerModel, PowerParams};
+use vidur_energy::sim::{self, RegionSim};
+use vidur_energy::telemetry::{RequestLog, StageLog, StreamingSink};
+use vidur_energy::workload::Request;
+
+/// Idle-free power model: the closed-form oracle only ever sees busy
+/// demand, so the router side must not book idle watts for its
+/// always-on replicas.
+fn zero_idle_model() -> PowerModel {
+    PowerModel::MfuPowerLaw(PowerParams {
+        p_idle: 0.0,
+        p_max: 700.0,
+        mfu_sat: 0.6,
+        gamma: 1.0,
+    })
+}
+
+/// A degenerate region: no solar, battery pinned at its floor (it can
+/// never charge without solar excess, hence never discharge), so the
+/// microgrid reduces to "import everything from the grid".
+fn degenerate_region(name: &str, ci_mean: f64) -> FleetRegion {
+    let mut cosim = CosimConfig::default();
+    cosim.soc_init = cosim.soc_min;
+    cosim.solar_capacity_w = 0.0;
+    FleetRegion {
+        region: Region {
+            name: name.into(),
+            ci_mean,
+            tz_offset_h: 0.0,
+            solar_w: 0.0,
+        },
+        replicas: 1,
+        scale: None,
+        rtt_s: 0.0,
+        cosim,
+    }
+}
+
+/// Contract 1: the request-granularity router, collapsed to the legacy
+/// model's assumptions, reproduces the closed-form greedy emissions.
+/// The CI means are far enough apart that the cheap region wins at
+/// every instant, so both deciders make identical placements and any
+/// residual difference is bin-edge quantization.
+#[test]
+fn zero_rtt_degenerate_greedy_matches_closed_form_oracle() {
+    let mut cfg = stream_cfg(0x6E0D);
+    cfg.replicas = 1;
+    cfg.num_requests = 200;
+    let trace = trace_for(&cfg);
+    let model = zero_idle_model();
+    let interval_s = CosimConfig::default().interval_s;
+
+    // Reference demand profile: the same workload on one always-on
+    // replica (identical schedule to whichever region serves it all).
+    let mut sink = StreamingSink::with_model(&cfg, interval_s, model).unwrap();
+    let cost = build_cost_model(&cfg).unwrap();
+    let run = sim::run_with_sink(&cfg, trace.clone(), cost, &mut sink).unwrap();
+    let prof = sink.binned_span(&cfg, run.metrics.makespan_s).unwrap();
+    let load = LoadProfile {
+        interval_s,
+        power_w: prof.power_w.clone(),
+    };
+
+    let fleet = vec![
+        degenerate_region("home-dirty", 450.0),
+        degenerate_region("coal", 700.0),
+        degenerate_region("hydro", 60.0),
+    ];
+    let rlist: Vec<Region> = fleet.iter().map(|fr| fr.region.clone()).collect();
+    let overhead = CosimConfig::default().transfer_overhead;
+    let legacy = simulate_with_overhead(&load, &rlist, interval_s, cfg.seed, overhead).unwrap();
+
+    let spec = GlobalFleetSpec {
+        regions: fleet,
+        policy: RoutePolicyKind::GreedyCi,
+        power_model: Some(model),
+    };
+    let mut source = trace.into_source();
+    let res = run_global(&cfg, &spec, &mut source, None).unwrap();
+
+    // Hydro is cheapest at every instant even with the transfer
+    // overhead, so the router must move the whole workload there.
+    assert_eq!(res.moved_requests, cfg.num_requests, "router kept work home");
+    assert_eq!(res.regions[2].routed, cfg.num_requests);
+
+    assert!(legacy.greedy_g > 0.0);
+    let rel = (res.fleet_emissions_g - legacy.greedy_g).abs() / legacy.greedy_g;
+    assert!(
+        rel < 0.05,
+        "router emissions {} vs closed-form greedy {} ({}% off)",
+        res.fleet_emissions_g,
+        legacy.greedy_g,
+        rel * 100.0
+    );
+    // And both agree the move beat staying home.
+    assert!(res.fleet_emissions_g < legacy.static_g);
+}
+
+/// Contract 2: the three energy views agree per region — accounted
+/// fleet energy, integrated binned demand, and the co-simulated load
+/// energy (transfer overhead zeroed so the cosim sees the raw demand).
+#[test]
+fn per_region_accounting_conserves_energy() {
+    let mut cfg = stream_cfg(0xC0A5);
+    cfg.replicas = 1;
+    cfg.num_requests = 150;
+    let trace = trace_for(&cfg);
+
+    let mut fleet = vec![
+        degenerate_region("home", 450.0),
+        degenerate_region("hydro", 60.0),
+    ];
+    for fr in &mut fleet {
+        fr.cosim.transfer_overhead = 0.0;
+    }
+    let spec = GlobalFleetSpec {
+        regions: fleet,
+        policy: RoutePolicyKind::GreedyCi,
+        power_model: None,
+    };
+    let mut source = trace.into_source();
+    let res = run_global(&cfg, &spec, &mut source, None).unwrap();
+
+    let mut fleet_sum = 0.0;
+    for r in &res.regions {
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        assert!(
+            rel(r.gpu_energy_kwh, r.binned_energy_kwh) < 1e-6,
+            "{}: accounted {} kWh != binned {} kWh",
+            r.name,
+            r.gpu_energy_kwh,
+            r.binned_energy_kwh
+        );
+        assert!(
+            rel(r.binned_energy_kwh, r.cosim.total_energy_kwh) < 1e-6,
+            "{}: binned {} kWh != cosim load {} kWh",
+            r.name,
+            r.binned_energy_kwh,
+            r.cosim.total_energy_kwh
+        );
+        fleet_sum += r.gpu_energy_kwh;
+    }
+    assert!((fleet_sum - res.fleet_gpu_energy_kwh).abs() < 1e-9);
+    assert!(res.fleet_gpu_energy_kwh > 0.0);
+}
+
+fn write_request_csv(path: &Path, requests: &[Request]) {
+    let mut out = String::from("id,arrival_s,prefill_tokens,decode_tokens,ttft_s,e2e_s\n");
+    for r in requests {
+        out.push_str(&format!(
+            "{},{:.6},{},{},{:.6},{:.6}\n",
+            r.id,
+            r.arrival_s,
+            r.prefill_tokens,
+            r.decode_tokens,
+            r.ttft().unwrap_or(f64::NAN),
+            r.e2e_latency().unwrap_or(f64::NAN),
+        ));
+    }
+    std::fs::write(path, out).unwrap();
+}
+
+/// Contract 3 (satellite): one region + `static-home` + fixed fleet is
+/// the plain engine, bit for bit — same stage CSV, same request CSV.
+#[test]
+fn single_region_static_home_is_byte_identical_to_plain_engine() {
+    let mut cfg = stream_cfg(0xB17E);
+    cfg.replicas = 2;
+    cfg.num_requests = 200;
+    let trace = trace_for(&cfg);
+    let dir = TempDir::new("vidur-mr-byte-neutral");
+
+    let mut plain_stages = StageLog::new();
+    let mut plain_reqs = RequestLog::new(&cfg);
+    let mut src = trace.clone().into_source();
+    sim::run_with_sinks(
+        &cfg,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        &mut plain_stages,
+        &mut plain_reqs,
+    )
+    .unwrap();
+
+    let mut fleet_stages = StageLog::new();
+    let mut fleet_reqs = RequestLog::new(&cfg);
+    let mut src = trace.into_source();
+    let mut policy = RoutePolicyKind::StaticHome.build(cfg.slo_ttft_s);
+    let region = RegionSim {
+        replicas: cfg.replicas,
+        scale: None,
+        grid: GridEnv::constant(418.2, 0.0),
+        rtt_s: 0.0,
+        power_est_w: 300.0,
+        microgrid: Microgrid::new(Battery::from_config(&CosimConfig::default())),
+        interval_s: 60.0,
+        transfer_overhead: 0.0,
+        sink: &mut fleet_stages,
+        requests: &mut fleet_reqs,
+    };
+    sim::run_multifleet(
+        &cfg,
+        &mut src,
+        build_cost_model(&cfg).unwrap(),
+        policy.as_mut(),
+        vec![region],
+    )
+    .unwrap();
+
+    plain_stages.save_csv(dir.join("plain_stages.csv")).unwrap();
+    fleet_stages.save_csv(dir.join("fleet_stages.csv")).unwrap();
+    assert_eq!(
+        read_bytes(dir.join("plain_stages.csv")),
+        read_bytes(dir.join("fleet_stages.csv")),
+        "stage CSVs diverged"
+    );
+
+    write_request_csv(&dir.join("plain_requests.csv"), &plain_reqs.into_requests());
+    write_request_csv(&dir.join("fleet_requests.csv"), &fleet_reqs.into_requests());
+    assert_eq!(
+        read_bytes(dir.join("plain_requests.csv")),
+        read_bytes(dir.join("fleet_requests.csv")),
+        "request CSVs diverged"
+    );
+}
