@@ -8,4 +8,4 @@ pub mod simconfig;
 
 pub use gpus::{GpuSpec, InterconnectKind};
 pub use models::ModelSpec;
-pub use simconfig::{CosimConfig, SimConfig};
+pub use simconfig::{CosimConfig, SimConfig, WorkloadKind};

@@ -71,6 +71,141 @@ pub enum CostModelKind {
     Surface,
 }
 
+/// Where the request stream comes from (DESIGN.md §14): the synthetic
+/// Poisson/Zipf generator, a recorded trace replayed off disk, one of
+/// the built-in scenario generators, or a weighted mix of scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// The paper's synthetic generator (`arrival` × `lengths`).
+    Synthetic,
+    /// Stream a recorded trace (CSV/JSONL; native or
+    /// timestamp/prompt/output schema) without materializing it.
+    Trace {
+        path: String,
+        /// Multiplier on arrival times (0.5 = twice the rate).
+        time_scale: f64,
+        /// Total passes over the trace (loop a short trace).
+        repeat: u32,
+    },
+    /// Multi-turn conversations with shared-prefix accounting.
+    Chat,
+    /// RAG-style long-prefill / short-decode queries.
+    Rag,
+    /// Agentic tool-call loops (correlated arrival bursts).
+    Agentic,
+    /// Heavy-tailed multi-tenant mix with per-tenant profiles.
+    Tenants,
+    /// Weighted mix of named scenarios, e.g. `[("chat", 2.0), ("rag", 1.0)]`.
+    Mix(Vec<(String, f64)>),
+}
+
+impl Default for WorkloadKind {
+    fn default() -> Self {
+        WorkloadKind::Synthetic
+    }
+}
+
+/// Scenario names accepted inside `mix:` specs (everything except
+/// trace/mix themselves, which don't nest).
+pub const MIXABLE_WORKLOADS: &[&str] = &["synthetic", "chat", "rag", "agentic", "tenants"];
+
+impl WorkloadKind {
+    /// Parse the CLI/JSON spec form:
+    /// `synthetic | chat | rag | agentic | tenants | trace:PATH |
+    /// mix:NAME=WEIGHT,...`. Trace time-scale/repeat ride on separate
+    /// knobs (`--trace-scale`/`--trace-repeat`).
+    pub fn parse(s: &str) -> Result<WorkloadKind> {
+        Ok(match s {
+            "synthetic" => WorkloadKind::Synthetic,
+            "chat" => WorkloadKind::Chat,
+            "rag" => WorkloadKind::Rag,
+            "agentic" => WorkloadKind::Agentic,
+            "tenants" => WorkloadKind::Tenants,
+            _ if s.starts_with("trace:") => WorkloadKind::Trace {
+                path: s["trace:".len()..].to_string(),
+                time_scale: 1.0,
+                repeat: 1,
+            },
+            _ if s.starts_with("mix:") => {
+                let mut parts = Vec::new();
+                for entry in s["mix:".len()..].split(',') {
+                    let entry = entry.trim();
+                    if entry.is_empty() {
+                        continue;
+                    }
+                    let (name, w) = match entry.split_once('=') {
+                        Some((n, w)) => (
+                            n.trim().to_string(),
+                            w.trim()
+                                .parse::<f64>()
+                                .with_context(|| format!("bad mix weight in '{entry}'"))?,
+                        ),
+                        None => (entry.to_string(), 1.0),
+                    };
+                    parts.push((name, w));
+                }
+                WorkloadKind::Mix(parts)
+            }
+            k => bail!(
+                "unknown workload '{k}' \
+                 (synthetic | chat | rag | agentic | tenants | trace:PATH | mix:NAME=W,...)"
+            ),
+        })
+    }
+
+    /// Canonical spec string (inverse of [`WorkloadKind::parse`] up to
+    /// trace time-scale/repeat, which serialize as separate fields).
+    pub fn spec(&self) -> String {
+        match self {
+            WorkloadKind::Synthetic => "synthetic".into(),
+            WorkloadKind::Trace { path, .. } => format!("trace:{path}"),
+            WorkloadKind::Chat => "chat".into(),
+            WorkloadKind::Rag => "rag".into(),
+            WorkloadKind::Agentic => "agentic".into(),
+            WorkloadKind::Tenants => "tenants".into(),
+            WorkloadKind::Mix(parts) => {
+                let body: Vec<String> =
+                    parts.iter().map(|(n, w)| format!("{n}={w}")).collect();
+                format!("mix:{}", body.join(","))
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            WorkloadKind::Trace { path, time_scale, repeat } => {
+                if path.is_empty() {
+                    bail!("trace workload needs a path (trace:PATH)");
+                }
+                if !(time_scale.is_finite() && *time_scale > 0.0) {
+                    bail!("trace time scale must be positive and finite, got {time_scale}");
+                }
+                if *repeat == 0 {
+                    bail!("trace repeat must be >= 1");
+                }
+            }
+            WorkloadKind::Mix(parts) => {
+                if parts.is_empty() {
+                    bail!("mix workload needs at least one component (mix:NAME=W,...)");
+                }
+                for (name, w) in parts {
+                    if !MIXABLE_WORKLOADS.contains(&name.as_str()) {
+                        bail!(
+                            "mix component '{name}' is not mixable \
+                             (allowed: {MIXABLE_WORKLOADS:?})"
+                        );
+                    }
+                    if !(w.is_finite() && *w > 0.0) {
+                        bail!("mix weight for '{name}' must be positive and finite, got {w}");
+                    }
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
 /// Execution-model calibration knobs (see DESIGN.md §5 — substitutes
 /// Vidur's random-forest runtime predictor with a calibrated roofline).
 #[derive(Debug, Clone, PartialEq)]
@@ -119,6 +254,10 @@ pub struct SimConfig {
     pub num_requests: u64,
     pub arrival: Arrival,
     pub lengths: LengthDist,
+    /// Request-stream source (DESIGN.md §14). `Synthetic` uses
+    /// `arrival` × `lengths`; scenarios reuse `arrival.qps()` as their
+    /// aggregate rate; traces ignore both.
+    pub workload: WorkloadKind,
     /// Prefill:decode token ratio; when set, splits each sampled total
     /// length into prefill/decode by this ratio (Exp. 2 sweeps it).
     pub prefill_decode_ratio: Option<f64>,
@@ -158,6 +297,7 @@ impl Default for SimConfig {
                 min: 128,
                 max: 4096,
             },
+            workload: WorkloadKind::Synthetic,
             prefill_decode_ratio: None,
             chunk_size: 512,
             kv_block_tokens: 16,
@@ -218,6 +358,7 @@ impl SimConfig {
                 bail!("bad length range");
             }
         }
+        self.workload.validate()?;
         if self.pue < 1.0 {
             bail!("pue < 1.0 is unphysical");
         }
@@ -295,6 +436,22 @@ impl SimConfig {
             }
         }
         v.set("lengths", len);
+        let mut wl = Value::obj();
+        match &self.workload {
+            WorkloadKind::Trace { path, time_scale, repeat } => {
+                wl.set("kind", "trace")
+                    .set("path", path.as_str())
+                    .set("time_scale", *time_scale)
+                    .set("repeat", *repeat);
+            }
+            WorkloadKind::Mix(_) => {
+                wl.set("kind", "mix").set("spec", self.workload.spec().as_str());
+            }
+            other => {
+                wl.set("kind", other.spec().as_str());
+            }
+        }
+        v.set("workload", wl);
         if let Some(r) = self.prefill_decode_ratio {
             v.set("prefill_decode_ratio", r);
         }
@@ -351,6 +508,19 @@ impl SimConfig {
                 Some(k) => bail!("unknown length kind '{k}'"),
             },
         };
+        let workload = match v.get("workload") {
+            None => d.workload.clone(),
+            Some(w) => match w.get("kind").and_then(|x| x.as_str()) {
+                None => d.workload.clone(),
+                Some("trace") => WorkloadKind::Trace {
+                    path: w.req_str("path")?.to_string(),
+                    time_scale: w.get("time_scale").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                    repeat: w.get("repeat").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
+                },
+                Some("mix") => WorkloadKind::parse(w.req_str("spec")?)?,
+                Some(k) => WorkloadKind::parse(k)?,
+            },
+        };
         let exec = match v.get("exec") {
             None => d.exec.clone(),
             Some(e) => ExecParams {
@@ -398,6 +568,7 @@ impl SimConfig {
             num_requests: gu("num_requests", d.num_requests),
             arrival,
             lengths,
+            workload,
             prefill_decode_ratio: v.get("prefill_decode_ratio").and_then(|x| x.as_f64()),
             chunk_size: gu("chunk_size", d.chunk_size),
             kv_block_tokens: gu("kv_block_tokens", d.kv_block_tokens),
@@ -757,6 +928,71 @@ mod tests {
         c.transfer_overhead = 0.12;
         let back = CosimConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn workload_kind_parse_and_spec_roundtrip() {
+        for s in ["synthetic", "chat", "rag", "agentic", "tenants", "trace:/tmp/t.csv"] {
+            let k = WorkloadKind::parse(s).unwrap();
+            assert_eq!(k.spec(), s);
+            assert_eq!(WorkloadKind::parse(&k.spec()).unwrap(), k);
+        }
+        let mix = WorkloadKind::parse("mix:chat=2,rag=1.5,tenants").unwrap();
+        assert_eq!(
+            mix,
+            WorkloadKind::Mix(vec![
+                ("chat".into(), 2.0),
+                ("rag".into(), 1.5),
+                ("tenants".into(), 1.0),
+            ])
+        );
+        assert_eq!(WorkloadKind::parse(&mix.spec()).unwrap(), mix);
+        assert!(WorkloadKind::parse("bogus").is_err());
+        assert!(WorkloadKind::parse("mix:chat=oops").is_err());
+    }
+
+    #[test]
+    fn workload_kind_validate() {
+        assert!(WorkloadKind::Synthetic.validate().is_ok());
+        let bad_scale = WorkloadKind::Trace {
+            path: "t.csv".into(),
+            time_scale: f64::NAN,
+            repeat: 1,
+        };
+        assert!(bad_scale.validate().is_err());
+        let no_path = WorkloadKind::Trace {
+            path: String::new(),
+            time_scale: 1.0,
+            repeat: 1,
+        };
+        assert!(no_path.validate().is_err());
+        assert!(WorkloadKind::Mix(vec![]).validate().is_err());
+        assert!(WorkloadKind::Mix(vec![("trace".into(), 1.0)]).validate().is_err());
+        assert!(WorkloadKind::Mix(vec![("chat".into(), -1.0)]).validate().is_err());
+        assert!(WorkloadKind::Mix(vec![("chat".into(), 1.0)]).validate().is_ok());
+    }
+
+    #[test]
+    fn sim_json_roundtrips_workload_variants() {
+        for wl in [
+            WorkloadKind::Chat,
+            WorkloadKind::Tenants,
+            WorkloadKind::Trace {
+                path: "traces/azure.jsonl".into(),
+                time_scale: 0.25,
+                repeat: 3,
+            },
+            WorkloadKind::Mix(vec![("chat".into(), 2.0), ("rag".into(), 0.5)]),
+        ] {
+            let mut c = SimConfig::default();
+            c.workload = wl;
+            let back = SimConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(back, c);
+        }
+        // Absent field defaults to the synthetic generator (old
+        // config files stay loadable).
+        let v = json::parse("{}").unwrap();
+        assert_eq!(SimConfig::from_json(&v).unwrap().workload, WorkloadKind::Synthetic);
     }
 
     #[test]

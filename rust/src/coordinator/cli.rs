@@ -16,7 +16,9 @@
 //!
 //! The full flag-by-flag reference lives in `docs/CLI.md`.
 
-use crate::config::simconfig::{Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig};
+use crate::config::simconfig::{
+    Arrival, CosimConfig, CostModelKind, LengthDist, SimConfig, WorkloadKind,
+};
 use crate::coordinator::fleet::RoutePolicyKind;
 use crate::coordinator::policy;
 use crate::energy::EnergyAccountant;
@@ -28,7 +30,7 @@ use crate::sweep;
 use crate::telemetry::StreamingSink;
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::Value;
-use crate::workload::{Trace, WorkloadGenerator};
+use crate::workload;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
@@ -39,13 +41,14 @@ subcommands:
   simulate     run one inference simulation
   cosim        run the Vidur→Vessim integration case study
   autoscale    sweep fleet-scaling policies (static/reactive/carbon/solar) over a day of grid signals
-  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale multiregion all
+  experiment   regenerate paper tables/figures: fig1 exp1..exp5 casestudy ablation autoscale multiregion scenarios all
                (--jobs N sweeps cases in parallel; --shard k/N splits the grid across machines;
                 --watch[=stderr|json:PATH] live dashboard / snapshot log)
   merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
   watch        tail/aggregate live sweep snapshots: repro watch <dir-or-jsonl>... [--follow]
   serve        HTTP/SSE telemetry + control surface: repro serve [<dir-or-jsonl>...] [--addr H:P]
   multiregion  carbon-aware global routing sweep: route policies x regions x battery sizes
+  scenarios    production-shaped workload sweep: scenario (chat/rag/agentic/tenants) x QPS
   policy       model-size policy exploration (small in dirty grid vs large in clean)
   config       print the default Table-1 configuration
   report       assemble results/ into a markdown report
@@ -73,6 +76,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "watch" => cmd_watch(&args),
         "serve" => cmd_serve(&args),
         "multiregion" => cmd_multiregion(&args),
+        "scenarios" => cmd_scenarios(&args),
         "policy" => policy::cmd(&args),
         "config" => cmd_config(),
         "report" => cmd_report(&args),
@@ -115,7 +119,56 @@ pub fn apply_sim_overrides(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     }
     cfg.cost_model = parse_oracle_kind(&args.str_or("cost-model", "hlo"), "--cost-model")?;
     cfg.exec.rf_noise_std = args.f64_or("rf-noise", cfg.exec.rf_noise_std)?;
+    if let Some(kind) = parse_workload_flags(args)? {
+        cfg.workload = kind;
+    }
     cfg.validate()
+}
+
+/// Parse `--workload SPEC` plus its trace companions `--trace-scale`
+/// / `--trace-repeat` into a [`WorkloadKind`] (DESIGN.md §14). The
+/// companions only mean something on a `trace:` workload; anywhere
+/// else they are an error, not a silent no-op (the `--watch-cadence`
+/// standard). `Ok(None)` = no flag given.
+fn parse_workload_flags(args: &Args) -> Result<Option<WorkloadKind>> {
+    anyhow::ensure!(
+        !args.has("workload"),
+        "--workload needs a value (e.g. --workload chat, --workload trace:PATH)"
+    );
+    let trace_knobs =
+        args.get("trace-scale").is_some() || args.get("trace-repeat").is_some();
+    anyhow::ensure!(
+        !args.has("trace-scale") && !args.has("trace-repeat"),
+        "--trace-scale/--trace-repeat need a value"
+    );
+    let Some(spec) = args.get("workload") else {
+        anyhow::ensure!(
+            !trace_knobs,
+            "--trace-scale/--trace-repeat have no effect without --workload trace:PATH"
+        );
+        return Ok(None);
+    };
+    let mut kind = WorkloadKind::parse(spec)?;
+    if let WorkloadKind::Trace { time_scale, repeat, .. } = &mut kind {
+        *time_scale = args.f64_or("trace-scale", *time_scale)?;
+        *repeat = args.u64_or("trace-repeat", *repeat as u64)? as u32;
+    } else {
+        anyhow::ensure!(
+            !trace_knobs,
+            "--trace-scale/--trace-repeat only apply to --workload trace:PATH, \
+             not --workload {spec}"
+        );
+    }
+    kind.validate()?;
+    Ok(Some(kind))
+}
+
+/// Apply the process-wide workload override for sweep commands whose
+/// per-case configs the per-run `--workload` on `apply_sim_overrides`
+/// cannot reach (the `--oracle` pattern). Absent = no override.
+fn apply_workload(args: &Args) -> Result<()> {
+    workload::set_workload_override(parse_workload_flags(args)?);
+    Ok(())
 }
 
 fn parse_oracle_kind(s: &str, flag: &str) -> Result<CostModelKind> {
@@ -152,6 +205,9 @@ fn sim_opts() -> Vec<OptSpec> {
         OptSpec { name: "batch-cap", help: "max batch size", default: Some("128") },
         OptSpec { name: "fixed-len", help: "fixed total tokens per request", default: None },
         OptSpec { name: "pd-ratio", help: "prefill:decode ratio", default: None },
+        OptSpec { name: "workload", help: "request source: synthetic|chat|rag|agentic|tenants|trace:PATH|mix:NAME=W,...", default: Some("synthetic") },
+        OptSpec { name: "trace-scale", help: "multiply trace arrival times (0.5 = 2x rate; trace: only)", default: Some("1") },
+        OptSpec { name: "trace-repeat", help: "loop the trace N times end to end (trace: only)", default: Some("1") },
         OptSpec { name: "cost-model", help: "stage oracle: hlo|native|surface", default: Some("hlo") },
         OptSpec { name: "oracle", help: "process-wide oracle override (native|hlo|surface)", default: None },
         OptSpec { name: "rf-noise", help: "lognormal latency noise sigma", default: Some("0") },
@@ -201,6 +257,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         telemetry
             .set("submitted", run.request_stats.submitted)
             .set("finished", run.request_stats.finished)
+            .set("prefill_tokens_done", run.request_stats.prefill_tokens_done)
+            .set("decode_tokens_done", run.request_stats.decode_tokens_done)
             .set("peak_live_requests", run.peak_live_requests as u64)
             .set("peak_resident_bins", sink.peak_resident_bins() as u64);
         v.set("metrics", run.metrics.to_json())
@@ -234,6 +292,8 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
              --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
              --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
              --oracle <native|hlo|surface>  override every case's stage oracle\n  \
+             --workload <spec>  replace the diurnal demand curve: trace:PATH (with\n                     \
+             --trace-scale/--trace-repeat), chat, rag, agentic, tenants, mix:...\n  \
              --fast        compressed evening-window scenario"
         );
         return Ok(());
@@ -242,6 +302,7 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
     apply_shard(args)?;
     apply_watch(args)?;
     apply_oracle(args)?;
+    apply_workload(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let table = experiments::exp_autoscale::run(&out_dir, args.has("fast"))?;
     // The save() call already printed the markdown table; surface the
@@ -285,6 +346,8 @@ fn cmd_multiregion(args: &Args) -> Result<()> {
              --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
              --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
              --oracle <native|hlo|surface>  override every case's stage oracle\n  \
+             --workload <spec>  request source for every case: trace:PATH, chat, rag,\n                     \
+             agentic, tenants, mix:NAME=W,... (default: synthetic)\n  \
              --fast        reduced grid: 3 regions, one battery size, fewer requests"
         );
         return Ok(());
@@ -293,6 +356,7 @@ fn cmd_multiregion(args: &Args) -> Result<()> {
     apply_shard(args)?;
     apply_watch(args)?;
     apply_oracle(args)?;
+    apply_workload(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     let fast = args.has("fast");
     let mut opts = experiments::exp_multiregion::MultiRegionOpts::defaults(fast);
@@ -350,17 +414,54 @@ fn cmd_multiregion(args: &Args) -> Result<()> {
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.first() else {
         bail!(
-            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|multiregion|all> \
+            "usage: repro experiment <fig1|exp1..exp5|casestudy|ablation|sched|gpu|autoscale|multiregion|scenarios|all> \
              [--out results] [--fast] [--jobs N] [--shard k/N] \
-             [--watch[=stderr|json:PATH]] [--watch-cadence s] [--oracle native|hlo|surface]"
+             [--watch[=stderr|json:PATH]] [--watch-cadence s] [--oracle native|hlo|surface] \
+             [--workload spec]"
         );
     };
     apply_jobs(args)?;
     apply_shard(args)?;
     apply_watch(args)?;
     apply_oracle(args)?;
+    apply_workload(args)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     experiments::run_by_id(id, &out_dir, args.has("fast"))
+}
+
+/// The production-shaped workload sweep (DESIGN.md §14): scenario ×
+/// QPS grid through the standard sweep machinery.
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "repro scenarios — production-shaped workload sweep: scenario \
+             (chat/rag/agentic/tenants) x QPS (DESIGN.md §14)\n\n\
+             options:\n  --out <dir>   results directory (default: results)\n  \
+             --jobs <n>    sweep worker threads (default: all cores)\n  \
+             --shard <k/N> run only cases k, k+N, … of the grid (merge with `repro merge`)\n  \
+             --watch[=stderr|json:PATH]  live dashboard / JSONL snapshot log (DESIGN.md §10)\n  \
+             --watch-cadence <s>         sim-time seconds between snapshots (default 60)\n  \
+             --oracle <native|hlo|surface>  override every case's stage oracle\n  \
+             --fast        reduced grid (fewer QPS points and requests)\n\n\
+             the scenario axis IS the grid, so this command takes no --workload; use\n\
+             `repro simulate --workload ...` for a single scenario run"
+        );
+        return Ok(());
+    }
+    // The grid sweeps the workload axis itself; a process-wide
+    // override would collapse every case onto one scenario.
+    anyhow::ensure!(
+        args.get("workload").is_none() && !args.has("workload"),
+        "--workload would collapse the scenario axis of this sweep; \
+         use `repro simulate --workload ...` for one scenario"
+    );
+    apply_jobs(args)?;
+    apply_shard(args)?;
+    apply_watch(args)?;
+    apply_oracle(args)?;
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    experiments::exp_scenarios::run(&out_dir, args.has("fast"))?;
+    Ok(())
 }
 
 /// Recombine sharded sweep outputs (DESIGN.md §9): interleave shard
@@ -651,8 +752,12 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_trace(args: &Args) -> Result<()> {
     let mut cfg = SimConfig::default();
     apply_sim_overrides(&mut cfg, args).ok(); // cost model irrelevant here
-    let mut gen = WorkloadGenerator::from_config(&cfg);
-    let trace = Trace::new(gen.generate(cfg.num_requests));
+    // Workload flags must not fail silently under the `.ok()` above:
+    // a scenario trace export is exactly this command's job.
+    if let Some(kind) = parse_workload_flags(args)? {
+        cfg.workload = kind;
+    }
+    let trace = workload::trace_from_config(&cfg)?;
     let path = args.str_or("out", "results/trace.csv");
     trace.save(&path)?;
     println!(
@@ -721,6 +826,65 @@ mod tests {
         // Absent flag clears the override (the default state).
         apply_oracle(&args(&[])).unwrap();
         assert_eq!(exec::oracle_override(), None);
+    }
+
+    /// `--workload` forms parse into the right [`WorkloadKind`]; the
+    /// process-global override stays None here (setting it would race
+    /// with concurrently running engine tests — the oracle-test rule).
+    #[test]
+    fn workload_flags_parse() {
+        assert_eq!(parse_workload_flags(&args(&[])).unwrap(), None);
+        assert_eq!(
+            parse_workload_flags(&args(&["--workload", "chat"])).unwrap(),
+            Some(WorkloadKind::Chat)
+        );
+        assert_eq!(
+            parse_workload_flags(&args(&[
+                "--workload", "trace:t.csv", "--trace-scale", "0.5", "--trace-repeat", "4",
+            ]))
+            .unwrap(),
+            Some(WorkloadKind::Trace {
+                path: "t.csv".into(),
+                time_scale: 0.5,
+                repeat: 4,
+            })
+        );
+        assert_eq!(
+            parse_workload_flags(&args(&["--workload", "mix:chat=2,rag=1"])).unwrap(),
+            Some(WorkloadKind::Mix(vec![("chat".into(), 2.0), ("rag".into(), 1.0)]))
+        );
+        // Loud failures: bad spec, bare flag, trace knobs off a trace.
+        assert!(parse_workload_flags(&args(&["--workload", "bogus"])).is_err());
+        assert!(parse_workload_flags(&args(&["--workload"])).is_err());
+        assert!(parse_workload_flags(&args(&["--trace-scale", "2"])).is_err());
+        assert!(
+            parse_workload_flags(&args(&["--workload", "chat", "--trace-repeat", "2"])).is_err()
+        );
+        assert!(parse_workload_flags(&args(&[
+            "--workload", "trace:t.csv", "--trace-scale", "0",
+        ]))
+        .is_err());
+
+        // The per-config path lands on cfg.workload.
+        let mut cfg = SimConfig::default();
+        apply_sim_overrides(&mut cfg, &args(&["--workload", "rag", "--cost-model", "native"]))
+            .unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Rag);
+        // Absent flag clears the process override (the default state).
+        apply_workload(&args(&[])).unwrap();
+        assert_eq!(workload::workload_override(), None);
+    }
+
+    #[test]
+    fn scenarios_rejects_workload_override() {
+        let r = run(vec![
+            "repro".into(),
+            "scenarios".into(),
+            "--workload".into(),
+            "chat".into(),
+        ]);
+        assert!(r.unwrap_err().to_string().contains("scenario axis"));
+        run(vec!["repro".into(), "scenarios".into(), "--help".into()]).unwrap();
     }
 
     #[test]

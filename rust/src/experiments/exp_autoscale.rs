@@ -199,7 +199,15 @@ pub fn run_policy_watched(
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
     let (cfg, scale, cosim, horizon_s, qps_peak) = scenario(fast);
-    let trace = diurnal_trace(&cfg, cosim.start_hour, horizon_s, qps_peak, cfg.seed);
+    // Default load is the synthetic diurnal curve; a `--workload`
+    // override (trace replay or a scenario generator) swaps the whole
+    // demand shape under the same policies.
+    let trace = match crate::workload::effective_workload(&cfg) {
+        crate::config::WorkloadKind::Synthetic => {
+            diurnal_trace(&cfg, cosim.start_hour, horizon_s, qps_peak, cfg.seed)
+        }
+        _ => crate::workload::trace_from_config(&cfg)?,
+    };
     eprintln!(
         "autoscale sweep: {} requests over {:.1} h ({} policies)",
         trace.len(),

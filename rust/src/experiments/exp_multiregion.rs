@@ -24,7 +24,6 @@ use crate::sweep::SweepExecutor;
 use crate::telemetry::ShardTelemetry;
 use crate::util::csv::Table;
 use crate::util::json::Value;
-use crate::workload::WorkloadGenerator;
 use anyhow::Result;
 use std::path::Path;
 
@@ -144,8 +143,8 @@ fn run_case(
         Some(region_scale()),
         1,
     );
-    let mut source = WorkloadGenerator::from_config(cfg).take(cfg.num_requests);
-    run_global(cfg, &spec, &mut source, tap)
+    let mut source = crate::workload::source_from_config(cfg)?;
+    run_global(cfg, &spec, &mut *source, tap)
 }
 
 pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {

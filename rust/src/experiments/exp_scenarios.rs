@@ -1,0 +1,131 @@
+//! Scenario-library sweep (DESIGN.md §14) — run every production-shaped
+//! workload generator (multi-turn chat, RAG, agentic tool loops,
+//! heavy-tailed multi-tenant mix) across a QPS grid and report the
+//! energy/latency profile of each shape side by side. The paper's
+//! evaluation drives everything from one synthetic length distribution;
+//! this grid quantifies how far real request shapes pull power, MFU,
+//! and energy-per-request away from that baseline.
+
+use super::common::{run_grid, save_grid};
+use crate::config::simconfig::{Arrival, CostModelKind, SimConfig, WorkloadKind};
+use crate::runtime::ArtifactStore;
+use crate::util::csv::Table;
+use crate::util::json::Value;
+use crate::util::rng::case_seed;
+use anyhow::Result;
+use std::path::Path;
+
+/// The scenario axis, in row order.
+pub const SCENARIOS: &[&str] = &["chat", "rag", "agentic", "tenants"];
+
+pub fn run(out_dir: &Path, fast: bool) -> Result<Table> {
+    // A process-wide `--workload` override would force every case onto
+    // one kind and silently collapse the scenario axis to duplicates.
+    anyhow::ensure!(
+        crate::workload::workload_override().is_none(),
+        "`repro scenarios` sweeps the workload axis itself; drop the --workload override"
+    );
+    let n_requests: u64 = if fast { 400 } else { 2_000 };
+    let qps_grid: &[f64] = if fast { &[2.0, 6.0] } else { &[1.0, 4.0, 10.0] };
+
+    let mut cfgs: Vec<SimConfig> = Vec::new();
+    for scenario in SCENARIOS {
+        for &qps in qps_grid {
+            let mut cfg = SimConfig::default();
+            cfg.workload = WorkloadKind::parse(scenario)?;
+            cfg.arrival = Arrival::Poisson { qps };
+            cfg.num_requests = n_requests;
+            cfg.seed = case_seed(0xA9, cfgs.len() as u64);
+            if ArtifactStore::discover().is_err() {
+                cfg.cost_model = CostModelKind::Native;
+            }
+            cfgs.push(cfg);
+        }
+    }
+    let sim_config = cfgs[0].to_json();
+    let run = run_grid("scenarios", cfgs)?;
+
+    let mut table = Table::new(&[
+        "scenario",
+        "qps",
+        "avg_power_w",
+        "energy_kwh",
+        "makespan_s",
+        "weighted_mfu",
+        "mean_prefill_tok",
+        "mean_decode_tok",
+        "slo_pct",
+        "ttft_p99_s",
+    ]);
+    for (i, r) in run.iter() {
+        let scenario = SCENARIOS[i / qps_grid.len()];
+        let qps = qps_grid[i % qps_grid.len()];
+        let s = &r.out.request_stats;
+        let n = s.finished.max(1) as f64;
+        table.push_row(vec![
+            scenario.to_string(),
+            format!("{qps}"),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.4}", r.energy_kwh()),
+            format!("{:.1}", r.out.metrics.makespan_s),
+            format!("{:.4}", r.mfu()),
+            format!("{:.1}", s.prefill_tokens_done as f64 / n),
+            format!("{:.1}", s.decode_tokens_done as f64 / n),
+            format!("{:.2}", r.out.metrics.slo_attained * 100.0),
+            format!("{:.3}", r.out.metrics.ttft_p99_s),
+        ]);
+    }
+    let mut meta = Value::obj();
+    meta.set("experiment", "scenarios")
+        .set(
+            "paper_claim",
+            "request shape, not just rate, moves the energy profile: long-prefill RAG \
+             saturates power at lower QPS than chat, while agentic bursts and \
+             heavy-tailed tenant mixes widen the tail latencies the paper's single \
+             synthetic distribution cannot express (extends §4's QPS sweep)",
+        )
+        .set("scenarios", SCENARIOS.join(","))
+        .set("sweep", run.sweep_meta())
+        .set("sim_config", sim_config);
+    save_grid(out_dir, "scenarios", &table, meta, &run)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::run_case;
+
+    fn case(kind: WorkloadKind, qps: f64) -> crate::experiments::CaseResult {
+        let mut cfg = SimConfig::default();
+        cfg.cost_model = CostModelKind::Native;
+        cfg.workload = kind;
+        cfg.arrival = Arrival::Poisson { qps };
+        cfg.num_requests = 200;
+        cfg.seed = 0xA9;
+        run_case(&cfg).unwrap()
+    }
+
+    /// The sweep's headline contrast in miniature: RAG's long-prefill /
+    /// short-decode shape gives it a far higher prefill:decode token
+    /// ratio than chat at the same rate, and both runs complete the
+    /// full request budget.
+    #[test]
+    fn rag_is_prefill_heavier_than_chat() {
+        let chat = case(WorkloadKind::Chat, 4.0);
+        let rag = case(WorkloadKind::Rag, 4.0);
+        for r in [&chat, &rag] {
+            assert_eq!(r.out.request_stats.finished, 200);
+        }
+        let ratio = |r: &crate::experiments::CaseResult| {
+            r.out.request_stats.prefill_tokens_done as f64
+                / r.out.request_stats.decode_tokens_done.max(1) as f64
+        };
+        assert!(
+            ratio(&rag) > 2.0 * ratio(&chat),
+            "rag ratio {} !> 2x chat ratio {}",
+            ratio(&rag),
+            ratio(&chat)
+        );
+    }
+}

@@ -32,6 +32,7 @@ pub mod ablation;
 pub mod extensions;
 pub mod exp_autoscale;
 pub mod exp_multiregion;
+pub mod exp_scenarios;
 
 pub use common::{run_case, CaseResult};
 
@@ -88,10 +89,11 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
         "gpu" => extensions::run_gpu(out_dir, fast).map(|_| ()),
         "autoscale" => exp_autoscale::run(out_dir, fast).map(|_| ()),
         "multiregion" => exp_multiregion::run(out_dir, fast).map(|_| ()),
+        "scenarios" => exp_scenarios::run(out_dir, fast).map(|_| ()),
         "all" => {
             for id in [
                 "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy",
-                "ablation", "sched", "gpu", "autoscale", "multiregion",
+                "ablation", "sched", "gpu", "autoscale", "multiregion", "scenarios",
             ] {
                 eprintln!("=== experiment {id} ===");
                 run_by_id(id, out_dir, fast)?;
@@ -99,7 +101,7 @@ pub fn run_by_id(id: &str, out_dir: &Path, fast: bool) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, autoscale, multiregion, all"
+            "unknown experiment '{other}'; known: fig1, exp1..exp5, casestudy, ablation, sched, gpu, autoscale, multiregion, scenarios, all"
         ),
     }
 }

@@ -23,7 +23,7 @@ use std::path::Path;
 /// Known experiment ids in presentation order.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "fig1", "exp1", "exp2", "exp3", "exp4", "exp5", "casestudy", "ablation",
-    "sched", "gpu", "autoscale",
+    "sched", "gpu", "autoscale", "multiregion", "scenarios",
 ];
 
 /// Figure definitions rendered as ASCII charts in the report:

@@ -251,10 +251,11 @@ fn retire_finished(
     fin.len() as u64
 }
 
-/// Run the simulator with a freshly generated workload.
+/// Run the simulator with the workload `cfg` describes — the
+/// synthetic generator, a replayed trace, or a scenario (DESIGN.md
+/// §14).
 pub fn run(cfg: &SimConfig) -> Result<SimOutput> {
-    let mut gen = WorkloadGenerator::from_config(cfg);
-    let trace = Trace::new(gen.generate(cfg.num_requests));
+    let trace = crate::workload::trace_from_config(cfg)?;
     run_with_trace(cfg, trace)
 }
 
@@ -301,9 +302,9 @@ pub fn run_streaming_with(
     sink: &mut dyn StageSink,
     requests: &mut dyn RequestSink,
 ) -> Result<SimRun> {
-    let mut source = WorkloadGenerator::from_config(cfg).take(cfg.num_requests);
+    let mut source = crate::workload::source_from_config(cfg)?;
     let cost = build_cost_model(cfg)?;
-    run_with_sinks(cfg, &mut source, cost, sink, requests)
+    run_with_sinks(cfg, &mut *source, cost, sink, requests)
 }
 
 /// Fixed-fleet run over an explicit trace and stage sink; request

@@ -1,15 +1,194 @@
 //! Workload layer: requests, arrival processes, length distributions,
-//! trace export/replay, and the pull-based request plumbing the engine
-//! streams from — the Vidur-side request generators.
+//! trace export/replay, scenario generators, and the pull-based
+//! request plumbing the engine streams from — the Vidur-side request
+//! generators.
+//!
+//! [`source_from_config`] is the single entry point that turns a
+//! [`SimConfig`]'s [`WorkloadKind`] into a running [`RequestSource`]:
+//! the synthetic generator, a streamed trace replay, a scenario
+//! generator, or a weighted mix (DESIGN.md §14).
 
 pub mod request;
 pub mod generator;
+pub mod replay;
+pub mod scenario;
 pub mod split;
 pub mod store;
 pub mod trace;
 
 pub use generator::{LazyWorkload, WorkloadGenerator};
+pub use replay::ReplaySource;
 pub use request::{Request, RequestId};
+pub use scenario::{MixSource, RagSource, SessionProfile, SessionSource, TenantMixSource};
 pub use split::{split_round_robin, split_trace, SplitSource};
 pub use store::{LiveRequests, RequestSource, RequestStore};
 pub use trace::{Trace, TraceSource};
+
+use crate::config::simconfig::{Arrival, SimConfig, WorkloadKind};
+use crate::util::rng::case_seed;
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+/// Process-wide workload override (the `--workload` flag on sweep
+/// commands): when set, every [`source_from_config`] call uses this
+/// kind instead of the per-case `cfg.workload` — the workload analogue
+/// of the `--oracle` cost-model override.
+static WORKLOAD_OVERRIDE: Mutex<Option<WorkloadKind>> = Mutex::new(None);
+
+/// Set or clear the process-wide workload override.
+pub fn set_workload_override(kind: Option<WorkloadKind>) {
+    *WORKLOAD_OVERRIDE.lock().unwrap() = kind;
+}
+
+/// The active process-wide workload override, if any.
+pub fn workload_override() -> Option<WorkloadKind> {
+    WORKLOAD_OVERRIDE.lock().unwrap().clone()
+}
+
+/// The workload a run of `cfg` actually uses: the process override
+/// when set, else `cfg.workload`.
+pub fn effective_workload(cfg: &SimConfig) -> WorkloadKind {
+    workload_override().unwrap_or_else(|| cfg.workload.clone())
+}
+
+/// Caps an (often infinite) source at `n` requests — scenario
+/// generators never exhaust on their own, so `cfg.num_requests` bounds
+/// the run the same way it bounds the synthetic generator.
+pub struct Capped {
+    inner: Box<dyn RequestSource>,
+    remaining: u64,
+}
+
+impl Capped {
+    pub fn new(inner: Box<dyn RequestSource>, n: u64) -> Capped {
+        Capped { inner, remaining: n }
+    }
+}
+
+impl RequestSource for Capped {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let r = self.inner.next_request()?;
+        self.remaining -= 1;
+        Some(r)
+    }
+}
+
+/// The aggregate request rate scenario generators run at; scenarios
+/// are open-loop arrival processes, so a batch (everything at t=0)
+/// arrival has no rate to give them.
+fn scenario_qps(cfg: &SimConfig, kind: &WorkloadKind) -> Result<f64> {
+    let qps = cfg.arrival.qps();
+    if !qps.is_finite() || qps <= 0.0 {
+        bail!(
+            "workload '{}' needs a rate-based arrival process for its request rate \
+             (batch arrivals have none) — set a Poisson/Gamma qps",
+            kind.spec()
+        );
+    }
+    Ok(qps)
+}
+
+/// Build one mixable scenario component at an explicit rate. `stream`
+/// decorrelates sibling components of a mix.
+fn component_source(
+    name: &str,
+    cfg: &SimConfig,
+    qps: f64,
+    stream: u64,
+) -> Result<Box<dyn RequestSource>> {
+    let seed = case_seed(cfg.seed, stream);
+    Ok(match name {
+        "synthetic" => Box::new(
+            WorkloadGenerator::new(
+                Arrival::Poisson { qps },
+                cfg.lengths.clone(),
+                cfg.prefill_decode_ratio,
+                cfg.max_tokens,
+                seed,
+            )
+            .take(u64::MAX),
+        ),
+        "chat" => Box::new(SessionSource::chat(qps, cfg.max_tokens, seed)),
+        "rag" => Box::new(RagSource::new(qps, cfg.max_tokens, seed)),
+        "agentic" => Box::new(SessionSource::agentic(qps, cfg.max_tokens, seed)),
+        "tenants" => Box::new(TenantMixSource::new(qps, cfg.max_tokens, seed)),
+        k => bail!("unknown scenario component '{k}'"),
+    })
+}
+
+/// Turn `cfg` into a running [`RequestSource`] per its effective
+/// [`WorkloadKind`] (process override first, then `cfg.workload`).
+///
+/// Every non-synthetic stream is capped at `cfg.num_requests`; a
+/// replayed trace ends at whichever comes first, its last row (times
+/// `repeat`) or the cap. The synthetic path is byte-identical to the
+/// pre-§14 `WorkloadGenerator::from_config(cfg).take(n)` pipeline.
+pub fn source_from_config(cfg: &SimConfig) -> Result<Box<dyn RequestSource>> {
+    let kind = effective_workload(cfg);
+    kind.validate()?;
+    let inner: Box<dyn RequestSource> = match &kind {
+        WorkloadKind::Synthetic => {
+            return Ok(Box::new(WorkloadGenerator::from_config(cfg).take(cfg.num_requests)));
+        }
+        WorkloadKind::Trace { path, time_scale, repeat } => {
+            Box::new(ReplaySource::open(path, *time_scale, *repeat)?)
+        }
+        WorkloadKind::Chat => Box::new(SessionSource::chat(
+            scenario_qps(cfg, &kind)?,
+            cfg.max_tokens,
+            cfg.seed,
+        )),
+        WorkloadKind::Rag => Box::new(RagSource::new(
+            scenario_qps(cfg, &kind)?,
+            cfg.max_tokens,
+            cfg.seed,
+        )),
+        WorkloadKind::Agentic => Box::new(SessionSource::agentic(
+            scenario_qps(cfg, &kind)?,
+            cfg.max_tokens,
+            cfg.seed,
+        )),
+        WorkloadKind::Tenants => Box::new(TenantMixSource::new(
+            scenario_qps(cfg, &kind)?,
+            cfg.max_tokens,
+            cfg.seed,
+        )),
+        WorkloadKind::Mix(parts) => {
+            let qps = scenario_qps(cfg, &kind)?;
+            let total: f64 = parts.iter().map(|(_, w)| w).sum();
+            let mut children = Vec::with_capacity(parts.len());
+            for (i, (name, w)) in parts.iter().enumerate() {
+                children.push(component_source(name, cfg, qps * w / total, i as u64)?);
+            }
+            Box::new(MixSource::new(children))
+        }
+    };
+    Ok(Box::new(Capped::new(inner, cfg.num_requests)))
+}
+
+/// Materialize `cfg`'s workload as a [`Trace`] (for engine entry
+/// points that need the whole workload up front, e.g. the autoscaler's
+/// horizon scan). For trace replay this propagates malformed-row
+/// errors instead of truncating at them.
+pub fn trace_from_config(cfg: &SimConfig) -> Result<Trace> {
+    if let WorkloadKind::Trace { path, time_scale, repeat } = &effective_workload(cfg) {
+        let mut src = ReplaySource::open(path, *time_scale, *repeat)?;
+        let mut requests = Vec::new();
+        while (requests.len() as u64) < cfg.num_requests {
+            match src.try_next()? {
+                Some(r) => requests.push(r),
+                None => break,
+            }
+        }
+        return Ok(Trace::new(requests));
+    }
+    let mut src = source_from_config(cfg)?;
+    let mut requests = Vec::new();
+    while let Some(r) = src.next_request() {
+        requests.push(r);
+    }
+    Ok(Trace::new(requests))
+}

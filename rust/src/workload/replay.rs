@@ -1,0 +1,519 @@
+//! Streaming trace replay (DESIGN.md §14): feed the engine a recorded
+//! arrival trace straight off disk, one row at a time, without ever
+//! materializing it — O(1) resident rows no matter how long the trace.
+//!
+//! Two on-disk layouts are sniffed from the first line:
+//!
+//! * the native `trace.csv` schema written by [`crate::workload::Trace::save`]
+//!   (`id,arrival_s,prefill_tokens,decode_tokens`), replayed verbatim —
+//!   arrivals are **not** rebased, so replaying a saved trace
+//!   reproduces the generator's stream bit-for-bit
+//!   (`tests/workload_replay.rs` proves the stage/request CSVs
+//!   byte-identical);
+//! * an Azure-LLM-inference-style layout
+//!   (`timestamp,prompt_tokens,output_tokens`, CSV or JSONL), rebased
+//!   so the first row arrives at t=0.
+//!
+//! JSONL traces carry the same field names as the CSV headers, one
+//! object per line.
+//!
+//! `time_scale` stretches or compresses arrival times (×0.5 = twice
+//! the rate) and `repeat` loops a short trace end to end: each pass is
+//! shifted past the previous one by the trace's mean inter-arrival
+//! gap, so the spliced stream stays nondecreasing with no thundering
+//! herd at the seam.
+//!
+//! Every row is validated on ingest — non-finite / negative arrivals,
+//! zero token counts, and out-of-order rows are rejected with
+//! `path:line:`-prefixed errors instead of panicking deep inside the
+//! engine (the satellite fix for the old `partial_cmp().unwrap()`
+//! NaN panic).
+
+use crate::util::json;
+use crate::workload::request::Request;
+use crate::workload::store::RequestSource;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek};
+use std::path::{Path, PathBuf};
+
+/// Which columns/fields carry arrival time and token counts, and
+/// whether arrivals are rebased to the first row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Schema {
+    /// `id,arrival_s,prefill_tokens,decode_tokens` — absolute sim
+    /// times, replayed as-is.
+    Native,
+    /// `timestamp,prompt_tokens,output_tokens` — wall-clock stamps,
+    /// rebased so the first row arrives at t=0.
+    Timestamp,
+}
+
+impl Schema {
+    fn arrival_key(self) -> &'static str {
+        match self {
+            Schema::Native => "arrival_s",
+            Schema::Timestamp => "timestamp",
+        }
+    }
+    fn prefill_key(self) -> &'static str {
+        match self {
+            Schema::Native => "prefill_tokens",
+            Schema::Timestamp => "prompt_tokens",
+        }
+    }
+    fn decode_key(self) -> &'static str {
+        match self {
+            Schema::Native => "decode_tokens",
+            Schema::Timestamp => "output_tokens",
+        }
+    }
+}
+
+/// One parsed trace row, pre-validation.
+#[derive(Debug, Clone, Copy)]
+struct RawRow {
+    arrival: f64,
+    prefill: f64,
+    decode: f64,
+}
+
+/// Streaming trace-replay [`RequestSource`]. See the module docs for
+/// formats and semantics.
+pub struct ReplaySource {
+    reader: BufReader<File>,
+    path: PathBuf,
+    schema: Schema,
+    jsonl: bool,
+    /// CSV column indices for (arrival, prefill, decode).
+    csv_cols: (usize, usize, usize),
+    time_scale: f64,
+    /// Total passes over the file (>= 1).
+    repeat: u32,
+    pass: u32,
+    /// 1-based line number of the line about to be read (for errors).
+    line_no: u64,
+    /// Rebase origin for [`Schema::Timestamp`] (first row of pass 0).
+    base_ts: Option<f64>,
+    /// Last *emitted* arrival — monotonicity guard and loop splice
+    /// point.
+    last_emitted_s: f64,
+    /// First and last raw (pre-offset, post-scale) arrivals of the
+    /// current pass, for the loop offset.
+    pass_first_s: Option<f64>,
+    rows_in_pass: u64,
+    /// Added to every arrival of the current pass (loop splicing).
+    offset_s: f64,
+    next_id: u64,
+    buf: String,
+    done: bool,
+}
+
+impl ReplaySource {
+    /// Open a trace for replay. `time_scale` multiplies every arrival
+    /// time (must be positive and finite); `repeat` is the total number
+    /// of passes over the file (>= 1).
+    pub fn open(path: impl AsRef<Path>, time_scale: f64, repeat: u32) -> Result<ReplaySource> {
+        let path = path.as_ref().to_path_buf();
+        if !(time_scale.is_finite() && time_scale > 0.0) {
+            bail!("{}: time scale must be positive and finite, got {time_scale}", path.display());
+        }
+        if repeat == 0 {
+            bail!("{}: repeat must be >= 1", path.display());
+        }
+        let file = File::open(&path).with_context(|| format!("opening trace {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+
+        // Sniff the format off the first line, then rewind so row
+        // iteration sees a clean stream.
+        let mut first = String::new();
+        reader
+            .read_line(&mut first)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let head = first.trim();
+        if head.is_empty() {
+            bail!("{}: empty trace", path.display());
+        }
+        let jsonl = head.starts_with('{');
+        let (schema, csv_cols) = if jsonl {
+            let v = json::parse(head).with_context(|| format!("{}:1: bad JSONL row", path.display()))?;
+            let schema = if v.get("arrival_s").is_some() {
+                Schema::Native
+            } else if v.get("timestamp").is_some() {
+                Schema::Timestamp
+            } else {
+                bail!(
+                    "{}:1: JSONL trace needs an 'arrival_s' or 'timestamp' field",
+                    path.display()
+                );
+            };
+            (schema, (0, 0, 0))
+        } else {
+            let cols: Vec<&str> = head.split(',').map(str::trim).collect();
+            let find = |names: &[&str]| names.iter().find_map(|n| cols.iter().position(|c| c == n));
+            let (schema, a) = if let Some(a) = find(&["arrival_s"]) {
+                (Schema::Native, a)
+            } else if let Some(a) = find(&["timestamp"]) {
+                (Schema::Timestamp, a)
+            } else {
+                bail!(
+                    "{}:1: unrecognized trace header '{head}' (need an 'arrival_s' or \
+                     'timestamp' column)",
+                    path.display()
+                );
+            };
+            let p = find(&["prefill_tokens", "prompt_tokens"]).with_context(|| {
+                format!("{}:1: no 'prefill_tokens'/'prompt_tokens' column", path.display())
+            })?;
+            let d = find(&["decode_tokens", "output_tokens"]).with_context(|| {
+                format!("{}:1: no 'decode_tokens'/'output_tokens' column", path.display())
+            })?;
+            (schema, (a, p, d))
+        };
+
+        let mut src = ReplaySource {
+            reader,
+            path,
+            schema,
+            jsonl,
+            csv_cols,
+            time_scale,
+            repeat,
+            pass: 0,
+            line_no: 0,
+            base_ts: None,
+            last_emitted_s: 0.0,
+            pass_first_s: None,
+            rows_in_pass: 0,
+            offset_s: 0.0,
+            next_id: 0,
+            buf: String::new(),
+            done: false,
+        };
+        src.rewind()?;
+        Ok(src)
+    }
+
+    /// Seek back to the first data row (start of a pass).
+    fn rewind(&mut self) -> Result<()> {
+        self.reader.rewind()?;
+        self.line_no = 0;
+        self.pass_first_s = None;
+        self.rows_in_pass = 0;
+        if !self.jsonl {
+            // Skip the CSV header.
+            self.buf.clear();
+            self.reader.read_line(&mut self.buf)?;
+            self.line_no = 1;
+        }
+        Ok(())
+    }
+
+    fn row_err(&self, msg: impl std::fmt::Display) -> anyhow::Error {
+        anyhow::anyhow!("{}:{}: {msg}", self.path.display(), self.line_no)
+    }
+
+    /// Read and parse the next data row of the current pass; `None` at
+    /// end of file. Blank lines are skipped.
+    fn next_row(&mut self) -> Result<Option<RawRow>> {
+        loop {
+            self.buf.clear();
+            let n = self.reader.read_line(&mut self.buf)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let line = self.buf.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let row = if self.jsonl {
+                let v = json::parse(line).map_err(|e| self.row_err(format!("bad JSONL row: {e}")))?;
+                let f = |key: &str| -> Result<f64> {
+                    v.get(key)
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| self.row_err(format!("missing numeric field '{key}'")))
+                };
+                RawRow {
+                    arrival: f(self.schema.arrival_key())?,
+                    prefill: f(self.schema.prefill_key())?,
+                    decode: f(self.schema.decode_key())?,
+                }
+            } else {
+                let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+                let (a, p, d) = self.csv_cols;
+                let width = a.max(p).max(d) + 1;
+                if cells.len() < width {
+                    return Err(self.row_err(format!(
+                        "expected at least {width} columns, got {}",
+                        cells.len()
+                    )));
+                }
+                let f = |i: usize, what: &str| -> Result<f64> {
+                    cells[i]
+                        .parse::<f64>()
+                        .map_err(|_| self.row_err(format!("bad {what} '{}'", cells[i])))
+                };
+                RawRow {
+                    arrival: f(a, self.schema.arrival_key())?,
+                    prefill: f(p, self.schema.prefill_key())?,
+                    decode: f(d, self.schema.decode_key())?,
+                }
+            };
+            return Ok(Some(row));
+        }
+    }
+
+    /// Validate one raw row and turn it into the next emitted request.
+    fn emit(&mut self, row: RawRow) -> Result<Request> {
+        if !row.arrival.is_finite() {
+            return Err(self.row_err(format!("non-finite arrival time {}", row.arrival)));
+        }
+        if self.schema == Schema::Timestamp && self.base_ts.is_none() {
+            self.base_ts = Some(row.arrival);
+        }
+        let rebased = row.arrival - self.base_ts.unwrap_or(0.0);
+        if rebased < 0.0 {
+            return Err(self.row_err(format!("negative arrival time {rebased}")));
+        }
+        let scaled = rebased * self.time_scale;
+        match self.pass_first_s {
+            None => self.pass_first_s = Some(scaled),
+            Some(_) if scaled + self.offset_s < self.last_emitted_s => {
+                return Err(self.row_err(format!(
+                    "arrival times must be nondecreasing (got {}, previous {})",
+                    scaled + self.offset_s,
+                    self.last_emitted_s
+                )));
+            }
+            Some(_) => {}
+        }
+        let tok = |v: f64, what: &str| -> Result<u64> {
+            if !v.is_finite() || v < 1.0 {
+                Err(self.row_err(format!("{what} must be a finite count >= 1, got {v}")))
+            } else {
+                Ok(v as u64)
+            }
+        };
+        let prefill = tok(row.prefill, self.schema.prefill_key())?;
+        let decode = tok(row.decode, self.schema.decode_key())?;
+        let arrival = scaled + self.offset_s;
+        self.last_emitted_s = arrival;
+        self.rows_in_pass += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(Request::new(id, arrival, prefill, decode))
+    }
+
+    /// Splice the next pass onto the end of the stream: shift it so
+    /// its first arrival lands one mean inter-arrival gap after the
+    /// last emitted request.
+    fn start_next_pass(&mut self) -> Result<bool> {
+        self.pass += 1;
+        if self.pass >= self.repeat {
+            return Ok(false);
+        }
+        let span = self.last_emitted_s - self.offset_s - self.pass_first_s.unwrap_or(0.0);
+        let mean_gap = span / self.rows_in_pass.saturating_sub(1).max(1) as f64;
+        let first = self.pass_first_s.unwrap_or(0.0);
+        // offset + first == last_emitted + mean_gap.
+        self.offset_s = self.last_emitted_s + mean_gap - first;
+        self.rewind()?;
+        Ok(true)
+    }
+
+    /// Total requests emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Pull the next request, or a row-numbered error on a malformed
+    /// row. [`RequestSource`] is infallible, so the trait impl prints
+    /// the error and ends the stream; callers that want the hard error
+    /// (the CLI wiring does) should drive this method directly.
+    pub fn try_next(&mut self) -> Result<Option<Request>> {
+        if self.done {
+            return Ok(None);
+        }
+        loop {
+            match self.next_row()? {
+                Some(row) => return self.emit(row).map(Some),
+                None => {
+                    if self.rows_in_pass == 0 {
+                        bail!("{}: trace has a header but no data rows", self.path.display());
+                    }
+                    if !self.start_next_pass()? {
+                        self.done = true;
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl RequestSource for ReplaySource {
+    fn next_request(&mut self) -> Option<Request> {
+        match self.try_next() {
+            Ok(r) => r,
+            Err(e) => {
+                // The trait is infallible; fail loudly and stop the
+                // stream rather than feeding the engine garbage.
+                eprintln!("trace replay error: {e:#}");
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_tmp(name: &str, contents: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("vidur_energy_replay_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path
+    }
+
+    fn drain(src: &mut ReplaySource) -> Vec<Request> {
+        let mut v = Vec::new();
+        while let Some(r) = src.try_next().unwrap() {
+            v.push(r);
+        }
+        v
+    }
+
+    #[test]
+    fn native_csv_replays_verbatim() {
+        let p = write_tmp(
+            "native.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,0.5,100,20\n1,1.25,80,10\n",
+        );
+        let mut src = ReplaySource::open(&p, 1.0, 1).unwrap();
+        let reqs = drain(&mut src);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].arrival_s, 0.5); // not rebased
+        assert_eq!(reqs[1].arrival_s, 1.25);
+        assert_eq!((reqs[0].prefill_tokens, reqs[0].decode_tokens), (100, 20));
+        assert_eq!((reqs[0].id, reqs[1].id), (0, 1));
+        assert!(src.try_next().unwrap().is_none(), "exhausted source must stay None");
+    }
+
+    #[test]
+    fn azure_csv_rebases_to_first_row() {
+        let p = write_tmp(
+            "azure.csv",
+            "timestamp,prompt_tokens,output_tokens\n1000.5,300,40\n1001.0,200,30\n",
+        );
+        let reqs = drain(&mut ReplaySource::open(&p, 1.0, 1).unwrap());
+        assert_eq!(reqs[0].arrival_s, 0.0);
+        assert_eq!(reqs[1].arrival_s, 0.5);
+        assert_eq!(reqs[1].prefill_tokens, 200);
+    }
+
+    #[test]
+    fn jsonl_is_sniffed_and_parsed() {
+        let p = write_tmp(
+            "trace.jsonl",
+            "{\"timestamp\": 10.0, \"prompt_tokens\": 64, \"output_tokens\": 8}\n\
+             {\"timestamp\": 11.5, \"prompt_tokens\": 32, \"output_tokens\": 4}\n",
+        );
+        let reqs = drain(&mut ReplaySource::open(&p, 1.0, 1).unwrap());
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[1].arrival_s, 1.5);
+        assert_eq!(reqs[1].prefill_tokens, 32);
+    }
+
+    #[test]
+    fn time_scale_stretches_arrivals() {
+        let p = write_tmp(
+            "scaled.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,1.0,10,5\n1,3.0,10,5\n",
+        );
+        let reqs = drain(&mut ReplaySource::open(&p, 2.0, 1).unwrap());
+        assert_eq!(reqs[0].arrival_s, 2.0);
+        assert_eq!(reqs[1].arrival_s, 6.0);
+    }
+
+    #[test]
+    fn repeat_splices_monotone_passes() {
+        let p = write_tmp(
+            "looped.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,0.0,10,5\n1,2.0,20,5\n",
+        );
+        let reqs = drain(&mut ReplaySource::open(&p, 1.0, 3).unwrap());
+        assert_eq!(reqs.len(), 6);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "{reqs:?}");
+        }
+        // Mean gap = 2.0, so pass 2 starts at 2.0 + 2.0 = 4.0.
+        assert_eq!(reqs[2].arrival_s, 4.0);
+        assert_eq!(reqs[3].arrival_s, 6.0);
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn malformed_rows_error_with_line_numbers() {
+        let nan = write_tmp(
+            "nan.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,0.5,10,5\n1,NaN,10,5\n",
+        );
+        let err = {
+            let mut s = ReplaySource::open(&nan, 1.0, 1).unwrap();
+            assert!(s.try_next().unwrap().is_some());
+            s.try_next().unwrap_err().to_string()
+        };
+        assert!(err.contains(":3:") && err.contains("non-finite"), "{err}");
+
+        let zero = write_tmp(
+            "zero.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,0.5,0,5\n",
+        );
+        let err = ReplaySource::open(&zero, 1.0, 1)
+            .unwrap()
+            .try_next()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":2:") && err.contains("prefill_tokens"), "{err}");
+
+        let unsorted = write_tmp(
+            "unsorted.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,5.0,10,5\n1,1.0,10,5\n",
+        );
+        let mut s = ReplaySource::open(&unsorted, 1.0, 1).unwrap();
+        assert!(s.try_next().unwrap().is_some());
+        let err = s.try_next().unwrap_err().to_string();
+        assert!(err.contains("nondecreasing"), "{err}");
+
+        let neg = write_tmp(
+            "neg.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,-2.0,10,5\n",
+        );
+        let err = ReplaySource::open(&neg, 1.0, 1)
+            .unwrap()
+            .try_next()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("negative arrival"), "{err}");
+    }
+
+    #[test]
+    fn bad_header_and_bad_knobs_rejected() {
+        let p = write_tmp("bad_header.csv", "foo,bar\n1,2\n");
+        assert!(ReplaySource::open(&p, 1.0, 1).is_err());
+        let ok = write_tmp(
+            "ok.csv",
+            "id,arrival_s,prefill_tokens,decode_tokens\n0,0.0,10,5\n",
+        );
+        assert!(ReplaySource::open(&ok, 0.0, 1).is_err());
+        assert!(ReplaySource::open(&ok, f64::NAN, 1).is_err());
+        assert!(ReplaySource::open(&ok, 1.0, 0).is_err());
+    }
+}

@@ -1,0 +1,634 @@
+//! Composable scenario library (DESIGN.md §14): production-shaped
+//! request sources that go beyond the synthetic Poisson/Zipf
+//! generator.
+//!
+//! Four generators, each a [`RequestSource`]:
+//!
+//! * **chat** — multi-turn conversations with shared-prefix
+//!   accounting: turn N's prefill is the full shared history (all
+//!   prior prompts + responses) plus the new prompt, so context grows
+//!   monotonically across a session (the KV-cache-shaped load
+//!   "How Hungry is AI?" identifies as the dominant chat pattern);
+//! * **agentic** — tool-call loops: many short turns per session with
+//!   tight inter-turn gaps, producing correlated arrival clusters
+//!   instead of memoryless Poisson spacing;
+//! * **rag** — retrieval-augmented queries: a short question plus
+//!   `k` retrieved chunks makes a long prefill, followed by a short
+//!   grounded answer;
+//! * **tenants** — a heavy-tailed multi-tenant mix: 8 tenants with
+//!   Zipf-ranked QPS weights and per-tenant length/P:D profiles,
+//!   superposed into one Poisson stream.
+//!
+//! Any set of sources composes through [`MixSource`], a k-way merge
+//! that re-ids the union densely; `workload::source_from_config` wires
+//! weighted mixes from `--workload mix:chat=2,rag=1`.
+//!
+//! Everything is driven by the crate's deterministic [`Rng`]: equal
+//! seeds give bit-identical streams (pinned by the conformance suite
+//! in `tests/workload_sources.rs`), and each session forks its own
+//! stream so adding a turn to one conversation never perturbs another.
+
+use crate::util::rng::{Rng, Zipf};
+use crate::workload::request::Request;
+use crate::workload::store::RequestSource;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Shape of one session-based scenario (chat, agentic): how many
+/// turns a session runs, how long prompts/responses are, and how the
+/// next turn's arrival trails the previous turn's completion.
+#[derive(Debug, Clone)]
+pub struct SessionProfile {
+    /// Mean turns per session (>= 1; actual turns are
+    /// `1 + Poisson(mean_turns - 1)`).
+    pub mean_turns: f64,
+    /// Per-turn new-prompt length.
+    pub prompt: Zipf,
+    /// Per-turn response length.
+    pub response: Zipf,
+    /// Mean user think time between turns, seconds (exponential).
+    pub think_mean_s: f64,
+    /// Crude decode-latency model: the next turn can only start after
+    /// the previous response streamed out at this many seconds per
+    /// token.
+    pub latency_s_per_token: f64,
+}
+
+impl SessionProfile {
+    /// Interactive chat: a handful of turns, mid-sized prompts and
+    /// responses, tens of seconds of think time.
+    pub fn chat() -> SessionProfile {
+        SessionProfile {
+            mean_turns: 4.0,
+            prompt: Zipf::new(32, 512, 0.8),
+            response: Zipf::new(16, 384, 0.7),
+            think_mean_s: 20.0,
+            latency_s_per_token: 0.05,
+        }
+    }
+
+    /// Agentic tool-call loop: many short turns back to back — the
+    /// next call fires as soon as the previous result lands, so one
+    /// session is a correlated burst of arrivals.
+    pub fn agentic() -> SessionProfile {
+        SessionProfile {
+            mean_turns: 12.0,
+            prompt: Zipf::new(16, 128, 0.9),
+            response: Zipf::new(8, 96, 0.9),
+            think_mean_s: 0.4,
+            latency_s_per_token: 0.03,
+        }
+    }
+}
+
+/// One in-flight session: its private RNG stream, remaining turn
+/// budget, and the shared-prefix token count carried between turns.
+///
+/// Exposed so tests can drive the shared-prefix accounting directly
+/// (the history-monotonicity property in this module's tests).
+#[derive(Debug, Clone)]
+pub struct Conversation {
+    rng: Rng,
+    remaining_turns: u64,
+    history_tokens: u64,
+}
+
+impl Conversation {
+    /// Start a session; `rng` is the session's private fork.
+    pub fn start(profile: &SessionProfile, mut rng: Rng) -> Conversation {
+        let extra = if profile.mean_turns > 1.0 {
+            rng.poisson(profile.mean_turns - 1.0)
+        } else {
+            0
+        };
+        Conversation {
+            rng,
+            remaining_turns: 1 + extra,
+            history_tokens: 0,
+        }
+    }
+
+    /// Produce the next turn's `(prefill, decode)` token budgets, or
+    /// `None` once the session is over.
+    ///
+    /// Shared-prefix accounting: the prefill covers the whole shared
+    /// history plus the new prompt; afterwards both the prompt and the
+    /// generated response join the history, which therefore never
+    /// shrinks. Both budgets are clamped so
+    /// `prefill + decode <= max_tokens` (a long conversation
+    /// saturates the context window rather than overflowing it).
+    pub fn next_turn(&mut self, profile: &SessionProfile, max_tokens: u64) -> Option<(u64, u64)> {
+        if self.remaining_turns == 0 {
+            return None;
+        }
+        self.remaining_turns -= 1;
+        let prompt = profile.prompt.sample(&mut self.rng);
+        let response = profile.response.sample(&mut self.rng);
+        let decode = response.clamp(1, max_tokens.saturating_sub(1).max(1));
+        let prefill = (self.history_tokens + prompt).clamp(1, (max_tokens - decode).max(1));
+        self.history_tokens += prompt + response;
+        Some((prefill, decode))
+    }
+
+    /// Shared-history size in tokens (monotone nondecreasing).
+    pub fn history_tokens(&self) -> u64 {
+        self.history_tokens
+    }
+
+    /// Turns left before the session ends.
+    pub fn remaining_turns(&self) -> u64 {
+        self.remaining_turns
+    }
+
+    /// Seconds until this session's next turn arrives, measured from
+    /// the completion of a `decode`-token response.
+    fn next_gap_s(&mut self, profile: &SessionProfile, decode: u64) -> f64 {
+        decode as f64 * profile.latency_s_per_token
+            + self.rng.exponential(1.0 / profile.think_mean_s)
+    }
+}
+
+/// A scheduled future turn in [`SessionSource`]'s event queue.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    at: f64,
+    /// Tie-break so equal times pop in schedule order (determinism).
+    seq: u64,
+    slot: usize,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Session-based scenario source (chat, agentic): new sessions open
+/// as a Poisson process; each session then emits its turns on its own
+/// think-time clock. The source merges all pending turns and future
+/// session starts into one nondecreasing arrival stream.
+///
+/// The stream is infinite (sessions keep opening); callers cap it —
+/// `workload::source_from_config` wraps it to `cfg.num_requests`.
+pub struct SessionSource {
+    profile: SessionProfile,
+    /// New-session rate, chosen so the long-run *request* rate is the
+    /// configured QPS: sessions/s = qps / mean_turns.
+    session_rate: f64,
+    max_tokens: u64,
+    rng: Rng,
+    heap: BinaryHeap<Reverse<Pending>>,
+    sessions: Vec<Option<Conversation>>,
+    free_slots: Vec<usize>,
+    next_session_s: f64,
+    next_seq: u64,
+    sessions_started: u64,
+    next_id: u64,
+}
+
+impl SessionSource {
+    pub fn new(profile: SessionProfile, qps: f64, max_tokens: u64, seed: u64) -> SessionSource {
+        assert!(qps.is_finite() && qps > 0.0, "session source needs a positive rate");
+        assert!(profile.mean_turns >= 1.0, "mean_turns must be >= 1");
+        let mut rng = Rng::new(seed ^ 0x5E55_1014);
+        let session_rate = qps / profile.mean_turns;
+        let first = rng.exponential(session_rate);
+        SessionSource {
+            profile,
+            session_rate,
+            max_tokens,
+            rng,
+            heap: BinaryHeap::new(),
+            sessions: Vec::new(),
+            free_slots: Vec::new(),
+            next_session_s: first,
+            next_seq: 0,
+            sessions_started: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Convenience constructors for the built-in scenario kinds.
+    pub fn chat(qps: f64, max_tokens: u64, seed: u64) -> SessionSource {
+        SessionSource::new(SessionProfile::chat(), qps, max_tokens, seed)
+    }
+    pub fn agentic(qps: f64, max_tokens: u64, seed: u64) -> SessionSource {
+        SessionSource::new(SessionProfile::agentic(), qps, max_tokens, seed)
+    }
+
+    fn schedule(&mut self, at: f64, slot: usize) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Pending { at, seq, slot }));
+    }
+
+    /// Open the session arriving at `next_session_s` and schedule its
+    /// first turn there.
+    fn open_session(&mut self) {
+        let at = self.next_session_s;
+        self.sessions_started += 1;
+        // Private stream per session: turn lengths and think times of
+        // one conversation never depend on how many others are open.
+        let fork = self.rng.fork(self.sessions_started);
+        let convo = Conversation::start(&self.profile, fork);
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.sessions[s] = Some(convo);
+                s
+            }
+            None => {
+                self.sessions.push(Some(convo));
+                self.sessions.len() - 1
+            }
+        };
+        self.schedule(at, slot);
+        self.next_session_s = at + self.rng.exponential(self.session_rate);
+    }
+}
+
+impl RequestSource for SessionSource {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            // Admit every session that opens before the earliest
+            // pending turn, so emissions stay globally nondecreasing.
+            while self
+                .heap
+                .peek()
+                .is_none_or(|Reverse(p)| self.next_session_s <= p.at)
+            {
+                self.open_session();
+            }
+            let Reverse(p) = self.heap.pop().expect("session heap cannot be empty here");
+            let convo = self.sessions[p.slot]
+                .as_mut()
+                .expect("pending turn for a closed session");
+            match convo.next_turn(&self.profile, self.max_tokens) {
+                Some((prefill, decode)) => {
+                    if convo.remaining_turns() > 0 {
+                        let gap = convo.next_gap_s(&self.profile, decode);
+                        self.schedule(p.at + gap, p.slot);
+                    } else {
+                        self.sessions[p.slot] = None;
+                        self.free_slots.push(p.slot);
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    return Some(Request::new(id, p.at, prefill, decode));
+                }
+                None => {
+                    // Zero-turn sessions cannot happen (min 1 turn),
+                    // but stay robust: close the slot and move on.
+                    self.sessions[p.slot] = None;
+                    self.free_slots.push(p.slot);
+                }
+            }
+        }
+    }
+}
+
+/// RAG-style source: stateless Poisson arrivals where each request's
+/// prefill is a short query plus `k` retrieved chunks (long prefill)
+/// and the decode is a short grounded answer.
+pub struct RagSource {
+    rng: Rng,
+    qps: f64,
+    clock_s: f64,
+    query: Zipf,
+    answer: Zipf,
+    /// Retrieved chunks per query, uniform in `2..=8`.
+    chunk_tokens: u64,
+    max_tokens: u64,
+    next_id: u64,
+}
+
+impl RagSource {
+    pub fn new(qps: f64, max_tokens: u64, seed: u64) -> RagSource {
+        assert!(qps.is_finite() && qps > 0.0, "rag source needs a positive rate");
+        RagSource {
+            rng: Rng::new(seed ^ 0x4A6_0BA6),
+            qps,
+            clock_s: 0.0,
+            query: Zipf::new(16, 128, 0.8),
+            answer: Zipf::new(32, 256, 0.8),
+            chunk_tokens: 256,
+            max_tokens,
+            next_id: 0,
+        }
+    }
+}
+
+impl RequestSource for RagSource {
+    fn next_request(&mut self) -> Option<Request> {
+        self.clock_s += self.rng.exponential(self.qps);
+        let k = self.rng.int_range(2, 8);
+        let decode = self
+            .answer
+            .sample(&mut self.rng)
+            .clamp(1, self.max_tokens.saturating_sub(1).max(1));
+        let prefill = (self.query.sample(&mut self.rng) + k * self.chunk_tokens)
+            .clamp(1, (self.max_tokens - decode).max(1));
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request::new(id, self.clock_s, prefill, decode))
+    }
+}
+
+/// One tenant in the multi-tenant mix.
+#[derive(Debug, Clone)]
+struct Tenant {
+    lengths: Zipf,
+    pd_ratio: f64,
+}
+
+/// Heavy-tailed multi-tenant mix: `n` tenants whose traffic shares
+/// follow a Zipf rank-weight law (`weight ∝ 1/(rank+1)^1.2`), each
+/// with its own length distribution and P:D ratio. The superposition
+/// of the per-tenant Poisson streams is itself Poisson at the total
+/// QPS, so arrivals are drawn from one aggregate clock and each
+/// request picks its tenant by weight.
+pub struct TenantMixSource {
+    rng: Rng,
+    qps: f64,
+    clock_s: f64,
+    tenants: Vec<Tenant>,
+    /// Normalized traffic shares, one per tenant.
+    weights: Vec<f64>,
+    /// Requests emitted per tenant (for the convergence property).
+    counts: Vec<u64>,
+    max_tokens: u64,
+    next_id: u64,
+}
+
+impl TenantMixSource {
+    pub const NUM_TENANTS: usize = 8;
+
+    pub fn new(qps: f64, max_tokens: u64, seed: u64) -> TenantMixSource {
+        assert!(qps.is_finite() && qps > 0.0, "tenant mix needs a positive rate");
+        let mut rng = Rng::new(seed ^ 0x7E4A_4713);
+        let n = Self::NUM_TENANTS;
+        let raw: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(1.2)).collect();
+        let total: f64 = raw.iter().sum();
+        let weights: Vec<f64> = raw.iter().map(|w| w / total).collect();
+        // Per-tenant length/shape profiles: big tenants skew long and
+        // prefill-heavy (workhorse apps), tail tenants run short
+        // interactive traffic.
+        let tenants: Vec<Tenant> = (0..n)
+            .map(|r| {
+                let hi = (1024 >> (r / 3)).max(128) as u64;
+                let lo = (hi / 16).max(8);
+                Tenant {
+                    lengths: Zipf::new(lo, hi, 0.6 + 0.05 * r as f64),
+                    pd_ratio: rng.uniform(0.5, 8.0),
+                }
+            })
+            .collect();
+        TenantMixSource {
+            rng,
+            qps,
+            clock_s: 0.0,
+            tenants,
+            weights,
+            counts: vec![0; n],
+            max_tokens,
+            next_id: 0,
+        }
+    }
+
+    /// Normalized per-tenant traffic shares.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Requests emitted so far, per tenant.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+impl RequestSource for TenantMixSource {
+    fn next_request(&mut self) -> Option<Request> {
+        self.clock_s += self.rng.exponential(self.qps);
+        // Weight-proportional tenant pick off the aggregate stream.
+        let u = self.rng.f64();
+        let mut acc = 0.0;
+        let mut pick = self.tenants.len() - 1;
+        for (i, w) in self.weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                pick = i;
+                break;
+            }
+        }
+        self.counts[pick] += 1;
+        let t = &self.tenants[pick];
+        let total = t.lengths.sample(&mut self.rng).clamp(2, self.max_tokens);
+        let (prefill, decode) = Request::split_by_ratio(total, t.pd_ratio);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request::new(id, self.clock_s, prefill, decode))
+    }
+}
+
+/// K-way merge of child sources into one stream: always emits the
+/// earliest pending child arrival (ties broken by child index) and
+/// re-ids the union densely so the engine's ids-are-`0..n` contract
+/// holds. Children must themselves be nondecreasing.
+pub struct MixSource {
+    children: Vec<Box<dyn RequestSource>>,
+    pending: Vec<Option<Request>>,
+    primed: bool,
+    next_id: u64,
+}
+
+impl MixSource {
+    pub fn new(children: Vec<Box<dyn RequestSource>>) -> MixSource {
+        assert!(!children.is_empty(), "mix needs at least one child source");
+        let n = children.len();
+        MixSource {
+            children,
+            pending: (0..n).map(|_| None).collect(),
+            primed: false,
+            next_id: 0,
+        }
+    }
+}
+
+impl RequestSource for MixSource {
+    fn next_request(&mut self) -> Option<Request> {
+        if !self.primed {
+            for (i, c) in self.children.iter_mut().enumerate() {
+                self.pending[i] = c.next_request();
+            }
+            self.primed = true;
+        }
+        let best = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.as_ref().map(|r| (i, r.arrival_s)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+            .map(|(i, _)| i)?;
+        let mut req = self.pending[best].take().expect("winning slot must be pending");
+        self.pending[best] = self.children[best].next_request();
+        req.id = self.next_id;
+        self.next_id += 1;
+        Some(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+
+    fn drain(src: &mut dyn RequestSource, n: usize) -> Vec<Request> {
+        (0..n).map(|_| src.next_request().expect("infinite source")).collect()
+    }
+
+    #[test]
+    fn chat_arrivals_monotone_ids_dense() {
+        let mut src = SessionSource::chat(8.0, 2048, 7);
+        let reqs = drain(&mut src, 500);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.prefill_tokens >= 1 && r.decode_tokens >= 1);
+            assert!(r.prefill_tokens + r.decode_tokens <= 2048, "{r:?}");
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn agentic_turns_cluster_tighter_than_chat() {
+        // Same request rate; agentic sessions should pack far more of
+        // their inter-arrival gaps under a second than chat does.
+        let frac_small = |profile: fn(f64, u64, u64) -> SessionSource| {
+            let reqs = drain(&mut profile(5.0, 4096, 11), 800);
+            let small = reqs
+                .windows(2)
+                .filter(|w| w[1].arrival_s - w[0].arrival_s < 1.0)
+                .count();
+            small as f64 / (reqs.len() - 1) as f64
+        };
+        let agentic = frac_small(SessionSource::agentic);
+        let chat = frac_small(SessionSource::chat);
+        assert!(
+            agentic > chat + 0.1,
+            "agentic bursts not tighter: agentic {agentic:.2} vs chat {chat:.2}"
+        );
+    }
+
+    #[test]
+    fn rag_is_prefill_heavy() {
+        let mut src = RagSource::new(10.0, 4096, 3);
+        let reqs = drain(&mut src, 400);
+        let p: u64 = reqs.iter().map(|r| r.prefill_tokens).sum();
+        let d: u64 = reqs.iter().map(|r| r.decode_tokens).sum();
+        assert!(p > 4 * d, "rag must be prefill-dominant: prefill {p}, decode {d}");
+        // Chunked retrieval: prefill at least query_min + 2 chunks.
+        assert!(reqs.iter().all(|r| r.prefill_tokens >= 16 + 2 * 256));
+    }
+
+    #[test]
+    fn equal_seeds_equal_streams() {
+        let builders: [fn(u64) -> Box<dyn RequestSource>; 4] = [
+            |s| Box::new(SessionSource::chat(6.0, 2048, s)),
+            |s| Box::new(SessionSource::agentic(6.0, 2048, s)),
+            |s| Box::new(RagSource::new(6.0, 2048, s)),
+            |s| Box::new(TenantMixSource::new(6.0, 2048, s)),
+        ];
+        for build in builders {
+            let a = drain(&mut *build(42), 200);
+            let b = drain(&mut *build(42), 200);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert!(x.arrival_s == y.arrival_s, "{x:?} vs {y:?}");
+                assert_eq!(x.prefill_tokens, y.prefill_tokens);
+                assert_eq!(x.decode_tokens, y.decode_tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_merges_by_arrival_and_reids() {
+        let children: Vec<Box<dyn RequestSource>> = vec![
+            Box::new(RagSource::new(4.0, 2048, 1)),
+            Box::new(TenantMixSource::new(4.0, 2048, 2)),
+        ];
+        let mut mix = MixSource::new(children);
+        let reqs = drain(&mut mix, 300);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    // --- property tests (satellite: proptest harness) ---
+
+    #[test]
+    fn prop_shared_prefix_history_never_shrinks() {
+        check(60, gens::u64_in(0, 1 << 48), |&seed| {
+            let profile = SessionProfile::chat();
+            let mut convo = Conversation::start(&profile, Rng::new(seed));
+            let mut last_history = 0u64;
+            let mut last_prefill = 0u64;
+            while let Some((prefill, decode)) = convo.next_turn(&profile, 4096) {
+                if convo.history_tokens() < last_history {
+                    return Err(format!(
+                        "history shrank: {} -> {}",
+                        last_history,
+                        convo.history_tokens()
+                    ));
+                }
+                if prefill + decode > 4096 {
+                    return Err(format!("context overflow: {prefill}+{decode}"));
+                }
+                // Prefill tracks the growing history until the window
+                // clamp kicks in.
+                if prefill < last_prefill && prefill + decode < 4096 {
+                    return Err(format!(
+                        "unclamped prefill shrank: {last_prefill} -> {prefill}"
+                    ));
+                }
+                last_history = convo.history_tokens();
+                last_prefill = prefill;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tenant_shares_converge_to_weights() {
+        check(10, gens::u64_in(0, 1 << 48), |&seed| {
+            let mut src = TenantMixSource::new(10.0, 2048, seed);
+            let n = 20_000usize;
+            for _ in 0..n {
+                src.next_request();
+            }
+            let weights = src.weights().to_vec();
+            for (i, (&c, &w)) in src.counts().iter().zip(&weights).enumerate() {
+                let share = c as f64 / n as f64;
+                if (share - w).abs() > 0.02 {
+                    return Err(format!(
+                        "tenant {i}: share {share:.4} vs weight {w:.4} (n={n})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

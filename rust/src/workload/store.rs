@@ -131,8 +131,14 @@ impl RequestStore for LiveRequests {
 /// nondecreasing `arrival_s` order, so the engine keeps exactly one
 /// pending-arrival event in its heap instead of pre-pushing the whole
 /// workload. Implemented by [`crate::workload::trace::TraceSource`]
-/// (materialized traces) and [`crate::workload::generator::LazyWorkload`]
-/// (on-the-fly generation, the O(1)-memory front of the pipeline).
+/// (materialized traces), [`crate::workload::generator::LazyWorkload`]
+/// (on-the-fly generation, the O(1)-memory front of the pipeline),
+/// [`crate::workload::replay::ReplaySource`] (streaming trace replay
+/// off disk), and the [`crate::workload::scenario`] generators
+/// (chat/rag/agentic/tenants plus their weighted
+/// [`crate::workload::scenario::MixSource`]). The conformance suite in
+/// `tests/workload_sources.rs` pins this contract for every
+/// implementation.
 pub trait RequestSource {
     /// The next request, or `None` when the workload is exhausted.
     /// Arrival times must be nondecreasing and ids unique.

@@ -5,7 +5,7 @@
 use crate::util::csv::Table;
 use crate::workload::request::Request;
 use crate::workload::store::RequestSource;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::Path;
 
 /// A materialized request stream.
@@ -43,7 +43,11 @@ impl Trace {
         for r in &self.requests {
             t.push_row(vec![
                 r.id.to_string(),
-                format!("{:.6}", r.arrival_s),
+                // Shortest-roundtrip formatting: load() recovers the
+                // exact f64, so save -> load -> re-save is
+                // byte-identical and a replayed trace reproduces the
+                // generator's arrivals bit-for-bit.
+                format!("{}", r.arrival_s),
                 r.prefill_tokens.to_string(),
                 r.decode_tokens.to_string(),
             ]);
@@ -55,8 +59,10 @@ impl Trace {
     /// sorted by arrival with ids reassigned to 0..n (the engine's
     /// historical indexing contract), yielded one at a time.
     pub fn into_source(mut self) -> TraceSource {
-        self.requests
-            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN arrival that
+        // slipped past validation must not panic the sort. (load()
+        // rejects NaN rows up front; this guards hand-built traces.)
+        self.requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         TraceSource {
             iter: self.requests.into_iter(),
             next_id: 0,
@@ -64,19 +70,35 @@ impl Trace {
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+        let path = path.as_ref();
         let t = Table::load(path)?;
         let ids = t.f64_col("id")?;
         let at = t.f64_col("arrival_s")?;
         let pf = t.f64_col("prefill_tokens")?;
         let dc = t.f64_col("decode_tokens")?;
-        let mut requests: Vec<Request> = ids
-            .iter()
-            .zip(&at)
-            .zip(&pf)
-            .zip(&dc)
-            .map(|(((id, a), p), d)| Request::new(*id as u64, *a, *p as u64, *d as u64))
-            .collect();
-        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut requests = Vec::with_capacity(ids.len());
+        for (i, (((id, a), p), d)) in ids.iter().zip(&at).zip(&pf).zip(&dc).enumerate() {
+            // Validate before Request::new (which would panic) and
+            // before the sort (which would mis-order on NaN). Line
+            // numbers are 1-based with the header on line 1.
+            let line = i + 2;
+            if !a.is_finite() {
+                bail!("{}:{line}: non-finite arrival time {a}", path.display());
+            }
+            if *a < 0.0 {
+                bail!("{}:{line}: negative arrival time {a}", path.display());
+            }
+            for (v, what) in [(p, "prefill_tokens"), (d, "decode_tokens")] {
+                if !v.is_finite() || *v < 1.0 {
+                    bail!(
+                        "{}:{line}: {what} must be a finite count >= 1, got {v}",
+                        path.display()
+                    );
+                }
+            }
+            requests.push(Request::new(*id as u64, *a, *p as u64, *d as u64));
+        }
+        requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         Ok(Trace { requests })
     }
 }
@@ -120,11 +142,57 @@ mod tests {
         assert_eq!(back.len(), tr.len());
         for (a, b) in tr.requests.iter().zip(&back.requests) {
             assert_eq!(a.id, b.id);
-            assert!((a.arrival_s - b.arrival_s).abs() < 1e-5);
+            // Shortest-roundtrip save formatting: arrivals come back
+            // bit-exact, not merely close.
+            assert!(a.arrival_s == b.arrival_s, "{} != {}", a.arrival_s, b.arrival_s);
             assert_eq!(a.prefill_tokens, b.prefill_tokens);
             assert_eq!(a.decode_tokens, b.decode_tokens);
         }
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_rows_with_line_numbers() {
+        let dir = std::env::temp_dir().join("vidur_energy_trace_malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, body: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            p
+        };
+        let header = "id,arrival_s,prefill_tokens,decode_tokens\n";
+
+        let nan = write("nan.csv", &format!("{header}0,0.5,10,5\n1,NaN,10,5\n"));
+        let err = Trace::load(&nan).unwrap_err().to_string();
+        assert!(err.contains(":3:") && err.contains("non-finite"), "{err}");
+
+        let neg = write("neg.csv", &format!("{header}0,-1.0,10,5\n"));
+        let err = Trace::load(&neg).unwrap_err().to_string();
+        assert!(err.contains(":2:") && err.contains("negative"), "{err}");
+
+        let zero = write("zero.csv", &format!("{header}0,0.5,0,5\n"));
+        let err = Trace::load(&zero).unwrap_err().to_string();
+        assert!(err.contains(":2:") && err.contains("prefill_tokens"), "{err}");
+
+        let inf = write("inf.csv", &format!("{header}0,0.5,10,inf\n"));
+        let err = Trace::load(&inf).unwrap_err().to_string();
+        assert!(err.contains("decode_tokens"), "{err}");
+    }
+
+    #[test]
+    fn into_source_survives_nan_arrival() {
+        // Hand-built traces bypass load() validation; the sort must
+        // not panic (regression: partial_cmp().unwrap()).
+        let tr = Trace::new(vec![
+            Request::new(0, f64::NAN, 10, 5),
+            Request::new(1, 1.0, 10, 5),
+        ]);
+        let mut src = tr.into_source();
+        let mut n = 0;
+        while src.next_request().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 2);
     }
 
     #[test]

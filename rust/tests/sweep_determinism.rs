@@ -37,6 +37,45 @@ fn jobs_1_and_8_produce_byte_identical_results() {
     }
 }
 
+/// The scenario library goes through the same contract: a workload
+/// axis (chat / rag / agentic / tenants / mix) × QPS grid renders
+/// byte-identically under any worker count. Scenario generators carry
+/// more internal RNG state than the synthetic generator (per-session
+/// forks, tenant pickers), so this pins that none of it leaks across
+/// cases or depends on scheduling order.
+#[test]
+fn scenario_grid_is_byte_identical_across_jobs() {
+    use vidur_energy::config::simconfig::{Arrival, CostModelKind, WorkloadKind};
+    use vidur_energy::util::rng::case_seed;
+
+    let grid = || -> Vec<SimConfig> {
+        let mut cfgs = Vec::new();
+        for kind in ["chat", "rag", "agentic", "tenants", "mix:chat=2,tenants=1"] {
+            for &qps in &[2.0, 8.0] {
+                let mut cfg = SimConfig::default();
+                cfg.cost_model = CostModelKind::Native;
+                cfg.workload = WorkloadKind::parse(kind).unwrap();
+                cfg.arrival = Arrival::Poisson { qps };
+                cfg.num_requests = 96;
+                cfg.seed = case_seed(0x5CE, cfgs.len() as u64);
+                cfgs.push(cfg);
+            }
+        }
+        cfgs
+    };
+    let serial = run_cases_on(&SweepExecutor::new(1), grid()).unwrap();
+    let par = run_cases_on(&SweepExecutor::new(8), grid()).unwrap();
+    assert_eq!(
+        render_cases(serial.iter().enumerate()).to_csv(),
+        render_cases(par.iter().enumerate()).to_csv()
+    );
+    for (a, b) in serial.iter().zip(&par) {
+        assert_eq!(a.out.request_stats.prefill_tokens_done, b.out.request_stats.prefill_tokens_done);
+        assert_eq!(a.out.request_stats.decode_tokens_done, b.out.request_stats.decode_tokens_done);
+        assert_eq!(a.out.metrics.stage_count, b.out.metrics.stage_count);
+    }
+}
+
 /// Experiment-level check through the real regenerator + CSV writer
 /// (needs the compiled HLO artifacts; skipped without them). Runs both
 /// worker counts sequentially in one test so the process-global

@@ -1,0 +1,197 @@
+//! RequestSource conformance suite (DESIGN.md §14): every arrival
+//! stream the engine can be driven by — the synthetic generator,
+//! materialized traces, round-robin splits, streamed trace replay, the
+//! scenario library, and weighted mixes — must honor one contract:
+//!
+//!  * arrivals are nondecreasing and finite,
+//!  * ids are dense 0..n in emission order,
+//!  * every request has ≥1 prefill and ≥1 decode token, and rate-based
+//!    generators keep prefill+decode ≤ `max_tokens`,
+//!  * an exhausted source keeps returning `None` (the engine polls
+//!    freely after drain),
+//!  * equal seeds/inputs reproduce bit-identical streams.
+//!
+//! The engine, router, and autoscaler all assume these invariants
+//! without checking them, so this suite is where a new source earns
+//! the right to be wired into `source_from_config`.
+
+mod common;
+
+use common::{stream_cfg, trace_for, TempDir};
+use vidur_energy::config::simconfig::{SimConfig, WorkloadKind};
+use vidur_energy::workload::{self, split_round_robin, Request, RequestSource};
+
+/// Drain up to `limit` requests (a hard fail-safe for a source that
+/// refuses to exhaust; every finite source here ends well below it).
+fn drain(src: &mut dyn RequestSource, limit: usize) -> Vec<Request> {
+    let mut out = Vec::new();
+    while let Some(r) = src.next_request() {
+        out.push(r);
+        assert!(out.len() <= limit, "source exceeded {limit} requests");
+    }
+    // Exhaustion is stable: the engine may poll again after None.
+    for _ in 0..3 {
+        assert!(src.next_request().is_none(), "source revived after None");
+    }
+    out
+}
+
+/// The shared contract. `token_cap` is `Some(max_tokens)` for
+/// rate-based generators; replayed traces carry whatever the file
+/// says, so they only promise positive token counts.
+fn assert_conformant(what: &str, reqs: &[Request], expect_n: usize, token_cap: Option<u64>) {
+    assert_eq!(reqs.len(), expect_n, "{what}: wrong request count");
+    let mut last = f64::NEG_INFINITY;
+    for (i, r) in reqs.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "{what}: ids not dense at {i}");
+        assert!(r.arrival_s.is_finite(), "{what}: non-finite arrival at {i}");
+        assert!(
+            r.arrival_s >= last,
+            "{what}: arrivals decreased at {i}: {} < {last}",
+            r.arrival_s
+        );
+        last = r.arrival_s;
+        assert!(r.prefill_tokens >= 1, "{what}: zero prefill at {i}");
+        assert!(r.decode_tokens >= 1, "{what}: zero decode at {i}");
+        if let Some(cap) = token_cap {
+            assert!(
+                r.prefill_tokens + r.decode_tokens <= cap,
+                "{what}: request {i} exceeds max_tokens {cap}: {} + {}",
+                r.prefill_tokens,
+                r.decode_tokens
+            );
+        }
+    }
+}
+
+/// Config for the workload-kind sources: native oracle, 300 requests,
+/// 12 QPS — small enough that the whole suite is fast.
+fn cfg_for(kind: WorkloadKind) -> SimConfig {
+    let mut cfg = stream_cfg(0x50C); // historical seed for this suite
+    cfg.num_requests = 300;
+    cfg.workload = kind;
+    cfg
+}
+
+fn kind_sources() -> Vec<(String, SimConfig)> {
+    [
+        WorkloadKind::Synthetic,
+        WorkloadKind::Chat,
+        WorkloadKind::Rag,
+        WorkloadKind::Agentic,
+        WorkloadKind::Tenants,
+        WorkloadKind::parse("mix:chat=2,rag=1,agentic=0.5,tenants=1,synthetic=1").unwrap(),
+    ]
+    .into_iter()
+    .map(|k| (k.spec(), cfg_for(k)))
+    .collect()
+}
+
+#[test]
+fn every_workload_kind_is_conformant() {
+    for (spec, cfg) in kind_sources() {
+        let mut src = workload::source_from_config(&cfg).unwrap();
+        let reqs = drain(&mut *src, 10_000);
+        assert_conformant(&spec, &reqs, 300, Some(cfg.max_tokens));
+    }
+}
+
+#[test]
+fn equal_seeds_reproduce_bit_identical_streams() {
+    for (spec, cfg) in kind_sources() {
+        let mut a = workload::source_from_config(&cfg).unwrap();
+        let mut b = workload::source_from_config(&cfg).unwrap();
+        let ra = drain(&mut *a, 10_000);
+        let rb = drain(&mut *b, 10_000);
+        assert_eq!(ra.len(), rb.len(), "{spec}: stream lengths differ");
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.id, y.id, "{spec}: ids diverge");
+            assert_eq!(
+                x.arrival_s.to_bits(),
+                y.arrival_s.to_bits(),
+                "{spec}: arrivals diverge at id {}",
+                x.id
+            );
+            assert_eq!(x.prefill_tokens, y.prefill_tokens, "{spec}: prefill diverges");
+            assert_eq!(x.decode_tokens, y.decode_tokens, "{spec}: decode diverges");
+        }
+    }
+}
+
+#[test]
+fn trace_source_and_split_partitions_are_conformant_and_conserving() {
+    let cfg = stream_cfg(0x5117);
+    let trace = trace_for(&cfg);
+    let n = trace.requests.len();
+    let total_tokens: u64 = trace
+        .requests
+        .iter()
+        .map(|r| r.prefill_tokens + r.decode_tokens)
+        .sum();
+
+    let mut src = trace.clone().into_source();
+    let reqs = drain(&mut src, n + 1);
+    assert_conformant("trace", &reqs, n, Some(cfg.max_tokens));
+
+    // Round-robin split: each partition is itself conformant, and the
+    // re-union conserves request count and token totals exactly.
+    let mut split_n = 0usize;
+    let mut split_tokens = 0u64;
+    for (i, mut part) in split_round_robin(&trace, 3).into_iter().enumerate() {
+        let preqs = drain(&mut part, n + 1);
+        assert_conformant(&format!("split[{i}]"), &preqs, preqs.len(), Some(cfg.max_tokens));
+        split_n += preqs.len();
+        split_tokens += preqs
+            .iter()
+            .map(|r| r.prefill_tokens + r.decode_tokens)
+            .sum::<u64>();
+    }
+    assert_eq!(split_n, n, "split lost or duplicated requests");
+    assert_eq!(split_tokens, total_tokens, "split changed token totals");
+}
+
+#[test]
+fn replay_source_is_conformant_and_matches_the_saved_trace() {
+    let tmp = TempDir::new("vidur_energy_workload_sources");
+    let cfg = stream_cfg(0x3E91A);
+    let trace = trace_for(&cfg);
+    let path = tmp.join("trace.csv");
+    trace.save(&path).unwrap();
+
+    let mut src = workload::ReplaySource::open(&path, 1.0, 1).unwrap();
+    let reqs = drain(&mut src, trace.requests.len() + 1);
+    assert_conformant("replay", &reqs, trace.requests.len(), None);
+    for (a, b) in trace.requests.iter().zip(&reqs) {
+        assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        assert_eq!(a.prefill_tokens, b.prefill_tokens);
+        assert_eq!(a.decode_tokens, b.decode_tokens);
+    }
+
+    // Looped replay stays conformant across the pass seam.
+    let mut cfg2 = cfg.clone();
+    cfg2.workload = WorkloadKind::Trace {
+        path: path.to_string_lossy().into_owned(),
+        time_scale: 0.5,
+        repeat: 3,
+    };
+    cfg2.num_requests = 3 * trace.requests.len() as u64;
+    let mut looped = workload::source_from_config(&cfg2).unwrap();
+    let lreqs = drain(&mut *looped, 3 * trace.requests.len() + 1);
+    assert_conformant("replay-looped", &lreqs, 3 * trace.requests.len(), None);
+}
+
+#[test]
+fn lazy_workload_matches_materialized_generate() {
+    let cfg = stream_cfg(0x1A2);
+    let materialized = trace_for(&cfg).requests;
+    let mut lazy =
+        vidur_energy::workload::WorkloadGenerator::from_config(&cfg).take(cfg.num_requests);
+    let streamed = drain(&mut lazy, materialized.len() + 1);
+    assert_eq!(streamed.len(), materialized.len());
+    for (a, b) in materialized.iter().zip(&streamed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        assert_eq!(a.prefill_tokens, b.prefill_tokens);
+        assert_eq!(a.decode_tokens, b.decode_tokens);
+    }
+}
