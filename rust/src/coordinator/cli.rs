@@ -8,6 +8,7 @@
 //!   merge       — recombine sharded sweep outputs (DESIGN.md §9)
 //!   watch       — tail/aggregate live sweep snapshots (DESIGN.md §10)
 //!   serve       — HTTP/SSE telemetry + control surface (DESIGN.md §11)
+//!   fleet       — fault-tolerant multi-host sweep launcher (DESIGN.md §15)
 //!   multiregion — carbon-aware global routing sweep over simulated regional fleets
 //!   policy      — model-size vs grid-condition policy exploration
 //!   config      — show the default (Table 1) configuration
@@ -47,6 +48,7 @@ subcommands:
   merge        recombine sharded sweep outputs: repro merge <shard-dir>... --out results
   watch        tail/aggregate live sweep snapshots: repro watch <dir-or-jsonl>... [--follow]
   serve        HTTP/SSE telemetry + control surface: repro serve [<dir-or-jsonl>...] [--addr H:P]
+  fleet        fan one sweep across many serve hosts, re-shard around dead ones, auto-merge
   multiregion  carbon-aware global routing sweep: route policies x regions x battery sizes
   scenarios    production-shaped workload sweep: scenario (chat/rag/agentic/tenants) x QPS
   policy       model-size policy exploration (small in dirty grid vs large in clean)
@@ -75,6 +77,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "merge" => cmd_merge(&args),
         "watch" => cmd_watch(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "multiregion" => cmd_multiregion(&args),
         "scenarios" => cmd_scenarios(&args),
         "policy" => policy::cmd(&args),
@@ -728,6 +731,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.addr()
     );
     server.run();
+    Ok(())
+}
+
+/// Fan one sweep across a fleet of `repro serve` hosts (DESIGN.md
+/// §15): one shard per healthy host, re-shard around deaths,
+/// auto-merge into a tree byte-identical to an unsharded run.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    if args.has("help") || (args.positional.is_empty() && args.options.is_empty()) {
+        println!(
+            "repro fleet — fault-tolerant multi-host sweep launcher\n\n\
+             usage: repro fleet <experiment> (--hosts <file> | --host <e>[,<e>...] | --local <n>)\n\n\
+             splits the sweep one shard per healthy host; a host that dies\n\
+             mid-sweep has its unfinished shards re-partitioned across the\n\
+             survivors, and the completed shard outputs are auto-merged into\n\
+             a tree byte-identical to an unsharded run\n\n\
+             options:\n  \
+             --hosts <file>       host manifest: one host:port or local:N per line, # comments\n  \
+             --host <e>[,<e>...]  inline manifest entries (host:port or local:N)\n  \
+             --local <n>          shorthand for --host local:N (spawn n serve children)\n  \
+             --out <dir>          fleet scratch root: agent trees + logs (default fleet-results)\n  \
+             --merged-out <dir>   auto-merged results tree (default <out>/merged)\n  \
+             --jobs <n>           per-host sweep worker count (default: each host's cores)\n  \
+             --fast               forwarded: reduced request counts for smoke runs\n  \
+             --watch              merged live dashboard (every host's SSE stream) on stderr\n  \
+             --retries <n>        attempts before a host is declared dead (default 5)\n  \
+             --timeout <s>        per-request HTTP deadline, seconds (default 10)\n  \
+             --poll <s>           job-status poll period, seconds (default 0.2)"
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.positional.len() == 1,
+        "repro fleet expects exactly one experiment id, got {:?} (try `repro fleet --help`)",
+        args.positional
+    );
+    let experiment = args.positional[0].clone();
+    // The loud-validation standard: a flag the parser would silently
+    // misread is an error, not a surprise.
+    for (flag, hint) in [
+        ("hosts", "--hosts fleet-hosts.txt"),
+        ("host", "--host 10.0.0.7:7878,local:2"),
+        ("local", "--local 2"),
+        ("out", "--out fleet-results"),
+        ("merged-out", "--merged-out results"),
+        ("jobs", "--jobs 4"),
+        ("retries", "--retries 5"),
+        ("timeout", "--timeout 10"),
+        ("poll", "--poll 0.2"),
+    ] {
+        anyhow::ensure!(!args.has(flag), "--{flag} needs a value (e.g. {hint})");
+    }
+    for switch in ["fast", "watch"] {
+        anyhow::ensure!(
+            args.get(switch).is_none(),
+            "--{switch} takes no value (put it after the experiment id)"
+        );
+    }
+
+    let mut manifest = match args.get("hosts") {
+        Some(path) => crate::fleet::Manifest::load(&PathBuf::from(path))?,
+        None => crate::fleet::Manifest::default(),
+    };
+    if let Some(entries) = args.get("host") {
+        let parts: Vec<String> = entries.split(',').map(|s| s.trim().to_string()).collect();
+        let inline = crate::fleet::Manifest::from_entries(&parts)?;
+        manifest.endpoints.extend(inline.endpoints);
+        manifest.local += inline.local;
+    }
+    manifest.local += args.usize_or("local", 0)?;
+    anyhow::ensure!(
+        manifest.host_count() > 0,
+        "no fleet hosts named — pass --hosts <file>, --host <host:port|local:N>, or --local <n>"
+    );
+
+    let out = PathBuf::from(args.str_or("out", "fleet-results"));
+    let mut cfg = crate::fleet::FleetConfig::new(&experiment, manifest, &out);
+    cfg.fast = args.has("fast");
+    cfg.dashboard = args.has("watch");
+    if let Some(dir) = args.get("merged-out") {
+        cfg.merged_out = PathBuf::from(dir);
+    }
+    if args.get("jobs").is_some() {
+        let jobs = args.u64_or("jobs", 0)?;
+        anyhow::ensure!(jobs >= 1, "--jobs must be at least 1, got {jobs}");
+        cfg.jobs = Some(jobs);
+    }
+    let retries = args.u64_or("retries", cfg.max_attempts as u64)?;
+    anyhow::ensure!(retries >= 1, "--retries must be at least 1, got {retries}");
+    cfg.max_attempts = retries as u32;
+    let timeout = args.f64_or("timeout", cfg.http_timeout.as_secs_f64())?;
+    anyhow::ensure!(timeout > 0.0, "--timeout must be positive, got {timeout}");
+    cfg.http_timeout = std::time::Duration::from_secs_f64(timeout);
+    let poll = args.f64_or("poll", cfg.poll.as_secs_f64())?;
+    anyhow::ensure!(poll >= 0.05, "--poll must be at least 0.05 seconds, got {poll}");
+    cfg.poll = std::time::Duration::from_secs_f64(poll);
+
+    let report = crate::fleet::run_fleet(&cfg)?;
+    for m in &report.merged {
+        println!(
+            "merged {:<12} {} shard(s), {} rows{} -> {}",
+            m.id,
+            m.shards,
+            m.rows,
+            if m.complete { "" } else { " [INCOMPLETE]" },
+            cfg.merged_out.join(&m.id).display()
+        );
+    }
+    println!(
+        "fleet: {} host(s), {} dispatch(es), {} re-shard(s), {} dead",
+        report.hosts,
+        report.dispatched,
+        report.resharded,
+        report.dead.len()
+    );
+    if !report.dead.is_empty() {
+        eprintln!("fleet: dead host(s): {}", report.dead.join(", "));
+    }
+    anyhow::ensure!(
+        report.merged.iter().all(|m| m.complete),
+        "fleet merge is missing shards — completed outputs did not cover the grid"
+    );
     Ok(())
 }
 

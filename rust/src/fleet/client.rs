@@ -1,0 +1,447 @@
+//! std-only HTTP/1.1 + SSE *client* for the fleet launcher
+//! (DESIGN.md §15) — the counterpart of the serve plane's server-side
+//! [`crate::serve::http`]. Same philosophy: every byte-level decision
+//! is a pure function (`parse_response_head`, [`SseParser`]) so torn
+//! reads and hostile bytes are unit-testable without a socket, and the
+//! thin socket wrappers ([`exchange`], [`SseSubscription`]) only move
+//! bytes and deadlines.
+//!
+//! Scope mirrors what `repro serve` speaks: fixed `Content-Length`
+//! JSON bodies and one never-ending `text/event-stream`. Anything
+//! outside that (chunked encoding, duplicate `Content-Length`) is
+//! rejected loudly — a launcher that guessed at message framing would
+//! corrupt its view of the fleet in ways that surface as phantom
+//! dead hosts.
+
+use crate::util::json::{parse, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Cap on a buffered response (head + body). Fleet bodies are job
+/// status JSON — tiny; beyond this the peer is not a `repro serve`.
+const MAX_RESPONSE_BYTES: usize = 4 * 1024 * 1024;
+
+/// One complete HTTP response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    /// Headers with lowercased names, values trimmed.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// Header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Value> {
+        let text = std::str::from_utf8(&self.body).context("response body is not UTF-8")?;
+        parse(text).map_err(|e| anyhow::anyhow!("response body is not JSON: {e}"))
+    }
+}
+
+/// Find the head terminator (`\r\n\r\n` or bare `\n\n`), returning
+/// (head length, bytes consumed through the terminator).
+fn find_head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let lf = buf.windows(2).position(|w| w == b"\n\n");
+    match (crlf, lf) {
+        (Some(c), Some(l)) if l < c => Some((l, l + 2)),
+        (Some(c), _) => Some((c, c + 4)),
+        (None, Some(l)) => Some((l, l + 2)),
+        (None, None) => None,
+    }
+}
+
+/// Try to parse a response head from the front of `buf`. `Ok(None)` =
+/// incomplete, read more. Returns (status, headers, consumed bytes).
+pub fn parse_response_head(
+    buf: &[u8],
+) -> Result<Option<(u16, BTreeMap<String, String>, usize)>> {
+    let Some((head_len, consumed)) = find_head_end(buf) else {
+        if buf.len() > MAX_RESPONSE_BYTES {
+            bail!("response head exceeds {MAX_RESPONSE_BYTES} bytes without terminating");
+        }
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_len]).context("response head is not UTF-8")?;
+    let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let (version, status) = match (parts.next(), parts.next()) {
+        (Some(v), Some(s)) => (v, s),
+        _ => bail!("malformed status line '{status_line}'"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version '{version}'");
+    }
+    let status: u16 = status
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad status code in '{status_line}'"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            bail!("malformed response header line '{line}'");
+        };
+        let lname = name.trim().to_ascii_lowercase();
+        let prev = headers.insert(lname.clone(), value.trim().to_string());
+        if prev.is_some() && lname == "content-length" {
+            // Same smuggling-shape rejection as the server side.
+            bail!("duplicate content-length header in response");
+        }
+    }
+    Ok(Some((status, headers, consumed)))
+}
+
+/// Try to parse one complete fixed-length response from the front of
+/// `buf`. `Ok(None)` = incomplete. Returns the response plus the total
+/// bytes it consumed.
+pub fn parse_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
+    let Some((status, headers, consumed)) = parse_response_head(buf)? else {
+        return Ok(None);
+    };
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad content-length '{v}' in response"))?,
+    };
+    if len > MAX_RESPONSE_BYTES {
+        bail!("response body of {len} bytes exceeds the {MAX_RESPONSE_BYTES}-byte cap");
+    }
+    if buf.len() < consumed + len {
+        return Ok(None);
+    }
+    Ok(Some((
+        Response {
+            status,
+            headers,
+            body: buf[consumed..consumed + len].to_vec(),
+        },
+        consumed + len,
+    )))
+}
+
+/// Connect with a deadline, resolving the address first.
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{addr} resolved to no addresses"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // Short read timeouts keep deadline checks responsive.
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(stream)
+}
+
+/// Frame one client request.
+fn request_bytes(method: &str, path: &str, host: &str, headers: &[String], body: &[u8]) -> Vec<u8> {
+    let mut out = format!("{method} {path} HTTP/1.1\r\nHost: {host}\r\n");
+    for h in headers {
+        out.push_str(h);
+        out.push_str("\r\n");
+    }
+    if !body.is_empty() {
+        out.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        ));
+    }
+    out.push_str("\r\n");
+    let mut bytes = out.into_bytes();
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+/// One request/response exchange against `addr`, bounded by `timeout`
+/// end to end (connect + write + read).
+pub fn exchange(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<Response> {
+    let deadline = Instant::now() + timeout;
+    let mut stream = connect(addr, timeout)?;
+    stream
+        .write_all(&request_bytes(method, path, addr, &[], body))
+        .with_context(|| format!("writing {method} {path} to {addr}"))?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        if let Some((resp, _)) = parse_response(&buf)
+            .with_context(|| format!("parsing {method} {path} response from {addr}"))?
+        {
+            return Ok(resp);
+        }
+        if Instant::now() >= deadline {
+            bail!("{method} {path} to {addr} timed out after {timeout:?}");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("{addr} closed the connection mid-response"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading from {addr}")),
+        }
+    }
+}
+
+/// GET a JSON endpoint: returns (status, parsed body).
+pub fn get_json(addr: &str, path: &str, timeout: Duration) -> Result<(u16, Value)> {
+    let resp = exchange(addr, "GET", path, &[], timeout)?;
+    let v = resp.json()?;
+    Ok((resp.status, v))
+}
+
+/// POST a JSON body: returns (status, parsed response body).
+pub fn post_json(addr: &str, path: &str, body: &Value, timeout: Duration) -> Result<(u16, Value)> {
+    let resp = exchange(addr, "POST", path, body.to_string().as_bytes(), timeout)?;
+    let v = resp.json()?;
+    Ok((resp.status, v))
+}
+
+/// Probe `/healthz`; `Ok` only on a 200 with `"status": "ok"`.
+pub fn health_ok(addr: &str, timeout: Duration) -> Result<()> {
+    let (status, v) = get_json(addr, "/healthz", timeout)?;
+    if status != 200 || v.get("status").and_then(|s| s.as_str()) != Some("ok") {
+        bail!("{addr}/healthz answered {status}");
+    }
+    Ok(())
+}
+
+// ---- SSE ----------------------------------------------------------
+
+/// One parsed SSE event (or the fields present on it).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SseEvent {
+    /// `event:` field, if any.
+    pub event: Option<String>,
+    /// `id:` field parsed as the snapshot `seq` it carries.
+    pub id: Option<u64>,
+    /// `data:` lines joined with `\n`.
+    pub data: String,
+}
+
+/// Incremental SSE frame parser: feed raw bytes, get complete events.
+/// Comment-only frames (keep-alives, lag notes) parse to no event.
+#[derive(Debug, Default)]
+pub struct SseParser {
+    buf: Vec<u8>,
+}
+
+/// Find an SSE frame terminator — a blank line, in either bare-`\n`
+/// (what `serve::sse` emits) or `\r\n` framing — returning (frame
+/// length, bytes consumed through the terminator).
+fn find_frame_end(buf: &[u8]) -> Option<(usize, usize)> {
+    // `\r\n\r\n` contains no `\n\n` window, so both must be searched.
+    let lf = buf.windows(2).position(|w| w == b"\n\n");
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    match (lf, crlf) {
+        (Some(l), Some(c)) if l <= c => Some((l, l + 2)),
+        (_, Some(c)) => Some((c, c + 4)),
+        (Some(l), None) => Some((l, l + 2)),
+        (None, None) => None,
+    }
+}
+
+impl SseParser {
+    /// Feed bytes; return every event completed by them.
+    pub fn push(&mut self, bytes: &[u8]) -> Vec<SseEvent> {
+        self.buf.extend_from_slice(bytes);
+        let mut events = Vec::new();
+        while let Some((frame_len, consumed)) = find_frame_end(&self.buf) {
+            let mut frame: Vec<u8> = self.buf.drain(..consumed).collect();
+            frame.truncate(frame_len);
+            let text = String::from_utf8_lossy(&frame);
+            let mut ev = SseEvent::default();
+            let mut has_data = false;
+            // `str::lines` strips a trailing `\r`, so CRLF input needs
+            // no per-line handling here.
+            for line in text.lines() {
+                if let Some(rest) = line.strip_prefix("data:") {
+                    if has_data {
+                        ev.data.push('\n');
+                    }
+                    ev.data.push_str(rest.strip_prefix(' ').unwrap_or(rest));
+                    has_data = true;
+                } else if let Some(rest) = line.strip_prefix("event:") {
+                    ev.event = Some(rest.trim().to_string());
+                } else if let Some(rest) = line.strip_prefix("id:") {
+                    ev.id = rest.trim().parse().ok();
+                }
+                // ":" comments and unknown fields are ignored per spec.
+            }
+            if has_data || ev.event.is_some() {
+                events.push(ev);
+            }
+        }
+        events
+    }
+}
+
+/// An open `/v1/snapshots` SSE stream.
+pub struct SseSubscription {
+    stream: TcpStream,
+    parser: SseParser,
+}
+
+impl SseSubscription {
+    /// Connect and subscribe. `last_seq` resumes delivery just past
+    /// that snapshot sequence (the serve plane's `Last-Event-ID`
+    /// contract); `None` replays the retained history.
+    pub fn open(addr: &str, last_seq: Option<u64>, timeout: Duration) -> Result<SseSubscription> {
+        let deadline = Instant::now() + timeout;
+        let mut stream = connect(addr, timeout)?;
+        let mut headers = vec!["Accept: text/event-stream".to_string()];
+        if let Some(seq) = last_seq {
+            headers.push(format!("Last-Event-ID: {seq}"));
+        }
+        stream.write_all(&request_bytes("GET", "/v1/snapshots", addr, &headers, &[]))?;
+        // Read just the response head; everything after it is stream.
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 8192];
+        loop {
+            if let Some((status, headers, consumed)) = parse_response_head(&buf)? {
+                if status != 200 {
+                    bail!("{addr}/v1/snapshots answered {status}");
+                }
+                let ct = headers.get("content-type").map(|s| s.as_str()).unwrap_or("");
+                if !ct.starts_with("text/event-stream") {
+                    bail!("{addr}/v1/snapshots is not an event stream (content-type '{ct}')");
+                }
+                // Bytes past the head already belong to the stream;
+                // seed them unparsed so the first poll delivers them.
+                let parser = SseParser {
+                    buf: buf[consumed..].to_vec(),
+                };
+                return Ok(SseSubscription { stream, parser });
+            }
+            if Instant::now() >= deadline {
+                bail!("subscribing to {addr}/v1/snapshots timed out after {timeout:?}");
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => bail!("{addr} closed the connection during SSE subscribe"),
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e).with_context(|| format!("reading from {addr}")),
+            }
+        }
+    }
+
+    /// Read whatever arrived and return the completed events. `Ok` with
+    /// an empty vec on a quiet interval; `Err` when the stream is gone
+    /// (reconnect with the last seen `id` to resume).
+    pub fn poll(&mut self) -> Result<Vec<SseEvent>> {
+        let mut chunk = [0u8; 8192];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => bail!("SSE stream closed"),
+            Ok(n) => Ok(self.parser.push(&chunk[..n])),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Still drain frames the subscribe read already buffered.
+                Ok(self.parser.push(&[]))
+            }
+            Err(e) => Err(e).context("reading SSE stream"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_parses_incrementally_and_exactly() {
+        let raw = b"HTTP/1.1 202 Accepted\r\nContent-Type: application/json\r\nContent-Length: 11\r\n\r\n{\"id\": 111}NEXT";
+        // Every prefix short of head+body is incomplete.
+        let full = raw.len() - 4; // "NEXT" is not part of the response
+        for cut in 0..full {
+            assert!(
+                parse_response(&raw[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+        let (resp, consumed) = parse_response(raw).unwrap().unwrap();
+        assert_eq!(consumed, full, "must not consume the next response's bytes");
+        assert_eq!(resp.status, 202);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.body, b"{\"id\": 111}");
+        assert_eq!(resp.json().unwrap().req_u64("id").unwrap(), 111);
+        // No content-length = empty body (our endpoints always send it).
+        let (resp, _) = parse_response(b"HTTP/1.1 200 OK\r\n\r\n").unwrap().unwrap();
+        assert!(resp.body.is_empty());
+    }
+
+    #[test]
+    fn hostile_responses_error_cleanly() {
+        assert!(parse_response(b"NOT HTTP\r\n\r\n").is_err());
+        assert!(parse_response(b"HTTP/2 200 OK\r\n\r\n").is_err());
+        assert!(parse_response(b"HTTP/1.1 abc OK\r\n\r\n").is_err());
+        assert!(parse_response(b"HTTP/1.1 200 OK\r\nContent-Length: x\r\n\r\n").is_err());
+        // The smuggling shape is rejected on responses too.
+        assert!(parse_response(
+            b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nabc"
+        )
+        .is_err());
+        // A reason phrase with spaces parses fine.
+        let (resp, _) = parse_response(b"HTTP/1.1 405 Method Not Allowed\r\nAllow: GET\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("GET"));
+    }
+
+    #[test]
+    fn sse_parser_reassembles_torn_frames() {
+        let mut p = SseParser::default();
+        // A frame split at every possible boundary still yields exactly
+        // one event.
+        let frame = b"event: snapshot\nid: 42\ndata: {\"a\":1}\n\n";
+        for cut in 0..frame.len() {
+            let mut p = SseParser::default();
+            let mut got = p.push(&frame[..cut]);
+            got.extend(p.push(&frame[cut..]));
+            assert_eq!(got.len(), 1, "split at {cut}");
+            assert_eq!(got[0].event.as_deref(), Some("snapshot"));
+            assert_eq!(got[0].id, Some(42));
+            assert_eq!(got[0].data, "{\"a\":1}");
+        }
+        // Comments (keep-alives, lag notes) produce no events; data
+        // spanning multiple lines re-joins with \n.
+        let got = p.push(b": keep-alive\n\ndata: l1\ndata: l2\n\n: lagged\n\n");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].data, "l1\nl2");
+        assert_eq!(got[0].id, None);
+        // CRLF line endings are tolerated.
+        let got = p.push(b"id: 7\r\ndata: x\r\n\r\n\r\n");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, Some(7));
+        assert_eq!(got[0].data, "x");
+    }
+}

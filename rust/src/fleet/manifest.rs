@@ -1,0 +1,157 @@
+//! Host manifests for `repro fleet` (DESIGN.md §15): the list of
+//! `repro serve` agents a fleet launch fans its shards across.
+//!
+//! The format is deliberately tiny — one entry per line:
+//!
+//! ```text
+//! # comment lines and blanks are skipped
+//! 10.0.0.7:7878         # a remote `repro serve` endpoint
+//! sim-host-2:7878
+//! local:2               # spawn 2 local `repro serve` child processes
+//! ```
+//!
+//! The same entries can come from repeated `--host` flags instead of a
+//! file. Parse errors are loud and positional (`path:line: message`) —
+//! a fleet launch that silently dropped a host would quietly shrink
+//! the sweep's shard count.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// A parsed host manifest: remote serve endpoints plus a count of
+/// local agent processes to spawn.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Manifest {
+    /// `host:port` serve endpoints, in manifest order.
+    pub endpoints: Vec<String>,
+    /// Local `repro serve` children to spawn (the sum of `local:N`
+    /// entries).
+    pub local: usize,
+}
+
+impl Manifest {
+    /// Total hosts this manifest names.
+    pub fn host_count(&self) -> usize {
+        self.endpoints.len() + self.local
+    }
+
+    /// Parse manifest text. `origin` names the source in errors — the
+    /// file path, or a stand-in like `--host` for flag-provided
+    /// entries.
+    pub fn parse(text: &str, origin: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            // Strip trailing comments, then whitespace.
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(n) = line.strip_prefix("local:") {
+                let n: usize = n.trim().parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "{origin}:{lineno}: bad local worker count '{n}' \
+                         (expected local:N with N >= 1)"
+                    )
+                })?;
+                if n == 0 {
+                    bail!("{origin}:{lineno}: local:0 names no hosts (expected N >= 1)");
+                }
+                m.local += n;
+                continue;
+            }
+            match validate_endpoint(line) {
+                Ok(ep) => m.endpoints.push(ep),
+                Err(e) => bail!("{origin}:{lineno}: {e:#}"),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Load and parse a manifest file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: cannot read manifest: {e}", path.display()))?;
+        Manifest::parse(&text, &path.display().to_string())
+    }
+
+    /// Build a manifest from flag-provided entries (each one line of
+    /// the file format). Errors cite `--host:<n>` as the position.
+    pub fn from_entries(entries: &[String]) -> Result<Manifest> {
+        Manifest::parse(&entries.join("\n"), "--host")
+    }
+}
+
+/// Validate one `host:port` endpoint. Ports must parse (a typo'd
+/// `host:78788` would otherwise surface much later as a connect
+/// failure with a worse message).
+fn validate_endpoint(s: &str) -> Result<String> {
+    let Some((host, port)) = s.rsplit_once(':') else {
+        bail!("'{s}' is not host:port or local:N");
+    };
+    if host.is_empty() {
+        bail!("'{s}' has an empty host");
+    }
+    if port.parse::<u16>().is_err() {
+        bail!("'{s}' has a bad port '{port}' (expected 1..65535)");
+    }
+    Ok(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_endpoints_locals_comments_and_blanks() {
+        let m = Manifest::parse(
+            "# fleet for the paper grid\n\
+             10.0.0.7:7878\n\
+             \n\
+             sim-host-2:7878  # trailing comment\n\
+             local:2\n\
+             local:1\n",
+            "hosts.txt",
+        )
+        .unwrap();
+        assert_eq!(m.endpoints, vec!["10.0.0.7:7878", "sim-host-2:7878"]);
+        assert_eq!(m.local, 3);
+        assert_eq!(m.host_count(), 5);
+        // IPv6-ish / multi-colon endpoints split on the *last* colon.
+        let m = Manifest::parse("::1:7878\n", "hosts.txt").unwrap();
+        assert_eq!(m.endpoints, vec!["::1:7878"]);
+    }
+
+    #[test]
+    fn errors_are_loud_with_path_and_line() {
+        let cases = [
+            ("ok:7878\nnot-an-endpoint\n", "hosts.txt:2"),
+            ("local:zero\n", "hosts.txt:1"),
+            ("\n\nlocal:0\n", "hosts.txt:3"),
+            ("host:99999\n", "hosts.txt:1"),
+            (":7878\n", "hosts.txt:1"),
+        ];
+        for (text, want) in cases {
+            let e = Manifest::parse(text, "hosts.txt").unwrap_err();
+            assert!(
+                format!("{e:#}").contains(want),
+                "error for {text:?} must cite {want}: {e:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn flag_entries_cite_the_flag() {
+        let m =
+            Manifest::from_entries(&["127.0.0.1:7878".into(), "local:2".into()]).unwrap();
+        assert_eq!(m.host_count(), 3);
+        let e = Manifest::from_entries(&["bogus".into()]).unwrap_err();
+        assert!(format!("{e:#}").contains("--host:1"), "{e:#}");
+    }
+
+    #[test]
+    fn load_names_the_missing_file() {
+        let e = Manifest::load(Path::new("/nonexistent/hosts.txt")).unwrap_err();
+        assert!(format!("{e:#}").contains("/nonexistent/hosts.txt"), "{e:#}");
+    }
+}

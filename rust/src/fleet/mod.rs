@@ -1,0 +1,32 @@
+//! Fault-tolerant multi-host sweep launcher (`repro fleet`,
+//! DESIGN.md §15).
+//!
+//! The serve plane (§11) made one process remotely drivable: `repro
+//! serve` accepts sweeps over `POST /v1/sweeps` and streams live
+//! snapshots over `/v1/snapshots`. This module is the other half — a
+//! *launcher* that fans one sweep out across a whole fleet of those
+//! servers:
+//!
+//! - [`manifest`]: the host list (`host:port` lines, `local:N` spawn
+//!   counts, or repeated `--host` flags), with loud `path:line:`
+//!   parse errors.
+//! - [`client`]: a std-only HTTP/1.1 + SSE client speaking exactly
+//!   the serve plane's dialect, with pure byte-level parsers.
+//! - [`supervisor`]: health-gates the hosts, dispatches one shard per
+//!   survivor, follows every host's snapshot stream into one merged
+//!   dashboard, re-shards a dead host's unfinished work across the
+//!   survivors, and auto-merges the completed shard directories into
+//!   a tree byte-identical to an unsharded run.
+//!
+//! Everything is std + `anyhow`, like the rest of the crate: the
+//! "fleet" is plain TCP between plain processes, so the loopback
+//! fault-injection tests exercise the same code paths as a real
+//! multi-machine launch.
+
+pub mod client;
+pub mod manifest;
+pub mod supervisor;
+
+pub use client::{SseEvent, SseParser, SseSubscription};
+pub use manifest::Manifest;
+pub use supervisor::{reshard, run_fleet, FleetConfig, FleetReport, LocalAgents};

@@ -1,0 +1,642 @@
+//! The fleet supervisor (DESIGN.md §15): shard a sweep across a set
+//! of `repro serve` hosts, survive host deaths by re-sharding the lost
+//! work over the survivors, and auto-merge the shard outputs when the
+//! last assignment lands.
+//!
+//! The one invariant everything here defends: **the merged output is
+//! byte-identical to an unsharded run**, whatever subset of hosts
+//! survived. It holds because
+//!
+//! 1. a host's output only enters the merge once its job reports
+//!    `done` — a dead host's partial directory is never read, and
+//! 2. [`reshard`] splits a lost shard `k/M` into sub-shards
+//!    `(k + u·M) / (s·M)` for `u in 0..s`, whose ownership classes
+//!    `i ≡ k + u·M (mod s·M)` partition exactly `i ≡ k (mod M)` —
+//!    the lost cases, each exactly once, and
+//! 3. `merge_shard_dirs` orders rows by *global case index*, so mixed
+//!    shard denominators from re-sharding cannot perturb the output.
+
+use crate::fleet::client::{get_json, health_ok, post_json, SseSubscription};
+use crate::fleet::manifest::Manifest;
+use crate::report::live::{aggregate, render_watch, snapshot_supersedes};
+use crate::sweep::{merge_shard_dirs, MergedExperiment, ShardSpec};
+use crate::telemetry::window::Snapshot;
+use crate::util::json::{parse, Value};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One fleet launch: what to run, where, and how patient to be.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Experiment id (`exp1`, `scenarios`, `all`, …) — validated by
+    /// each host's `SweepRequest` parser on dispatch.
+    pub experiment: String,
+    /// Forwarded as the sweep's `fast` flag.
+    pub fast: bool,
+    /// Forwarded as the sweep's `--jobs`; `None` leaves each host's
+    /// default.
+    pub jobs: Option<u64>,
+    /// The hosts to fan out across.
+    pub manifest: Manifest,
+    /// Fleet scratch root: local agents' output trees and logs live
+    /// in `out/host-<i>/`.
+    pub out: PathBuf,
+    /// Where the auto-merged, byte-identical-to-unsharded tree lands.
+    pub merged_out: PathBuf,
+    /// Job-status poll cadence.
+    pub poll: Duration,
+    /// Per-request HTTP deadline.
+    pub http_timeout: Duration,
+    /// Bounded-retry budget for health checks, dispatches, and status
+    /// polls before a host is declared dead.
+    pub max_attempts: u32,
+    /// First retry delay; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Render a merged live dashboard (from every host's SSE stream)
+    /// to stderr.
+    pub dashboard: bool,
+    /// Binary to spawn for `local:N` agents; defaults to the current
+    /// executable.
+    pub serve_bin: Option<PathBuf>,
+}
+
+impl FleetConfig {
+    /// Defaults tuned for a loopback fleet; real deployments mostly
+    /// raise `http_timeout`.
+    pub fn new(experiment: &str, manifest: Manifest, out: &Path) -> FleetConfig {
+        FleetConfig {
+            experiment: experiment.to_string(),
+            fast: false,
+            jobs: None,
+            manifest,
+            out: out.to_path_buf(),
+            merged_out: out.join("merged"),
+            poll: Duration::from_millis(200),
+            http_timeout: Duration::from_secs(10),
+            max_attempts: 5,
+            backoff_base: Duration::from_millis(100),
+            dashboard: false,
+            serve_bin: None,
+        }
+    }
+}
+
+/// What a fleet launch did, for the CLI summary and the tests.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Hosts that passed the health gate and got work.
+    pub hosts: usize,
+    /// Hosts declared dead (never healthy, or failed mid-sweep).
+    pub dead: Vec<String>,
+    /// Shard dispatches, counting re-dispatches.
+    pub dispatched: usize,
+    /// Lost shards that were re-partitioned across survivors.
+    pub resharded: usize,
+    /// The auto-merged experiments.
+    pub merged: Vec<MergedExperiment>,
+}
+
+/// Split a lost shard across `survivors` hosts: sub-shard `u` is
+/// `(index + u·total) / (survivors·total)`. The sub-shards' ownership
+/// classes partition the lost shard's exactly (see module docs), so
+/// re-dispatching them covers every lost case once. Works recursively:
+/// a lost *sub*-shard re-splits the same way.
+pub fn reshard(failed: ShardSpec, survivors: usize) -> Result<Vec<ShardSpec>> {
+    ensure!(survivors >= 1, "cannot re-shard {failed} across 0 survivors");
+    let s = u32::try_from(survivors).context("survivor count overflows u32")?;
+    let total = failed
+        .total
+        .checked_mul(s)
+        .with_context(|| format!("re-shard denominator {}x{s} overflows u32", failed.total))?;
+    (0..s)
+        .map(|u| ShardSpec::new(failed.index + u * failed.total, total))
+        .collect()
+}
+
+/// Exponential backoff for attempt `n` (0-based): `base · 2^n`, capped
+/// at 10 s so a long retry budget stays responsive.
+fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    let factor = 1u32 << attempt.min(16);
+    (base * factor).min(Duration::from_secs(10))
+}
+
+// ---- local agents -------------------------------------------------
+
+struct LocalAgent {
+    addr: String,
+    child: Child,
+}
+
+/// Locally spawned `repro serve` children (`local:N` manifest
+/// entries). Killed on drop so an aborted launch never leaks servers.
+pub struct LocalAgents {
+    agents: Vec<LocalAgent>,
+}
+
+impl LocalAgents {
+    /// Spawn `n` serve children under `out/host-<i>/`, each on a
+    /// freshly reserved loopback port, logging to `serve.log` in its
+    /// host directory.
+    pub fn spawn(n: usize, out: &Path, serve_bin: Option<&Path>) -> Result<LocalAgents> {
+        let bin = match serve_bin {
+            Some(p) => p.to_path_buf(),
+            None => std::env::current_exe().context("locating the repro binary")?,
+        };
+        let mut agents = Vec::new();
+        for i in 0..n {
+            let dir = out.join(format!("host-{i}"));
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+            // Reserve a free port by binding then releasing it. A
+            // tiny window exists before the child re-binds; the
+            // health gate's bounded retries absorb a lost race.
+            let probe = std::net::TcpListener::bind("127.0.0.1:0")
+                .context("reserving a local agent port")?;
+            let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
+            drop(probe);
+            let log = std::fs::File::create(dir.join("serve.log"))
+                .with_context(|| format!("creating {}/serve.log", dir.display()))?;
+            let child = Command::new(&bin)
+                .arg("serve")
+                .arg("--addr")
+                .arg(&addr)
+                .arg("--out")
+                .arg(&dir)
+                .stdin(Stdio::null())
+                .stdout(log.try_clone()?)
+                .stderr(log)
+                .spawn()
+                .with_context(|| format!("spawning local agent {}", bin.display()))?;
+            eprintln!("fleet: local agent {i} on {addr} (pid {})", child.id());
+            agents.push(LocalAgent { addr, child });
+        }
+        Ok(LocalAgents { agents })
+    }
+
+    /// The spawned agents' `host:port` addresses, in spawn order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.agents.iter().map(|a| a.addr.clone()).collect()
+    }
+}
+
+impl Drop for LocalAgents {
+    fn drop(&mut self) {
+        for a in &mut self.agents {
+            a.child.kill().ok();
+            a.child.wait().ok();
+        }
+    }
+}
+
+// ---- supervisor ---------------------------------------------------
+
+struct HostJob {
+    shard: ShardSpec,
+    id: u64,
+    out: PathBuf,
+    done: bool,
+}
+
+struct HostState {
+    addr: String,
+    alive: bool,
+    fail_streak: u32,
+    jobs: Vec<HostJob>,
+}
+
+/// The merged live view: latest snapshot per (experiment, shard,
+/// case), folded from every host's SSE stream under the
+/// `snapshot_supersedes` rule.
+type SnapMap = BTreeMap<(String, String, u64), Snapshot>;
+
+/// Run one fleet launch end to end: health-gate, dispatch, monitor,
+/// re-shard around deaths, auto-merge.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    std::fs::create_dir_all(&cfg.out)
+        .with_context(|| format!("creating {}", cfg.out.display()))?;
+    let locals = LocalAgents::spawn(cfg.manifest.local, &cfg.out, cfg.serve_bin.as_deref())?;
+    let mut candidates = cfg.manifest.endpoints.clone();
+    candidates.extend(locals.addrs());
+    ensure!(
+        !candidates.is_empty(),
+        "fleet manifest names no hosts (add host:port lines or local:N)"
+    );
+
+    // Health gate: a host that never answers /healthz is warned dead
+    // up front rather than sinking a shard.
+    let mut hosts: Vec<HostState> = Vec::new();
+    let mut dead: Vec<String> = Vec::new();
+    for addr in candidates {
+        if wait_healthy(&addr, cfg) {
+            eprintln!("fleet: host {addr} healthy");
+            hosts.push(HostState {
+                addr,
+                alive: true,
+                fail_streak: 0,
+                jobs: Vec::new(),
+            });
+        } else {
+            eprintln!(
+                "fleet: WARNING host {addr} failed /healthz after {} attempts — excluded",
+                cfg.max_attempts
+            );
+            dead.push(addr);
+        }
+    }
+    ensure!(
+        !hosts.is_empty(),
+        "no fleet host passed /healthz ({} candidate(s) dead)",
+        dead.len()
+    );
+    let gated = hosts.len();
+
+    // Merged dashboard: one SSE follower thread per gated host.
+    let stop = Arc::new(AtomicBool::new(false));
+    let snaps: Arc<Mutex<SnapMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let followers: Vec<_> = hosts
+        .iter()
+        .map(|h| {
+            let addr = h.addr.clone();
+            let stop = Arc::clone(&stop);
+            let snaps = Arc::clone(&snaps);
+            let timeout = cfg.http_timeout;
+            let base = cfg.backoff_base;
+            std::thread::spawn(move || follow_host(&addr, timeout, base, &stop, &snaps))
+        })
+        .collect();
+
+    // Initial partition: one shard per gated host.
+    let initial =
+        u32::try_from(hosts.len()).context("host count overflows the shard denominator")?;
+    let mut pending: Vec<ShardSpec> = (0..initial)
+        .map(|k| ShardSpec::new(k, initial))
+        .collect::<Result<_>>()?;
+    let mut dispatched = 0usize;
+    let mut resharded = 0usize;
+
+    let mut supervise = || -> Result<()> {
+        loop {
+            // Dispatch every pending shard to the least-loaded
+            // survivor. A host whose dispatch exhausts its retries is
+            // declared dead on the spot.
+            while let Some(shard) = pending.pop() {
+                let Some(hi) = pick_host(&hosts) else {
+                    bail!(
+                        "no surviving fleet host to run shard {shard} \
+                         ({} declared dead)",
+                        dead.len()
+                    );
+                };
+                match dispatch_shard(cfg, &mut hosts[hi], shard) {
+                    Ok(()) => dispatched += 1,
+                    Err(e) => {
+                        pending.push(shard);
+                        declare_dead(
+                            &mut hosts,
+                            hi,
+                            &format!("dispatch failed: {e:#}"),
+                            &mut pending,
+                            &mut dead,
+                            &mut resharded,
+                            &snaps,
+                        )?;
+                    }
+                }
+            }
+
+            // Poll every in-flight job; collect at most one death per
+            // pass (survivor count must be current when re-sharding).
+            let mut death: Option<(usize, String)> = None;
+            'hosts: for (hi, h) in hosts.iter_mut().enumerate() {
+                if !h.alive {
+                    continue;
+                }
+                for j in h.jobs.iter_mut().filter(|j| !j.done) {
+                    match poll_job(&h.addr, j.id, cfg.http_timeout) {
+                        Ok(("done", _)) => {
+                            h.fail_streak = 0;
+                            j.done = true;
+                            eprintln!("fleet: host {} finished shard {}", h.addr, j.shard);
+                        }
+                        Ok(("failed", err)) => {
+                            let err = err.unwrap_or_else(|| "unknown error".to_string());
+                            death = Some((hi, format!("sweep failed: {err}")));
+                            break 'hosts;
+                        }
+                        Ok(_) => h.fail_streak = 0,
+                        Err(e) => {
+                            h.fail_streak += 1;
+                            if h.fail_streak >= cfg.max_attempts {
+                                death = Some((hi, format!("unreachable: {e:#}")));
+                                break 'hosts;
+                            }
+                            let wait = backoff_delay(cfg.backoff_base, h.fail_streak - 1);
+                            std::thread::sleep(wait);
+                        }
+                    }
+                }
+            }
+            if let Some((hi, why)) = death {
+                declare_dead(
+                    &mut hosts, hi, &why, &mut pending, &mut dead, &mut resharded, &snaps,
+                )?;
+                continue; // dispatch the re-shards immediately
+            }
+
+            if cfg.dashboard {
+                render_dashboard(&snaps, hosts.iter().filter(|h| h.alive).count());
+            }
+
+            let all_done = hosts
+                .iter()
+                .filter(|h| h.alive)
+                .all(|h| h.jobs.iter().all(|j| j.done));
+            if pending.is_empty() && all_done {
+                return Ok(());
+            }
+            std::thread::sleep(cfg.poll);
+        }
+    };
+    let outcome = supervise();
+    stop.store(true, Ordering::Relaxed);
+    for f in followers {
+        f.join().ok();
+    }
+    outcome?;
+
+    // Merge only `done` outputs: a dead host's partial directory never
+    // enters, and the re-shards cover its cases exactly once.
+    let mut shard_dirs: Vec<PathBuf> = hosts
+        .iter()
+        .flat_map(|h| h.jobs.iter())
+        .filter(|j| j.done)
+        .map(|j| j.out.clone())
+        .collect();
+    shard_dirs.sort();
+    ensure!(
+        !shard_dirs.is_empty(),
+        "fleet finished with no completed shard outputs"
+    );
+    let merged =
+        merge_shard_dirs(&shard_dirs, &cfg.merged_out).context("auto-merging fleet outputs")?;
+
+    drop(locals);
+    Ok(FleetReport {
+        hosts: gated,
+        dead,
+        dispatched,
+        resharded,
+        merged,
+    })
+}
+
+/// Bounded-retry health probe.
+fn wait_healthy(addr: &str, cfg: &FleetConfig) -> bool {
+    for attempt in 0..cfg.max_attempts {
+        if attempt > 0 {
+            std::thread::sleep(backoff_delay(cfg.backoff_base, attempt - 1));
+        }
+        if health_ok(addr, cfg.http_timeout).is_ok() {
+            return true;
+        }
+    }
+    false
+}
+
+/// Least-loaded live host, by undone job count.
+fn pick_host(hosts: &[HostState]) -> Option<usize> {
+    hosts
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.alive)
+        .min_by_key(|(_, h)| h.jobs.iter().filter(|j| !j.done).count())
+        .map(|(i, _)| i)
+}
+
+/// POST one shard to one host with bounded retries. A non-202 answer
+/// fails immediately (the request is malformed or the host refuses —
+/// retrying cannot help); transport errors retry with backoff.
+fn dispatch_shard(cfg: &FleetConfig, host: &mut HostState, shard: ShardSpec) -> Result<()> {
+    let mut body = Value::obj();
+    body.set("experiment", cfg.experiment.as_str())
+        .set("fast", cfg.fast)
+        .set("shard", shard.label());
+    if let Some(j) = cfg.jobs {
+        body.set("jobs", j);
+    }
+    let mut last_err = None;
+    for attempt in 0..cfg.max_attempts {
+        if attempt > 0 {
+            std::thread::sleep(backoff_delay(cfg.backoff_base, attempt - 1));
+        }
+        match post_json(&host.addr, "/v1/sweeps", &body, cfg.http_timeout) {
+            Ok((202, v)) => {
+                let id = v.req_u64("id")?;
+                let out = PathBuf::from(v.req_str("out")?);
+                eprintln!(
+                    "fleet: dispatched {} shard {} -> {} (job {id})",
+                    cfg.experiment, shard, host.addr
+                );
+                host.jobs.push(HostJob {
+                    shard,
+                    id,
+                    out,
+                    done: false,
+                });
+                return Ok(());
+            }
+            Ok((status, v)) => bail!(
+                "{} rejected shard {shard}: HTTP {status} {}",
+                host.addr,
+                v.to_string()
+            ),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no attempts made")))
+        .with_context(|| format!("dispatching shard {shard} to {}", host.addr))
+}
+
+/// GET one job's status: returns (status string, error message).
+fn poll_job(addr: &str, id: u64, timeout: Duration) -> Result<(&'static str, Option<String>)> {
+    let (status, v) = get_json(addr, &format!("/v1/sweeps/{id}"), timeout)?;
+    ensure!(status == 200, "{addr}/v1/sweeps/{id} answered {status}");
+    let st = match v.req_str("status")? {
+        "queued" => "queued",
+        "running" => "running",
+        "done" => "done",
+        "failed" => "failed",
+        other => bail!("{addr} reports unknown job status '{other}'"),
+    };
+    let err = v.get("error").and_then(|e| e.as_str()).map(|s| s.to_string());
+    Ok((st, err))
+}
+
+/// Remove a host from the pool and re-shard its unfinished work
+/// across the survivors. Its `done` outputs are kept — they are
+/// complete, disjoint shard directories. Its stale live snapshots are
+/// dropped so the dashboard doesn't double-count re-run cases.
+fn declare_dead(
+    hosts: &mut [HostState],
+    hi: usize,
+    why: &str,
+    pending: &mut Vec<ShardSpec>,
+    dead: &mut Vec<String>,
+    resharded: &mut usize,
+    snaps: &Mutex<SnapMap>,
+) -> Result<()> {
+    hosts[hi].alive = false;
+    let addr = hosts[hi].addr.clone();
+    dead.push(addr.clone());
+    let survivors = hosts.iter().filter(|h| h.alive).count();
+    let lost: Vec<ShardSpec> = hosts[hi]
+        .jobs
+        .iter()
+        .filter(|j| !j.done)
+        .map(|j| j.shard)
+        .collect();
+    eprintln!(
+        "fleet: host {addr} dead ({why}) — re-sharding {} lost shard(s) \
+         across {survivors} survivor(s)",
+        lost.len()
+    );
+    ensure!(
+        survivors > 0 || lost.is_empty(),
+        "host {addr} died ({why}) with no survivors to absorb its shards"
+    );
+    let mut g = snaps.lock().unwrap_or_else(|e| e.into_inner());
+    for shard in lost {
+        let label = shard.label();
+        g.retain(|(_, s, _), _| *s != label);
+        pending.extend(reshard(shard, survivors)?);
+        *resharded += 1;
+    }
+    Ok(())
+}
+
+/// One host's SSE follower: subscribe, fold snapshots into the merged
+/// map, resume from the last seen `id` across reconnects.
+fn follow_host(
+    addr: &str,
+    timeout: Duration,
+    backoff_base: Duration,
+    stop: &AtomicBool,
+    snaps: &Mutex<SnapMap>,
+) {
+    let mut last_seq: Option<u64> = None;
+    let mut attempt = 0u32;
+    while !stop.load(Ordering::Relaxed) {
+        match SseSubscription::open(addr, last_seq, timeout) {
+            Ok(mut sub) => {
+                attempt = 0;
+                while !stop.load(Ordering::Relaxed) {
+                    match sub.poll() {
+                        Ok(events) => {
+                            for ev in events {
+                                if let Some(id) = ev.id {
+                                    last_seq = Some(id);
+                                }
+                                let Ok(v) = parse(&ev.data) else { continue };
+                                let Ok(s) = Snapshot::from_json(&v) else { continue };
+                                let key = (
+                                    s.experiment.clone(),
+                                    s.shard.clone().unwrap_or_default(),
+                                    s.case_index,
+                                );
+                                let mut g = snaps.lock().unwrap_or_else(|e| e.into_inner());
+                                match g.get(&key) {
+                                    Some(old) if !snapshot_supersedes(&s, old) => {}
+                                    _ => {
+                                        g.insert(key, s);
+                                    }
+                                }
+                            }
+                        }
+                        Err(_) => break, // reconnect with Last-Event-ID
+                    }
+                }
+            }
+            Err(_) => {
+                std::thread::sleep(backoff_delay(backoff_base, attempt).min(timeout));
+                attempt = attempt.saturating_add(1);
+            }
+        }
+    }
+}
+
+/// Render the merged live view to stderr, `repro watch`-style.
+fn render_dashboard(snaps: &Mutex<SnapMap>, hosts_alive: usize) {
+    let g = snaps.lock().unwrap_or_else(|e| e.into_inner());
+    if g.is_empty() {
+        return;
+    }
+    let aggs = aggregate(g.values());
+    eprintln!("{}", render_watch(&aggs, hosts_alive));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshard_partitions_the_lost_shard_exactly() {
+        for total in 1u32..=6 {
+            for index in 0..total {
+                let failed = ShardSpec::new(index, total).unwrap();
+                for survivors in 1usize..=5 {
+                    let subs = reshard(failed, survivors).unwrap();
+                    assert_eq!(subs.len(), survivors);
+                    for i in 0..200usize {
+                        let owners = subs.iter().filter(|s| s.owns(i)).count();
+                        let want = usize::from(failed.owns(i));
+                        assert_eq!(
+                            owners, want,
+                            "case {i}: lost {failed}, {survivors} survivors, subs {subs:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_is_safe_recursively() {
+        // A re-shard of a re-shard still covers exactly the original
+        // cases — the death-of-a-survivor path.
+        let failed = ShardSpec::new(1, 3).unwrap();
+        let first = reshard(failed, 2).unwrap();
+        // The host running first[0] dies too; 2 survivors absorb it.
+        let second = reshard(first[0], 2).unwrap();
+        let cover: Vec<&ShardSpec> = second.iter().chain(&first[1..]).collect();
+        for i in 0..300usize {
+            let owners = cover.iter().filter(|s| s.owns(i)).count();
+            assert_eq!(owners, usize::from(failed.owns(i)), "case {i}");
+        }
+    }
+
+    #[test]
+    fn reshard_rejects_degenerate_inputs() {
+        let s = ShardSpec::new(0, 2).unwrap();
+        assert!(reshard(s, 0).is_err());
+        // One survivor re-dispatches the shard unchanged.
+        let same = reshard(s, 1).unwrap();
+        assert_eq!(same, vec![s]);
+        // Denominator overflow is loud, not wrapped.
+        let wide = ShardSpec::new(0, u32::MAX / 2).unwrap();
+        assert!(reshard(wide, 3).is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = Duration::from_millis(100);
+        assert_eq!(backoff_delay(base, 0), base);
+        assert_eq!(backoff_delay(base, 1), base * 2);
+        assert_eq!(backoff_delay(base, 3), base * 8);
+        assert_eq!(backoff_delay(base, 30), Duration::from_secs(10));
+    }
+}

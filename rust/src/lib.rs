@@ -47,6 +47,7 @@ pub mod experiments;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;
+pub mod fleet;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -527,27 +527,65 @@ pub struct TailState {
     /// the final newline **at read time** — re-stating the file later
     /// would race a live writer into false torn-tail warnings).
     pub torn: bool,
+    /// Prefix signature: the first [`TAIL_SIG_BYTES`]-or-fewer
+    /// *committed* bytes of the file, captured when parsing starts from
+    /// byte 0. A truncate-and-rewrite that lands at the same length or
+    /// longer keeps `len >= offset` and would otherwise read garbage
+    /// mid-line (or silently nothing); comparing the live prefix
+    /// against this signature catches the rotation.
+    pub sig: Vec<u8>,
+    /// How many times this state has re-synced from byte 0 (shrink,
+    /// rotation, or parse-error self-heal). Followers that mirror the
+    /// snapshot list elsewhere use this to know their copy is stale —
+    /// `snapshots.len()` alone can't tell a reset apart from a fresh
+    /// run that already re-wrote as many lines.
+    pub resets: u64,
 }
+
+/// Length cap on [`TailState::sig`]. A snapshot line opens with ~60
+/// bytes of constant format tag + experiment id before any
+/// run-specific value (seq, sim time, rates) appears, so the cap must
+/// reach well past that; 256 bytes covers the volatile fields while
+/// keeping the per-poll prefix read O(1). (A rewrite whose first 256
+/// committed bytes are byte-identical to the old run's is treated as
+/// the same run — and continuing from the old offset is then the
+/// correct behaviour for a deterministic re-run writing the same log.)
+pub const TAIL_SIG_BYTES: usize = 256;
 
 /// Fold newly appended **complete** lines of `path` into `state`;
 /// bytes after the last newline (a writer mid-append) stay unparsed
-/// until a later call. A file that *shrank* is a fresh run that
-/// truncated the log: the state resets and reparses — and the reset
+/// until a later call. A file that was truncated or rotated is a fresh
+/// run: the state resets and reparses from byte 0 — and the reset
 /// alone counts as a change, so a follower re-renders even before the
-/// new run's first line lands. Returns whether anything changed.
-/// Malformed complete lines error out *and reset the state*: a log
-/// that was truncated and regrew past the old offset between polls
-/// parses misaligned mid-line, and the reset makes the next attempt
-/// restart from byte 0 — self-healing for restarts, still loud on
-/// every attempt for genuine interior corruption.
+/// new run's first line lands. Rotation is detected two ways: the file
+/// *shrank* (`len < offset`), or the committed prefix no longer
+/// matches the [`TailState::sig`] signature — the latter catches a
+/// truncate-and-rewrite that regrew to the same length or longer
+/// between polls, which `len` alone can't see and which would
+/// otherwise read garbage mid-line. Returns whether anything changed.
+/// Malformed complete lines error out *and reset the state*: the next
+/// attempt restarts from byte 0 — self-healing for restarts, still
+/// loud on every attempt for genuine interior corruption.
 pub fn tail_snapshots(path: &Path, state: &mut TailState) -> Result<bool> {
     use std::io::{Read, Seek, SeekFrom};
     let mut f =
         std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     let len = f.metadata()?.len();
-    let reset = len < state.offset;
+    let mut reset = len < state.offset;
+    if !reset && state.offset > 0 && !state.sig.is_empty() {
+        if len < state.sig.len() as u64 {
+            reset = true;
+        } else {
+            let mut head = vec![0u8; state.sig.len()];
+            f.read_exact(&mut head)
+                .with_context(|| format!("reading {path:?}"))?;
+            reset = head != state.sig;
+        }
+    }
     if reset {
+        let resets = state.resets + 1;
         *state = TailState::default();
+        state.resets = resets;
     }
     if len == state.offset {
         state.torn = false;
@@ -574,13 +612,21 @@ pub fn tail_snapshots(path: &Path, state: &mut TailState) -> Result<bool> {
         match parsed {
             Ok(s) => fresh.push(s),
             Err(e) => {
+                let resets = state.resets + 1;
                 *state = TailState::default();
+                state.resets = resets;
                 return Err(e);
             }
         }
     }
     let changed = reset || !fresh.is_empty();
     state.snapshots.extend(fresh);
+    if state.offset == 0 {
+        // First committed bytes of this incarnation of the file:
+        // capture the rotation-detection signature.
+        let committed = &buf.as_bytes()[..last_nl + 1];
+        state.sig = committed[..committed.len().min(TAIL_SIG_BYTES)].to_vec();
+    }
     state.offset += last_nl as u64 + 1;
     Ok(changed)
 }
@@ -1003,9 +1049,9 @@ mod tests {
         assert!(st.snapshots.is_empty());
         assert!(!tail_snapshots(&p, &mut st).unwrap());
 
-        // Self-heal: a log truncated and regrown *past* the old offset
-        // between polls parses misaligned, errors once, resets — and
-        // the next attempt reparses the fresh run from the start.
+        // A log truncated and regrown *past* the old offset between
+        // polls used to parse misaligned mid-line; the prefix signature
+        // now catches the rotation and reparses cleanly from byte 0.
         std::fs::write(&p, format!("{a}\n")).unwrap();
         assert!(tail_snapshots(&p, &mut st).unwrap());
         let long = snap("expX-much-longer-name", None, 7, 9, 240.0, true)
@@ -1016,11 +1062,83 @@ mod tests {
             "regrown first line must strictly span the old offset"
         );
         std::fs::write(&p, format!("{long}\n{long}\n")).unwrap();
-        assert!(tail_snapshots(&p, &mut st).is_err(), "misaligned parse must error");
-        assert_eq!(st.offset, 0, "error must reset the state");
-        assert!(tail_snapshots(&p, &mut st).unwrap());
+        let before = st.resets;
+        assert!(tail_snapshots(&p, &mut st).unwrap(), "rotation is a change");
+        assert_eq!(st.resets, before + 1, "rotation must count as a reset");
         assert_eq!(st.snapshots.len(), 2);
         assert_eq!(st.snapshots[1].case_index, 7);
+
+        // Genuine interior corruption (a malformed *complete* line
+        // appended to an otherwise-healthy log) still errors loudly and
+        // resets, so a later repair reparses from the start.
+        append("not json at all\n");
+        assert!(tail_snapshots(&p, &mut st).is_err(), "corrupt line must error");
+        assert_eq!(st.offset, 0, "error must reset the state");
+        std::fs::write(&p, format!("{a}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Regression (truncate mid-follow): a rewrite that lands at the
+    /// *same length or longer* keeps `len >= offset`, so the old
+    /// shrink-only check missed it — the follower either went silently
+    /// stale (same length) or mixed lines of two different runs
+    /// (newline-aligned longer rewrite). The prefix signature must
+    /// catch both and re-sync from byte 0.
+    #[test]
+    fn tail_snapshots_resyncs_on_same_length_and_longer_rewrites() {
+        let dir = std::env::temp_dir().join("vidur_energy_live_tail_rewrite");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        let x = snap("expX", None, 0, 1, 60.0, false).to_json().to_string();
+        let y = snap("expX", None, 0, 2, 90.0, false).to_json().to_string();
+        let z = snap("expX", None, 0, 3, 120.0, true).to_json().to_string();
+        // Preconditions that make these the hard cases: equal length
+        // (so `len` can't flag the first rewrite, and the old offset is
+        // newline-aligned in the second), differing inside the
+        // signature window.
+        assert_eq!(x.len(), y.len(), "test needs a same-length rewrite");
+        let w = x.len().min(TAIL_SIG_BYTES);
+        assert_ne!(
+            x.as_bytes()[..w],
+            y.as_bytes()[..w],
+            "rewrite must differ inside the signature window"
+        );
+
+        // Same-length rewrite: x → y. Without the signature this read
+        // reported "no change" and left the stale x cached forever.
+        std::fs::write(&p, format!("{x}\n")).unwrap();
+        let mut st = TailState::default();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 1);
+        assert_eq!(st.resets, 0);
+        std::fs::write(&p, format!("{y}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap(), "rewrite must be a change");
+        assert_eq!(st.resets, 1);
+        assert_eq!(st.snapshots.len(), 1);
+        assert_eq!(st.snapshots[0].seq, 2, "must hold the new run's line, not the old");
+
+        // Newline-aligned longer rewrite: y → y'|z where the first new
+        // line has y's exact length. Without the signature the old
+        // offset landed exactly on the second line's start and the
+        // reader produced the garbage mix [old, z] instead of [new, z].
+        std::fs::write(&p, format!("{x}\n{z}\n")).unwrap();
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.resets, 2);
+        assert_eq!(st.snapshots.len(), 2);
+        assert_eq!(st.snapshots[0].seq, 1, "first line re-read from byte 0");
+        assert!(st.snapshots[1].done);
+
+        // After a re-sync, appends keep tailing incrementally.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        writeln!(f, "{y}").unwrap();
+        drop(f);
+        assert!(tail_snapshots(&p, &mut st).unwrap());
+        assert_eq!(st.snapshots.len(), 3);
+        assert_eq!(st.resets, 2, "plain append is not a reset");
         std::fs::remove_dir_all(&dir).ok();
     }
 

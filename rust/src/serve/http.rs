@@ -219,7 +219,18 @@ pub fn parse_head(buf: &[u8]) -> Result<ParseOutcome, HttpError> {
         if name.is_empty() || name.contains(' ') {
             return Err(HttpError::new(400, format!("malformed header name '{name}'")));
         }
-        headers.insert(name.to_ascii_lowercase(), value.trim().to_string());
+        let lname = name.to_ascii_lowercase();
+        let prev = headers.insert(lname.clone(), value.trim().to_string());
+        if prev.is_some() && lname == "content-length" {
+            // Duplicate Content-Length — even two *agreeing* copies —
+            // is the classic request-smuggling shape (first-wins vs
+            // last-wins disagreement between parsers). Reject outright
+            // rather than pick a winner.
+            return Err(HttpError::new(
+                400,
+                "duplicate content-length header",
+            ));
+        }
         if headers.len() > MAX_HEADERS {
             return Err(HttpError::new(431, "too many headers"));
         }
@@ -391,6 +402,41 @@ mod tests {
         assert_eq!(h.content_length().unwrap_err().status, 400);
     }
 
+    /// Duplicate `Content-Length` headers — conflicting, agreeing, or
+    /// mixed-case — are the request-smuggling shape and must be a 400
+    /// at parse time, never a silent first/last-wins pick.
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        // Conflicting values.
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 10\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.msg.contains("content-length"), "{}", e.msg);
+        // Even agreeing duplicates are rejected (two parsers may
+        // disagree on which copy to honour).
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.status, 400);
+        // Case-insensitive: the duplicate hides behind different casing.
+        let e = parse_head(
+            b"POST / HTTP/1.1\r\ncontent-length: 5\r\nCONTENT-LENGTH: 10\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.status, 400);
+        // A comma-joined value smuggled into one line fails on the
+        // accessor instead (not a valid u64).
+        let (h, _) = ready(b"POST / HTTP/1.1\r\nContent-Length: 5, 5\r\n\r\n");
+        assert_eq!(h.content_length().unwrap_err().status, 400);
+        // Duplicates of *other* headers keep last-wins behaviour — only
+        // body framing is smuggling-sensitive.
+        let (h, _) = ready(b"GET / HTTP/1.1\r\nX-A: one\r\nX-A: two\r\n\r\n");
+        assert_eq!(h.header("x-a"), Some("two"));
+    }
+
     /// An oversized head without a terminator is a 431, not unbounded
     /// buffering; with a terminator past the cap likewise.
     #[test]
@@ -430,6 +476,33 @@ mod tests {
             let len = (rng.next_u64() % 100) as usize;
             buf.extend((0..len).map(|_| (rng.next_u64() % 256) as u8));
             let _ = parse_head(&buf);
+        }
+        // Random repeated-header soup: a handful of names (including
+        // content-length) repeated in random order and casing must
+        // parse cleanly or error cleanly — never panic, and never
+        // accept two content-length copies.
+        let names = ["Content-Length", "content-length", "X-A", "Host"];
+        for _ in 0..200 {
+            let mut buf = b"POST / HTTP/1.1\r\n".to_vec();
+            let n = 1 + (rng.next_u64() % 5) as usize;
+            let mut cl_count = 0usize;
+            for _ in 0..n {
+                let name = names[(rng.next_u64() % names.len() as u64) as usize];
+                if name.eq_ignore_ascii_case("content-length") {
+                    cl_count += 1;
+                }
+                buf.extend_from_slice(
+                    format!("{name}: {}\r\n", rng.next_u64() % 100).as_bytes(),
+                );
+            }
+            buf.extend_from_slice(b"\r\n");
+            match parse_head(&buf) {
+                Ok(ParseOutcome::Ready { .. }) => {
+                    assert!(cl_count <= 1, "duplicate content-length accepted");
+                }
+                Ok(ParseOutcome::Incomplete) => panic!("terminated head read as Incomplete"),
+                Err(e) => assert_eq!(e.status, 400),
+            }
         }
     }
 

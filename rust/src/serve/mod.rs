@@ -201,19 +201,26 @@ fn follow_files(
     shutdown: &AtomicBool,
     poll: Duration,
 ) {
-    // Per-file tail state plus how many of its snapshots we ingested.
-    let mut tails: BTreeMap<PathBuf, (TailState, usize)> = BTreeMap::new();
+    // Per-file tail state plus how many of its snapshots we ingested
+    // and the reset generation that count belongs to.
+    let mut tails: BTreeMap<PathBuf, (TailState, usize, u64)> = BTreeMap::new();
     while !shutdown.load(Ordering::SeqCst) {
         let existing: Vec<PathBuf> = follow.iter().filter(|p| p.exists()).cloned().collect();
         let files = live::discover_watch_files(&existing).unwrap_or_default();
         for f in files {
-            let (tail, ingested) = tails.entry(f.clone()).or_default();
+            let (tail, ingested, gen) = tails.entry(f.clone()).or_default();
             match live::tail_snapshots(&f, tail) {
                 Ok(_) => {
-                    if tail.snapshots.len() < *ingested {
-                        // The file shrank (fresh run): replay from the
-                        // start — ingest dedups exact replays.
+                    if tail.resets != *gen {
+                        // The file was truncated or rotated (fresh
+                        // run): replay from the start — ingest dedups
+                        // exact replays. Keyed on the reset counter,
+                        // not a snapshot-count heuristic: a rewrite
+                        // that already regrew to as many lines as we
+                        // had ingested would pass a length check while
+                        // holding different snapshots.
                         *ingested = 0;
+                        *gen = tail.resets;
                     }
                     for s in &tail.snapshots[*ingested..] {
                         state.ingest(s);
@@ -224,6 +231,7 @@ fn follow_files(
                     // tail_snapshots reset its state; re-ingest from 0
                     // next tick once the file parses again.
                     *ingested = 0;
+                    *gen = tail.resets;
                 }
             }
         }

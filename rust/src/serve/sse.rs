@@ -311,4 +311,97 @@ mod tests {
         hub.publish(snap(2));
         assert_eq!(hub.cursor_now(), 1);
     }
+
+    /// Stress the lag-resume invariant under real concurrency: with a
+    /// tiny ring and publishers racing subscribers, every arrival is
+    /// either delivered exactly once or counted in exactly one
+    /// `Lagged` gap — never skipped past silently, never delivered
+    /// twice. The dangerous window is a subscriber acting on a
+    /// `Lagged(resume)` cursor while concurrent publishes push the
+    /// ring past `resume` again; the accounting below fails loudly on
+    /// any off-by-one in either direction.
+    #[test]
+    fn hub_lag_resume_neither_skips_nor_double_delivers_under_races() {
+        const TOTAL: u64 = 2000;
+        const SUBSCRIBERS: usize = 3;
+        let hub = Arc::new(SnapshotHub::new(8));
+        let mut subs = Vec::new();
+        for _ in 0..SUBSCRIBERS {
+            let h = hub.clone();
+            subs.push(std::thread::spawn(move || {
+                let mut cursor = 0u64;
+                let mut covered = 0u64;
+                let mut skipped = 0u64;
+                loop {
+                    match h.next(cursor, Duration::from_millis(5)) {
+                        Next::Event(n, s) => {
+                            // Delivery at exactly the requested cursor:
+                            // n < cursor would be a double-delivery,
+                            // n > cursor a silent skip.
+                            assert_eq!(n, cursor, "event at wrong arrival");
+                            // Arrival n carries the snapshot published
+                            // n-th (seq = n + 1 by construction), so a
+                            // ring-indexing bug shows up as a mismatch.
+                            assert_eq!(s.seq, n + 1, "wrong snapshot at arrival {n}");
+                            covered += 1;
+                            cursor = n + 1;
+                        }
+                        Next::Lagged(resume) => {
+                            // A lag must move forward and account for
+                            // every arrival it jumps over.
+                            assert!(resume > cursor, "Lagged must advance the cursor");
+                            skipped += resume - cursor;
+                            cursor = resume;
+                        }
+                        Next::Timeout => continue,
+                        Next::Closed => break,
+                    }
+                }
+                (cursor, covered, skipped)
+            }));
+        }
+        // Publish from two racing threads through one ordering lock, so
+        // arrival numbers stay the only total order while the condvar
+        // wakeups and ring evictions interleave with the subscribers.
+        let seq_lock = Arc::new(std::sync::Mutex::new(0u64));
+        let mut pubs = Vec::new();
+        for _ in 0..2 {
+            let h = hub.clone();
+            let lock = seq_lock.clone();
+            pubs.push(std::thread::spawn(move || loop {
+                let mut g = lock.lock().unwrap();
+                if *g == TOTAL {
+                    return;
+                }
+                *g += 1;
+                let seq = *g;
+                h.publish(snap(seq));
+                drop(g);
+                if seq % 64 == 0 {
+                    // Let subscribers catch up sometimes so the test
+                    // exercises both the lagged and the live path.
+                    std::thread::sleep(Duration::from_millis(1));
+                } else {
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        for p in pubs {
+            p.join().unwrap();
+        }
+        hub.close();
+        for s in subs {
+            let (cursor, covered, skipped) = s.join().unwrap();
+            // close() wakes subscribers only after the ring is drained
+            // (next() prefers delivery over Closed), so each must have
+            // accounted for every single arrival.
+            assert_eq!(cursor, TOTAL, "subscriber stopped short of the live end");
+            assert_eq!(
+                covered + skipped,
+                TOTAL,
+                "arrivals lost or double-counted (covered {covered}, skipped {skipped})"
+            );
+            assert!(covered > 0, "subscriber never saw a delivery");
+        }
+    }
 }

@@ -195,15 +195,37 @@ impl SweepRegistry {
                 }
             };
             let Some((id, req)) = claimed else { return };
-            let outcome = (*runner)(&req);
+            // A panicking runner must not leave the job stuck in
+            // `running` (wedging the sequential queue forever) — catch
+            // the unwind and record it as a failure so fleet retry
+            // logic can observe it and the queue advances.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (*runner)(&req)
+            }));
             let mut g = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(j) = g.iter_mut().find(|j| j.id == id) {
                 j.status = match outcome {
-                    Ok(()) => SweepStatus::Done,
-                    Err(e) => SweepStatus::Failed(format!("{e:#}")),
+                    Ok(Ok(())) => SweepStatus::Done,
+                    Ok(Err(e)) => SweepStatus::Failed(format!("{e:#}")),
+                    Err(payload) => SweepStatus::Failed(format!(
+                        "panicked: {}",
+                        panic_message(payload.as_ref())
+                    )),
                 };
             }
         }
+    }
+}
+
+/// Best-effort text of a panic payload (`panic!("...")` yields a
+/// `&str` or a `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -443,5 +465,55 @@ mod tests {
         assert_eq!(reg.job_json(99), None);
         let all = reg.jobs_json();
         assert_eq!(all.get("sweeps").and_then(|s| s.as_arr()).unwrap().len(), 2);
+    }
+
+    /// Regression: a panicking runner used to leave its job `running`
+    /// forever and wedge the queue — the worker thread died with no
+    /// status transition. The unwind must be caught, the job marked
+    /// `failed` with the panic payload, and the next queued job run.
+    #[test]
+    fn panicking_runner_marks_job_failed_and_queue_advances() {
+        let reg = Arc::new(SweepRegistry::new(PathBuf::from("serve-out")));
+        let ran: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = ran.clone();
+        let runner: SweepRunner = Arc::new(move |req: &SweepRequest| {
+            sink.lock().unwrap().push(req.experiment.clone());
+            if req.experiment == "exp1" {
+                panic!("runner exploded mid-sweep");
+            }
+            Ok(())
+        });
+        let id1 = reg.submit(SweepRequest {
+            experiment: "exp1".into(),
+            jobs: 1,
+            shard: None,
+            fast: true,
+            out: PathBuf::new(),
+        });
+        let id2 = reg.submit(SweepRequest {
+            experiment: "exp2".into(),
+            jobs: 1,
+            shard: None,
+            fast: true,
+            out: PathBuf::new(),
+        });
+        // Silence the default panic hook's backtrace spam for the
+        // intentional panic, then restore it.
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let shutdown = AtomicBool::new(true); // drain the queue, then stop
+        reg.run_worker(runner, &shutdown);
+        std::panic::set_hook(prev_hook);
+
+        // Both jobs ran: the panic did not wedge the queue.
+        assert_eq!(*ran.lock().unwrap(), vec!["exp1", "exp2"]);
+        let j1 = reg.job_json(id1).unwrap();
+        assert_eq!(j1.req_str("status").unwrap(), "failed");
+        assert!(
+            j1.req_str("error").unwrap().contains("runner exploded mid-sweep"),
+            "panic payload missing from error: {}",
+            j1.to_string()
+        );
+        assert_eq!(reg.job_json(id2).unwrap().req_str("status").unwrap(), "done");
     }
 }

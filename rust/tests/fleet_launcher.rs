@@ -1,0 +1,233 @@
+//! `repro fleet` end to end over loopback (DESIGN.md §15), with fault
+//! injection.
+//!
+//! Three in-process `Server` instances play the fleet's hosts — same
+//! TCP, same serve plane, no child processes — so the launcher code
+//! path under test is exactly the one a real multi-machine launch
+//! uses. The contract legs:
+//!
+//! 1. **Healthy fleet** — a 2-host launch auto-merges to the same
+//!    bytes as an unsharded run of the same grid.
+//! 2. **Fault injection** — in a 3-host launch, one host dies
+//!    mid-sweep *after* writing a poisoned partial output; its shard
+//!    is re-partitioned across the survivors, the launch completes,
+//!    and the merged CSV is still byte-identical to the unsharded
+//!    run (the partial output never leaks into the merge).
+//! 3. **Dead-host detection** — an endpoint nobody listens on is
+//!    health-gated out up front and only warned about.
+//!
+//! Everything lives in ONE test function run sequentially: the shard
+//! and jobs settings are process-global (same constraint as
+//! `serve_http.rs`), and the stub runners serialize on one lock.
+
+mod common;
+
+use common::{read_bytes, run_and_save_grid, TempDir, GRID_CASES};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+use vidur_energy::fleet::{run_fleet, FleetConfig, Manifest};
+use vidur_energy::serve::state::{SweepRequest, SweepRunner};
+use vidur_energy::serve::{ServeConfig, Server};
+use vidur_energy::sweep::{self, ShardSpec};
+use vidur_energy::telemetry::ShardTelemetry;
+
+/// Experiment id the stub runners produce. Dispatch itself carries a
+/// real experiment id (the serve plane validates it); the runner runs
+/// the deterministic test grid instead, like `serve_http.rs`.
+const ID: &str = "fleetgrid";
+const SEED_BASE: u64 = 0xF1EE7;
+
+/// Serializes the stub runners across the three servers' worker
+/// threads — the shard/jobs settings they configure are process-global.
+static RUN_LOCK: Mutex<()> = Mutex::new(());
+
+/// A sweep runner that honors the request's shard against the test
+/// grid. With `die_once` set, the first job panics mid-sweep after
+/// leaving a poisoned partial output behind — the "kill -9 between
+/// two cases" a real fleet must survive.
+fn shard_runner(die_once: Option<Arc<AtomicBool>>) -> SweepRunner {
+    Arc::new(move |req: &SweepRequest| {
+        let _g = RUN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::fs::create_dir_all(&req.out)?;
+        if let Some(flag) = &die_once {
+            if flag.swap(false, Ordering::SeqCst) {
+                let d = req.out.join(ID);
+                std::fs::create_dir_all(&d)?;
+                std::fs::write(d.join(format!("{ID}.csv")), b"partial,garbage\n")?;
+                panic!("host killed mid-sweep");
+            }
+        }
+        let shard = match &req.shard {
+            Some(s) => Some(ShardSpec::parse(s)?),
+            None => None,
+        };
+        sweep::set_shard(shard);
+        run_and_save_grid(&req.out, ID, SEED_BASE);
+        sweep::set_shard(None);
+        Ok(())
+    })
+}
+
+/// Start one in-process "fleet host".
+fn start_host(out: &Path, runner: SweepRunner) -> Server {
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.out = out.to_path_buf();
+    cfg.runner = runner;
+    cfg.poll_interval = Duration::from_millis(50);
+    Server::start(cfg).unwrap()
+}
+
+/// A `FleetConfig` tuned for loopback: tight polls, short backoff.
+fn fleet_cfg(endpoints: Vec<String>, out: PathBuf, merged_out: PathBuf) -> FleetConfig {
+    let manifest = Manifest::from_entries(&endpoints).unwrap();
+    let mut cfg = FleetConfig::new("exp1", manifest, &out);
+    cfg.merged_out = merged_out;
+    cfg.poll = Duration::from_millis(50);
+    cfg.http_timeout = Duration::from_secs(10);
+    cfg.max_attempts = 3;
+    cfg.backoff_base = Duration::from_millis(20);
+    cfg
+}
+
+#[test]
+fn fleet_launcher_survives_host_death_with_byte_identical_merge() {
+    let base = TempDir::new("vidur_fleet_launcher");
+    sweep::set_shard(None);
+    sweep::set_default_jobs(2);
+
+    // --- Unsharded baseline: the bytes every launch must reproduce --
+    let baseline = base.join("baseline");
+    run_and_save_grid(&baseline, ID, SEED_BASE);
+    let want_csv = read_bytes(baseline.join(ID).join(format!("{ID}.csv")));
+    let want_tel = ShardTelemetry::load(&baseline.join(ID)).unwrap().unwrap();
+
+    // --- Leg 1: healthy 2-host fleet merges byte-identically --------
+    {
+        let a = start_host(&base.join("h2-a"), shard_runner(None));
+        let b = start_host(&base.join("h2-b"), shard_runner(None));
+        let cfg = fleet_cfg(
+            vec![a.addr().to_string(), b.addr().to_string()],
+            base.join("fleet2"),
+            base.join("merged2"),
+        );
+        let report = run_fleet(&cfg).unwrap();
+        assert_eq!(report.hosts, 2);
+        assert!(report.dead.is_empty(), "healthy fleet: {:?}", report.dead);
+        assert_eq!(report.dispatched, 2);
+        assert_eq!(report.resharded, 0);
+        assert_eq!(report.merged.len(), 1);
+        assert_eq!(report.merged[0].id, ID);
+        assert_eq!(report.merged[0].shards, 2);
+        assert_eq!(report.merged[0].rows, GRID_CASES);
+        assert!(report.merged[0].complete);
+        let got = read_bytes(base.join("merged2").join(ID).join(format!("{ID}.csv")));
+        assert_eq!(
+            got, want_csv,
+            "2-host fleet merge must be byte-identical to the unsharded run"
+        );
+        a.shutdown();
+        b.shutdown();
+    }
+
+    // --- Legs 2+3: one dead endpoint, one mid-sweep death -----------
+    {
+        let a = start_host(&base.join("h3-a"), shard_runner(None));
+        let b = start_host(&base.join("h3-b"), shard_runner(None));
+        let die = Arc::new(AtomicBool::new(true));
+        let c = start_host(&base.join("h3-c"), shard_runner(Some(Arc::clone(&die))));
+        // Nobody listens on port 1: the health gate must exclude it
+        // up front instead of sinking a shard into it.
+        let unreachable = "127.0.0.1:1".to_string();
+        let cfg = fleet_cfg(
+            vec![
+                a.addr().to_string(),
+                b.addr().to_string(),
+                c.addr().to_string(),
+                unreachable.clone(),
+            ],
+            base.join("fleet3"),
+            base.join("merged3"),
+        );
+        let report = run_fleet(&cfg).unwrap();
+
+        // The unreachable endpoint never joined; C died mid-sweep.
+        assert_eq!(report.hosts, 3, "three hosts pass the health gate");
+        assert_eq!(report.dead.len(), 2, "dead: {:?}", report.dead);
+        assert!(report.dead.contains(&unreachable));
+        assert!(report.dead.contains(&c.addr().to_string()));
+        assert!(!die.load(Ordering::SeqCst), "C's runner ran");
+
+        // C's one shard (of 3) was re-partitioned across 2 survivors:
+        // 3 initial dispatches + 2 sub-shard re-dispatches.
+        assert_eq!(report.resharded, 1);
+        assert_eq!(report.dispatched, 5);
+
+        // The merge covers the full grid exactly once — the two
+        // sub-shards have a different denominator (k/6) than the
+        // survivors' originals (k/3), and C's poisoned partial CSV
+        // is excluded because its job never reported done.
+        assert_eq!(report.merged.len(), 1);
+        assert_eq!(report.merged[0].shards, 4, "2 originals + 2 sub-shards");
+        assert_eq!(report.merged[0].rows, GRID_CASES);
+        assert!(report.merged[0].complete);
+        let got = read_bytes(base.join("merged3").join(ID).join(format!("{ID}.csv")));
+        assert_eq!(
+            got, want_csv,
+            "post-death fleet merge must be byte-identical to the unsharded run"
+        );
+        // Exact-counter telemetry agreement, like shard_merge.rs.
+        let tel = ShardTelemetry::load(&base.join("merged3").join(ID))
+            .unwrap()
+            .unwrap();
+        assert_eq!(tel.shard, None);
+        assert_eq!(tel.requests.submitted, want_tel.requests.submitted);
+        assert_eq!(tel.requests.finished, want_tel.requests.finished);
+        assert_eq!(tel.stages.stages, want_tel.stages.stages);
+        a.shutdown();
+        b.shutdown();
+        c.shutdown();
+    }
+
+    // --- No survivors: the launcher fails loudly, not silently ------
+    {
+        let die = Arc::new(AtomicBool::new(true));
+        let only = start_host(&base.join("h1-solo"), shard_runner(Some(die)));
+        let cfg = fleet_cfg(
+            vec![only.addr().to_string()],
+            base.join("fleet1"),
+            base.join("merged1"),
+        );
+        let err = run_fleet(&cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no survivors") || msg.contains("no surviving"),
+            "lost-everything launch must say so: {msg}"
+        );
+        only.shutdown();
+    }
+}
+
+/// Manifest errors reach the user with file + line, and a launch with
+/// an empty manifest refuses to start.
+#[test]
+fn fleet_manifest_errors_are_loud() {
+    let base = TempDir::new("vidur_fleet_manifest");
+    let path = base.join("hosts.txt");
+    std::fs::write(&path, "127.0.0.1:7878\nlocal:oops\n").unwrap();
+    let err = Manifest::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("hosts.txt:2") && msg.contains("local"),
+        "manifest error must cite path:line: {msg}"
+    );
+
+    let empty = Manifest::default();
+    let cfg = FleetConfig::new("exp1", empty, &base.join("out"));
+    let err = run_fleet(&cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("names no hosts"),
+        "{err:#}"
+    );
+}
